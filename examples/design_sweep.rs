@@ -1,0 +1,49 @@
+//! Design-space exploration: regenerate the paper's Fig. 14 heat maps and
+//! the Fig. 12/13 convergence sweeps, then use the FINN-style compiler to
+//! fold a model under a LUT budget — the workflow a FINN user runs when
+//! choosing between the HLS and RTL backends.
+//!
+//! Run with: `cargo run --release --example design_sweep`
+
+use finn_mvu::cfg::SimdType;
+use finn_mvu::harness::{fig14_heatmap, resource_sweep_figure, SweepKind};
+use finn_mvu::ir::{Graph, Op, TensorInfo};
+use finn_mvu::passes::{analyze, fold_to_target, lower_to_hw};
+use finn_mvu::quant::Matrix;
+use finn_mvu::util::rng::Pcg32;
+
+fn main() -> anyhow::Result<()> {
+    // 1. convergence sweeps (paper Figs. 12/13)
+    for kind in [SweepKind::Pe, SweepKind::Simd] {
+        let s = resource_sweep_figure(kind, SimdType::Standard)?;
+        println!("{} — {} (standard, 4-bit)\n{}", kind.figure(), kind.label(), s.to_table().render());
+    }
+
+    // 2. the Fig. 14 heat maps: where does the LUT crossover fall?
+    let (lut, ff) = fig14_heatmap()?;
+    println!("Fig. 14(a) dLUT = HLS - RTL (positive: RTL smaller)\n{}", lut.render());
+    println!("Fig. 14(b) dFF = HLS - RTL\n{}", ff.render());
+
+    // 3. fold a 3-layer MLP under a shrinking LUT budget and watch the
+    //    achievable throughput degrade — the folding/estimation loop of
+    //    the FINN compiler flow (paper Fig. 5).
+    let mut rng = Pcg32::new(21);
+    let mut rnd = |n: usize| -> Vec<i32> { (0..n).map(|_| rng.next_range(4) as i32 - 2).collect() };
+    let mut g = Graph::new(TensorInfo { elems: 256, vectors: 1, bits: 2 });
+    g.push("fc0", Op::MatMul { weights: Matrix::new(128, 256, rnd(128 * 256)).unwrap() });
+    g.push("fc1", Op::MatMul { weights: Matrix::new(64, 128, rnd(64 * 128)).unwrap() });
+    g.push("fc2", Op::MatMul { weights: Matrix::new(16, 64, rnd(16 * 64)).unwrap() });
+    let hw = lower_to_hw(&g)?;
+
+    println!("folding fc 256-128-64-16 under LUT budgets:");
+    println!("{:>10} {:>12} {:>14} {:>16}", "budget", "LUTs used", "bottleneck", "est. images/s");
+    for budget in [200_000usize, 50_000, 20_000, 8_000, 3_000] {
+        let folded = fold_to_target(&hw, 1, budget)?;
+        let report = analyze(&folded.graph)?;
+        println!(
+            "{:>10} {:>12} {:>14} {:>16.0}",
+            budget, folded.total_luts, folded.bottleneck_cycles, report.throughput_fps
+        );
+    }
+    Ok(())
+}

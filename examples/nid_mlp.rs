@@ -1,0 +1,111 @@
+//! End-to-end driver (paper §6.5 + DESIGN.md E13): serve the trained
+//! 4-layer NID MLP through the full three-layer stack and cross-validate
+//! every path:
+//!
+//!   1. L3 dataflow pipeline (per-layer worker threads, bounded channels)
+//!      executing the per-layer PJRT artifacts — latency/throughput report;
+//!   2. the fused single-executable network — batching ablation;
+//!   3. the cycle-accurate RTL simulator on the same trained weights —
+//!      hardware cycle counts (Table 7);
+//!   4. the reference integer network — accuracy on held-out synthetic
+//!      UNSW-NB15-like data, and bit-exactness of paths 1-3 against it.
+//!
+//! Run with: `cargo run --release --example nid_mlp [-- --requests N]`
+
+use std::time::Instant;
+
+use finn_mvu::cfg::nid_layers;
+use finn_mvu::coordinator::{Pipeline, PipelineConfig, Request};
+use finn_mvu::nid::{generate, NidNetwork};
+use finn_mvu::runtime::{default_artifacts_dir, Engine, Manifest};
+use finn_mvu::sim::run_mvu;
+use finn_mvu::util::cli::Args;
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::parse(std::env::args().skip(1))?;
+    let n = args.get_usize("requests", 512)?;
+    let batch = args.get_usize("batch", 16)?;
+    let dir = default_artifacts_dir();
+    let manifest = Manifest::load(&dir)?;
+    let net = NidNetwork::load(&manifest)?;
+
+    println!("== NID end-to-end ({n} requests, batch {batch}) ==");
+    let records = generate(n, 99_2026);
+
+    // ---- 1. per-layer dataflow pipeline over PJRT --------------------------
+    let reqs: Vec<Request> = records
+        .iter()
+        .enumerate()
+        .map(|(i, r)| Request { id: i as u64, data: r.inputs.clone() })
+        .collect();
+    let cfg = PipelineConfig { batch, ..Default::default() };
+    let pipe = Pipeline::nid(dir.clone(), cfg);
+    let (mut resp, report) = pipe.run(reqs)?;
+    resp.sort_by_key(|r| r.id);
+    println!("[pipeline ] {report}");
+
+    // ---- 2. fused network executable (batching ablation) -------------------
+    let engine = Engine::new(&dir)?;
+    let fused = engine.load(&format!("nid_fused_b{batch}"))?;
+    let t0 = Instant::now();
+    let mut fused_out = Vec::with_capacity(n);
+    for chunk in records.chunks(batch) {
+        let mut flat = Vec::with_capacity(batch * 600);
+        for r in chunk {
+            flat.extend_from_slice(&r.inputs);
+        }
+        flat.resize(batch * 600, 0);
+        let out = fused.run(&flat)?;
+        fused_out.extend(out.into_iter().take(chunk.len()));
+    }
+    let fused_dt = t0.elapsed().as_secs_f64();
+    println!(
+        "[fused    ] {n} requests in {:.3}s -> {:.0} req/s (single executable)",
+        fused_dt,
+        n as f64 / fused_dt
+    );
+
+    // ---- 3. cycle-accurate RTL simulation of each layer ---------------------
+    let weights = manifest.nid_weights()?;
+    let layers = nid_layers();
+    let sample = &records[0];
+    let mut v = sample.inputs.clone();
+    let mut total_cycles = 0usize;
+    for (params, (w, th)) in layers.iter().zip(&weights) {
+        let rep = run_mvu(params, w, &[v.clone()])?;
+        total_cycles += rep.exec_cycles;
+        let acc = rep.outputs[0].clone();
+        v = match th {
+            Some(t) => finn_mvu::quant::multithreshold(&acc, t)?,
+            None => acc,
+        };
+        println!(
+            "[simulator] {}: {} cycles (paper Table 7 RTL: {})",
+            params.name,
+            rep.exec_cycles,
+            params.analytic_cycles(finn_mvu::sim::PIPELINE_STAGES)
+        );
+    }
+    println!("[simulator] end-to-end {} cycles for one record", total_cycles);
+
+    // ---- 4. reference accuracy + cross-path exactness -----------------------
+    let mut correct = 0usize;
+    for (i, rec) in records.iter().enumerate() {
+        let want = net.forward(&rec.inputs)?;
+        assert_eq!(resp[i].output, want, "pipeline diverges at {i}");
+        assert_eq!(fused_out[i], want[0], "fused diverges at {i}");
+        if net.decide(want[0]) == rec.label {
+            correct += 1;
+        }
+    }
+    // the simulated record must agree too
+    assert_eq!(v, net.forward(&sample.inputs)?, "simulator diverges");
+    println!("numerics: pipeline == fused == simulator == reference (bit-exact)");
+    println!(
+        "accuracy on held-out synthetic UNSW-NB15: {}/{} = {:.3}",
+        correct,
+        n,
+        correct as f64 / n as f64
+    );
+    Ok(())
+}

@@ -1,0 +1,300 @@
+"""AOT compile path: lower every layer/network variant to HLO text.
+
+Python runs ONCE (``make artifacts``) and never on the request path.  The
+rust runtime (``rust/src/runtime``) loads the HLO text via
+``HloModuleProto::from_text_file``, compiles on the PJRT CPU client and
+executes from the L3 hot loop.
+
+Interchange is HLO **text**, not ``.serialize()``: jax >= 0.5 emits
+HloModuleProto with 64-bit instruction ids which xla_extension 0.5.1
+rejects (``proto.id() <= INT_MAX``); the text parser reassigns ids
+(see /opt/xla-example/README.md).
+
+Artifacts written to ``--out-dir`` (default ``../artifacts``):
+
+  nid_layer{i}_b{B}.hlo.txt    per-layer NID MLP artifacts (weights burned
+                               in as constants = the paper's burned-in
+                               weight memories, §5.1), B in {1, 16}
+  nid_fused_b{B}.hlo.txt       whole 4-layer network in one module
+  mvu_{type}_..._b{B}.hlo.txt  generic MVU artifacts (Pcg32-seeded weights,
+                               reproducible bit-exactly from rust)
+  conv3x3_b{B}.hlo.txt         SWU + MVU convolution layer
+  manifest.json                artifact index (shapes, layer params, seeds)
+  nid_weights.json             trained integer weights + thresholds
+  generic_weights.json         weights of the generic artifacts
+  train_log.json               loss curve + accuracy (EXPERIMENTS.md §E13)
+"""
+
+from __future__ import annotations
+
+import argparse
+import functools
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import train as train_mod
+from .kernels import MvuFold, mvu, multithreshold, sliding_window
+from .model import LayerSpec, QuantLayer, QuantMlp, nid_mlp_spec
+from .nid_data import Pcg32
+
+BATCH_SIZES = (1, 16)
+GENERIC_SEED = 7
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (the 0.5.1-safe interchange).
+
+    ``print_large_constants=True`` is essential: the burned-in weight
+    matrices are large constants, and the default printer elides them as
+    ``{...}``, which the downstream text parser happily misparses into
+    garbage weights.
+    """
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    text = comp.as_hlo_text(print_large_constants=True)
+    assert "constant({...}" not in text, "elided constant leaked into artifact"
+    return text
+
+
+def lower_fn(fn, *args) -> str:
+    return to_hlo_text(jax.jit(fn).lower(*args))
+
+
+# ---------------------------------------------------------------------------
+# Pcg32-seeded generic weights (bit-identical in rust: util/rng.rs tests)
+# ---------------------------------------------------------------------------
+
+def gen_weights(rows: int, cols: int, simd_type: str, weight_bits: int,
+                seed: int) -> np.ndarray:
+    """Row-major weight generation with the shared PCG32 stream.
+
+    xnor/binary draw {0,1}; standard draws two's-complement
+    [-2^(b-1), 2^(b-1)-1] via ``next_range(2^b) - 2^(b-1)``.
+    """
+    rng = Pcg32(seed)
+    w = np.empty((rows, cols), dtype=np.int32)
+    if simd_type in ("xnor", "binary"):
+        for r in range(rows):
+            for c in range(cols):
+                w[r, c] = rng.next_range(2)
+    else:
+        span = 1 << weight_bits
+        half = span >> 1
+        for r in range(rows):
+            for c in range(cols):
+                w[r, c] = rng.next_range(span) - half
+    return w
+
+
+# ---------------------------------------------------------------------------
+# artifact builders
+# ---------------------------------------------------------------------------
+
+def layer_fn(layer: QuantLayer):
+    """Close over burned-in weights/thresholds; returns fn(x) -> (y,)."""
+    w = jnp.asarray(layer.weights)
+    th = None if layer.thresholds is None else jnp.asarray(layer.thresholds)
+    spec = layer.spec
+    fold = MvuFold(spec.pe, spec.simd)
+
+    def fn(x):
+        acc = mvu(x, w, fold, spec.simd_type)
+        return (acc if th is None else multithreshold(acc, th),)
+
+    return fn
+
+
+def network_fn(mlp: QuantMlp):
+    fns = [layer_fn(l) for l in mlp.layers]
+
+    def fn(x):
+        for f in fns:
+            (x,) = f(x)
+        return (x,)
+
+    return fn
+
+
+def conv_fn(layer: QuantLayer, stride: int = 1):
+    w = jnp.asarray(layer.weights)
+    spec = layer.spec
+    fold = MvuFold(spec.pe, spec.simd)
+
+    def fn(img):
+        b = img.shape[0]
+        cols = sliding_window(img, spec.kernel_dim, stride)
+        npix = cols.shape[1]
+        acc = mvu(cols.reshape(b * npix, -1), w, fold, spec.simd_type)
+        return (acc.reshape(b, npix, spec.matrix_rows),)
+
+    return fn
+
+
+def spec_dict(spec: LayerSpec) -> dict:
+    return {
+        "name": spec.name, "ifm_ch": spec.ifm_ch, "ifm_dim": spec.ifm_dim,
+        "ofm_ch": spec.ofm_ch, "kernel_dim": spec.kernel_dim,
+        "pe": spec.pe, "simd": spec.simd, "simd_type": spec.simd_type,
+        "weight_bits": spec.weight_bits, "input_bits": spec.input_bits,
+        "output_bits": spec.output_bits,
+    }
+
+
+def generic_specs() -> list[LayerSpec]:
+    """The generic MVU artifacts: one per SIMD type, paper-ish sizes."""
+    return [
+        LayerSpec(name="mvu_xnor", ifm_ch=64, ifm_dim=1, ofm_ch=64,
+                  kernel_dim=1, pe=8, simd=8, simd_type="xnor",
+                  weight_bits=1, input_bits=1, output_bits=0),
+        LayerSpec(name="mvu_binary", ifm_ch=64, ifm_dim=1, ofm_ch=64,
+                  kernel_dim=1, pe=8, simd=8, simd_type="binary",
+                  weight_bits=1, input_bits=4, output_bits=0),
+        LayerSpec(name="mvu_standard", ifm_ch=64, ifm_dim=1, ofm_ch=64,
+                  kernel_dim=1, pe=8, simd=8, simd_type="standard",
+                  weight_bits=4, input_bits=4, output_bits=0),
+    ]
+
+
+def conv_spec() -> LayerSpec:
+    return LayerSpec(name="conv3x3", ifm_ch=8, ifm_dim=8, ofm_ch=16,
+                     kernel_dim=3, pe=4, simd=8, simd_type="standard",
+                     weight_bits=4, input_bits=4, output_bits=0)
+
+
+# ---------------------------------------------------------------------------
+# main
+# ---------------------------------------------------------------------------
+
+def _write(path: str, text: str) -> None:
+    with open(path, "w") as f:
+        f.write(text)
+    print(f"[aot] wrote {path} ({len(text)} chars)")
+
+
+def load_or_train_nid(out_dir: str, steps: int) -> tuple[QuantMlp, int]:
+    wpath = os.path.join(out_dir, "nid_weights.json")
+    if os.path.exists(wpath):
+        with open(wpath) as f:
+            data = json.load(f)
+        specs = nid_mlp_spec()
+        layers = []
+        for spec, ld in zip(specs, data["layers"]):
+            th = None if ld["thresholds"] is None else np.asarray(
+                ld["thresholds"], dtype=np.int32)
+            layers.append(QuantLayer(
+                spec, np.asarray(ld["weights"], dtype=np.int32), th))
+        print(f"[aot] loaded trained NID weights from {wpath}")
+        return QuantMlp(layers), int(data["decision_threshold"])
+    res = train_mod.main(out_dir=out_dir, steps=steps)
+    return res.mlp, res.decision_threshold
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--out", default=None,
+                    help="legacy single-file mode: also write the fused "
+                         "b=1 network HLO to this path")
+    ap.add_argument("--train-steps", type=int, default=400)
+    ap.add_argument("--batch-sizes", type=int, nargs="*",
+                    default=list(BATCH_SIZES))
+    args = ap.parse_args()
+    out_dir = args.out_dir
+    os.makedirs(out_dir, exist_ok=True)
+
+    manifest = {"version": 1, "batch_sizes": args.batch_sizes,
+                "generic_seed": GENERIC_SEED, "artifacts": []}
+
+    # ---- NID network ------------------------------------------------------
+    mlp, dec_t = load_or_train_nid(out_dir, args.train_steps)
+    for i, layer in enumerate(mlp.layers):
+        fn = layer_fn(layer)
+        for b in args.batch_sizes:
+            name = f"nid_layer{i}_b{b}"
+            path = f"{name}.hlo.txt"
+            x = jax.ShapeDtypeStruct((b, layer.spec.matrix_cols), jnp.int32)
+            _write(os.path.join(out_dir, path), lower_fn(fn, x))
+            manifest["artifacts"].append({
+                "name": name, "path": path, "kind": "mvu", "batch": b,
+                "in_shape": [b, layer.spec.matrix_cols],
+                "out_shape": [b, layer.spec.matrix_rows],
+                "layer": spec_dict(layer.spec),
+            })
+    net = network_fn(mlp)
+    for b in args.batch_sizes:
+        name = f"nid_fused_b{b}"
+        path = f"{name}.hlo.txt"
+        x = jax.ShapeDtypeStruct((b, mlp.layers[0].spec.matrix_cols), jnp.int32)
+        _write(os.path.join(out_dir, path), lower_fn(net, x))
+        manifest["artifacts"].append({
+            "name": name, "path": path, "kind": "network", "batch": b,
+            "in_shape": [b, mlp.layers[0].spec.matrix_cols],
+            "out_shape": [b, mlp.layers[-1].spec.matrix_rows],
+            "layer": None,
+        })
+    manifest["nid"] = {
+        "decision_threshold": dec_t,
+        "layers": [spec_dict(l.spec) for l in mlp.layers],
+    }
+    if args.out:
+        # legacy Makefile stamp target: fused b=1 network
+        x = jax.ShapeDtypeStruct((1, mlp.layers[0].spec.matrix_cols), jnp.int32)
+        _write(args.out, lower_fn(net, x))
+
+    # ---- generic MVU artifacts -------------------------------------------
+    gweights = {}
+    for spec in generic_specs():
+        w = gen_weights(spec.matrix_rows, spec.matrix_cols, spec.simd_type,
+                        spec.weight_bits, GENERIC_SEED)
+        gweights[spec.name] = w.tolist()
+        layer = QuantLayer(spec, w, None)
+        fn = layer_fn(layer)
+        for b in args.batch_sizes:
+            name = f"{spec.name}_b{b}"
+            path = f"{name}.hlo.txt"
+            x = jax.ShapeDtypeStruct((b, spec.matrix_cols), jnp.int32)
+            _write(os.path.join(out_dir, path), lower_fn(fn, x))
+            manifest["artifacts"].append({
+                "name": name, "path": path, "kind": "mvu", "batch": b,
+                "in_shape": [b, spec.matrix_cols],
+                "out_shape": [b, spec.matrix_rows],
+                "layer": spec_dict(spec),
+            })
+
+    # ---- conv layer (SWU + MVU) ------------------------------------------
+    cspec = conv_spec()
+    wconv = gen_weights(cspec.matrix_rows, cspec.matrix_cols,
+                        cspec.simd_type, cspec.weight_bits, GENERIC_SEED + 1)
+    gweights[cspec.name] = wconv.tolist()
+    clayer = QuantLayer(cspec, wconv, None)
+    cfn = conv_fn(clayer)
+    od = cspec.ifm_dim - cspec.kernel_dim + 1
+    for b in args.batch_sizes:
+        name = f"{cspec.name}_b{b}"
+        path = f"{name}.hlo.txt"
+        img = jax.ShapeDtypeStruct(
+            (b, cspec.ifm_dim, cspec.ifm_dim, cspec.ifm_ch), jnp.int32)
+        _write(os.path.join(out_dir, path), lower_fn(cfn, img))
+        manifest["artifacts"].append({
+            "name": name, "path": path, "kind": "conv", "batch": b,
+            "in_shape": [b, cspec.ifm_dim, cspec.ifm_dim, cspec.ifm_ch],
+            "out_shape": [b, od * od, cspec.ofm_ch],
+            "layer": spec_dict(cspec),
+        })
+
+    with open(os.path.join(out_dir, "generic_weights.json"), "w") as f:
+        json.dump(gweights, f)
+    with open(os.path.join(out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    print(f"[aot] manifest: {len(manifest['artifacts'])} artifacts")
+
+
+if __name__ == "__main__":
+    main()

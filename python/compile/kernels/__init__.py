@@ -1,0 +1,10 @@
+"""L1 Pallas kernels for the FINN MVU reproduction."""
+
+from . import ref  # noqa: F401
+from .mvu import MvuFold, mvu, mvu_binary, mvu_standard, mvu_xnor  # noqa: F401
+from .swu import sliding_window, swu_indices  # noqa: F401
+from .thresholds import (  # noqa: F401
+    make_uniform_thresholds,
+    multithreshold,
+    multithreshold_pallas,
+)

@@ -1,0 +1,148 @@
+"""Pallas MVU kernels: the paper's PE/SIMD-folded matrix-vector unit.
+
+Hardware adaptation (DESIGN.md §Hardware-Adaptation): the paper's FPGA
+folding parameters map onto the Pallas grid/BlockSpec machinery.
+
+  * PE   (processing elements, one per weight-matrix row group)
+         -> the output-channel tile: grid dimension 1 walks ``OC / PE``
+            neuron folds, each kernel invocation produces PE outputs.
+  * SIMD (input lanes per PE)
+         -> the reduction tile: grid dimension 2 walks ``K^2*IC / SIMD``
+            synapse folds, each invocation consumes SIMD inputs and
+            accumulates into the output block, exactly like the RTL
+            accumulator in paper Fig. 2.
+  * input buffer re-use (paper Fig. 3) -> the activation block ``x`` is
+    re-fetched per neuron fold from the same HBM tile (index_map ignores
+    the PE grid index), which on TPU pins it in VMEM across output tiles.
+
+The kernels compute on int32 (exact; quantized encodings per ref.py).
+``interpret=True`` is mandatory on this CPU-only environment: real TPU
+lowering emits a Mosaic custom-call the CPU PJRT plugin cannot execute.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+__all__ = ["mvu", "mvu_xnor", "mvu_binary", "mvu_standard", "MvuFold"]
+
+
+class MvuFold:
+    """Folding (tiling) parameters, mirroring rust `cfg::MvuParams`.
+
+    ``pe`` must divide the number of weight rows (OC), ``simd`` must divide
+    the reduction length (K^2 * IC).  The paper imposes the same
+    divisibility (folding legality).
+    """
+
+    def __init__(self, pe: int, simd: int):
+        if pe <= 0 or simd <= 0:
+            raise ValueError("pe and simd must be positive")
+        self.pe = int(pe)
+        self.simd = int(simd)
+
+    def check(self, rows: int, cols: int) -> None:
+        if rows % self.pe:
+            raise ValueError(f"PE={self.pe} does not divide OC={rows}")
+        if cols % self.simd:
+            raise ValueError(f"SIMD={self.simd} does not divide K^2*IC={cols}")
+
+    def __repr__(self) -> str:  # pragma: no cover
+        return f"MvuFold(pe={self.pe}, simd={self.simd})"
+
+
+def _lane_product(x_blk, w_blk, simd_type: str):
+    """One SIMD lane bank: (B, SIMD) x (PE, SIMD) -> (B, PE, SIMD) products.
+
+    Mirrors paper Fig. 4: (a) XNOR, (b) +/-x mux, (c) multiplier.
+    """
+    xb = x_blk[:, None, :]  # (B, 1, SIMD)
+    wb = w_blk[None, :, :]  # (1, PE, SIMD)
+    if simd_type == "xnor":
+        return jnp.where(xb == wb, 1, 0).astype(jnp.int32)
+    if simd_type == "binary":
+        return jnp.where(wb == 1, xb, -xb).astype(jnp.int32)
+    if simd_type == "standard":
+        return (xb * wb).astype(jnp.int32)
+    raise ValueError(f"unknown simd_type {simd_type!r}")
+
+
+def _mvu_kernel(x_ref, w_ref, o_ref, *, simd_type: str, sf: int):
+    """Kernel body for one (neuron-fold, synapse-fold) grid step.
+
+    Grid = (OC/PE, SF).  Blocks: x (B, SIMD), w (PE, SIMD), o (B, PE).
+    The synapse-fold axis accumulates into ``o_ref`` — the Pallas analogue
+    of the RTL accumulator that integrates one SIMD slice per clock cycle.
+    """
+    j = pl.program_id(1)  # synapse fold index (the "clock cycle" of Fig. 3)
+
+    prods = _lane_product(x_ref[...], w_ref[...], simd_type)
+    partial = jnp.sum(prods, axis=-1, dtype=jnp.int32)  # adder tree / popcount
+
+    @pl.when(j == 0)
+    def _init():
+        o_ref[...] = partial
+
+    @pl.when(j > 0)
+    def _acc():
+        o_ref[...] = o_ref[...] + partial
+
+
+def mvu(x: jax.Array, w: jax.Array, fold: MvuFold, simd_type: str) -> jax.Array:
+    """Folded matrix-vector unit.
+
+    Args:
+      x: (B, IN) int32 activations (encoding per ``simd_type``, ref.py).
+      w: (OC, IN) int32 weights.
+      fold: PE/SIMD folding factors; must divide OC and IN respectively.
+      simd_type: "xnor" | "binary" | "standard".
+
+    Returns:
+      (B, OC) int32 accumulators (pre-threshold).
+    """
+    if x.ndim != 2 or w.ndim != 2:
+        raise ValueError("x must be (B, IN), w must be (OC, IN)")
+    b, cols = x.shape
+    rows, wcols = w.shape
+    if cols != wcols:
+        raise ValueError(f"reduction mismatch: x has {cols}, w has {wcols}")
+    fold.check(rows, cols)
+    nf = rows // fold.pe    # neuron fold
+    sf = cols // fold.simd  # synapse fold
+
+    kernel = functools.partial(_mvu_kernel, simd_type=simd_type, sf=sf)
+    grid = (nf, sf)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            # activations: re-used across neuron folds (index_map drops i),
+            # the Fig. 3 input-buffer behaviour.
+            pl.BlockSpec((b, fold.simd), lambda i, j: (0, j)),
+            # weights: one (PE x SIMD) tile per grid step = one weight-memory
+            # word per PE per cycle (Eq. 2 layout).
+            pl.BlockSpec((fold.pe, fold.simd), lambda i, j: (i, j)),
+        ],
+        out_specs=pl.BlockSpec((b, fold.pe), lambda i, j: (0, i)),
+        out_shape=jax.ShapeDtypeStruct((b, rows), jnp.int32),
+        interpret=True,
+    )(x.astype(jnp.int32), w.astype(jnp.int32))
+
+
+def mvu_xnor(x, w, pe: int, simd: int):
+    """XNOR-popcount MVU (1-bit weights & inputs stored as {0,1})."""
+    return mvu(x, w, MvuFold(pe, simd), "xnor")
+
+
+def mvu_binary(x, w, pe: int, simd: int):
+    """Binary-weight MVU ({0,1}-stored bipolar weights, intN inputs)."""
+    return mvu(x, w, MvuFold(pe, simd), "binary")
+
+
+def mvu_standard(x, w, pe: int, simd: int):
+    """Arbitrary-precision MVU (intN weights and inputs)."""
+    return mvu(x, w, MvuFold(pe, simd), "standard")

@@ -1,0 +1,188 @@
+"""Pure-numpy reference oracle for the MVU kernels.
+
+This module is the single source of truth for the numeric contract shared by
+
+  * the Pallas kernels (``kernels/mvu.py``),
+  * the AOT-lowered HLO artifacts executed from rust via PJRT,
+  * the cycle-accurate RTL simulator (``rust/src/sim``),
+  * the HLS behavioral model (``rust/src/sim/hls.rs``).
+
+All quantities are ``int32`` end to end so equality is exact (``==``), never
+``allclose``.  Encodings (DESIGN.md §5):
+
+  * ``binary``  values are in {0, 1},
+  * ``bipolar`` values are in {-1, +1} but *stored* as {0, 1}
+    (0 -> -1, 1 -> +1) to mirror the paper's Fig. 4(b) mux datapath,
+  * ``intN``    values are two's complement in [-2^(N-1), 2^(N-1) - 1].
+
+The three SIMD element types of the paper (Fig. 4):
+
+  XNOR      1-bit weights and inputs; a lane computes XNOR(w, x) and the PE
+            adds lanes with a popcount.  The dot product is therefore the
+            *number of agreeing bit positions*.
+  BINARY    binary (bipolar) weights, arbitrary-precision inputs; a lane is
+            a mux selecting +x or -x, the PE adds lanes with an adder tree.
+  STANDARD  arbitrary-precision weights and inputs; a lane is a multiplier,
+            the PE adds lanes with an adder tree.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+__all__ = [
+    "SIMD_TYPES",
+    "matvec_xnor",
+    "matvec_binary",
+    "matvec_standard",
+    "matvec",
+    "matvec_xnor_bitpacked",
+    "multithreshold",
+    "im2col",
+    "conv_as_gemm",
+    "quantize_int",
+    "folded_cycles",
+]
+
+SIMD_TYPES = ("xnor", "binary", "standard")
+
+
+def _as_i32(a) -> np.ndarray:
+    return np.asarray(a, dtype=np.int32)
+
+
+def matvec_xnor(x, w) -> np.ndarray:
+    """XNOR-popcount matrix-vector product (paper Fig. 4a).
+
+    ``x``: (B, IN) with values in {0,1};  ``w``: (OC, IN) in {0,1}.
+    Returns (B, OC) int32 where out[b,o] = popcount(xnor(w[o], x[b])), i.e.
+    the count of positions where the bits agree.
+    """
+    x, w = _as_i32(x), _as_i32(w)
+    if not (((x == 0) | (x == 1)).all() and ((w == 0) | (w == 1)).all()):
+        raise ValueError("xnor operands must be in {0,1}")
+    # xnor(a,b) == 1 - (a ^ b) == (a == b) on bits
+    return (x[:, None, :] == w[None, :, :]).sum(axis=-1).astype(np.int32)
+
+
+def matvec_binary(x, w) -> np.ndarray:
+    """Binary-weight matvec (paper Fig. 4b).
+
+    ``w`` holds bipolar weights stored as {0,1} (0 -> -1, 1 -> +1); ``x`` is
+    arbitrary-precision int32.  out[b,o] = sum_i (w[o,i] ? x[b,i] : -x[b,i]).
+    """
+    x, w = _as_i32(x), _as_i32(w)
+    if not ((w == 0) | (w == 1)).all():
+        raise ValueError("binary weights must be stored as {0,1}")
+    signs = (2 * w - 1).astype(np.int32)  # {0,1} -> {-1,+1}
+    return x @ signs.T
+
+
+def matvec_standard(x, w) -> np.ndarray:
+    """Arbitrary-precision matvec (paper Fig. 4c): plain integer GEMM."""
+    return _as_i32(x) @ _as_i32(w).T
+
+
+def matvec(x, w, simd_type: str) -> np.ndarray:
+    """Dispatch over the paper's three SIMD element types."""
+    if simd_type == "xnor":
+        return matvec_xnor(x, w)
+    if simd_type == "binary":
+        return matvec_binary(x, w)
+    if simd_type == "standard":
+        return matvec_standard(x, w)
+    raise ValueError(f"unknown simd_type {simd_type!r}")
+
+
+def matvec_xnor_bitpacked(x, w) -> np.ndarray:
+    """Bit-packed XNOR-popcount, the way the RTL actually computes it.
+
+    Packs bit rows into uint64 words, XNORs word-wise and popcounts.  Must
+    agree exactly with :func:`matvec_xnor`; used as a parity check that the
+    {0,1}-integer formulation is faithful to the hardware semantics.
+    """
+    x, w = _as_i32(x), _as_i32(w)
+    n = x.shape[-1]
+    nwords = (n + 63) // 64
+
+    def pack(bits: np.ndarray) -> np.ndarray:  # (R, n) -> (R, nwords)
+        out = np.zeros((bits.shape[0], nwords), dtype=np.uint64)
+        for i in range(n):
+            out[:, i // 64] |= bits[:, i].astype(np.uint64) << np.uint64(i % 64)
+        return out
+
+    xp, wp = pack(x), pack(w)
+    # Positions >= n would read as "agreeing zeros" after ~XOR; mask them.
+    mask = np.full(nwords, ~np.uint64(0), dtype=np.uint64)
+    tail = n % 64
+    if tail:
+        mask[-1] = (np.uint64(1) << np.uint64(tail)) - np.uint64(1)
+    agree = ~(xp[:, None, :] ^ wp[None, :, :]) & mask
+    popcnt = np.vectorize(lambda q: bin(int(q)).count("1"), otypes=[np.int64])
+    return popcnt(agree).sum(axis=-1).astype(np.int32)
+
+
+def multithreshold(acc, thresholds) -> np.ndarray:
+    """FINN MultiThreshold activation.
+
+    ``acc``: (B, OC) int32 accumulators; ``thresholds``: (OC, T) ascending
+    per-channel thresholds.  out[b,o] = #{t : acc[b,o] >= thresholds[o,t]},
+    an unsigned integer in [0, T].
+    """
+    acc = _as_i32(acc)
+    th = _as_i32(thresholds)
+    return (acc[:, :, None] >= th[None, :, :]).sum(axis=-1).astype(np.int32)
+
+
+def im2col(img, kd: int, stride: int = 1) -> np.ndarray:
+    """Sliding-window (SWU) expansion, paper Fig. 1.
+
+    ``img``: (B, H, W, IC) -> (B, OD_H*OD_W, KD*KD*IC).  Column ordering is
+    (ky, kx, ic), matching the rust SWU (``rust/src/sim/swu.rs``).
+    """
+    img = _as_i32(img)
+    b, h, w, ic = img.shape
+    od_h = (h - kd) // stride + 1
+    od_w = (w - kd) // stride + 1
+    cols = np.empty((b, od_h * od_w, kd * kd * ic), dtype=np.int32)
+    idx = 0
+    for oy in range(od_h):
+        for ox in range(od_w):
+            patch = img[:, oy * stride : oy * stride + kd, ox * stride : ox * stride + kd, :]
+            cols[:, idx, :] = patch.reshape(b, -1)
+            idx += 1
+    return cols
+
+
+def conv_as_gemm(img, kernels, simd_type: str = "standard", stride: int = 1) -> np.ndarray:
+    """Convolution lowered to im2col + MVU GEMM (paper Fig. 1).
+
+    ``kernels``: (OC, KD, KD, IC).  Returns (B, OD_H*OD_W, OC).
+    """
+    kernels = _as_i32(kernels)
+    oc, kd, _, ic = kernels.shape
+    cols = im2col(img, kd, stride)  # (B, OD^2, KD^2*IC)
+    wmat = kernels.reshape(oc, kd * kd * ic)
+    b, npix, _ = cols.shape
+    out = matvec(cols.reshape(b * npix, -1), wmat, simd_type)
+    return out.reshape(b, npix, oc)
+
+
+def quantize_int(a, bits: int) -> np.ndarray:
+    """Clip to the two's-complement range of ``bits``."""
+    lo, hi = -(1 << (bits - 1)), (1 << (bits - 1)) - 1
+    return np.clip(_as_i32(a), lo, hi).astype(np.int32)
+
+
+def folded_cycles(ifm_ch: int, ifm_dim: int, ofm_ch: int, kd: int,
+                  pe: int, simd: int, pipeline_depth: int = 4) -> int:
+    """Analytical execution-cycle model for one MVU (paper §6.2, Table 7).
+
+    The weight matrix is (OC x KD^2*IC); folding processes SIMD columns and
+    PE rows per cycle, and the matrix is applied once per output pixel
+    (OD^2 pixels).  ``pipeline_depth`` models fill latency (the paper's
+    Table 7 shows 17 cycles for a 12-fold layer 0, i.e. ~5 cycles of fill).
+    """
+    sf = (kd * kd * ifm_ch) // simd  # synapse fold
+    nf = ofm_ch // pe                # neuron fold
+    return sf * nf * ifm_dim * ifm_dim + pipeline_depth + 1

@@ -1,0 +1,43 @@
+"""Sliding-window unit (SWU): on-the-fly im2col, paper §4.1 / Fig. 1.
+
+FINN lowers a convolution to SWU -> MVU.  The SWU turns the (H, W, IC)
+input feature map into a stream of K^2*IC-long vectors, one per output
+pixel.  At L2 we express it as a gather so that it lowers into the same
+HLO module as the MVU kernel that consumes it.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+__all__ = ["swu_indices", "sliding_window"]
+
+
+def swu_indices(h: int, w: int, ic: int, kd: int, stride: int = 1) -> np.ndarray:
+    """Precomputed gather indices: (OD_H*OD_W, KD*KD*IC) into the flattened
+    (H*W*IC,) image.  Ordering (ky, kx, ic) matches ref.im2col and the rust
+    SWU."""
+    od_h = (h - kd) // stride + 1
+    od_w = (w - kd) // stride + 1
+    idx = np.empty((od_h * od_w, kd * kd * ic), dtype=np.int32)
+    p = 0
+    for oy in range(od_h):
+        for ox in range(od_w):
+            q = 0
+            for ky in range(kd):
+                for kx in range(kd):
+                    base = ((oy * stride + ky) * w + (ox * stride + kx)) * ic
+                    idx[p, q : q + ic] = np.arange(base, base + ic, dtype=np.int32)
+                    q += ic
+            p += 1
+    return idx
+
+
+def sliding_window(img: jax.Array, kd: int, stride: int = 1) -> jax.Array:
+    """(B, H, W, IC) int32 -> (B, OD_H*OD_W, KD*KD*IC) int32."""
+    b, h, w, ic = img.shape
+    idx = jnp.asarray(swu_indices(h, w, ic, kd, stride))
+    flat = img.reshape(b, h * w * ic)
+    return jnp.take(flat, idx, axis=1)

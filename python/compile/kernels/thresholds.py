@@ -1,0 +1,56 @@
+"""MultiThreshold activation — jnp and Pallas variants.
+
+FINN absorbs quantized activation functions into per-channel threshold
+comparisons (the "T" in the paper's MVTU).  The paper excludes the
+thresholding logic from its resource study (§4.1.1: "only requires a few
+LUTs"), but the full NID network needs it, so we implement it as part of
+the layer artifact.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+__all__ = ["multithreshold", "multithreshold_pallas", "make_uniform_thresholds"]
+
+
+def multithreshold(acc: jax.Array, thresholds: jax.Array) -> jax.Array:
+    """out[b, o] = #{t : acc[b, o] >= thresholds[o, t]} (int32, in [0, T])."""
+    return jnp.sum(
+        (acc[:, :, None] >= thresholds[None, :, :]).astype(jnp.int32), axis=-1
+    )
+
+
+def _thr_kernel(acc_ref, th_ref, o_ref):
+    acc = acc_ref[...]
+    th = th_ref[...]
+    o_ref[...] = jnp.sum(
+        (acc[:, :, None] >= th[None, :, :]).astype(jnp.int32), axis=-1
+    )
+
+
+def multithreshold_pallas(acc: jax.Array, thresholds: jax.Array) -> jax.Array:
+    """Pallas variant of :func:`multithreshold` (single-block; the threshold
+    unit is tiny compared to the MVU, so no folding is needed)."""
+    b, oc = acc.shape
+    t = thresholds.shape[1]
+    return pl.pallas_call(
+        _thr_kernel,
+        out_shape=jax.ShapeDtypeStruct((b, oc), jnp.int32),
+        interpret=True,
+    )(acc.astype(jnp.int32), thresholds.astype(jnp.int32))
+
+
+def make_uniform_thresholds(oc: int, out_bits: int, lo: int, hi: int):
+    """Evenly spaced per-channel thresholds producing a ``out_bits``-bit
+    unsigned activation: T = 2^out_bits - 1 thresholds across [lo, hi]."""
+    t = (1 << out_bits) - 1
+    span = max(hi - lo, 1)
+    base = jnp.asarray(
+        [lo + (k + 1) * span // (t + 1) for k in range(t)], dtype=jnp.int32
+    )
+    return jnp.tile(base[None, :], (oc, 1))

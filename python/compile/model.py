@@ -1,0 +1,176 @@
+"""L2: FINN-style quantized network definition in JAX.
+
+A network is a chain of MVU layers (paper Fig. 2/6); each layer is
+
+    acc = MVU(x, W)            # Pallas kernel, kernels/mvu.py
+    y   = MultiThreshold(acc)  # absorbed quantized activation (or identity
+                               # for the final layer, which emits raw
+                               # accumulators)
+
+mirroring FINN's MVTU.  The model here is *the build-time author* of the
+compute graph: `aot.py` lowers each layer (and the fused network) to HLO
+text with the weights burned in as constants — the exact analogue of the
+paper's burned-in weight memories (§5.1) — and the rust runtime executes
+those artifacts on the request path.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .kernels import MvuFold, mvu, multithreshold, sliding_window
+from .kernels import ref
+
+__all__ = ["LayerSpec", "QuantLayer", "QuantMlp", "ConvLayer", "nid_mlp_spec"]
+
+
+@dataclass(frozen=True)
+class LayerSpec:
+    """Static description of one MVU layer (mirrors rust `cfg::LayerParams`).
+
+    For a fully connected layer ``ifm_dim == kernel_dim == 1`` and the
+    weight matrix is (ofm_ch, ifm_ch) — exactly the paper's Table 6 rows.
+    """
+
+    name: str
+    ifm_ch: int
+    ifm_dim: int
+    ofm_ch: int
+    kernel_dim: int
+    pe: int
+    simd: int
+    simd_type: str  # "xnor" | "binary" | "standard"
+    weight_bits: int
+    input_bits: int
+    output_bits: int  # 0 => raw accumulator output (no thresholds)
+
+    @property
+    def matrix_cols(self) -> int:
+        return self.kernel_dim * self.kernel_dim * self.ifm_ch
+
+    @property
+    def matrix_rows(self) -> int:
+        return self.ofm_ch
+
+    def check(self) -> None:
+        MvuFold(self.pe, self.simd).check(self.matrix_rows, self.matrix_cols)
+
+    @property
+    def weight_mem_depth(self) -> int:
+        """Eq. (2): depth of each PE's weight memory."""
+        return self.matrix_cols * self.matrix_rows // (self.simd * self.pe)
+
+    @property
+    def input_buf_depth(self) -> int:
+        """Paper §6.2.1: input buffer depth = K^2 * IC / SIMD."""
+        return self.matrix_cols // self.simd
+
+
+class QuantLayer:
+    """One MVU + MultiThreshold layer with concrete parameters."""
+
+    def __init__(self, spec: LayerSpec, weights: np.ndarray,
+                 thresholds: Optional[np.ndarray]):
+        spec.check()
+        if weights.shape != (spec.matrix_rows, spec.matrix_cols):
+            raise ValueError(
+                f"{spec.name}: weights {weights.shape} != "
+                f"({spec.matrix_rows}, {spec.matrix_cols})")
+        if spec.output_bits > 0:
+            t = (1 << spec.output_bits) - 1
+            if thresholds is None or thresholds.shape != (spec.matrix_rows, t):
+                raise ValueError(f"{spec.name}: need ({spec.matrix_rows},{t}) thresholds")
+        self.spec = spec
+        self.weights = np.asarray(weights, dtype=np.int32)
+        self.thresholds = (None if thresholds is None
+                           else np.asarray(thresholds, dtype=np.int32))
+
+    def __call__(self, x: jax.Array) -> jax.Array:
+        """(B, cols) int32 -> (B, rows) int32 (thresholded or raw acc)."""
+        spec = self.spec
+        acc = mvu(x, jnp.asarray(self.weights),
+                  MvuFold(spec.pe, spec.simd), spec.simd_type)
+        if self.thresholds is None:
+            return acc
+        return multithreshold(acc, jnp.asarray(self.thresholds))
+
+    def reference(self, x: np.ndarray) -> np.ndarray:
+        """Pure-numpy oracle for this layer."""
+        acc = ref.matvec(x, self.weights, self.spec.simd_type)
+        if self.thresholds is None:
+            return acc
+        return ref.multithreshold(acc, self.thresholds)
+
+
+class QuantMlp:
+    """A chain of QuantLayers (the NID network of paper Table 6)."""
+
+    def __init__(self, layers: Sequence[QuantLayer]):
+        for a, b in zip(layers, layers[1:]):
+            if a.spec.matrix_rows != b.spec.matrix_cols:
+                raise ValueError(
+                    f"layer chain mismatch: {a.spec.name} rows "
+                    f"{a.spec.matrix_rows} != {b.spec.name} cols {b.spec.matrix_cols}")
+        self.layers = list(layers)
+
+    def __call__(self, x: jax.Array) -> jax.Array:
+        for layer in self.layers:
+            x = layer(x)
+        return x
+
+    def reference(self, x: np.ndarray) -> np.ndarray:
+        for layer in self.layers:
+            x = layer.reference(x)
+        return x
+
+    def predict(self, x: np.ndarray) -> np.ndarray:
+        """Binary decision from the final raw accumulator: acc >= 0."""
+        return (self.reference(x)[:, 0] >= 0).astype(np.int32)
+
+
+class ConvLayer:
+    """SWU + MVU convolutional layer (paper Fig. 1): im2col then GEMM."""
+
+    def __init__(self, spec: LayerSpec, weights: np.ndarray,
+                 thresholds: Optional[np.ndarray], stride: int = 1):
+        spec.check()
+        self.spec = spec
+        self.stride = stride
+        self.mvu_layer = QuantLayer(spec, weights, thresholds)
+
+    def __call__(self, img: jax.Array) -> jax.Array:
+        """(B, H, W, IC) int32 -> (B, OD*OD, OC) int32."""
+        b = img.shape[0]
+        cols = sliding_window(img, self.spec.kernel_dim, self.stride)
+        npix = cols.shape[1]
+        out = self.mvu_layer(cols.reshape(b * npix, -1))
+        return out.reshape(b, npix, self.spec.matrix_rows)
+
+    def reference(self, img: np.ndarray) -> np.ndarray:
+        cols = ref.im2col(img, self.spec.kernel_dim, self.stride)
+        b, npix, _ = cols.shape
+        out = self.mvu_layer.reference(cols.reshape(b * npix, -1))
+        return out.reshape(b, npix, self.spec.matrix_rows)
+
+
+def nid_mlp_spec() -> list[LayerSpec]:
+    """Paper Table 6: the 4-layer NID MLP, 2-bit weights/inputs.
+
+    Layer 3 emits the raw accumulator (output_bits=0); classification is
+    acc >= 0.
+    """
+    mk = lambda name, ic, oc, pe, simd, ob: LayerSpec(
+        name=name, ifm_ch=ic, ifm_dim=1, ofm_ch=oc, kernel_dim=1,
+        pe=pe, simd=simd, simd_type="standard",
+        weight_bits=2, input_bits=2, output_bits=ob)
+    return [
+        mk("layer0", 600, 64, 64, 50, 2),
+        mk("layer1", 64, 64, 16, 32, 2),
+        mk("layer2", 64, 64, 16, 32, 2),
+        mk("layer3", 64, 1, 1, 8, 0),
+    ]

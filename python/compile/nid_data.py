@@ -1,0 +1,155 @@
+"""Synthetic UNSW-NB15-like dataset for the NID MLP (paper §6.5).
+
+The paper's application study uses the UNSW-NB15 network-intrusion dataset
+[Moustafa & Slay 2015] purely as a realistic workload for a 4-layer MLP
+(600 -> 64 -> 64 -> 64 -> 1, 2-bit weights and activations, Table 6).  The
+dataset itself is not redistributable here, so we synthesize a
+class-conditional surrogate with the same interface (DESIGN.md §1):
+
+  * 49 base flow features (mirroring UNSW-NB15's feature count): a mix of
+    heavy-tailed "duration/bytes/packets"-like positives and categorical
+    protocol-like features;
+  * binary label (normal / attack) with an attack prior of ~0.32;
+  * attacks drawn from 9 sub-modes (the UNSW attack categories) that shift
+    a sparse subset of features — so the decision boundary is learnable but
+    not linearly trivial;
+  * features quantized to 2-bit unsigned codes {0..3} and one-hot/thermometer
+    expanded to exactly 600 network inputs, matching Table 6 layer 0.
+
+The rust generator (`rust/src/nid/dataset.rs`) implements the identical
+process with the identical PCG32 stream so that both sides can generate the
+same records from the same seed.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+N_FEATURES = 49
+N_INPUTS = 600
+N_ATTACK_MODES = 9
+ATTACK_PRIOR = 0.32
+
+__all__ = [
+    "N_FEATURES",
+    "N_INPUTS",
+    "Pcg32",
+    "generate_raw",
+    "quantize_features",
+    "expand_thermometer",
+    "generate",
+]
+
+
+class Pcg32:
+    """PCG32 (XSH-RR) — bit-identical to ``rust/src/util/rng.rs``.
+
+    Keeping the PRNG identical across languages lets rust integration tests
+    replay exactly the dataset the python side trained on, without shipping
+    data files.
+    """
+
+    MULT = 6364136223846793005
+    MASK = (1 << 64) - 1
+
+    def __init__(self, seed: int, stream: int = 54):
+        self.state = 0
+        self.inc = ((stream << 1) | 1) & self.MASK
+        self.next_u32()
+        self.state = (self.state + (seed & self.MASK)) & self.MASK
+        self.next_u32()
+
+    def next_u32(self) -> int:
+        old = self.state
+        self.state = (old * self.MULT + self.inc) & self.MASK
+        xorshifted = (((old >> 18) ^ old) >> 27) & 0xFFFFFFFF
+        rot = old >> 59
+        return ((xorshifted >> rot) | (xorshifted << ((-rot) & 31))) & 0xFFFFFFFF
+
+    def next_f64(self) -> float:
+        """Uniform in [0, 1) with 32 bits of entropy (enough here)."""
+        return self.next_u32() / 4294967296.0
+
+    def next_range(self, n: int) -> int:
+        """Uniform integer in [0, n) (modulo method; bias negligible for
+        the small n used here, and identical on both sides)."""
+        return self.next_u32() % n
+
+    def gauss(self) -> float:
+        """Box-Muller using two uniforms (deterministic pair consumption)."""
+        import math
+
+        u1 = max(self.next_f64(), 1e-12)
+        u2 = self.next_f64()
+        return math.sqrt(-2.0 * math.log(u1)) * math.cos(2.0 * math.pi * u2)
+
+
+# Per-mode sparse feature shifts: mode m shifts features {m, m+9, m+18, m+27}
+# by a mode-specific amount.  Chosen so modes overlap partially (realistic).
+_MODE_STRIDE = 9
+_MODE_SHIFT = 2.25
+
+
+def generate_raw(n: int, seed: int) -> tuple[np.ndarray, np.ndarray]:
+    """Generate ``n`` raw records: (features float64 (n, 49), labels (n,))."""
+    rng = Pcg32(seed)
+    feats = np.zeros((n, N_FEATURES), dtype=np.float64)
+    labels = np.zeros(n, dtype=np.int32)
+    for i in range(n):
+        attack = 1 if rng.next_f64() < ATTACK_PRIOR else 0
+        labels[i] = attack
+        # base traffic: heavy-tailed "volume" features + categorical-ish rest
+        for f in range(N_FEATURES):
+            g = rng.gauss()
+            if f < 12:  # duration / byte / packet counts: lognormal-ish
+                feats[i, f] = abs(g) * 1.5
+            else:
+                feats[i, f] = g
+        if attack:
+            mode = rng.next_range(N_ATTACK_MODES)
+            for k in range(4):
+                f = (mode + k * _MODE_STRIDE) % N_FEATURES
+                feats[i, f] += _MODE_SHIFT * (1.0 if k % 2 == 0 else -1.0)
+    return feats, labels
+
+
+def quantize_features(feats: np.ndarray) -> np.ndarray:
+    """Quantize each feature to a 2-bit code {0..3} with fixed cut points.
+
+    Cut points are fixed (not data-dependent) at {-1, 0, 1} in feature
+    space so that the rust side needs no calibration state.
+    """
+    codes = np.zeros(feats.shape, dtype=np.int32)
+    codes += (feats > -1.0).astype(np.int32)
+    codes += (feats > 0.0).astype(np.int32)
+    codes += (feats > 1.0).astype(np.int32)
+    return codes
+
+
+def expand_thermometer(codes: np.ndarray) -> np.ndarray:
+    """Thermometer-expand 49 2-bit codes into 600 2-bit network inputs.
+
+    Each feature f is replicated into r_f slots (sum of r_f = 600, r_f in
+    {12, 13}); slot s of feature f carries ``min(3, max(0, code - s % 3 + 1))``
+    — a cheap position-dependent re-coding that spreads information across
+    slots (mirrors LogicNets-style input fan-out to 600 wires, Table 6).
+    """
+    n, nf = codes.shape
+    assert nf == N_FEATURES
+    base, extra = divmod(N_INPUTS, N_FEATURES)  # 12 slots/feature, 12 extra
+    out = np.zeros((n, N_INPUTS), dtype=np.int32)
+    col = 0
+    for f in range(nf):
+        r = base + (1 if f < extra else 0)
+        for s in range(r):
+            v = codes[:, f] - (s % 3) + 1
+            out[:, col] = np.clip(v, 0, 3)
+            col += 1
+    assert col == N_INPUTS
+    return out
+
+
+def generate(n: int, seed: int = 2022) -> tuple[np.ndarray, np.ndarray]:
+    """Full pipeline: (inputs int32 (n, 600) in {0..3}, labels (n,))."""
+    feats, labels = generate_raw(n, seed)
+    return expand_thermometer(quantize_features(feats)), labels

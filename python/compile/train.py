@@ -1,0 +1,210 @@
+"""Build-time QAT training of the NID MLP (paper §6.5, Table 6).
+
+Trains the 600-64-64-64-1 MLP on the synthetic UNSW-NB15 surrogate with
+straight-through-estimator (STE) quantization:
+
+  * weights are fake-quantized to int2 {-2..1} in the forward pass,
+  * hidden activations are fake-quantized to 2-bit unsigned codes {0..3}
+    through a learnable affine (alpha, beta) + round + clip,
+  * the final layer emits a raw accumulator; the decision is
+    ``acc >= decision_threshold``.
+
+After training, the learnable affines are converted to *integer
+per-channel thresholds* (FINN streamlining): code k is emitted iff
+``acc >= T_k`` with ``T_k = ceil((k - 0.5 - beta) / alpha)``, which makes
+the integer network (rust sim / PJRT artifacts / ref.py) bit-exactly equal
+to the quantized training forward pass.
+
+Everything is hand-rolled (no optax in this environment): Adam, BCE loss,
+mini-batching.  The loss curve and final metrics land in
+``artifacts/train_log.json`` (EXPERIMENTS.md quotes them).
+"""
+
+from __future__ import annotations
+
+import json
+import math
+import os
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import nid_data
+from .model import LayerSpec, QuantLayer, QuantMlp, nid_mlp_spec
+
+__all__ = ["TrainResult", "train_nid", "thresholds_from_affine", "main"]
+
+_LAYER_DIMS = [(600, 64), (64, 64), (64, 64), (64, 1)]
+
+
+def _ste_round(z):
+    return z + jax.lax.stop_gradient(jnp.round(z) - z)
+
+
+def _quant_w(w):
+    """Fake-quantize weights to int2 {-2..1} with STE."""
+    return w + jax.lax.stop_gradient(jnp.clip(jnp.round(w), -2, 1) - w)
+
+
+def _forward(params, x):
+    """Quantized forward pass.  x: (B, 600) float of int codes {0..3}."""
+    h = x
+    for i, (w, a, b) in enumerate(params["layers"]):
+        acc = h @ _quant_w(w).T
+        if i < len(params["layers"]) - 1:
+            z = acc * jnp.exp(a) + b
+            h = jnp.clip(_ste_round(z), 0.0, 3.0)
+        else:
+            h = acc
+    return h[:, 0]
+
+
+def _loss_fn(params, x, y):
+    acc = _forward(params, x)
+    logits = (acc - params["t"]) * jnp.exp(params["s"])
+    # numerically stable BCE with logits
+    per = jnp.maximum(logits, 0) - logits * y + jnp.log1p(jnp.exp(-jnp.abs(logits)))
+    return jnp.mean(per)
+
+
+def _init_params(key):
+    layers = []
+    for i, (fin, fout) in enumerate(_LAYER_DIMS):
+        key, sub = jax.random.split(key)
+        w = jax.random.uniform(sub, (fout, fin), minval=-1.5, maxval=1.5)
+        # alpha ~ 1 / (expected |acc|) so the affine starts in range
+        a0 = -math.log(max(fin, 1) * 0.9)
+        layers.append((w, jnp.asarray(a0), jnp.asarray(1.5)))
+    return {"layers": layers, "t": jnp.asarray(0.0), "s": jnp.asarray(-2.0)}
+
+
+def _adam_init(params):
+    z = jax.tree_util.tree_map(jnp.zeros_like, params)
+    return {"m": z, "v": jax.tree_util.tree_map(jnp.zeros_like, params), "step": 0}
+
+
+def _adam_update(params, grads, state, lr=2e-2, b1=0.9, b2=0.999, eps=1e-8):
+    state["step"] += 1
+    t = state["step"]
+    state["m"] = jax.tree_util.tree_map(
+        lambda m, g: b1 * m + (1 - b1) * g, state["m"], grads)
+    state["v"] = jax.tree_util.tree_map(
+        lambda v, g: b2 * v + (1 - b2) * g * g, state["v"], grads)
+    bc1, bc2 = 1 - b1 ** t, 1 - b2 ** t
+    return jax.tree_util.tree_map(
+        lambda p, m, v: p - lr * (m / bc1) / (jnp.sqrt(v / bc2) + eps),
+        params, state["m"], state["v"]), state
+
+
+def thresholds_from_affine(alpha: float, beta: float, out_bits: int,
+                           oc: int) -> np.ndarray:
+    """Integer thresholds equivalent to round(clip(acc*alpha+beta, 0, 2^b-1)).
+
+    code k (k = 1..T) is active iff acc*alpha + beta >= k - 0.5, i.e.
+    acc >= (k - 0.5 - beta)/alpha  (alpha > 0).  T_k = ceil of that.
+    """
+    t = (1 << out_bits) - 1
+    row = np.asarray(
+        [math.ceil((k - 0.5 - beta) / alpha) for k in range(1, t + 1)],
+        dtype=np.int64)
+    row = np.clip(row, -(2 ** 31) + 1, 2 ** 31 - 1).astype(np.int32)
+    return np.tile(row[None, :], (oc, 1))
+
+
+@dataclass
+class TrainResult:
+    mlp: QuantMlp
+    decision_threshold: int
+    loss_curve: list
+    train_acc: float
+    test_acc: float
+
+
+def train_nid(steps: int = 400, batch: int = 256, n_train: int = 4096,
+              n_test: int = 1024, seed: int = 2022,
+              log_every: int = 20) -> TrainResult:
+    """Train the NID MLP and convert it to an exact integer QuantMlp."""
+    x_train, y_train = nid_data.generate(n_train, seed)
+    x_test, y_test = nid_data.generate(n_test, seed + 1)
+
+    params = _init_params(jax.random.PRNGKey(seed))
+    opt = _adam_init(params)
+    loss_grad = jax.jit(jax.value_and_grad(_loss_fn))
+
+    xf = jnp.asarray(x_train, dtype=jnp.float32)
+    yf = jnp.asarray(y_train, dtype=jnp.float32)
+    rng = np.random.default_rng(seed)
+    curve = []
+    for step in range(steps):
+        idx = rng.integers(0, n_train, size=batch)
+        loss, grads = loss_grad(params, xf[idx], yf[idx])
+        params, opt = _adam_update(params, grads, opt)
+        if step % log_every == 0 or step == steps - 1:
+            curve.append({"step": step, "loss": float(loss)})
+
+    # ---- convert to exact integer network --------------------------------
+    specs = nid_mlp_spec()
+    qlayers = []
+    for i, spec in enumerate(specs):
+        w, a, b = params["layers"][i]
+        wq = np.asarray(jnp.clip(jnp.round(w), -2, 1), dtype=np.int32)
+        if spec.output_bits > 0:
+            th = thresholds_from_affine(float(jnp.exp(a)), float(b),
+                                        spec.output_bits, spec.ofm_ch)
+        else:
+            th = None
+        qlayers.append(QuantLayer(spec, wq, th))
+    mlp = QuantMlp(qlayers)
+    dec_t = int(math.ceil(float(params["t"])))
+
+    def accuracy(x, y):
+        pred = (mlp.reference(x)[:, 0] >= dec_t).astype(np.int32)
+        return float((pred == y).mean())
+
+    res = TrainResult(
+        mlp=mlp,
+        decision_threshold=dec_t,
+        loss_curve=curve,
+        train_acc=accuracy(x_train, y_train),
+        test_acc=accuracy(x_test, y_test),
+    )
+    return res
+
+
+def save_result(res: TrainResult, out_dir: str) -> None:
+    os.makedirs(out_dir, exist_ok=True)
+    layers = []
+    for layer in res.mlp.layers:
+        layers.append({
+            "name": layer.spec.name,
+            "weights": layer.weights.tolist(),
+            "thresholds": None if layer.thresholds is None
+            else layer.thresholds.tolist(),
+        })
+    with open(os.path.join(out_dir, "nid_weights.json"), "w") as f:
+        json.dump({
+            "decision_threshold": res.decision_threshold,
+            "layers": layers,
+        }, f)
+    with open(os.path.join(out_dir, "train_log.json"), "w") as f:
+        json.dump({
+            "loss_curve": res.loss_curve,
+            "train_acc": res.train_acc,
+            "test_acc": res.test_acc,
+            "decision_threshold": res.decision_threshold,
+        }, f, indent=2)
+
+
+def main(out_dir: str = "../artifacts", steps: int = 400) -> TrainResult:
+    res = train_nid(steps=steps)
+    save_result(res, out_dir)
+    print(f"[train] steps={steps} final_loss={res.loss_curve[-1]['loss']:.4f} "
+          f"train_acc={res.train_acc:.3f} test_acc={res.test_acc:.3f} "
+          f"decision_threshold={res.decision_threshold}")
+    return res
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,101 @@
+"""AOT path tests: HLO text generation and the artifact contract."""
+
+import json
+import os
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from compile.aot import gen_weights, generic_specs, layer_fn, lower_fn, to_hlo_text
+from compile.model import QuantLayer
+from compile.kernels import ref
+
+ARTIFACTS = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")
+
+
+def test_hlo_text_contains_full_constants():
+    """Large constants must NOT be elided — the weight-burning contract."""
+    spec = generic_specs()[2]
+    w = gen_weights(spec.matrix_rows, spec.matrix_cols, spec.simd_type,
+                    spec.weight_bits, 7)
+    fn = layer_fn(QuantLayer(spec, w, None))
+    x = jax.ShapeDtypeStruct((1, spec.matrix_cols), jnp.int32)
+    text = lower_fn(fn, x)
+    assert "constant({...}" not in text
+    assert "s32[1,64]" in text  # output shape present
+
+
+def test_gen_weights_deterministic_and_in_range():
+    a = gen_weights(4, 8, "standard", 4, 7)
+    b = gen_weights(4, 8, "standard", 4, 7)
+    c = gen_weights(4, 8, "standard", 4, 8)
+    assert (a == b).all()
+    assert (a != c).any()
+    assert a.min() >= -8 and a.max() <= 7
+    bits = gen_weights(4, 8, "xnor", 1, 7)
+    assert set(np.unique(bits)) <= {0, 1}
+
+
+def test_layer_fn_matches_reference():
+    spec = generic_specs()[0]  # xnor
+    w = gen_weights(spec.matrix_rows, spec.matrix_cols, spec.simd_type,
+                    spec.weight_bits, 7)
+    fn = layer_fn(QuantLayer(spec, w, None))
+    rng = np.random.default_rng(5)
+    x = rng.integers(0, 2, (2, spec.matrix_cols)).astype(np.int32)
+    (got,) = jax.jit(fn)(jnp.asarray(x))
+    assert (np.asarray(got) == ref.matvec(x, w, "xnor")).all()
+
+
+@pytest.mark.skipif(
+    not os.path.exists(os.path.join(ARTIFACTS, "manifest.json")),
+    reason="artifacts not built (run `make artifacts`)",
+)
+def test_manifest_contract():
+    with open(os.path.join(ARTIFACTS, "manifest.json")) as f:
+        m = json.load(f)
+    assert m["version"] == 1
+    names = {a["name"] for a in m["artifacts"]}
+    for b in m["batch_sizes"]:
+        for i in range(4):
+            assert f"nid_layer{i}_b{b}" in names
+        assert f"nid_fused_b{b}" in names
+        assert f"conv3x3_b{b}" in names
+    for a in m["artifacts"]:
+        path = os.path.join(ARTIFACTS, a["path"])
+        assert os.path.exists(path), a["path"]
+        text = open(path).read()
+        assert "constant({...}" not in text, f"{a['name']} has elided constants"
+        assert a["in_shape"][0] == a["batch"]
+    # NID metadata matches Table 6
+    specs = m["nid"]["layers"]
+    assert [s["ifm_ch"] for s in specs] == [600, 64, 64, 64]
+    assert [s["pe"] for s in specs] == [64, 16, 16, 1]
+    assert [s["simd"] for s in specs] == [50, 32, 32, 8]
+
+
+@pytest.mark.skipif(
+    not os.path.exists(os.path.join(ARTIFACTS, "nid_weights.json")),
+    reason="artifacts not built",
+)
+def test_trained_weights_are_legal_int2():
+    with open(os.path.join(ARTIFACTS, "nid_weights.json")) as f:
+        data = json.load(f)
+    assert len(data["layers"]) == 4
+    for layer in data["layers"]:
+        w = np.asarray(layer["weights"])
+        assert w.min() >= -2 and w.max() <= 1
+        if layer["thresholds"] is not None:
+            th = np.asarray(layer["thresholds"])
+            assert (np.diff(th, axis=1) >= 0).all()
+
+
+def test_to_hlo_text_roundtrip_simple():
+    """The interchange recipe works for a plain jnp function too."""
+    lowered = jax.jit(lambda x: (x * 2 + 1,)).lower(
+        jax.ShapeDtypeStruct((4,), jnp.int32))
+    text = to_hlo_text(lowered)
+    assert "HloModule" in text

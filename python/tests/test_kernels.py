@@ -1,0 +1,172 @@
+"""L1 correctness: Pallas kernels vs the pure-numpy oracle.
+
+Exactness (integer ==, never allclose) over hypothesis-driven sweeps of
+shapes, precisions and PE/SIMD tilings — the CORE correctness signal of
+the compile path.
+"""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+import jax.numpy as jnp
+
+from compile.kernels import (
+    MvuFold,
+    make_uniform_thresholds,
+    multithreshold,
+    multithreshold_pallas,
+    mvu,
+    ref,
+    sliding_window,
+)
+
+SIMD_TYPES = ["xnor", "binary", "standard"]
+
+
+def divisors(n):
+    return [d for d in range(1, n + 1) if n % d == 0]
+
+
+@st.composite
+def mvu_case(draw, simd_type):
+    rows = draw(st.sampled_from([1, 2, 4, 6, 8, 16]))
+    cols = draw(st.sampled_from([2, 4, 8, 12, 16, 24, 50, 64]))
+    batch = draw(st.integers(1, 4))
+    pe = draw(st.sampled_from(divisors(rows)))
+    simd = draw(st.sampled_from(divisors(cols)))
+    seed = draw(st.integers(0, 2**31 - 1))
+    rng = np.random.default_rng(seed)
+    if simd_type == "xnor":
+        x = rng.integers(0, 2, (batch, cols))
+        w = rng.integers(0, 2, (rows, cols))
+    elif simd_type == "binary":
+        x = rng.integers(-8, 8, (batch, cols))
+        w = rng.integers(0, 2, (rows, cols))
+    else:
+        x = rng.integers(-8, 8, (batch, cols))
+        w = rng.integers(-8, 8, (rows, cols))
+    return (
+        x.astype(np.int32),
+        w.astype(np.int32),
+        MvuFold(pe, simd),
+    )
+
+
+@pytest.mark.parametrize("simd_type", SIMD_TYPES)
+@settings(max_examples=40, deadline=None)
+@given(data=st.data())
+def test_mvu_matches_ref_exactly(simd_type, data):
+    x, w, fold = data.draw(mvu_case(simd_type))
+    got = np.asarray(mvu(jnp.asarray(x), jnp.asarray(w), fold, simd_type))
+    want = ref.matvec(x, w, simd_type)
+    assert got.dtype == np.int32
+    assert (got == want).all(), f"{simd_type} fold={fold}"
+
+
+@pytest.mark.parametrize("simd_type", SIMD_TYPES)
+def test_fold_extremes(simd_type):
+    """Fully unfolded (PE=SIMD=1) and fully parallel (PE=rows, SIMD=cols)."""
+    rng = np.random.default_rng(0)
+    rows, cols, batch = 8, 16, 2
+    if simd_type == "xnor":
+        x = rng.integers(0, 2, (batch, cols)).astype(np.int32)
+    else:
+        x = rng.integers(-8, 8, (batch, cols)).astype(np.int32)
+    if simd_type == "standard":
+        w = rng.integers(-8, 8, (rows, cols)).astype(np.int32)
+    else:
+        w = rng.integers(0, 2, (rows, cols)).astype(np.int32)
+    want = ref.matvec(x, w, simd_type)
+    for fold in (MvuFold(1, 1), MvuFold(rows, cols)):
+        got = np.asarray(mvu(jnp.asarray(x), jnp.asarray(w), fold, simd_type))
+        assert (got == want).all()
+
+
+def test_fold_legality_checked():
+    x = jnp.zeros((1, 10), jnp.int32)
+    w = jnp.zeros((4, 10), jnp.int32)
+    with pytest.raises(ValueError):
+        mvu(x, w, MvuFold(3, 2), "standard")  # 3 does not divide 4
+    with pytest.raises(ValueError):
+        mvu(x, w, MvuFold(2, 3), "standard")  # 3 does not divide 10
+
+
+def test_xnor_rejects_nonbinary():
+    with pytest.raises(ValueError):
+        ref.matvec_xnor(np.array([[2]]), np.array([[1]]))
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    n=st.integers(1, 130),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_xnor_bitpacked_parity(n, seed):
+    """The {0,1}-integer xnor formulation equals the bit-packed popcount
+    the RTL computes — including across word boundaries."""
+    rng = np.random.default_rng(seed)
+    x = rng.integers(0, 2, (3, n)).astype(np.int32)
+    w = rng.integers(0, 2, (5, n)).astype(np.int32)
+    assert (ref.matvec_xnor(x, w) == ref.matvec_xnor_bitpacked(x, w)).all()
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    oc=st.integers(1, 16),
+    t=st.integers(1, 7),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_multithreshold_pallas_matches_ref(oc, t, seed):
+    rng = np.random.default_rng(seed)
+    acc = rng.integers(-100, 100, (4, oc)).astype(np.int32)
+    th = np.sort(rng.integers(-50, 50, (oc, t)), axis=1).astype(np.int32)
+    a = np.asarray(multithreshold(jnp.asarray(acc), jnp.asarray(th)))
+    b = np.asarray(multithreshold_pallas(jnp.asarray(acc), jnp.asarray(th)))
+    c = ref.multithreshold(acc, th)
+    assert (a == c).all() and (b == c).all()
+    assert a.min() >= 0 and a.max() <= t
+
+
+def test_uniform_thresholds_shape_and_order():
+    th = np.asarray(make_uniform_thresholds(8, 2, -30, 30))
+    assert th.shape == (8, 3)
+    assert (np.diff(th, axis=1) >= 0).all()
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    h=st.integers(2, 8),
+    kd=st.integers(1, 4),
+    ic=st.integers(1, 4),
+    stride=st.integers(1, 2),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_sliding_window_matches_im2col(h, kd, ic, stride, seed):
+    if kd > h:
+        return
+    rng = np.random.default_rng(seed)
+    img = rng.integers(0, 4, (2, h, h, ic)).astype(np.int32)
+    got = np.asarray(sliding_window(jnp.asarray(img), kd, stride))
+    want = ref.im2col(img, kd, stride)
+    assert (got == want).all()
+
+
+def test_conv_as_gemm_composes():
+    rng = np.random.default_rng(3)
+    img = rng.integers(-4, 4, (1, 6, 6, 3)).astype(np.int32)
+    k = rng.integers(-4, 4, (5, 3, 3, 3)).astype(np.int32)
+    out = ref.conv_as_gemm(img, k)
+    assert out.shape == (1, 16, 5)
+    # spot-check one output pixel against a direct dot product
+    oy, ox, oc = 1, 2, 3
+    patch = img[0, oy : oy + 3, ox : ox + 3, :].reshape(-1)
+    want = int(patch @ k[oc].reshape(-1))
+    assert out[0, oy * 4 + ox, oc] == want
+
+
+def test_folded_cycles_matches_paper_table7():
+    # NID layer 0: 17 cycles; layers 1/2: 13; layer 3: 13
+    assert ref.folded_cycles(600, 1, 64, 1, 64, 50) == 17
+    assert ref.folded_cycles(64, 1, 64, 1, 16, 32) == 13
+    assert ref.folded_cycles(64, 1, 1, 1, 1, 8) == 13

@@ -1,0 +1,107 @@
+"""L2 model-level tests: layer/network composition, NID spec, conv layer."""
+
+import numpy as np
+import pytest
+
+import jax.numpy as jnp
+
+from compile.model import ConvLayer, LayerSpec, QuantLayer, QuantMlp, nid_mlp_spec
+from compile.kernels import ref
+
+
+def small_spec(**kw):
+    base = dict(
+        name="t", ifm_ch=16, ifm_dim=1, ofm_ch=8, kernel_dim=1,
+        pe=4, simd=8, simd_type="standard", weight_bits=4, input_bits=4,
+        output_bits=2,
+    )
+    base.update(kw)
+    return LayerSpec(**base)
+
+
+def test_spec_derived_quantities():
+    s = small_spec()
+    assert s.matrix_cols == 16
+    assert s.matrix_rows == 8
+    assert s.weight_mem_depth == 16 * 8 // (8 * 4)
+    assert s.input_buf_depth == 2
+
+
+def test_layer_shape_validation():
+    s = small_spec()
+    with pytest.raises(ValueError):
+        QuantLayer(s, np.zeros((3, 16), np.int32), np.zeros((8, 3), np.int32))
+    with pytest.raises(ValueError):
+        QuantLayer(s, np.zeros((8, 16), np.int32), None)  # needs thresholds
+    # output_bits=0 -> raw accumulator, no thresholds needed
+    QuantLayer(small_spec(output_bits=0), np.zeros((8, 16), np.int32), None)
+
+
+def test_layer_forward_matches_reference():
+    rng = np.random.default_rng(1)
+    s = small_spec()
+    w = rng.integers(-8, 8, (8, 16)).astype(np.int32)
+    th = np.sort(rng.integers(-40, 40, (8, 3)), axis=1).astype(np.int32)
+    layer = QuantLayer(s, w, th)
+    x = rng.integers(-8, 8, (4, 16)).astype(np.int32)
+    got = np.asarray(layer(jnp.asarray(x)))
+    want = layer.reference(x)
+    assert (got == want).all()
+    assert (want == ref.multithreshold(ref.matvec_standard(x, w), th)).all()
+
+
+def test_mlp_chain_validation():
+    s0 = small_spec()
+    s1 = small_spec(name="t1", ifm_ch=9)  # 9 != 8 rows of s0
+    l0 = QuantLayer(s0, np.zeros((8, 16), np.int32), np.zeros((8, 3), np.int32))
+    with pytest.raises(ValueError):
+        QuantLayer(s1, np.zeros((8, 9), np.int32), np.zeros((8, 3), np.int32))
+        # (shape error above is about pe/simd divisibility; construct legal)
+    s1 = small_spec(name="t1", ifm_ch=9, simd=9, pe=8)
+    l1 = QuantLayer(s1, np.zeros((8, 9), np.int32), np.zeros((8, 3), np.int32))
+    with pytest.raises(ValueError):
+        QuantMlp([l0, l1])
+
+
+def test_nid_spec_matches_table6():
+    specs = nid_mlp_spec()
+    assert [s.ifm_ch for s in specs] == [600, 64, 64, 64]
+    assert [s.ofm_ch for s in specs] == [64, 64, 64, 1]
+    assert [s.pe for s in specs] == [64, 16, 16, 1]
+    assert [s.simd for s in specs] == [50, 32, 32, 8]
+    for s in specs:
+        s.check()
+        assert s.weight_bits == 2 and s.input_bits == 2
+
+
+def test_mlp_end_to_end_reference_and_jax_agree():
+    rng = np.random.default_rng(2)
+    specs = nid_mlp_spec()
+    layers = []
+    for s in specs:
+        w = rng.integers(-2, 2, (s.matrix_rows, s.matrix_cols)).astype(np.int32)
+        th = None
+        if s.output_bits:
+            th = np.sort(rng.integers(-60, 60, (s.matrix_rows, 3)), axis=1).astype(np.int32)
+        layers.append(QuantLayer(s, w, th))
+    mlp = QuantMlp(layers)
+    x = rng.integers(0, 4, (2, 600)).astype(np.int32)
+    got = np.asarray(mlp(jnp.asarray(x)))
+    assert (got == mlp.reference(x)).all()
+    assert got.shape == (2, 1)
+
+
+def test_conv_layer_matches_reference():
+    rng = np.random.default_rng(3)
+    s = LayerSpec(
+        name="conv", ifm_ch=4, ifm_dim=6, ofm_ch=8, kernel_dim=3,
+        pe=4, simd=6, simd_type="standard", weight_bits=4, input_bits=4,
+        output_bits=0,
+    )
+    w = rng.integers(-8, 8, (8, 36)).astype(np.int32)
+    conv = ConvLayer(s, w, None)
+    img = rng.integers(-8, 8, (2, 6, 6, 4)).astype(np.int32)
+    got = np.asarray(conv(jnp.asarray(img)))
+    want = conv.reference(img)
+    assert got.shape == (2, 16, 8)
+    assert (got == want).all()

@@ -1,0 +1,45 @@
+"""Cross-language parity goldens.
+
+The rust side (`rust/tests/parity.rs`) asserts the SAME constants; if
+either implementation drifts, exactly one of the two suites fails.
+"""
+
+import numpy as np
+
+from compile.nid_data import Pcg32, generate
+
+# Golden: Pcg32(seed=42, stream=54) first six u32 draws.
+PCG32_SEED42 = [2707161783, 2068313097, 3122475824, 2211639955, 3215226955, 3421331566]
+
+# Golden: generate(3, seed=7) -> record 2 first-8 inputs, labels, total sum.
+GEN3_SEED7_REC2_HEAD = [3, 2, 1, 3, 2, 1, 3, 2]
+GEN3_SEED7_LABELS = [0, 0, 0]
+GEN3_SEED7_SUM = 3148
+
+
+def test_pcg32_golden():
+    r = Pcg32(42)
+    assert [r.next_u32() for _ in range(6)] == PCG32_SEED42
+
+
+def test_pcg32_range_and_float():
+    r = Pcg32(1)
+    vals = [r.next_range(10) for _ in range(100)]
+    assert all(0 <= v < 10 for v in vals)
+    r2 = Pcg32(1)
+    f = r2.next_f64()
+    assert 0.0 <= f < 1.0
+
+
+def test_dataset_golden():
+    x, y = generate(3, 7)
+    assert x[2][:8].tolist() == GEN3_SEED7_REC2_HEAD
+    assert y.tolist() == GEN3_SEED7_LABELS
+    assert int(x.sum()) == GEN3_SEED7_SUM
+
+
+def test_dataset_shapes_and_range():
+    x, y = generate(32, 11)
+    assert x.shape == (32, 600)
+    assert x.min() >= 0 and x.max() <= 3
+    assert set(np.unique(y)) <= {0, 1}

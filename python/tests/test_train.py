@@ -1,0 +1,44 @@
+"""Training-path tests: STE threshold conversion exactness + a short
+training smoke run."""
+
+import math
+
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from compile.train import thresholds_from_affine, train_nid
+from compile.kernels import ref
+
+
+@settings(max_examples=60, deadline=None)
+@given(
+    alpha=st.floats(1e-4, 10.0, allow_nan=False),
+    beta=st.floats(-20.0, 20.0, allow_nan=False),
+    acc=st.integers(-5000, 5000),
+)
+def test_threshold_conversion_is_exact(alpha, beta, acc):
+    """The integer thresholds must reproduce round(clip(acc*a+b, 0, 3))
+    for every integer accumulator — the streamlining exactness property."""
+    th = thresholds_from_affine(alpha, beta, out_bits=2, oc=1)
+    got = ref.multithreshold(np.array([[acc]], np.int32), th)[0, 0]
+    want = int(np.clip(np.round(acc * alpha + beta), 0, 3))
+    assert got == want, f"acc={acc} alpha={alpha} beta={beta}"
+
+
+def test_threshold_rows_ascend():
+    th = thresholds_from_affine(0.03, 1.2, out_bits=2, oc=4)
+    assert th.shape == (4, 3)
+    assert (np.diff(th, axis=1) >= 0).all()
+
+
+def test_short_training_learns_something():
+    res = train_nid(steps=60, batch=128, n_train=1024, n_test=512, seed=7)
+    first = res.loss_curve[0]["loss"]
+    last = res.loss_curve[-1]["loss"]
+    assert last < first, f"loss should fall: {first} -> {last}"
+    # must beat the majority-class base rate (~0.68)
+    assert res.test_acc > 0.68, f"test acc {res.test_acc}"
+    # the exported network is exactly integer
+    for layer in res.mlp.layers:
+        assert layer.weights.dtype == np.int32
+        assert layer.weights.min() >= -2 and layer.weights.max() <= 1

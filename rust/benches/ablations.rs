@@ -1,0 +1,170 @@
+//! Design-choice ablations called out in DESIGN.md:
+//!
+//!   A1  output-FIFO depth vs stall cycles under bursty backpressure —
+//!       quantifies the §5.3.2 decoupling claim ("computation is allowed
+//!       to proceed for a few cycles while a small FIFO captures output");
+//!   A2  LUT- vs DSP-bound multipliers (§4.2's binding choice);
+//!   A3  the §6.1 clock-constraint methodology (5 ns, relax to 10 ns);
+//!   A4  full-chain pipelining: NID 4-layer chain vs layer-serial
+//!       execution (pipeline overlap factor);
+//!   A5  serving batch-size policy over the PJRT pipeline.
+//!
+//! Run with: `cargo bench --bench ablations`
+
+use finn_mvu::cfg::{nid_layers, sweep_simd, LayerParams, SimdType};
+use finn_mvu::estimate::dsp::{clock_report, dsp_lut_savings};
+use finn_mvu::estimate::Style;
+use finn_mvu::harness::random_weights;
+use finn_mvu::quant::Thresholds;
+use finn_mvu::sim::{run_mvu_fifo, MvuChain, StallPattern};
+use finn_mvu::util::rng::Pcg32;
+use finn_mvu::util::table::{fnum, Table};
+
+fn a1_fifo_depth() {
+    println!("== A1: output-FIFO depth vs backpressure stalls (SF=1 core, bursty sink) ==");
+    let p = LayerParams::fc("a1", 8, 8, 8, 8, SimdType::Standard, 4, 4, 0);
+    let w = random_weights(&p, 3);
+    let mut rng = Pcg32::new(4);
+    let vecs: Vec<Vec<i32>> = (0..64)
+        .map(|_| (0..8).map(|_| rng.next_range(16) as i32 - 8).collect())
+        .collect();
+    let mut t = Table::new(vec!["FIFO depth", "exec cycles", "stall cycles", "high-water"]);
+    for depth in [1usize, 2, 4, 8, 16] {
+        let rep = run_mvu_fifo(
+            &p,
+            &w,
+            &vecs,
+            StallPattern::None,
+            // bursty sink: 5 stalled cycles in every 8
+            StallPattern::Periodic { period: 8, duty: 5, phase: 0 },
+            depth,
+        )
+        .unwrap();
+        t.row(vec![
+            depth.to_string(),
+            rep.exec_cycles.to_string(),
+            rep.stall_cycles.to_string(),
+            rep.fifo_max_occupancy.to_string(),
+        ]);
+    }
+    println!("{}", t.render());
+}
+
+fn a2_dsp_binding() {
+    println!("== A2: LUT-bound vs DSP-bound multipliers (standard type) ==");
+    let mut t = Table::new(vec!["SIMD", "LUTs (LUT-mult)", "LUTs (DSP-mult)", "DSP48E1", "LUT savings"]);
+    for sp in sweep_simd(SimdType::Standard) {
+        let (lut, dsp_luts, dsps) = dsp_lut_savings(&sp.params);
+        t.row(vec![
+            sp.swept.to_string(),
+            lut.to_string(),
+            dsp_luts.to_string(),
+            dsps.to_string(),
+            format!("{:.0}%", (lut - dsp_luts) as f64 / lut as f64 * 100.0),
+        ]);
+    }
+    println!("{}", t.render());
+}
+
+fn a3_clock_constraints() {
+    println!("== A3: clock-constraint methodology (5 ns target, 10 ns fallback, §6.1) ==");
+    let mut t = Table::new(vec!["type", "style", "delay (ns)", "constraint", "Fmax (MHz)"]);
+    for ty in SimdType::ALL {
+        for style in [Style::Rtl, Style::Hls] {
+            let pts = sweep_simd(ty);
+            let p = &pts.last().unwrap().params;
+            let r = clock_report(p, style);
+            t.row(vec![
+                ty.name().to_string(),
+                style.name().to_string(),
+                fnum(r.delay_ns, 3),
+                format!("{} ns{}", r.constraint_ns, if r.met_primary { "" } else { " (relaxed)" }),
+                fnum(r.fmax_mhz, 0),
+            ]);
+        }
+    }
+    println!("{}", t.render());
+}
+
+fn a4_chain_overlap() {
+    println!("== A4: NID 4-layer chain — dataflow overlap vs layer-serial ==");
+    let specs = nid_layers();
+    let mut rng = Pcg32::new(5);
+    let layers: Vec<_> = specs
+        .iter()
+        .map(|p| {
+            let w = random_weights(p, 6);
+            let th = (p.output_bits > 0).then(|| {
+                Thresholds::from_rows(
+                    &(0..p.matrix_rows())
+                        .map(|_| {
+                            let mut t: Vec<i32> =
+                                (0..3).map(|_| rng.next_range(60) as i32 - 30).collect();
+                            t.sort();
+                            t
+                        })
+                        .collect::<Vec<_>>(),
+                )
+                .unwrap()
+            });
+            (p.clone(), w, th)
+        })
+        .collect();
+    let mut t = Table::new(vec!["records", "chain cycles", "serial cycles", "overlap", "cycles/record"]);
+    for n in [1usize, 4, 16, 64] {
+        let inputs: Vec<Vec<i32>> = (0..n)
+            .map(|_| (0..600).map(|_| rng.next_range(4) as i32).collect())
+            .collect();
+        let mut chain = MvuChain::new(layers.clone()).unwrap();
+        let rep = chain.run(&inputs).unwrap();
+        let serial: usize = specs.iter().map(|p| p.analytic_cycles(4)).sum::<usize>() * n;
+        t.row(vec![
+            n.to_string(),
+            rep.exec_cycles.to_string(),
+            serial.to_string(),
+            format!("{:.2}x", serial as f64 / rep.exec_cycles as f64),
+            fnum(rep.exec_cycles as f64 / n as f64, 1),
+        ]);
+    }
+    println!("{}", t.render());
+    println!("(steady-state II bound: bottleneck fold = 12 cycles/record)\n");
+}
+
+fn a5_serving_batch() {
+    use finn_mvu::coordinator::{Pipeline, PipelineConfig, Request};
+    use finn_mvu::nid::generate;
+    use finn_mvu::runtime::default_artifacts_dir;
+    let dir = default_artifacts_dir();
+    if !dir.join("manifest.json").exists() {
+        println!("== A5: (skipped — artifacts missing) ==");
+        return;
+    }
+    println!("== A5: serving batch-size policy (PJRT pipeline, 256 requests) ==");
+    let records = generate(256, 808);
+    let reqs: Vec<Request> = records
+        .iter()
+        .enumerate()
+        .map(|(i, r)| Request { id: i as u64, data: r.inputs.clone() })
+        .collect();
+    let mut t = Table::new(vec!["batch", "req/s", "p50 (us)", "p99 (us)"]);
+    for batch in [1usize, 16] {
+        let cfg = PipelineConfig { batch, ..Default::default() };
+        let pipe = Pipeline::nid(dir.clone(), cfg);
+        let (_, rep) = pipe.run(reqs.clone()).unwrap();
+        t.row(vec![
+            batch.to_string(),
+            fnum(rep.throughput_rps, 0),
+            fnum(rep.latency_p50_us, 0),
+            fnum(rep.latency_p99_us, 0),
+        ]);
+    }
+    println!("{}", t.render());
+}
+
+fn main() {
+    a1_fifo_depth();
+    a2_dsp_binding();
+    a3_clock_constraints();
+    a4_chain_overlap();
+    a5_serving_batch();
+}

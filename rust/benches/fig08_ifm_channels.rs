@@ -1,0 +1,22 @@
+//! Regenerates paper Fig. 8 (IFM-channel sweep, PE=SIMD=2) for all three SIMD-element types
+//! and benchmarks the estimator over the sweep.
+//!
+//! Run with: `cargo bench --bench fig08_ifm_channels`
+
+use finn_mvu::cfg::SimdType;
+use finn_mvu::harness::{bench, resource_sweep_figure, SweepKind};
+
+fn main() {
+    let kind = SweepKind::IfmChannels;
+    for ty in SimdType::ALL {
+        let series = resource_sweep_figure(kind, ty).unwrap();
+        println!("Fig. 8 — {} — {}", kind.label(), ty);
+        println!("{}", series.to_table().render());
+    }
+    let r = bench("fig08_ifm_channels/estimate_sweep", || {
+        for ty in SimdType::ALL {
+            std::hint::black_box(resource_sweep_figure(kind, ty).unwrap());
+        }
+    });
+    println!("{r}");
+}

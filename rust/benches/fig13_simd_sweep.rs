@@ -1,0 +1,22 @@
+//! Regenerates paper Fig. 13 (SIMD sweep, PE=64) for all three SIMD-element types
+//! and benchmarks the estimator over the sweep.
+//!
+//! Run with: `cargo bench --bench fig13_simd_sweep`
+
+use finn_mvu::cfg::SimdType;
+use finn_mvu::harness::{bench, resource_sweep_figure, SweepKind};
+
+fn main() {
+    let kind = SweepKind::Simd;
+    for ty in SimdType::ALL {
+        let series = resource_sweep_figure(kind, ty).unwrap();
+        println!("Fig. 13 — {} — {}", kind.label(), ty);
+        println!("{}", series.to_table().render());
+    }
+    let r = bench("fig13_simd_sweep/estimate_sweep", || {
+        for ty in SimdType::ALL {
+            std::hint::black_box(resource_sweep_figure(kind, ty).unwrap());
+        }
+    });
+    println!("{r}");
+}

@@ -1,0 +1,31 @@
+//! Regenerates paper Fig. 14: heat maps of the HLS-RTL resource difference
+//! over a PE x SIMD grid (4-bit standard type). Positive entries mean the
+//! RTL design is smaller; the paper's headline is the sign flip of the LUT
+//! map in the large-design corner while the FF map stays positive.
+//!
+//! Run with: `cargo bench --bench fig14_heatmap`
+
+use finn_mvu::harness::{bench, fig14_heatmap};
+
+fn main() {
+    let (lut, ff) = fig14_heatmap().unwrap();
+    println!("Fig. 14(a) dLUT = HLS - RTL (positive: RTL smaller)");
+    println!("{}", lut.render());
+    println!("Fig. 14(b) dFF = HLS - RTL");
+    println!("{}", ff.render());
+
+    // shape assertions mirrored from the paper's §6.2.1
+    let lut_s = lut.render();
+    let rows: Vec<&str> = lut_s.lines().skip(2).collect();
+    let first: i64 = rows[0].split_whitespace().nth(1).unwrap().parse().unwrap();
+    let last: i64 = rows.last().unwrap().split_whitespace().last().unwrap().parse().unwrap();
+    println!(
+        "shape: small-corner dLUT {first} (HLS larger), large-corner dLUT {last} ({})",
+        if last < 0 { "RTL larger — crossover reproduced" } else { "no crossover" }
+    );
+
+    let r = bench("fig14/heatmap", || {
+        std::hint::black_box(fig14_heatmap().unwrap());
+    });
+    println!("{r}");
+}

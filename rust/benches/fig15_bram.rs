@@ -1,0 +1,40 @@
+//! Regenerates paper Fig. 15: BRAM usage for HLS and RTL across all six
+//! sweeps with 1-bit precision. The paper's headline: HLS uses at least
+//! 2x the BRAM, and RTL frequently uses none at all.
+//!
+//! Run with: `cargo bench --bench fig15_bram`
+
+use finn_mvu::harness::{bench, fig15_bram};
+
+fn main() {
+    let t = fig15_bram().unwrap();
+    println!("Fig. 15 — BRAM18 usage, 1-bit precision");
+    println!("{}", t.render());
+
+    // aggregate shape check
+    let s = t.render();
+    let mut hls_total = 0i64;
+    let mut rtl_total = 0i64;
+    let mut rtl_zero_points = 0usize;
+    let mut points = 0usize;
+    for line in s.lines().skip(2) {
+        let cols: Vec<&str> = line.split_whitespace().collect();
+        let h: i64 = cols[cols.len() - 2].parse().unwrap();
+        let r: i64 = cols[cols.len() - 1].parse().unwrap();
+        hls_total += h;
+        rtl_total += r;
+        points += 1;
+        if r == 0 {
+            rtl_zero_points += 1;
+        }
+    }
+    println!(
+        "shape: HLS total {hls_total} vs RTL total {rtl_total} BRAM18 ({:.1}x); RTL uses zero BRAM at {rtl_zero_points}/{points} design points",
+        hls_total as f64 / rtl_total.max(1) as f64
+    );
+
+    let r = bench("fig15/bram_sweep", || {
+        std::hint::black_box(fig15_bram().unwrap());
+    });
+    println!("{r}");
+}

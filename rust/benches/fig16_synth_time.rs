@@ -1,0 +1,27 @@
+//! Regenerates paper Fig. 16: synthesis time vs the number of PEs and
+//! SIMDs. Headline: HLS takes >= 10x longer with superlinear growth.
+//!
+//! Run with: `cargo bench --bench fig16_synth_time`
+
+use finn_mvu::harness::{bench, fig16_synth_time};
+
+fn main() {
+    let t = fig16_synth_time().unwrap();
+    println!("Fig. 16 — synthesis time (standard type, 4-bit)");
+    println!("{}", t.render());
+
+    let s = t.render();
+    let ratios: Vec<f64> = s
+        .lines()
+        .skip(2)
+        .map(|l| l.split_whitespace().last().unwrap().parse().unwrap())
+        .collect();
+    let min = ratios.iter().cloned().fold(f64::INFINITY, f64::min);
+    let max = ratios.iter().cloned().fold(0.0, f64::max);
+    println!("shape: HLS/RTL synthesis-time ratio spans {min:.1}x .. {max:.1}x (paper: >= 10x)");
+
+    let r = bench("fig16/synth_model", || {
+        std::hint::black_box(fig16_synth_time().unwrap());
+    });
+    println!("{r}");
+}

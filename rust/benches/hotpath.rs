@@ -1,0 +1,73 @@
+//! Hot-path micro-benchmarks (DESIGN.md §Perf / EXPERIMENTS.md §Perf):
+//!
+//!   * simulator throughput in cycles/second on the NID layer-0 MVU and a
+//!     large PE=SIMD=32 conv MVU (the L3 optimization target);
+//!   * PJRT executable invocation latency at batch 1 and 16;
+//!   * quantized reference GEMM throughput (the numeric baseline).
+//!
+//! Run with: `cargo bench --bench hotpath`
+
+use finn_mvu::cfg::{nid_layers, LayerParams, SimdType};
+use finn_mvu::harness::{bench, random_weights};
+use finn_mvu::quant::matvec;
+use finn_mvu::runtime::{default_artifacts_dir, Engine};
+use finn_mvu::sim::run_mvu;
+use finn_mvu::util::rng::Pcg32;
+
+fn sim_bench(name: &str, params: &LayerParams, n_vec: usize) {
+    let w = random_weights(params, 11);
+    let mut rng = Pcg32::new(12);
+    let vectors: Vec<Vec<i32>> = (0..n_vec)
+        .map(|_| {
+            (0..params.matrix_cols())
+                .map(|_| match params.simd_type {
+                    SimdType::Xnor => rng.next_range(2) as i32,
+                    _ => rng.next_range(4) as i32,
+                })
+                .collect()
+        })
+        .collect();
+    let cycles = run_mvu(params, &w, &vectors).unwrap().exec_cycles;
+    let r = bench(name, || {
+        std::hint::black_box(run_mvu(params, &w, &vectors).unwrap());
+    });
+    println!(
+        "{r}\n    -> {:.2} Mcycles/s, {:.1} Mlane-ops/s",
+        cycles as f64 / (r.mean_ns / 1e3),
+        (params.pe * params.simd * cycles) as f64 / (r.mean_ns / 1e3)
+    );
+}
+
+fn main() {
+    // L3 simulator hot loop
+    let nid0 = nid_layers().remove(0);
+    sim_bench("sim/nid_layer0_x32vec", &nid0, 32);
+    let big = LayerParams::conv("big", 64, 8, 64, 4, 32, 32, SimdType::Standard, 4, 4);
+    sim_bench("sim/conv_pe32_simd32_x4img", &big, 4 * big.output_pixels());
+
+    // reference GEMM baseline
+    let w = random_weights(&nid0, 13);
+    let mut rng = Pcg32::new(14);
+    let x: Vec<i32> = (0..600).map(|_| rng.next_range(4) as i32).collect();
+    let r = bench("quant/matvec_600x64", || {
+        std::hint::black_box(matvec(&x, &w, SimdType::Standard).unwrap());
+    });
+    println!("{r}");
+
+    // PJRT invocation latency
+    let dir = default_artifacts_dir();
+    if dir.join("manifest.json").exists() {
+        let engine = Engine::new(&dir).unwrap();
+        for (name, n_in) in [("nid_fused_b1", 600usize), ("nid_fused_b16", 16 * 600)] {
+            let k = engine.load(name).unwrap();
+            let input: Vec<i32> = (0..n_in).map(|i| (i % 4) as i32).collect();
+            let r = bench(&format!("pjrt/{name}"), || {
+                std::hint::black_box(k.run(&input).unwrap());
+            });
+            let batch = k.info.batch as f64;
+            println!("{r}\n    -> {:.0} inferences/s", r.throughput(batch));
+        }
+    } else {
+        println!("(artifacts missing — skipping PJRT benches)");
+    }
+}

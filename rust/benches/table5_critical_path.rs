@@ -1,0 +1,32 @@
+//! Regenerates paper Table 5: critical-path delay (min/max/mean in ns)
+//! over the IFM/OFM/PE/SIMD sweeps for all three SIMD types. Headline:
+//! RTL is 45-80% faster everywhere; the standard-type HLS kernel sits at
+//! ~7.4 ns while RTL stays near 1.5 ns for small cores.
+//!
+//! Run with: `cargo bench --bench table5_critical_path`
+
+use finn_mvu::harness::{bench, table5};
+
+fn main() {
+    let (t, rows) = table5().unwrap();
+    println!("Table 5 — critical path delay (ns)");
+    println!("{}", t.render());
+
+    // speedup summary like the paper's §6.3.1
+    for r in &rows {
+        let speedup = (r.hls.mean - r.rtl.mean) / r.hls.mean * 100.0;
+        println!(
+            "{:<14} {:<9} RTL {:.3} ns vs HLS {:.3} ns -> RTL {:.0}% faster",
+            r.parameter,
+            r.simd_type.name(),
+            r.rtl.mean,
+            r.hls.mean,
+            speedup
+        );
+    }
+
+    let r = bench("table5/timing_model", || {
+        std::hint::black_box(table5().unwrap());
+    });
+    println!("{r}");
+}

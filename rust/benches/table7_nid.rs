@@ -1,0 +1,66 @@
+//! Regenerates paper Table 7: full NID synthesis + execution results, and
+//! benchmarks the serving stack end-to-end (pipeline over PJRT) when
+//! artifacts are available.
+//!
+//! Run with: `cargo bench --bench table7_nid`
+
+use finn_mvu::coordinator::{Pipeline, PipelineConfig, Request};
+use finn_mvu::harness::{bench_with, table7};
+use finn_mvu::nid::generate;
+use finn_mvu::runtime::{default_artifacts_dir, Manifest};
+use std::time::Duration;
+
+fn main() {
+    let dir = default_artifacts_dir();
+    let trained = Manifest::load(&dir)
+        .ok()
+        .and_then(|m| m.nid_weights().ok())
+        .map(|ws| ws.into_iter().map(|(w, _)| w).collect::<Vec<_>>());
+    let (t, rows) = table7(trained.as_deref()).unwrap();
+    println!(
+        "Table 7 — NID synthesis results, HLS/RTL ({} weights)",
+        if trained.is_some() { "trained" } else { "random" }
+    );
+    println!("{}", t.render());
+    println!("paper Table 7 reference rows:");
+    println!("  Layer #0: LUTs 30744/43894 FFs 21159/12965 delay 7.081/5.292 synth 38'45\"/5'21\" cycles 17/17");
+    println!("  Layer #1/2: LUTs 4653/5454 FFs 3276/4970 delay 7.453/4.959 synth 17'48\"/3'59\" cycles 13/13");
+    println!("  Layer #3: LUTs 248/133 FFs 364/158 delay 7.132/4.959 synth 16'28\"/1'43\" cycles 12/13");
+    for r in &rows {
+        println!(
+            "{}: synth ratio HLS/RTL = {:.1}x, RTL delay {:.0}% faster",
+            r.layer,
+            r.synth_s.0 / r.synth_s.1,
+            (r.delay_ns.0 - r.delay_ns.1) / r.delay_ns.0 * 100.0
+        );
+    }
+
+    // end-to-end serving benchmark over the real artifacts
+    if dir.join("manifest.json").exists() {
+        let records = generate(256, 777);
+        let reqs: Vec<Request> = records
+            .iter()
+            .enumerate()
+            .map(|(i, r)| Request { id: i as u64, data: r.inputs.clone() })
+            .collect();
+        for batch in [1usize, 16] {
+            let cfg = PipelineConfig { batch, ..Default::default() };
+            let pipe = Pipeline::nid(dir.clone(), cfg);
+            let (_, report) = pipe.run(reqs.clone()).unwrap();
+            println!("serving batch={batch}: {report}");
+        }
+    } else {
+        println!("(artifacts missing — skipping the serving benchmark; run `make artifacts`)");
+    }
+
+    let r = bench_with(
+        "table7/full_table",
+        Duration::from_millis(100),
+        Duration::from_millis(500),
+        10_000,
+        || {
+            std::hint::black_box(table7(trained.as_deref()).unwrap());
+        },
+    );
+    println!("{r}");
+}

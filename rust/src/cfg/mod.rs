@@ -1,0 +1,11 @@
+//! Configuration types: MVU/layer parameters and the paper's experiment
+//! configurations (Tables 2, 3 and 6).
+
+mod params;
+mod sweeps;
+
+pub use params::{LayerParams, SimdType, ACC_GUARD_BITS};
+pub use sweeps::{
+    nid_layers, sweep_ifm_channels, sweep_ifm_dim, sweep_kernel_dim, sweep_ofm_channels,
+    sweep_pe, sweep_simd, table3_configs, SweepPoint,
+};

@@ -1,0 +1,352 @@
+//! MVU design parameters — the axes of the paper's design-space sweep.
+
+use std::fmt;
+
+use anyhow::{bail, Result};
+
+/// Extra accumulator headroom bits beyond the exact worst case, matching
+/// common RTL practice (the paper's RTL sizes the accumulator exactly; we
+/// keep the constant visible for the estimator).
+pub const ACC_GUARD_BITS: u32 = 0;
+
+/// The three SIMD element types of paper Fig. 4.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum SimdType {
+    /// (a) XNOR of 1-bit weight and input, PE adds with popcount.
+    Xnor,
+    /// (b) binary (bipolar) weight selects +x / -x, adder tree.
+    BinaryWeights,
+    /// (c) arbitrary-precision multiplier, adder tree.
+    Standard,
+}
+
+impl SimdType {
+    pub const ALL: [SimdType; 3] =
+        [SimdType::Xnor, SimdType::BinaryWeights, SimdType::Standard];
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            SimdType::Xnor => "xnor",
+            SimdType::BinaryWeights => "binary",
+            SimdType::Standard => "standard",
+        }
+    }
+
+    pub fn parse(s: &str) -> Result<SimdType> {
+        Ok(match s {
+            "xnor" => SimdType::Xnor,
+            "binary" | "binary_weights" => SimdType::BinaryWeights,
+            "standard" => SimdType::Standard,
+            other => bail!("unknown simd type {other:?} (xnor|binary|standard)"),
+        })
+    }
+}
+
+impl fmt::Display for SimdType {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+/// Full parameter set of one MVU instantiation (paper Table 2 columns plus
+/// precisions). For fully connected layers `ifm_dim == kernel_dim == 1`.
+#[derive(Debug, Clone, PartialEq, Eq, Hash)]
+pub struct LayerParams {
+    pub name: String,
+    /// Number of input feature-map channels (I_c).
+    pub ifm_ch: usize,
+    /// Input feature-map spatial dimension (square).
+    pub ifm_dim: usize,
+    /// Number of output feature-map channels (O_c).
+    pub ofm_ch: usize,
+    /// Kernel spatial dimension (K_d, square).
+    pub kernel_dim: usize,
+    /// Processing elements — rows of the weight matrix handled in parallel.
+    pub pe: usize,
+    /// SIMD lanes per PE — reduction elements consumed per cycle.
+    pub simd: usize,
+    pub simd_type: SimdType,
+    /// Weight precision in bits (B_w). 1 for xnor/binary.
+    pub weight_bits: u32,
+    /// Input precision in bits. 1 for xnor.
+    pub input_bits: u32,
+    /// Output (activation) precision after thresholding; 0 = raw accumulator.
+    pub output_bits: u32,
+}
+
+impl LayerParams {
+    /// A fully connected layer (the NID MLP case).
+    pub fn fc(
+        name: &str,
+        in_features: usize,
+        out_features: usize,
+        pe: usize,
+        simd: usize,
+        simd_type: SimdType,
+        weight_bits: u32,
+        input_bits: u32,
+        output_bits: u32,
+    ) -> LayerParams {
+        LayerParams {
+            name: name.to_string(),
+            ifm_ch: in_features,
+            ifm_dim: 1,
+            ofm_ch: out_features,
+            kernel_dim: 1,
+            pe,
+            simd,
+            simd_type,
+            weight_bits,
+            input_bits,
+            output_bits,
+        }
+    }
+
+    /// A convolutional layer lowered to SWU + MVU.
+    #[allow(clippy::too_many_arguments)]
+    pub fn conv(
+        name: &str,
+        ifm_ch: usize,
+        ifm_dim: usize,
+        ofm_ch: usize,
+        kernel_dim: usize,
+        pe: usize,
+        simd: usize,
+        simd_type: SimdType,
+        weight_bits: u32,
+        input_bits: u32,
+    ) -> LayerParams {
+        LayerParams {
+            name: name.to_string(),
+            ifm_ch,
+            ifm_dim,
+            ofm_ch,
+            kernel_dim,
+            pe,
+            simd,
+            simd_type,
+            weight_bits,
+            input_bits,
+            output_bits: 0,
+        }
+    }
+
+    // ---- derived geometry (paper §4.1.1 / §5.1) ----------------------------
+
+    /// Weight-matrix columns: K_d^2 * I_c.
+    pub fn matrix_cols(&self) -> usize {
+        self.kernel_dim * self.kernel_dim * self.ifm_ch
+    }
+
+    /// Weight-matrix rows: O_c.
+    pub fn matrix_rows(&self) -> usize {
+        self.ofm_ch
+    }
+
+    /// Synapse fold SF = cols / SIMD (input-buffer depth, paper §6.2.1).
+    pub fn synapse_fold(&self) -> usize {
+        self.matrix_cols() / self.simd
+    }
+
+    /// Neuron fold NF = rows / PE.
+    pub fn neuron_fold(&self) -> usize {
+        self.matrix_rows() / self.pe
+    }
+
+    /// Output feature-map spatial dimension (valid convolution, stride 1).
+    pub fn ofm_dim(&self) -> usize {
+        self.ifm_dim - self.kernel_dim + 1
+    }
+
+    /// Output pixels per image = OFM dim squared (1 for FC layers).
+    pub fn output_pixels(&self) -> usize {
+        let d = self.ofm_dim();
+        d * d
+    }
+
+    /// Eq. (2): depth of each PE's weight memory,
+    /// K_d^2 * I_c * O_c / (SIMD * PE).
+    pub fn weight_mem_depth(&self) -> usize {
+        self.matrix_cols() * self.matrix_rows() / (self.simd * self.pe)
+    }
+
+    /// Width of one weight-memory word: SIMD * B_w bits.
+    pub fn weight_mem_width_bits(&self) -> usize {
+        self.simd * self.weight_bits as usize
+    }
+
+    /// Input-buffer depth = K_d^2 * I_c / SIMD (paper §6.2.1).
+    pub fn input_buf_depth(&self) -> usize {
+        self.synapse_fold()
+    }
+
+    /// Width of one input-buffer word: SIMD * input_bits bits.
+    pub fn input_buf_width_bits(&self) -> usize {
+        self.simd * self.input_bits as usize
+    }
+
+    /// Exact accumulator width needed for the worst-case dot product.
+    pub fn accumulator_bits(&self) -> u32 {
+        let n = self.matrix_cols() as u64;
+        let lanes_log = 64 - n.next_power_of_two().leading_zeros() - 1;
+        let width = match self.simd_type {
+            // popcount of N bits needs ceil(log2(N+1)) bits, unsigned.
+            SimdType::Xnor => ceil_log2(n + 1),
+            // sum of N terms of magnitude <= max|x|: signed.
+            SimdType::BinaryWeights => self.input_bits + ceil_log2(n) + 1,
+            SimdType::Standard => self.input_bits + self.weight_bits + ceil_log2(n),
+        };
+        let _ = lanes_log;
+        width + ACC_GUARD_BITS
+    }
+
+    /// Folding legality (paper: SIMD | cols, PE | rows). FINN enforces the
+    /// same divisibility when assigning folds.
+    pub fn validate(&self) -> Result<()> {
+        if self.pe == 0 || self.simd == 0 {
+            bail!("{}: PE and SIMD must be positive", self.name);
+        }
+        if self.matrix_cols() % self.simd != 0 {
+            bail!(
+                "{}: SIMD={} does not divide K^2*IC={}",
+                self.name,
+                self.simd,
+                self.matrix_cols()
+            );
+        }
+        if self.matrix_rows() % self.pe != 0 {
+            bail!("{}: PE={} does not divide OC={}", self.name, self.pe, self.matrix_rows());
+        }
+        if self.kernel_dim > self.ifm_dim {
+            bail!("{}: kernel {} larger than IFM {}", self.name, self.kernel_dim, self.ifm_dim);
+        }
+        match self.simd_type {
+            SimdType::Xnor => {
+                if self.weight_bits != 1 || self.input_bits != 1 {
+                    bail!("{}: xnor requires 1-bit weights and inputs", self.name);
+                }
+            }
+            SimdType::BinaryWeights => {
+                if self.weight_bits != 1 {
+                    bail!("{}: binary-weight type requires 1-bit weights", self.name);
+                }
+            }
+            SimdType::Standard => {
+                if self.weight_bits < 2 || self.input_bits < 2 {
+                    bail!(
+                        "{}: standard type expects >=2-bit operands (use xnor/binary)",
+                        self.name
+                    );
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Analytical execution cycles for one image through the MVU:
+    /// SF * NF * OD^2 plus pipeline fill (paper §6.2, Table 7).
+    /// Must match the cycle-accurate simulator exactly — asserted by
+    /// property tests.
+    pub fn analytic_cycles(&self, pipeline_depth: usize) -> usize {
+        self.synapse_fold() * self.neuron_fold() * self.output_pixels() + pipeline_depth + 1
+    }
+}
+
+impl fmt::Display for LayerParams {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(
+            f,
+            "{}[{}x{} {} ifm={}ch/{}px ofm={}ch kd={} pe={} simd={} w{}i{}o{}]",
+            self.name,
+            self.matrix_rows(),
+            self.matrix_cols(),
+            self.simd_type,
+            self.ifm_ch,
+            self.ifm_dim,
+            self.ofm_ch,
+            self.kernel_dim,
+            self.pe,
+            self.simd,
+            self.weight_bits,
+            self.input_bits,
+            self.output_bits,
+        )
+    }
+}
+
+fn ceil_log2(n: u64) -> u32 {
+    if n <= 1 {
+        0
+    } else {
+        64 - (n - 1).leading_zeros()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn base() -> LayerParams {
+        LayerParams::conv("t", 64, 32, 64, 4, 2, 2, SimdType::Standard, 4, 4)
+    }
+
+    #[test]
+    fn geometry_matches_paper() {
+        let p = base();
+        assert_eq!(p.matrix_cols(), 4 * 4 * 64);
+        assert_eq!(p.matrix_rows(), 64);
+        // Eq. (2)
+        assert_eq!(p.weight_mem_depth(), 4 * 4 * 64 * 64 / (2 * 2));
+        assert_eq!(p.input_buf_depth(), 4 * 4 * 64 / 2);
+        assert_eq!(p.weight_mem_width_bits(), 2 * 4);
+    }
+
+    #[test]
+    fn folding_legality() {
+        let mut p = base();
+        assert!(p.validate().is_ok());
+        p.simd = 3; // 1024 % 3 != 0
+        assert!(p.validate().is_err());
+        p.simd = 2;
+        p.pe = 5;
+        assert!(p.validate().is_err());
+    }
+
+    #[test]
+    fn simd_type_precision_rules() {
+        let mut p = base();
+        p.simd_type = SimdType::Xnor;
+        assert!(p.validate().is_err()); // 4-bit operands
+        p.weight_bits = 1;
+        p.input_bits = 1;
+        assert!(p.validate().is_ok());
+        p.simd_type = SimdType::BinaryWeights;
+        p.input_bits = 4;
+        assert!(p.validate().is_ok());
+    }
+
+    #[test]
+    fn accumulator_widths() {
+        let mut p = LayerParams::fc("t", 64, 8, 8, 8, SimdType::Xnor, 1, 1, 0);
+        assert_eq!(p.accumulator_bits(), 7); // popcount of 64 -> [0,64] needs 7 bits
+        p.simd_type = SimdType::Standard;
+        p.weight_bits = 4;
+        p.input_bits = 4;
+        // 64 products of 8-bit magnitude: 4+4+6 = 14
+        assert_eq!(p.accumulator_bits(), 14);
+    }
+
+    #[test]
+    fn analytic_cycles_formula() {
+        // NID layer 0: 600x64, PE=64, SIMD=50 -> SF=12, NF=1, 1 pixel.
+        let p = LayerParams::fc("l0", 600, 64, 64, 50, SimdType::Standard, 2, 2, 2);
+        assert_eq!(p.analytic_cycles(4), 12 + 5); // paper Table 7: 17
+    }
+
+    #[test]
+    fn parse_simd_type() {
+        assert_eq!(SimdType::parse("xnor").unwrap(), SimdType::Xnor);
+        assert_eq!(SimdType::parse("binary").unwrap(), SimdType::BinaryWeights);
+        assert!(SimdType::parse("bogus").is_err());
+    }
+}

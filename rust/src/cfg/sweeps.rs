@@ -1,0 +1,188 @@
+//! The paper's experiment configurations.
+//!
+//! Table 2 defines six sweep configurations (a `*` marks the swept
+//! parameter); Table 3 the larger-design configurations behind Table 4;
+//! Table 6 the NID MLP layers.
+
+use super::params::{LayerParams, SimdType};
+
+/// One point of a sweep: the swept value plus the full parameter set.
+#[derive(Debug, Clone)]
+pub struct SweepPoint {
+    pub swept: usize,
+    pub params: LayerParams,
+}
+
+fn with_precision(mut p: LayerParams, simd_type: SimdType) -> LayerParams {
+    p.simd_type = simd_type;
+    match simd_type {
+        SimdType::Xnor => {
+            p.weight_bits = 1;
+            p.input_bits = 1;
+        }
+        SimdType::BinaryWeights => {
+            p.weight_bits = 1;
+            p.input_bits = 4;
+        }
+        // "we [use] four as the precision for inputs and weights" (§6.1)
+        SimdType::Standard => {
+            p.weight_bits = 4;
+            p.input_bits = 4;
+        }
+    }
+    p
+}
+
+fn conv(name: &str, ifm_ch: usize, ifm_dim: usize, ofm_ch: usize, kd: usize,
+        pe: usize, simd: usize, ty: SimdType) -> LayerParams {
+    with_precision(
+        LayerParams::conv(name, ifm_ch, ifm_dim, ofm_ch, kd, pe, simd,
+                          SimdType::Standard, 4, 4),
+        ty,
+    )
+}
+
+/// Table 2 configuration 1: sweep IFM channels 2..=64 (powers of two),
+/// IFM dim 32, OFM 64, K_d 4, PE = SIMD = 2.
+pub fn sweep_ifm_channels(ty: SimdType) -> Vec<SweepPoint> {
+    [2usize, 4, 8, 16, 32, 64]
+        .iter()
+        .map(|&ic| SweepPoint {
+            swept: ic,
+            params: conv(&format!("ifmch{ic}"), ic, 32, 64, 4, 2, 2, ty),
+        })
+        .collect()
+}
+
+/// Table 2 configuration 2: sweep IFM dimension 4..=16 with a large core
+/// (PE = SIMD = 32), IFM ch 64, OFM 64, K_d 4 (paper Fig. 11).
+pub fn sweep_ifm_dim(ty: SimdType) -> Vec<SweepPoint> {
+    [4usize, 8, 16]
+        .iter()
+        .map(|&d| SweepPoint {
+            swept: d,
+            params: conv(&format!("ifmdim{d}"), 64, d, 64, 4, 32, 32, ty),
+        })
+        .collect()
+}
+
+/// Table 2 configuration 3: sweep OFM channels 2..=64, PE = SIMD = 2.
+pub fn sweep_ofm_channels(ty: SimdType) -> Vec<SweepPoint> {
+    [2usize, 4, 8, 16, 32, 64]
+        .iter()
+        .map(|&oc| SweepPoint {
+            swept: oc,
+            params: conv(&format!("ofmch{oc}"), 64, 32, oc, 4, 2, 2, ty),
+        })
+        .collect()
+}
+
+/// Table 2 configuration 4: sweep kernel dimension 3..=9.
+/// PE/SIMD are kept small (2) per §6.2.1 discussion of Fig. 9; SIMD=2
+/// requires K_d^2*IC even, which holds for IC=64.
+pub fn sweep_kernel_dim(ty: SimdType) -> Vec<SweepPoint> {
+    [3usize, 4, 5, 6, 7, 8, 9]
+        .iter()
+        .map(|&kd| SweepPoint {
+            swept: kd,
+            params: conv(&format!("kd{kd}"), 64, 32, 64, kd, 2, 2, ty),
+        })
+        .collect()
+}
+
+/// Table 2 configuration 5: sweep PE 2..=64 with SIMD = 64,
+/// IFM ch 64, IFM dim 8, OFM 64, K_d 4.
+pub fn sweep_pe(ty: SimdType) -> Vec<SweepPoint> {
+    [2usize, 4, 8, 16, 32, 64]
+        .iter()
+        .map(|&pe| SweepPoint {
+            swept: pe,
+            params: conv(&format!("pe{pe}"), 64, 8, 64, 4, pe, 64, ty),
+        })
+        .collect()
+}
+
+/// Table 2 configuration 6: sweep SIMD 2..=64 with PE = 64.
+pub fn sweep_simd(ty: SimdType) -> Vec<SweepPoint> {
+    [2usize, 4, 8, 16, 32, 64]
+        .iter()
+        .map(|&simd| SweepPoint {
+            swept: simd,
+            params: conv(&format!("simd{simd}"), 64, 8, 64, 4, 64, simd, ty),
+        })
+        .collect()
+}
+
+/// Table 3: larger designs (PE = SIMD = 16) with growing IFM channels,
+/// 4-bit weights/inputs. Feeds Table 4.
+pub fn table3_configs() -> Vec<SweepPoint> {
+    [16usize, 32, 64]
+        .iter()
+        .map(|&ic| SweepPoint {
+            swept: ic,
+            params: conv(&format!("cfg_ifm{ic}"), ic, 16, 16, 4, 16, 16,
+                         SimdType::Standard),
+        })
+        .collect()
+}
+
+/// Table 6: the 4-layer NID MLP (2-bit weights/inputs).
+pub fn nid_layers() -> Vec<LayerParams> {
+    vec![
+        LayerParams::fc("layer0", 600, 64, 64, 50, SimdType::Standard, 2, 2, 2),
+        LayerParams::fc("layer1", 64, 64, 16, 32, SimdType::Standard, 2, 2, 2),
+        LayerParams::fc("layer2", 64, 64, 16, 32, SimdType::Standard, 2, 2, 2),
+        LayerParams::fc("layer3", 64, 1, 1, 8, SimdType::Standard, 2, 2, 0),
+    ]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn all_sweep_points_are_legal() {
+        for ty in SimdType::ALL {
+            for sp in sweep_ifm_channels(ty)
+                .into_iter()
+                .chain(sweep_ifm_dim(ty))
+                .chain(sweep_ofm_channels(ty))
+                .chain(sweep_kernel_dim(ty))
+                .chain(sweep_pe(ty))
+                .chain(sweep_simd(ty))
+            {
+                sp.params.validate().unwrap_or_else(|e| panic!("{}: {e}", sp.params));
+            }
+        }
+        for sp in table3_configs() {
+            sp.params.validate().unwrap();
+        }
+    }
+
+    #[test]
+    fn nid_matches_table6() {
+        let layers = nid_layers();
+        assert_eq!(layers.len(), 4);
+        assert_eq!(layers[0].ifm_ch, 600);
+        assert_eq!(layers[0].pe, 64);
+        assert_eq!(layers[0].simd, 50);
+        assert_eq!(layers[3].ofm_ch, 1);
+        for l in &layers {
+            l.validate().unwrap();
+            assert_eq!(l.weight_bits, 2);
+            assert_eq!(l.input_bits, 2);
+        }
+        // paper Table 7 execution cycles: 17 / 13 / 13 / 12-13
+        assert_eq!(layers[0].analytic_cycles(4), 17);
+        assert_eq!(layers[1].analytic_cycles(4), 13);
+        assert_eq!(layers[3].analytic_cycles(4), 13);
+    }
+
+    #[test]
+    fn precision_rules_applied() {
+        let xs = sweep_pe(SimdType::Xnor);
+        assert!(xs.iter().all(|s| s.params.weight_bits == 1 && s.params.input_bits == 1));
+        let st = sweep_pe(SimdType::Standard);
+        assert!(st.iter().all(|s| s.params.weight_bits == 4 && s.params.input_bits == 4));
+    }
+}

@@ -1,0 +1,147 @@
+//! Request batcher: groups single requests into artifact-sized batches.
+//!
+//! The AOT artifacts are compiled for fixed batch sizes (manifest
+//! `batch_sizes`); the batcher fills a batch up to the target size or
+//! flushes early on timeout — the standard dynamic-batching policy of
+//! serving systems, here with the padding semantics the fixed-shape
+//! executables need.
+
+use std::time::{Duration, Instant};
+
+/// A batch of flattened request payloads.
+#[derive(Debug, Clone)]
+pub struct Batch {
+    /// Request ids, one per real (non-padding) row.
+    pub ids: Vec<u64>,
+    /// Submission timestamps aligned with `ids` (for latency accounting).
+    pub stamps: Vec<Instant>,
+    /// Flattened row-major payload of `capacity * row_len` (padded rows
+    /// are zero).
+    pub data: Vec<i32>,
+    pub row_len: usize,
+    pub capacity: usize,
+}
+
+impl Batch {
+    pub fn occupancy(&self) -> usize {
+        self.ids.len()
+    }
+
+    pub fn is_full(&self) -> bool {
+        self.ids.len() == self.capacity
+    }
+}
+
+/// Accumulating batcher.
+#[derive(Debug)]
+pub struct Batcher {
+    row_len: usize,
+    capacity: usize,
+    max_wait: Duration,
+    pending_ids: Vec<u64>,
+    pending_stamps: Vec<Instant>,
+    pending_data: Vec<i32>,
+    oldest: Option<Instant>,
+}
+
+impl Batcher {
+    pub fn new(row_len: usize, capacity: usize, max_wait: Duration) -> Batcher {
+        assert!(capacity > 0 && row_len > 0);
+        Batcher {
+            row_len,
+            capacity,
+            max_wait,
+            pending_ids: Vec::new(),
+            pending_stamps: Vec::new(),
+            pending_data: Vec::new(),
+            oldest: None,
+        }
+    }
+
+    pub fn pending(&self) -> usize {
+        self.pending_ids.len()
+    }
+
+    /// Add a request; returns a full batch if this push filled it.
+    pub fn push(&mut self, id: u64, row: &[i32], now: Instant) -> Option<Batch> {
+        assert_eq!(row.len(), self.row_len, "request row length");
+        if self.pending_ids.is_empty() {
+            self.oldest = Some(now);
+        }
+        self.pending_ids.push(id);
+        self.pending_stamps.push(now);
+        self.pending_data.extend_from_slice(row);
+        if self.pending_ids.len() == self.capacity {
+            return Some(self.flush());
+        }
+        None
+    }
+
+    /// Flush on timeout: returns a (padded) partial batch if the oldest
+    /// pending request has waited longer than `max_wait`.
+    pub fn poll(&mut self, now: Instant) -> Option<Batch> {
+        match self.oldest {
+            Some(t) if now.duration_since(t) >= self.max_wait && !self.pending_ids.is_empty() => {
+                Some(self.flush())
+            }
+            _ => None,
+        }
+    }
+
+    /// Force out whatever is pending (shutdown path).
+    pub fn flush_remaining(&mut self) -> Option<Batch> {
+        if self.pending_ids.is_empty() {
+            None
+        } else {
+            Some(self.flush())
+        }
+    }
+
+    fn flush(&mut self) -> Batch {
+        let ids = std::mem::take(&mut self.pending_ids);
+        let stamps = std::mem::take(&mut self.pending_stamps);
+        let mut data = std::mem::take(&mut self.pending_data);
+        data.resize(self.capacity * self.row_len, 0); // zero-pad
+        self.oldest = None;
+        Batch { ids, stamps, data, row_len: self.row_len, capacity: self.capacity }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fills_to_capacity() {
+        let mut b = Batcher::new(2, 3, Duration::from_secs(1));
+        let t = Instant::now();
+        assert!(b.push(1, &[1, 1], t).is_none());
+        assert!(b.push(2, &[2, 2], t).is_none());
+        let batch = b.push(3, &[3, 3], t).unwrap();
+        assert_eq!(batch.ids, vec![1, 2, 3]);
+        assert_eq!(batch.data, vec![1, 1, 2, 2, 3, 3]);
+        assert!(batch.is_full());
+        assert_eq!(b.pending(), 0);
+    }
+
+    #[test]
+    fn timeout_flush_pads() {
+        let mut b = Batcher::new(2, 4, Duration::from_millis(10));
+        let t0 = Instant::now();
+        b.push(7, &[5, 6], t0);
+        assert!(b.poll(t0).is_none());
+        let batch = b.poll(t0 + Duration::from_millis(11)).unwrap();
+        assert_eq!(batch.ids, vec![7]);
+        assert_eq!(batch.occupancy(), 1);
+        assert_eq!(batch.data, vec![5, 6, 0, 0, 0, 0, 0, 0]);
+    }
+
+    #[test]
+    fn flush_remaining_on_shutdown() {
+        let mut b = Batcher::new(1, 2, Duration::from_secs(9));
+        assert!(b.flush_remaining().is_none());
+        b.push(1, &[9], Instant::now());
+        let batch = b.flush_remaining().unwrap();
+        assert_eq!(batch.ids, vec![1]);
+    }
+}

@@ -1,0 +1,98 @@
+//! Latency/throughput metrics for the serving reports.
+
+use std::time::{Duration, Instant};
+
+use crate::util::stats::Summary;
+
+/// Records per-request latencies.
+#[derive(Debug, Default)]
+pub struct LatencyRecorder {
+    samples_us: Vec<f64>,
+    started: Option<Instant>,
+    finished: Option<Instant>,
+    completed: usize,
+}
+
+impl LatencyRecorder {
+    pub fn new() -> LatencyRecorder {
+        LatencyRecorder::default()
+    }
+
+    pub fn start(&mut self) {
+        self.started = Some(Instant::now());
+    }
+
+    pub fn record(&mut self, latency: Duration) {
+        self.samples_us.push(latency.as_secs_f64() * 1e6);
+        self.completed += 1;
+        self.finished = Some(Instant::now());
+    }
+
+    pub fn completed(&self) -> usize {
+        self.completed
+    }
+
+    pub fn report(&self) -> ThroughputReport {
+        let elapsed = match (self.started, self.finished) {
+            (Some(a), Some(b)) => b.duration_since(a).as_secs_f64(),
+            _ => 0.0,
+        };
+        let summary = Summary::of(&self.samples_us);
+        ThroughputReport {
+            requests: self.completed,
+            elapsed_s: elapsed,
+            throughput_rps: if elapsed > 0.0 { self.completed as f64 / elapsed } else { 0.0 },
+            latency_mean_us: summary.map_or(0.0, |s| s.mean),
+            latency_p50_us: Summary::percentile(&self.samples_us, 50.0).unwrap_or(0.0),
+            latency_p99_us: Summary::percentile(&self.samples_us, 99.0).unwrap_or(0.0),
+            latency_max_us: summary.map_or(0.0, |s| s.max),
+        }
+    }
+}
+
+/// Final serving report (printed by the NID example, quoted in
+/// EXPERIMENTS.md).
+#[derive(Debug, Clone, Copy)]
+pub struct ThroughputReport {
+    pub requests: usize,
+    pub elapsed_s: f64,
+    pub throughput_rps: f64,
+    pub latency_mean_us: f64,
+    pub latency_p50_us: f64,
+    pub latency_p99_us: f64,
+    pub latency_max_us: f64,
+}
+
+impl std::fmt::Display for ThroughputReport {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "{} requests in {:.3}s -> {:.0} req/s; latency mean {:.0}us p50 {:.0}us p99 {:.0}us max {:.0}us",
+            self.requests,
+            self.elapsed_s,
+            self.throughput_rps,
+            self.latency_mean_us,
+            self.latency_p50_us,
+            self.latency_p99_us,
+            self.latency_max_us
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn records_and_reports() {
+        let mut r = LatencyRecorder::new();
+        r.start();
+        r.record(Duration::from_micros(100));
+        r.record(Duration::from_micros(300));
+        let rep = r.report();
+        assert_eq!(rep.requests, 2);
+        assert!((rep.latency_mean_us - 200.0).abs() < 1.0);
+        assert!(rep.latency_max_us >= 299.0);
+        assert!(rep.throughput_rps > 0.0);
+    }
+}

@@ -1,0 +1,21 @@
+//! L3 streaming dataflow runtime.
+//!
+//! FINN's hardware is a chain of per-layer compute units connected by
+//! AXI streams with backpressure. The software runtime mirrors that
+//! topology: one OS thread per layer executing that layer's AOT artifact,
+//! connected by *bounded* channels — a full channel is exactly a
+//! deasserted TREADY. A batcher groups incoming requests to the artifact
+//! batch size, and a metrics collector tracks latency/throughput for the
+//! paper-style reports (EXPERIMENTS.md §E13).
+//!
+//! tokio is unavailable in the offline registry (DESIGN.md §8); OS threads
+//! with `sync_channel` are a faithful — arguably more faithful — model of
+//! the paper's dataflow semantics.
+
+mod batcher;
+mod metrics;
+mod pipeline;
+
+pub use batcher::{Batch, Batcher};
+pub use metrics::{LatencyRecorder, ThroughputReport};
+pub use pipeline::{Pipeline, PipelineConfig, Request, Response};

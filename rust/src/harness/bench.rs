@@ -1,0 +1,119 @@
+//! Wall-clock micro-benchmark harness (criterion replacement).
+//!
+//! Time-based: a warmup phase, then measurement until the time budget or
+//! the iteration cap is hit, reporting mean/stddev/min/max per iteration
+//! via Welford accumulation.
+
+use std::time::{Duration, Instant};
+
+use crate::util::stats::Welford;
+
+/// One benchmark's outcome.
+#[derive(Debug, Clone)]
+pub struct BenchResult {
+    pub name: String,
+    pub iters: u64,
+    pub mean_ns: f64,
+    pub stddev_ns: f64,
+    pub min_ns: f64,
+    pub max_ns: f64,
+}
+
+impl BenchResult {
+    pub fn mean_us(&self) -> f64 {
+        self.mean_ns / 1e3
+    }
+
+    pub fn mean_ms(&self) -> f64 {
+        self.mean_ns / 1e6
+    }
+
+    /// Items/second given `items` processed per iteration.
+    pub fn throughput(&self, items: f64) -> f64 {
+        if self.mean_ns > 0.0 {
+            items * 1e9 / self.mean_ns
+        } else {
+            0.0
+        }
+    }
+}
+
+impl std::fmt::Display for BenchResult {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "{:<40} {:>10.2} us/iter (+/- {:.2}) [{} iters, min {:.2}, max {:.2}]",
+            self.name,
+            self.mean_ns / 1e3,
+            self.stddev_ns / 1e3,
+            self.iters,
+            self.min_ns / 1e3,
+            self.max_ns / 1e3
+        )
+    }
+}
+
+/// Benchmark with explicit warmup/measure budgets.
+pub fn bench_with<F: FnMut()>(
+    name: &str,
+    warmup: Duration,
+    measure: Duration,
+    max_iters: u64,
+    mut f: F,
+) -> BenchResult {
+    // warmup
+    let start = Instant::now();
+    while start.elapsed() < warmup {
+        f();
+    }
+    // measure
+    let mut stats = Welford::new();
+    let begin = Instant::now();
+    while begin.elapsed() < measure && stats.count() < max_iters {
+        let t0 = Instant::now();
+        f();
+        stats.push(t0.elapsed().as_nanos() as f64);
+    }
+    if stats.count() == 0 {
+        // pathological: single very slow iteration
+        let t0 = Instant::now();
+        f();
+        stats.push(t0.elapsed().as_nanos() as f64);
+    }
+    BenchResult {
+        name: name.to_string(),
+        iters: stats.count(),
+        mean_ns: stats.mean(),
+        stddev_ns: stats.stddev(),
+        min_ns: stats.min(),
+        max_ns: stats.max(),
+    }
+}
+
+/// Benchmark with default budgets (0.2 s warmup, 1 s measurement).
+pub fn bench<F: FnMut()>(name: &str, f: F) -> BenchResult {
+    bench_with(name, Duration::from_millis(200), Duration::from_secs(1), 1_000_000, f)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn measures_something_positive() {
+        let mut acc = 0u64;
+        let r = bench_with(
+            "noop-ish",
+            Duration::from_millis(5),
+            Duration::from_millis(30),
+            100_000,
+            || {
+                acc = acc.wrapping_add(std::hint::black_box(1));
+            },
+        );
+        assert!(r.iters > 10);
+        assert!(r.mean_ns >= 0.0);
+        assert!(r.min_ns <= r.mean_ns && r.mean_ns <= r.max_ns + 1.0);
+        assert!(r.throughput(1.0) > 0.0);
+    }
+}

@@ -1,0 +1,265 @@
+//! Figure regeneration: the parameter sweeps of paper Figs. 8-16.
+//!
+//! Each function returns both the printable table and the raw series so
+//! benches and tests can assert the paper's qualitative shapes.
+
+use anyhow::Result;
+
+use crate::cfg::{
+    sweep_ifm_channels, sweep_ifm_dim, sweep_kernel_dim, sweep_ofm_channels, sweep_pe, sweep_simd,
+    SimdType, SweepPoint,
+};
+use crate::estimate::{estimate, Style};
+use crate::sim::PIPELINE_STAGES;
+use crate::util::table::{fnum, Table};
+
+/// Which parameter a figure sweeps.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SweepKind {
+    /// Fig. 8: number of IFM channels.
+    IfmChannels,
+    /// Fig. 9: kernel dimension.
+    KernelDim,
+    /// Fig. 10: number of OFM channels.
+    OfmChannels,
+    /// Fig. 11: IFM dimension.
+    IfmDim,
+    /// Fig. 12: number of PEs.
+    Pe,
+    /// Fig. 13: SIMD lanes per PE.
+    Simd,
+}
+
+impl SweepKind {
+    pub fn points(&self, ty: SimdType) -> Vec<SweepPoint> {
+        match self {
+            SweepKind::IfmChannels => sweep_ifm_channels(ty),
+            SweepKind::KernelDim => sweep_kernel_dim(ty),
+            SweepKind::OfmChannels => sweep_ofm_channels(ty),
+            SweepKind::IfmDim => sweep_ifm_dim(ty),
+            SweepKind::Pe => sweep_pe(ty),
+            SweepKind::Simd => sweep_simd(ty),
+        }
+    }
+
+    pub fn label(&self) -> &'static str {
+        match self {
+            SweepKind::IfmChannels => "IFM channels",
+            SweepKind::KernelDim => "kernel dim",
+            SweepKind::OfmChannels => "OFM channels",
+            SweepKind::IfmDim => "IFM dim",
+            SweepKind::Pe => "PEs",
+            SweepKind::Simd => "SIMDs",
+        }
+    }
+
+    pub fn figure(&self) -> &'static str {
+        match self {
+            SweepKind::IfmChannels => "Fig. 8",
+            SweepKind::KernelDim => "Fig. 9",
+            SweepKind::OfmChannels => "Fig. 10",
+            SweepKind::IfmDim => "Fig. 11",
+            SweepKind::Pe => "Fig. 12",
+            SweepKind::Simd => "Fig. 13",
+        }
+    }
+}
+
+/// One series point: resources + execution cycles for both styles.
+#[derive(Debug, Clone)]
+pub struct FigurePoint {
+    pub swept: usize,
+    pub luts_hls: usize,
+    pub luts_rtl: usize,
+    pub ffs_hls: usize,
+    pub ffs_rtl: usize,
+    pub cycles: usize,
+}
+
+/// A full figure series for one SIMD type.
+#[derive(Debug, Clone)]
+pub struct FigureSeries {
+    pub kind: SweepKind,
+    pub simd_type: SimdType,
+    pub points: Vec<FigurePoint>,
+}
+
+/// Regenerate one resource/latency figure (Figs. 8-13) for one SIMD type.
+pub fn resource_sweep_figure(kind: SweepKind, ty: SimdType) -> Result<FigureSeries> {
+    let mut points = Vec::new();
+    for sp in kind.points(ty) {
+        let r = estimate(&sp.params, Style::Rtl)?;
+        let h = estimate(&sp.params, Style::Hls)?;
+        points.push(FigurePoint {
+            swept: sp.swept,
+            luts_hls: h.luts,
+            luts_rtl: r.luts,
+            ffs_hls: h.ffs,
+            ffs_rtl: r.ffs,
+            cycles: sp.params.analytic_cycles(PIPELINE_STAGES),
+        });
+    }
+    Ok(FigureSeries { kind, simd_type: ty, points })
+}
+
+impl FigureSeries {
+    pub fn to_table(&self) -> Table {
+        let mut t = Table::new(vec![
+            self.kind.label(),
+            "LUTs(HLS)",
+            "LUTs(RTL)",
+            "FFs(HLS)",
+            "FFs(RTL)",
+            "exec cycles",
+        ]);
+        for p in &self.points {
+            t.row(vec![
+                p.swept.to_string(),
+                p.luts_hls.to_string(),
+                p.luts_rtl.to_string(),
+                p.ffs_hls.to_string(),
+                p.ffs_rtl.to_string(),
+                p.cycles.to_string(),
+            ]);
+        }
+        t
+    }
+}
+
+/// Fig. 14: heat maps of HLS - RTL resource difference over a PE x SIMD
+/// grid (positive = RTL smaller), 4-bit standard type.
+pub fn fig14_heatmap() -> Result<(Table, Table)> {
+    let grid = [2usize, 4, 8, 16, 32, 64];
+    let mut lut_t = Table::new(
+        std::iter::once("PE\\SIMD".to_string())
+            .chain(grid.iter().map(|s| s.to_string()))
+            .collect::<Vec<_>>(),
+    );
+    let mut ff_t = Table::new(
+        std::iter::once("PE\\SIMD".to_string())
+            .chain(grid.iter().map(|s| s.to_string()))
+            .collect::<Vec<_>>(),
+    );
+    for &pe in &grid {
+        let mut lut_row = vec![pe.to_string()];
+        let mut ff_row = vec![pe.to_string()];
+        for &simd in &grid {
+            let p = crate::cfg::LayerParams::conv(
+                &format!("hm_pe{pe}_s{simd}"),
+                64,
+                8,
+                64,
+                4,
+                pe,
+                simd,
+                SimdType::Standard,
+                4,
+                4,
+            );
+            let r = estimate(&p, Style::Rtl)?;
+            let h = estimate(&p, Style::Hls)?;
+            lut_row.push((h.luts as i64 - r.luts as i64).to_string());
+            ff_row.push((h.ffs as i64 - r.ffs as i64).to_string());
+        }
+        lut_t.row(lut_row);
+        ff_t.row(ff_row);
+    }
+    Ok((lut_t, ff_t))
+}
+
+/// Fig. 15: BRAM usage across all six sweeps, 1-bit precision.
+pub fn fig15_bram() -> Result<Table> {
+    let kinds = [
+        SweepKind::IfmChannels,
+        SweepKind::KernelDim,
+        SweepKind::OfmChannels,
+        SweepKind::IfmDim,
+        SweepKind::Pe,
+        SweepKind::Simd,
+    ];
+    let mut t = Table::new(vec!["sweep", "value", "BRAM18(HLS)", "BRAM18(RTL)"]);
+    for kind in kinds {
+        for sp in kind.points(SimdType::Xnor) {
+            let r = estimate(&sp.params, Style::Rtl)?;
+            let h = estimate(&sp.params, Style::Hls)?;
+            t.row(vec![
+                kind.label().to_string(),
+                sp.swept.to_string(),
+                h.bram18.to_string(),
+                r.bram18.to_string(),
+            ]);
+        }
+    }
+    Ok(t)
+}
+
+/// Fig. 16: synthesis time vs PEs and SIMDs (standard type).
+pub fn fig16_synth_time() -> Result<Table> {
+    let mut t = Table::new(vec!["sweep", "value", "HLS (s)", "RTL (s)", "ratio"]);
+    for (kind, pts) in [
+        ("PEs", sweep_pe(SimdType::Standard)),
+        ("SIMDs", sweep_simd(SimdType::Standard)),
+    ] {
+        for sp in pts {
+            let r = estimate(&sp.params, Style::Rtl)?;
+            let h = estimate(&sp.params, Style::Hls)?;
+            t.row(vec![
+                kind.to_string(),
+                sp.swept.to_string(),
+                fnum(h.synth_time_s, 0),
+                fnum(r.synth_time_s, 0),
+                fnum(h.synth_time_s / r.synth_time_s, 1),
+            ]);
+        }
+    }
+    Ok(t)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fig8_series_has_expected_shape() {
+        let s = resource_sweep_figure(SweepKind::IfmChannels, SimdType::Standard).unwrap();
+        assert_eq!(s.points.len(), 6);
+        // HLS grows with IFM channels, RTL core stays flat-ish
+        assert!(s.points.last().unwrap().luts_hls > 2 * s.points[0].luts_hls);
+        // exec cycles grow with IFM channels (more folds)
+        assert!(s.points.last().unwrap().cycles > s.points[0].cycles);
+        let rendered = s.to_table().render();
+        assert!(rendered.contains("LUTs(HLS)"));
+    }
+
+    #[test]
+    fn fig11_flat_in_ifm_dim() {
+        // paper: IFM dim does not change design complexity, only cycles.
+        let s = resource_sweep_figure(SweepKind::IfmDim, SimdType::Standard).unwrap();
+        let l0 = s.points[0].luts_rtl as f64;
+        for p in &s.points {
+            assert!((p.luts_rtl as f64 - l0).abs() / l0 < 0.05);
+        }
+        assert!(s.points.last().unwrap().cycles > s.points[0].cycles);
+    }
+
+    #[test]
+    fn fig14_heatmap_renders() {
+        let (lut, ff) = fig14_heatmap().unwrap();
+        let lut_s = lut.render();
+        assert!(lut_s.lines().count() == 8);
+        // small corner: positive (RTL smaller); large corner: can flip
+        let first_data = lut_s.lines().nth(2).unwrap();
+        assert!(!first_data.contains('-'), "small designs: HLS larger: {first_data}");
+        let _ = ff.render();
+    }
+
+    #[test]
+    fn fig16_ratios_all_large() {
+        let t = fig16_synth_time().unwrap();
+        let s = t.render();
+        for line in s.lines().skip(2) {
+            let ratio: f64 = line.split_whitespace().last().unwrap().parse().unwrap();
+            assert!(ratio >= 5.0, "{line}");
+        }
+    }
+}

@@ -1,0 +1,13 @@
+//! Benchmark harness: regenerates every table and figure of the paper's
+//! evaluation (DESIGN.md §3 per-experiment index) and provides the timing
+//! harness used by `cargo bench` (criterion is unavailable offline).
+
+mod bench;
+mod figures;
+mod tables;
+
+pub use bench::{bench, bench_with, BenchResult};
+pub use figures::{
+    fig14_heatmap, fig15_bram, fig16_synth_time, resource_sweep_figure, FigureSeries, SweepKind,
+};
+pub use tables::{random_weights, table4, table5, table7, Table5Row, Table7Row};

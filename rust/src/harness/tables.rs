@@ -1,0 +1,188 @@
+//! Table regeneration: paper Tables 4, 5 and 7.
+
+use anyhow::Result;
+
+use crate::cfg::{nid_layers, table3_configs, LayerParams, SimdType};
+use crate::estimate::{estimate, Style};
+use crate::quant::Matrix;
+use crate::sim::{run_mvu, HlsMvu};
+use crate::util::rng::Pcg32;
+use crate::util::stats::Summary;
+use crate::util::table::{fmin, fnum, Table};
+
+/// Table 4: resource utilization for the Table 3 large configs.
+pub fn table4() -> Result<Table> {
+    let mut t = Table::new(vec!["Config", "LUTs(HLS)", "LUTs(RTL)", "FFs(HLS)", "FFs(RTL)"]);
+    for (i, sp) in table3_configs().iter().enumerate() {
+        let r = estimate(&sp.params, Style::Rtl)?;
+        let h = estimate(&sp.params, Style::Hls)?;
+        t.row(vec![
+            format!("Config #{i}"),
+            h.luts.to_string(),
+            r.luts.to_string(),
+            h.ffs.to_string(),
+            r.ffs.to_string(),
+        ]);
+    }
+    Ok(t)
+}
+
+/// One row of Table 5 (min/max/mean critical path over a sweep).
+#[derive(Debug, Clone)]
+pub struct Table5Row {
+    pub parameter: &'static str,
+    pub simd_type: SimdType,
+    pub hls: Summary,
+    pub rtl: Summary,
+}
+
+/// Table 5: critical-path delay statistics over the four sweeps the paper
+/// reports (IFM channels, OFM channels, PEs, SIMDs) x three SIMD types.
+pub fn table5() -> Result<(Table, Vec<Table5Row>)> {
+    use crate::cfg::{sweep_ifm_channels, sweep_ofm_channels, sweep_pe, sweep_simd};
+    let mut t = Table::new(vec![
+        "Parameter", "SIMD type", "HLS min", "HLS max", "HLS mean", "RTL min", "RTL max",
+        "RTL mean",
+    ]);
+    let mut rows = Vec::new();
+    let sweeps: [(&'static str, fn(SimdType) -> Vec<crate::cfg::SweepPoint>); 4] = [
+        ("IFM channels", sweep_ifm_channels),
+        ("OFM channels", sweep_ofm_channels),
+        ("PEs", sweep_pe),
+        ("SIMDs", sweep_simd),
+    ];
+    for (label, sweep) in sweeps {
+        for ty in SimdType::ALL {
+            let mut hls = Vec::new();
+            let mut rtl = Vec::new();
+            for sp in sweep(ty) {
+                hls.push(estimate(&sp.params, Style::Hls)?.delay_ns);
+                rtl.push(estimate(&sp.params, Style::Rtl)?.delay_ns);
+            }
+            let hs = Summary::of(&hls).unwrap();
+            let rs = Summary::of(&rtl).unwrap();
+            t.row(vec![
+                label.to_string(),
+                ty.name().to_string(),
+                fnum(hs.min, 3),
+                fnum(hs.max, 3),
+                fnum(hs.mean, 3),
+                fnum(rs.min, 3),
+                fnum(rs.max, 3),
+                fnum(rs.mean, 3),
+            ]);
+            rows.push(Table5Row { parameter: label, simd_type: ty, hls: hs, rtl: rs });
+        }
+    }
+    Ok((t, rows))
+}
+
+/// One row of Table 7 (per NID layer, both styles).
+#[derive(Debug, Clone)]
+pub struct Table7Row {
+    pub layer: String,
+    pub luts: (usize, usize),
+    pub ffs: (usize, usize),
+    pub bram18: (usize, usize),
+    pub delay_ns: (f64, f64),
+    pub synth_s: (f64, f64),
+    pub exec_cycles: (usize, usize),
+}
+
+/// Random legal weights for a layer (used when trained weights are not
+/// available, e.g. in benches run before `make artifacts`).
+pub fn random_weights(params: &LayerParams, seed: u64) -> Matrix {
+    let mut rng = Pcg32::new(seed);
+    let (r, c) = (params.matrix_rows(), params.matrix_cols());
+    let data: Vec<i32> = (0..r * c)
+        .map(|_| match params.simd_type {
+            SimdType::Xnor | SimdType::BinaryWeights => rng.next_range(2) as i32,
+            SimdType::Standard => {
+                let span = 1u32 << params.weight_bits;
+                rng.next_range(span) as i32 - (span / 2) as i32
+            }
+        })
+        .collect();
+    Matrix::new(r, c, data).unwrap()
+}
+
+/// Table 7: NID synthesis + execution results. Execution cycles come from
+/// the cycle-accurate simulator (RTL) and the HLS behavioral model,
+/// exercising the real datapath with the trained weights when available.
+pub fn table7(weights: Option<&[Matrix]>) -> Result<(Table, Vec<Table7Row>)> {
+    let mut t = Table::new(vec![
+        "Layer", "LUTs H/R", "FFs H/R", "BRAM18 H/R", "Delay(ns) H/R", "Synth H/R",
+        "Cycles H/R",
+    ]);
+    let mut rows = Vec::new();
+    for (i, params) in nid_layers().iter().enumerate() {
+        let r = estimate(params, Style::Rtl)?;
+        let h = estimate(params, Style::Hls)?;
+        let w = match weights {
+            Some(ws) => ws[i].clone(),
+            None => random_weights(params, 1000 + i as u64),
+        };
+        let mut rng = Pcg32::new(2000 + i as u64);
+        let x: Vec<i32> =
+            (0..params.matrix_cols()).map(|_| rng.next_range(4) as i32).collect();
+        let rtl_cycles = run_mvu(params, &w, &[x.clone()])?.exec_cycles;
+        let hls_cycles = HlsMvu::new(params, &w)?.exec_cycles(1);
+        let row = Table7Row {
+            layer: params.name.clone(),
+            luts: (h.luts, r.luts),
+            ffs: (h.ffs, r.ffs),
+            bram18: (h.bram18, r.bram18),
+            delay_ns: (h.delay_ns, r.delay_ns),
+            synth_s: (h.synth_time_s, r.synth_time_s),
+            exec_cycles: (hls_cycles, rtl_cycles),
+        };
+        t.row(vec![
+            format!("Layer #{i}"),
+            format!("{}/{}", row.luts.0, row.luts.1),
+            format!("{}/{}", row.ffs.0, row.ffs.1),
+            format!("{}/{}", row.bram18.0, row.bram18.1),
+            format!("{}/{}", fnum(row.delay_ns.0, 3), fnum(row.delay_ns.1, 3)),
+            format!("{}/{}", fmin(row.synth_s.0), fmin(row.synth_s.1)),
+            format!("{}/{}", row.exec_cycles.0, row.exec_cycles.1),
+        ]);
+        rows.push(row);
+    }
+    Ok((t, rows))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table4_renders_and_converges() {
+        let t = table4().unwrap();
+        let s = t.render();
+        assert_eq!(s.lines().count(), 5);
+    }
+
+    #[test]
+    fn table5_rtl_faster_everywhere() {
+        let (_, rows) = table5().unwrap();
+        assert_eq!(rows.len(), 12);
+        for r in rows {
+            assert!(
+                r.rtl.mean < r.hls.mean,
+                "{} {}: RTL {} vs HLS {}",
+                r.parameter,
+                r.simd_type,
+                r.rtl.mean,
+                r.hls.mean
+            );
+        }
+    }
+
+    #[test]
+    fn table7_cycles_match_paper() {
+        let (_, rows) = table7(None).unwrap();
+        let rtl: Vec<usize> = rows.iter().map(|r| r.exec_cycles.1).collect();
+        let hls: Vec<usize> = rows.iter().map(|r| r.exec_cycles.0).collect();
+        assert_eq!(rtl, vec![17, 13, 13, 13]);
+        assert_eq!(hls, vec![17, 13, 13, 12]);
+    }
+}

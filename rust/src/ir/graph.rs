@@ -1,0 +1,195 @@
+//! Linear dataflow graph (FINN accelerators are layer chains; a general
+//! DAG is unnecessary for the paper's scope and would obscure the passes).
+
+use anyhow::{bail, Result};
+
+use super::ops::Op;
+
+/// Node identifier (index into the chain).
+pub type NodeId = usize;
+
+/// Shape/type info flowing on an edge: a stream of `elems`-long vectors,
+/// `vectors` of them per image, `bits`-bit unsigned/signed elements.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct TensorInfo {
+    pub elems: usize,
+    pub vectors: usize,
+    pub bits: u32,
+}
+
+/// One node of the chain.
+#[derive(Debug, Clone)]
+pub struct Node {
+    pub name: String,
+    pub op: Op,
+}
+
+/// The model graph: input description + node chain.
+#[derive(Debug, Clone, Default)]
+pub struct Graph {
+    pub input: Option<TensorInfo>,
+    pub nodes: Vec<Node>,
+}
+
+impl Graph {
+    pub fn new(input: TensorInfo) -> Graph {
+        Graph { input: Some(input), nodes: Vec::new() }
+    }
+
+    pub fn push(&mut self, name: &str, op: Op) -> NodeId {
+        self.nodes.push(Node { name: name.to_string(), op });
+        self.nodes.len() - 1
+    }
+
+    pub fn len(&self) -> usize {
+        self.nodes.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.nodes.is_empty()
+    }
+
+    /// Infer the tensor flowing *out of* node `id` (walking the chain and
+    /// checking shape compatibility on the way) — the FINN shape-inference
+    /// analysis pass.
+    pub fn infer_output(&self, id: NodeId) -> Result<TensorInfo> {
+        let mut t = self.input.clone().ok_or_else(|| anyhow::anyhow!("graph has no input"))?;
+        for (i, node) in self.nodes.iter().enumerate().take(id + 1) {
+            t = infer_node(&node.op, &t).map_err(|e| anyhow::anyhow!("{}: {e}", node.name))?;
+            let _ = i;
+        }
+        Ok(t)
+    }
+
+    /// Infer the graph output.
+    pub fn infer_final(&self) -> Result<TensorInfo> {
+        if self.nodes.is_empty() {
+            bail!("empty graph");
+        }
+        self.infer_output(self.nodes.len() - 1)
+    }
+
+    /// All nodes are hardware ops (post-lowering check).
+    pub fn is_hw_only(&self) -> bool {
+        self.nodes.iter().all(|n| n.op.is_hw())
+    }
+}
+
+/// Single-node shape inference.
+pub fn infer_node(op: &Op, input: &TensorInfo) -> Result<TensorInfo> {
+    match op {
+        Op::Conv { weights, ifm_ch, ifm_dim, ofm_ch, kernel_dim } => {
+            if input.elems != ifm_ch * ifm_dim * ifm_dim {
+                bail!(
+                    "conv input elems {} != {}x{}x{}",
+                    input.elems,
+                    ifm_dim,
+                    ifm_dim,
+                    ifm_ch
+                );
+            }
+            if weights.rows != *ofm_ch || weights.cols != kernel_dim * kernel_dim * ifm_ch {
+                bail!("conv weight shape mismatch");
+            }
+            let od = ifm_dim - kernel_dim + 1;
+            Ok(TensorInfo { elems: *ofm_ch, vectors: input.vectors * od * od, bits: 32 })
+        }
+        Op::MatMul { weights } => {
+            if input.elems != weights.cols {
+                bail!("matmul input elems {} != weight cols {}", input.elems, weights.cols);
+            }
+            Ok(TensorInfo { elems: weights.rows, vectors: input.vectors, bits: 32 })
+        }
+        Op::MultiThreshold { thresholds } => {
+            if input.elems != thresholds.channels {
+                bail!(
+                    "threshold channels {} != input elems {}",
+                    thresholds.channels,
+                    input.elems
+                );
+            }
+            let bits = crate::estimate::netlist::ceil_log2(thresholds.steps as u64 + 1);
+            Ok(TensorInfo { elems: input.elems, vectors: input.vectors, bits })
+        }
+        Op::Swu { ifm_ch, ifm_dim, kernel_dim } => {
+            if input.elems != ifm_ch * ifm_dim * ifm_dim {
+                bail!("swu input elems mismatch");
+            }
+            let od = ifm_dim - kernel_dim + 1;
+            Ok(TensorInfo {
+                elems: kernel_dim * kernel_dim * ifm_ch,
+                vectors: input.vectors * od * od,
+                bits: input.bits,
+            })
+        }
+        Op::Mvu { weights, thresholds, .. } => {
+            if input.elems != weights.cols {
+                bail!("mvu input elems {} != weight cols {}", input.elems, weights.cols);
+            }
+            let bits = match thresholds {
+                Some(t) => crate::estimate::netlist::ceil_log2(t.steps as u64 + 1),
+                None => 32,
+            };
+            Ok(TensorInfo { elems: weights.rows, vectors: input.vectors, bits })
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::{Matrix, Thresholds};
+
+    fn fc_graph() -> Graph {
+        let mut g = Graph::new(TensorInfo { elems: 8, vectors: 1, bits: 2 });
+        g.push("fc0", Op::MatMul { weights: Matrix::zeros(4, 8) });
+        g.push(
+            "act0",
+            Op::MultiThreshold { thresholds: Thresholds::from_rows(&vec![vec![0, 1, 2]; 4]).unwrap() },
+        );
+        g.push("fc1", Op::MatMul { weights: Matrix::zeros(2, 4) });
+        g
+    }
+
+    #[test]
+    fn shape_inference_chain() {
+        let g = fc_graph();
+        let t = g.infer_final().unwrap();
+        assert_eq!(t.elems, 2);
+        assert_eq!(t.vectors, 1);
+        let mid = g.infer_output(1).unwrap();
+        assert_eq!(mid.elems, 4);
+        assert_eq!(mid.bits, 2); // 3 thresholds -> 2-bit codes
+    }
+
+    #[test]
+    fn detects_shape_mismatch() {
+        let mut g = fc_graph();
+        g.push("bad", Op::MatMul { weights: Matrix::zeros(2, 99) });
+        assert!(g.infer_final().is_err());
+    }
+
+    #[test]
+    fn conv_shapes() {
+        let mut g = Graph::new(TensorInfo { elems: 8 * 8 * 3, vectors: 1, bits: 4 });
+        g.push(
+            "conv",
+            Op::Conv {
+                weights: Matrix::zeros(16, 2 * 2 * 3),
+                ifm_ch: 3,
+                ifm_dim: 8,
+                ofm_ch: 16,
+                kernel_dim: 2,
+            },
+        );
+        let t = g.infer_final().unwrap();
+        assert_eq!(t.elems, 16);
+        assert_eq!(t.vectors, 49);
+    }
+
+    #[test]
+    fn hw_only_detection() {
+        let g = fc_graph();
+        assert!(!g.is_hw_only());
+    }
+}

@@ -1,0 +1,13 @@
+//! FINN-ONNX-like graph intermediate representation (paper §4.2, Fig. 5).
+//!
+//! The FINN compiler ingests a trained network as a dataflow graph,
+//! lowers high-level ops (convolution) to hardware ops (SWU + MVU),
+//! absorbs quantized activations into MultiThreshold nodes, folds
+//! (assigns PE/SIMD), and hands the result to a backend. This module is
+//! the graph substrate; the passes live in `crate::passes`.
+
+mod graph;
+mod ops;
+
+pub use graph::{Graph, Node, NodeId, TensorInfo};
+pub use ops::Op;

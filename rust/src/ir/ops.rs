@@ -1,0 +1,50 @@
+//! Operator set of the IR.
+
+use crate::cfg::SimdType;
+use crate::quant::{Matrix, Thresholds};
+
+/// IR operators. High-level ops (`Conv`, `MatMul`, `MultiThreshold`) come
+/// from the frontend; hardware ops (`Swu`, `Mvu`) are produced by the
+/// lowering/streamlining passes and map 1:1 onto backend compute units.
+#[derive(Debug, Clone)]
+pub enum Op {
+    /// Frontend convolution: kernels (OC, KD, KD, IC), stride 1, valid.
+    Conv { weights: Matrix, ifm_ch: usize, ifm_dim: usize, ofm_ch: usize, kernel_dim: usize },
+    /// Frontend fully connected matmul: weights (OUT, IN).
+    MatMul { weights: Matrix },
+    /// Quantized activation as per-channel thresholds.
+    MultiThreshold { thresholds: Thresholds },
+    /// Hardware sliding-window unit (im2col streamer).
+    Swu { ifm_ch: usize, ifm_dim: usize, kernel_dim: usize },
+    /// Hardware matrix-vector unit; folded by the folding pass.
+    Mvu {
+        weights: Matrix,
+        thresholds: Option<Thresholds>,
+        pe: usize,
+        simd: usize,
+        simd_type: SimdType,
+        weight_bits: u32,
+        input_bits: u32,
+        /// Geometry context for cycle/resource analysis.
+        ifm_ch: usize,
+        ifm_dim: usize,
+        kernel_dim: usize,
+    },
+}
+
+impl Op {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Op::Conv { .. } => "Conv",
+            Op::MatMul { .. } => "MatMul",
+            Op::MultiThreshold { .. } => "MultiThreshold",
+            Op::Swu { .. } => "SWU",
+            Op::Mvu { .. } => "MVU",
+        }
+    }
+
+    /// Is this a backend-executable (hardware) op?
+    pub fn is_hw(&self) -> bool {
+        matches!(self, Op::Swu { .. } | Op::Mvu { .. })
+    }
+}

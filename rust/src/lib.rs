@@ -1,0 +1,57 @@
+//! # finn-mvu
+//!
+//! A reproduction of *"On the RTL Implementation of FINN Matrix Vector
+//! Compute Unit"* (Alam et al., 2022) as a three-layer Rust + JAX + Pallas
+//! system:
+//!
+//! * **L1** — Pallas kernels implementing the MVU's three SIMD datapaths
+//!   (`python/compile/kernels/`), AOT-lowered to HLO text;
+//! * **L2** — a FINN-style quantized network author in JAX
+//!   (`python/compile/model.py`), including the paper's NID MLP;
+//! * **L3** — this crate: a cycle-accurate RTL simulator of the MVU, an
+//!   HLS behavioral model, a 7-series resource/timing estimator, a
+//!   FINN-like compiler (IR + passes), and a streaming dataflow runtime
+//!   that executes the AOT artifacts via the PJRT C API.
+//!
+//! See DESIGN.md for the system inventory and the per-experiment index.
+//!
+//! # Example: simulate and estimate one design point
+//!
+//! ```
+//! use finn_mvu::cfg::{LayerParams, SimdType};
+//! use finn_mvu::estimate::{estimate, Style};
+//! use finn_mvu::quant::{matvec, Matrix};
+//! use finn_mvu::sim::run_mvu;
+//!
+//! // a folded 8x16 MVU: 4 PEs, 8 SIMD lanes, 4-bit operands
+//! let p = LayerParams::fc("demo", 16, 8, 4, 8, SimdType::Standard, 4, 4, 0);
+//! let w = Matrix::new(8, 16, (0..128).map(|i| (i % 5) - 2).collect()).unwrap();
+//! let x: Vec<i32> = (0..16).map(|i| (i % 7) - 3).collect();
+//!
+//! // cycle-accurate simulation == reference integer GEMM, bit-exactly
+//! let rep = run_mvu(&p, &w, &[x.clone()]).unwrap();
+//! assert_eq!(rep.outputs[0], matvec(&x, &w, p.simd_type).unwrap());
+//! // SF*NF slots + pipeline fill (paper Table 7 cycle model)
+//! assert_eq!(rep.exec_cycles, 2 * 2 + finn_mvu::sim::PIPELINE_STAGES + 1);
+//!
+//! // post-synthesis estimates for both styles (paper §6)
+//! let rtl = estimate(&p, Style::Rtl).unwrap();
+//! let hls = estimate(&p, Style::Hls).unwrap();
+//! assert!(hls.ffs > rtl.ffs); // the paper's invariant
+//! ```
+
+pub mod cfg;
+pub mod coordinator;
+pub mod estimate;
+pub mod harness;
+pub mod ir;
+pub mod nid;
+pub mod passes;
+pub mod proptest;
+pub mod quant;
+pub mod runtime;
+pub mod sim;
+pub mod util;
+
+/// Crate version, exposed for the CLI.
+pub const VERSION: &str = env!("CARGO_PKG_VERSION");

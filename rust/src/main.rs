@@ -1,0 +1,285 @@
+//! finn-mvu CLI — the leader entrypoint.
+//!
+//! Subcommands:
+//!   run       simulate one MVU design point (cycle-accurate) and report
+//!             cycles + resources for both styles
+//!   sweep     regenerate a figure sweep (fig8..fig16)
+//!   estimate  resource/timing/synth estimate for explicit parameters
+//!   tables    print Tables 4, 5 and 7
+//!   nid       serve the NID MLP through the dataflow pipeline (PJRT)
+//!   compile   demo the FINN-style compiler flow (lower -> fold -> analyze)
+
+use anyhow::{bail, Context, Result};
+
+use finn_mvu::cfg::{LayerParams, SimdType};
+use finn_mvu::coordinator::{Pipeline, PipelineConfig, Request};
+use finn_mvu::estimate::{estimate, Style};
+use finn_mvu::harness::{
+    fig14_heatmap, fig15_bram, fig16_synth_time, resource_sweep_figure, table4, table5, table7,
+    SweepKind,
+};
+use finn_mvu::ir::{Graph, Op, TensorInfo};
+use finn_mvu::nid::{generate, NidNetwork};
+use finn_mvu::passes::{analyze, fold_to_target, lower_to_hw};
+use finn_mvu::quant::Matrix;
+use finn_mvu::runtime::{default_artifacts_dir, Manifest};
+use finn_mvu::sim::{run_mvu, PIPELINE_STAGES};
+use finn_mvu::util::cli::Args;
+use finn_mvu::util::rng::Pcg32;
+
+const USAGE: &str = "\
+finn-mvu — RTL-vs-HLS co-design study of the FINN matrix-vector unit
+
+USAGE:
+  finn-mvu <command> [--flags]
+
+COMMANDS:
+  run       --ifm-ch N --ifm-dim N --ofm-ch N --kd N --pe N --simd N
+            [--type xnor|binary|standard] [--vectors N]
+  sweep     --figure 8|9|10|11|12|13|14|15|16 [--type ...]
+  estimate  (same shape flags as run)
+  tables    [--which 4|5|7]
+  nid       [--requests N] [--batch N] [--artifacts DIR]
+  compile   [--target-cycles N] [--lut-budget N]
+  version
+";
+
+fn params_from(a: &Args) -> Result<LayerParams> {
+    let ty = SimdType::parse(a.get_or("type", "standard"))?;
+    let (wb, ib) = match ty {
+        SimdType::Xnor => (1, 1),
+        SimdType::BinaryWeights => (1, 4),
+        SimdType::Standard => (4, 4),
+    };
+    let p = LayerParams::conv(
+        "cli",
+        a.get_usize("ifm-ch", 64)?,
+        a.get_usize("ifm-dim", 8)?,
+        a.get_usize("ofm-ch", 64)?,
+        a.get_usize("kd", 4)?,
+        a.get_usize("pe", 4)?,
+        a.get_usize("simd", 4)?,
+        ty,
+        wb,
+        ib,
+    );
+    p.validate()?;
+    Ok(p)
+}
+
+fn cmd_run(a: &Args) -> Result<()> {
+    let p = params_from(a)?;
+    let n_vec = a.get_usize("vectors", 1)?;
+    let weights = finn_mvu::harness::random_weights(&p, 42);
+    let mut rng = Pcg32::new(43);
+    let vectors: Vec<Vec<i32>> = (0..n_vec * p.output_pixels())
+        .map(|_| {
+            (0..p.matrix_cols())
+                .map(|_| match p.simd_type {
+                    SimdType::Xnor => rng.next_range(2) as i32,
+                    _ => rng.next_range(1 << p.input_bits) as i32 - (1 << (p.input_bits - 1)),
+                })
+                .collect()
+        })
+        .collect();
+    let rep = run_mvu(&p, &weights, &vectors)?;
+    println!("design: {p}");
+    println!(
+        "simulated {} vectors: {} cycles ({} slots, {} stall), analytic {}",
+        vectors.len(),
+        rep.exec_cycles,
+        rep.slots_consumed,
+        rep.stall_cycles,
+        p.synapse_fold() * p.neuron_fold() * vectors.len() + PIPELINE_STAGES + 1
+    );
+    for style in [Style::Rtl, Style::Hls] {
+        let e = estimate(&p, style)?;
+        println!(
+            "{:>4}: {:>7} LUTs {:>7} FFs {:>4} BRAM18 {:>7.3} ns {:>7.0} s synth [{}]",
+            style.name(),
+            e.luts,
+            e.ffs,
+            e.bram18,
+            e.delay_ns,
+            e.synth_time_s,
+            e.delay_location.name()
+        );
+    }
+    Ok(())
+}
+
+fn cmd_sweep(a: &Args) -> Result<()> {
+    let fig = a.get_usize("figure", 8)?;
+    match fig {
+        8..=13 => {
+            let kind = match fig {
+                8 => SweepKind::IfmChannels,
+                9 => SweepKind::KernelDim,
+                10 => SweepKind::OfmChannels,
+                11 => SweepKind::IfmDim,
+                12 => SweepKind::Pe,
+                _ => SweepKind::Simd,
+            };
+            let types: Vec<SimdType> = match a.get("type") {
+                Some(t) => vec![SimdType::parse(t)?],
+                None => SimdType::ALL.to_vec(),
+            };
+            for ty in types {
+                let s = resource_sweep_figure(kind, ty)?;
+                println!(
+                    "{} — {} — {}\n{}",
+                    kind.figure(),
+                    kind.label(),
+                    ty,
+                    s.to_table().render()
+                );
+            }
+        }
+        14 => {
+            let (lut, ff) = fig14_heatmap()?;
+            println!("Fig. 14(a) dLUT = HLS - RTL\n{}", lut.render());
+            println!("Fig. 14(b) dFF = HLS - RTL\n{}", ff.render());
+        }
+        15 => println!("Fig. 15 BRAM usage (1-bit)\n{}", fig15_bram()?.render()),
+        16 => println!("Fig. 16 synthesis time\n{}", fig16_synth_time()?.render()),
+        other => bail!("unknown figure {other} (8..16)"),
+    }
+    Ok(())
+}
+
+fn cmd_estimate(a: &Args) -> Result<()> {
+    let p = params_from(a)?;
+    println!("design: {p}");
+    for style in [Style::Rtl, Style::Hls] {
+        let e = estimate(&p, style)?;
+        println!("--- {} ---\n{}", style.name(), e.netlist);
+        println!(
+            "critical path {:.3} ns ({}), synthesis {:.0} s\n",
+            e.delay_ns,
+            e.delay_location.name(),
+            e.synth_time_s
+        );
+    }
+    Ok(())
+}
+
+fn cmd_tables(a: &Args) -> Result<()> {
+    let which = a.get_or("which", "all");
+    if which == "4" || which == "all" {
+        println!("Table 4 — resource utilization (Table 3 configs)\n{}", table4()?.render());
+    }
+    if which == "5" || which == "all" {
+        println!("Table 5 — critical path delay (ns)\n{}", table5()?.0.render());
+    }
+    if which == "7" || which == "all" {
+        let weights = Manifest::load(&default_artifacts_dir())
+            .ok()
+            .and_then(|m| m.nid_weights().ok())
+            .map(|ws| ws.into_iter().map(|(w, _)| w).collect::<Vec<_>>());
+        println!(
+            "Table 7 — NID synthesis results (HLS/RTL)\n{}",
+            table7(weights.as_deref())?.0.render()
+        );
+    }
+    Ok(())
+}
+
+fn cmd_nid(a: &Args) -> Result<()> {
+    let n = a.get_usize("requests", 256)?;
+    let batch = a.get_usize("batch", 16)?;
+    let dir = match a.get("artifacts") {
+        Some(d) => std::path::PathBuf::from(d),
+        None => default_artifacts_dir(),
+    };
+    let manifest = Manifest::load(&dir).context("artifacts missing — run `make artifacts`")?;
+    let net = NidNetwork::load(&manifest)?;
+    let records = generate(n, 4242);
+    let reqs: Vec<Request> = records
+        .iter()
+        .enumerate()
+        .map(|(i, r)| Request { id: i as u64, data: r.inputs.clone() })
+        .collect();
+    let cfg = PipelineConfig { batch, ..Default::default() };
+    let pipe = Pipeline::nid(dir, cfg);
+    let (mut resp, report) = pipe.run(reqs)?;
+    resp.sort_by_key(|r| r.id);
+    let mut correct = 0usize;
+    for (r, rec) in resp.iter().zip(&records) {
+        if net.decide(r.output[0]) == rec.label {
+            correct += 1;
+        }
+    }
+    println!("NID pipeline over PJRT: {report}");
+    println!(
+        "accuracy {}/{} = {:.3}",
+        correct,
+        records.len(),
+        correct as f64 / records.len() as f64
+    );
+    Ok(())
+}
+
+fn cmd_compile(a: &Args) -> Result<()> {
+    let target = a.get_usize("target-cycles", 64)?;
+    let budget = a.get_usize("lut-budget", usize::MAX / 2)?;
+    // frontend model: conv -> act -> fc (a miniature FINN input)
+    let mut rng = Pcg32::new(5);
+    let mut rnd = |n: usize| -> Vec<i32> { (0..n).map(|_| rng.next_range(8) as i32 - 4).collect() };
+    let mut g = Graph::new(TensorInfo { elems: 8 * 8 * 4, vectors: 1, bits: 2 });
+    g.push(
+        "conv0",
+        Op::Conv {
+            weights: Matrix::new(16, 3 * 3 * 4, rnd(16 * 36)).unwrap(),
+            ifm_ch: 4,
+            ifm_dim: 8,
+            ofm_ch: 16,
+            kernel_dim: 3,
+        },
+    );
+    g.push(
+        "act0",
+        Op::MultiThreshold {
+            thresholds: finn_mvu::quant::Thresholds::from_rows(&vec![vec![-8, 0, 8]; 16]).unwrap(),
+        },
+    );
+    g.push("fc0", Op::MatMul { weights: Matrix::new(10, 16, rnd(160)).unwrap() });
+
+    println!("frontend graph: {} nodes", g.len());
+    let hw = lower_to_hw(&g)?;
+    println!(
+        "lowered to hardware: {} nodes ({})",
+        hw.len(),
+        hw.nodes.iter().map(|n| n.op.name()).collect::<Vec<_>>().join(" -> ")
+    );
+    let folded = fold_to_target(&hw, target, budget)?;
+    println!("folded to <= {target} cycles/image under {budget} LUTs:");
+    for (name, pe, simd, cycles) in &folded.layers {
+        println!("  {name:<12} PE={pe:<3} SIMD={simd:<3} cycles={cycles}");
+    }
+    let report = analyze(&folded.graph)?;
+    println!(
+        "bottleneck {} cycles, total RTL LUTs {}, est. throughput {:.0} images/s",
+        report.bottleneck_cycles, report.total_luts_rtl, report.throughput_fps
+    );
+    Ok(())
+}
+
+fn main() -> Result<()> {
+    let args = Args::from_env().map_err(|e| anyhow::anyhow!("{e}\n{USAGE}"))?;
+    match args.command.as_deref() {
+        Some("run") => cmd_run(&args),
+        Some("sweep") => cmd_sweep(&args),
+        Some("estimate") => cmd_estimate(&args),
+        Some("tables") => cmd_tables(&args),
+        Some("nid") => cmd_nid(&args),
+        Some("compile") => cmd_compile(&args),
+        Some("version") => {
+            println!("finn-mvu {}", finn_mvu::VERSION);
+            Ok(())
+        }
+        _ => {
+            print!("{USAGE}");
+            Ok(())
+        }
+    }
+}

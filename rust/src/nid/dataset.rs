@@ -1,0 +1,139 @@
+//! Synthetic UNSW-NB15-like dataset — rust twin of
+//! `python/compile/nid_data.py`. Every draw from the shared PCG32 stream
+//! happens in the same order on both sides, so `generate(n, seed)` yields
+//! bit-identical records in both languages (asserted by
+//! `python/tests/test_parity.py` golden values).
+
+use crate::util::rng::Pcg32;
+
+pub const N_FEATURES: usize = 49;
+pub const N_INPUTS: usize = 600;
+pub const N_ATTACK_MODES: u32 = 9;
+pub const ATTACK_PRIOR: f64 = 0.32;
+
+const MODE_STRIDE: usize = 9;
+const MODE_SHIFT: f64 = 2.25;
+
+/// One generated record: 600 2-bit inputs + binary label.
+#[derive(Debug, Clone)]
+pub struct NidRecord {
+    pub inputs: Vec<i32>,
+    pub label: i32,
+}
+
+/// Raw 49-feature records (pre-quantization), mirroring
+/// `nid_data.generate_raw`.
+pub fn generate_raw(n: usize, seed: u64) -> (Vec<[f64; N_FEATURES]>, Vec<i32>) {
+    let mut rng = Pcg32::new(seed);
+    let mut feats = Vec::with_capacity(n);
+    let mut labels = Vec::with_capacity(n);
+    for _ in 0..n {
+        let attack = i32::from(rng.next_f64() < ATTACK_PRIOR);
+        labels.push(attack);
+        let mut f = [0f64; N_FEATURES];
+        for (i, v) in f.iter_mut().enumerate() {
+            let g = rng.gauss();
+            *v = if i < 12 { g.abs() * 1.5 } else { g };
+        }
+        if attack == 1 {
+            let mode = rng.next_range(N_ATTACK_MODES) as usize;
+            for k in 0..4 {
+                let idx = (mode + k * MODE_STRIDE) % N_FEATURES;
+                f[idx] += MODE_SHIFT * if k % 2 == 0 { 1.0 } else { -1.0 };
+            }
+        }
+        feats.push(f);
+    }
+    (feats, labels)
+}
+
+/// Quantize one feature to a 2-bit code {0..3} with fixed cut points
+/// {-1, 0, 1}.
+fn quantize(v: f64) -> i32 {
+    i32::from(v > -1.0) + i32::from(v > 0.0) + i32::from(v > 1.0)
+}
+
+/// Thermometer-expand 49 codes to 600 inputs (see nid_data.py for the
+/// slot re-coding rationale).
+fn expand(codes: &[i32; N_FEATURES]) -> Vec<i32> {
+    let base = N_INPUTS / N_FEATURES; // 12
+    let extra = N_INPUTS % N_FEATURES; // 12
+    let mut out = Vec::with_capacity(N_INPUTS);
+    for (f, &code) in codes.iter().enumerate() {
+        let r = base + usize::from(f < extra);
+        for s in 0..r {
+            let v = code - (s % 3) as i32 + 1;
+            out.push(v.clamp(0, 3));
+        }
+    }
+    debug_assert_eq!(out.len(), N_INPUTS);
+    out
+}
+
+/// Full pipeline: n records of (600 x {0..3}, label).
+pub fn generate(n: usize, seed: u64) -> Vec<NidRecord> {
+    let (feats, labels) = generate_raw(n, seed);
+    feats
+        .iter()
+        .zip(labels)
+        .map(|(f, label)| {
+            let mut codes = [0i32; N_FEATURES];
+            for (c, &v) in codes.iter_mut().zip(f.iter()) {
+                *c = quantize(v);
+            }
+            NidRecord { inputs: expand(&codes), label }
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn shapes_and_ranges() {
+        let recs = generate(64, 1);
+        assert_eq!(recs.len(), 64);
+        for r in &recs {
+            assert_eq!(r.inputs.len(), N_INPUTS);
+            assert!(r.inputs.iter().all(|&v| (0..=3).contains(&v)));
+            assert!(r.label == 0 || r.label == 1);
+        }
+    }
+
+    #[test]
+    fn attack_prior_approximately_holds() {
+        let recs = generate(4000, 5);
+        let attacks: usize = recs.iter().map(|r| r.label as usize).sum();
+        let rate = attacks as f64 / recs.len() as f64;
+        assert!((rate - ATTACK_PRIOR).abs() < 0.04, "attack rate {rate}");
+    }
+
+    #[test]
+    fn deterministic_per_seed() {
+        let a = generate(10, 7);
+        let b = generate(10, 7);
+        let c = generate(10, 8);
+        assert_eq!(a[3].inputs, b[3].inputs);
+        assert!(a.iter().zip(&c).any(|(x, y)| x.inputs != y.inputs));
+    }
+
+    #[test]
+    fn attacks_shift_features() {
+        // attacks must be distinguishable in expectation: compare mean
+        // inputs between classes on a large sample.
+        let recs = generate(3000, 11);
+        let mut mean = [[0f64; 2]; N_INPUTS];
+        let mut cnt = [0f64; 2];
+        for r in &recs {
+            cnt[r.label as usize] += 1.0;
+            for (i, &v) in r.inputs.iter().enumerate() {
+                mean[i][r.label as usize] += v as f64;
+            }
+        }
+        let max_gap = (0..N_INPUTS)
+            .map(|i| (mean[i][0] / cnt[0] - mean[i][1] / cnt[1]).abs())
+            .fold(0.0, f64::max);
+        assert!(max_gap > 0.2, "classes should differ, max gap {max_gap}");
+    }
+}

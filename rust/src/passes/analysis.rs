@@ -1,0 +1,110 @@
+//! Analysis pass: per-layer cycles + resources over a lowered graph —
+//! FINN's "Folding and Resource Estimation" reporting half.
+
+use anyhow::Result;
+
+use crate::estimate::{estimate, Style};
+use crate::ir::Graph;
+use crate::sim::PIPELINE_STAGES;
+
+use super::fold::mvu_params;
+
+/// Per-MVU analysis row.
+#[derive(Debug, Clone)]
+pub struct LayerReport {
+    pub name: String,
+    pub pe: usize,
+    pub simd: usize,
+    pub cycles_per_image: usize,
+    pub luts_rtl: usize,
+    pub luts_hls: usize,
+    pub ffs_rtl: usize,
+    pub ffs_hls: usize,
+    pub bram18_rtl: usize,
+    pub bram18_hls: usize,
+    pub delay_rtl_ns: f64,
+    pub delay_hls_ns: f64,
+}
+
+/// Whole-model analysis.
+#[derive(Debug, Clone)]
+pub struct ModelReport {
+    pub layers: Vec<LayerReport>,
+    pub bottleneck_cycles: usize,
+    pub total_luts_rtl: usize,
+    /// Steady-state images/second at the RTL's achievable clock.
+    pub throughput_fps: f64,
+}
+
+/// Analyze all MVU nodes of a (lowered, folded) graph.
+pub fn analyze(g: &Graph) -> Result<ModelReport> {
+    let mut layers = Vec::new();
+    let mut bottleneck = 0usize;
+    let mut total_luts = 0usize;
+    let mut max_delay: f64 = 1.0;
+    for node in &g.nodes {
+        let Some(p) = mvu_params(&node.name, &node.op) else { continue };
+        let r = estimate(&p, Style::Rtl)?;
+        let h = estimate(&p, Style::Hls)?;
+        let cycles = p.analytic_cycles(PIPELINE_STAGES);
+        bottleneck = bottleneck.max(p.synapse_fold() * p.neuron_fold() * p.output_pixels());
+        total_luts += r.luts;
+        max_delay = max_delay.max(r.delay_ns);
+        layers.push(LayerReport {
+            name: node.name.clone(),
+            pe: p.pe,
+            simd: p.simd,
+            cycles_per_image: cycles,
+            luts_rtl: r.luts,
+            luts_hls: h.luts,
+            ffs_rtl: r.ffs,
+            ffs_hls: h.ffs,
+            bram18_rtl: r.bram18,
+            bram18_hls: h.bram18,
+            delay_rtl_ns: r.delay_ns,
+            delay_hls_ns: h.delay_ns,
+        });
+    }
+    let fps = if bottleneck > 0 { 1e9 / (max_delay * bottleneck as f64) } else { 0.0 };
+    Ok(ModelReport { layers, bottleneck_cycles: bottleneck, total_luts_rtl: total_luts, throughput_fps: fps })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cfg::nid_layers;
+    use crate::ir::{Graph, Op, TensorInfo};
+    use crate::quant::Matrix;
+
+    fn nid_graph() -> Graph {
+        let mut g = Graph::new(TensorInfo { elems: 600, vectors: 1, bits: 2 });
+        for p in nid_layers() {
+            g.push(
+                &p.name.clone(),
+                Op::Mvu {
+                    weights: Matrix::zeros(p.matrix_rows(), p.matrix_cols()),
+                    thresholds: None,
+                    pe: p.pe,
+                    simd: p.simd,
+                    simd_type: p.simd_type,
+                    weight_bits: p.weight_bits,
+                    input_bits: p.input_bits,
+                    ifm_ch: p.ifm_ch,
+                    ifm_dim: p.ifm_dim,
+                    kernel_dim: p.kernel_dim,
+                },
+            );
+        }
+        g
+    }
+
+    #[test]
+    fn nid_analysis_matches_table7_cycles() {
+        let rep = analyze(&nid_graph()).unwrap();
+        assert_eq!(rep.layers.len(), 4);
+        let cycles: Vec<usize> = rep.layers.iter().map(|l| l.cycles_per_image).collect();
+        assert_eq!(cycles, vec![17, 13, 13, 13]);
+        assert!(rep.throughput_fps > 0.0);
+        assert!(rep.total_luts_rtl > 0);
+    }
+}

@@ -1,0 +1,220 @@
+//! Folding / resource-estimation pass (paper §4.2: "assigns compute
+//! resources to each layer to obtain the desired throughput within a
+//! balanced pipeline").
+//!
+//! Greedy balance: every MVU starts fully folded (PE = SIMD = 1); while
+//! the bottleneck layer misses the cycle target, grow its SIMD (preferred:
+//! cheaper per fold step) or PE to the next legal divisor, stopping at the
+//! LUT budget. This is the same fixed-point FINN's folding pass computes.
+
+use anyhow::{bail, Result};
+
+use crate::cfg::LayerParams;
+use crate::estimate::{estimate, Style};
+use crate::ir::{Graph, Op};
+
+/// Result of the folding pass.
+#[derive(Debug, Clone)]
+pub struct FoldingReport {
+    pub graph: Graph,
+    /// Per-MVU (name, pe, simd, cycles).
+    pub layers: Vec<(String, usize, usize, usize)>,
+    pub total_luts: usize,
+    pub bottleneck_cycles: usize,
+}
+
+/// Extract LayerParams for an MVU node (shared with the analysis pass).
+pub(crate) fn mvu_params(name: &str, op: &Op) -> Option<LayerParams> {
+    match op {
+        Op::Mvu {
+            weights,
+            pe,
+            simd,
+            simd_type,
+            weight_bits,
+            input_bits,
+            ifm_ch,
+            ifm_dim,
+            kernel_dim,
+            thresholds,
+        } => Some(LayerParams {
+            name: name.to_string(),
+            ifm_ch: *ifm_ch,
+            ifm_dim: *ifm_dim,
+            ofm_ch: weights.rows,
+            kernel_dim: *kernel_dim,
+            pe: *pe,
+            simd: *simd,
+            simd_type: *simd_type,
+            weight_bits: *weight_bits,
+            input_bits: *input_bits,
+            output_bits: thresholds
+                .as_ref()
+                .map(|t| crate::estimate::netlist::ceil_log2(t.steps as u64 + 1))
+                .unwrap_or(0),
+        }),
+        _ => None,
+    }
+}
+
+fn divisors(n: usize) -> Vec<usize> {
+    (1..=n).filter(|d| n % d == 0).collect()
+}
+
+fn next_divisor(n: usize, current: usize) -> Option<usize> {
+    divisors(n).into_iter().find(|&d| d > current)
+}
+
+/// Steady-state cycles per image for an MVU.
+fn cycles_of(p: &LayerParams) -> usize {
+    p.synapse_fold() * p.neuron_fold() * p.output_pixels()
+}
+
+/// Fold the graph's MVUs to reach `target_cycles` per image without
+/// exceeding `lut_budget` (RTL estimate).
+pub fn fold_to_target(g: &Graph, target_cycles: usize, lut_budget: usize) -> Result<FoldingReport> {
+    let mut graph = g.clone();
+    // initialize all MVUs to pe = simd = 1
+    for node in &mut graph.nodes {
+        if let Op::Mvu { pe, simd, .. } = &mut node.op {
+            *pe = 1;
+            *simd = 1;
+        }
+    }
+
+    let luts = |graph: &Graph| -> Result<usize> {
+        let mut total = 0;
+        for node in &graph.nodes {
+            if let Some(p) = mvu_params(&node.name, &node.op) {
+                total += estimate(&p, Style::Rtl)?.luts;
+            }
+        }
+        Ok(total)
+    };
+
+    loop {
+        // find the bottleneck MVU
+        let mut worst: Option<(usize, usize)> = None; // (node idx, cycles)
+        for (i, node) in graph.nodes.iter().enumerate() {
+            if let Some(p) = mvu_params(&node.name, &node.op) {
+                let c = cycles_of(&p);
+                if worst.is_none_or(|(_, wc)| c > wc) {
+                    worst = Some((i, c));
+                }
+            }
+        }
+        let Some((idx, cycles)) = worst else { bail!("graph contains no MVU nodes") };
+        if cycles <= target_cycles {
+            break;
+        }
+
+        // grow the bottleneck: prefer SIMD (cheaper growth per fold), then PE
+        let (rows, cols, pe, simd) = match &graph.nodes[idx].op {
+            Op::Mvu { weights, pe, simd, .. } => (weights.rows, weights.cols, *pe, *simd),
+            _ => unreachable!(),
+        };
+        let grown = if let Some(ns) = next_divisor(cols, simd) {
+            match &mut graph.nodes[idx].op {
+                Op::Mvu { simd, .. } => *simd = ns,
+                _ => unreachable!(),
+            }
+            true
+        } else if let Some(np) = next_divisor(rows, pe) {
+            match &mut graph.nodes[idx].op {
+                Op::Mvu { pe, .. } => *pe = np,
+                _ => unreachable!(),
+            }
+            true
+        } else {
+            false
+        };
+        if !grown {
+            break; // fully unfolded; cannot go faster
+        }
+        if luts(&graph)? > lut_budget {
+            // revert the step and stop: budget reached
+            match &mut graph.nodes[idx].op {
+                Op::Mvu { pe: p, simd: s, .. } => {
+                    *p = pe;
+                    *s = simd;
+                }
+                _ => unreachable!(),
+            }
+            break;
+        }
+    }
+
+    let mut layers = Vec::new();
+    let mut bottleneck = 0;
+    for node in &graph.nodes {
+        if let Some(p) = mvu_params(&node.name, &node.op) {
+            let c = cycles_of(&p);
+            bottleneck = bottleneck.max(c);
+            layers.push((node.name.clone(), p.pe, p.simd, c));
+        }
+    }
+    let total_luts = luts(&graph)?;
+    Ok(FoldingReport { graph, layers, total_luts, bottleneck_cycles: bottleneck })
+}
+
+/// Legal fold check used by property tests.
+pub fn folding_is_legal(g: &Graph) -> bool {
+    g.nodes.iter().all(|n| match mvu_params(&n.name, &n.op) {
+        Some(p) => p.validate().is_ok(),
+        None => true,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ir::TensorInfo;
+    use crate::passes::lower_to_hw;
+    use crate::quant::Matrix;
+    use crate::util::rng::Pcg32;
+
+    fn mlp_graph() -> Graph {
+        let mut rng = Pcg32::new(3);
+        let mut g = Graph::new(TensorInfo { elems: 96, vectors: 1, bits: 2 });
+        for (i, (fin, fout)) in [(96usize, 32usize), (32, 32), (32, 8)].iter().enumerate() {
+            let data: Vec<i32> = (0..fin * fout).map(|_| rng.next_range(4) as i32 - 2).collect();
+            g.push(
+                &format!("fc{i}"),
+                Op::MatMul { weights: Matrix::new(*fout, *fin, data).unwrap() },
+            );
+        }
+        lower_to_hw(&g).unwrap()
+    }
+
+    #[test]
+    fn folding_reaches_target_and_is_legal() {
+        let g = mlp_graph();
+        let rep = fold_to_target(&g, 96, usize::MAX).unwrap();
+        assert!(rep.bottleneck_cycles <= 96, "bottleneck {}", rep.bottleneck_cycles);
+        assert!(folding_is_legal(&rep.graph));
+        // fully folded start: fc0 is 96x32 = 3072 slots; target needs growth
+        let (_, pe, simd, _) = &rep.layers[0];
+        assert!(pe * simd >= 3072 / 96);
+    }
+
+    #[test]
+    fn budget_stops_growth() {
+        let g = mlp_graph();
+        let unlimited = fold_to_target(&g, 1, usize::MAX).unwrap();
+        let tight = fold_to_target(&g, 1, unlimited.total_luts / 4).unwrap();
+        assert!(tight.total_luts <= unlimited.total_luts);
+        assert!(tight.bottleneck_cycles >= unlimited.bottleneck_cycles);
+        assert!(folding_is_legal(&tight.graph));
+    }
+
+    #[test]
+    fn balanced_pipeline() {
+        // after folding, layer cycles should be within one growth step of
+        // each other (no layer left needlessly slow).
+        let g = mlp_graph();
+        let rep = fold_to_target(&g, 48, usize::MAX).unwrap();
+        for (name, _, _, c) in &rep.layers {
+            assert!(*c <= 48, "{name} at {c} cycles misses target");
+        }
+    }
+}

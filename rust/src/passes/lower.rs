@@ -1,0 +1,173 @@
+//! Lowering and streamlining passes.
+//!
+//! `lower_convs`: Conv -> SWU + MVU (paper: "convolutions are lowered to a
+//! sliding window node followed by a MVU node").
+//! `absorb_thresholds`: MatMul/MVU followed by MultiThreshold -> MVU with
+//! burned-in thresholds (FINN streamlining).
+//! `lower_to_hw`: both, then checks the graph is hardware-only.
+
+use anyhow::{bail, Result};
+
+use crate::cfg::SimdType;
+use crate::ir::{Graph, Node, Op};
+
+/// Default precision assumed for frontend integer weights when lowering
+/// (callers can rewrite the Mvu afterwards).
+fn infer_weight_bits(w: &crate::quant::Matrix) -> u32 {
+    let max = w.data().iter().map(|v| v.unsigned_abs()).max().unwrap_or(1).max(1);
+    // two's complement: need ceil(log2(max+1)) + 1 bits
+    (32 - max.leading_zeros()) + 1
+}
+
+/// Conv -> SWU + MVU (unfolded: pe = simd = 1; the folding pass assigns
+/// real parallelism).
+pub fn lower_convs(g: &Graph) -> Result<Graph> {
+    let mut out = Graph { input: g.input.clone(), nodes: Vec::new() };
+    for node in &g.nodes {
+        match &node.op {
+            Op::Conv { weights, ifm_ch, ifm_dim, ofm_ch, kernel_dim } => {
+                out.push(
+                    &format!("{}_swu", node.name),
+                    Op::Swu { ifm_ch: *ifm_ch, ifm_dim: *ifm_dim, kernel_dim: *kernel_dim },
+                );
+                let wb = infer_weight_bits(weights);
+                out.push(
+                    &format!("{}_mvu", node.name),
+                    Op::Mvu {
+                        weights: weights.clone(),
+                        thresholds: None,
+                        pe: 1,
+                        simd: 1,
+                        simd_type: SimdType::Standard,
+                        weight_bits: wb.max(2),
+                        input_bits: 4,
+                        ifm_ch: *ifm_ch,
+                        ifm_dim: *ifm_dim,
+                        kernel_dim: *kernel_dim,
+                    },
+                );
+                let _ = ofm_ch;
+            }
+            other => {
+                out.nodes.push(Node { name: node.name.clone(), op: other.clone() });
+            }
+        }
+    }
+    out.infer_final()?;
+    Ok(out)
+}
+
+/// MatMul -> MVU; MVU followed by MultiThreshold absorbs the thresholds.
+pub fn absorb_thresholds(g: &Graph) -> Result<Graph> {
+    let mut out = Graph { input: g.input.clone(), nodes: Vec::new() };
+    for node in &g.nodes {
+        match &node.op {
+            Op::MatMul { weights } => {
+                let wb = infer_weight_bits(weights);
+                out.push(
+                    &node.name,
+                    Op::Mvu {
+                        weights: weights.clone(),
+                        thresholds: None,
+                        pe: 1,
+                        simd: 1,
+                        simd_type: SimdType::Standard,
+                        weight_bits: wb.max(2),
+                        input_bits: 4,
+                        ifm_ch: weights.cols,
+                        ifm_dim: 1,
+                        kernel_dim: 1,
+                    },
+                );
+            }
+            Op::MultiThreshold { thresholds } => {
+                match out.nodes.last_mut() {
+                    Some(Node { op: Op::Mvu { thresholds: t @ None, weights, .. }, .. })
+                        if weights.rows == thresholds.channels =>
+                    {
+                        *t = Some(thresholds.clone());
+                    }
+                    _ => bail!(
+                        "{}: MultiThreshold must follow an MVU/MatMul with matching channels",
+                        node.name
+                    ),
+                }
+            }
+            other => {
+                out.nodes.push(Node { name: node.name.clone(), op: other.clone() });
+            }
+        }
+    }
+    out.infer_final()?;
+    Ok(out)
+}
+
+/// The full lowering pipeline; the result contains only hardware ops.
+pub fn lower_to_hw(g: &Graph) -> Result<Graph> {
+    let g = lower_convs(g)?;
+    let g = absorb_thresholds(&g)?;
+    if !g.is_hw_only() {
+        bail!("graph still contains frontend ops after lowering");
+    }
+    Ok(g)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ir::TensorInfo;
+    use crate::quant::{Matrix, Thresholds};
+
+    fn frontend_graph() -> Graph {
+        let mut g = Graph::new(TensorInfo { elems: 4 * 4 * 2, vectors: 1, bits: 2 });
+        g.push(
+            "conv0",
+            Op::Conv {
+                weights: Matrix::zeros(8, 2 * 2 * 2),
+                ifm_ch: 2,
+                ifm_dim: 4,
+                ofm_ch: 8,
+                kernel_dim: 2,
+            },
+        );
+        g.push(
+            "act0",
+            Op::MultiThreshold { thresholds: Thresholds::from_rows(&vec![vec![0]; 8]).unwrap() },
+        );
+        g.push("fc0", Op::MatMul { weights: Matrix::zeros(2, 8) });
+        g
+    }
+
+    #[test]
+    fn conv_lowering_produces_swu_mvu() {
+        let g = lower_convs(&frontend_graph()).unwrap();
+        assert_eq!(g.nodes[0].op.name(), "SWU");
+        assert_eq!(g.nodes[1].op.name(), "MVU");
+        assert_eq!(g.nodes[2].op.name(), "MultiThreshold");
+    }
+
+    #[test]
+    fn full_lowering_is_hw_only() {
+        let g = lower_to_hw(&frontend_graph()).unwrap();
+        assert!(g.is_hw_only());
+        // threshold absorbed into the conv MVU
+        match &g.nodes[1].op {
+            Op::Mvu { thresholds, .. } => assert!(thresholds.is_some()),
+            other => panic!("expected MVU, got {}", other.name()),
+        }
+        // output shape preserved
+        let t = g.infer_final().unwrap();
+        assert_eq!(t.elems, 2);
+        assert_eq!(t.vectors, 9); // 3x3 output pixels
+    }
+
+    #[test]
+    fn orphan_threshold_rejected() {
+        let mut g = Graph::new(TensorInfo { elems: 4, vectors: 1, bits: 2 });
+        g.push(
+            "act",
+            Op::MultiThreshold { thresholds: Thresholds::from_rows(&vec![vec![0]; 4]).unwrap() },
+        );
+        assert!(absorb_thresholds(&g).is_err());
+    }
+}

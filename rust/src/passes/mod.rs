@@ -1,0 +1,13 @@
+//! FINN-style transformation and analysis passes (paper §4.2, Fig. 5):
+//! lowering, streamlining (threshold absorption), folding / resource
+//! estimation, and functional verification.
+
+mod analysis;
+mod fold;
+mod lower;
+mod verify;
+
+pub use analysis::{analyze, LayerReport, ModelReport};
+pub use fold::{fold_to_target, folding_is_legal, FoldingReport};
+pub use lower::{absorb_thresholds, lower_convs, lower_to_hw};
+pub use verify::execute_reference;

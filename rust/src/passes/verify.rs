@@ -1,0 +1,124 @@
+//! Functional verification pass: execute a graph on reference semantics.
+//!
+//! Used to check that transformations preserve the computation (every
+//! pass in `crate::passes` must be semantics-preserving) and as the
+//! oracle for the simulator/PJRT backends.
+
+use anyhow::{bail, Result};
+
+use crate::ir::{Graph, Op};
+use crate::quant::{matvec, multithreshold};
+use crate::sim::SlidingWindowUnit;
+
+/// Execute the graph over a set of input vectors. For image-consuming
+/// graphs each input is a flat HWC image; SWU nodes expand one vector
+/// into many (im2col), which downstream nodes consume per-vector.
+pub fn execute_reference(g: &Graph, inputs: &[Vec<i32>]) -> Result<Vec<Vec<i32>>> {
+    let mut vectors: Vec<Vec<i32>> = inputs.to_vec();
+    for node in &g.nodes {
+        vectors = match &node.op {
+            Op::Conv { weights, ifm_ch, ifm_dim, kernel_dim, .. } => {
+                let swu = SlidingWindowUnit::new(*ifm_dim, *ifm_dim, *ifm_ch, *kernel_dim, 1)?;
+                let mut out = Vec::new();
+                for img in &vectors {
+                    for v in swu.expand(img)? {
+                        out.push(matvec(&v, weights, crate::cfg::SimdType::Standard)?);
+                    }
+                }
+                out
+            }
+            Op::MatMul { weights } => vectors
+                .iter()
+                .map(|v| matvec(v, weights, crate::cfg::SimdType::Standard))
+                .collect::<Result<_>>()?,
+            Op::MultiThreshold { thresholds } => vectors
+                .iter()
+                .map(|v| multithreshold(v, thresholds))
+                .collect::<Result<_>>()?,
+            Op::Swu { ifm_ch, ifm_dim, kernel_dim } => {
+                let swu = SlidingWindowUnit::new(*ifm_dim, *ifm_dim, *ifm_ch, *kernel_dim, 1)?;
+                let mut out = Vec::new();
+                for img in &vectors {
+                    out.extend(swu.expand(img)?);
+                }
+                out
+            }
+            Op::Mvu { weights, thresholds, simd_type, .. } => {
+                let mut out = Vec::with_capacity(vectors.len());
+                for v in &vectors {
+                    let acc = matvec(v, weights, *simd_type)?;
+                    out.push(match thresholds {
+                        Some(t) => multithreshold(&acc, t)?,
+                        None => acc,
+                    });
+                }
+                out
+            }
+        };
+        if vectors.is_empty() {
+            bail!("{}: produced no vectors", node.name);
+        }
+    }
+    Ok(vectors)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ir::TensorInfo;
+    use crate::passes::{fold_to_target, lower_to_hw};
+    use crate::quant::{Matrix, Thresholds};
+    use crate::util::rng::Pcg32;
+
+    /// Build a conv + threshold + fc frontend graph with random weights.
+    fn frontend() -> Graph {
+        let mut rng = Pcg32::new(77);
+        let mut rnd = |n: usize| -> Vec<i32> {
+            (0..n).map(|_| rng.next_range(8) as i32 - 4).collect()
+        };
+        let mut g = Graph::new(TensorInfo { elems: 4 * 4 * 2, vectors: 1, bits: 2 });
+        g.push(
+            "conv0",
+            Op::Conv {
+                weights: Matrix::new(6, 8, rnd(48)).unwrap(),
+                ifm_ch: 2,
+                ifm_dim: 4,
+                ofm_ch: 6,
+                kernel_dim: 2,
+            },
+        );
+        g.push(
+            "act0",
+            Op::MultiThreshold {
+                thresholds: Thresholds::from_rows(&vec![vec![-4, 0, 4]; 6]).unwrap(),
+            },
+        );
+        g.push("fc0", Op::MatMul { weights: Matrix::new(3, 6, rnd(18)).unwrap() });
+        g
+    }
+
+    #[test]
+    fn lowering_preserves_semantics() {
+        let g = frontend();
+        let hw = lower_to_hw(&g).unwrap();
+        let mut rng = Pcg32::new(9);
+        let imgs: Vec<Vec<i32>> =
+            (0..3).map(|_| (0..32).map(|_| rng.next_range(4) as i32).collect()).collect();
+        let a = execute_reference(&g, &imgs).unwrap();
+        let b = execute_reference(&hw, &imgs).unwrap();
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn folding_preserves_semantics() {
+        let g = lower_to_hw(&frontend()).unwrap();
+        let folded = fold_to_target(&g, 4, usize::MAX).unwrap().graph;
+        let mut rng = Pcg32::new(10);
+        let imgs: Vec<Vec<i32>> =
+            (0..2).map(|_| (0..32).map(|_| rng.next_range(4) as i32).collect()).collect();
+        assert_eq!(
+            execute_reference(&g, &imgs).unwrap(),
+            execute_reference(&folded, &imgs).unwrap()
+        );
+    }
+}

@@ -1,0 +1,172 @@
+//! Minimal property-based testing framework (the offline registry has no
+//! `proptest`/`quickcheck`; DESIGN.md §8).
+//!
+//! Deterministic: every run uses a fixed master seed, each case derives
+//! its own PCG32 stream, and a failing case reports the seed so it can be
+//! replayed with `Config::only(seed)`. Shrinking is intentionally simple:
+//! on failure the framework retries the generator with progressively
+//! "smaller" size hints and reports the smallest failure found.
+
+use crate::util::rng::Pcg32;
+
+/// Generation context: a PRNG plus a size hint (grows over the run so
+/// early cases are small).
+pub struct Gen {
+    pub rng: Pcg32,
+    pub size: usize,
+}
+
+impl Gen {
+    pub fn new(seed: u64, size: usize) -> Gen {
+        Gen { rng: Pcg32::new(seed), size: size.max(1) }
+    }
+
+    /// Uniform usize in [lo, hi].
+    pub fn usize_in(&mut self, lo: usize, hi: usize) -> usize {
+        debug_assert!(lo <= hi);
+        lo + self.rng.next_range((hi - lo + 1) as u32) as usize
+    }
+
+    /// Uniform i32 in [lo, hi].
+    pub fn i32_in(&mut self, lo: i32, hi: i32) -> i32 {
+        self.rng.next_i32_in(lo, hi)
+    }
+
+    /// Vector of `n` draws.
+    pub fn vec_i32(&mut self, n: usize, lo: i32, hi: i32) -> Vec<i32> {
+        (0..n).map(|_| self.i32_in(lo, hi)).collect()
+    }
+
+    /// Pick one element of a slice.
+    pub fn choose<'a, T>(&mut self, xs: &'a [T]) -> &'a T {
+        &xs[self.usize_in(0, xs.len() - 1)]
+    }
+
+    /// A divisor of `n`, uniformly among divisors.
+    pub fn divisor_of(&mut self, n: usize) -> usize {
+        let divs: Vec<usize> = (1..=n).filter(|d| n % d == 0).collect();
+        *self.choose(&divs)
+    }
+
+    /// Bernoulli(p in 256ths).
+    pub fn chance(&mut self, p_num: u32) -> bool {
+        self.rng.next_range(256) < p_num
+    }
+}
+
+/// Run configuration.
+#[derive(Debug, Clone, Copy)]
+pub struct Config {
+    pub cases: usize,
+    pub master_seed: u64,
+    pub max_size: usize,
+    /// Replay exactly one case seed (for debugging).
+    pub only: Option<u64>,
+}
+
+impl Default for Config {
+    fn default() -> Self {
+        Config { cases: 64, master_seed: 0x5EED, max_size: 64, only: None }
+    }
+}
+
+impl Config {
+    pub fn cases(n: usize) -> Config {
+        Config { cases: n, ..Default::default() }
+    }
+
+    pub fn only(seed: u64) -> Config {
+        Config { only: Some(seed), ..Default::default() }
+    }
+}
+
+/// Check a property: `prop` returns `Err(message)` to fail the case.
+/// Panics with a replayable report on failure.
+pub fn check<F>(name: &str, cfg: Config, mut prop: F)
+where
+    F: FnMut(&mut Gen) -> Result<(), String>,
+{
+    if let Some(seed) = cfg.only {
+        let mut g = Gen::new(seed, cfg.max_size);
+        if let Err(msg) = prop(&mut g) {
+            panic!("property {name} failed on replay seed {seed}: {msg}");
+        }
+        return;
+    }
+    let mut seeder = Pcg32::new(cfg.master_seed);
+    for case in 0..cfg.cases {
+        let seed = seeder.next_u64();
+        // size ramps from small to max over the run
+        let size = 1 + (cfg.max_size - 1) * case / cfg.cases.max(1);
+        let mut g = Gen::new(seed, size);
+        if let Err(msg) = prop(&mut g) {
+            // crude shrink: retry the same seed at smaller sizes and
+            // report the smallest size that still fails.
+            let mut smallest = (size, msg.clone());
+            let mut s = size / 2;
+            while s >= 1 {
+                let mut g2 = Gen::new(seed, s);
+                match prop(&mut g2) {
+                    Err(m2) => {
+                        smallest = (s, m2);
+                        if s == 1 {
+                            break;
+                        }
+                        s /= 2;
+                    }
+                    Ok(()) => break,
+                }
+            }
+            panic!(
+                "property {name} failed (case {case}, seed {seed}, size {}): {}\n\
+                 replay with Config::only({seed})",
+                smallest.0, smallest.1
+            );
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passes_trivially_true_property() {
+        check("sum-commutes", Config::cases(32), |g| {
+            let a = g.i32_in(-100, 100);
+            let b = g.i32_in(-100, 100);
+            if a + b == b + a {
+                Ok(())
+            } else {
+                Err("addition not commutative?!".into())
+            }
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property always-fails failed")]
+    fn reports_failure_with_seed() {
+        check("always-fails", Config::cases(4), |_| Err("nope".into()));
+    }
+
+    #[test]
+    fn replay_mode_runs_single_seed() {
+        check("replay-ok", Config::only(42), |g| {
+            let _ = g.vec_i32(3, 0, 1);
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn divisor_generator_is_sound() {
+        check("divisors", Config::cases(64), |g| {
+            let n = g.usize_in(1, 640);
+            let d = g.divisor_of(n);
+            if n % d == 0 {
+                Ok(())
+            } else {
+                Err(format!("{d} does not divide {n}"))
+            }
+        });
+    }
+}

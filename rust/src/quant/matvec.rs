@@ -1,0 +1,191 @@
+//! Reference integer matrix-vector semantics (the rust twin of
+//! `python/compile/kernels/ref.py`). The cycle-accurate simulator, the
+//! PJRT artifacts and this module must agree bit-exactly.
+
+use anyhow::{bail, Result};
+
+use crate::cfg::SimdType;
+
+/// Row-major 2-D i32 matrix.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Matrix {
+    pub rows: usize,
+    pub cols: usize,
+    data: Vec<i32>,
+}
+
+impl Matrix {
+    pub fn new(rows: usize, cols: usize, data: Vec<i32>) -> Result<Matrix> {
+        if data.len() != rows * cols {
+            bail!("matrix data length {} != {rows}x{cols}", data.len());
+        }
+        Ok(Matrix { rows, cols, data })
+    }
+
+    pub fn zeros(rows: usize, cols: usize) -> Matrix {
+        Matrix { rows, cols, data: vec![0; rows * cols] }
+    }
+
+    pub fn from_rows(rows_data: &[Vec<i32>]) -> Result<Matrix> {
+        let rows = rows_data.len();
+        let cols = rows_data.first().map_or(0, |r| r.len());
+        if rows_data.iter().any(|r| r.len() != cols) {
+            bail!("ragged matrix rows");
+        }
+        Ok(Matrix { rows, cols, data: rows_data.concat() })
+    }
+
+    #[inline]
+    pub fn at(&self, r: usize, c: usize) -> i32 {
+        debug_assert!(r < self.rows && c < self.cols);
+        self.data[r * self.cols + c]
+    }
+
+    #[inline]
+    pub fn row(&self, r: usize) -> &[i32] {
+        &self.data[r * self.cols..(r + 1) * self.cols]
+    }
+
+    pub fn data(&self) -> &[i32] {
+        &self.data
+    }
+
+    /// Check all entries lie in `[lo, hi]`.
+    pub fn in_range(&self, lo: i32, hi: i32) -> bool {
+        self.data.iter().all(|&v| (lo..=hi).contains(&v))
+    }
+}
+
+/// XNOR-popcount dot products (paper Fig. 4a): `x`, `w` rows in {0,1};
+/// out[o] = #{i : x[i] == w[o][i]}.
+pub fn matvec_xnor(x: &[i32], w: &Matrix) -> Result<Vec<i32>> {
+    check_len(x, w)?;
+    if !x.iter().all(|&v| v == 0 || v == 1) || !w.in_range(0, 1) {
+        bail!("xnor operands must be in {{0,1}}");
+    }
+    Ok((0..w.rows)
+        .map(|o| {
+            w.row(o)
+                .iter()
+                .zip(x)
+                .map(|(&wv, &xv)| i32::from(wv == xv))
+                .sum()
+        })
+        .collect())
+}
+
+/// Binary-weight dot products (paper Fig. 4b): weights stored {0,1} meaning
+/// {-1,+1}; out[o] = sum_i (w ? x : -x).
+pub fn matvec_binary(x: &[i32], w: &Matrix) -> Result<Vec<i32>> {
+    check_len(x, w)?;
+    if !w.in_range(0, 1) {
+        bail!("binary weights must be stored as {{0,1}}");
+    }
+    Ok((0..w.rows)
+        .map(|o| {
+            w.row(o)
+                .iter()
+                .zip(x)
+                .map(|(&wv, &xv)| if wv == 1 { xv } else { -xv })
+                .sum()
+        })
+        .collect())
+}
+
+/// Arbitrary-precision dot products (paper Fig. 4c).
+pub fn matvec_standard(x: &[i32], w: &Matrix) -> Result<Vec<i32>> {
+    check_len(x, w)?;
+    Ok((0..w.rows)
+        .map(|o| w.row(o).iter().zip(x).map(|(&wv, &xv)| wv * xv).sum())
+        .collect())
+}
+
+/// Dispatch over the paper's three SIMD element types.
+pub fn matvec(x: &[i32], w: &Matrix, ty: SimdType) -> Result<Vec<i32>> {
+    match ty {
+        SimdType::Xnor => matvec_xnor(x, w),
+        SimdType::BinaryWeights => matvec_binary(x, w),
+        SimdType::Standard => matvec_standard(x, w),
+    }
+}
+
+fn check_len(x: &[i32], w: &Matrix) -> Result<()> {
+    if x.len() != w.cols {
+        bail!("input length {} != matrix cols {}", x.len(), w.cols);
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn w2x4() -> Matrix {
+        Matrix::from_rows(&[vec![1, 0, 1, 1], vec![0, 0, 1, 0]]).unwrap()
+    }
+
+    #[test]
+    fn xnor_counts_agreements() {
+        let x = [1, 1, 1, 0];
+        let out = matvec_xnor(&x, &w2x4()).unwrap();
+        // row0: agree at idx0, idx2 -> plus idx3? w=1,x=0 no. => [1==1,0==1,1==1,1==0] = 2
+        assert_eq!(out, vec![2, 2]);
+    }
+
+    #[test]
+    fn xnor_rejects_nonbinary() {
+        assert!(matvec_xnor(&[2, 0, 0, 0], &w2x4()).is_err());
+    }
+
+    #[test]
+    fn binary_is_signed_sum() {
+        let x = [3, -2, 5, 7];
+        let out = matvec_binary(&x, &w2x4()).unwrap();
+        // row0 weights {1,0,1,1} -> +3 +2 +5 +7 = 17; row1 {0,0,1,0} -> -3 +2 +5 -7 = -3
+        assert_eq!(out, vec![17, -3]);
+    }
+
+    #[test]
+    fn standard_is_gemm() {
+        let w = Matrix::from_rows(&[vec![1, -2], vec![3, 4]]).unwrap();
+        assert_eq!(matvec_standard(&[5, 6], &w).unwrap(), vec![5 - 12, 15 + 24]);
+    }
+
+    #[test]
+    fn binary_equals_standard_with_pm1() {
+        // binary type with weights {0,1} == standard with weights {-1,+1}
+        let wb = w2x4();
+        let ws = Matrix::new(
+            2,
+            4,
+            wb.data().iter().map(|&v| 2 * v - 1).collect(),
+        )
+        .unwrap();
+        let x = [4, -1, 0, 9];
+        assert_eq!(
+            matvec_binary(&x, &wb).unwrap(),
+            matvec_standard(&x, &ws).unwrap()
+        );
+    }
+
+    #[test]
+    fn xnor_equals_popcount_identity() {
+        // xnor dot == N - hamming_distance
+        let x = [1, 0, 1, 0];
+        let out = matvec_xnor(&x, &w2x4()).unwrap();
+        for (o, row) in out.iter().zip(0..2) {
+            let hd: i32 = w2x4()
+                .row(row)
+                .iter()
+                .zip(&x)
+                .map(|(&a, &b)| i32::from(a != b))
+                .sum();
+            assert_eq!(*o, 4 - hd);
+        }
+    }
+
+    #[test]
+    fn length_mismatch_rejected() {
+        assert!(matvec_standard(&[1, 2, 3], &w2x4()).is_err());
+    }
+}

@@ -1,0 +1,11 @@
+//! Quantized-arithmetic substrate: encodings, bit-packing, the reference
+//! GEMM semantics shared with `python/compile/kernels/ref.py`, and the
+//! MultiThreshold activation.
+
+mod matvec;
+mod pack;
+mod thresholds;
+
+pub use matvec::{matvec, matvec_binary, matvec_standard, matvec_xnor, Matrix};
+pub use pack::{pack_bits, popcount_xnor_packed, unpack_bits, BitVec};
+pub use thresholds::{multithreshold, Thresholds};

@@ -1,0 +1,189 @@
+//! Bit-packing: the stream-level representation the RTL works on.
+//!
+//! The MVU's AXI streams carry `SIMD * bits`-wide words; weight memories
+//! store `SIMD * B_w`-wide words (paper §5.1). This module packs integer
+//! lanes into u64-backed bit vectors and implements the packed
+//! XNOR-popcount used by the 1-bit datapath.
+
+use anyhow::{bail, Result};
+
+/// A dense bit vector backed by u64 words (LSB-first within a word).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct BitVec {
+    len: usize,
+    words: Vec<u64>,
+}
+
+impl BitVec {
+    pub fn zeros(len: usize) -> BitVec {
+        BitVec { len, words: vec![0; len.div_ceil(64)] }
+    }
+
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    #[inline]
+    pub fn get(&self, i: usize) -> bool {
+        assert!(i < self.len, "bit index {i} out of range {}", self.len);
+        (self.words[i / 64] >> (i % 64)) & 1 == 1
+    }
+
+    #[inline]
+    pub fn set(&mut self, i: usize, v: bool) {
+        assert!(i < self.len, "bit index {i} out of range {}", self.len);
+        let w = &mut self.words[i / 64];
+        if v {
+            *w |= 1u64 << (i % 64);
+        } else {
+            *w &= !(1u64 << (i % 64));
+        }
+    }
+
+    pub fn words(&self) -> &[u64] {
+        &self.words
+    }
+
+    /// Popcount of XNOR of two equal-length bit vectors = number of
+    /// agreeing positions — the Fig. 4(a) PE computation, word-parallel.
+    pub fn xnor_popcount(&self, other: &BitVec) -> Result<u32> {
+        if self.len != other.len {
+            bail!("length mismatch: {} vs {}", self.len, other.len);
+        }
+        let mut total = 0u32;
+        let full_words = self.len / 64;
+        for i in 0..full_words {
+            total += (!(self.words[i] ^ other.words[i])).count_ones();
+        }
+        let tail = self.len % 64;
+        if tail > 0 {
+            let mask = (1u64 << tail) - 1;
+            let agree = !(self.words[full_words] ^ other.words[full_words]) & mask;
+            total += agree.count_ones();
+        }
+        Ok(total)
+    }
+}
+
+/// Pack lane values into a bit vector, `bits` per lane, LSB-first,
+/// two's-complement truncation for signed values.
+pub fn pack_bits(lanes: &[i32], bits: u32) -> BitVec {
+    assert!((1..=32).contains(&bits));
+    let mut bv = BitVec::zeros(lanes.len() * bits as usize);
+    for (lane, &v) in lanes.iter().enumerate() {
+        let uv = (v as u32) & mask32(bits);
+        for b in 0..bits {
+            if (uv >> b) & 1 == 1 {
+                bv.set(lane * bits as usize + b as usize, true);
+            }
+        }
+    }
+    bv
+}
+
+/// Unpack lane values; `signed` sign-extends from `bits`.
+pub fn unpack_bits(bv: &BitVec, bits: u32, signed: bool) -> Vec<i32> {
+    assert!((1..=32).contains(&bits));
+    assert_eq!(bv.len() % bits as usize, 0, "bitvec not a whole number of lanes");
+    let n = bv.len() / bits as usize;
+    (0..n)
+        .map(|lane| {
+            let mut uv: u32 = 0;
+            for b in 0..bits {
+                if bv.get(lane * bits as usize + b as usize) {
+                    uv |= 1 << b;
+                }
+            }
+            if signed && bits < 32 && (uv >> (bits - 1)) & 1 == 1 {
+                (uv | !mask32(bits)) as i32
+            } else {
+                uv as i32
+            }
+        })
+        .collect()
+}
+
+/// Convenience: XNOR-popcount over {0,1} lane slices via packing (parity
+/// check against the lane-wise computation).
+pub fn popcount_xnor_packed(x: &[i32], w: &[i32]) -> Result<u32> {
+    if x.len() != w.len() {
+        bail!("length mismatch");
+    }
+    let xb = pack_bits(x, 1);
+    let wb = pack_bits(w, 1);
+    xb.xnor_popcount(&wb)
+}
+
+fn mask32(bits: u32) -> u32 {
+    if bits >= 32 {
+        u32::MAX
+    } else {
+        (1u32 << bits) - 1
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn set_get_roundtrip() {
+        let mut bv = BitVec::zeros(130);
+        bv.set(0, true);
+        bv.set(64, true);
+        bv.set(129, true);
+        assert!(bv.get(0) && bv.get(64) && bv.get(129));
+        assert!(!bv.get(1) && !bv.get(63) && !bv.get(128));
+        bv.set(64, false);
+        assert!(!bv.get(64));
+    }
+
+    #[test]
+    fn pack_unpack_unsigned() {
+        let lanes = vec![0, 1, 2, 3];
+        let bv = pack_bits(&lanes, 2);
+        assert_eq!(unpack_bits(&bv, 2, false), lanes);
+    }
+
+    #[test]
+    fn pack_unpack_signed() {
+        let lanes = vec![-8, -1, 0, 7, 3, -5];
+        let bv = pack_bits(&lanes, 4);
+        assert_eq!(unpack_bits(&bv, 4, true), lanes);
+    }
+
+    #[test]
+    fn signed_truncation_wraps() {
+        // 9 in 4 bits unsigned = 0b1001 = -7 signed
+        let bv = pack_bits(&[9], 4);
+        assert_eq!(unpack_bits(&bv, 4, true), vec![-7]);
+    }
+
+    #[test]
+    fn xnor_popcount_matches_lanewise() {
+        let x = vec![1, 0, 1, 1, 0, 0, 1, 0, 1];
+        let w = vec![1, 1, 1, 0, 0, 1, 1, 0, 0];
+        let agree = x.iter().zip(&w).filter(|(a, b)| a == b).count() as u32;
+        assert_eq!(popcount_xnor_packed(&x, &w).unwrap(), agree);
+    }
+
+    #[test]
+    fn xnor_popcount_cross_word_boundary() {
+        // 100 bits forces two words + tail mask
+        let x: Vec<i32> = (0..100).map(|i| (i % 3 == 0) as i32).collect();
+        let w: Vec<i32> = (0..100).map(|i| (i % 2 == 0) as i32).collect();
+        let agree = x.iter().zip(&w).filter(|(a, b)| a == b).count() as u32;
+        assert_eq!(popcount_xnor_packed(&x, &w).unwrap(), agree);
+    }
+
+    #[test]
+    fn mismatched_lengths_rejected() {
+        let a = BitVec::zeros(5);
+        let b = BitVec::zeros(6);
+        assert!(a.xnor_popcount(&b).is_err());
+    }
+}

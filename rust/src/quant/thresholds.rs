@@ -1,0 +1,99 @@
+//! MultiThreshold activation — rust twin of `kernels/thresholds.py`.
+//!
+//! FINN absorbs quantized activations into per-channel ascending threshold
+//! comparisons: the output code is the number of thresholds the
+//! accumulator meets or exceeds.
+
+use anyhow::{bail, Result};
+
+/// Per-channel ascending thresholds: `t[ch][k]`.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Thresholds {
+    pub channels: usize,
+    pub steps: usize,
+    data: Vec<i32>,
+}
+
+impl Thresholds {
+    pub fn new(channels: usize, steps: usize, data: Vec<i32>) -> Result<Thresholds> {
+        if data.len() != channels * steps {
+            bail!("threshold data length {} != {channels}x{steps}", data.len());
+        }
+        let t = Thresholds { channels, steps, data };
+        for ch in 0..channels {
+            let row = t.row(ch);
+            if row.windows(2).any(|w| w[0] > w[1]) {
+                bail!("thresholds for channel {ch} are not ascending: {row:?}");
+            }
+        }
+        Ok(t)
+    }
+
+    pub fn from_rows(rows: &[Vec<i32>]) -> Result<Thresholds> {
+        let channels = rows.len();
+        let steps = rows.first().map_or(0, |r| r.len());
+        if rows.iter().any(|r| r.len() != steps) {
+            bail!("ragged threshold rows");
+        }
+        Thresholds::new(channels, steps, rows.concat())
+    }
+
+    #[inline]
+    pub fn row(&self, ch: usize) -> &[i32] {
+        &self.data[ch * self.steps..(ch + 1) * self.steps]
+    }
+
+    /// Apply to one channel's accumulator.
+    #[inline]
+    pub fn apply_one(&self, ch: usize, acc: i32) -> i32 {
+        self.row(ch).iter().filter(|&&t| acc >= t).count() as i32
+    }
+}
+
+/// Apply per-channel thresholds to an accumulator vector.
+pub fn multithreshold(acc: &[i32], t: &Thresholds) -> Result<Vec<i32>> {
+    if acc.len() != t.channels {
+        bail!("accumulator length {} != channels {}", acc.len(), t.channels);
+    }
+    Ok(acc.iter().enumerate().map(|(ch, &a)| t.apply_one(ch, a)).collect())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn basic_counting() {
+        let t = Thresholds::from_rows(&[vec![0, 5, 10], vec![-3, -1, 2]]).unwrap();
+        assert_eq!(multithreshold(&[7, 0], &t).unwrap(), vec![2, 2]);
+        assert_eq!(multithreshold(&[-100, 100], &t).unwrap(), vec![0, 3]);
+        assert_eq!(multithreshold(&[10, -3], &t).unwrap(), vec![3, 1]);
+    }
+
+    #[test]
+    fn boundary_is_inclusive() {
+        let t = Thresholds::from_rows(&[vec![4]]).unwrap();
+        assert_eq!(multithreshold(&[4], &t).unwrap(), vec![1]);
+        assert_eq!(multithreshold(&[3], &t).unwrap(), vec![0]);
+    }
+
+    #[test]
+    fn rejects_descending() {
+        assert!(Thresholds::from_rows(&[vec![5, 1]]).is_err());
+    }
+
+    #[test]
+    fn rejects_shape_mismatch() {
+        let t = Thresholds::from_rows(&[vec![0], vec![1]]).unwrap();
+        assert!(multithreshold(&[1, 2, 3], &t).is_err());
+    }
+
+    #[test]
+    fn output_range_is_0_to_steps() {
+        let t = Thresholds::from_rows(&[vec![-1, 0, 1]]).unwrap();
+        for acc in -5..5 {
+            let v = multithreshold(&[acc], &t).unwrap()[0];
+            assert!((0..=3).contains(&v));
+        }
+    }
+}

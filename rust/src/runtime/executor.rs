@@ -1,0 +1,138 @@
+//! PJRT execution engine: HLO text -> compiled executable -> i32 tensors.
+
+use std::collections::BTreeMap;
+use std::path::Path;
+use std::sync::Mutex;
+
+use anyhow::{bail, Context, Result};
+
+use super::manifest::{ArtifactInfo, Manifest};
+
+/// A compiled artifact ready to execute.
+pub struct LoadedKernel {
+    pub info: ArtifactInfo,
+    exe: xla::PjRtLoadedExecutable,
+}
+
+impl LoadedKernel {
+    /// Execute on a flat i32 input of `info.in_shape`. Returns the flat
+    /// i32 output of `info.out_shape`.
+    pub fn run(&self, input: &[i32]) -> Result<Vec<i32>> {
+        let want: usize = self.info.in_shape.iter().product();
+        if input.len() != want {
+            bail!("{}: input length {} != shape {:?}", self.info.name, input.len(), self.info.in_shape);
+        }
+        let dims: Vec<i64> = self.info.in_shape.iter().map(|&d| d as i64).collect();
+        let lit = xla::Literal::vec1(input).reshape(&dims)?;
+        let result = self.exe.execute::<xla::Literal>(&[lit])?[0][0].to_literal_sync()?;
+        // aot.py lowers with return_tuple=True: unwrap the 1-tuple.
+        let out = result.to_tuple1()?;
+        let values = out.to_vec::<i32>()?;
+        let want_out: usize = self.info.out_shape.iter().product();
+        if values.len() != want_out {
+            bail!("{}: output length {} != shape {:?}", self.info.name, values.len(), self.info.out_shape);
+        }
+        Ok(values)
+    }
+}
+
+/// The engine: one PJRT CPU client + a compile cache keyed by artifact
+/// name. Compilation happens once; execution is lock-free (the cache lock
+/// only guards insertion).
+pub struct Engine {
+    client: xla::PjRtClient,
+    pub manifest: Manifest,
+    cache: Mutex<BTreeMap<String, std::sync::Arc<LoadedKernel>>>,
+}
+
+impl Engine {
+    /// Create an engine over an artifacts directory.
+    pub fn new(artifacts_dir: &Path) -> Result<Engine> {
+        let manifest = Manifest::load(artifacts_dir)?;
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(Engine { client, manifest, cache: Mutex::new(BTreeMap::new()) })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Load (compile-once) an artifact by manifest name.
+    pub fn load(&self, name: &str) -> Result<std::sync::Arc<LoadedKernel>> {
+        if let Some(k) = self.cache.lock().unwrap().get(name) {
+            return Ok(k.clone());
+        }
+        let info = self.manifest.find(name)?.clone();
+        let proto = xla::HloModuleProto::from_text_file(
+            info.path.to_str().context("artifact path not utf-8")?,
+        )
+        .with_context(|| format!("parsing HLO text {}", info.path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .with_context(|| format!("compiling artifact {name}"))?;
+        let kernel = std::sync::Arc::new(LoadedKernel { info, exe });
+        self.cache.lock().unwrap().insert(name.to_string(), kernel.clone());
+        Ok(kernel)
+    }
+
+    /// Number of compiled executables currently cached.
+    pub fn cached(&self) -> usize {
+        self.cache.lock().unwrap().len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::matvec;
+    use crate::runtime::default_artifacts_dir;
+    use crate::util::rng::Pcg32;
+
+    fn engine() -> Option<Engine> {
+        let dir = default_artifacts_dir();
+        dir.join("manifest.json").exists().then(|| Engine::new(&dir).unwrap())
+    }
+
+    #[test]
+    fn generic_standard_matches_reference() {
+        let Some(e) = engine() else { return };
+        let k = e.load("mvu_standard_b1").unwrap();
+        let gw = e.manifest.generic_weights().unwrap();
+        let w = &gw["mvu_standard"];
+        let mut rng = Pcg32::new(99);
+        let x: Vec<i32> = (0..w.cols).map(|_| rng.next_range(16) as i32 - 8).collect();
+        let got = k.run(&x).unwrap();
+        let want = matvec(&x, w, crate::cfg::SimdType::Standard).unwrap();
+        assert_eq!(got, want);
+    }
+
+    #[test]
+    fn xnor_artifact_matches_reference() {
+        let Some(e) = engine() else { return };
+        let k = e.load("mvu_xnor_b1").unwrap();
+        let gw = e.manifest.generic_weights().unwrap();
+        let w = &gw["mvu_xnor"];
+        let mut rng = Pcg32::new(100);
+        let x: Vec<i32> = (0..w.cols).map(|_| rng.next_range(2) as i32).collect();
+        let got = k.run(&x).unwrap();
+        let want = matvec(&x, w, crate::cfg::SimdType::Xnor).unwrap();
+        assert_eq!(got, want);
+    }
+
+    #[test]
+    fn compile_cache_reuses() {
+        let Some(e) = engine() else { return };
+        let _ = e.load("mvu_binary_b1").unwrap();
+        let _ = e.load("mvu_binary_b1").unwrap();
+        assert_eq!(e.cached(), 1);
+    }
+
+    #[test]
+    fn shape_validation() {
+        let Some(e) = engine() else { return };
+        let k = e.load("mvu_standard_b1").unwrap();
+        assert!(k.run(&[0; 3]).is_err());
+    }
+}

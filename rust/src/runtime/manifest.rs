@@ -1,0 +1,255 @@
+//! Artifact manifest: the contract between the python compile path and the
+//! rust runtime (written by `aot.py`, parsed with the in-tree JSON module).
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+use crate::cfg::{LayerParams, SimdType};
+use crate::quant::{Matrix, Thresholds};
+use crate::util::json::Json;
+
+/// What an artifact computes.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ArtifactKind {
+    /// One MVU layer (matvec + optional thresholds).
+    Mvu,
+    /// The fused multi-layer network.
+    Network,
+    /// SWU + MVU convolution layer.
+    Conv,
+}
+
+impl ArtifactKind {
+    fn parse(s: &str) -> Result<ArtifactKind> {
+        Ok(match s {
+            "mvu" => ArtifactKind::Mvu,
+            "network" => ArtifactKind::Network,
+            "conv" => ArtifactKind::Conv,
+            other => bail!("unknown artifact kind {other:?}"),
+        })
+    }
+}
+
+/// One AOT-compiled artifact.
+#[derive(Debug, Clone)]
+pub struct ArtifactInfo {
+    pub name: String,
+    pub path: PathBuf,
+    pub kind: ArtifactKind,
+    pub batch: usize,
+    pub in_shape: Vec<usize>,
+    pub out_shape: Vec<usize>,
+    pub layer: Option<LayerParams>,
+}
+
+/// NID network metadata.
+#[derive(Debug, Clone)]
+pub struct NidInfo {
+    pub decision_threshold: i32,
+    pub layers: Vec<LayerParams>,
+}
+
+/// The parsed manifest.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub batch_sizes: Vec<usize>,
+    pub generic_seed: u64,
+    pub artifacts: Vec<ArtifactInfo>,
+    pub nid: Option<NidInfo>,
+}
+
+fn parse_layer(j: &Json) -> Result<LayerParams> {
+    let get = |k: &str| -> Result<usize> {
+        j.get(k).as_usize().with_context(|| format!("layer field {k}"))
+    };
+    let p = LayerParams {
+        name: j.get("name").as_str().unwrap_or("layer").to_string(),
+        ifm_ch: get("ifm_ch")?,
+        ifm_dim: get("ifm_dim")?,
+        ofm_ch: get("ofm_ch")?,
+        kernel_dim: get("kernel_dim")?,
+        pe: get("pe")?,
+        simd: get("simd")?,
+        simd_type: SimdType::parse(j.get("simd_type").as_str().context("simd_type")?)?,
+        weight_bits: get("weight_bits")? as u32,
+        input_bits: get("input_bits")? as u32,
+        output_bits: get("output_bits")? as u32,
+    };
+    p.validate()?;
+    Ok(p)
+}
+
+impl Manifest {
+    /// Load `manifest.json` from an artifacts directory.
+    pub fn load(dir: &Path) -> Result<Manifest> {
+        let text = std::fs::read_to_string(dir.join("manifest.json"))
+            .with_context(|| format!("reading {}/manifest.json (run `make artifacts`)", dir.display()))?;
+        let j = Json::parse(&text).context("parsing manifest.json")?;
+        let batch_sizes = j
+            .get("batch_sizes")
+            .as_arr()
+            .context("batch_sizes")?
+            .iter()
+            .map(|v| v.as_usize().context("batch size"))
+            .collect::<Result<Vec<_>>>()?;
+        let mut artifacts = Vec::new();
+        for a in j.get("artifacts").as_arr().context("artifacts")? {
+            let shape = |k: &str| -> Result<Vec<usize>> {
+                a.get(k)
+                    .as_arr()
+                    .with_context(|| format!("{k} of {}", a.get("name")))?
+                    .iter()
+                    .map(|v| v.as_usize().context("dim"))
+                    .collect()
+            };
+            let layer = if a.get("layer").is_null() { None } else { Some(parse_layer(a.get("layer"))?) };
+            artifacts.push(ArtifactInfo {
+                name: a.get("name").as_str().context("name")?.to_string(),
+                path: dir.join(a.get("path").as_str().context("path")?),
+                kind: ArtifactKind::parse(a.get("kind").as_str().context("kind")?)?,
+                batch: a.get("batch").as_usize().context("batch")?,
+                in_shape: shape("in_shape")?,
+                out_shape: shape("out_shape")?,
+                layer,
+            });
+        }
+        let nid = if j.get("nid").is_null() {
+            None
+        } else {
+            let n = j.get("nid");
+            let layers = n
+                .get("layers")
+                .as_arr()
+                .context("nid.layers")?
+                .iter()
+                .map(parse_layer)
+                .collect::<Result<Vec<_>>>()?;
+            Some(NidInfo {
+                decision_threshold: n.get("decision_threshold").as_i32().context("nid threshold")?,
+                layers,
+            })
+        };
+        Ok(Manifest {
+            dir: dir.to_path_buf(),
+            batch_sizes,
+            generic_seed: j.get("generic_seed").as_i64().unwrap_or(0) as u64,
+            artifacts,
+            nid,
+        })
+    }
+
+    /// Find an artifact by name.
+    pub fn find(&self, name: &str) -> Result<&ArtifactInfo> {
+        self.artifacts
+            .iter()
+            .find(|a| a.name == name)
+            .with_context(|| format!("artifact {name:?} not in manifest"))
+    }
+
+    /// All artifacts of one kind.
+    pub fn of_kind(&self, kind: ArtifactKind) -> Vec<&ArtifactInfo> {
+        self.artifacts.iter().filter(|a| a.kind == kind).collect()
+    }
+
+    /// Load the trained NID weights + thresholds (for sim cross-checks).
+    pub fn nid_weights(&self) -> Result<Vec<(Matrix, Option<Thresholds>)>> {
+        let text = std::fs::read_to_string(self.dir.join("nid_weights.json"))
+            .context("reading nid_weights.json")?;
+        let j = Json::parse(&text)?;
+        let mut out = Vec::new();
+        for l in j.get("layers").as_arr().context("layers")? {
+            let w = l.get("weights").as_matrix_i32().context("weights")?;
+            let m = Matrix::from_rows(&w)?;
+            let th = if l.get("thresholds").is_null() {
+                None
+            } else {
+                let rows = l.get("thresholds").as_matrix_i32().context("thresholds")?;
+                Some(Thresholds::from_rows(&rows)?)
+            };
+            out.push((m, th));
+        }
+        Ok(out)
+    }
+
+    /// Load the generic-artifact weights keyed by artifact base name.
+    pub fn generic_weights(&self) -> Result<BTreeMap<String, Matrix>> {
+        let text = std::fs::read_to_string(self.dir.join("generic_weights.json"))
+            .context("reading generic_weights.json")?;
+        let j = Json::parse(&text)?;
+        let mut out = BTreeMap::new();
+        for (k, v) in j.as_obj().context("object")? {
+            let rows = v.as_matrix_i32().with_context(|| format!("weights {k}"))?;
+            out.insert(k.clone(), Matrix::from_rows(&rows)?);
+        }
+        Ok(out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::default_artifacts_dir;
+
+    fn manifest() -> Option<Manifest> {
+        let dir = default_artifacts_dir();
+        dir.join("manifest.json").exists().then(|| Manifest::load(&dir).unwrap())
+    }
+
+    #[test]
+    fn loads_manifest_and_finds_artifacts() {
+        let Some(m) = manifest() else { return };
+        assert!(!m.batch_sizes.is_empty());
+        assert!(m.artifacts.len() >= 10);
+        let a = m.find("nid_layer0_b1").unwrap();
+        assert_eq!(a.in_shape, vec![1, 600]);
+        assert_eq!(a.out_shape, vec![1, 64]);
+        assert_eq!(a.kind, ArtifactKind::Mvu);
+        assert!(a.path.exists());
+        assert!(m.find("bogus").is_err());
+    }
+
+    #[test]
+    fn nid_metadata_matches_table6() {
+        let Some(m) = manifest() else { return };
+        let nid = m.nid.unwrap();
+        let expect = crate::cfg::nid_layers();
+        assert_eq!(nid.layers.len(), expect.len());
+        for (got, want) in nid.layers.iter().zip(&expect) {
+            assert_eq!(got.ifm_ch, want.ifm_ch);
+            assert_eq!(got.pe, want.pe);
+            assert_eq!(got.simd, want.simd);
+        }
+    }
+
+    #[test]
+    fn nid_weights_shapes() {
+        let Some(m) = manifest() else { return };
+        let ws = m.nid_weights().unwrap();
+        assert_eq!(ws.len(), 4);
+        assert_eq!(ws[0].0.rows, 64);
+        assert_eq!(ws[0].0.cols, 600);
+        assert!(ws[0].1.is_some());
+        assert!(ws[3].1.is_none());
+        // 2-bit weights
+        assert!(ws.iter().all(|(m, _)| m.in_range(-2, 1)));
+    }
+
+    #[test]
+    fn generic_weights_match_rng_parity() {
+        // aot.py generates generic weights from the shared PCG32 stream;
+        // regenerating them in rust must agree bit-exactly.
+        let Some(m) = manifest() else { return };
+        let gw = m.generic_weights().unwrap();
+        let standard = &gw["mvu_standard"];
+        let mut rng = crate::util::rng::Pcg32::new(m.generic_seed);
+        for r in 0..standard.rows {
+            for c in 0..standard.cols {
+                let expect = rng.next_range(16) as i32 - 8;
+                assert_eq!(standard.at(r, c), expect, "({r},{c})");
+            }
+        }
+    }
+}

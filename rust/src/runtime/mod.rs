@@ -1,0 +1,18 @@
+//! PJRT runtime: loads the AOT artifacts produced by `python/compile/aot.py`
+//! and executes them from the L3 hot path.
+//!
+//! Python never runs here — the interchange is HLO **text** (see
+//! DESIGN.md §8 and aot.py), compiled once per executable on the PJRT CPU
+//! client and cached for the lifetime of the engine.
+
+mod executor;
+mod manifest;
+
+pub use executor::{Engine, LoadedKernel};
+pub use manifest::{ArtifactInfo, ArtifactKind, Manifest, NidInfo};
+
+/// Default artifacts directory, resolved relative to the crate root so
+/// tests and examples work from any cwd.
+pub fn default_artifacts_dir() -> std::path::PathBuf {
+    std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+}

@@ -1,0 +1,198 @@
+//! AXI-Stream endpoints for stimulus and monitoring (paper Tab. 1).
+//!
+//! The protocol signals modeled are TVALID (master drives valid data),
+//! TREADY (slave can accept) and TDATA (a `SIMD`-lane word). A transfer
+//! happens in a cycle where both are asserted. `StallPattern` lets tests
+//! inject arbitrary valid/ready gaps — the paper's "intermittent
+//! availability of data" and "intermittent assertion of the ready signal"
+//! flow scenarios (§5.3.1).
+
+use crate::util::rng::Pcg32;
+
+/// A word on the stream: the parallel lanes transferred in one cycle.
+pub type Word = Vec<i32>;
+
+/// Deterministic stall schedule for an endpoint.
+#[derive(Debug, Clone)]
+pub enum StallPattern {
+    /// Never stall (valid/ready always asserted).
+    None,
+    /// Stall on cycles where `(cycle + phase) % period < duty`.
+    Periodic { period: usize, duty: usize, phase: usize },
+    /// Stall with probability `p_num/256` per cycle, from a seeded PRNG.
+    Random { seed: u64, p_num: u32 },
+    /// Explicit per-cycle schedule (true = stalled); repeats cyclically.
+    Schedule(Vec<bool>),
+}
+
+impl StallPattern {
+    /// Is the endpoint stalled at `cycle`?
+    pub fn stalled(&self, cycle: usize, rng: &mut Pcg32) -> bool {
+        match self {
+            StallPattern::None => false,
+            StallPattern::Periodic { period, duty, phase } => {
+                if *period == 0 {
+                    false
+                } else {
+                    (cycle + phase) % period < *duty
+                }
+            }
+            StallPattern::Random { p_num, .. } => rng.next_range(256) < *p_num,
+            StallPattern::Schedule(s) => {
+                if s.is_empty() {
+                    false
+                } else {
+                    s[cycle % s.len()]
+                }
+            }
+        }
+    }
+
+    /// PRNG used by `Random` (one per endpoint for reproducibility).
+    pub fn make_rng(&self) -> Pcg32 {
+        match self {
+            StallPattern::Random { seed, .. } => Pcg32::new(*seed),
+            _ => Pcg32::new(0),
+        }
+    }
+}
+
+/// Stream master: feeds a pre-computed sequence of words, honoring TREADY
+/// and its own stall pattern.
+#[derive(Debug)]
+pub struct AxisSource {
+    words: Vec<Word>,
+    next: usize,
+    pattern: StallPattern,
+    rng: Pcg32,
+    /// Cycles in which TVALID was high but TREADY was low (backpressure).
+    pub backpressure_cycles: usize,
+}
+
+impl AxisSource {
+    pub fn new(words: Vec<Word>, pattern: StallPattern) -> AxisSource {
+        let rng = pattern.make_rng();
+        AxisSource { words, next: 0, pattern, rng, backpressure_cycles: 0 }
+    }
+
+    /// TVALID && TDATA for this cycle (None = valid deasserted).
+    pub fn offer(&mut self, cycle: usize) -> Option<&Word> {
+        if self.stalled_now(cycle) || self.exhausted() {
+            None
+        } else {
+            Some(&self.words[self.next])
+        }
+    }
+
+    /// Advance the stall pattern for this cycle (separated from `peek` so
+    /// the harness can hold an immutable borrow of the word across the
+    /// DUT step without cloning — §Perf).
+    pub fn stalled_now(&mut self, cycle: usize) -> bool {
+        self.pattern.stalled(cycle, &mut self.rng)
+    }
+
+    /// The word currently at the head of the stream.
+    pub fn peek(&self) -> &[i32] {
+        &self.words[self.next]
+    }
+
+    /// Called when the slave asserted TREADY while we offered a word.
+    pub fn accept(&mut self) {
+        debug_assert!(self.next < self.words.len());
+        self.next += 1;
+    }
+
+    /// Called when we offered but the slave did not take the word.
+    pub fn note_backpressure(&mut self) {
+        self.backpressure_cycles += 1;
+    }
+
+    pub fn exhausted(&self) -> bool {
+        self.next >= self.words.len()
+    }
+
+    pub fn remaining(&self) -> usize {
+        self.words.len() - self.next
+    }
+}
+
+/// Stream slave: collects words, applying its own TREADY stall pattern.
+#[derive(Debug)]
+pub struct AxisSink {
+    pub received: Vec<Word>,
+    pattern: StallPattern,
+    rng: Pcg32,
+    /// Cycle index at which each word was accepted (for latency analysis).
+    pub accept_cycles: Vec<usize>,
+}
+
+impl AxisSink {
+    pub fn new(pattern: StallPattern) -> AxisSink {
+        let rng = pattern.make_rng();
+        AxisSink { received: Vec::new(), pattern, rng, accept_cycles: Vec::new() }
+    }
+
+    /// Is TREADY asserted this cycle?
+    pub fn ready(&mut self, cycle: usize) -> bool {
+        !self.pattern.stalled(cycle, &mut self.rng)
+    }
+
+    /// Accept a word (TVALID && TREADY transfer).
+    pub fn push(&mut self, w: Word, cycle: usize) {
+        self.received.push(w);
+        self.accept_cycles.push(cycle);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn source_respects_order_and_exhaustion() {
+        let mut s = AxisSource::new(vec![vec![1], vec![2]], StallPattern::None);
+        assert_eq!(s.offer(0), Some(&vec![1]));
+        s.accept();
+        assert_eq!(s.offer(1), Some(&vec![2]));
+        s.accept();
+        assert!(s.exhausted());
+        assert_eq!(s.offer(2), None);
+    }
+
+    #[test]
+    fn periodic_stall() {
+        let p = StallPattern::Periodic { period: 4, duty: 1, phase: 0 };
+        let mut rng = Pcg32::new(0);
+        let pat: Vec<bool> = (0..8).map(|c| p.stalled(c, &mut rng)).collect();
+        assert_eq!(pat, vec![true, false, false, false, true, false, false, false]);
+    }
+
+    #[test]
+    fn random_stall_is_reproducible() {
+        let p = StallPattern::Random { seed: 5, p_num: 128 };
+        let mut r1 = p.make_rng();
+        let mut r2 = p.make_rng();
+        let a: Vec<bool> = (0..64).map(|c| p.stalled(c, &mut r1)).collect();
+        let b: Vec<bool> = (0..64).map(|c| p.stalled(c, &mut r2)).collect();
+        assert_eq!(a, b);
+        assert!(a.iter().any(|&x| x) && a.iter().any(|&x| !x));
+    }
+
+    #[test]
+    fn schedule_repeats() {
+        let p = StallPattern::Schedule(vec![true, false]);
+        let mut rng = Pcg32::new(0);
+        assert!(p.stalled(0, &mut rng));
+        assert!(!p.stalled(1, &mut rng));
+        assert!(p.stalled(2, &mut rng));
+    }
+
+    #[test]
+    fn sink_records_cycles() {
+        let mut k = AxisSink::new(StallPattern::None);
+        assert!(k.ready(0));
+        k.push(vec![7], 3);
+        assert_eq!(k.received, vec![vec![7]]);
+        assert_eq!(k.accept_cycles, vec![3]);
+    }
+}

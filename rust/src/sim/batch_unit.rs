@@ -1,0 +1,143 @@
+//! The MVU batch unit (paper §5.2, Fig. 6 left): burned-in weight
+//! memories + control unit wrapping the stream unit.
+//!
+//! The batch unit's control sequences weight-memory reads for the stream
+//! unit (address `nf * SF + sf`, Eq. 2 layout) and is the level at which a
+//! complete layer (OD^2 input vectors per image) is processed.
+
+use anyhow::Result;
+
+use crate::cfg::LayerParams;
+use crate::quant::Matrix;
+
+use super::stream_unit::{MvuStream, StepOut, StreamStats};
+use super::weight_mem::WeightMem;
+
+/// A complete MVU: weight memories + stream unit.
+#[derive(Debug)]
+pub struct MvuBatch {
+    wmem: WeightMem,
+    stream: MvuStream,
+}
+
+impl MvuBatch {
+    pub fn new(params: &LayerParams, weights: &Matrix) -> Result<MvuBatch> {
+        Ok(MvuBatch {
+            wmem: WeightMem::from_matrix(params, weights)?,
+            stream: MvuStream::new(params)?,
+        })
+    }
+
+    pub fn with_fifo_depth(
+        params: &LayerParams,
+        weights: &Matrix,
+        fifo_depth: usize,
+    ) -> Result<MvuBatch> {
+        Ok(MvuBatch {
+            wmem: WeightMem::from_matrix(params, weights)?,
+            stream: MvuStream::with_fifo_depth(params, fifo_depth)?,
+        })
+    }
+
+    pub fn params(&self) -> &LayerParams {
+        self.stream.params()
+    }
+
+    pub fn stats(&self) -> &StreamStats {
+        &self.stream.stats
+    }
+
+    pub fn fifo_max_occupancy(&self) -> usize {
+        self.stream.fifo_max_occupancy()
+    }
+
+    pub fn drained(&self) -> bool {
+        self.stream.drained()
+    }
+
+    /// One clock cycle: forward the AXI input offer and output readiness.
+    pub fn step(&mut self, offered: Option<&[i32]>, out_ready: bool) -> StepOut {
+        self.stream.step(offered, &self.wmem, out_ready)
+    }
+
+    /// Split a flat input vector (length K^2*IC) into SIMD-wide stream
+    /// words, the on-wire format of the MVU input stream.
+    pub fn vector_to_words(params: &LayerParams, v: &[i32]) -> Vec<Vec<i32>> {
+        assert_eq!(v.len(), params.matrix_cols());
+        v.chunks(params.simd).map(|c| c.to_vec()).collect()
+    }
+
+    /// Reassemble output stream words (PE lanes, neuron-fold major) into a
+    /// flat output vector of OC channels.
+    pub fn words_to_vector(params: &LayerParams, words: &[Vec<i32>]) -> Vec<i32> {
+        assert_eq!(words.len(), params.neuron_fold());
+        words.concat()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cfg::SimdType;
+    use crate::quant::matvec;
+    use crate::util::rng::Pcg32;
+
+    /// Random weights in the legal range for a SIMD type.
+    pub fn random_weights(params: &LayerParams, seed: u64) -> Matrix {
+        let mut rng = Pcg32::new(seed);
+        let (r, c) = (params.matrix_rows(), params.matrix_cols());
+        let data: Vec<i32> = (0..r * c)
+            .map(|_| match params.simd_type {
+                SimdType::Xnor | SimdType::BinaryWeights => rng.next_range(2) as i32,
+                SimdType::Standard => {
+                    let span = 1u32 << params.weight_bits;
+                    rng.next_range(span) as i32 - (span / 2) as i32
+                }
+            })
+            .collect();
+        Matrix::new(r, c, data).unwrap()
+    }
+
+    fn random_input(params: &LayerParams, rng: &mut Pcg32) -> Vec<i32> {
+        (0..params.matrix_cols())
+            .map(|_| match params.simd_type {
+                SimdType::Xnor => rng.next_range(2) as i32,
+                _ => {
+                    let span = 1u32 << params.input_bits;
+                    rng.next_range(span) as i32 - (span / 2) as i32
+                }
+            })
+            .collect()
+    }
+
+    #[test]
+    fn all_simd_types_match_reference() {
+        for ty in SimdType::ALL {
+            let (wb, ib) = match ty {
+                SimdType::Xnor => (1, 1),
+                SimdType::BinaryWeights => (1, 4),
+                SimdType::Standard => (4, 4),
+            };
+            let p = LayerParams::fc("t", 16, 8, 4, 8, ty, wb, ib, 0);
+            let w = random_weights(&p, 3);
+            let mut mvu = MvuBatch::new(&p, &w).unwrap();
+            let mut rng = Pcg32::new(11);
+            let x = random_input(&p, &mut rng);
+            let words = MvuBatch::vector_to_words(&p, &x);
+            let mut outs = Vec::new();
+            let mut wi = 0;
+            for _ in 0..100 {
+                let offered = (wi < words.len()).then(|| words[wi].clone());
+                let r = mvu.step(offered.as_deref(), true);
+                if r.consumed_input {
+                    wi += 1;
+                }
+                if let Some(o) = r.emitted {
+                    outs.push(o);
+                }
+            }
+            let got = MvuBatch::words_to_vector(&p, &outs);
+            assert_eq!(got, matvec(&x, &w, ty).unwrap(), "simd type {ty}");
+        }
+    }
+}

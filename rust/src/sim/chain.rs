@@ -1,0 +1,381 @@
+//! Cycle-accurate simulation of a *chain* of MVUs — the full FINN
+//! dataflow accelerator (paper Fig. 5 backends), with real AXI
+//! backpressure between layers.
+//!
+//! Each layer's output stream words (PE lanes of accumulators) pass
+//! through the layer's thresholding unit and are re-chunked to the next
+//! layer's SIMD width by a width converter — exactly the on-chip stream
+//! plumbing FINN generates between MVTUs. The chain exposes the paper's
+//! end-to-end quantities: pipeline fill, steady-state initiation interval
+//! and the bottleneck layer.
+
+use anyhow::{bail, Result};
+
+use crate::cfg::LayerParams;
+use crate::quant::{Matrix, Thresholds};
+
+use super::batch_unit::MvuBatch;
+
+/// A stream-width converter: buffers lanes and re-chunks them.
+#[derive(Debug, Default)]
+struct WidthConverter {
+    buf: std::collections::VecDeque<i32>,
+    out_width: usize,
+    capacity: usize,
+}
+
+impl WidthConverter {
+    fn new(out_width: usize, capacity_words: usize) -> WidthConverter {
+        WidthConverter {
+            buf: std::collections::VecDeque::new(),
+            out_width,
+            capacity: capacity_words * out_width,
+        }
+    }
+
+    fn can_accept(&self, lanes: usize) -> bool {
+        self.buf.len() + lanes <= self.capacity
+    }
+
+    fn push(&mut self, word: &[i32]) {
+        debug_assert!(self.can_accept(word.len()));
+        self.buf.extend(word.iter().copied());
+    }
+
+    fn peek(&self) -> Option<Vec<i32>> {
+        (self.buf.len() >= self.out_width)
+            .then(|| self.buf.iter().take(self.out_width).copied().collect())
+    }
+
+    fn pop(&mut self) {
+        for _ in 0..self.out_width {
+            self.buf.pop_front();
+        }
+    }
+}
+
+/// One stage of the chain: the MVU plus its (optional) thresholding and
+/// the converter feeding the next stage.
+struct Stage {
+    mvu: MvuBatch,
+    thresholds: Option<Thresholds>,
+    conv: WidthConverter,
+    /// Output channel cursor for threshold application (words arrive in
+    /// neuron-fold order: word nf covers channels nf*PE..nf*PE+PE).
+    nf_cursor: usize,
+}
+
+/// Per-layer statistics after a chain run.
+#[derive(Debug, Clone)]
+pub struct ChainLayerStats {
+    pub name: String,
+    pub stall_cycles: usize,
+    pub slots_consumed: usize,
+}
+
+/// Result of a chain simulation.
+#[derive(Debug, Clone)]
+pub struct ChainReport {
+    /// Final network outputs, one vector per input vector.
+    pub outputs: Vec<Vec<i32>>,
+    /// Cycle at which the first output word left the last layer
+    /// (pipeline fill latency).
+    pub first_out_cycle: usize,
+    /// Total cycles until the last output word.
+    pub exec_cycles: usize,
+    pub layer_stats: Vec<ChainLayerStats>,
+}
+
+/// A chain of MVU layers simulated cycle by cycle.
+pub struct MvuChain {
+    stages: Vec<Stage>,
+    params: Vec<LayerParams>,
+}
+
+impl MvuChain {
+    /// Build from per-layer (params, weights, thresholds). Layer i's
+    /// output channel count must equal layer i+1's input vector length.
+    pub fn new(
+        layers: Vec<(LayerParams, Matrix, Option<Thresholds>)>,
+    ) -> Result<MvuChain> {
+        if layers.is_empty() {
+            bail!("empty chain");
+        }
+        for w in layers.windows(2) {
+            let (a, b) = (&w[0].0, &w[1].0);
+            if a.matrix_rows() != b.matrix_cols() {
+                bail!(
+                    "chain mismatch: {} produces {} channels, {} consumes {}",
+                    a.name,
+                    a.matrix_rows(),
+                    b.name,
+                    b.matrix_cols()
+                );
+            }
+        }
+        let mut stages = Vec::new();
+        let mut params = Vec::new();
+        let n = layers.len();
+        for (i, (p, w, th)) in layers.into_iter().enumerate() {
+            if let Some(t) = &th {
+                if t.channels != p.matrix_rows() {
+                    bail!("{}: thresholds for {} channels, MVU has {}", p.name, t.channels, p.matrix_rows());
+                }
+            }
+            // the converter feeds the NEXT layer's SIMD width; the last
+            // stage re-chunks to the full output vector.
+            let out_width = p.matrix_rows().min(usize::MAX);
+            let _ = out_width;
+            stages.push(Stage {
+                mvu: MvuBatch::new(&p, &w)?,
+                thresholds: th,
+                conv: WidthConverter::new(0, 0), // fixed up below
+                nf_cursor: 0,
+            });
+            params.push(p);
+            let _ = i;
+            let _ = n;
+        }
+        // wire converters: stage i feeds stage i+1's SIMD width
+        for i in 0..stages.len() {
+            let out_width = if i + 1 < stages.len() {
+                params[i + 1].simd
+            } else {
+                params[i].matrix_rows()
+            };
+            // capacity: a couple of full vectors of slack
+            let cap_words = 2 * params[i].matrix_rows().div_ceil(out_width).max(2);
+            stages[i].conv = WidthConverter::new(out_width, cap_words);
+        }
+        Ok(MvuChain { stages, params })
+    }
+
+    /// Run the chain over input vectors (each of layer-0 length).
+    pub fn run(&mut self, inputs: &[Vec<i32>]) -> Result<ChainReport> {
+        let p0 = &self.params[0];
+        let in_words: Vec<Vec<i32>> = inputs
+            .iter()
+            .flat_map(|v| MvuBatch::vector_to_words(p0, v))
+            .collect();
+        let last = self.stages.len() - 1;
+        let out_len = self.params[last].matrix_rows();
+        let expected = inputs.len();
+
+        let mut fed = 0usize;
+        let mut outputs: Vec<Vec<i32>> = Vec::with_capacity(expected);
+        let mut current: Vec<i32> = Vec::with_capacity(out_len);
+        let mut first_out_cycle = None;
+        let mut cycle = 0usize;
+        let max_cycles = 1_000_000usize + expected * 100_000;
+
+        while outputs.len() < expected {
+            if cycle > max_cycles {
+                bail!("chain deadlock after {cycle} cycles ({}/{expected} outputs)", outputs.len());
+            }
+            // step stages from the LAST to the FIRST so that a word popped
+            // downstream frees space upstream within the same cycle order
+            // (classic reverse-order pipeline update).
+            for i in (0..self.stages.len()).rev() {
+                // input offer for stage i
+                let offered: Option<Vec<i32>> = if i == 0 {
+                    (fed < in_words.len()).then(|| in_words[fed].clone())
+                } else {
+                    self.stages[i - 1].conv.peek()
+                };
+                // downstream readiness for stage i: the width converter
+                // must be able to absorb one output word (PE lanes).
+                let lanes = self.params[i].pe;
+                let ready = self.stages[i].conv.can_accept(lanes);
+                let r = self.stages[i].mvu.step(offered.as_deref(), ready);
+                if r.consumed_input {
+                    if i == 0 {
+                        fed += 1;
+                    } else {
+                        self.stages[i - 1].conv.pop();
+                    }
+                }
+                if let Some(word) = r.emitted {
+                    // apply thresholding (the T of the MVTU) lane-wise
+                    let stage = &mut self.stages[i];
+                    let pe = self.params[i].pe;
+                    let base = stage.nf_cursor * pe;
+                    let processed: Vec<i32> = match &stage.thresholds {
+                        Some(t) => word
+                            .iter()
+                            .enumerate()
+                            .map(|(k, &acc)| t.apply_one(base + k, acc))
+                            .collect(),
+                        None => word,
+                    };
+                    stage.nf_cursor = (stage.nf_cursor + 1) % self.params[i].neuron_fold();
+                    stage.conv.push(&processed);
+                }
+            }
+            // drain the last stage's converter into full output vectors
+            while let Some(chunk) = self.stages[last].conv.peek() {
+                self.stages[last].conv.pop();
+                current.extend(chunk);
+                if first_out_cycle.is_none() {
+                    first_out_cycle = Some(cycle);
+                }
+                if current.len() == out_len {
+                    outputs.push(std::mem::take(&mut current));
+                }
+            }
+            cycle += 1;
+        }
+
+        let layer_stats = self
+            .stages
+            .iter()
+            .zip(&self.params)
+            .map(|(s, p)| ChainLayerStats {
+                name: p.name.clone(),
+                stall_cycles: s.mvu.stats().stall_cycles,
+                slots_consumed: s.mvu.stats().slots_consumed,
+            })
+            .collect();
+        Ok(ChainReport {
+            outputs,
+            first_out_cycle: first_out_cycle.unwrap_or(0),
+            exec_cycles: cycle,
+            layer_stats,
+        })
+    }
+
+    /// Analytic steady-state initiation interval: the bottleneck layer's
+    /// fold (paper: the folding pass balances exactly this).
+    pub fn bottleneck_ii(&self) -> usize {
+        self.params
+            .iter()
+            .map(|p| p.synapse_fold() * p.neuron_fold() * p.output_pixels())
+            .max()
+            .unwrap_or(0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cfg::SimdType;
+    use crate::quant::{matvec, multithreshold};
+    use crate::util::rng::Pcg32;
+
+    fn layer(name: &str, fin: usize, fout: usize, pe: usize, simd: usize, seed: u64,
+             with_th: bool) -> (LayerParams, Matrix, Option<Thresholds>) {
+        let p = LayerParams::fc(name, fin, fout, pe, simd, SimdType::Standard, 2, 2, if with_th { 2 } else { 0 });
+        let mut rng = Pcg32::new(seed);
+        let w = Matrix::new(
+            fout,
+            fin,
+            (0..fin * fout).map(|_| rng.next_range(4) as i32 - 2).collect(),
+        )
+        .unwrap();
+        let th = with_th.then(|| {
+            Thresholds::from_rows(
+                &(0..fout)
+                    .map(|_| {
+                        let mut t: Vec<i32> =
+                            (0..3).map(|_| rng.next_range(16) as i32 - 8).collect();
+                        t.sort();
+                        t
+                    })
+                    .collect::<Vec<_>>(),
+            )
+            .unwrap()
+        });
+        (p, w, th)
+    }
+
+    fn reference(
+        layers: &[(LayerParams, Matrix, Option<Thresholds>)],
+        x: &[i32],
+    ) -> Vec<i32> {
+        let mut v = x.to_vec();
+        for (p, w, th) in layers {
+            let acc = matvec(&v, w, p.simd_type).unwrap();
+            v = match th {
+                Some(t) => multithreshold(&acc, t).unwrap(),
+                None => acc,
+            };
+        }
+        v
+    }
+
+    #[test]
+    fn two_layer_chain_matches_reference() {
+        let layers = vec![
+            layer("l0", 16, 8, 2, 4, 1, true),
+            layer("l1", 8, 4, 2, 2, 2, false),
+        ];
+        let mut chain = MvuChain::new(layers.clone()).unwrap();
+        let mut rng = Pcg32::new(9);
+        let inputs: Vec<Vec<i32>> = (0..6)
+            .map(|_| (0..16).map(|_| rng.next_range(4) as i32).collect())
+            .collect();
+        let rep = chain.run(&inputs).unwrap();
+        assert_eq!(rep.outputs.len(), 6);
+        for (x, y) in inputs.iter().zip(&rep.outputs) {
+            assert_eq!(y, &reference(&layers, x));
+        }
+        assert!(rep.first_out_cycle < rep.exec_cycles);
+    }
+
+    #[test]
+    fn nid_chain_cycle_accurate() {
+        // the real Table 6 geometry with random int2 weights
+        let specs = crate::cfg::nid_layers();
+        let mut rng = Pcg32::new(77);
+        let layers: Vec<(LayerParams, Matrix, Option<Thresholds>)> = specs
+            .iter()
+            .map(|p| {
+                let w = Matrix::new(
+                    p.matrix_rows(),
+                    p.matrix_cols(),
+                    (0..p.matrix_rows() * p.matrix_cols())
+                        .map(|_| rng.next_range(4) as i32 - 2)
+                        .collect(),
+                )
+                .unwrap();
+                let th = (p.output_bits > 0).then(|| {
+                    Thresholds::from_rows(
+                        &(0..p.matrix_rows())
+                            .map(|_| {
+                                let mut t: Vec<i32> = (0..3)
+                                    .map(|_| rng.next_range(60) as i32 - 30)
+                                    .collect();
+                                t.sort();
+                                t
+                            })
+                            .collect::<Vec<_>>(),
+                    )
+                    .unwrap()
+                });
+                (p.clone(), w, th)
+            })
+            .collect();
+        let mut chain = MvuChain::new(layers.clone()).unwrap();
+        let inputs: Vec<Vec<i32>> = (0..4)
+            .map(|_| (0..600).map(|_| rng.next_range(4) as i32).collect())
+            .collect();
+        let rep = chain.run(&inputs).unwrap();
+        for (x, y) in inputs.iter().zip(&rep.outputs) {
+            assert_eq!(y, &reference(&layers, x));
+        }
+        // steady state: bottleneck II is layer3's SF*NF = 8... layer0 is 12.
+        assert_eq!(chain.bottleneck_ii(), 12);
+        // pipeline overlap: total cycles well below sum of per-layer runs
+        let serial: usize = specs.iter().map(|p| p.analytic_cycles(4) * 4).sum();
+        assert!(
+            rep.exec_cycles < serial,
+            "chain {} should beat serial {serial}",
+            rep.exec_cycles
+        );
+    }
+
+    #[test]
+    fn chain_rejects_mismatched_layers() {
+        let layers = vec![layer("a", 16, 8, 2, 4, 1, false), layer("b", 9, 4, 2, 3, 2, false)];
+        assert!(MvuChain::new(layers).is_err());
+    }
+}

@@ -1,0 +1,226 @@
+//! Clocked test harness: drives an MVU with AXI stimulus and collects a
+//! cycle-accurate report.
+
+use anyhow::{bail, Result};
+
+use crate::cfg::LayerParams;
+use crate::quant::Matrix;
+
+use super::axis::{AxisSink, AxisSource, StallPattern};
+use super::batch_unit::MvuBatch;
+
+/// Outcome of a simulation run.
+#[derive(Debug, Clone)]
+pub struct SimReport {
+    /// Output vectors (one per input vector, OC channels each).
+    pub outputs: Vec<Vec<i32>>,
+    /// Total cycles simulated until the last output was accepted
+    /// (inclusive): the paper's "execution cycles" metric.
+    pub exec_cycles: usize,
+    /// Cycles in which the datapath stalled on output backpressure.
+    pub stall_cycles: usize,
+    /// Cycles the source offered data that was not accepted.
+    pub source_backpressure_cycles: usize,
+    /// Compute slots consumed (must equal SF*NF*n_vectors).
+    pub slots_consumed: usize,
+    /// Output FIFO high-water mark.
+    pub fifo_max_occupancy: usize,
+}
+
+/// Simulate the MVU over `vectors` (each of length K^2*IC) with ideal
+/// stimulus (always-valid source, always-ready sink).
+pub fn run_mvu(params: &LayerParams, weights: &Matrix, vectors: &[Vec<i32>]) -> Result<SimReport> {
+    run_mvu_stalled(params, weights, vectors, StallPattern::None, StallPattern::None)
+}
+
+/// Simulate with stall patterns injected on the input (TVALID gaps) and
+/// output (TREADY gaps) — the paper's §5.3.1 flow-control scenarios.
+pub fn run_mvu_stalled(
+    params: &LayerParams,
+    weights: &Matrix,
+    vectors: &[Vec<i32>],
+    in_stall: StallPattern,
+    out_stall: StallPattern,
+) -> Result<SimReport> {
+    run_mvu_fifo(params, weights, vectors, in_stall, out_stall, super::DEFAULT_FIFO_DEPTH)
+}
+
+/// Full-control variant: stall patterns plus an explicit output-FIFO depth
+/// (the §5.3.2 decoupling ablation).
+pub fn run_mvu_fifo(
+    params: &LayerParams,
+    weights: &Matrix,
+    vectors: &[Vec<i32>],
+    in_stall: StallPattern,
+    out_stall: StallPattern,
+    fifo_depth: usize,
+) -> Result<SimReport> {
+    let mut mvu = MvuBatch::with_fifo_depth(params, weights, fifo_depth)?;
+    let words: Vec<Vec<i32>> = vectors
+        .iter()
+        .flat_map(|v| MvuBatch::vector_to_words(params, v))
+        .collect();
+    let mut source = AxisSource::new(words, in_stall);
+    let mut sink = AxisSink::new(out_stall);
+
+    let expected_words = vectors.len() * params.neuron_fold();
+    // generous deadlock bound: ideal cycles x 16 + constant slack
+    let max_cycles = params
+        .analytic_cycles(super::PIPELINE_STAGES)
+        .saturating_mul(vectors.len().max(1))
+        .saturating_mul(16)
+        + 4096;
+
+    let mut last_out_cycle = 0usize;
+    let mut cycle = 0usize;
+    while sink.received.len() < expected_words {
+        if cycle > max_cycles {
+            bail!(
+                "simulation deadlock: {}/{} output words after {} cycles",
+                sink.received.len(),
+                expected_words,
+                cycle
+            );
+        }
+        let has_offer = !source.exhausted() && !source.stalled_now(cycle);
+        let ready = sink.ready(cycle);
+        let offered: Option<&[i32]> = has_offer.then(|| source.peek());
+        let r = mvu.step(offered, ready);
+        if r.consumed_input {
+            source.accept();
+        } else if has_offer {
+            source.note_backpressure();
+        }
+        if let Some(word) = r.emitted {
+            sink.push(word, cycle);
+            last_out_cycle = cycle;
+        }
+        cycle += 1;
+    }
+    if !mvu.drained() {
+        bail!("simulation finished with data still in flight");
+    }
+
+    let nf = params.neuron_fold();
+    let outputs: Vec<Vec<i32>> = sink
+        .received
+        .chunks(nf)
+        .map(|chunk| MvuBatch::words_to_vector(params, chunk))
+        .collect();
+    let stats = mvu.stats();
+    Ok(SimReport {
+        outputs,
+        exec_cycles: last_out_cycle + 1,
+        stall_cycles: stats.stall_cycles,
+        source_backpressure_cycles: source.backpressure_cycles,
+        slots_consumed: stats.slots_consumed,
+        fifo_max_occupancy: mvu.fifo_max_occupancy(),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cfg::{nid_layers, SimdType};
+    use crate::quant::matvec;
+    use crate::util::rng::Pcg32;
+
+    fn rand_matrix(params: &LayerParams, seed: u64) -> Matrix {
+        let mut rng = Pcg32::new(seed);
+        let (r, c) = (params.matrix_rows(), params.matrix_cols());
+        let data = (0..r * c)
+            .map(|_| match params.simd_type {
+                SimdType::Xnor | SimdType::BinaryWeights => rng.next_range(2) as i32,
+                SimdType::Standard => {
+                    let span = 1u32 << params.weight_bits;
+                    rng.next_range(span) as i32 - (span / 2) as i32
+                }
+            })
+            .collect();
+        Matrix::new(r, c, data).unwrap()
+    }
+
+    fn rand_vec(params: &LayerParams, rng: &mut Pcg32) -> Vec<i32> {
+        (0..params.matrix_cols())
+            .map(|_| match params.simd_type {
+                SimdType::Xnor => rng.next_range(2) as i32,
+                _ => {
+                    let span = 1u32 << params.input_bits;
+                    rng.next_range(span) as i32 - (span / 2) as i32
+                }
+            })
+            .collect()
+    }
+
+    #[test]
+    fn nid_layer_cycles_match_paper_table7() {
+        // paper Table 7 RTL execution cycles: 17, 13, 13, 13
+        let expect = [17usize, 13, 13, 13];
+        for (params, want) in nid_layers().iter().zip(expect) {
+            let w = rand_matrix(params, 1);
+            let mut rng = Pcg32::new(2);
+            let x = (0..params.matrix_cols())
+                .map(|_| rng.next_range(4) as i32)
+                .collect::<Vec<_>>();
+            let rep = run_mvu(params, &w, &[x]).unwrap();
+            assert_eq!(rep.exec_cycles, want, "{}", params.name);
+        }
+    }
+
+    #[test]
+    fn multi_vector_streaming_keeps_ii1() {
+        let p = LayerParams::fc("t", 16, 8, 4, 8, SimdType::Standard, 4, 4, 0);
+        let w = rand_matrix(&p, 5);
+        let mut rng = Pcg32::new(6);
+        let vecs: Vec<Vec<i32>> = (0..10).map(|_| rand_vec(&p, &mut rng)).collect();
+        let rep = run_mvu(&p, &w, &vecs).unwrap();
+        // back-to-back: 10 vectors x SF*NF slots + fill
+        let slots = p.synapse_fold() * p.neuron_fold() * 10;
+        assert_eq!(rep.exec_cycles, slots + super::super::PIPELINE_STAGES + 1);
+        for (x, y) in vecs.iter().zip(&rep.outputs) {
+            assert_eq!(y, &matvec(x, &w, p.simd_type).unwrap());
+        }
+    }
+
+    #[test]
+    fn random_stalls_preserve_results() {
+        let p = LayerParams::fc("t", 16, 8, 2, 4, SimdType::Standard, 4, 4, 0);
+        let w = rand_matrix(&p, 7);
+        let mut rng = Pcg32::new(8);
+        let vecs: Vec<Vec<i32>> = (0..5).map(|_| rand_vec(&p, &mut rng)).collect();
+        let rep = run_mvu_stalled(
+            &p,
+            &w,
+            &vecs,
+            StallPattern::Random { seed: 21, p_num: 100 },
+            StallPattern::Random { seed: 22, p_num: 100 },
+        )
+        .unwrap();
+        for (x, y) in vecs.iter().zip(&rep.outputs) {
+            assert_eq!(y, &matvec(x, &w, p.simd_type).unwrap());
+        }
+        assert!(rep.exec_cycles > vecs.len() * p.synapse_fold() * p.neuron_fold());
+    }
+
+    #[test]
+    fn heavy_backpressure_engages_fifo() {
+        let p = LayerParams::fc("t", 8, 8, 8, 8, SimdType::Standard, 4, 4, 0);
+        // SF=1: a result every cycle, sink mostly stalled -> FIFO fills.
+        let w = rand_matrix(&p, 9);
+        let mut rng = Pcg32::new(10);
+        let vecs: Vec<Vec<i32>> = (0..8).map(|_| rand_vec(&p, &mut rng)).collect();
+        let rep = run_mvu_stalled(
+            &p,
+            &w,
+            &vecs,
+            StallPattern::None,
+            StallPattern::Periodic { period: 8, duty: 7, phase: 0 },
+        )
+        .unwrap();
+        assert!(rep.fifo_max_occupancy >= 2, "fifo high-water {}", rep.fifo_max_occupancy);
+        assert!(rep.stall_cycles > 0);
+        for (x, y) in vecs.iter().zip(&rep.outputs) {
+            assert_eq!(y, &matvec(x, &w, p.simd_type).unwrap());
+        }
+    }
+}

@@ -1,0 +1,85 @@
+//! The small output-decoupling FIFO (paper §5.3.2).
+//!
+//! "Instead of halting the computation immediately upon back-pressure, the
+//! computation is allowed to proceed for a few cycles while a small
+//! temporary FIFO buffer captures the produced output."
+
+use std::collections::VecDeque;
+
+/// Bounded FIFO with occupancy tracking.
+#[derive(Debug, Clone)]
+pub struct Fifo<T> {
+    cap: usize,
+    q: VecDeque<T>,
+    /// High-water mark (for EXPERIMENTS.md occupancy stats).
+    pub max_occupancy: usize,
+}
+
+impl<T> Fifo<T> {
+    pub fn new(cap: usize) -> Fifo<T> {
+        assert!(cap > 0, "FIFO capacity must be positive");
+        Fifo { cap, q: VecDeque::with_capacity(cap), max_occupancy: 0 }
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.cap
+    }
+
+    pub fn len(&self) -> usize {
+        self.q.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.q.is_empty()
+    }
+
+    pub fn is_full(&self) -> bool {
+        self.q.len() >= self.cap
+    }
+
+    /// Free slots.
+    pub fn room(&self) -> usize {
+        self.cap - self.q.len()
+    }
+
+    pub fn push(&mut self, v: T) {
+        assert!(!self.is_full(), "FIFO overflow");
+        self.q.push_back(v);
+        self.max_occupancy = self.max_occupancy.max(self.q.len());
+    }
+
+    pub fn pop(&mut self) -> Option<T> {
+        self.q.pop_front()
+    }
+
+    pub fn front(&self) -> Option<&T> {
+        self.q.front()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fifo_order_and_bounds() {
+        let mut f = Fifo::new(2);
+        assert!(f.is_empty());
+        f.push(1);
+        f.push(2);
+        assert!(f.is_full());
+        assert_eq!(f.room(), 0);
+        assert_eq!(f.pop(), Some(1));
+        assert_eq!(f.pop(), Some(2));
+        assert_eq!(f.pop(), None);
+        assert_eq!(f.max_occupancy, 2);
+    }
+
+    #[test]
+    #[should_panic]
+    fn overflow_panics() {
+        let mut f = Fifo::new(1);
+        f.push(1);
+        f.push(2);
+    }
+}

@@ -1,0 +1,195 @@
+//! The three-state Mealy machine controlling the MVU stream unit
+//! (paper Fig. 7).
+//!
+//! States: IDLE (reset / backpressure / no input), WRITE (new input data is
+//! written to the input buffer *and* presented to the PEs), READ (buffered
+//! data is re-used for the remaining neuron folds). Transitions depend on
+//! input availability (TVALID), buffer fill (INP_BUF_FULL), computation
+//! completion (COMP_DONE) and downstream stall.
+
+/// FSM states, named as in Fig. 7.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FsmState {
+    Idle,
+    Write,
+    Read,
+}
+
+/// Mealy inputs sampled each cycle.
+#[derive(Debug, Clone, Copy)]
+pub struct FsmInputs {
+    /// Upstream TVALID: a new input word is offered.
+    pub in_valid: bool,
+    /// INP_BUF_FULL: all SF words of the current vector are buffered.
+    pub inp_buf_full: bool,
+    /// COMP_DONE: all NF neuron folds of the current vector consumed.
+    pub comp_done: bool,
+    /// Downstream stall: the output FIFO cannot absorb further results.
+    pub stalled: bool,
+}
+
+/// The Mealy machine. `step` returns the next state plus the action for
+/// this cycle (consume an input word / read a buffered word / nothing).
+#[derive(Debug, Clone)]
+pub struct MvuFsm {
+    pub state: FsmState,
+}
+
+/// What the control unit does in the current cycle.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FsmAction {
+    /// No compute slot this cycle.
+    Nothing,
+    /// Accept the offered input word: write it to the buffer and present
+    /// it to the PEs (WRITE state behaviour).
+    ConsumeInput,
+    /// Read the next buffered word and present it to the PEs (READ state).
+    ReadBuffer,
+}
+
+impl Default for MvuFsm {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl MvuFsm {
+    pub fn new() -> MvuFsm {
+        MvuFsm { state: FsmState::Idle }
+    }
+
+    /// One clock cycle: Mealy output (action) + state transition.
+    pub fn step(&mut self, i: FsmInputs) -> FsmAction {
+        use FsmAction::*;
+        use FsmState::*;
+        let (action, next) = match self.state {
+            Idle => {
+                if i.stalled {
+                    (Nothing, Idle)
+                } else if i.in_valid && (!i.inp_buf_full || i.comp_done) {
+                    // new data available and the buffer can take it (still
+                    // filling, or the previous vector is fully processed
+                    // and will be overwritten) -> start/continue filling
+                    (ConsumeInput, Write)
+                } else if i.inp_buf_full && !i.comp_done {
+                    // buffered vector still has folds to process
+                    (ReadBuffer, Read)
+                } else {
+                    (Nothing, Idle)
+                }
+            }
+            Write => {
+                if i.stalled {
+                    (Nothing, Idle)
+                } else if !i.inp_buf_full && i.in_valid {
+                    (ConsumeInput, Write)
+                } else if i.inp_buf_full && !i.comp_done {
+                    (ReadBuffer, Read)
+                } else if i.inp_buf_full && i.comp_done {
+                    // NF == 1: vector done exactly as the buffer filled.
+                    if i.in_valid {
+                        (ConsumeInput, Write)
+                    } else {
+                        (Nothing, Idle)
+                    }
+                } else {
+                    // waiting for data from the preceding layer
+                    (Nothing, Idle)
+                }
+            }
+            Read => {
+                if i.stalled {
+                    (Nothing, Idle)
+                } else if !i.comp_done {
+                    (ReadBuffer, Read)
+                } else if i.in_valid {
+                    // done re-using: next vector starts filling
+                    (ConsumeInput, Write)
+                } else {
+                    (Nothing, Idle)
+                }
+            }
+        };
+        self.state = next;
+        action
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn inp(in_valid: bool, full: bool, done: bool, stalled: bool) -> FsmInputs {
+        FsmInputs { in_valid, inp_buf_full: full, comp_done: done, stalled }
+    }
+
+    #[test]
+    fn starts_idle_moves_to_write_on_valid() {
+        let mut f = MvuFsm::new();
+        assert_eq!(f.state, FsmState::Idle);
+        let a = f.step(inp(true, false, false, false));
+        assert_eq!(a, FsmAction::ConsumeInput);
+        assert_eq!(f.state, FsmState::Write);
+    }
+
+    #[test]
+    fn idle_when_no_input() {
+        let mut f = MvuFsm::new();
+        assert_eq!(f.step(inp(false, false, false, false)), FsmAction::Nothing);
+        assert_eq!(f.state, FsmState::Idle);
+    }
+
+    #[test]
+    fn write_to_read_on_buffer_full() {
+        let mut f = MvuFsm::new();
+        f.step(inp(true, false, false, false)); // -> Write
+        let a = f.step(inp(true, true, false, false)); // buffer filled, folds remain
+        assert_eq!(a, FsmAction::ReadBuffer);
+        assert_eq!(f.state, FsmState::Read);
+    }
+
+    #[test]
+    fn read_until_comp_done_then_next_vector() {
+        let mut f = MvuFsm::new();
+        f.step(inp(true, false, false, false)); // Write
+        f.step(inp(true, true, false, false)); // Read
+        assert_eq!(f.step(inp(true, true, false, false)), FsmAction::ReadBuffer);
+        // comp done + new input -> consume next vector immediately (II=1)
+        let a = f.step(inp(true, true, true, false));
+        assert_eq!(a, FsmAction::ConsumeInput);
+        assert_eq!(f.state, FsmState::Write);
+    }
+
+    #[test]
+    fn backpressure_forces_idle() {
+        let mut f = MvuFsm::new();
+        f.step(inp(true, false, false, false)); // Write
+        assert_eq!(f.step(inp(true, false, false, true)), FsmAction::Nothing);
+        assert_eq!(f.state, FsmState::Idle);
+        // recovers once stall clears
+        assert_eq!(f.step(inp(true, false, false, false)), FsmAction::ConsumeInput);
+        assert_eq!(f.state, FsmState::Write);
+    }
+
+    #[test]
+    fn starved_write_goes_idle_and_resumes() {
+        let mut f = MvuFsm::new();
+        f.step(inp(true, false, false, false)); // Write
+        assert_eq!(f.step(inp(false, false, false, false)), FsmAction::Nothing);
+        assert_eq!(f.state, FsmState::Idle);
+        assert_eq!(f.step(inp(true, false, false, false)), FsmAction::ConsumeInput);
+    }
+
+    #[test]
+    fn idle_resumes_read_of_buffered_vector() {
+        // stall during READ drops to IDLE; on recovery the buffered folds
+        // must continue, not restart.
+        let mut f = MvuFsm::new();
+        f.step(inp(true, false, false, false)); // Write
+        f.step(inp(true, true, false, false)); // Read
+        f.step(inp(true, true, false, true)); // stalled -> Idle
+        assert_eq!(f.state, FsmState::Idle);
+        assert_eq!(f.step(inp(false, true, false, false)), FsmAction::ReadBuffer);
+        assert_eq!(f.state, FsmState::Read);
+    }
+}

@@ -1,0 +1,106 @@
+//! The MVU input buffer (paper §6.2.1).
+//!
+//! Depth `SF = K_d^2 * I_c / SIMD`, word width `SIMD * input_bits`. During
+//! WRITE the incoming words are stored (and simultaneously presented to
+//! the PEs, Fig. 7); during READ the buffered vector is replayed for the
+//! remaining neuron folds (Fig. 3). The paper attributes the HLS LUT
+//! blow-up to the multiplexer network synthesized for exactly this
+//! buffer's access pattern.
+
+/// Circular-fill input buffer.
+#[derive(Debug, Clone)]
+pub struct InputBuffer {
+    depth: usize,
+    words: Vec<Vec<i32>>,
+    /// Number of words of the current vector written so far.
+    wr: usize,
+    /// Read pointer used during READ replays.
+    rd: usize,
+}
+
+impl InputBuffer {
+    pub fn new(depth: usize) -> InputBuffer {
+        InputBuffer { depth, words: vec![Vec::new(); depth], wr: 0, rd: 0 }
+    }
+
+    pub fn depth(&self) -> usize {
+        self.depth
+    }
+
+    /// INP_BUF_FULL (Fig. 7).
+    pub fn full(&self) -> bool {
+        self.wr == self.depth
+    }
+
+    /// Write the next word of the current vector. Returns its slot index.
+    /// Slot storage is reused across vectors (no per-write allocation —
+    /// §Perf: this sits on the simulator's per-cycle path).
+    pub fn write(&mut self, word: &[i32]) -> usize {
+        debug_assert!(!self.full(), "write to full input buffer");
+        let slot = self.wr;
+        self.words[slot].clear();
+        self.words[slot].extend_from_slice(word);
+        self.wr += 1;
+        slot
+    }
+
+    /// Read the word at the replay pointer and advance it (wrapping at
+    /// depth so successive neuron folds replay the vector in order).
+    pub fn read_next(&mut self) -> &[i32] {
+        debug_assert!(self.full(), "replay before buffer full");
+        let slot = self.rd;
+        self.rd = (self.rd + 1) % self.depth;
+        &self.words[slot]
+    }
+
+    /// Start accepting the next input vector (overwrites in fill order).
+    pub fn restart(&mut self) {
+        self.wr = 0;
+        self.rd = 0;
+    }
+
+    /// Peek a slot (used by tests).
+    pub fn peek(&self, slot: usize) -> &[i32] {
+        &self.words[slot]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fill_then_replay_in_order() {
+        let mut b = InputBuffer::new(3);
+        assert!(!b.full());
+        b.write(&[1]);
+        b.write(&[2]);
+        b.write(&[3]);
+        assert!(b.full());
+        assert_eq!(b.read_next(), &[1]);
+        assert_eq!(b.read_next(), &[2]);
+        assert_eq!(b.read_next(), &[3]);
+        // second replay round (another neuron fold)
+        assert_eq!(b.read_next(), &[1]);
+    }
+
+    #[test]
+    fn restart_overwrites() {
+        let mut b = InputBuffer::new(2);
+        b.write(&[1]);
+        b.write(&[2]);
+        b.restart();
+        assert!(!b.full());
+        b.write(&[9]);
+        assert_eq!(b.peek(0), &[9]);
+        assert_eq!(b.peek(1), &[2]); // old data until overwritten
+    }
+
+    #[test]
+    #[should_panic]
+    fn overfill_panics_in_debug() {
+        let mut b = InputBuffer::new(1);
+        b.write(&[1]);
+        b.write(&[2]);
+    }
+}

@@ -1,0 +1,44 @@
+//! Cycle-accurate simulator of the paper's MVU (batch + stream units).
+//!
+//! The simulator reproduces the microarchitecture of §5 at clock-cycle
+//! granularity: the three-state Mealy FSM (Fig. 7), the AXI-Stream
+//! valid/ready handshake (Tab. 1), the per-PE weight memories (Eq. 2), the
+//! input buffer with its write/read re-use schedule (Fig. 3), the PE x SIMD
+//! datapath (Figs. 2 and 4) and the output-decoupling FIFO (§5.3.2).
+//!
+//! Control is cycle-accurate; the datapath is evaluated functionally at the
+//! cycle a compute slot is consumed, with a register-stage delay line
+//! modeling the pipeline latency. This keeps the simulator fast (DESIGN.md
+//! §Perf) while preserving exact cycle counts and exact numerics.
+
+pub mod axis;
+pub mod batch_unit;
+pub mod chain;
+pub mod clock;
+pub mod fifo;
+pub mod fsm;
+pub mod hls;
+pub mod input_buffer;
+pub mod pe;
+pub mod simd_elem;
+pub mod stream_unit;
+pub mod swu;
+pub mod weight_mem;
+
+pub use axis::{AxisSink, AxisSource, StallPattern};
+pub use batch_unit::MvuBatch;
+pub use chain::{ChainReport, MvuChain};
+pub use clock::{run_mvu, run_mvu_fifo, run_mvu_stalled, SimReport};
+pub use fsm::{FsmInputs, FsmState, MvuFsm};
+pub use hls::HlsMvu;
+pub use swu::SlidingWindowUnit;
+
+/// Pipeline register stages between compute-slot consumption and the
+/// output FIFO (weight/operand register, SIMD product register, adder-tree
+/// register, accumulator register). Together with the FIFO->sink handshake
+/// this yields the paper's observed fill latency: total cycles =
+/// SF * NF * OD^2 + PIPELINE_STAGES + 1 (Table 7: 17 = 12 + 5).
+pub const PIPELINE_STAGES: usize = 4;
+
+/// Default output-FIFO depth (paper §5.3.2: "a small temporary FIFO").
+pub const DEFAULT_FIFO_DEPTH: usize = 4;

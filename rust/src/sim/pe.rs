@@ -1,0 +1,56 @@
+//! Processing element: SIMD lane bank + reduction + accumulator
+//! (paper Fig. 2).
+//!
+//! The accumulator is only architecturally required for folded designs
+//! (SF > 1); the code keeps it uniformly and the estimator decides whether
+//! it costs registers.
+
+use crate::cfg::SimdType;
+
+use super::simd_elem::pe_slot;
+
+/// One PE's accumulator state.
+#[derive(Debug, Clone, Default)]
+pub struct Pe {
+    acc: i32,
+}
+
+impl Pe {
+    pub fn new() -> Pe {
+        Pe { acc: 0 }
+    }
+
+    /// Consume one compute slot. `first` resets the accumulator (start of
+    /// a new output), `last` returns the finished dot product.
+    #[inline]
+    pub fn slot(&mut self, x: &[i32], w: &[i32], ty: SimdType, first: bool, last: bool) -> Option<i32> {
+        let partial = pe_slot(x, w, ty);
+        self.acc = if first { partial } else { self.acc.wrapping_add(partial) };
+        last.then_some(self.acc)
+    }
+
+    pub fn acc(&self) -> i32 {
+        self.acc
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn accumulates_across_folds() {
+        let mut pe = Pe::new();
+        // dot([1,2,3,4],[1,1,1,1]) over two folds of SIMD=2
+        assert_eq!(pe.slot(&[1, 2], &[1, 1], SimdType::Standard, true, false), None);
+        assert_eq!(pe.slot(&[3, 4], &[1, 1], SimdType::Standard, false, true), Some(10));
+        // next output restarts cleanly
+        assert_eq!(pe.slot(&[5, 5], &[2, 0], SimdType::Standard, true, true), Some(10));
+    }
+
+    #[test]
+    fn unfolded_single_slot() {
+        let mut pe = Pe::new();
+        assert_eq!(pe.slot(&[1, 1, 0, 1], &[1, 0, 0, 1], SimdType::Xnor, true, true), Some(3));
+    }
+}

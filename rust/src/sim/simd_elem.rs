@@ -1,0 +1,108 @@
+//! SIMD elements and the PE reduction (paper Figs. 2 and 4).
+//!
+//! A SIMD element combines one input lane with one weight lane; the PE
+//! reduces the SIMD outputs with a popcount (1-bit) or an adder tree and
+//! accumulates across synapse folds.
+
+use crate::cfg::SimdType;
+
+/// One SIMD element (Fig. 4): (a) XNOR, (b) +/-x mux, (c) multiplier.
+#[inline]
+pub fn simd_lane(x: i32, w: i32, ty: SimdType) -> i32 {
+    match ty {
+        SimdType::Xnor => {
+            debug_assert!(x == 0 || x == 1, "xnor input lane must be a bit");
+            debug_assert!(w == 0 || w == 1, "xnor weight lane must be a bit");
+            i32::from(x == w)
+        }
+        SimdType::BinaryWeights => {
+            debug_assert!(w == 0 || w == 1, "binary weight lane must be a bit");
+            if w == 1 {
+                x
+            } else {
+                x.wrapping_neg()
+            }
+        }
+        SimdType::Standard => x.wrapping_mul(w),
+    }
+}
+
+/// The PE's lane reduction: popcount for XNOR, adder tree otherwise.
+/// Implemented as a balanced binary tree (matching the logic-depth model
+/// in the delay estimator), though integer addition is associative so the
+/// result equals a linear sum.
+pub fn adder_tree(lanes: &[i32]) -> i32 {
+    match lanes.len() {
+        0 => 0,
+        1 => lanes[0],
+        n => {
+            let (lo, hi) = lanes.split_at(n / 2);
+            adder_tree(lo).wrapping_add(adder_tree(hi))
+        }
+    }
+}
+
+/// One PE compute slot: apply the SIMD lanes and reduce.
+///
+/// §Perf: the match is hoisted out of the lane loop so each variant is a
+/// tight, auto-vectorizable kernel (the generic `simd_lane`-per-lane
+/// formulation kept LLVM from vectorizing the multiply-accumulate).
+#[inline]
+pub fn pe_slot(x: &[i32], w: &[i32], ty: SimdType) -> i32 {
+    debug_assert_eq!(x.len(), w.len());
+    match ty {
+        SimdType::Xnor => x
+            .iter()
+            .zip(w)
+            .map(|(&a, &b)| (a == b) as i32)
+            .fold(0i32, i32::wrapping_add),
+        SimdType::BinaryWeights => x
+            .iter()
+            .zip(w)
+            .map(|(&a, &b)| {
+                // w in {0,1}: +x / -x without a branch
+                let sign = 2 * b - 1;
+                a.wrapping_mul(sign)
+            })
+            .fold(0i32, i32::wrapping_add),
+        SimdType::Standard => x
+            .iter()
+            .zip(w)
+            .map(|(&a, &b)| a.wrapping_mul(b))
+            .fold(0i32, i32::wrapping_add),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn lanes_match_fig4() {
+        assert_eq!(simd_lane(1, 1, SimdType::Xnor), 1);
+        assert_eq!(simd_lane(0, 1, SimdType::Xnor), 0);
+        assert_eq!(simd_lane(0, 0, SimdType::Xnor), 1);
+        assert_eq!(simd_lane(5, 1, SimdType::BinaryWeights), 5);
+        assert_eq!(simd_lane(5, 0, SimdType::BinaryWeights), -5);
+        assert_eq!(simd_lane(-3, 7, SimdType::Standard), -21);
+    }
+
+    #[test]
+    fn adder_tree_equals_linear_sum() {
+        let lanes: Vec<i32> = (-20..30).collect();
+        assert_eq!(adder_tree(&lanes), lanes.iter().sum::<i32>());
+        assert_eq!(adder_tree(&[]), 0);
+        assert_eq!(adder_tree(&[42]), 42);
+    }
+
+    #[test]
+    fn pe_slot_matches_reference() {
+        use crate::quant::{matvec, Matrix};
+        let x = [1, 0, 1, 1];
+        let w = Matrix::from_rows(&[vec![1, 1, 0, 1]]).unwrap();
+        for ty in SimdType::ALL {
+            let expect = matvec(&x, &w, ty).unwrap()[0];
+            assert_eq!(pe_slot(&x, w.row(0), ty), expect, "{ty}");
+        }
+    }
+}

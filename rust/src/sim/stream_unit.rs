@@ -1,0 +1,329 @@
+//! The MVU stream unit (paper §5.3, Fig. 6 right): FSM-controlled PE x SIMD
+//! datapath with input buffer and output-decoupling FIFO.
+//!
+//! Cycle semantics (one `step` = one clock cycle):
+//!
+//!   1. output handshake: if the sink asserts TREADY and the FIFO is not
+//!      empty, the front word is transferred this cycle;
+//!   2. pipeline advance: the register delay line shifts one stage; a
+//!      result leaving the last stage enters the FIFO. If the FIFO cannot
+//!      absorb it, the whole datapath stalls this cycle (the FSM drops to
+//!      IDLE, Fig. 7) — this is the "compute into the FIFO during
+//!      backpressure" behaviour of §5.3.2;
+//!   3. the FSM consumes a compute slot: a new input word (WRITE, also
+//!      stored to the input buffer) or a buffered word (READ, replay for
+//!      the remaining neuron folds). The PE bank evaluates the slot and,
+//!      on the last synapse fold, emits a PE-wide output word into the
+//!      delay line.
+//!
+//! The total cycle count from first input to last output equals
+//! `SF * NF * OD^2 + PIPELINE_STAGES + 1` with no stalls — asserted
+//! against the paper's Table 7 in tests.
+
+use anyhow::Result;
+
+use crate::cfg::LayerParams;
+
+use super::fifo::Fifo;
+use super::fsm::{FsmAction, FsmInputs, FsmState, MvuFsm};
+use super::input_buffer::InputBuffer;
+use super::pe::Pe;
+use super::weight_mem::WeightMem;
+use super::{DEFAULT_FIFO_DEPTH, PIPELINE_STAGES};
+
+/// Result of one clock cycle.
+#[derive(Debug, Default)]
+pub struct StepOut {
+    /// The offered input word was accepted (TVALID && TREADY on the input).
+    pub consumed_input: bool,
+    /// A word was transferred to the sink this cycle.
+    pub emitted: Option<Vec<i32>>,
+    /// The datapath stalled this cycle (output FIFO could not absorb).
+    pub stalled: bool,
+}
+
+/// Per-run statistics.
+#[derive(Debug, Clone, Default)]
+pub struct StreamStats {
+    pub cycles: usize,
+    pub idle_cycles: usize,
+    pub write_cycles: usize,
+    pub read_cycles: usize,
+    pub stall_cycles: usize,
+    pub slots_consumed: usize,
+    pub outputs_emitted: usize,
+}
+
+/// The stream unit.
+#[derive(Debug)]
+pub struct MvuStream {
+    params: LayerParams,
+    fsm: MvuFsm,
+    buf: InputBuffer,
+    pes: Vec<Pe>,
+    /// Register delay line: stage 0 is filled by the PE bank, the last
+    /// stage drains into the FIFO.
+    delay: Vec<Option<Vec<i32>>>,
+    fifo: Fifo<Vec<i32>>,
+    /// Fold counters of the *current* input vector.
+    cur_sf: usize,
+    cur_nf: usize,
+    comp_done: bool,
+    /// Reusable read-path buffer (avoids a per-cycle allocation on the
+    /// READ-state hot path — §Perf).
+    scratch: Vec<i32>,
+    pub stats: StreamStats,
+}
+
+impl MvuStream {
+    pub fn new(params: &LayerParams) -> Result<MvuStream> {
+        Self::with_fifo_depth(params, DEFAULT_FIFO_DEPTH)
+    }
+
+    pub fn with_fifo_depth(params: &LayerParams, fifo_depth: usize) -> Result<MvuStream> {
+        params.validate()?;
+        Ok(MvuStream {
+            fsm: MvuFsm::new(),
+            buf: InputBuffer::new(params.input_buf_depth()),
+            pes: (0..params.pe).map(|_| Pe::new()).collect(),
+            delay: vec![None; PIPELINE_STAGES],
+            fifo: Fifo::new(fifo_depth),
+            cur_sf: 0,
+            cur_nf: 0,
+            comp_done: false,
+            scratch: Vec::with_capacity(params.simd),
+            stats: StreamStats::default(),
+            params: params.clone(),
+        })
+    }
+
+    pub fn params(&self) -> &LayerParams {
+        &self.params
+    }
+
+    pub fn fsm_state(&self) -> FsmState {
+        self.fsm.state
+    }
+
+    pub fn fifo_max_occupancy(&self) -> usize {
+        self.fifo.max_occupancy
+    }
+
+    /// Anything still in flight?
+    pub fn drained(&self) -> bool {
+        self.fifo.is_empty() && self.delay.iter().all(Option::is_none)
+    }
+
+    /// One clock cycle.
+    pub fn step(&mut self, offered: Option<&[i32]>, wmem: &WeightMem, out_ready: bool) -> StepOut {
+        self.stats.cycles += 1;
+        let mut out = StepOut::default();
+
+        // 1. output handshake
+        if out_ready {
+            if let Some(word) = self.fifo.pop() {
+                self.stats.outputs_emitted += 1;
+                out.emitted = Some(word);
+            }
+        }
+
+        // 2. pipeline advance (or stall)
+        let last = PIPELINE_STAGES - 1;
+        let blocked = self.delay[last].is_some() && self.fifo.is_full();
+        if blocked {
+            // datapath frozen: registers hold, FSM sees a stall.
+            out.stalled = true;
+            self.stats.stall_cycles += 1;
+            let _ = self.fsm.step(FsmInputs {
+                in_valid: offered.is_some(),
+                inp_buf_full: self.buf.full(),
+                comp_done: self.comp_done,
+                stalled: true,
+            });
+            self.stats.idle_cycles += 1;
+            return out;
+        }
+        if let Some(word) = self.delay[last].take() {
+            self.fifo.push(word);
+        }
+        for i in (1..=last).rev() {
+            self.delay[i] = self.delay[i - 1].take();
+        }
+
+        // 3. FSM + compute slot
+        let action = self.fsm.step(FsmInputs {
+            in_valid: offered.is_some(),
+            inp_buf_full: self.buf.full(),
+            comp_done: self.comp_done,
+            stalled: false,
+        });
+        match action {
+            FsmAction::Nothing => {
+                self.stats.idle_cycles += 1;
+            }
+            FsmAction::ConsumeInput => {
+                self.stats.write_cycles += 1;
+                let word = offered.expect("FSM consumed without an offer");
+                if self.comp_done {
+                    // previous vector fully processed: restart for the next
+                    self.buf.restart();
+                    self.cur_sf = 0;
+                    self.cur_nf = 0;
+                    self.comp_done = false;
+                }
+                self.buf.write(word);
+                self.compute_slot(word, wmem);
+                out.consumed_input = true;
+            }
+            FsmAction::ReadBuffer => {
+                self.stats.read_cycles += 1;
+                // move the scratch out to satisfy the borrow checker while
+                // keeping its capacity (no allocation in steady state)
+                let mut scratch = std::mem::take(&mut self.scratch);
+                scratch.clear();
+                scratch.extend_from_slice(self.buf.read_next());
+                self.compute_slot(&scratch, wmem);
+                self.scratch = scratch;
+            }
+        }
+        out
+    }
+
+    /// Evaluate one (nf, sf) compute slot on the PE bank.
+    fn compute_slot(&mut self, x: &[i32], wmem: &WeightMem) {
+        debug_assert_eq!(x.len(), self.params.simd, "input word width != SIMD");
+        let sf_total = self.params.synapse_fold();
+        let nf_total = self.params.neuron_fold();
+        debug_assert!(self.cur_nf < nf_total, "slot beyond comp_done");
+        let first = self.cur_sf == 0;
+        let last = self.cur_sf == sf_total - 1;
+        let addr = self.cur_nf * sf_total + self.cur_sf;
+        let ty = self.params.simd_type;
+        let mut result: Option<Vec<i32>> = last.then(|| Vec::with_capacity(self.pes.len()));
+        for (p, pe) in self.pes.iter_mut().enumerate() {
+            let w = wmem.read(p, addr);
+            let r = pe.slot(x, w, ty, first, last);
+            if let (Some(out), Some(v)) = (&mut result, r) {
+                out.push(v);
+            }
+        }
+        if let Some(word) = result {
+            debug_assert!(self.delay[0].is_none(), "delay stage collision");
+            self.delay[0] = Some(word);
+        }
+        self.stats.slots_consumed += 1;
+        self.cur_sf += 1;
+        if self.cur_sf == sf_total {
+            self.cur_sf = 0;
+            self.cur_nf += 1;
+            if self.cur_nf == nf_total {
+                self.comp_done = true;
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cfg::SimdType;
+    use crate::quant::Matrix;
+
+    fn setup(pe: usize, simd: usize) -> (LayerParams, WeightMem) {
+        let p = LayerParams::fc("t", 8, 4, pe, simd, SimdType::Standard, 4, 4, 0);
+        let data: Vec<i32> = (0..32).map(|i| (i % 7) - 3).collect();
+        let w = Matrix::new(4, 8, data).unwrap();
+        let wm = WeightMem::from_matrix(&p, &w).unwrap();
+        (p, wm)
+    }
+
+    #[test]
+    fn single_vector_full_fold() {
+        // PE=2 (NF=2), SIMD=4 (SF=2): 4 slots, 2 output words.
+        let (p, wm) = setup(2, 4);
+        let mut s = MvuStream::new(&p).unwrap();
+        let x: Vec<i32> = (0..8).collect();
+        let words = [x[0..4].to_vec(), x[4..8].to_vec()];
+        let mut outs = Vec::new();
+        let mut wi = 0;
+        for _cycle in 0..40 {
+            let offered = (wi < 2).then(|| words[wi].clone());
+            let r = s.step(offered.as_deref(), &wm, true);
+            if r.consumed_input {
+                wi += 1;
+            }
+            if let Some(o) = r.emitted {
+                outs.push(o);
+            }
+        }
+        // flatten channel order nf-major
+        let got: Vec<i32> = outs.concat();
+        let expect = crate::quant::matvec_standard(
+            &x,
+            &Matrix::new(
+                4,
+                8,
+                (0..32).map(|i| (i % 7) - 3).collect(),
+            )
+            .unwrap(),
+        )
+        .unwrap();
+        // output word nf contains rows nf*PE..nf*PE+PE -> already row order
+        assert_eq!(got, expect);
+    }
+
+    #[test]
+    fn cycle_count_matches_formula() {
+        let (p, wm) = setup(2, 4);
+        let mut s = MvuStream::new(&p).unwrap();
+        let x: Vec<i32> = (0..8).collect();
+        let words = [x[0..4].to_vec(), x[4..8].to_vec()];
+        let mut wi = 0;
+        let mut last_out_cycle = 0;
+        let mut outs = 0;
+        for cycle in 0..40 {
+            let offered = (wi < 2).then(|| words[wi].clone());
+            let r = s.step(offered.as_deref(), &wm, true);
+            if r.consumed_input {
+                wi += 1;
+            }
+            if r.emitted.is_some() {
+                outs += 1;
+                last_out_cycle = cycle;
+            }
+        }
+        assert_eq!(outs, 2);
+        // SF*NF = 4 slots + PIPELINE_STAGES + 1
+        assert_eq!(last_out_cycle + 1, p.analytic_cycles(PIPELINE_STAGES));
+    }
+
+    #[test]
+    fn backpressure_does_not_lose_data() {
+        let (p, wm) = setup(2, 4);
+        let mut s = MvuStream::new(&p).unwrap();
+        let x: Vec<i32> = (0..8).collect();
+        let words = [x[0..4].to_vec(), x[4..8].to_vec()];
+        let mut wi = 0;
+        let mut outs = Vec::new();
+        for cycle in 0..200 {
+            let offered = (wi < 2).then(|| words[wi].clone());
+            // sink only ready every 7th cycle
+            let ready = cycle % 7 == 0;
+            let r = s.step(offered.as_deref(), &wm, ready);
+            if r.consumed_input {
+                wi += 1;
+            }
+            if let Some(o) = r.emitted {
+                outs.push(o);
+            }
+        }
+        assert_eq!(outs.len(), 2);
+        let expect = crate::quant::matvec_standard(
+            &x,
+            &Matrix::new(4, 8, (0..32).map(|i| (i % 7) - 3).collect()).unwrap(),
+        )
+        .unwrap();
+        assert_eq!(outs.concat(), expect);
+        assert!(s.drained());
+    }
+}

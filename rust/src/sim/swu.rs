@@ -1,0 +1,124 @@
+//! Sliding-window unit (paper §4.1, Fig. 1): expands the input feature
+//! map into the stream of K^2*IC-long vectors consumed by the MVU, one
+//! per output pixel — im2col on the fly.
+//!
+//! Ordering contract (shared with `kernels/swu.py::swu_indices` and
+//! `ref.im2col`): pixels in (oy, ox) raster order, vector elements in
+//! (ky, kx, ic) order.
+
+use anyhow::{bail, Result};
+
+/// The SWU for a fixed geometry.
+#[derive(Debug, Clone)]
+pub struct SlidingWindowUnit {
+    pub h: usize,
+    pub w: usize,
+    pub ic: usize,
+    pub kd: usize,
+    pub stride: usize,
+}
+
+impl SlidingWindowUnit {
+    pub fn new(h: usize, w: usize, ic: usize, kd: usize, stride: usize) -> Result<SlidingWindowUnit> {
+        if kd == 0 || stride == 0 {
+            bail!("kernel dim and stride must be positive");
+        }
+        if kd > h || kd > w {
+            bail!("kernel {kd} larger than image {h}x{w}");
+        }
+        Ok(SlidingWindowUnit { h, w, ic, kd, stride })
+    }
+
+    pub fn out_h(&self) -> usize {
+        (self.h - self.kd) / self.stride + 1
+    }
+
+    pub fn out_w(&self) -> usize {
+        (self.w - self.kd) / self.stride + 1
+    }
+
+    pub fn out_pixels(&self) -> usize {
+        self.out_h() * self.out_w()
+    }
+
+    pub fn vector_len(&self) -> usize {
+        self.kd * self.kd * self.ic
+    }
+
+    /// Expand one image (flat HWC layout, len H*W*IC) into the stream of
+    /// per-pixel vectors.
+    pub fn expand(&self, img: &[i32]) -> Result<Vec<Vec<i32>>> {
+        if img.len() != self.h * self.w * self.ic {
+            bail!("image length {} != {}x{}x{}", img.len(), self.h, self.w, self.ic);
+        }
+        let mut out = Vec::with_capacity(self.out_pixels());
+        for oy in 0..self.out_h() {
+            for ox in 0..self.out_w() {
+                let mut v = Vec::with_capacity(self.vector_len());
+                for ky in 0..self.kd {
+                    for kx in 0..self.kd {
+                        let y = oy * self.stride + ky;
+                        let x = ox * self.stride + kx;
+                        let base = (y * self.w + x) * self.ic;
+                        v.extend_from_slice(&img[base..base + self.ic]);
+                    }
+                }
+                out.push(v);
+            }
+        }
+        Ok(out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn geometry() {
+        let s = SlidingWindowUnit::new(8, 8, 3, 3, 1).unwrap();
+        assert_eq!(s.out_h(), 6);
+        assert_eq!(s.out_pixels(), 36);
+        assert_eq!(s.vector_len(), 27);
+    }
+
+    #[test]
+    fn expand_2x2_kernel_on_3x3_image() {
+        // 3x3 image, 1 channel, values = linear index
+        let img: Vec<i32> = (0..9).collect();
+        let s = SlidingWindowUnit::new(3, 3, 1, 2, 1).unwrap();
+        let v = s.expand(&img).unwrap();
+        assert_eq!(v.len(), 4);
+        assert_eq!(v[0], vec![0, 1, 3, 4]); // top-left window
+        assert_eq!(v[1], vec![1, 2, 4, 5]);
+        assert_eq!(v[2], vec![3, 4, 6, 7]);
+        assert_eq!(v[3], vec![4, 5, 7, 8]);
+    }
+
+    #[test]
+    fn channel_ordering_is_kykxic() {
+        // 2x2 image, 2 channels
+        let img = vec![10, 11, 20, 21, 30, 31, 40, 41]; // (y,x,c) flat
+        let s = SlidingWindowUnit::new(2, 2, 2, 2, 1).unwrap();
+        let v = s.expand(&img).unwrap();
+        assert_eq!(v.len(), 1);
+        assert_eq!(v[0], img); // single window covers all, same order
+    }
+
+    #[test]
+    fn stride_2() {
+        let img: Vec<i32> = (0..16).collect();
+        let s = SlidingWindowUnit::new(4, 4, 1, 2, 2).unwrap();
+        let v = s.expand(&img).unwrap();
+        assert_eq!(v.len(), 4);
+        assert_eq!(v[0], vec![0, 1, 4, 5]);
+        assert_eq!(v[3], vec![10, 11, 14, 15]);
+    }
+
+    #[test]
+    fn rejects_bad_sizes() {
+        assert!(SlidingWindowUnit::new(2, 2, 1, 3, 1).is_err());
+        let s = SlidingWindowUnit::new(3, 3, 1, 2, 1).unwrap();
+        assert!(s.expand(&[0; 5]).is_err());
+    }
+}

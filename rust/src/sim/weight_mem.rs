@@ -1,0 +1,114 @@
+//! Per-PE weight memories (paper §5.1, Eq. 2).
+//!
+//! Each PE owns a memory of depth `D_mem = K_d^2 * I_c * O_c / (SIMD * PE)`
+//! holding `SIMD * B_w`-bit words; word `nf * SF + sf` carries the SIMD
+//! weights of row `nf * PE + pe`, columns `sf * SIMD ..`. Contents are
+//! "burned in" offline (here: loaded from the weight matrix at
+//! construction), matching both the RTL and the HLO-constant artifacts.
+
+use anyhow::{bail, Result};
+
+use crate::cfg::LayerParams;
+use crate::quant::Matrix;
+
+/// All PE weight memories of one MVU.
+///
+/// Storage is a single flat buffer indexed `(pe * depth + addr) * simd`
+/// (§Perf: the nested-Vec layout dominated both construction time and
+/// read-path cache behaviour on the simulator hot loop).
+#[derive(Debug, Clone)]
+pub struct WeightMem {
+    pub pe: usize,
+    pub simd: usize,
+    pub depth: usize,
+    mem: Vec<i32>,
+}
+
+impl WeightMem {
+    /// Partition the (rows x cols) weight matrix across PE memories
+    /// according to the paper's layout: PE `p` serves rows `nf * PE + p`.
+    pub fn from_matrix(params: &LayerParams, w: &Matrix) -> Result<WeightMem> {
+        params.validate()?;
+        if w.rows != params.matrix_rows() || w.cols != params.matrix_cols() {
+            bail!(
+                "weight matrix {}x{} does not match params {}x{}",
+                w.rows,
+                w.cols,
+                params.matrix_rows(),
+                params.matrix_cols()
+            );
+        }
+        let (pe, simd) = (params.pe, params.simd);
+        let sf = params.synapse_fold();
+        let nf = params.neuron_fold();
+        let depth = params.weight_mem_depth();
+        debug_assert_eq!(depth, sf * nf);
+        let mut mem = vec![0i32; pe * depth * simd];
+        for p in 0..pe {
+            for n in 0..nf {
+                let row = n * pe + p;
+                for s in 0..sf {
+                    let addr = n * sf + s;
+                    let base = (p * depth + addr) * simd;
+                    mem[base..base + simd]
+                        .copy_from_slice(&w.row(row)[s * simd..(s + 1) * simd]);
+                }
+            }
+        }
+        Ok(WeightMem { pe, simd, depth, mem })
+    }
+
+    /// Synchronous read: word `addr` of PE `p`'s memory.
+    #[inline]
+    pub fn read(&self, p: usize, addr: usize) -> &[i32] {
+        let base = (p * self.depth + addr) * self.simd;
+        &self.mem[base..base + self.simd]
+    }
+
+    /// Total weight bits stored (for the BRAM estimator).
+    pub fn total_bits(&self, weight_bits: u32) -> usize {
+        self.pe * self.depth * self.simd * weight_bits as usize
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cfg::SimdType;
+
+    fn params() -> LayerParams {
+        LayerParams::fc("t", 8, 4, 2, 4, SimdType::Standard, 4, 4, 0)
+    }
+
+    fn matrix() -> Matrix {
+        // rows r, cols c: value = 10*r + c, distinguishable everywhere
+        let data: Vec<i32> = (0..4).flat_map(|r| (0..8).map(move |c| 10 * r + c)).collect();
+        Matrix::new(4, 8, data).unwrap()
+    }
+
+    #[test]
+    fn layout_matches_paper_eq2() {
+        let p = params();
+        let wm = WeightMem::from_matrix(&p, &matrix()).unwrap();
+        assert_eq!(wm.depth, 8 * 4 / (4 * 2)); // Eq. (2) = 4
+        // PE 0, addr = nf*SF+sf: nf=0 -> row 0; nf=1 -> row 2
+        // SF = 8/4 = 2
+        assert_eq!(wm.read(0, 0), &[0, 1, 2, 3]); // row 0, sf 0
+        assert_eq!(wm.read(0, 1), &[4, 5, 6, 7]); // row 0, sf 1
+        assert_eq!(wm.read(0, 2), &[20, 21, 22, 23]); // row 2, sf 0
+        assert_eq!(wm.read(1, 2), &[30, 31, 32, 33]); // PE 1 -> row 3
+    }
+
+    #[test]
+    fn rejects_wrong_shape() {
+        let p = params();
+        assert!(WeightMem::from_matrix(&p, &Matrix::zeros(3, 8)).is_err());
+    }
+
+    #[test]
+    fn total_bits() {
+        let p = params();
+        let wm = WeightMem::from_matrix(&p, &matrix()).unwrap();
+        assert_eq!(wm.total_bits(4), 4 * 8 * 4); // rows*cols*bits
+    }
+}

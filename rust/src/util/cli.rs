@@ -1,0 +1,174 @@
+//! Minimal command-line argument parser (no `clap` in the offline registry).
+//!
+//! Supports subcommands, `--flag`, `--key value`, `--key=value`, and
+//! positional arguments, with typed accessors and generated usage text.
+
+use std::collections::BTreeMap;
+
+/// Parsed arguments for one (sub)command invocation.
+#[derive(Debug, Default, Clone)]
+pub struct Args {
+    pub command: Option<String>,
+    flags: BTreeMap<String, String>,
+    positionals: Vec<String>,
+}
+
+/// Error with usage context.
+#[derive(Debug, thiserror::Error)]
+#[error("{0}")]
+pub struct CliError(pub String);
+
+impl Args {
+    /// Parse raw args (without argv[0]). The first non-flag token is the
+    /// subcommand; everything else is `--key[=value]` or positional.
+    pub fn parse<I: IntoIterator<Item = String>>(argv: I) -> Result<Args, CliError> {
+        let mut out = Args::default();
+        let mut it = argv.into_iter().peekable();
+        while let Some(tok) = it.next() {
+            if let Some(rest) = tok.strip_prefix("--") {
+                if rest.is_empty() {
+                    // `--` ends option parsing
+                    out.positionals.extend(it);
+                    break;
+                }
+                if let Some((k, v)) = rest.split_once('=') {
+                    out.flags.insert(k.to_string(), v.to_string());
+                } else {
+                    // lookahead: value unless next token is another flag
+                    match it.peek() {
+                        Some(next) if !next.starts_with("--") => {
+                            let v = it.next().unwrap();
+                            out.flags.insert(rest.to_string(), v);
+                        }
+                        _ => {
+                            out.flags.insert(rest.to_string(), "true".to_string());
+                        }
+                    }
+                }
+            } else if out.command.is_none() {
+                out.command = Some(tok);
+            } else {
+                out.positionals.push(tok);
+            }
+        }
+        Ok(out)
+    }
+
+    /// Parse from the process environment.
+    pub fn from_env() -> Result<Args, CliError> {
+        Args::parse(std::env::args().skip(1))
+    }
+
+    pub fn positionals(&self) -> &[String] {
+        &self.positionals
+    }
+
+    pub fn has(&self, key: &str) -> bool {
+        self.flags.contains_key(key)
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.flags.get(key).map(|s| s.as_str())
+    }
+
+    pub fn get_or<'a>(&'a self, key: &str, default: &'a str) -> &'a str {
+        self.get(key).unwrap_or(default)
+    }
+
+    pub fn get_usize(&self, key: &str, default: usize) -> Result<usize, CliError> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| CliError(format!("--{key} expects an integer, got {v:?}"))),
+        }
+    }
+
+    pub fn get_f64(&self, key: &str, default: f64) -> Result<f64, CliError> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| CliError(format!("--{key} expects a number, got {v:?}"))),
+        }
+    }
+
+    pub fn get_bool(&self, key: &str) -> bool {
+        matches!(self.get(key), Some("true") | Some("1") | Some("yes"))
+    }
+
+    /// Comma-separated list of integers, e.g. `--pes 2,4,8`.
+    pub fn get_usize_list(&self, key: &str, default: &[usize]) -> Result<Vec<usize>, CliError> {
+        match self.get(key) {
+            None => Ok(default.to_vec()),
+            Some(v) => v
+                .split(',')
+                .map(|t| {
+                    t.trim()
+                        .parse()
+                        .map_err(|_| CliError(format!("--{key}: bad integer {t:?}")))
+                })
+                .collect(),
+        }
+    }
+
+    /// Error out on unknown flags, given the set of recognized keys.
+    pub fn check_known(&self, known: &[&str]) -> Result<(), CliError> {
+        for k in self.flags.keys() {
+            if !known.contains(&k.as_str()) {
+                return Err(CliError(format!(
+                    "unknown flag --{k}; known: {}",
+                    known.iter().map(|s| format!("--{s}")).collect::<Vec<_>>().join(" ")
+                )));
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(v: &[&str]) -> Args {
+        Args::parse(v.iter().map(|s| s.to_string())).unwrap()
+    }
+
+    #[test]
+    fn subcommand_and_flags() {
+        let a = parse(&["sweep", "--pe", "4", "--simd=8", "--verbose"]);
+        assert_eq!(a.command.as_deref(), Some("sweep"));
+        assert_eq!(a.get("pe"), Some("4"));
+        assert_eq!(a.get("simd"), Some("8"));
+        assert!(a.get_bool("verbose"));
+    }
+
+    #[test]
+    fn typed_accessors() {
+        let a = parse(&["run", "--n", "100", "--rate", "2.5"]);
+        assert_eq!(a.get_usize("n", 0).unwrap(), 100);
+        assert_eq!(a.get_f64("rate", 0.0).unwrap(), 2.5);
+        assert_eq!(a.get_usize("missing", 7).unwrap(), 7);
+        assert!(a.get_usize("rate", 0).is_err());
+    }
+
+    #[test]
+    fn lists() {
+        let a = parse(&["x", "--pes", "2,4,8"]);
+        assert_eq!(a.get_usize_list("pes", &[]).unwrap(), vec![2, 4, 8]);
+        assert_eq!(a.get_usize_list("none", &[1]).unwrap(), vec![1]);
+    }
+
+    #[test]
+    fn positionals_and_doubledash() {
+        let a = parse(&["run", "file1", "--", "--not-a-flag"]);
+        assert_eq!(a.positionals(), &["file1", "--not-a-flag"]);
+    }
+
+    #[test]
+    fn unknown_flag_rejected() {
+        let a = parse(&["run", "--bogus", "1"]);
+        assert!(a.check_known(&["n"]).is_err());
+        assert!(a.check_known(&["bogus"]).is_ok());
+    }
+}

@@ -1,0 +1,8 @@
+//! Substrate utilities built from scratch for the offline environment
+//! (no serde/clap/rand/criterion in the registry — DESIGN.md §8).
+
+pub mod cli;
+pub mod json;
+pub mod rng;
+pub mod stats;
+pub mod table;

@@ -1,0 +1,126 @@
+//! Property tests over the FINN-style compiler flow: lowering and folding
+//! must preserve semantics for arbitrary frontend graphs, and folding must
+//! always produce legal configurations.
+
+use finn_mvu::ir::{Graph, Op, TensorInfo};
+use finn_mvu::passes::{
+    analyze, execute_reference, fold_to_target, folding_is_legal, lower_to_hw,
+};
+use finn_mvu::proptest::{check, Config, Gen};
+use finn_mvu::quant::{Matrix, Thresholds};
+
+/// Random frontend graph: optional conv head + 1-3 fc layers with
+/// optional threshold activations.
+fn arb_frontend(g: &mut Gen) -> (Graph, usize) {
+    let with_conv = g.chance(128);
+    let (mut graph, mut elems, input_len) = if with_conv {
+        let ic = g.usize_in(1, 3);
+        let dim = g.usize_in(3, 6);
+        let kd = g.usize_in(1, dim.min(3));
+        let oc = g.usize_in(1, 6);
+        let cols = kd * kd * ic;
+        let w = Matrix::new(oc, cols, g.vec_i32(oc * cols, -4, 3)).unwrap();
+        let mut gr = Graph::new(TensorInfo { elems: ic * dim * dim, vectors: 1, bits: 2 });
+        gr.push("conv", Op::Conv { weights: w, ifm_ch: ic, ifm_dim: dim, ofm_ch: oc, kernel_dim: kd });
+        (gr, oc, ic * dim * dim)
+    } else {
+        let elems = g.usize_in(2, 24);
+        (Graph::new(TensorInfo { elems, vectors: 1, bits: 2 }), elems, 0)
+    };
+    let input_len = if with_conv { input_len } else { elems };
+    let n_fc = g.usize_in(1, 3);
+    for i in 0..n_fc {
+        // a MultiThreshold can only absorb into a preceding MVU/MatMul
+        if !graph.is_empty() && g.chance(128) {
+            let steps = g.usize_in(1, 3);
+            let rows: Vec<Vec<i32>> = (0..elems)
+                .map(|_| {
+                    let mut t = g.vec_i32(steps, -30, 30);
+                    t.sort();
+                    t
+                })
+                .collect();
+            graph.push(
+                &format!("act{i}"),
+                Op::MultiThreshold { thresholds: Thresholds::from_rows(&rows).unwrap() },
+            );
+        }
+        let out = g.usize_in(1, 12);
+        let w = Matrix::new(out, elems, g.vec_i32(out * elems, -4, 3)).unwrap();
+        graph.push(&format!("fc{i}"), Op::MatMul { weights: w });
+        elems = out;
+    }
+    (graph, input_len)
+}
+
+#[test]
+fn prop_lowering_preserves_semantics() {
+    check("lower-preserves", Config::cases(40), |g| {
+        let (graph, input_len) = arb_frontend(g);
+        // MultiThreshold directly after input cannot absorb -> legal graphs
+        // here always start with conv or matmul, so lowering must succeed.
+        let hw = lower_to_hw(&graph).map_err(|e| e.to_string())?;
+        if !hw.is_hw_only() {
+            return Err("not hw-only after lowering".into());
+        }
+        let inputs: Vec<Vec<i32>> =
+            (0..2).map(|_| g.vec_i32(input_len, 0, 3)).collect();
+        let a = execute_reference(&graph, &inputs).map_err(|e| e.to_string())?;
+        let b = execute_reference(&hw, &inputs).map_err(|e| e.to_string())?;
+        if a != b {
+            return Err("lowering changed the computation".into());
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_folding_legal_and_semantics_preserving() {
+    check("fold-legal", Config::cases(30), |g| {
+        let (graph, input_len) = arb_frontend(g);
+        let hw = lower_to_hw(&graph).map_err(|e| e.to_string())?;
+        let target = g.usize_in(1, 200);
+        let budget = g.usize_in(2_000, 2_000_000);
+        let rep = fold_to_target(&hw, target, budget).map_err(|e| e.to_string())?;
+        if !folding_is_legal(&rep.graph) {
+            return Err(format!("illegal folding at target {target} budget {budget}"));
+        }
+        let inputs: Vec<Vec<i32>> = (0..2).map(|_| g.vec_i32(input_len, 0, 3)).collect();
+        let a = execute_reference(&hw, &inputs).map_err(|e| e.to_string())?;
+        let b = execute_reference(&rep.graph, &inputs).map_err(|e| e.to_string())?;
+        if a != b {
+            return Err("folding changed the computation".into());
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_tighter_budget_never_faster() {
+    check("budget-monotone", Config::cases(20), |g| {
+        let (graph, _) = arb_frontend(g);
+        let hw = lower_to_hw(&graph).map_err(|e| e.to_string())?;
+        let loose = fold_to_target(&hw, 1, 1_000_000).map_err(|e| e.to_string())?;
+        let tight =
+            fold_to_target(&hw, 1, loose.total_luts.saturating_sub(1).max(100))
+                .map_err(|e| e.to_string())?;
+        if tight.bottleneck_cycles < loose.bottleneck_cycles {
+            return Err(format!(
+                "tighter budget got faster: {} < {}",
+                tight.bottleneck_cycles, loose.bottleneck_cycles
+            ));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn analyze_reports_every_mvu() {
+    let mut g = Gen::new(7, 32);
+    let (graph, _) = arb_frontend(&mut g);
+    let hw = lower_to_hw(&graph).unwrap();
+    let n_mvu = hw.nodes.iter().filter(|n| n.op.name() == "MVU").count();
+    let rep = analyze(&hw).unwrap();
+    assert_eq!(rep.layers.len(), n_mvu);
+    assert!(rep.layers.iter().all(|l| l.luts_rtl > 0 && l.delay_rtl_ns > 0.0));
+}

@@ -1,0 +1,145 @@
+//! Full-stack integration over the AOT artifacts: the three backends
+//! (cycle-accurate simulator, PJRT executables, reference GEMM) must agree
+//! bit-exactly on the same weights — the software analogue of the paper's
+//! board validation (§6.1). Skipped gracefully when `make artifacts` has
+//! not run.
+
+use finn_mvu::cfg::SimdType;
+use finn_mvu::coordinator::{Pipeline, PipelineConfig, Request};
+use finn_mvu::nid::{generate, NidNetwork};
+use finn_mvu::quant::{matvec, multithreshold};
+use finn_mvu::runtime::{default_artifacts_dir, Engine, Manifest};
+use finn_mvu::sim::{run_mvu, SlidingWindowUnit};
+use finn_mvu::util::rng::Pcg32;
+
+fn engine() -> Option<Engine> {
+    let dir = default_artifacts_dir();
+    dir.join("manifest.json").exists().then(|| Engine::new(&dir).unwrap())
+}
+
+#[test]
+fn generic_mvu_three_way_agreement() {
+    let Some(e) = engine() else { return };
+    let gw = e.manifest.generic_weights().unwrap();
+    for (name, ty) in [
+        ("mvu_xnor", SimdType::Xnor),
+        ("mvu_binary", SimdType::BinaryWeights),
+        ("mvu_standard", SimdType::Standard),
+    ] {
+        let kernel = e.load(&format!("{name}_b1")).unwrap();
+        let params = kernel.info.layer.clone().unwrap();
+        let w = &gw[name];
+        let mut rng = Pcg32::new(500);
+        let x: Vec<i32> = (0..w.cols)
+            .map(|_| match ty {
+                SimdType::Xnor => rng.next_range(2) as i32,
+                _ => rng.next_range(16) as i32 - 8,
+            })
+            .collect();
+        let want = matvec(&x, w, ty).unwrap();
+        let pjrt = kernel.run(&x).unwrap();
+        let sim = run_mvu(&params, w, &[x.clone()]).unwrap();
+        assert_eq!(pjrt, want, "{name}: PJRT vs ref");
+        assert_eq!(sim.outputs[0], want, "{name}: sim vs ref");
+    }
+}
+
+#[test]
+fn batched_artifacts_agree_rowwise() {
+    let Some(e) = engine() else { return };
+    let k1 = e.load("mvu_standard_b1").unwrap();
+    let k16 = e.load("mvu_standard_b16").unwrap();
+    let cols = k1.info.in_shape[1];
+    let mut rng = Pcg32::new(501);
+    let rows: Vec<Vec<i32>> = (0..16)
+        .map(|_| (0..cols).map(|_| rng.next_range(16) as i32 - 8).collect())
+        .collect();
+    let flat: Vec<i32> = rows.concat();
+    let out16 = k16.run(&flat).unwrap();
+    let out_cols = k1.info.out_shape[1];
+    for (i, row) in rows.iter().enumerate() {
+        let out1 = k1.run(row).unwrap();
+        assert_eq!(out1, out16[i * out_cols..(i + 1) * out_cols], "row {i}");
+    }
+}
+
+#[test]
+fn conv_artifact_matches_swu_plus_sim() {
+    let Some(e) = engine() else { return };
+    let kernel = e.load("conv3x3_b1").unwrap();
+    let params = kernel.info.layer.clone().unwrap();
+    let w = &e.manifest.generic_weights().unwrap()["conv3x3"];
+    let mut rng = Pcg32::new(502);
+    let img: Vec<i32> = (0..params.ifm_dim * params.ifm_dim * params.ifm_ch)
+        .map(|_| rng.next_range(16) as i32 - 8)
+        .collect();
+    let pjrt = kernel.run(&img).unwrap();
+    let swu =
+        SlidingWindowUnit::new(params.ifm_dim, params.ifm_dim, params.ifm_ch, params.kernel_dim, 1)
+            .unwrap();
+    let vectors = swu.expand(&img).unwrap();
+    let sim = run_mvu(&params, w, &vectors).unwrap();
+    assert_eq!(sim.outputs.concat(), pjrt);
+}
+
+#[test]
+fn nid_pipeline_sim_and_reference_agree_and_classify() {
+    let Some(e) = engine() else { return };
+    let manifest = Manifest::load(&default_artifacts_dir()).unwrap();
+    let net = NidNetwork::load(&manifest).unwrap();
+    let records = generate(64, 31337);
+
+    // pipeline over PJRT
+    let reqs: Vec<Request> = records
+        .iter()
+        .enumerate()
+        .map(|(i, r)| Request { id: i as u64, data: r.inputs.clone() })
+        .collect();
+    let cfg = PipelineConfig { batch: 16, ..Default::default() };
+    let pipe = Pipeline::nid(default_artifacts_dir(), cfg);
+    let (mut resp, _) = pipe.run(reqs).unwrap();
+    resp.sort_by_key(|r| r.id);
+
+    // cycle-accurate simulation of all four layers, per record
+    let weights = manifest.nid_weights().unwrap();
+    let layers = finn_mvu::cfg::nid_layers();
+    let mut correct = 0usize;
+    for (i, rec) in records.iter().enumerate() {
+        let mut v = rec.inputs.clone();
+        for (params, (w, th)) in layers.iter().zip(&weights) {
+            let acc = run_mvu(params, w, &[v]).unwrap().outputs[0].clone();
+            v = match th {
+                Some(t) => multithreshold(&acc, t).unwrap(),
+                None => acc,
+            };
+        }
+        let want = net.forward(&rec.inputs).unwrap();
+        assert_eq!(v, want, "sim vs reference at record {i}");
+        assert_eq!(resp[i].output, want, "pipeline vs reference at record {i}");
+        if net.decide(want[0]) == rec.label {
+            correct += 1;
+        }
+    }
+    let acc = correct as f64 / records.len() as f64;
+    assert!(acc > 0.70, "classification accuracy {acc}");
+}
+
+#[test]
+fn fused_network_equals_layer_chain() {
+    let Some(e) = engine() else { return };
+    let fused = e.load("nid_fused_b1").unwrap();
+    let net = NidNetwork::load(&e.manifest).unwrap();
+    let records = generate(8, 41);
+    for rec in &records {
+        let out = fused.run(&rec.inputs).unwrap();
+        assert_eq!(out, net.forward(&rec.inputs).unwrap());
+    }
+}
+
+#[test]
+fn engine_cache_shared_across_loads() {
+    let Some(e) = engine() else { return };
+    let a = e.load("nid_layer1_b1").unwrap();
+    let b = e.load("nid_layer1_b1").unwrap();
+    assert!(std::sync::Arc::ptr_eq(&a, &b));
+}

@@ -1,0 +1,307 @@
+//! Property tests over the cycle-accurate simulator (own proptest
+//! framework, DESIGN.md §6): numerics vs the reference GEMM, the exec-
+//! cycle formula, data integrity and liveness under arbitrary stall
+//! patterns, and the HLS model's agreement.
+
+use finn_mvu::cfg::{LayerParams, SimdType};
+use finn_mvu::proptest::{check, Config, Gen};
+use finn_mvu::quant::{matvec, Matrix};
+use finn_mvu::sim::{run_mvu, run_mvu_stalled, HlsMvu, StallPattern, PIPELINE_STAGES};
+
+/// Draw a random legal MVU configuration.
+fn arb_params(g: &mut Gen) -> LayerParams {
+    let ty = *g.choose(&SimdType::ALL);
+    let (wb, ib) = match ty {
+        SimdType::Xnor => (1, 1),
+        SimdType::BinaryWeights => (1, *g.choose(&[2u32, 4])),
+        SimdType::Standard => (*g.choose(&[2u32, 4]), *g.choose(&[2u32, 4])),
+    };
+    let rows = g.usize_in(1, 16);
+    let cols = g.usize_in(1, 48);
+    let pe = g.divisor_of(rows);
+    let simd = g.divisor_of(cols);
+    LayerParams::fc("prop", cols, rows, pe, simd, ty, wb, ib, 0)
+}
+
+fn arb_weights(g: &mut Gen, p: &LayerParams) -> Matrix {
+    let (r, c) = (p.matrix_rows(), p.matrix_cols());
+    let data: Vec<i32> = (0..r * c)
+        .map(|_| match p.simd_type {
+            SimdType::Xnor | SimdType::BinaryWeights => g.i32_in(0, 1),
+            SimdType::Standard => {
+                let half = 1 << (p.weight_bits - 1);
+                g.i32_in(-half, half - 1)
+            }
+        })
+        .collect();
+    Matrix::new(r, c, data).unwrap()
+}
+
+fn arb_inputs(g: &mut Gen, p: &LayerParams, n: usize) -> Vec<Vec<i32>> {
+    (0..n)
+        .map(|_| {
+            (0..p.matrix_cols())
+                .map(|_| match p.simd_type {
+                    SimdType::Xnor => g.i32_in(0, 1),
+                    _ => {
+                        let half = 1 << (p.input_bits - 1);
+                        g.i32_in(-half, half - 1)
+                    }
+                })
+                .collect()
+        })
+        .collect()
+}
+
+fn arb_stall(g: &mut Gen) -> StallPattern {
+    match g.usize_in(0, 3) {
+        0 => StallPattern::None,
+        1 => {
+            // duty < period, or the endpoint never makes progress at all
+            let period = g.usize_in(2, 9);
+            let duty = g.usize_in(1, period - 1);
+            StallPattern::Periodic { period, duty, phase: g.usize_in(0, 5) }
+        }
+        2 => StallPattern::Random { seed: g.rng.next_u64(), p_num: g.usize_in(1, 200) as u32 },
+        _ => {
+            // at least one non-stalled slot in the schedule
+            let len = g.usize_in(1, 12);
+            let mut s: Vec<bool> = (0..len).map(|_| g.chance(100)).collect();
+            let free = g.usize_in(0, len - 1);
+            s[free] = false;
+            StallPattern::Schedule(s)
+        }
+    }
+}
+
+#[test]
+fn prop_sim_matches_reference_gemm() {
+    check("sim==ref", Config::cases(60), |g| {
+        let p = arb_params(g);
+        let w = arb_weights(g, &p);
+        let n = g.usize_in(1, 4);
+        let inputs = arb_inputs(g, &p, n);
+        let rep = run_mvu(&p, &w, &inputs).map_err(|e| e.to_string())?;
+        for (x, y) in inputs.iter().zip(&rep.outputs) {
+            let want = matvec(x, &w, p.simd_type).map_err(|e| e.to_string())?;
+            if y != &want {
+                return Err(format!("{p}: sim {y:?} != ref {want:?}"));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_cycle_formula_exact_without_stalls() {
+    check("cycle-formula", Config::cases(60), |g| {
+        let p = arb_params(g);
+        let w = arb_weights(g, &p);
+        let n = g.usize_in(1, 5);
+        let inputs = arb_inputs(g, &p, n);
+        let rep = run_mvu(&p, &w, &inputs).map_err(|e| e.to_string())?;
+        let want = p.synapse_fold() * p.neuron_fold() * n + PIPELINE_STAGES + 1;
+        if rep.exec_cycles != want {
+            return Err(format!("{p} x{n}: {} cycles != formula {want}", rep.exec_cycles));
+        }
+        if rep.slots_consumed != p.synapse_fold() * p.neuron_fold() * n {
+            return Err("slot count mismatch".into());
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_no_data_loss_or_reorder_under_stalls() {
+    check("stall-integrity", Config::cases(50), |g| {
+        let p = arb_params(g);
+        let w = arb_weights(g, &p);
+        let n = g.usize_in(1, 4);
+        let inputs = arb_inputs(g, &p, n);
+        let in_stall = arb_stall(g);
+        let out_stall = arb_stall(g);
+        let rep = run_mvu_stalled(&p, &w, &inputs, in_stall.clone(), out_stall.clone())
+            .map_err(|e| format!("{p} deadlocked ({in_stall:?}/{out_stall:?}): {e}"))?;
+        if rep.outputs.len() != inputs.len() {
+            return Err("output count mismatch".into());
+        }
+        for (x, y) in inputs.iter().zip(&rep.outputs) {
+            let want = matvec(x, &w, p.simd_type).map_err(|e| e.to_string())?;
+            if y != &want {
+                return Err(format!("{p}: stalled sim diverged"));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_stalls_only_add_cycles() {
+    check("stalls-monotone", Config::cases(40), |g| {
+        let p = arb_params(g);
+        let w = arb_weights(g, &p);
+        let inputs = arb_inputs(g, &p, 2);
+        let clean = run_mvu(&p, &w, &inputs).map_err(|e| e.to_string())?;
+        let stalled = run_mvu_stalled(
+            &p,
+            &w,
+            &inputs,
+            arb_stall(g),
+            arb_stall(g),
+        )
+        .map_err(|e| e.to_string())?;
+        if stalled.exec_cycles < clean.exec_cycles {
+            return Err(format!(
+                "stalled run faster ({} < {})",
+                stalled.exec_cycles, clean.exec_cycles
+            ));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_hls_model_agrees_with_rtl_sim() {
+    check("hls==rtl-numerics", Config::cases(40), |g| {
+        let p = arb_params(g);
+        let w = arb_weights(g, &p);
+        let n = g.usize_in(1, 3);
+        let inputs = arb_inputs(g, &p, n);
+        let rtl = run_mvu(&p, &w, &inputs).map_err(|e| e.to_string())?;
+        let hls = HlsMvu::new(&p, &w)
+            .and_then(|m| m.run(&inputs))
+            .map_err(|e| e.to_string())?;
+        if rtl.outputs != hls.outputs {
+            return Err(format!("{p}: HLS model diverges from RTL sim"));
+        }
+        // both are II=1 machines; cycle counts within fill-latency slack
+        if rtl.exec_cycles.abs_diff(hls.exec_cycles) > 2 {
+            return Err(format!(
+                "{p}: cycles RTL {} vs HLS {}",
+                rtl.exec_cycles, hls.exec_cycles
+            ));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_bitpack_roundtrip() {
+    use finn_mvu::quant::{pack_bits, unpack_bits};
+    check("bitpack-roundtrip", Config::cases(80), |g| {
+        let bits = *g.choose(&[1u32, 2, 4, 8, 16]);
+        let n = g.usize_in(0, 64);
+        let signed = bits > 1 && g.chance(128);
+        let lanes: Vec<i32> = if signed {
+            let half = 1i32 << (bits - 1);
+            g.vec_i32(n, -half, half - 1)
+        } else {
+            g.vec_i32(n, 0, (1i32 << bits.min(16)) - 1)
+        };
+        let bv = pack_bits(&lanes, bits);
+        let back = unpack_bits(&bv, bits, signed);
+        if back != lanes {
+            return Err(format!("roundtrip {bits}bit signed={signed}: {lanes:?} -> {back:?}"));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_json_roundtrip() {
+    use finn_mvu::util::json::Json;
+    fn arb_json(g: &mut Gen, depth: usize) -> Json {
+        match if depth == 0 { g.usize_in(0, 3) } else { g.usize_in(0, 5) } {
+            0 => Json::Null,
+            1 => Json::Bool(g.chance(128)),
+            2 => Json::from_i64(g.i32_in(-100000, 100000) as i64),
+            3 => Json::Str(
+                (0..g.usize_in(0, 8))
+                    .map(|_| *g.choose(&['a', 'ß', '"', '\\', '\n', 'é', 'x']))
+                    .collect(),
+            ),
+            4 => Json::Arr((0..g.usize_in(0, 4)).map(|_| arb_json(g, depth - 1)).collect()),
+            _ => {
+                let mut m = std::collections::BTreeMap::new();
+                for i in 0..g.usize_in(0, 4) {
+                    m.insert(format!("k{i}"), arb_json(g, depth - 1));
+                }
+                Json::Obj(m)
+            }
+        }
+    }
+    check("json-roundtrip", Config::cases(100), |g| {
+        let v = arb_json(g, 3);
+        let compact = Json::parse(&v.to_string()).map_err(|e| e.to_string())?;
+        let pretty = Json::parse(&v.to_pretty(2)).map_err(|e| e.to_string())?;
+        if compact != v || pretty != v {
+            return Err(format!("roundtrip failed for {v}"));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_chain_matches_layerwise_reference() {
+    use finn_mvu::quant::{multithreshold, Thresholds};
+    use finn_mvu::sim::MvuChain;
+    check("chain==ref", Config::cases(25), |g| {
+        // 2-3 chained FC layers with random (legal) folds and optional
+        // thresholds between layers
+        let n_layers = g.usize_in(2, 3);
+        let mut dims = vec![g.usize_in(2, 24)];
+        for _ in 0..n_layers {
+            dims.push(g.usize_in(1, 12));
+        }
+        let mut layers = Vec::new();
+        for i in 0..n_layers {
+            let (fin, fout) = (dims[i], dims[i + 1]);
+            let pe = g.divisor_of(fout);
+            let simd = g.divisor_of(fin);
+            let with_th = i + 1 < n_layers; // inner layers threshold
+            let p = LayerParams::fc(
+                &format!("c{i}"),
+                fin,
+                fout,
+                pe,
+                simd,
+                SimdType::Standard,
+                2,
+                2,
+                if with_th { 2 } else { 0 },
+            );
+            let w = arb_weights(g, &p);
+            let th = with_th.then(|| {
+                Thresholds::from_rows(
+                    &(0..fout)
+                        .map(|_| {
+                            let mut t = g.vec_i32(3, -20, 20);
+                            t.sort();
+                            t
+                        })
+                        .collect::<Vec<_>>(),
+                )
+                .unwrap()
+            });
+            layers.push((p, w, th));
+        }
+        let inputs: Vec<Vec<i32>> =
+            (0..g.usize_in(1, 4)).map(|_| g.vec_i32(dims[0], 0, 3)).collect();
+        let mut chain = MvuChain::new(layers.clone()).map_err(|e| e.to_string())?;
+        let rep = chain.run(&inputs).map_err(|e| e.to_string())?;
+        for (x, y) in inputs.iter().zip(&rep.outputs) {
+            let mut v = x.clone();
+            for (p, w, th) in &layers {
+                let acc = matvec(&v, w, p.simd_type).map_err(|e| e.to_string())?;
+                v = match th {
+                    Some(t) => multithreshold(&acc, t).map_err(|e| e.to_string())?,
+                    None => acc,
+                };
+            }
+            if y != &v {
+                return Err("chain diverged from layer-wise reference".into());
+            }
+        }
+        Ok(())
+    });
+}
