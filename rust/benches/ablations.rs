@@ -1,4 +1,6 @@
-//! Design-choice ablations called out in DESIGN.md:
+//! Design-choice ablations called out in DESIGN.md, driven through the
+//! exploration engine's deterministic work-stealing `par_map` (A1-A4) so
+//! the sweep dimensions evaluate across all cores:
 //!
 //!   A1  output-FIFO depth vs stall cycles under bursty backpressure —
 //!       quantifies the §5.3.2 decoupling claim ("computation is allowed
@@ -14,13 +16,14 @@
 use finn_mvu::cfg::{nid_layers, sweep_simd, LayerParams, SimdType};
 use finn_mvu::estimate::dsp::{clock_report, dsp_lut_savings};
 use finn_mvu::estimate::Style;
+use finn_mvu::explore::Explorer;
 use finn_mvu::harness::random_weights;
 use finn_mvu::quant::Thresholds;
-use finn_mvu::sim::{run_mvu_fifo, MvuChain, StallPattern};
+use finn_mvu::sim::{run_mvu_fifo, ChainReport, MvuChain, StallPattern};
 use finn_mvu::util::rng::Pcg32;
 use finn_mvu::util::table::{fnum, Table};
 
-fn a1_fifo_depth() {
+fn a1_fifo_depth(ex: &Explorer) {
     println!("== A1: output-FIFO depth vs backpressure stalls (SF=1 core, bursty sink) ==");
     let p = LayerParams::fc("a1", 8, 8, 8, 8, SimdType::Standard, 4, 4, 0);
     let w = random_weights(&p, 3);
@@ -28,9 +31,9 @@ fn a1_fifo_depth() {
     let vecs: Vec<Vec<i32>> = (0..64)
         .map(|_| (0..8).map(|_| rng.next_range(16) as i32 - 8).collect())
         .collect();
-    let mut t = Table::new(vec!["FIFO depth", "exec cycles", "stall cycles", "high-water"]);
-    for depth in [1usize, 2, 4, 8, 16] {
-        let rep = run_mvu_fifo(
+    let depths = [1usize, 2, 4, 8, 16];
+    let reports = ex.par_map(&depths, |_, &depth| {
+        run_mvu_fifo(
             &p,
             &w,
             &vecs,
@@ -39,7 +42,10 @@ fn a1_fifo_depth() {
             StallPattern::Periodic { period: 8, duty: 5, phase: 0 },
             depth,
         )
-        .unwrap();
+    });
+    let mut t = Table::new(vec!["FIFO depth", "exec cycles", "stall cycles", "high-water"]);
+    for (depth, rep) in depths.iter().zip(reports) {
+        let rep = rep.unwrap();
         t.row(vec![
             depth.to_string(),
             rep.exec_cycles.to_string(),
@@ -50,11 +56,13 @@ fn a1_fifo_depth() {
     println!("{}", t.render());
 }
 
-fn a2_dsp_binding() {
+fn a2_dsp_binding(ex: &Explorer) {
     println!("== A2: LUT-bound vs DSP-bound multipliers (standard type) ==");
+    let pts = sweep_simd(SimdType::Standard);
+    let rows = ex.par_map(&pts, |_, sp| Ok(dsp_lut_savings(&sp.params)));
     let mut t = Table::new(vec!["SIMD", "LUTs (LUT-mult)", "LUTs (DSP-mult)", "DSP48E1", "LUT savings"]);
-    for sp in sweep_simd(SimdType::Standard) {
-        let (lut, dsp_luts, dsps) = dsp_lut_savings(&sp.params);
+    for (sp, row) in pts.iter().zip(rows) {
+        let (lut, dsp_luts, dsps) = row.unwrap();
         t.row(vec![
             sp.swept.to_string(),
             lut.to_string(),
@@ -66,27 +74,32 @@ fn a2_dsp_binding() {
     println!("{}", t.render());
 }
 
-fn a3_clock_constraints() {
+fn a3_clock_constraints(ex: &Explorer) {
     println!("== A3: clock-constraint methodology (5 ns target, 10 ns fallback, §6.1) ==");
+    let cases: Vec<(SimdType, Style)> = SimdType::ALL
+        .into_iter()
+        .flat_map(|ty| [Style::Rtl, Style::Hls].map(|s| (ty, s)))
+        .collect();
+    let rows = ex.par_map(&cases, |_, &(ty, style)| {
+        let pts = sweep_simd(ty);
+        let p = &pts.last().unwrap().params;
+        Ok(clock_report(p, style))
+    });
     let mut t = Table::new(vec!["type", "style", "delay (ns)", "constraint", "Fmax (MHz)"]);
-    for ty in SimdType::ALL {
-        for style in [Style::Rtl, Style::Hls] {
-            let pts = sweep_simd(ty);
-            let p = &pts.last().unwrap().params;
-            let r = clock_report(p, style);
-            t.row(vec![
-                ty.name().to_string(),
-                style.name().to_string(),
-                fnum(r.delay_ns, 3),
-                format!("{} ns{}", r.constraint_ns, if r.met_primary { "" } else { " (relaxed)" }),
-                fnum(r.fmax_mhz, 0),
-            ]);
-        }
+    for ((ty, style), r) in cases.iter().zip(rows) {
+        let r = r.unwrap();
+        t.row(vec![
+            ty.name().to_string(),
+            style.name().to_string(),
+            fnum(r.delay_ns, 3),
+            format!("{} ns{}", r.constraint_ns, if r.met_primary { "" } else { " (relaxed)" }),
+            fnum(r.fmax_mhz, 0),
+        ]);
     }
     println!("{}", t.render());
 }
 
-fn a4_chain_overlap() {
+fn a4_chain_overlap(ex: &Explorer) {
     println!("== A4: NID 4-layer chain — dataflow overlap vs layer-serial ==");
     let specs = nid_layers();
     let mut rng = Pcg32::new(5);
@@ -110,20 +123,27 @@ fn a4_chain_overlap() {
             (p.clone(), w, th)
         })
         .collect();
-    let mut t = Table::new(vec!["records", "chain cycles", "serial cycles", "overlap", "cycles/record"]);
-    for n in [1usize, 4, 16, 64] {
+    let sizes = [1usize, 4, 16, 64];
+    let reports: Vec<anyhow::Result<ChainReport>> = ex.par_map(&sizes, |i, &n| {
+        // per-size deterministic inputs so parallel evaluation stays
+        // byte-identical to serial
+        let mut rng = Pcg32::new(100 + i as u64);
         let inputs: Vec<Vec<i32>> = (0..n)
             .map(|_| (0..600).map(|_| rng.next_range(4) as i32).collect())
             .collect();
-        let mut chain = MvuChain::new(layers.clone()).unwrap();
-        let rep = chain.run(&inputs).unwrap();
+        let mut chain = MvuChain::new(layers.clone())?;
+        chain.run(&inputs)
+    });
+    let mut t = Table::new(vec!["records", "chain cycles", "serial cycles", "overlap", "cycles/record"]);
+    for (n, rep) in sizes.iter().zip(reports) {
+        let rep = rep.unwrap();
         let serial: usize = specs.iter().map(|p| p.analytic_cycles(4)).sum::<usize>() * n;
         t.row(vec![
             n.to_string(),
             rep.exec_cycles.to_string(),
             serial.to_string(),
             format!("{:.2}x", serial as f64 / rep.exec_cycles as f64),
-            fnum(rep.exec_cycles as f64 / n as f64, 1),
+            fnum(rep.exec_cycles as f64 / *n as f64, 1),
         ]);
     }
     println!("{}", t.render());
@@ -150,21 +170,31 @@ fn a5_serving_batch() {
     for batch in [1usize, 16] {
         let cfg = PipelineConfig { batch, ..Default::default() };
         let pipe = Pipeline::nid(dir.clone(), cfg);
-        let (_, rep) = pipe.run(reqs.clone()).unwrap();
-        t.row(vec![
-            batch.to_string(),
-            fnum(rep.throughput_rps, 0),
-            fnum(rep.latency_p50_us, 0),
-            fnum(rep.latency_p99_us, 0),
-        ]);
+        match pipe.run(reqs.clone()) {
+            Ok((_, rep)) => {
+                t.row(vec![
+                    batch.to_string(),
+                    fnum(rep.throughput_rps, 0),
+                    fnum(rep.latency_p50_us, 0),
+                    fnum(rep.latency_p99_us, 0),
+                ]);
+            }
+            Err(e) => {
+                println!("(A5 unavailable: {e})");
+                break;
+            }
+        }
     }
-    println!("{}", t.render());
+    if !t.is_empty() {
+        println!("{}", t.render());
+    }
 }
 
 fn main() {
-    a1_fifo_depth();
-    a2_dsp_binding();
-    a3_clock_constraints();
-    a4_chain_overlap();
+    let ex = Explorer::parallel();
+    a1_fifo_depth(&ex);
+    a2_dsp_binding(&ex);
+    a3_clock_constraints(&ex);
+    a4_chain_overlap(&ex);
     a5_serving_batch();
 }

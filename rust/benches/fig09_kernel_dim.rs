@@ -1,22 +1,13 @@
 //! Regenerates paper Fig. 9 (kernel-dimension sweep) for all three SIMD-element types
-//! and benchmarks the estimator over the sweep.
+//! through the parallel, cached exploration engine, then benchmarks the
+//! engine over the sweep (cold serial vs warm parallel+cache). The body
+//! is shared across the six figure benches: `harness::run_figure_bench`.
 //!
 //! Run with: `cargo bench --bench fig09_kernel_dim`
 
-use finn_mvu::cfg::SimdType;
-use finn_mvu::harness::{bench, resource_sweep_figure, SweepKind};
+use finn_mvu::explore::Explorer;
+use finn_mvu::harness::{run_figure_bench, SweepKind};
 
 fn main() {
-    let kind = SweepKind::KernelDim;
-    for ty in SimdType::ALL {
-        let series = resource_sweep_figure(kind, ty).unwrap();
-        println!("Fig. 9 — {} — {}", kind.label(), ty);
-        println!("{}", series.to_table().render());
-    }
-    let r = bench("fig09_kernel_dim/estimate_sweep", || {
-        for ty in SimdType::ALL {
-            std::hint::black_box(resource_sweep_figure(kind, ty).unwrap());
-        }
-    });
-    println!("{r}");
+    run_figure_bench("fig09_kernel_dim", SweepKind::KernelDim, &Explorer::parallel());
 }

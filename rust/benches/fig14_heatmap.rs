@@ -1,14 +1,17 @@
 //! Regenerates paper Fig. 14: heat maps of the HLS-RTL resource difference
-//! over a PE x SIMD grid (4-bit standard type). Positive entries mean the
-//! RTL design is smaller; the paper's headline is the sign flip of the LUT
-//! map in the large-design corner while the FF map stays positive.
+//! over a PE x SIMD grid (4-bit standard type), through the parallel
+//! exploration engine. Positive entries mean the RTL design is smaller;
+//! the paper's headline is the sign flip of the LUT map in the
+//! large-design corner while the FF map stays positive.
 //!
 //! Run with: `cargo bench --bench fig14_heatmap`
 
-use finn_mvu::harness::{bench, fig14_heatmap};
+use finn_mvu::explore::Explorer;
+use finn_mvu::harness::{bench, fig14_heatmap_with};
 
 fn main() {
-    let (lut, ff) = fig14_heatmap().unwrap();
+    let ex = Explorer::parallel();
+    let (lut, ff) = fig14_heatmap_with(&ex).unwrap();
     println!("Fig. 14(a) dLUT = HLS - RTL (positive: RTL smaller)");
     println!("{}", lut.render());
     println!("Fig. 14(b) dFF = HLS - RTL");
@@ -24,8 +27,9 @@ fn main() {
         if last < 0 { "RTL larger — crossover reproduced" } else { "no crossover" }
     );
 
-    let r = bench("fig14/heatmap", || {
-        std::hint::black_box(fig14_heatmap().unwrap());
+    let r = bench("fig14/heatmap_parallel_cached", || {
+        std::hint::black_box(fig14_heatmap_with(&ex).unwrap());
     });
     println!("{r}");
+    println!("cache: {}", ex.cache_stats());
 }

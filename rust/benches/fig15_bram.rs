@@ -1,15 +1,20 @@
 //! Regenerates paper Fig. 15: BRAM usage for HLS and RTL across all six
-//! sweeps with 1-bit precision. The paper's headline: HLS uses at least
-//! 2x the BRAM, and RTL frequently uses none at all.
+//! sweeps with 1-bit precision, through the parallel exploration engine
+//! (the sweeps overlap, so revisited geometries come from the cache). The
+//! paper's headline: HLS uses at least 2x the BRAM, and RTL frequently
+//! uses none at all.
 //!
 //! Run with: `cargo bench --bench fig15_bram`
 
-use finn_mvu::harness::{bench, fig15_bram};
+use finn_mvu::explore::Explorer;
+use finn_mvu::harness::{bench, fig15_bram_with};
 
 fn main() {
-    let t = fig15_bram().unwrap();
+    let ex = Explorer::parallel();
+    let t = fig15_bram_with(&ex).unwrap();
     println!("Fig. 15 — BRAM18 usage, 1-bit precision");
     println!("{}", t.render());
+    println!("engine cache (shared points served from cache): {}", ex.cache_stats());
 
     // aggregate shape check
     let s = t.render();
@@ -33,8 +38,8 @@ fn main() {
         hls_total as f64 / rtl_total.max(1) as f64
     );
 
-    let r = bench("fig15/bram_sweep", || {
-        std::hint::black_box(fig15_bram().unwrap());
+    let r = bench("fig15/bram_sweep_parallel_cached", || {
+        std::hint::black_box(fig15_bram_with(&ex).unwrap());
     });
     println!("{r}");
 }

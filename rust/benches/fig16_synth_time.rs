@@ -1,12 +1,15 @@
 //! Regenerates paper Fig. 16: synthesis time vs the number of PEs and
-//! SIMDs. Headline: HLS takes >= 10x longer with superlinear growth.
+//! SIMDs, through the parallel exploration engine. Headline: HLS takes
+//! >= 10x longer with superlinear growth.
 //!
 //! Run with: `cargo bench --bench fig16_synth_time`
 
-use finn_mvu::harness::{bench, fig16_synth_time};
+use finn_mvu::explore::Explorer;
+use finn_mvu::harness::{bench, fig16_synth_time_with};
 
 fn main() {
-    let t = fig16_synth_time().unwrap();
+    let ex = Explorer::parallel();
+    let t = fig16_synth_time_with(&ex).unwrap();
     println!("Fig. 16 — synthesis time (standard type, 4-bit)");
     println!("{}", t.render());
 
@@ -20,8 +23,9 @@ fn main() {
     let max = ratios.iter().cloned().fold(0.0, f64::max);
     println!("shape: HLS/RTL synthesis-time ratio spans {min:.1}x .. {max:.1}x (paper: >= 10x)");
 
-    let r = bench("fig16/synth_model", || {
-        std::hint::black_box(fig16_synth_time().unwrap());
+    let r = bench("fig16/synth_model_parallel_cached", || {
+        std::hint::black_box(fig16_synth_time_with(&ex).unwrap());
     });
     println!("{r}");
+    println!("cache: {}", ex.cache_stats());
 }

@@ -2,13 +2,16 @@
 //!
 //!   * simulator throughput in cycles/second on the NID layer-0 MVU and a
 //!     large PE=SIMD=32 conv MVU (the L3 optimization target);
+//!   * the exploration engine over the full Table 2 grid — serial-cold vs
+//!     parallel-cold vs cache-warm (the repo's core sweep workload);
 //!   * PJRT executable invocation latency at batch 1 and 16;
 //!   * quantized reference GEMM throughput (the numeric baseline).
 //!
 //! Run with: `cargo bench --bench hotpath`
 
 use finn_mvu::cfg::{nid_layers, LayerParams, SimdType};
-use finn_mvu::harness::{bench, random_weights};
+use finn_mvu::explore::Explorer;
+use finn_mvu::harness::{bench, random_weights, SweepKind};
 use finn_mvu::quant::matvec;
 use finn_mvu::runtime::{default_artifacts_dir, Engine};
 use finn_mvu::sim::run_mvu;
@@ -38,12 +41,45 @@ fn sim_bench(name: &str, params: &LayerParams, n_vec: usize) {
     );
 }
 
+fn explore_bench() {
+    // the full Table 2 grid (all six sweeps x three SIMD types)
+    let points: Vec<_> = SweepKind::ALL
+        .into_iter()
+        .flat_map(|k| SimdType::ALL.into_iter().flat_map(move |ty| k.points(ty)))
+        .collect();
+    println!("explore grid: {} points (Table 2, all sweeps x all types)", points.len());
+
+    let serial_cold = bench("explore/table2_grid_serial_cold", || {
+        std::hint::black_box(Explorer::serial().evaluate_points(&points).unwrap());
+    });
+    println!("{serial_cold}");
+    let parallel_cold = bench("explore/table2_grid_parallel_cold", || {
+        std::hint::black_box(Explorer::parallel().evaluate_points(&points).unwrap());
+    });
+    println!("{parallel_cold}");
+    let ex = Explorer::parallel();
+    ex.evaluate_points(&points).unwrap(); // fill the cache
+    let warm = bench("explore/table2_grid_cache_warm", || {
+        std::hint::black_box(ex.evaluate_points(&points).unwrap());
+    });
+    println!("{warm}");
+    println!(
+        "    -> parallel speedup {:.1}x, cache speedup {:.1}x ({})",
+        serial_cold.mean_ns / parallel_cold.mean_ns.max(1.0),
+        serial_cold.mean_ns / warm.mean_ns.max(1.0),
+        ex.cache_stats()
+    );
+}
+
 fn main() {
     // L3 simulator hot loop
     let nid0 = nid_layers().remove(0);
     sim_bench("sim/nid_layer0_x32vec", &nid0, 32);
     let big = LayerParams::conv("big", 64, 8, 64, 4, 32, 32, SimdType::Standard, 4, 4);
     sim_bench("sim/conv_pe32_simd32_x4img", &big, 4 * big.output_pixels());
+
+    // the design-space exploration workload (the tentpole hot path)
+    explore_bench();
 
     // reference GEMM baseline
     let w = random_weights(&nid0, 13);
@@ -57,15 +93,19 @@ fn main() {
     // PJRT invocation latency
     let dir = default_artifacts_dir();
     if dir.join("manifest.json").exists() {
-        let engine = Engine::new(&dir).unwrap();
-        for (name, n_in) in [("nid_fused_b1", 600usize), ("nid_fused_b16", 16 * 600)] {
-            let k = engine.load(name).unwrap();
-            let input: Vec<i32> = (0..n_in).map(|i| (i % 4) as i32).collect();
-            let r = bench(&format!("pjrt/{name}"), || {
-                std::hint::black_box(k.run(&input).unwrap());
-            });
-            let batch = k.info.batch as f64;
-            println!("{r}\n    -> {:.0} inferences/s", r.throughput(batch));
+        match Engine::new(&dir) {
+            Ok(engine) => {
+                for (name, n_in) in [("nid_fused_b1", 600usize), ("nid_fused_b16", 16 * 600)] {
+                    let k = engine.load(name).unwrap();
+                    let input: Vec<i32> = (0..n_in).map(|i| (i % 4) as i32).collect();
+                    let r = bench(&format!("pjrt/{name}"), || {
+                        std::hint::black_box(k.run(&input).unwrap());
+                    });
+                    let batch = k.info.batch as f64;
+                    println!("{r}\n    -> {:.0} inferences/s", r.throughput(batch));
+                }
+            }
+            Err(e) => println!("(PJRT benches unavailable: {e})"),
         }
     } else {
         println!("(artifacts missing — skipping PJRT benches)");

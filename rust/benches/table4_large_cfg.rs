@@ -1,32 +1,34 @@
 //! Regenerates paper Table 4: resource utilization for the larger designs
-//! of Table 3 (PE = SIMD = 16, growing IFM channels). Headline: LUT
-//! convergence between HLS and RTL, HLS keeps using more FFs.
+//! of Table 3 (PE = SIMD = 16, growing IFM channels), through the
+//! parallel exploration engine. Headline: LUT convergence between HLS and
+//! RTL, HLS keeps using more FFs.
 //!
 //! Run with: `cargo bench --bench table4_large_cfg`
 
 use finn_mvu::cfg::table3_configs;
-use finn_mvu::estimate::{estimate, Style};
-use finn_mvu::harness::{bench, table4};
+use finn_mvu::explore::Explorer;
+use finn_mvu::harness::{bench, table4_with};
 
 fn main() {
+    let ex = Explorer::parallel();
     println!("Table 4 — resource utilization for Table 3 configurations");
-    println!("{}", table4().unwrap().render());
+    println!("{}", table4_with(&ex).unwrap().render());
 
     println!("paper values: LUTs HLS {{7528, 7354, 7919}} RTL {{7572, 7599, 8102}}");
     println!("              FFs  HLS {{8400, 7560, 9634}} RTL {{5838, 5857, 5659}}");
 
-    for (i, sp) in table3_configs().iter().enumerate() {
-        let r = estimate(&sp.params, Style::Rtl).unwrap();
-        let h = estimate(&sp.params, Style::Hls).unwrap();
+    let reports = ex.evaluate_points(&table3_configs()).unwrap();
+    for (i, r) in reports.iter().enumerate() {
         println!(
             "config #{i}: LUT ratio RTL/HLS = {:.3}, FF ratio HLS/RTL = {:.3}",
-            r.luts as f64 / h.luts as f64,
-            h.ffs as f64 / r.ffs as f64
+            r.rtl.luts as f64 / r.hls.luts as f64,
+            r.hls.ffs as f64 / r.rtl.ffs as f64
         );
     }
 
-    let r = bench("table4/estimate", || {
-        std::hint::black_box(table4().unwrap());
+    let r = bench("table4/estimate_parallel_cached", || {
+        std::hint::black_box(table4_with(&ex).unwrap());
     });
     println!("{r}");
+    println!("cache: {}", ex.cache_stats());
 }

@@ -1,14 +1,17 @@
 //! Regenerates paper Table 5: critical-path delay (min/max/mean in ns)
-//! over the IFM/OFM/PE/SIMD sweeps for all three SIMD types. Headline:
-//! RTL is 45-80% faster everywhere; the standard-type HLS kernel sits at
-//! ~7.4 ns while RTL stays near 1.5 ns for small cores.
+//! over the IFM/OFM/PE/SIMD sweeps for all three SIMD types, through the
+//! parallel exploration engine. Headline: RTL is 45-80% faster
+//! everywhere; the standard-type HLS kernel sits at ~7.4 ns while RTL
+//! stays near 1.5 ns for small cores.
 //!
 //! Run with: `cargo bench --bench table5_critical_path`
 
-use finn_mvu::harness::{bench, table5};
+use finn_mvu::explore::Explorer;
+use finn_mvu::harness::{bench, table5_with};
 
 fn main() {
-    let (t, rows) = table5().unwrap();
+    let ex = Explorer::parallel();
+    let (t, rows) = table5_with(&ex).unwrap();
     println!("Table 5 — critical path delay (ns)");
     println!("{}", t.render());
 
@@ -25,8 +28,9 @@ fn main() {
         );
     }
 
-    let r = bench("table5/timing_model", || {
-        std::hint::black_box(table5().unwrap());
+    let r = bench("table5/timing_model_parallel_cached", || {
+        std::hint::black_box(table5_with(&ex).unwrap());
     });
     println!("{r}");
+    println!("cache: {}", ex.cache_stats());
 }

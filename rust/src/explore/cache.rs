@@ -1,0 +1,270 @@
+//! Content-addressed result cache for design-space exploration.
+//!
+//! Keys are canonical text renderings of `(LayerParams, Style)` (estimates)
+//! or `(LayerParams, stimulus)` (simulations); the content address is the
+//! FNV-1a 64-bit hash of that text. Values are the deterministic JSON
+//! serializations produced by `explore::report`, so a cache hit returns a
+//! report that is **byte-identical** to the one a fresh computation would
+//! serialize to (the in-tree JSON writer orders object keys and emits
+//! shortest-round-trip floats).
+//!
+//! Two layers:
+//!   * an in-memory map (always on) shared by all workers of an
+//!     [`Explorer`](super::Explorer);
+//!   * an optional on-disk directory of `<hash>.json` files so repeated
+//!     sweeps across processes — e.g. regenerating Figs. 8–13, which share
+//!     design points — are computed once. Disk entries store the full key
+//!     text and are verified on read, so a hash collision or a stale
+//!     schema degrades to a miss, never to a wrong answer.
+//!
+//! `LayerParams::name` is a display label, not a design parameter: it is
+//! excluded from the key, so identical geometries reached from different
+//! sweeps (`pe64` in Fig. 12 and `simd64` in Fig. 13 describe the same
+//! core) share one entry.
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::Mutex;
+
+use anyhow::{Context, Result};
+
+use crate::cfg::LayerParams;
+use crate::estimate::Style;
+use crate::util::json::Json;
+
+/// Canonical key text for a design point (everything but the name).
+pub fn params_key(p: &LayerParams) -> String {
+    format!(
+        "ic={};dim={};oc={};kd={};pe={};simd={};ty={};wb={};ib={};ob={}",
+        p.ifm_ch,
+        p.ifm_dim,
+        p.ofm_ch,
+        p.kernel_dim,
+        p.pe,
+        p.simd,
+        p.simd_type.name(),
+        p.weight_bits,
+        p.input_bits,
+        p.output_bits
+    )
+}
+
+/// Cache key for an estimate of one design point in one style. The crate
+/// version is part of the key: a model change that ships as a new version
+/// invalidates on-disk entries instead of silently serving stale numbers.
+pub fn estimate_key(p: &LayerParams, style: Style) -> String {
+    format!("v{}/estimate/{}/{}", crate::VERSION, style.name(), params_key(p))
+}
+
+/// Cache key for a cycle-accurate simulation with the engine's canonical
+/// deterministic stimulus (`vectors` inputs from `seed`).
+pub fn sim_key(p: &LayerParams, vectors: usize, seed: u64) -> String {
+    format!("v{}/sim/n{}/s{:016x}/{}", crate::VERSION, vectors, seed, params_key(p))
+}
+
+/// FNV-1a 64-bit content hash of a key string.
+pub fn content_hash(key: &str) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for b in key.as_bytes() {
+        h ^= *b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    h
+}
+
+/// Hit/miss counters (memory hits and disk hits reported separately).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct CacheStats {
+    pub hits: usize,
+    pub disk_hits: usize,
+    pub misses: usize,
+}
+
+impl CacheStats {
+    /// Total lookups served from either cache layer.
+    pub fn total_hits(&self) -> usize {
+        self.hits + self.disk_hits
+    }
+}
+
+impl std::fmt::Display for CacheStats {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "{} hits ({} memory, {} disk), {} misses",
+            self.total_hits(),
+            self.hits,
+            self.disk_hits,
+            self.misses
+        )
+    }
+}
+
+static TMP_COUNTER: AtomicU64 = AtomicU64::new(0);
+
+/// The two-layer cache. Thread-safe; shared by reference across the
+/// explorer's workers.
+#[derive(Debug)]
+pub struct ResultCache {
+    /// Parsed values, not text: hits clone the tree out under the lock
+    /// instead of re-parsing JSON while holding it.
+    mem: Mutex<HashMap<String, Json>>,
+    dir: Option<PathBuf>,
+    hits: AtomicUsize,
+    disk_hits: AtomicUsize,
+    misses: AtomicUsize,
+}
+
+impl ResultCache {
+    /// Memory-only cache.
+    pub fn in_memory() -> ResultCache {
+        ResultCache {
+            mem: Mutex::new(HashMap::new()),
+            dir: None,
+            hits: AtomicUsize::new(0),
+            disk_hits: AtomicUsize::new(0),
+            misses: AtomicUsize::new(0),
+        }
+    }
+
+    /// Memory cache backed by an on-disk directory (created if missing).
+    pub fn with_dir(dir: &Path) -> Result<ResultCache> {
+        std::fs::create_dir_all(dir)
+            .with_context(|| format!("creating cache directory {}", dir.display()))?;
+        let mut c = ResultCache::in_memory();
+        c.dir = Some(dir.to_path_buf());
+        Ok(c)
+    }
+
+    pub fn dir(&self) -> Option<&Path> {
+        self.dir.as_deref()
+    }
+
+    fn path_for(&self, key: &str) -> Option<PathBuf> {
+        self.dir.as_ref().map(|d| d.join(format!("{:016x}.json", content_hash(key))))
+    }
+
+    /// Look up a key; returns the cached JSON value on a hit.
+    pub fn get_json(&self, key: &str) -> Option<Json> {
+        let cached = self.mem.lock().unwrap().get(key).cloned();
+        if let Some(v) = cached {
+            self.hits.fetch_add(1, Ordering::Relaxed);
+            return Some(v);
+        }
+        if let Some(path) = self.path_for(key) {
+            if let Ok(text) = std::fs::read_to_string(&path) {
+                if let Ok(doc) = Json::parse(&text) {
+                    // verify the full key: collisions and stale schemas
+                    // degrade to a miss.
+                    if doc.get("key").as_str() == Some(key) && !doc.get("value").is_null() {
+                        let value = doc.get("value").clone();
+                        self.mem.lock().unwrap().insert(key.to_string(), value.clone());
+                        self.disk_hits.fetch_add(1, Ordering::Relaxed);
+                        return Some(value);
+                    }
+                }
+            }
+        }
+        self.misses.fetch_add(1, Ordering::Relaxed);
+        None
+    }
+
+    /// Insert a value. Disk writes are atomic (temp file + rename), so a
+    /// concurrent reader sees either the old entry or the complete new one.
+    pub fn put_json(&self, key: &str, value: &Json) -> Result<()> {
+        self.mem.lock().unwrap().insert(key.to_string(), value.clone());
+        if let Some(path) = self.path_for(key) {
+            let mut doc = Json::obj();
+            doc.set("key", Json::Str(key.to_string()));
+            doc.set("value", value.clone());
+            let tmp = path.with_extension(format!(
+                "tmp.{}.{}",
+                std::process::id(),
+                TMP_COUNTER.fetch_add(1, Ordering::Relaxed)
+            ));
+            std::fs::write(&tmp, doc.to_string())
+                .with_context(|| format!("writing cache entry {}", tmp.display()))?;
+            std::fs::rename(&tmp, &path)
+                .with_context(|| format!("publishing cache entry {}", path.display()))?;
+        }
+        Ok(())
+    }
+
+    /// Number of in-memory entries.
+    pub fn entries(&self) -> usize {
+        self.mem.lock().unwrap().len()
+    }
+
+    pub fn stats(&self) -> CacheStats {
+        CacheStats {
+            hits: self.hits.load(Ordering::Relaxed),
+            disk_hits: self.disk_hits.load(Ordering::Relaxed),
+            misses: self.misses.load(Ordering::Relaxed),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cfg::{LayerParams, SimdType};
+
+    fn params(name: &str) -> LayerParams {
+        LayerParams::fc(name, 16, 8, 4, 8, SimdType::Standard, 4, 4, 0)
+    }
+
+    #[test]
+    fn name_is_not_part_of_the_key() {
+        assert_eq!(params_key(&params("a")), params_key(&params("b")));
+        let mut other = params("a");
+        other.pe = 8;
+        assert_ne!(params_key(&params("a")), params_key(&other));
+    }
+
+    #[test]
+    fn estimate_keys_distinguish_styles() {
+        let p = params("k");
+        assert_ne!(estimate_key(&p, Style::Rtl), estimate_key(&p, Style::Hls));
+    }
+
+    #[test]
+    fn memory_roundtrip_and_stats() {
+        let c = ResultCache::in_memory();
+        assert!(c.get_json("missing").is_none());
+        let mut v = Json::obj();
+        v.set("luts", Json::from_i64(42));
+        c.put_json("k1", &v).unwrap();
+        assert_eq!(c.get_json("k1"), Some(v));
+        let s = c.stats();
+        assert_eq!((s.hits, s.disk_hits, s.misses), (1, 0, 1));
+        assert_eq!(c.entries(), 1);
+    }
+
+    #[test]
+    fn disk_roundtrip_verifies_key() {
+        let dir = std::env::temp_dir().join(format!("finn-mvu-cache-ut-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        {
+            let c = ResultCache::with_dir(&dir).unwrap();
+            let mut v = Json::obj();
+            v.set("delay_ns", Json::Num(1.5));
+            c.put_json("key-a", &v).unwrap();
+        }
+        // fresh cache instance: served from disk, byte-identical
+        let c2 = ResultCache::with_dir(&dir).unwrap();
+        let got = c2.get_json("key-a").unwrap();
+        assert_eq!(got.to_string(), r#"{"delay_ns":1.5}"#);
+        assert_eq!(c2.stats().disk_hits, 1);
+        // a different key that happens to map elsewhere misses cleanly
+        assert!(c2.get_json("key-b").is_none());
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn fnv_hash_is_stable() {
+        // pinned so on-disk addresses stay valid across builds
+        assert_eq!(content_hash(""), 0xcbf2_9ce4_8422_2325);
+        assert_eq!(content_hash("a"), 0xaf63_dc4c_8601_ec8c);
+    }
+}

@@ -1,0 +1,358 @@
+//! The parallel sweep executor.
+//!
+//! Topology (same substrate as `coordinator/pipeline.rs`: OS threads +
+//! bounded channels, no external runtime):
+//!
+//! ```text
+//!              +-- worker 0 --+
+//!   job deques |   ...        |--(idx, result)--> bounded channel --> collector
+//!              +-- worker W-1 +
+//! ```
+//!
+//! * Jobs (indices into the input slice) are distributed round-robin over
+//!   per-worker deques; an idle worker pops its own queue front-first and
+//!   **steals** from the back of its neighbours' queues, so skewed
+//!   workloads (one huge design point among many small ones) still keep
+//!   every core busy.
+//! * Workers send `(index, result)` over a bounded channel — full-channel
+//!   blocking is the same backpressure the dataflow pipeline uses.
+//! * The collector re-orders results by index, so the output is
+//!   **byte-identical to serial execution regardless of thread count**:
+//!   evaluation is pure given the deterministic stimulus, and ordering is
+//!   restored structurally rather than by scheduling luck. Errors are
+//!   deterministic too — the error at the smallest failing index wins.
+
+use std::collections::VecDeque;
+use std::sync::mpsc::sync_channel;
+use std::sync::Mutex;
+
+use anyhow::{Context, Result};
+
+use crate::cfg::{LayerParams, SimdType, SweepPoint};
+use crate::estimate::{estimate, Style};
+use crate::quant::{matvec, Matrix};
+use crate::sim::{run_mvu, PIPELINE_STAGES};
+use crate::util::rng::Pcg32;
+
+use super::cache::{self, CacheStats, ResultCache};
+use super::report::{PointReport, SimSummary, StyleReport};
+
+/// Engine configuration.
+#[derive(Debug, Clone, Default)]
+pub struct ExploreConfig {
+    /// Worker threads; 0 = one per available core.
+    pub threads: usize,
+    /// Input vectors for the cycle-accurate simulation of each point;
+    /// 0 disables simulation (estimates only).
+    pub sim_vectors: usize,
+    /// On-disk cache directory; `None` keeps the cache in memory only.
+    pub cache_dir: Option<std::path::PathBuf>,
+}
+
+/// The design-space exploration engine: a work-stealing parallel map with
+/// a content-addressed result cache keyed by `(LayerParams, Style)`.
+#[derive(Debug)]
+pub struct Explorer {
+    threads: usize,
+    sim_vectors: usize,
+    cache: ResultCache,
+}
+
+impl Explorer {
+    pub fn new(cfg: ExploreConfig) -> Result<Explorer> {
+        let cache = match &cfg.cache_dir {
+            Some(dir) => ResultCache::with_dir(dir)?,
+            None => ResultCache::in_memory(),
+        };
+        Ok(Explorer { threads: cfg.threads, sim_vectors: cfg.sim_vectors, cache })
+    }
+
+    /// Single-threaded, memory-cached — the reference executor the
+    /// parallel path must reproduce byte-for-byte.
+    pub fn serial() -> Explorer {
+        Explorer::with_threads(1)
+    }
+
+    /// One worker per available core, memory-cached.
+    pub fn parallel() -> Explorer {
+        Explorer::with_threads(0)
+    }
+
+    /// Explicit worker count (0 = one per core), memory-cached.
+    pub fn with_threads(threads: usize) -> Explorer {
+        Explorer { threads, sim_vectors: 0, cache: ResultCache::in_memory() }
+    }
+
+    pub fn cache(&self) -> &ResultCache {
+        &self.cache
+    }
+
+    pub fn cache_stats(&self) -> CacheStats {
+        self.cache.stats()
+    }
+
+    fn worker_count(&self, jobs: usize) -> usize {
+        let n = if self.threads == 0 {
+            std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+        } else {
+            self.threads
+        };
+        n.clamp(1, jobs.max(1))
+    }
+
+    /// Deterministic work-stealing parallel map: `out[i] = f(i, &items[i])`,
+    /// in input order, identical for every thread count.
+    pub fn par_map<T, R, F>(&self, items: &[T], f: F) -> Vec<Result<R>>
+    where
+        T: Sync,
+        R: Send,
+        F: Fn(usize, &T) -> Result<R> + Sync,
+    {
+        let n = items.len();
+        if n == 0 {
+            return Vec::new();
+        }
+        let workers = self.worker_count(n);
+        if workers <= 1 {
+            return items.iter().enumerate().map(|(i, t)| f(i, t)).collect();
+        }
+
+        // round-robin seed distribution over per-worker deques
+        let queues: Vec<Mutex<VecDeque<usize>>> = (0..workers)
+            .map(|w| Mutex::new((w..n).step_by(workers).collect()))
+            .collect();
+        let mut slots: Vec<Option<Result<R>>> = (0..n).map(|_| None).collect();
+
+        std::thread::scope(|scope| {
+            let (tx, rx) = sync_channel::<(usize, Result<R>)>(2 * workers);
+            for w in 0..workers {
+                let tx = tx.clone();
+                let queues = &queues;
+                let f = &f;
+                scope.spawn(move || {
+                    while let Some(i) = next_job(queues, w) {
+                        if tx.send((i, f(i, &items[i]))).is_err() {
+                            break; // collector gone (a sibling panicked)
+                        }
+                    }
+                });
+            }
+            drop(tx);
+            // collector: restore input order
+            for (i, r) in rx {
+                slots[i] = Some(r);
+            }
+        });
+
+        slots
+            .into_iter()
+            .map(|s| s.expect("every job index is queued exactly once"))
+            .collect()
+    }
+
+    /// Evaluate sweep points (estimates for both styles, plus the
+    /// simulation when `sim_vectors > 0`). Output order matches input
+    /// order; on failure the error of the smallest failing index is
+    /// returned, independent of thread count.
+    pub fn evaluate_points(&self, points: &[SweepPoint]) -> Result<Vec<PointReport>> {
+        let results = self.par_map(points, |_, sp| self.evaluate_point(sp));
+        let mut out = Vec::with_capacity(results.len());
+        for (i, r) in results.into_iter().enumerate() {
+            out.push(r.with_context(|| format!("sweep point {} ({})", i, points[i].params))?);
+        }
+        Ok(out)
+    }
+
+    /// Evaluate bare parameter sets (`swept` becomes the list index).
+    pub fn evaluate_layers(&self, layers: &[LayerParams]) -> Result<Vec<PointReport>> {
+        let points: Vec<SweepPoint> = layers
+            .iter()
+            .enumerate()
+            .map(|(i, p)| SweepPoint { swept: i, params: p.clone() })
+            .collect();
+        self.evaluate_points(&points)
+    }
+
+    /// Evaluate one point, going through the cache for each part.
+    pub fn evaluate_point(&self, sp: &SweepPoint) -> Result<PointReport> {
+        let rtl = self.cached_estimate(&sp.params, Style::Rtl)?;
+        let hls = self.cached_estimate(&sp.params, Style::Hls)?;
+        let sim = if self.sim_vectors > 0 {
+            Some(self.cached_sim(&sp.params, self.sim_vectors)?)
+        } else {
+            None
+        };
+        Ok(PointReport {
+            name: sp.params.name.clone(),
+            swept: sp.swept,
+            analytic_cycles: sp.params.analytic_cycles(PIPELINE_STAGES),
+            rtl,
+            hls,
+            sim,
+        })
+    }
+
+    fn cached_estimate(&self, p: &LayerParams, style: Style) -> Result<StyleReport> {
+        let key = cache::estimate_key(p, style);
+        if let Some(j) = self.cache.get_json(&key) {
+            return StyleReport::from_json(&j);
+        }
+        let rep = StyleReport::from_estimate(&estimate(p, style)?);
+        self.cache.put_json(&key, &rep.to_json())?;
+        Ok(rep)
+    }
+
+    fn cached_sim(&self, p: &LayerParams, vectors: usize) -> Result<SimSummary> {
+        // the stimulus seed is derived from the design point itself, so it
+        // is independent of evaluation order and thread count.
+        let seed = cache::content_hash(&cache::params_key(p));
+        let key = cache::sim_key(p, vectors, seed);
+        if let Some(j) = self.cache.get_json(&key) {
+            return SimSummary::from_json(&j);
+        }
+        let weights = stimulus_weights(p, seed);
+        let inputs = stimulus_inputs(p, seed ^ 0x9e37_79b9_7f4a_7c15, vectors);
+        let rep = run_mvu(p, &weights, &inputs)?;
+        let mut matches = rep.outputs.len() == inputs.len();
+        for (x, y) in inputs.iter().zip(&rep.outputs) {
+            matches &= &matvec(x, &weights, p.simd_type)? == y;
+        }
+        let sim = SimSummary {
+            vectors,
+            exec_cycles: rep.exec_cycles,
+            stall_cycles: rep.stall_cycles,
+            slots_consumed: rep.slots_consumed,
+            fifo_max_occupancy: rep.fifo_max_occupancy,
+            matches_reference: matches,
+        };
+        self.cache.put_json(&key, &sim.to_json())?;
+        Ok(sim)
+    }
+}
+
+/// Pop a job: own queue front-first, then steal from the back of the
+/// other workers' queues. All jobs are enqueued before workers start, so
+/// an all-empty scan means the map is done.
+fn next_job(queues: &[Mutex<VecDeque<usize>>], own: usize) -> Option<usize> {
+    if let Some(i) = queues[own].lock().unwrap().pop_front() {
+        return Some(i);
+    }
+    let n = queues.len();
+    for d in 1..n {
+        if let Some(i) = queues[(own + d) % n].lock().unwrap().pop_back() {
+            return Some(i);
+        }
+    }
+    None
+}
+
+/// Canonical sweep stimulus: weights in the legal range for the SIMD
+/// type, seeded from the design point's content hash. Delegates to
+/// `harness::random_weights` so the engine's stimulus and the harness's
+/// can never drift apart.
+pub fn stimulus_weights(params: &LayerParams, seed: u64) -> Matrix {
+    crate::harness::random_weights(params, seed)
+}
+
+/// Canonical input vectors for the simulation of one design point.
+pub fn stimulus_inputs(params: &LayerParams, seed: u64, n: usize) -> Vec<Vec<i32>> {
+    let mut rng = Pcg32::new(seed);
+    (0..n)
+        .map(|_| {
+            (0..params.matrix_cols())
+                .map(|_| match params.simd_type {
+                    SimdType::Xnor => rng.next_range(2) as i32,
+                    _ => {
+                        let span = 1u32 << params.input_bits;
+                        rng.next_range(span) as i32 - (span / 2) as i32
+                    }
+                })
+                .collect()
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cfg::{sweep_ifm_channels, sweep_pe, sweep_simd};
+
+    #[test]
+    fn par_map_preserves_order_and_values() {
+        let items: Vec<usize> = (0..37).collect();
+        let ex = Explorer::with_threads(4);
+        let out = ex.par_map(&items, |i, &v| {
+            assert_eq!(i, v);
+            Ok(v * v)
+        });
+        let got: Vec<usize> = out.into_iter().map(|r| r.unwrap()).collect();
+        assert_eq!(got, items.iter().map(|v| v * v).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn par_map_reports_errors_at_their_index() {
+        let items: Vec<usize> = (0..16).collect();
+        let ex = Explorer::with_threads(8);
+        let out = ex.par_map(&items, |_, &v| {
+            if v % 5 == 3 {
+                anyhow::bail!("boom at {v}")
+            }
+            Ok(v)
+        });
+        for (i, r) in out.iter().enumerate() {
+            assert_eq!(r.is_err(), i % 5 == 3, "index {i}");
+        }
+    }
+
+    #[test]
+    fn parallel_equals_serial_on_a_real_sweep() {
+        let points = sweep_ifm_channels(SimdType::Standard);
+        let serial = Explorer::serial().evaluate_points(&points).unwrap();
+        for threads in [2usize, 8] {
+            let par = Explorer::with_threads(threads).evaluate_points(&points).unwrap();
+            assert_eq!(par, serial, "threads={threads}");
+        }
+        // ordering: report i belongs to input point i
+        for (sp, r) in points.iter().zip(&serial) {
+            assert_eq!(r.name, sp.params.name);
+            assert_eq!(r.swept, sp.swept);
+        }
+    }
+
+    #[test]
+    fn cache_dedups_identical_geometries_across_sweeps() {
+        // pe64/simd64 in the PE and SIMD sweeps are the same core under
+        // different names; the second sweep must hit the cache.
+        let ex = Explorer::serial();
+        ex.evaluate_points(&sweep_pe(SimdType::Standard)).unwrap();
+        let before = ex.cache_stats();
+        ex.evaluate_points(&sweep_simd(SimdType::Standard)).unwrap();
+        let after = ex.cache_stats();
+        assert!(
+            after.total_hits() > before.total_hits(),
+            "shared point should hit: {before:?} -> {after:?}"
+        );
+    }
+
+    #[test]
+    fn sim_summary_matches_reference_and_formula() {
+        let points = sweep_ifm_channels(SimdType::Xnor);
+        let ex = Explorer::new(ExploreConfig { threads: 2, sim_vectors: 2, cache_dir: None })
+            .unwrap();
+        let reports = ex.evaluate_points(&points[..2]).unwrap();
+        for (sp, r) in points[..2].iter().zip(&reports) {
+            let sim = r.sim.as_ref().unwrap();
+            assert!(sim.matches_reference, "{}", r.name);
+            let slots = sp.params.synapse_fold() * sp.params.neuron_fold() * sim.vectors;
+            assert_eq!(sim.slots_consumed, slots, "{}", r.name);
+            assert_eq!(sim.exec_cycles, slots + PIPELINE_STAGES + 1, "{}", r.name);
+            assert_eq!(sim.stall_cycles, 0, "{}", r.name);
+        }
+    }
+
+    #[test]
+    fn empty_input_is_fine() {
+        let ex = Explorer::parallel();
+        assert!(ex.evaluate_points(&[]).unwrap().is_empty());
+    }
+}

@@ -1,0 +1,40 @@
+//! Parallel design-space exploration with result caching.
+//!
+//! The paper's headline result is that a fast RTL flow makes *exhaustive*
+//! design-space sweeps practical (§6.4, Figs. 8–16). This module turns the
+//! repo's core workload — evaluating `SweepPoint`s via the cycle-accurate
+//! simulator (`sim::run_mvu`) and the structural estimator
+//! (`estimate::estimate`, both styles) — into a scalable service layer:
+//!
+//! * [`Explorer`] — a multi-threaded, work-stealing sweep executor built
+//!   on `std::thread` + bounded channels (the same substrate as
+//!   `coordinator/pipeline.rs`). Workers pull indexed jobs from per-worker
+//!   deques (stealing from the back of their neighbours when idle) and a
+//!   collector re-orders results, so sweep output is **byte-identical to
+//!   serial execution for every thread count** — asserted by the property
+//!   tests in `tests/explore_properties.rs`.
+//! * [`ResultCache`] — a content-addressed cache keyed by
+//!   `(LayerParams, Style)` (FNV-1a over the canonical parameter text,
+//!   `LayerParams::name` excluded), in memory and optionally on disk as
+//!   JSON. Overlapping configurations — e.g. the shared points of the
+//!   Fig. 8–13 grids — are served from cache on every revisit; cache hits
+//!   return bit-identical reports. (There is deliberately no single-flight
+//!   guard: two workers that miss the same key *simultaneously* both
+//!   compute it — evaluation is pure and idempotent, so this only costs a
+//!   little duplicated work in that narrow race, never correctness.)
+//! * [`PointReport`] / [`StyleReport`] / [`SimSummary`] — deterministic
+//!   JSON-serializable results, rendered through the repo's table/JSON
+//!   formats by [`points_to_table`] / [`points_to_json`].
+//!
+//! Every figure/table harness (`harness::figures`, `harness::tables`), the
+//! benches, and the `finn-mvu explore` CLI subcommand drive this engine.
+//! See DESIGN.md §Explore for the architecture notes and the determinism
+//! argument.
+
+mod cache;
+mod engine;
+mod report;
+
+pub use cache::{content_hash, estimate_key, params_key, sim_key, CacheStats, ResultCache};
+pub use engine::{stimulus_inputs, stimulus_weights, ExploreConfig, Explorer};
+pub use report::{points_to_json, points_to_table, PointReport, SimSummary, StyleReport};

@@ -1,7 +1,11 @@
 //! Figure regeneration: the parameter sweeps of paper Figs. 8-16.
 //!
-//! Each function returns both the printable table and the raw series so
-//! benches and tests can assert the paper's qualitative shapes.
+//! All sweeps are evaluated through the [`explore`](crate::explore)
+//! engine — parallel across cores, content-addressed-cached, and
+//! byte-deterministic — instead of hand-rolled `estimate()` loops. Each
+//! function has a `_with` variant taking an explicit [`Explorer`] so
+//! benches and the CLI can share one engine (and its cache) across
+//! figures; the plain variant spins up a per-call parallel engine.
 
 use anyhow::Result;
 
@@ -9,8 +13,7 @@ use crate::cfg::{
     sweep_ifm_channels, sweep_ifm_dim, sweep_kernel_dim, sweep_ofm_channels, sweep_pe, sweep_simd,
     SimdType, SweepPoint,
 };
-use crate::estimate::{estimate, Style};
-use crate::sim::PIPELINE_STAGES;
+use crate::explore::Explorer;
 use crate::util::table::{fnum, Table};
 
 /// Which parameter a figure sweeps.
@@ -31,6 +34,16 @@ pub enum SweepKind {
 }
 
 impl SweepKind {
+    /// All six Table 2 sweeps, in figure order.
+    pub const ALL: [SweepKind; 6] = [
+        SweepKind::IfmChannels,
+        SweepKind::KernelDim,
+        SweepKind::OfmChannels,
+        SweepKind::IfmDim,
+        SweepKind::Pe,
+        SweepKind::Simd,
+    ];
+
     pub fn points(&self, ty: SimdType) -> Vec<SweepPoint> {
         match self {
             SweepKind::IfmChannels => sweep_ifm_channels(ty),
@@ -86,19 +99,27 @@ pub struct FigureSeries {
 
 /// Regenerate one resource/latency figure (Figs. 8-13) for one SIMD type.
 pub fn resource_sweep_figure(kind: SweepKind, ty: SimdType) -> Result<FigureSeries> {
-    let mut points = Vec::new();
-    for sp in kind.points(ty) {
-        let r = estimate(&sp.params, Style::Rtl)?;
-        let h = estimate(&sp.params, Style::Hls)?;
-        points.push(FigurePoint {
-            swept: sp.swept,
-            luts_hls: h.luts,
-            luts_rtl: r.luts,
-            ffs_hls: h.ffs,
-            ffs_rtl: r.ffs,
-            cycles: sp.params.analytic_cycles(PIPELINE_STAGES),
-        });
-    }
+    resource_sweep_figure_with(&Explorer::parallel(), kind, ty)
+}
+
+/// Same, driving a caller-provided exploration engine.
+pub fn resource_sweep_figure_with(
+    ex: &Explorer,
+    kind: SweepKind,
+    ty: SimdType,
+) -> Result<FigureSeries> {
+    let reports = ex.evaluate_points(&kind.points(ty))?;
+    let points = reports
+        .iter()
+        .map(|r| FigurePoint {
+            swept: r.swept,
+            luts_hls: r.hls.luts,
+            luts_rtl: r.rtl.luts,
+            ffs_hls: r.hls.ffs,
+            ffs_rtl: r.rtl.ffs,
+            cycles: r.analytic_cycles,
+        })
+        .collect();
     Ok(FigureSeries { kind, simd_type: ty, points })
 }
 
@@ -126,40 +147,82 @@ impl FigureSeries {
     }
 }
 
+/// The shared body of the six figure benches (`benches/fig08..fig13`):
+/// print the sweep for all SIMD types through `ex`, then benchmark it
+/// cold (fresh serial engine per iteration) vs warm (shared parallel
+/// engine + cache) and print the speedup.
+pub fn run_figure_bench(name: &str, kind: SweepKind, ex: &Explorer) {
+    use super::bench::bench;
+    for ty in SimdType::ALL {
+        let series = resource_sweep_figure_with(ex, kind, ty).unwrap();
+        println!("{} — {} — {}", kind.figure(), kind.label(), ty);
+        println!("{}", series.to_table().render());
+    }
+    println!("engine cache after first pass: {}", ex.cache_stats());
+
+    let cold = bench(&format!("{name}/serial_uncached"), || {
+        let fresh = Explorer::serial();
+        for ty in SimdType::ALL {
+            std::hint::black_box(resource_sweep_figure_with(&fresh, kind, ty).unwrap());
+        }
+    });
+    println!("{cold}");
+    let warm = bench(&format!("{name}/parallel_cached"), || {
+        for ty in SimdType::ALL {
+            std::hint::black_box(resource_sweep_figure_with(ex, kind, ty).unwrap());
+        }
+    });
+    println!("{warm}");
+    println!(
+        "    -> warm/cold speedup {:.1}x (cache: {})",
+        cold.mean_ns / warm.mean_ns.max(1.0),
+        ex.cache_stats()
+    );
+}
+
 /// Fig. 14: heat maps of HLS - RTL resource difference over a PE x SIMD
 /// grid (positive = RTL smaller), 4-bit standard type.
 pub fn fig14_heatmap() -> Result<(Table, Table)> {
+    fig14_heatmap_with(&Explorer::parallel())
+}
+
+/// Same, driving a caller-provided exploration engine.
+pub fn fig14_heatmap_with(ex: &Explorer) -> Result<(Table, Table)> {
     let grid = [2usize, 4, 8, 16, 32, 64];
-    let mut lut_t = Table::new(
-        std::iter::once("PE\\SIMD".to_string())
-            .chain(grid.iter().map(|s| s.to_string()))
-            .collect::<Vec<_>>(),
-    );
-    let mut ff_t = Table::new(
-        std::iter::once("PE\\SIMD".to_string())
-            .chain(grid.iter().map(|s| s.to_string()))
-            .collect::<Vec<_>>(),
-    );
-    for &pe in &grid {
+    let points: Vec<SweepPoint> = grid
+        .iter()
+        .flat_map(|&pe| {
+            grid.iter().map(move |&simd| SweepPoint {
+                swept: simd,
+                params: crate::cfg::LayerParams::conv(
+                    &format!("hm_pe{pe}_s{simd}"),
+                    64,
+                    8,
+                    64,
+                    4,
+                    pe,
+                    simd,
+                    SimdType::Standard,
+                    4,
+                    4,
+                ),
+            })
+        })
+        .collect();
+    let reports = ex.evaluate_points(&points)?;
+
+    let header: Vec<String> = std::iter::once("PE\\SIMD".to_string())
+        .chain(grid.iter().map(|s| s.to_string()))
+        .collect();
+    let mut lut_t = Table::new(header.clone());
+    let mut ff_t = Table::new(header);
+    for (pi, &pe) in grid.iter().enumerate() {
         let mut lut_row = vec![pe.to_string()];
         let mut ff_row = vec![pe.to_string()];
-        for &simd in &grid {
-            let p = crate::cfg::LayerParams::conv(
-                &format!("hm_pe{pe}_s{simd}"),
-                64,
-                8,
-                64,
-                4,
-                pe,
-                simd,
-                SimdType::Standard,
-                4,
-                4,
-            );
-            let r = estimate(&p, Style::Rtl)?;
-            let h = estimate(&p, Style::Hls)?;
-            lut_row.push((h.luts as i64 - r.luts as i64).to_string());
-            ff_row.push((h.ffs as i64 - r.ffs as i64).to_string());
+        for si in 0..grid.len() {
+            let r = &reports[pi * grid.len() + si];
+            lut_row.push((r.hls.luts as i64 - r.rtl.luts as i64).to_string());
+            ff_row.push((r.hls.ffs as i64 - r.rtl.ffs as i64).to_string());
         }
         lut_t.row(lut_row);
         ff_t.row(ff_row);
@@ -169,46 +232,56 @@ pub fn fig14_heatmap() -> Result<(Table, Table)> {
 
 /// Fig. 15: BRAM usage across all six sweeps, 1-bit precision.
 pub fn fig15_bram() -> Result<Table> {
-    let kinds = [
-        SweepKind::IfmChannels,
-        SweepKind::KernelDim,
-        SweepKind::OfmChannels,
-        SweepKind::IfmDim,
-        SweepKind::Pe,
-        SweepKind::Simd,
-    ];
+    fig15_bram_with(&Explorer::parallel())
+}
+
+/// Same, driving a caller-provided exploration engine. The six sweeps
+/// share design points; revisited geometries are served from the cache.
+pub fn fig15_bram_with(ex: &Explorer) -> Result<Table> {
+    let mut points = Vec::new();
+    let mut segments = Vec::new();
+    for kind in SweepKind::ALL {
+        let pts = kind.points(SimdType::Xnor);
+        segments.push((kind, pts.len()));
+        points.extend(pts);
+    }
+    let reports = ex.evaluate_points(&points)?;
+
     let mut t = Table::new(vec!["sweep", "value", "BRAM18(HLS)", "BRAM18(RTL)"]);
-    for kind in kinds {
-        for sp in kind.points(SimdType::Xnor) {
-            let r = estimate(&sp.params, Style::Rtl)?;
-            let h = estimate(&sp.params, Style::Hls)?;
+    let mut idx = 0usize;
+    for (kind, len) in segments {
+        for r in &reports[idx..idx + len] {
             t.row(vec![
                 kind.label().to_string(),
-                sp.swept.to_string(),
-                h.bram18.to_string(),
-                r.bram18.to_string(),
+                r.swept.to_string(),
+                r.hls.bram18.to_string(),
+                r.rtl.bram18.to_string(),
             ]);
         }
+        idx += len;
     }
     Ok(t)
 }
 
 /// Fig. 16: synthesis time vs PEs and SIMDs (standard type).
 pub fn fig16_synth_time() -> Result<Table> {
+    fig16_synth_time_with(&Explorer::parallel())
+}
+
+/// Same, driving a caller-provided exploration engine.
+pub fn fig16_synth_time_with(ex: &Explorer) -> Result<Table> {
     let mut t = Table::new(vec!["sweep", "value", "HLS (s)", "RTL (s)", "ratio"]);
     for (kind, pts) in [
         ("PEs", sweep_pe(SimdType::Standard)),
         ("SIMDs", sweep_simd(SimdType::Standard)),
     ] {
-        for sp in pts {
-            let r = estimate(&sp.params, Style::Rtl)?;
-            let h = estimate(&sp.params, Style::Hls)?;
+        for r in ex.evaluate_points(&pts)? {
             t.row(vec![
                 kind.to_string(),
-                sp.swept.to_string(),
-                fnum(h.synth_time_s, 0),
-                fnum(r.synth_time_s, 0),
-                fnum(h.synth_time_s / r.synth_time_s, 1),
+                r.swept.to_string(),
+                fnum(r.hls.synth_time_s, 0),
+                fnum(r.rtl.synth_time_s, 0),
+                fnum(r.hls.synth_time_s / r.rtl.synth_time_s, 1),
             ]);
         }
     }
@@ -261,5 +334,16 @@ mod tests {
             let ratio: f64 = line.split_whitespace().last().unwrap().parse().unwrap();
             assert!(ratio >= 5.0, "{line}");
         }
+    }
+
+    #[test]
+    fn shared_engine_reuses_results_across_figures() {
+        let ex = Explorer::serial();
+        resource_sweep_figure_with(&ex, SweepKind::Pe, SimdType::Xnor).unwrap();
+        let before = ex.cache_stats();
+        // Fig. 15 revisits the PE sweep's xnor points among others
+        fig15_bram_with(&ex).unwrap();
+        let after = ex.cache_stats();
+        assert!(after.total_hits() >= before.total_hits() + 6, "{before:?} -> {after:?}");
     }
 }

@@ -8,6 +8,11 @@ mod tables;
 
 pub use bench::{bench, bench_with, BenchResult};
 pub use figures::{
-    fig14_heatmap, fig15_bram, fig16_synth_time, resource_sweep_figure, FigureSeries, SweepKind,
+    fig14_heatmap, fig14_heatmap_with, fig15_bram, fig15_bram_with, fig16_synth_time,
+    fig16_synth_time_with, resource_sweep_figure, resource_sweep_figure_with, run_figure_bench,
+    FigureSeries, SweepKind,
 };
-pub use tables::{random_weights, table4, table5, table7, Table5Row, Table7Row};
+pub use tables::{
+    random_weights, table4, table4_with, table5, table5_with, table7, table7_with, Table5Row,
+    Table7Row,
+};

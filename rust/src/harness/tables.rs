@@ -1,9 +1,16 @@
 //! Table regeneration: paper Tables 4, 5 and 7.
+//!
+//! Estimates are obtained through the [`explore`](crate::explore) engine
+//! (parallel + cached) rather than hand-rolled `estimate()` loops; the
+//! `_with` variants share a caller-provided engine. Table 7's execution
+//! cycles still come from direct cycle-accurate runs because they may use
+//! *trained* weights from the artifact manifest, which are not part of
+//! the engine's canonical (parameter-derived) stimulus.
 
 use anyhow::Result;
 
 use crate::cfg::{nid_layers, table3_configs, LayerParams, SimdType};
-use crate::estimate::{estimate, Style};
+use crate::explore::Explorer;
 use crate::quant::Matrix;
 use crate::sim::{run_mvu, HlsMvu};
 use crate::util::rng::Pcg32;
@@ -12,16 +19,19 @@ use crate::util::table::{fmin, fnum, Table};
 
 /// Table 4: resource utilization for the Table 3 large configs.
 pub fn table4() -> Result<Table> {
+    table4_with(&Explorer::parallel())
+}
+
+/// Same, driving a caller-provided exploration engine.
+pub fn table4_with(ex: &Explorer) -> Result<Table> {
     let mut t = Table::new(vec!["Config", "LUTs(HLS)", "LUTs(RTL)", "FFs(HLS)", "FFs(RTL)"]);
-    for (i, sp) in table3_configs().iter().enumerate() {
-        let r = estimate(&sp.params, Style::Rtl)?;
-        let h = estimate(&sp.params, Style::Hls)?;
+    for (i, r) in ex.evaluate_points(&table3_configs())?.iter().enumerate() {
         t.row(vec![
             format!("Config #{i}"),
-            h.luts.to_string(),
-            r.luts.to_string(),
-            h.ffs.to_string(),
-            r.ffs.to_string(),
+            r.hls.luts.to_string(),
+            r.rtl.luts.to_string(),
+            r.hls.ffs.to_string(),
+            r.rtl.ffs.to_string(),
         ]);
     }
     Ok(t)
@@ -39,6 +49,11 @@ pub struct Table5Row {
 /// Table 5: critical-path delay statistics over the four sweeps the paper
 /// reports (IFM channels, OFM channels, PEs, SIMDs) x three SIMD types.
 pub fn table5() -> Result<(Table, Vec<Table5Row>)> {
+    table5_with(&Explorer::parallel())
+}
+
+/// Same, driving a caller-provided exploration engine.
+pub fn table5_with(ex: &Explorer) -> Result<(Table, Vec<Table5Row>)> {
     use crate::cfg::{sweep_ifm_channels, sweep_ofm_channels, sweep_pe, sweep_simd};
     let mut t = Table::new(vec![
         "Parameter", "SIMD type", "HLS min", "HLS max", "HLS mean", "RTL min", "RTL max",
@@ -53,12 +68,9 @@ pub fn table5() -> Result<(Table, Vec<Table5Row>)> {
     ];
     for (label, sweep) in sweeps {
         for ty in SimdType::ALL {
-            let mut hls = Vec::new();
-            let mut rtl = Vec::new();
-            for sp in sweep(ty) {
-                hls.push(estimate(&sp.params, Style::Hls)?.delay_ns);
-                rtl.push(estimate(&sp.params, Style::Rtl)?.delay_ns);
-            }
+            let reports = ex.evaluate_points(&sweep(ty))?;
+            let hls: Vec<f64> = reports.iter().map(|r| r.hls.delay_ns).collect();
+            let rtl: Vec<f64> = reports.iter().map(|r| r.rtl.delay_ns).collect();
             let hs = Summary::of(&hls).unwrap();
             let rs = Summary::of(&rtl).unwrap();
             t.row(vec![
@@ -110,14 +122,19 @@ pub fn random_weights(params: &LayerParams, seed: u64) -> Matrix {
 /// the cycle-accurate simulator (RTL) and the HLS behavioral model,
 /// exercising the real datapath with the trained weights when available.
 pub fn table7(weights: Option<&[Matrix]>) -> Result<(Table, Vec<Table7Row>)> {
+    table7_with(&Explorer::parallel(), weights)
+}
+
+/// Same, driving a caller-provided exploration engine for the estimates.
+pub fn table7_with(ex: &Explorer, weights: Option<&[Matrix]>) -> Result<(Table, Vec<Table7Row>)> {
     let mut t = Table::new(vec![
         "Layer", "LUTs H/R", "FFs H/R", "BRAM18 H/R", "Delay(ns) H/R", "Synth H/R",
         "Cycles H/R",
     ]);
+    let layers = nid_layers();
+    let estimates = ex.evaluate_layers(&layers)?;
     let mut rows = Vec::new();
-    for (i, params) in nid_layers().iter().enumerate() {
-        let r = estimate(params, Style::Rtl)?;
-        let h = estimate(params, Style::Hls)?;
+    for (i, (params, est)) in layers.iter().zip(&estimates).enumerate() {
         let w = match weights {
             Some(ws) => ws[i].clone(),
             None => random_weights(params, 1000 + i as u64),
@@ -129,11 +146,11 @@ pub fn table7(weights: Option<&[Matrix]>) -> Result<(Table, Vec<Table7Row>)> {
         let hls_cycles = HlsMvu::new(params, &w)?.exec_cycles(1);
         let row = Table7Row {
             layer: params.name.clone(),
-            luts: (h.luts, r.luts),
-            ffs: (h.ffs, r.ffs),
-            bram18: (h.bram18, r.bram18),
-            delay_ns: (h.delay_ns, r.delay_ns),
-            synth_s: (h.synth_time_s, r.synth_time_s),
+            luts: (est.hls.luts, est.rtl.luts),
+            ffs: (est.hls.ffs, est.rtl.ffs),
+            bram18: (est.hls.bram18, est.rtl.bram18),
+            delay_ns: (est.hls.delay_ns, est.rtl.delay_ns),
+            synth_s: (est.hls.synth_time_s, est.rtl.synth_time_s),
             exec_cycles: (hls_cycles, rtl_cycles),
         };
         t.row(vec![
@@ -184,5 +201,19 @@ mod tests {
         let hls: Vec<usize> = rows.iter().map(|r| r.exec_cycles.0).collect();
         assert_eq!(rtl, vec![17, 13, 13, 13]);
         assert_eq!(hls, vec![17, 13, 13, 12]);
+    }
+
+    #[test]
+    fn table5_matches_direct_estimates() {
+        // the engine path must agree with direct estimate() calls
+        use crate::estimate::{estimate, Style};
+        let p = &crate::cfg::sweep_pe(SimdType::Standard)[0].params;
+        let (_, rows) = table5().unwrap();
+        let direct = estimate(p, Style::Rtl).unwrap().delay_ns;
+        let row = rows
+            .iter()
+            .find(|r| r.parameter == "PEs" && r.simd_type == SimdType::Standard)
+            .unwrap();
+        assert_eq!(row.rtl.min, direct); // pe=2 is the sweep's fastest point
     }
 }

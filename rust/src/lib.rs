@@ -39,10 +39,35 @@
 //! let hls = estimate(&p, Style::Hls).unwrap();
 //! assert!(hls.ffs > rtl.ffs); // the paper's invariant
 //! ```
+//!
+//! # Example: explore a whole sweep in parallel, with caching
+//!
+//! The [`explore`] engine evaluates sweep points across all cores with a
+//! content-addressed result cache keyed by `(LayerParams, Style)`; results
+//! are byte-identical to serial execution regardless of thread count.
+//!
+//! ```
+//! use finn_mvu::cfg::{sweep_ifm_channels, SimdType};
+//! use finn_mvu::explore::Explorer;
+//!
+//! let points = sweep_ifm_channels(SimdType::Standard); // paper Fig. 8
+//! let serial = Explorer::serial().evaluate_points(&points).unwrap();
+//! let par = Explorer::with_threads(4).evaluate_points(&points).unwrap();
+//! assert_eq!(par, serial); // deterministic under parallelism
+//! assert!(par[0].hls.ffs > par[0].rtl.ffs); // same invariant, engine-side
+//!
+//! // a second pass over the same sweep is served entirely from cache
+//! let ex = Explorer::serial();
+//! ex.evaluate_points(&points).unwrap();
+//! let before = ex.cache_stats();
+//! ex.evaluate_points(&points).unwrap();
+//! assert_eq!(ex.cache_stats().misses, before.misses);
+//! ```
 
 pub mod cfg;
 pub mod coordinator;
 pub mod estimate;
+pub mod explore;
 pub mod harness;
 pub mod ir;
 pub mod nid;

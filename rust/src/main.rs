@@ -3,6 +3,8 @@
 //! Subcommands:
 //!   run       simulate one MVU design point (cycle-accurate) and report
 //!             cycles + resources for both styles
+//!   explore   evaluate design-space sweeps through the parallel,
+//!             cached exploration engine (tables or JSON)
 //!   sweep     regenerate a figure sweep (fig8..fig16)
 //!   estimate  resource/timing/synth estimate for explicit parameters
 //!   tables    print Tables 4, 5 and 7
@@ -14,6 +16,8 @@ use anyhow::{bail, Context, Result};
 use finn_mvu::cfg::{LayerParams, SimdType};
 use finn_mvu::coordinator::{Pipeline, PipelineConfig, Request};
 use finn_mvu::estimate::{estimate, Style};
+use finn_mvu::explore::{points_to_json, points_to_table, ExploreConfig, Explorer};
+use finn_mvu::util::json::Json;
 use finn_mvu::harness::{
     fig14_heatmap, fig15_bram, fig16_synth_time, resource_sweep_figure, table4, table5, table7,
     SweepKind,
@@ -36,6 +40,9 @@ USAGE:
 COMMANDS:
   run       --ifm-ch N --ifm-dim N --ofm-ch N --kd N --pe N --simd N
             [--type xnor|binary|standard] [--vectors N]
+  explore   [--figure 8..13 | --all] [--type xnor|binary|standard|all]
+            [--threads N] [--sim-vectors N] [--cache-dir DIR]
+            [--json] [--pretty]
   sweep     --figure 8|9|10|11|12|13|14|15|16 [--type ...]
   estimate  (same shape flags as run)
   tables    [--which 4|5|7]
@@ -104,6 +111,86 @@ fn cmd_run(a: &Args) -> Result<()> {
             e.synth_time_s,
             e.delay_location.name()
         );
+    }
+    Ok(())
+}
+
+fn cmd_explore(a: &Args) -> Result<()> {
+    a.check_known(&[
+        "figure", "all", "type", "threads", "sim-vectors", "cache-dir", "json", "pretty",
+    ])
+    .map_err(|e| anyhow::anyhow!("{e}"))?;
+    let cfg = ExploreConfig {
+        threads: a.get_usize("threads", 0)?,
+        sim_vectors: a.get_usize("sim-vectors", 0)?,
+        cache_dir: a.get("cache-dir").map(std::path::PathBuf::from),
+    };
+    let ex = Explorer::new(cfg)?;
+
+    if a.get_bool("all") && a.has("figure") {
+        bail!("--all conflicts with --figure; pass one or the other");
+    }
+    let kinds: Vec<SweepKind> = match a.get("figure") {
+        Some(f) => {
+            let fig: usize = f.parse().map_err(|_| anyhow::anyhow!("--figure expects 8..13"))?;
+            match fig {
+                8 => vec![SweepKind::IfmChannels],
+                9 => vec![SweepKind::KernelDim],
+                10 => vec![SweepKind::OfmChannels],
+                11 => vec![SweepKind::IfmDim],
+                12 => vec![SweepKind::Pe],
+                13 => vec![SweepKind::Simd],
+                other => bail!("unknown explore figure {other} (8..13; use `sweep` for 14..16)"),
+            }
+        }
+        None => SweepKind::ALL.to_vec(),
+    };
+    let types: Vec<SimdType> = match a.get("type") {
+        Some("all") | None => SimdType::ALL.to_vec(),
+        Some(t) => vec![SimdType::parse(t)?],
+    };
+
+    let t0 = std::time::Instant::now();
+    let mut sweeps_json = Vec::new();
+    for kind in &kinds {
+        for &ty in &types {
+            let points = kind.points(ty);
+            let reports = ex.evaluate_points(&points)?;
+            if a.get_bool("json") {
+                let mut s = Json::obj();
+                s.set("figure", Json::Str(kind.figure().to_string()));
+                s.set("label", Json::Str(kind.label().to_string()));
+                s.set("simd_type", Json::Str(ty.name().to_string()));
+                s.set("points", points_to_json(&reports));
+                sweeps_json.push(s);
+            } else {
+                println!(
+                    "{} — {} — {}\n{}",
+                    kind.figure(),
+                    kind.label(),
+                    ty,
+                    points_to_table(kind.label(), &reports).render()
+                );
+            }
+        }
+    }
+    let elapsed = t0.elapsed();
+    if a.get_bool("json") {
+        let mut doc = Json::obj();
+        doc.set("sweeps", Json::Arr(sweeps_json));
+        let stats = ex.cache_stats();
+        let mut cs = Json::obj();
+        cs.set("hits", Json::from_i64(stats.hits as i64));
+        cs.set("disk_hits", Json::from_i64(stats.disk_hits as i64));
+        cs.set("misses", Json::from_i64(stats.misses as i64));
+        doc.set("cache", cs);
+        if a.get_bool("pretty") {
+            println!("{}", doc.to_pretty(2));
+        } else {
+            println!("{doc}");
+        }
+    } else {
+        println!("cache: {} — {:.1} ms total", ex.cache_stats(), elapsed.as_secs_f64() * 1e3);
     }
     Ok(())
 }
@@ -268,6 +355,7 @@ fn main() -> Result<()> {
     let args = Args::from_env().map_err(|e| anyhow::anyhow!("{e}\n{USAGE}"))?;
     match args.command.as_deref() {
         Some("run") => cmd_run(&args),
+        Some("explore") => cmd_explore(&args),
         Some("sweep") => cmd_sweep(&args),
         Some("estimate") => cmd_estimate(&args),
         Some("tables") => cmd_tables(&args),

@@ -1,0 +1,63 @@
+//! Stub PJRT engine, compiled when the `pjrt` cargo feature is disabled.
+//!
+//! The real executor (`executor.rs`) needs XLA bindings that the offline
+//! crate registry does not carry (DESIGN.md §8). This stub keeps every
+//! call site — the coordinator pipeline, benches, examples and the
+//! artifact integration tests — compiling with an identical API surface.
+//! Construction fails with a clear message, and all artifact-dependent
+//! tests already skip when `artifacts/manifest.json` is absent, so the
+//! default build runs the full non-PJRT suite.
+
+use std::path::Path;
+use std::sync::Arc;
+
+use anyhow::{bail, Result};
+
+use super::manifest::{ArtifactInfo, Manifest};
+
+/// A compiled artifact ready to execute (stub: never constructed).
+pub struct LoadedKernel {
+    pub info: ArtifactInfo,
+}
+
+impl LoadedKernel {
+    /// Execute on a flat i32 input of `info.in_shape`.
+    pub fn run(&self, _input: &[i32]) -> Result<Vec<i32>> {
+        bail!(
+            "{}: finn-mvu was built without the `pjrt` feature; rebuild with \
+             `--features pjrt` after vendoring the XLA bindings (DESIGN.md §8)",
+            self.info.name
+        )
+    }
+}
+
+/// The engine: stub counterpart of the PJRT client + compile cache.
+pub struct Engine {
+    pub manifest: Manifest,
+}
+
+impl Engine {
+    /// Create an engine over an artifacts directory. Always fails in the
+    /// stub build — artifacts exist but cannot be executed without PJRT.
+    pub fn new(artifacts_dir: &Path) -> Result<Engine> {
+        let _ = Manifest::load(artifacts_dir)?;
+        bail!(
+            "PJRT runtime unavailable: finn-mvu was built without the `pjrt` \
+             feature (the offline registry has no XLA bindings; see DESIGN.md §8)"
+        )
+    }
+
+    pub fn platform(&self) -> String {
+        "stub".to_string()
+    }
+
+    /// Load (compile-once) an artifact by manifest name.
+    pub fn load(&self, name: &str) -> Result<Arc<LoadedKernel>> {
+        bail!("cannot load artifact {name:?}: built without the `pjrt` feature")
+    }
+
+    /// Number of compiled executables currently cached.
+    pub fn cached(&self) -> usize {
+        0
+    }
+}

@@ -5,6 +5,10 @@
 //! DESIGN.md §8 and aot.py), compiled once per executable on the PJRT CPU
 //! client and cached for the lifetime of the engine.
 
+#[cfg(feature = "pjrt")]
+mod executor;
+#[cfg(not(feature = "pjrt"))]
+#[path = "executor_stub.rs"]
 mod executor;
 mod manifest;
 

@@ -1,0 +1,211 @@
+//! Property tests over the design-space exploration engine (own proptest
+//! framework): parallel evaluation must be byte-identical and identically
+//! ordered to serial evaluation for every thread count, and cache hits —
+//! memory or disk — must return bit-identical reports.
+
+use finn_mvu::cfg::{LayerParams, SimdType, SweepPoint};
+use finn_mvu::explore::{points_to_json, ExploreConfig, Explorer};
+use finn_mvu::harness::SweepKind;
+use finn_mvu::proptest::{check, Config, Gen};
+
+/// Random mix of real Table 2 sweep points and synthetic FC points, with
+/// duplicates allowed (duplicates exercise the cache sharing path).
+fn arb_points(g: &mut Gen) -> Vec<SweepPoint> {
+    let mut pool: Vec<SweepPoint> = Vec::new();
+    let kind = *g.choose(&SweepKind::ALL);
+    let ty = *g.choose(&SimdType::ALL);
+    pool.extend(kind.points(ty));
+    for i in 0..g.usize_in(1, 4) {
+        let ty = *g.choose(&SimdType::ALL);
+        let (wb, ib) = match ty {
+            SimdType::Xnor => (1, 1),
+            SimdType::BinaryWeights => (1, *g.choose(&[2u32, 4])),
+            SimdType::Standard => (*g.choose(&[2u32, 4]), *g.choose(&[2u32, 4])),
+        };
+        let rows = g.usize_in(1, 16);
+        let cols = g.usize_in(1, 48);
+        let pe = g.divisor_of(rows);
+        let simd = g.divisor_of(cols);
+        pool.push(SweepPoint {
+            swept: i,
+            params: LayerParams::fc(&format!("fc{i}"), cols, rows, pe, simd, ty, wb, ib, 0),
+        });
+    }
+    // random subset with repetition
+    (0..g.usize_in(1, 10)).map(|_| g.choose(&pool).clone()).collect()
+}
+
+/// Tentpole acceptance property: for random sweeps, thread counts 1, 2
+/// and 8 produce identical, identically-ordered results — byte-identical
+/// once serialized.
+#[test]
+fn prop_parallel_identical_and_ordered_vs_serial() {
+    check("explore-parallel==serial", Config::cases(20), |g| {
+        let points = arb_points(g);
+        let serial = Explorer::serial().evaluate_points(&points).map_err(|e| e.to_string())?;
+        if serial.len() != points.len() {
+            return Err("result count mismatch".into());
+        }
+        for (sp, r) in points.iter().zip(&serial) {
+            if r.name != sp.params.name || r.swept != sp.swept {
+                return Err(format!("order broken: {} vs {}", r.name, sp.params.name));
+            }
+        }
+        let serial_bytes = points_to_json(&serial).to_string();
+        for threads in [2usize, 8] {
+            let par = Explorer::with_threads(threads)
+                .evaluate_points(&points)
+                .map_err(|e| e.to_string())?;
+            if par != serial {
+                return Err(format!("threads={threads}: reports differ from serial"));
+            }
+            if points_to_json(&par).to_string() != serial_bytes {
+                return Err(format!("threads={threads}: serialized bytes differ"));
+            }
+        }
+        Ok(())
+    });
+}
+
+/// Same determinism with the cycle-accurate simulator enabled (small
+/// synthetic points only, to keep the property fast).
+#[test]
+fn prop_parallel_identical_with_simulation() {
+    check("explore-sim-parallel==serial", Config::cases(10), |g| {
+        let mut points = Vec::new();
+        for i in 0..g.usize_in(2, 5) {
+            let rows = g.usize_in(1, 8);
+            let cols = g.usize_in(1, 16);
+            let pe = g.divisor_of(rows);
+            let simd = g.divisor_of(cols);
+            points.push(SweepPoint {
+                swept: i,
+                params: LayerParams::fc(
+                    &format!("s{i}"),
+                    cols,
+                    rows,
+                    pe,
+                    simd,
+                    SimdType::Standard,
+                    2,
+                    2,
+                    0,
+                ),
+            });
+        }
+        let eval = |threads: usize| {
+            Explorer::new(ExploreConfig { threads, sim_vectors: 2, cache_dir: None })
+                .and_then(|ex| ex.evaluate_points(&points))
+                .map_err(|e| e.to_string())
+        };
+        let serial = eval(1)?;
+        for r in &serial {
+            let sim = r.sim.as_ref().ok_or("sim summary missing")?;
+            if !sim.matches_reference {
+                return Err(format!("{}: sim diverged from reference", r.name));
+            }
+        }
+        for threads in [2usize, 8] {
+            if eval(threads)? != serial {
+                return Err(format!("threads={threads}: sim reports differ"));
+            }
+        }
+        Ok(())
+    });
+}
+
+/// Cache property: re-evaluating the same sweep adds no misses, and the
+/// reports served from cache are bit-identical to the first pass.
+#[test]
+fn prop_cache_hits_bit_identical() {
+    check("explore-cache-hits", Config::cases(15), |g| {
+        let points = arb_points(g);
+        let threads = *g.choose(&[1usize, 2, 8]);
+        let ex = Explorer::with_threads(threads);
+        let first = ex.evaluate_points(&points).map_err(|e| e.to_string())?;
+        let misses_after_first = ex.cache_stats().misses;
+        let second = ex.evaluate_points(&points).map_err(|e| e.to_string())?;
+        let stats = ex.cache_stats();
+        if stats.misses != misses_after_first {
+            return Err(format!(
+                "second pass missed the cache: {misses_after_first} -> {}",
+                stats.misses
+            ));
+        }
+        if points_to_json(&second).to_string() != points_to_json(&first).to_string() {
+            return Err("cache hit returned different bytes".into());
+        }
+        Ok(())
+    });
+}
+
+/// The cache key excludes `LayerParams::name`: the same geometry under a
+/// different label must be served from cache.
+#[test]
+fn cache_key_ignores_point_names() {
+    let ex = Explorer::serial();
+    let a = SweepPoint {
+        swept: 64,
+        params: LayerParams::conv("pe64", 64, 8, 64, 4, 64, 64, SimdType::Standard, 4, 4),
+    };
+    let mut renamed = a.clone();
+    renamed.params.name = "simd64".to_string();
+    let ra = ex.evaluate_points(&[a]).unwrap();
+    let misses = ex.cache_stats().misses;
+    let rb = ex.evaluate_points(&[renamed]).unwrap();
+    assert_eq!(ex.cache_stats().misses, misses, "renamed geometry must hit the cache");
+    assert_eq!(ra[0].rtl, rb[0].rtl);
+    assert_eq!(ra[0].hls, rb[0].hls);
+    assert_eq!(rb[0].name, "simd64"); // the label still reflects the input
+}
+
+/// On-disk cache: a second explorer over the same directory serves disk
+/// hits that re-serialize to identical bytes, across thread counts.
+#[test]
+fn disk_cache_roundtrip_bit_identical() {
+    let dir = std::env::temp_dir().join(format!("finn-mvu-explore-it-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    let points = SweepKind::IfmChannels.points(SimdType::Standard);
+
+    let cfg = |threads: usize| ExploreConfig {
+        threads,
+        sim_vectors: 1,
+        cache_dir: Some(dir.clone()),
+    };
+    let first = Explorer::new(cfg(1)).unwrap().evaluate_points(&points).unwrap();
+    let second_ex = Explorer::new(cfg(8)).unwrap();
+    let second = second_ex.evaluate_points(&points).unwrap();
+    let stats = second_ex.cache_stats();
+    assert_eq!(stats.misses, 0, "fresh explorer must be served from disk: {stats:?}");
+    assert!(stats.disk_hits > 0);
+    assert_eq!(
+        points_to_json(&first).to_string(),
+        points_to_json(&second).to_string(),
+        "disk-cached reports must be byte-identical"
+    );
+    std::fs::remove_dir_all(&dir).unwrap();
+}
+
+/// Errors are deterministic too: an invalid point mixed into a sweep
+/// yields the same error (the smallest failing index) at every thread
+/// count.
+#[test]
+fn error_reporting_is_deterministic_across_thread_counts() {
+    let mut points = SweepKind::Pe.points(SimdType::Standard);
+    let mut bad = points[2].clone();
+    bad.params.simd = 7; // does not divide K^2*IC = 1024
+    bad.params.name = "illegal".to_string();
+    points.insert(2, bad);
+    let errs: Vec<String> = [1usize, 2, 8]
+        .into_iter()
+        .map(|t| {
+            Explorer::with_threads(t)
+                .evaluate_points(&points)
+                .expect_err("invalid point must fail")
+                .to_string()
+        })
+        .collect();
+    assert!(errs[0].contains("sweep point 2"), "{}", errs[0]);
+    assert_eq!(errs[0], errs[1]);
+    assert_eq!(errs[1], errs[2]);
+}

@@ -1,0 +1,87 @@
+//! Golden-file regression for the estimator: `estimate()` outputs
+//! (LUT/FF/BRAM/delay/synth-time) for every Table 2 sweep configuration
+//! under all three SIMD types, snapshotted under `tests/golden/` and
+//! diffed on every run, so estimator refactors cannot silently drift from
+//! the paper-calibrated numbers.
+//!
+//! Workflow (insta-style):
+//!   * first run in a fresh checkout writes the snapshot and passes
+//!     (commit the generated file);
+//!   * later runs diff against the snapshot and fail on any byte change;
+//!   * `GOLDEN_UPDATE=1 cargo test golden` re-blesses after an
+//!     intentional model change.
+
+use std::path::PathBuf;
+
+use finn_mvu::cfg::SimdType;
+use finn_mvu::explore::{points_to_json, Explorer};
+use finn_mvu::harness::SweepKind;
+use finn_mvu::util::json::Json;
+
+fn golden_path() -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("tests/golden/table2_estimates.json")
+}
+
+/// Build the snapshot document through the (serial) exploration engine —
+/// deterministic key order and float formatting come from the in-tree
+/// JSON writer.
+fn build_snapshot() -> Json {
+    let ex = Explorer::serial();
+    let mut sweeps = Json::obj();
+    for kind in SweepKind::ALL {
+        for ty in SimdType::ALL {
+            let reports = ex.evaluate_points(&kind.points(ty)).unwrap();
+            sweeps.set(&format!("{}/{}", kind.label(), ty.name()), points_to_json(&reports));
+        }
+    }
+    let mut doc = Json::obj();
+    doc.set("schema", Json::Str("table2-estimates-v1".to_string()));
+    doc.set("sweeps", sweeps);
+    doc
+}
+
+#[test]
+fn golden_table2_estimates() {
+    let path = golden_path();
+    let got = build_snapshot().to_pretty(2) + "\n";
+    let update = std::env::var("GOLDEN_UPDATE").is_ok_and(|v| !v.is_empty() && v != "0");
+    if update || !path.exists() {
+        std::fs::create_dir_all(path.parent().unwrap()).unwrap();
+        std::fs::write(&path, &got).unwrap();
+        eprintln!(
+            "golden_table2_estimates: {} snapshot at {} — commit it so future runs diff \
+             against it",
+            if update { "re-blessed" } else { "bootstrapped" },
+            path.display()
+        );
+        return;
+    }
+    let want = std::fs::read_to_string(&path).unwrap();
+    if got != want {
+        // surface the first diverging line so the failure is actionable
+        let mismatch = got
+            .lines()
+            .zip(want.lines())
+            .enumerate()
+            .find(|(_, (g, w))| g != w)
+            .map(|(i, (g, w))| format!("line {}: now {:?}, golden {:?}", i + 1, g, w))
+            .unwrap_or_else(|| {
+                format!("length changed: now {} lines, golden {}", got.lines().count(),
+                    want.lines().count())
+            });
+        panic!(
+            "estimator output drifted from {}:\n  {}\n(if the change is intentional, \
+             re-bless with GOLDEN_UPDATE=1 cargo test golden)",
+            path.display(),
+            mismatch
+        );
+    }
+}
+
+/// The snapshot builder itself must be deterministic — two builds in the
+/// same process serialize identically (guards against map-ordering or
+/// float-formatting regressions in the writer).
+#[test]
+fn golden_snapshot_is_deterministic() {
+    assert_eq!(build_snapshot().to_string(), build_snapshot().to_string());
+}

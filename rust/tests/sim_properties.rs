@@ -6,7 +6,9 @@
 use finn_mvu::cfg::{LayerParams, SimdType};
 use finn_mvu::proptest::{check, Config, Gen};
 use finn_mvu::quant::{matvec, Matrix};
-use finn_mvu::sim::{run_mvu, run_mvu_stalled, HlsMvu, StallPattern, PIPELINE_STAGES};
+use finn_mvu::sim::{
+    run_mvu, run_mvu_fifo, run_mvu_stalled, HlsMvu, StallPattern, PIPELINE_STAGES,
+};
 
 /// Draw a random legal MVU configuration.
 fn arb_params(g: &mut Gen) -> LayerParams {
@@ -155,6 +157,118 @@ fn prop_stalls_only_add_cycles() {
                 "stalled run faster ({} < {})",
                 stalled.exec_cycles, clean.exec_cycles
             ));
+        }
+        Ok(())
+    });
+}
+
+/// A "bursty" stall pattern that always eventually makes progress:
+/// periodic bursts with duty < period (kept short so the deadlock bound
+/// of `run_mvu_fifo` stays generous), bounded random stalls, or an
+/// explicit schedule with at least one free slot.
+fn arb_bursty_stall(g: &mut Gen) -> StallPattern {
+    match g.usize_in(0, 2) {
+        0 => {
+            let period = g.usize_in(2, 8);
+            let duty = g.usize_in(1, period - 1);
+            StallPattern::Periodic { period, duty, phase: g.usize_in(0, 7) }
+        }
+        1 => StallPattern::Random { seed: g.rng.next_u64(), p_num: g.usize_in(1, 200) as u32 },
+        _ => {
+            let len = g.usize_in(2, 10);
+            let mut s: Vec<bool> = (0..len).map(|_| g.chance(140)).collect();
+            let free = g.usize_in(0, len - 1);
+            s[free] = false;
+            StallPattern::Schedule(s)
+        }
+    }
+}
+
+/// Draw a modest configuration for FIFO-depth properties (small folds so
+/// even heavily stalled runs stay far from the deadlock bound).
+fn arb_small_params(g: &mut Gen) -> LayerParams {
+    let ty = *g.choose(&SimdType::ALL);
+    let (wb, ib) = match ty {
+        SimdType::Xnor => (1, 1),
+        SimdType::BinaryWeights => (1, 2),
+        SimdType::Standard => (2, 2),
+    };
+    let rows = g.usize_in(1, 12);
+    let cols = g.usize_in(1, 32);
+    let pe = g.divisor_of(rows);
+    let simd = g.divisor_of(cols);
+    LayerParams::fc("fifo-prop", cols, rows, pe, simd, ty, wb, ib, 0)
+}
+
+/// §5.3.2 liveness + integrity: for any FIFO depth >= 1 and bursty stall
+/// patterns on both endpoints, the MVU completes (no deadlock), delivers
+/// every output in order and bit-exact, consumes exactly SF*NF*n compute
+/// slots, and never exceeds the FIFO's capacity.
+#[test]
+fn prop_fifo_liveness_and_integrity_under_bursts() {
+    check("fifo-liveness", Config::cases(45), |g| {
+        let p = arb_small_params(g);
+        let w = arb_weights(g, &p);
+        let n = g.usize_in(1, 3);
+        let inputs = arb_inputs(g, &p, n);
+        let depth = g.usize_in(1, 8);
+        let in_stall = arb_bursty_stall(g);
+        let out_stall = arb_bursty_stall(g);
+        let rep = run_mvu_fifo(&p, &w, &inputs, in_stall.clone(), out_stall.clone(), depth)
+            .map_err(|e| {
+                format!("{p} depth={depth} ({in_stall:?}/{out_stall:?}): liveness lost: {e}")
+            })?;
+        if rep.outputs.len() != inputs.len() {
+            return Err(format!("{}/{} outputs", rep.outputs.len(), inputs.len()));
+        }
+        for (x, y) in inputs.iter().zip(&rep.outputs) {
+            let want = matvec(x, &w, p.simd_type).map_err(|e| e.to_string())?;
+            if y != &want {
+                return Err(format!("{p} depth={depth}: data corrupted under stalls"));
+            }
+        }
+        let slots = p.synapse_fold() * p.neuron_fold() * n;
+        if rep.slots_consumed != slots {
+            return Err(format!("slots {} != {slots} (lost or duplicated work)", rep.slots_consumed));
+        }
+        if rep.fifo_max_occupancy > depth {
+            return Err(format!("FIFO high-water {} > depth {depth}", rep.fifo_max_occupancy));
+        }
+        Ok(())
+    });
+}
+
+/// §5.3.2 decoupling: with an always-valid source and a bursty sink, a
+/// deeper output FIFO never stalls the datapath more, never finishes
+/// later, and never changes the numerics.
+#[test]
+fn prop_deeper_fifo_never_stalls_more() {
+    check("fifo-monotone", Config::cases(35), |g| {
+        let p = arb_small_params(g);
+        let w = arb_weights(g, &p);
+        let n = g.usize_in(1, 4);
+        let inputs = arb_inputs(g, &p, n);
+        let out_stall = arb_bursty_stall(g);
+        let shallow = g.usize_in(1, 4);
+        let deep = shallow + g.usize_in(1, 12);
+        let a = run_mvu_fifo(&p, &w, &inputs, StallPattern::None, out_stall.clone(), shallow)
+            .map_err(|e| e.to_string())?;
+        let b = run_mvu_fifo(&p, &w, &inputs, StallPattern::None, out_stall.clone(), deep)
+            .map_err(|e| e.to_string())?;
+        if b.stall_cycles > a.stall_cycles {
+            return Err(format!(
+                "{p} ({out_stall:?}): depth {deep} stalled {} > depth {shallow} stalled {}",
+                b.stall_cycles, a.stall_cycles
+            ));
+        }
+        if b.exec_cycles > a.exec_cycles {
+            return Err(format!(
+                "{p} ({out_stall:?}): depth {deep} took {} > depth {shallow} took {}",
+                b.exec_cycles, a.exec_cycles
+            ));
+        }
+        if a.outputs != b.outputs {
+            return Err("FIFO depth changed the numerics".into());
         }
         Ok(())
     });
