@@ -7,7 +7,6 @@
 //!
 //! Run with: `cargo run --release --example conv_layer`
 
-use finn_mvu::cfg::LayerParams;
 use finn_mvu::runtime::{default_artifacts_dir, Engine};
 use finn_mvu::sim::{run_mvu, SlidingWindowUnit};
 use finn_mvu::util::rng::Pcg32;
@@ -16,7 +15,8 @@ fn main() -> anyhow::Result<()> {
     let dir = default_artifacts_dir();
     let engine = Engine::new(&dir)?;
     let kernel = engine.load("conv3x3_b1")?;
-    let params: LayerParams = kernel.info.layer.clone().expect("conv artifact has params");
+    // manifest layers are sealed (validated) once at the parse boundary
+    let params = kernel.info.layer.clone().expect("conv artifact has params");
     println!("conv layer: {params}");
 
     // random 8x8x8 image, 4-bit values

@@ -15,7 +15,8 @@
 use std::time::Instant;
 
 use finn_mvu::cfg::nid_layers;
-use finn_mvu::coordinator::{Pipeline, PipelineConfig, Request};
+use finn_mvu::coordinator::{PipelineConfig, Request};
+use finn_mvu::eval::Session;
 use finn_mvu::nid::{generate, NidNetwork};
 use finn_mvu::runtime::{default_artifacts_dir, Engine, Manifest};
 use finn_mvu::sim::run_mvu;
@@ -39,8 +40,7 @@ fn main() -> anyhow::Result<()> {
         .map(|(i, r)| Request { id: i as u64, data: r.inputs.clone() })
         .collect();
     let cfg = PipelineConfig { batch, ..Default::default() };
-    let pipe = Pipeline::nid(dir.clone(), cfg);
-    let (mut resp, report) = pipe.run(reqs)?;
+    let (mut resp, report) = Session::stream_nid(dir.clone(), cfg, reqs)?;
     resp.sort_by_key(|r| r.id);
     println!("[pipeline ] {report}");
 

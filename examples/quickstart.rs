@@ -1,49 +1,49 @@
-//! Quickstart: simulate one MVU design point cycle-accurately, check its
-//! output against the reference GEMM, and print the RTL-vs-HLS estimate —
-//! the library's core loop in ~60 lines.
+//! Quickstart: build one validated MVU design point, evaluate it through
+//! the unified `Session` facade (cycle-accurate simulation + RTL-vs-HLS
+//! estimates), and print the results — the library's core loop in ~50
+//! lines.
 //!
 //! Run with: `cargo run --release --example quickstart`
 
-use finn_mvu::cfg::{LayerParams, SimdType};
-use finn_mvu::estimate::{estimate, Style};
-use finn_mvu::harness::random_weights;
-use finn_mvu::quant::matvec;
-use finn_mvu::sim::run_mvu;
-use finn_mvu::util::rng::Pcg32;
+use finn_mvu::cfg::DesignPoint;
+use finn_mvu::estimate::Style;
+use finn_mvu::eval::{EvalRequest, Session, SimOptions};
 
 fn main() -> anyhow::Result<()> {
     // A folded 64x64 fully connected MVU with 4-bit operands:
-    // 8 PEs (neuron fold 8), 8 SIMD lanes (synapse fold 8).
-    let params = LayerParams::fc("quickstart", 64, 64, 8, 8, SimdType::Standard, 4, 4, 0);
-    params.validate()?;
+    // 8 PEs (neuron fold 8), 8 SIMD lanes (synapse fold 8). `build()`
+    // runs the folding/precision legality checks exactly once.
+    let params = DesignPoint::fc("quickstart")
+        .in_features(64)
+        .out_features(64)
+        .pe(8)
+        .simd(8)
+        .precision(4, 4, 0)
+        .build()?;
     println!("design point: {params}");
 
-    // Burned-in weights + a few input vectors.
-    let weights = random_weights(&params, 7);
-    let mut rng = Pcg32::new(8);
-    let inputs: Vec<Vec<i32>> = (0..4)
-        .map(|_| (0..64).map(|_| rng.next_range(16) as i32 - 8).collect())
-        .collect();
+    // One session owns the thread pool and the content-addressed result
+    // cache; every evaluation goes through it.
+    let session = Session::parallel();
+    let req = EvalRequest::new(params.clone())
+        .with_sim(SimOptions { batch: 4, ..SimOptions::default() });
+    let eval = session.evaluate(&req)?;
 
-    // Cycle-accurate simulation of the paper's §5 microarchitecture.
-    let report = run_mvu(&params, &weights, &inputs)?;
+    // Cycle-accurate simulation of the paper's §5 microarchitecture over
+    // the engine's canonical deterministic stimulus.
+    let sim = eval.sim.as_ref().expect("simulation was requested");
     println!(
         "simulated {} vectors in {} cycles ({} compute slots, FIFO high-water {})",
-        inputs.len(),
-        report.exec_cycles,
-        report.slots_consumed,
-        report.fifo_max_occupancy
+        sim.vectors, sim.exec_cycles, sim.slots_consumed, sim.fifo_max_occupancy
     );
 
     // The simulator must agree exactly with the reference integer GEMM.
-    for (x, y) in inputs.iter().zip(&report.outputs) {
-        assert_eq!(y, &matvec(x, &weights, params.simd_type)?);
-    }
+    assert!(sim.matches_reference);
     println!("numerics: simulator == reference GEMM (bit-exact)");
 
     // Post-synthesis estimates for both implementation styles (paper §6).
     for style in [Style::Rtl, Style::Hls] {
-        let e = estimate(&params, style)?;
+        let e = eval.estimate_for(style).expect("both styles requested");
         println!(
             "{:>4}: {:>6} LUTs {:>6} FFs {:>3} BRAM18  {:>6.3} ns critical path  {:>5.0} s synthesis",
             style.name(),

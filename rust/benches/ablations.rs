@@ -13,19 +13,25 @@
 //!
 //! Run with: `cargo bench --bench ablations`
 
-use finn_mvu::cfg::{nid_layers, sweep_simd, LayerParams, SimdType};
+use finn_mvu::cfg::{nid_layers, sweep_simd, DesignPoint, SimdType};
 use finn_mvu::estimate::dsp::{clock_report, dsp_lut_savings};
 use finn_mvu::estimate::Style;
-use finn_mvu::explore::Explorer;
+use finn_mvu::eval::Session;
 use finn_mvu::harness::random_weights;
 use finn_mvu::quant::Thresholds;
 use finn_mvu::sim::{run_mvu_fifo, ChainReport, MvuChain, StallPattern};
 use finn_mvu::util::rng::Pcg32;
 use finn_mvu::util::table::{fnum, Table};
 
-fn a1_fifo_depth(ex: &Explorer) {
+fn a1_fifo_depth(ex: &Session) {
     println!("== A1: output-FIFO depth vs backpressure stalls (SF=1 core, bursty sink) ==");
-    let p = LayerParams::fc("a1", 8, 8, 8, 8, SimdType::Standard, 4, 4, 0);
+    let p = DesignPoint::fc("a1")
+        .in_features(8)
+        .out_features(8)
+        .pe(8)
+        .simd(8)
+        .build()
+        .unwrap();
     let w = random_weights(&p, 3);
     let mut rng = Pcg32::new(4);
     let vecs: Vec<Vec<i32>> = (0..64)
@@ -56,7 +62,7 @@ fn a1_fifo_depth(ex: &Explorer) {
     println!("{}", t.render());
 }
 
-fn a2_dsp_binding(ex: &Explorer) {
+fn a2_dsp_binding(ex: &Session) {
     println!("== A2: LUT-bound vs DSP-bound multipliers (standard type) ==");
     let pts = sweep_simd(SimdType::Standard);
     let rows = ex.par_map(&pts, |_, sp| Ok(dsp_lut_savings(&sp.params)));
@@ -74,7 +80,7 @@ fn a2_dsp_binding(ex: &Explorer) {
     println!("{}", t.render());
 }
 
-fn a3_clock_constraints(ex: &Explorer) {
+fn a3_clock_constraints(ex: &Session) {
     println!("== A3: clock-constraint methodology (5 ns target, 10 ns fallback, §6.1) ==");
     let cases: Vec<(SimdType, Style)> = SimdType::ALL
         .into_iter()
@@ -99,7 +105,7 @@ fn a3_clock_constraints(ex: &Explorer) {
     println!("{}", t.render());
 }
 
-fn a4_chain_overlap(ex: &Explorer) {
+fn a4_chain_overlap(ex: &Session) {
     println!("== A4: NID 4-layer chain — dataflow overlap vs layer-serial ==");
     let specs = nid_layers();
     let mut rng = Pcg32::new(5);
@@ -191,7 +197,7 @@ fn a5_serving_batch() {
 }
 
 fn main() {
-    let ex = Explorer::parallel();
+    let ex = Session::parallel();
     a1_fifo_depth(&ex);
     a2_dsp_binding(&ex);
     a3_clock_constraints(&ex);

@@ -5,9 +5,9 @@
 //!
 //! Run with: `cargo bench --bench fig08_ifm_channels`
 
-use finn_mvu::explore::Explorer;
+use finn_mvu::eval::Session;
 use finn_mvu::harness::{run_figure_bench, SweepKind};
 
 fn main() {
-    run_figure_bench("fig08_ifm_channels", SweepKind::IfmChannels, &Explorer::parallel());
+    run_figure_bench("fig08_ifm_channels", SweepKind::IfmChannels, &Session::parallel());
 }

@@ -5,9 +5,9 @@
 //!
 //! Run with: `cargo bench --bench fig09_kernel_dim`
 
-use finn_mvu::explore::Explorer;
+use finn_mvu::eval::Session;
 use finn_mvu::harness::{run_figure_bench, SweepKind};
 
 fn main() {
-    run_figure_bench("fig09_kernel_dim", SweepKind::KernelDim, &Explorer::parallel());
+    run_figure_bench("fig09_kernel_dim", SweepKind::KernelDim, &Session::parallel());
 }

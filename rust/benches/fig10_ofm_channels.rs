@@ -5,9 +5,9 @@
 //!
 //! Run with: `cargo bench --bench fig10_ofm_channels`
 
-use finn_mvu::explore::Explorer;
+use finn_mvu::eval::Session;
 use finn_mvu::harness::{run_figure_bench, SweepKind};
 
 fn main() {
-    run_figure_bench("fig10_ofm_channels", SweepKind::OfmChannels, &Explorer::parallel());
+    run_figure_bench("fig10_ofm_channels", SweepKind::OfmChannels, &Session::parallel());
 }

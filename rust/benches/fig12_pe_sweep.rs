@@ -5,9 +5,9 @@
 //!
 //! Run with: `cargo bench --bench fig12_pe_sweep`
 
-use finn_mvu::explore::Explorer;
+use finn_mvu::eval::Session;
 use finn_mvu::harness::{run_figure_bench, SweepKind};
 
 fn main() {
-    run_figure_bench("fig12_pe_sweep", SweepKind::Pe, &Explorer::parallel());
+    run_figure_bench("fig12_pe_sweep", SweepKind::Pe, &Session::parallel());
 }

@@ -6,11 +6,11 @@
 //!
 //! Run with: `cargo bench --bench fig14_heatmap`
 
-use finn_mvu::explore::Explorer;
+use finn_mvu::eval::Session;
 use finn_mvu::harness::{bench, fig14_heatmap_with};
 
 fn main() {
-    let ex = Explorer::parallel();
+    let ex = Session::parallel();
     let (lut, ff) = fig14_heatmap_with(&ex).unwrap();
     println!("Fig. 14(a) dLUT = HLS - RTL (positive: RTL smaller)");
     println!("{}", lut.render());

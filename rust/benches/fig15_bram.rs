@@ -6,11 +6,11 @@
 //!
 //! Run with: `cargo bench --bench fig15_bram`
 
-use finn_mvu::explore::Explorer;
+use finn_mvu::eval::Session;
 use finn_mvu::harness::{bench, fig15_bram_with};
 
 fn main() {
-    let ex = Explorer::parallel();
+    let ex = Session::parallel();
     let t = fig15_bram_with(&ex).unwrap();
     println!("Fig. 15 — BRAM18 usage, 1-bit precision");
     println!("{}", t.render());

@@ -4,11 +4,11 @@
 //!
 //! Run with: `cargo bench --bench fig16_synth_time`
 
-use finn_mvu::explore::Explorer;
+use finn_mvu::eval::Session;
 use finn_mvu::harness::{bench, fig16_synth_time_with};
 
 fn main() {
-    let ex = Explorer::parallel();
+    let ex = Session::parallel();
     let t = fig16_synth_time_with(&ex).unwrap();
     println!("Fig. 16 — synthesis time (standard type, 4-bit)");
     println!("{}", t.render());

@@ -9,15 +9,15 @@
 //!
 //! Run with: `cargo bench --bench hotpath`
 
-use finn_mvu::cfg::{nid_layers, LayerParams, SimdType};
-use finn_mvu::explore::Explorer;
+use finn_mvu::cfg::{nid_layers, DesignPoint, SimdType, ValidatedParams};
+use finn_mvu::eval::Session;
 use finn_mvu::harness::{bench, random_weights, SweepKind};
 use finn_mvu::quant::matvec;
 use finn_mvu::runtime::{default_artifacts_dir, Engine};
 use finn_mvu::sim::run_mvu;
 use finn_mvu::util::rng::Pcg32;
 
-fn sim_bench(name: &str, params: &LayerParams, n_vec: usize) {
+fn sim_bench(name: &str, params: &ValidatedParams, n_vec: usize) {
     let w = random_weights(params, 11);
     let mut rng = Pcg32::new(12);
     let vectors: Vec<Vec<i32>> = (0..n_vec)
@@ -50,14 +50,14 @@ fn explore_bench() {
     println!("explore grid: {} points (Table 2, all sweeps x all types)", points.len());
 
     let serial_cold = bench("explore/table2_grid_serial_cold", || {
-        std::hint::black_box(Explorer::serial().evaluate_points(&points).unwrap());
+        std::hint::black_box(Session::serial().evaluate_points(&points).unwrap());
     });
     println!("{serial_cold}");
     let parallel_cold = bench("explore/table2_grid_parallel_cold", || {
-        std::hint::black_box(Explorer::parallel().evaluate_points(&points).unwrap());
+        std::hint::black_box(Session::parallel().evaluate_points(&points).unwrap());
     });
     println!("{parallel_cold}");
-    let ex = Explorer::parallel();
+    let ex = Session::parallel();
     ex.evaluate_points(&points).unwrap(); // fill the cache
     let warm = bench("explore/table2_grid_cache_warm", || {
         std::hint::black_box(ex.evaluate_points(&points).unwrap());
@@ -75,7 +75,15 @@ fn main() {
     // L3 simulator hot loop
     let nid0 = nid_layers().remove(0);
     sim_bench("sim/nid_layer0_x32vec", &nid0, 32);
-    let big = LayerParams::conv("big", 64, 8, 64, 4, 32, 32, SimdType::Standard, 4, 4);
+    let big = DesignPoint::conv("big")
+        .ifm_ch(64)
+        .ifm_dim(8)
+        .ofm_ch(64)
+        .kernel_dim(4)
+        .pe(32)
+        .simd(32)
+        .build()
+        .unwrap();
     sim_bench("sim/conv_pe32_simd32_x4img", &big, 4 * big.output_pixels());
 
     // the design-space exploration workload (the tentpole hot path)

@@ -6,11 +6,11 @@
 //! Run with: `cargo bench --bench table4_large_cfg`
 
 use finn_mvu::cfg::table3_configs;
-use finn_mvu::explore::Explorer;
+use finn_mvu::eval::Session;
 use finn_mvu::harness::{bench, table4_with};
 
 fn main() {
-    let ex = Explorer::parallel();
+    let ex = Session::parallel();
     println!("Table 4 — resource utilization for Table 3 configurations");
     println!("{}", table4_with(&ex).unwrap().render());
 

@@ -6,11 +6,11 @@
 //!
 //! Run with: `cargo bench --bench table5_critical_path`
 
-use finn_mvu::explore::Explorer;
+use finn_mvu::eval::Session;
 use finn_mvu::harness::{bench, table5_with};
 
 fn main() {
-    let ex = Explorer::parallel();
+    let ex = Session::parallel();
     let (t, rows) = table5_with(&ex).unwrap();
     println!("Table 5 — critical path delay (ns)");
     println!("{}", t.render());

@@ -5,14 +5,14 @@
 //! Run with: `cargo bench --bench table7_nid`
 
 use finn_mvu::coordinator::{Pipeline, PipelineConfig, Request};
-use finn_mvu::explore::Explorer;
+use finn_mvu::eval::Session;
 use finn_mvu::harness::{bench_with, table7_with};
 use finn_mvu::nid::generate;
 use finn_mvu::runtime::{default_artifacts_dir, Manifest};
 use std::time::Duration;
 
 fn main() {
-    let ex = Explorer::parallel();
+    let ex = Session::parallel();
     let dir = default_artifacts_dir();
     let trained = Manifest::load(&dir)
         .ok()

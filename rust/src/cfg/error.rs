@@ -1,0 +1,134 @@
+//! Structured configuration errors.
+//!
+//! Every way a [`LayerParams`](super::LayerParams) can be illegal has its
+//! own variant, so callers (the CLI, the exploration service, tests) can
+//! match on the failing axis instead of scraping strings. The enum is
+//! std-only (hand-written `Display` + `std::error::Error`; the offline
+//! registry carries no proc-macro error crates we want on this path) and
+//! converts into `anyhow::Error` at legacy call sites via `?`.
+
+use std::fmt;
+
+use super::params::SimdType;
+
+/// Which folding axis failed the divisibility rule.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum FoldAxis {
+    /// SIMD must divide the weight-matrix columns (K_d^2 * I_c).
+    Simd,
+    /// PE must divide the weight-matrix rows (O_c).
+    Pe,
+}
+
+impl FoldAxis {
+    pub fn name(&self) -> &'static str {
+        match self {
+            FoldAxis::Simd => "SIMD",
+            FoldAxis::Pe => "PE",
+        }
+    }
+}
+
+/// A design point failed validation. Returned by
+/// [`LayerParams::validate`](super::LayerParams::validate) and
+/// [`DesignPoint::build`](super::DesignPoint::build).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum ParamError {
+    /// A structural parameter is zero (PE, SIMD, or a geometry axis).
+    ZeroDim {
+        name: String,
+        /// The offending field, e.g. `"pe"` or `"ifm_ch"`.
+        field: &'static str,
+    },
+    /// The folding divisibility rule is violated (paper: SIMD | K^2*IC,
+    /// PE | OC — the same legality FINN enforces when assigning folds).
+    IllegalFold {
+        name: String,
+        axis: FoldAxis,
+        /// The configured PE or SIMD value.
+        value: usize,
+        /// The dimension it must divide (matrix rows for PE, cols for SIMD).
+        total: usize,
+    },
+    /// The convolution kernel is larger than the input feature map.
+    KernelExceedsIfm { name: String, kernel_dim: usize, ifm_dim: usize },
+    /// Operand widths are incompatible with the SIMD element type
+    /// (xnor: 1/1-bit, binary weights: 1-bit weights, standard: >= 2 bits).
+    PrecisionRule {
+        name: String,
+        simd_type: SimdType,
+        weight_bits: u32,
+        input_bits: u32,
+    },
+}
+
+impl ParamError {
+    /// The design point's name (every variant carries it).
+    pub fn point_name(&self) -> &str {
+        match self {
+            ParamError::ZeroDim { name, .. }
+            | ParamError::IllegalFold { name, .. }
+            | ParamError::KernelExceedsIfm { name, .. }
+            | ParamError::PrecisionRule { name, .. } => name,
+        }
+    }
+}
+
+impl fmt::Display for ParamError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            ParamError::ZeroDim { name, field } => {
+                write!(f, "{name}: {field} must be positive")
+            }
+            ParamError::IllegalFold { name, axis, value, total } => match axis {
+                FoldAxis::Simd => {
+                    write!(f, "{name}: SIMD={value} does not divide K^2*IC={total}")
+                }
+                FoldAxis::Pe => write!(f, "{name}: PE={value} does not divide OC={total}"),
+            },
+            ParamError::KernelExceedsIfm { name, kernel_dim, ifm_dim } => {
+                write!(f, "{name}: kernel {kernel_dim} larger than IFM {ifm_dim}")
+            }
+            ParamError::PrecisionRule { name, simd_type, weight_bits, input_bits } => match simd_type {
+                SimdType::Xnor => {
+                    write!(f, "{name}: xnor requires 1-bit weights and inputs (got w{weight_bits}/i{input_bits})")
+                }
+                SimdType::BinaryWeights => {
+                    write!(f, "{name}: binary-weight type requires 1-bit weights (got w{weight_bits})")
+                }
+                SimdType::Standard => {
+                    write!(f, "{name}: standard type expects >=2-bit operands (got w{weight_bits}/i{input_bits}; use xnor/binary)")
+                }
+            },
+        }
+    }
+}
+
+impl std::error::Error for ParamError {}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn display_names_the_axis() {
+        let e = ParamError::IllegalFold {
+            name: "t".to_string(),
+            axis: FoldAxis::Simd,
+            value: 3,
+            total: 1024,
+        };
+        let s = e.to_string();
+        assert!(s.contains("SIMD=3") && s.contains("1024"), "{s}");
+        assert_eq!(e.point_name(), "t");
+    }
+
+    #[test]
+    fn is_a_std_error() {
+        fn takes_err<E: std::error::Error + Send + Sync + 'static>(_: E) {}
+        takes_err(ParamError::ZeroDim { name: "x".into(), field: "pe" });
+        // and converts into anyhow at legacy call sites
+        let _: anyhow::Error =
+            ParamError::ZeroDim { name: "x".into(), field: "pe" }.into();
+    }
+}

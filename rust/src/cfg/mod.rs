@@ -1,10 +1,20 @@
-//! Configuration types: MVU/layer parameters and the paper's experiment
+//! Configuration types: the validated design-point builder, MVU/layer
+//! parameters, structured parameter errors, and the paper's experiment
 //! configurations (Tables 2, 3 and 6).
+//!
+//! The front door is [`DesignPoint`]: a fluent builder whose `build()`
+//! runs the folding/precision legality checks exactly once and returns a
+//! [`ValidatedParams`] — the only parameter type the compute layers
+//! (`sim`, `estimate`, `explore`, `eval`) accept.
 
+mod error;
 mod params;
+mod point;
 mod sweeps;
 
+pub use error::{FoldAxis, ParamError};
 pub use params::{LayerParams, SimdType, ACC_GUARD_BITS};
+pub use point::{DesignPoint, ValidatedParams};
 pub use sweeps::{
     nid_layers, sweep_ifm_channels, sweep_ifm_dim, sweep_kernel_dim, sweep_ofm_channels,
     sweep_pe, sweep_simd, table3_configs, SweepPoint,

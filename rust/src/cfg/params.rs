@@ -1,8 +1,16 @@
 //! MVU design parameters — the axes of the paper's design-space sweep.
+//!
+//! `LayerParams` is the plain (mutable, unvalidated) parameter record;
+//! construct points with the [`DesignPoint`](super::DesignPoint) builder,
+//! whose `build()` seals them into a
+//! [`ValidatedParams`](super::ValidatedParams) — the only type the
+//! compute layers accept.
 
 use std::fmt;
 
 use anyhow::{bail, Result};
+
+use super::error::{FoldAxis, ParamError};
 
 /// Extra accumulator headroom bits beyond the exact worst case, matching
 /// common RTL practice (the paper's RTL sizes the accumulator exactly; we
@@ -75,62 +83,6 @@ pub struct LayerParams {
 }
 
 impl LayerParams {
-    /// A fully connected layer (the NID MLP case).
-    pub fn fc(
-        name: &str,
-        in_features: usize,
-        out_features: usize,
-        pe: usize,
-        simd: usize,
-        simd_type: SimdType,
-        weight_bits: u32,
-        input_bits: u32,
-        output_bits: u32,
-    ) -> LayerParams {
-        LayerParams {
-            name: name.to_string(),
-            ifm_ch: in_features,
-            ifm_dim: 1,
-            ofm_ch: out_features,
-            kernel_dim: 1,
-            pe,
-            simd,
-            simd_type,
-            weight_bits,
-            input_bits,
-            output_bits,
-        }
-    }
-
-    /// A convolutional layer lowered to SWU + MVU.
-    #[allow(clippy::too_many_arguments)]
-    pub fn conv(
-        name: &str,
-        ifm_ch: usize,
-        ifm_dim: usize,
-        ofm_ch: usize,
-        kernel_dim: usize,
-        pe: usize,
-        simd: usize,
-        simd_type: SimdType,
-        weight_bits: u32,
-        input_bits: u32,
-    ) -> LayerParams {
-        LayerParams {
-            name: name.to_string(),
-            ifm_ch,
-            ifm_dim,
-            ofm_ch,
-            kernel_dim,
-            pe,
-            simd,
-            simd_type,
-            weight_bits,
-            input_bits,
-            output_bits: 0,
-        }
-    }
-
     // ---- derived geometry (paper §4.1.1 / §5.1) ----------------------------
 
     /// Weight-matrix columns: K_d^2 * I_c.
@@ -188,7 +140,6 @@ impl LayerParams {
     /// Exact accumulator width needed for the worst-case dot product.
     pub fn accumulator_bits(&self) -> u32 {
         let n = self.matrix_cols() as u64;
-        let lanes_log = 64 - n.next_power_of_two().leading_zeros() - 1;
         let width = match self.simd_type {
             // popcount of N bits needs ceil(log2(N+1)) bits, unsigned.
             SimdType::Xnor => ceil_log2(n + 1),
@@ -196,49 +147,63 @@ impl LayerParams {
             SimdType::BinaryWeights => self.input_bits + ceil_log2(n) + 1,
             SimdType::Standard => self.input_bits + self.weight_bits + ceil_log2(n),
         };
-        let _ = lanes_log;
         width + ACC_GUARD_BITS
     }
 
-    /// Folding legality (paper: SIMD | cols, PE | rows). FINN enforces the
-    /// same divisibility when assigning folds.
-    pub fn validate(&self) -> Result<()> {
-        if self.pe == 0 || self.simd == 0 {
-            bail!("{}: PE and SIMD must be positive", self.name);
+    /// Folding legality (paper: SIMD | cols, PE | rows — the same
+    /// divisibility FINN enforces when assigning folds) plus the SIMD-type
+    /// precision rules, as a structured [`ParamError`]. Callers normally
+    /// never invoke this directly: [`DesignPoint::build`](super::DesignPoint::build)
+    /// / [`LayerParams::validated`] run it exactly once and seal the result.
+    pub fn validate(&self) -> Result<(), ParamError> {
+        let dims: [(&'static str, usize); 6] = [
+            ("pe", self.pe),
+            ("simd", self.simd),
+            ("ifm_ch", self.ifm_ch),
+            ("ifm_dim", self.ifm_dim),
+            ("ofm_ch", self.ofm_ch),
+            ("kernel_dim", self.kernel_dim),
+        ];
+        for (field, v) in dims {
+            if v == 0 {
+                return Err(ParamError::ZeroDim { name: self.name.clone(), field });
+            }
         }
         if self.matrix_cols() % self.simd != 0 {
-            bail!(
-                "{}: SIMD={} does not divide K^2*IC={}",
-                self.name,
-                self.simd,
-                self.matrix_cols()
-            );
+            return Err(ParamError::IllegalFold {
+                name: self.name.clone(),
+                axis: FoldAxis::Simd,
+                value: self.simd,
+                total: self.matrix_cols(),
+            });
         }
         if self.matrix_rows() % self.pe != 0 {
-            bail!("{}: PE={} does not divide OC={}", self.name, self.pe, self.matrix_rows());
+            return Err(ParamError::IllegalFold {
+                name: self.name.clone(),
+                axis: FoldAxis::Pe,
+                value: self.pe,
+                total: self.matrix_rows(),
+            });
         }
         if self.kernel_dim > self.ifm_dim {
-            bail!("{}: kernel {} larger than IFM {}", self.name, self.kernel_dim, self.ifm_dim);
+            return Err(ParamError::KernelExceedsIfm {
+                name: self.name.clone(),
+                kernel_dim: self.kernel_dim,
+                ifm_dim: self.ifm_dim,
+            });
         }
-        match self.simd_type {
-            SimdType::Xnor => {
-                if self.weight_bits != 1 || self.input_bits != 1 {
-                    bail!("{}: xnor requires 1-bit weights and inputs", self.name);
-                }
-            }
-            SimdType::BinaryWeights => {
-                if self.weight_bits != 1 {
-                    bail!("{}: binary-weight type requires 1-bit weights", self.name);
-                }
-            }
-            SimdType::Standard => {
-                if self.weight_bits < 2 || self.input_bits < 2 {
-                    bail!(
-                        "{}: standard type expects >=2-bit operands (use xnor/binary)",
-                        self.name
-                    );
-                }
-            }
+        let precision_ok = match self.simd_type {
+            SimdType::Xnor => self.weight_bits == 1 && self.input_bits == 1,
+            SimdType::BinaryWeights => self.weight_bits == 1,
+            SimdType::Standard => self.weight_bits >= 2 && self.input_bits >= 2,
+        };
+        if !precision_ok {
+            return Err(ParamError::PrecisionRule {
+                name: self.name.clone(),
+                simd_type: self.simd_type,
+                weight_bits: self.weight_bits,
+                input_bits: self.input_bits,
+            });
         }
         Ok(())
     }
@@ -285,9 +250,20 @@ fn ceil_log2(n: u64) -> u32 {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::cfg::{DesignPoint, ParamError};
 
     fn base() -> LayerParams {
-        LayerParams::conv("t", 64, 32, 64, 4, 2, 2, SimdType::Standard, 4, 4)
+        DesignPoint::conv("t")
+            .ifm_ch(64)
+            .ifm_dim(32)
+            .ofm_ch(64)
+            .kernel_dim(4)
+            .pe(2)
+            .simd(2)
+            .precision(4, 4, 0)
+            .build()
+            .unwrap()
+            .into_inner()
     }
 
     #[test]
@@ -306,17 +282,18 @@ mod tests {
         let mut p = base();
         assert!(p.validate().is_ok());
         p.simd = 3; // 1024 % 3 != 0
-        assert!(p.validate().is_err());
+        assert!(matches!(p.validate(), Err(ParamError::IllegalFold { .. })));
         p.simd = 2;
         p.pe = 5;
-        assert!(p.validate().is_err());
+        assert!(matches!(p.validate(), Err(ParamError::IllegalFold { .. })));
     }
 
     #[test]
     fn simd_type_precision_rules() {
         let mut p = base();
         p.simd_type = SimdType::Xnor;
-        assert!(p.validate().is_err()); // 4-bit operands
+        // 4-bit operands under xnor
+        assert!(matches!(p.validate(), Err(ParamError::PrecisionRule { .. })));
         p.weight_bits = 1;
         p.input_bits = 1;
         assert!(p.validate().is_ok());
@@ -327,7 +304,15 @@ mod tests {
 
     #[test]
     fn accumulator_widths() {
-        let mut p = LayerParams::fc("t", 64, 8, 8, 8, SimdType::Xnor, 1, 1, 0);
+        let mut p = DesignPoint::fc("t")
+            .in_features(64)
+            .out_features(8)
+            .pe(8)
+            .simd(8)
+            .paper_precision(SimdType::Xnor)
+            .build()
+            .unwrap()
+            .into_inner();
         assert_eq!(p.accumulator_bits(), 7); // popcount of 64 -> [0,64] needs 7 bits
         p.simd_type = SimdType::Standard;
         p.weight_bits = 4;
@@ -339,7 +324,14 @@ mod tests {
     #[test]
     fn analytic_cycles_formula() {
         // NID layer 0: 600x64, PE=64, SIMD=50 -> SF=12, NF=1, 1 pixel.
-        let p = LayerParams::fc("l0", 600, 64, 64, 50, SimdType::Standard, 2, 2, 2);
+        let p = DesignPoint::fc("l0")
+            .in_features(600)
+            .out_features(64)
+            .pe(64)
+            .simd(50)
+            .precision(2, 2, 2)
+            .build()
+            .unwrap();
         assert_eq!(p.analytic_cycles(4), 12 + 5); // paper Table 7: 17
     }
 

@@ -1,0 +1,364 @@
+//! The validated design-point builder — the single front door to every
+//! compute layer.
+//!
+//! [`DesignPoint`] is a fluent builder over [`LayerParams`]; its
+//! [`build`](DesignPoint::build) runs the folding/precision legality
+//! checks exactly once and returns a [`ValidatedParams`] newtype. The
+//! simulator, estimator and exploration engine accept *only*
+//! `ValidatedParams`, so validation provably happens once per design
+//! point and never again on the hot path.
+//!
+//! ```
+//! use finn_mvu::cfg::{DesignPoint, ParamError, FoldAxis};
+//!
+//! // NID layer 0 (paper Table 6)
+//! let p = DesignPoint::fc("l0")
+//!     .in_features(600)
+//!     .out_features(64)
+//!     .pe(64)
+//!     .simd(50)
+//!     .precision(2, 2, 2)
+//!     .build()
+//!     .unwrap();
+//! assert_eq!(p.synapse_fold(), 12);
+//!
+//! // illegal folds are structured errors, not strings
+//! let err = DesignPoint::fc("bad").in_features(600).out_features(64).simd(7).build();
+//! assert!(matches!(err, Err(ParamError::IllegalFold { axis: FoldAxis::Simd, .. })));
+//! ```
+
+use std::fmt;
+use std::ops::Deref;
+
+use super::error::ParamError;
+use super::params::{LayerParams, SimdType};
+
+/// A [`LayerParams`] that has passed [`LayerParams::validate`] — the only
+/// parameter type the compute layers (`sim`, `estimate`, `explore`,
+/// `eval`) accept. Immutable by construction: the inner parameters are
+/// reachable only by shared reference (via `Deref`), so a value of this
+/// type can never hold an illegal configuration.
+#[derive(Debug, Clone, PartialEq, Eq, Hash)]
+pub struct ValidatedParams(LayerParams);
+
+impl ValidatedParams {
+    /// Shared access to the underlying parameters (also available through
+    /// `Deref`, so methods and fields work directly on `ValidatedParams`).
+    pub fn params(&self) -> &LayerParams {
+        &self.0
+    }
+
+    /// Unwrap into a plain (mutable, unvalidated) `LayerParams` — the exit
+    /// hatch for code that wants to derive a modified point; re-validate
+    /// with [`LayerParams::validated`] to get back in.
+    pub fn into_inner(self) -> LayerParams {
+        self.0
+    }
+}
+
+impl Deref for ValidatedParams {
+    type Target = LayerParams;
+
+    fn deref(&self) -> &LayerParams {
+        &self.0
+    }
+}
+
+impl AsRef<LayerParams> for ValidatedParams {
+    fn as_ref(&self) -> &LayerParams {
+        &self.0
+    }
+}
+
+impl TryFrom<LayerParams> for ValidatedParams {
+    type Error = ParamError;
+
+    fn try_from(p: LayerParams) -> Result<ValidatedParams, ParamError> {
+        p.validated()
+    }
+}
+
+impl fmt::Display for ValidatedParams {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        self.0.fmt(f)
+    }
+}
+
+impl LayerParams {
+    /// Validate and seal: the only way to construct a [`ValidatedParams`].
+    pub fn validated(self) -> Result<ValidatedParams, ParamError> {
+        self.validate()?;
+        Ok(ValidatedParams(self))
+    }
+}
+
+/// Fluent builder for one MVU design point.
+///
+/// Defaults: a 1x1 fully connected geometry (`ifm_dim = kernel_dim = 1`),
+/// `pe = simd = 1` (fully folded, always legal), the standard SIMD type
+/// with the paper's 4-bit operands, and raw accumulator output
+/// (`output_bits = 0`). [`build`](DesignPoint::build) is the single
+/// validation point.
+#[derive(Debug, Clone)]
+pub struct DesignPoint {
+    p: LayerParams,
+}
+
+impl DesignPoint {
+    fn base(name: &str) -> LayerParams {
+        LayerParams {
+            name: name.to_string(),
+            ifm_ch: 1,
+            ifm_dim: 1,
+            ofm_ch: 1,
+            kernel_dim: 1,
+            pe: 1,
+            simd: 1,
+            simd_type: SimdType::Standard,
+            weight_bits: 4,
+            input_bits: 4,
+            output_bits: 0,
+        }
+    }
+
+    /// A fully connected layer (`ifm_dim = kernel_dim = 1`); set the
+    /// geometry with [`in_features`](Self::in_features) /
+    /// [`out_features`](Self::out_features).
+    pub fn fc(name: &str) -> DesignPoint {
+        DesignPoint { p: Self::base(name) }
+    }
+
+    /// A convolutional layer lowered to SWU + MVU. Unlike [`fc`](Self::fc)
+    /// (whose 1x1 defaults are meaningful), a conv point has no sensible
+    /// default geometry, so [`ifm_ch`](Self::ifm_ch),
+    /// [`ifm_dim`](Self::ifm_dim), [`ofm_ch`](Self::ofm_ch) and
+    /// [`kernel_dim`](Self::kernel_dim) start at 0 and **must** be set —
+    /// a forgotten axis fails `build()` with `ParamError::ZeroDim` instead
+    /// of silently degenerating to a 1x1 layer.
+    pub fn conv(name: &str) -> DesignPoint {
+        let mut p = Self::base(name);
+        p.ifm_ch = 0;
+        p.ifm_dim = 0;
+        p.ofm_ch = 0;
+        p.kernel_dim = 0;
+        DesignPoint { p }
+    }
+
+    /// Continue from existing parameters (e.g. a cached or deserialized
+    /// point that needs re-validation after edits).
+    pub fn from_params(p: LayerParams) -> DesignPoint {
+        DesignPoint { p }
+    }
+
+    // ---- geometry ----------------------------------------------------------
+
+    /// FC input features (alias for `ifm_ch` with a 1x1 kernel).
+    pub fn in_features(mut self, n: usize) -> Self {
+        self.p.ifm_ch = n;
+        self
+    }
+
+    /// FC output features (alias for `ofm_ch`).
+    pub fn out_features(mut self, n: usize) -> Self {
+        self.p.ofm_ch = n;
+        self
+    }
+
+    /// Input feature-map channels (I_c).
+    pub fn ifm_ch(mut self, n: usize) -> Self {
+        self.p.ifm_ch = n;
+        self
+    }
+
+    /// Input feature-map spatial dimension (square).
+    pub fn ifm_dim(mut self, n: usize) -> Self {
+        self.p.ifm_dim = n;
+        self
+    }
+
+    /// Output feature-map channels (O_c).
+    pub fn ofm_ch(mut self, n: usize) -> Self {
+        self.p.ofm_ch = n;
+        self
+    }
+
+    /// Kernel spatial dimension (K_d, square).
+    pub fn kernel_dim(mut self, n: usize) -> Self {
+        self.p.kernel_dim = n;
+        self
+    }
+
+    // ---- folding -----------------------------------------------------------
+
+    /// Processing elements (must divide O_c).
+    pub fn pe(mut self, n: usize) -> Self {
+        self.p.pe = n;
+        self
+    }
+
+    /// SIMD lanes per PE (must divide K_d^2 * I_c).
+    pub fn simd(mut self, n: usize) -> Self {
+        self.p.simd = n;
+        self
+    }
+
+    // ---- datapath ----------------------------------------------------------
+
+    /// SIMD element type, leaving operand widths untouched.
+    pub fn simd_type(mut self, ty: SimdType) -> Self {
+        self.p.simd_type = ty;
+        self
+    }
+
+    /// SIMD element type plus the paper's §6.1 operand widths for it:
+    /// xnor 1/1-bit, binary weights 1/4-bit, standard 4/4-bit.
+    pub fn paper_precision(mut self, ty: SimdType) -> Self {
+        self.p.simd_type = ty;
+        let (wb, ib) = match ty {
+            SimdType::Xnor => (1, 1),
+            SimdType::BinaryWeights => (1, 4),
+            SimdType::Standard => (4, 4),
+        };
+        self.p.weight_bits = wb;
+        self.p.input_bits = ib;
+        self
+    }
+
+    /// Weight / input / output precision in bits (output 0 = raw
+    /// accumulator, no thresholding).
+    pub fn precision(mut self, weight_bits: u32, input_bits: u32, output_bits: u32) -> Self {
+        self.p.weight_bits = weight_bits;
+        self.p.input_bits = input_bits;
+        self.p.output_bits = output_bits;
+        self
+    }
+
+    pub fn weight_bits(mut self, n: u32) -> Self {
+        self.p.weight_bits = n;
+        self
+    }
+
+    pub fn input_bits(mut self, n: u32) -> Self {
+        self.p.input_bits = n;
+        self
+    }
+
+    pub fn output_bits(mut self, n: u32) -> Self {
+        self.p.output_bits = n;
+        self
+    }
+
+    // ---- terminal ----------------------------------------------------------
+
+    /// Run the legality checks (once) and seal the point.
+    pub fn build(self) -> Result<ValidatedParams, ParamError> {
+        self.p.validated()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cfg::FoldAxis;
+
+    #[test]
+    fn builder_defaults_are_legal() {
+        let p = DesignPoint::fc("d").build().unwrap();
+        assert_eq!((p.ifm_ch, p.ofm_ch, p.pe, p.simd), (1, 1, 1, 1));
+        assert_eq!(p.simd_type, SimdType::Standard);
+    }
+
+    #[test]
+    fn fc_matches_explicit_geometry() {
+        let p = DesignPoint::fc("l0")
+            .in_features(600)
+            .out_features(64)
+            .pe(64)
+            .simd(50)
+            .precision(2, 2, 2)
+            .build()
+            .unwrap();
+        assert_eq!(p.matrix_cols(), 600);
+        assert_eq!(p.matrix_rows(), 64);
+        assert_eq!(p.synapse_fold(), 12);
+        assert_eq!(p.neuron_fold(), 1);
+        assert_eq!(p.output_bits, 2);
+    }
+
+    #[test]
+    fn conv_geometry_and_paper_precision() {
+        let p = DesignPoint::conv("c")
+            .ifm_ch(64)
+            .ifm_dim(32)
+            .ofm_ch(64)
+            .kernel_dim(4)
+            .pe(2)
+            .simd(2)
+            .paper_precision(SimdType::Xnor)
+            .build()
+            .unwrap();
+        assert_eq!(p.matrix_cols(), 4 * 4 * 64);
+        assert_eq!((p.weight_bits, p.input_bits), (1, 1));
+    }
+
+    #[test]
+    fn each_illegal_axis_yields_its_variant() {
+        let fc = || DesignPoint::fc("t").in_features(16).out_features(8);
+        assert!(matches!(
+            fc().simd(3).build(),
+            Err(ParamError::IllegalFold { axis: FoldAxis::Simd, value: 3, total: 16, .. })
+        ));
+        assert!(matches!(
+            fc().pe(5).build(),
+            Err(ParamError::IllegalFold { axis: FoldAxis::Pe, value: 5, total: 8, .. })
+        ));
+        assert!(matches!(
+            DesignPoint::conv("t").ifm_ch(4).ifm_dim(2).ofm_ch(4).kernel_dim(3).build(),
+            Err(ParamError::KernelExceedsIfm { kernel_dim: 3, ifm_dim: 2, .. })
+        ));
+        assert!(matches!(
+            fc().paper_precision(SimdType::Xnor).weight_bits(4).build(),
+            Err(ParamError::PrecisionRule { simd_type: SimdType::Xnor, .. })
+        ));
+        assert!(matches!(
+            fc().pe(0).build(),
+            Err(ParamError::ZeroDim { field: "pe", .. })
+        ));
+    }
+
+    #[test]
+    fn conv_requires_explicit_geometry() {
+        // a forgotten conv axis is a ZeroDim error, never a silent 1x1
+        assert!(matches!(
+            DesignPoint::conv("c").ofm_ch(64).pe(2).build(),
+            Err(ParamError::ZeroDim { .. })
+        ));
+        assert!(matches!(
+            DesignPoint::conv("c").ifm_ch(4).ifm_dim(8).ofm_ch(4).build(),
+            Err(ParamError::ZeroDim { field: "kernel_dim", .. })
+        ));
+    }
+
+    #[test]
+    fn validated_params_deref_and_roundtrip() {
+        let vp = DesignPoint::fc("r").in_features(8).out_features(4).build().unwrap();
+        // field + method access through Deref
+        assert_eq!(vp.ifm_ch, 8);
+        assert_eq!(vp.matrix_rows(), 4);
+        assert_eq!(vp.to_string(), vp.params().to_string());
+        // exit hatch: mutate, then the only way back in is re-validation
+        let mut raw = vp.clone().into_inner();
+        raw.simd = 3;
+        assert!(raw.clone().validated().is_err());
+        raw.simd = 8;
+        let back = ValidatedParams::try_from(raw).unwrap();
+        assert_eq!(back.simd, 8);
+    }
+
+    #[test]
+    fn from_params_revalidates() {
+        let base = DesignPoint::fc("x").in_features(12).out_features(6).build().unwrap();
+        let edited = DesignPoint::from_params(base.into_inner()).simd(4).build().unwrap();
+        assert_eq!(edited.simd, 4);
+    }
+}

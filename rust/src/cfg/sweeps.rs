@@ -2,44 +2,36 @@
 //!
 //! Table 2 defines six sweep configurations (a `*` marks the swept
 //! parameter); Table 3 the larger-design configurations behind Table 4;
-//! Table 6 the NID MLP layers.
+//! Table 6 the NID MLP layers. Every point is built through the
+//! [`DesignPoint`] builder and therefore carries a [`ValidatedParams`]:
+//! sweeps cannot contain illegal folds by construction.
 
-use super::params::{LayerParams, SimdType};
+use super::params::SimdType;
+use super::point::{DesignPoint, ValidatedParams};
 
-/// One point of a sweep: the swept value plus the full parameter set.
+/// One point of a sweep: the swept value plus the full (validated)
+/// parameter set.
 #[derive(Debug, Clone)]
 pub struct SweepPoint {
     pub swept: usize,
-    pub params: LayerParams,
-}
-
-fn with_precision(mut p: LayerParams, simd_type: SimdType) -> LayerParams {
-    p.simd_type = simd_type;
-    match simd_type {
-        SimdType::Xnor => {
-            p.weight_bits = 1;
-            p.input_bits = 1;
-        }
-        SimdType::BinaryWeights => {
-            p.weight_bits = 1;
-            p.input_bits = 4;
-        }
-        // "we [use] four as the precision for inputs and weights" (§6.1)
-        SimdType::Standard => {
-            p.weight_bits = 4;
-            p.input_bits = 4;
-        }
-    }
-    p
+    pub params: ValidatedParams,
 }
 
 fn conv(name: &str, ifm_ch: usize, ifm_dim: usize, ofm_ch: usize, kd: usize,
-        pe: usize, simd: usize, ty: SimdType) -> LayerParams {
-    with_precision(
-        LayerParams::conv(name, ifm_ch, ifm_dim, ofm_ch, kd, pe, simd,
-                          SimdType::Standard, 4, 4),
-        ty,
-    )
+        fold: (usize, usize), ty: SimdType) -> ValidatedParams {
+    let (pe, simd) = fold;
+    DesignPoint::conv(name)
+        .ifm_ch(ifm_ch)
+        .ifm_dim(ifm_dim)
+        .ofm_ch(ofm_ch)
+        .kernel_dim(kd)
+        .pe(pe)
+        .simd(simd)
+        // "we [use] four as the precision for inputs and weights" (§6.1);
+        // 1-bit operands for the xnor/binary types.
+        .paper_precision(ty)
+        .build()
+        .expect("paper sweep configurations are legal by construction")
 }
 
 /// Table 2 configuration 1: sweep IFM channels 2..=64 (powers of two),
@@ -49,7 +41,7 @@ pub fn sweep_ifm_channels(ty: SimdType) -> Vec<SweepPoint> {
         .iter()
         .map(|&ic| SweepPoint {
             swept: ic,
-            params: conv(&format!("ifmch{ic}"), ic, 32, 64, 4, 2, 2, ty),
+            params: conv(&format!("ifmch{ic}"), ic, 32, 64, 4, (2, 2), ty),
         })
         .collect()
 }
@@ -61,7 +53,7 @@ pub fn sweep_ifm_dim(ty: SimdType) -> Vec<SweepPoint> {
         .iter()
         .map(|&d| SweepPoint {
             swept: d,
-            params: conv(&format!("ifmdim{d}"), 64, d, 64, 4, 32, 32, ty),
+            params: conv(&format!("ifmdim{d}"), 64, d, 64, 4, (32, 32), ty),
         })
         .collect()
 }
@@ -72,7 +64,7 @@ pub fn sweep_ofm_channels(ty: SimdType) -> Vec<SweepPoint> {
         .iter()
         .map(|&oc| SweepPoint {
             swept: oc,
-            params: conv(&format!("ofmch{oc}"), 64, 32, oc, 4, 2, 2, ty),
+            params: conv(&format!("ofmch{oc}"), 64, 32, oc, 4, (2, 2), ty),
         })
         .collect()
 }
@@ -85,7 +77,7 @@ pub fn sweep_kernel_dim(ty: SimdType) -> Vec<SweepPoint> {
         .iter()
         .map(|&kd| SweepPoint {
             swept: kd,
-            params: conv(&format!("kd{kd}"), 64, 32, 64, kd, 2, 2, ty),
+            params: conv(&format!("kd{kd}"), 64, 32, 64, kd, (2, 2), ty),
         })
         .collect()
 }
@@ -97,7 +89,7 @@ pub fn sweep_pe(ty: SimdType) -> Vec<SweepPoint> {
         .iter()
         .map(|&pe| SweepPoint {
             swept: pe,
-            params: conv(&format!("pe{pe}"), 64, 8, 64, 4, pe, 64, ty),
+            params: conv(&format!("pe{pe}"), 64, 8, 64, 4, (pe, 64), ty),
         })
         .collect()
 }
@@ -108,7 +100,7 @@ pub fn sweep_simd(ty: SimdType) -> Vec<SweepPoint> {
         .iter()
         .map(|&simd| SweepPoint {
             swept: simd,
-            params: conv(&format!("simd{simd}"), 64, 8, 64, 4, 64, simd, ty),
+            params: conv(&format!("simd{simd}"), 64, 8, 64, 4, (64, simd), ty),
         })
         .collect()
 }
@@ -120,19 +112,29 @@ pub fn table3_configs() -> Vec<SweepPoint> {
         .iter()
         .map(|&ic| SweepPoint {
             swept: ic,
-            params: conv(&format!("cfg_ifm{ic}"), ic, 16, 16, 4, 16, 16,
+            params: conv(&format!("cfg_ifm{ic}"), ic, 16, 16, 4, (16, 16),
                          SimdType::Standard),
         })
         .collect()
 }
 
 /// Table 6: the 4-layer NID MLP (2-bit weights/inputs).
-pub fn nid_layers() -> Vec<LayerParams> {
+pub fn nid_layers() -> Vec<ValidatedParams> {
+    let fc = |name: &str, fin: usize, fout: usize, pe: usize, simd: usize, ob: u32| {
+        DesignPoint::fc(name)
+            .in_features(fin)
+            .out_features(fout)
+            .pe(pe)
+            .simd(simd)
+            .precision(2, 2, ob)
+            .build()
+            .expect("Table 6 layers are legal by construction")
+    };
     vec![
-        LayerParams::fc("layer0", 600, 64, 64, 50, SimdType::Standard, 2, 2, 2),
-        LayerParams::fc("layer1", 64, 64, 16, 32, SimdType::Standard, 2, 2, 2),
-        LayerParams::fc("layer2", 64, 64, 16, 32, SimdType::Standard, 2, 2, 2),
-        LayerParams::fc("layer3", 64, 1, 1, 8, SimdType::Standard, 2, 2, 0),
+        fc("layer0", 600, 64, 64, 50, 2),
+        fc("layer1", 64, 64, 16, 32, 2),
+        fc("layer2", 64, 64, 16, 32, 2),
+        fc("layer3", 64, 1, 1, 8, 0),
     ]
 }
 
@@ -141,22 +143,27 @@ mod tests {
     use super::*;
 
     #[test]
-    fn all_sweep_points_are_legal() {
+    fn all_sweep_points_are_validated_by_construction() {
+        // `SweepPoint::params` is a `ValidatedParams`; this asserts the
+        // builders cover every sweep without panicking, and spot-checks
+        // the geometry.
         for ty in SimdType::ALL {
-            for sp in sweep_ifm_channels(ty)
+            let all: Vec<SweepPoint> = sweep_ifm_channels(ty)
                 .into_iter()
                 .chain(sweep_ifm_dim(ty))
                 .chain(sweep_ofm_channels(ty))
                 .chain(sweep_kernel_dim(ty))
                 .chain(sweep_pe(ty))
                 .chain(sweep_simd(ty))
-            {
-                sp.params.validate().unwrap_or_else(|e| panic!("{}: {e}", sp.params));
+                .collect();
+            assert_eq!(all.len(), 6 + 3 + 6 + 7 + 6 + 6);
+            for sp in &all {
+                assert_eq!(sp.params.simd_type, ty);
+                assert_eq!(sp.params.matrix_cols() % sp.params.simd, 0);
+                assert_eq!(sp.params.matrix_rows() % sp.params.pe, 0);
             }
         }
-        for sp in table3_configs() {
-            sp.params.validate().unwrap();
-        }
+        assert_eq!(table3_configs().len(), 3);
     }
 
     #[test]
@@ -168,7 +175,6 @@ mod tests {
         assert_eq!(layers[0].simd, 50);
         assert_eq!(layers[3].ofm_ch, 1);
         for l in &layers {
-            l.validate().unwrap();
             assert_eq!(l.weight_bits, 2);
             assert_eq!(l.input_bits, 2);
         }

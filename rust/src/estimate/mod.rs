@@ -25,7 +25,7 @@ pub use dsp::{clock_report, dsp_count, dsp_delay_ns, elaborate_rtl_dsp, ClockRep
 pub use netlist::{Component, Netlist};
 pub use synth::synth_time_s;
 
-use crate::cfg::LayerParams;
+use crate::cfg::ValidatedParams;
 
 /// Which implementation style is being estimated.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
@@ -68,15 +68,17 @@ impl Estimate {
 }
 
 /// Estimate one design point in one style.
-pub fn estimate(params: &LayerParams, style: Style) -> anyhow::Result<Estimate> {
-    params.validate()?;
+///
+/// Takes a [`ValidatedParams`] — the legality checks already ran (exactly
+/// once) in `DesignPoint::build`, so estimation is infallible.
+pub fn estimate(params: &ValidatedParams, style: Style) -> Estimate {
     let netlist = match style {
         Style::Rtl => rtl::elaborate_rtl(params),
         Style::Hls => hls_model::elaborate_hls(params),
     };
     let cp = critical_path(params, style);
     let synth = synth_time_s(params, style, &netlist);
-    Ok(Estimate {
+    Estimate {
         style,
         luts: netlist.luts(),
         ffs: netlist.ffs(),
@@ -85,7 +87,7 @@ pub fn estimate(params: &LayerParams, style: Style) -> anyhow::Result<Estimate> 
         delay_location: cp.location,
         synth_time_s: synth,
         netlist,
-    })
+    }
 }
 
 #[cfg(test)]
@@ -99,8 +101,8 @@ mod tests {
     fn small_designs_hls_much_larger() {
         for ty in SimdType::ALL {
             let p = &sweep_ifm_channels(ty)[0].params; // IFM=2, PE=SIMD=2
-            let r = estimate(p, Style::Rtl).unwrap();
-            let h = estimate(p, Style::Hls).unwrap();
+            let r = estimate(p, Style::Rtl);
+            let h = estimate(p, Style::Hls);
             assert!(
                 h.luts as f64 > 1.5 * r.luts as f64,
                 "{ty}: HLS {} vs RTL {} LUTs",
@@ -121,10 +123,10 @@ mod tests {
     #[test]
     fn hls_grows_with_ifm_channels_rtl_flat() {
         let pts = sweep_ifm_channels(SimdType::Standard);
-        let r_first = estimate(&pts[0].params, Style::Rtl).unwrap().luts as f64;
-        let r_last = estimate(&pts.last().unwrap().params, Style::Rtl).unwrap().luts as f64;
-        let h_first = estimate(&pts[0].params, Style::Hls).unwrap().luts as f64;
-        let h_last = estimate(&pts.last().unwrap().params, Style::Hls).unwrap().luts as f64;
+        let r_first = estimate(&pts[0].params, Style::Rtl).luts as f64;
+        let r_last = estimate(&pts.last().unwrap().params, Style::Rtl).luts as f64;
+        let h_first = estimate(&pts[0].params, Style::Hls).luts as f64;
+        let h_last = estimate(&pts.last().unwrap().params, Style::Hls).luts as f64;
         assert!(h_last > 2.0 * h_first, "HLS should blow up: {h_first} -> {h_last}");
         assert!(r_last < 1.6 * r_first, "RTL should stay flat-ish: {r_first} -> {r_last}");
     }
@@ -134,8 +136,8 @@ mod tests {
     #[test]
     fn large_designs_converge_table4() {
         for sp in table3_configs() {
-            let r = estimate(&sp.params, Style::Rtl).unwrap();
-            let h = estimate(&sp.params, Style::Hls).unwrap();
+            let r = estimate(&sp.params, Style::Rtl);
+            let h = estimate(&sp.params, Style::Hls);
             let ratio = r.luts as f64 / h.luts as f64;
             assert!(
                 (0.85..=1.30).contains(&ratio),
@@ -153,8 +155,8 @@ mod tests {
     fn hls_brams_at_least_double() {
         let pts = sweep_ifm_channels(SimdType::Xnor);
         for sp in &pts {
-            let r = estimate(&sp.params, Style::Rtl).unwrap();
-            let h = estimate(&sp.params, Style::Hls).unwrap();
+            let r = estimate(&sp.params, Style::Rtl);
+            let h = estimate(&sp.params, Style::Hls);
             assert!(
                 h.bram18 >= 2 * r.bram18,
                 "{}: HLS {} vs RTL {}",
@@ -170,8 +172,8 @@ mod tests {
     fn rtl_always_faster() {
         for ty in SimdType::ALL {
             for sp in sweep_ifm_channels(ty).iter().chain(&crate::cfg::sweep_pe(ty)) {
-                let r = estimate(&sp.params, Style::Rtl).unwrap();
-                let h = estimate(&sp.params, Style::Hls).unwrap();
+                let r = estimate(&sp.params, Style::Rtl);
+                let h = estimate(&sp.params, Style::Hls);
                 assert!(
                     r.delay_ns < h.delay_ns,
                     "{} {ty}: RTL {:.2} vs HLS {:.2}",
@@ -188,8 +190,8 @@ mod tests {
     fn hls_synthesis_much_slower() {
         for ty in SimdType::ALL {
             for sp in crate::cfg::sweep_pe(ty) {
-                let r = estimate(&sp.params, Style::Rtl).unwrap();
-                let h = estimate(&sp.params, Style::Hls).unwrap();
+                let r = estimate(&sp.params, Style::Rtl);
+                let h = estimate(&sp.params, Style::Hls);
                 assert!(
                     h.synth_time_s >= 6.0 * r.synth_time_s,
                     "{}: HLS {:.0}s vs RTL {:.0}s",

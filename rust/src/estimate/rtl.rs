@@ -143,7 +143,13 @@ mod tests {
     /// Unfolded designs (SF == 1) need no accumulator.
     #[test]
     fn no_accumulator_when_unfolded() {
-        let p = LayerParams::fc("t", 8, 8, 8, 8, SimdType::Standard, 4, 4, 0);
+        let p = crate::cfg::DesignPoint::fc("t")
+            .in_features(8)
+            .out_features(8)
+            .pe(8)
+            .simd(8)
+            .build()
+            .unwrap();
         let nl = elaborate_rtl(&p);
         assert!(nl.component("accumulator").is_none());
     }

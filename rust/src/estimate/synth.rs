@@ -50,8 +50,8 @@ mod tests {
     fn nid_times_within_band() {
         let paper = [(2325.0, 321.0), (1068.0, 239.0), (1068.0, 239.0), (988.0, 103.0)];
         for (layer, (h_want, r_want)) in nid_layers().iter().zip(paper) {
-            let h = estimate(layer, Style::Hls).unwrap().synth_time_s;
-            let r = estimate(layer, Style::Rtl).unwrap().synth_time_s;
+            let h = estimate(layer, Style::Hls).synth_time_s;
+            let r = estimate(layer, Style::Rtl).synth_time_s;
             assert!(h / h_want < 2.5 && h_want / h < 2.5, "{}: HLS {h:.0} vs {h_want}", layer.name);
             assert!(r / r_want < 2.5 && r_want / r < 2.5, "{}: RTL {r:.0} vs {r_want}", layer.name);
             assert!(h / r >= 4.0, "{}: ratio {:.1}", layer.name, h / r);
@@ -65,11 +65,11 @@ mod tests {
         let pts = sweep_pe(SimdType::Standard);
         let h: Vec<f64> = pts
             .iter()
-            .map(|sp| estimate(&sp.params, Style::Hls).unwrap().synth_time_s)
+            .map(|sp| estimate(&sp.params, Style::Hls).synth_time_s)
             .collect();
         let r: Vec<f64> = pts
             .iter()
-            .map(|sp| estimate(&sp.params, Style::Rtl).unwrap().synth_time_s)
+            .map(|sp| estimate(&sp.params, Style::Rtl).synth_time_s)
             .collect();
         // superlinear: the growth factor of successive doublings increases
         let g1 = h[2] / h[0];

@@ -1,0 +1,471 @@
+//! The unified evaluation facade — one request/response surface over the
+//! simulator, the estimator, the exploration engine and the serving
+//! pipeline.
+//!
+//! The paper's point (§6.4) is that a fast RTL flow turns exhaustive
+//! design-space evaluation into a routine, high-volume workload; this
+//! module is the API that workload is served through:
+//!
+//! * [`EvalRequest`] — a validated design point
+//!   ([`ValidatedParams`](crate::cfg::ValidatedParams), built once via
+//!   [`DesignPoint`](crate::cfg::DesignPoint)), the estimation
+//!   [`Style`]s wanted, and optional [`SimOptions`] for a cycle-accurate
+//!   run;
+//! * [`Evaluation`] — per-style estimates plus the simulation summary;
+//! * [`Session`] — the long-lived evaluator. It owns the exploration
+//!   engine (work-stealing thread pool + content-addressed
+//!   [`ResultCache`](crate::explore::ResultCache)), so repeated requests
+//!   for overlapping points are served from cache, and results are
+//!   byte-deterministic regardless of thread count.
+//!
+//! [`Session::evaluate`] serves one request, [`Session::evaluate_all`] a
+//! batch (in parallel, input order preserved), [`Session::evaluate_points`]
+//! whole sweeps, and [`Session::stream`] feeds inference requests through
+//! the [`coordinator::Pipeline`](crate::coordinator::Pipeline) serving
+//! stack. Errors are structured ([`EvalError`], wrapping
+//! [`ParamError`](crate::cfg::ParamError) where applicable), not strings.
+//!
+//! ```
+//! use finn_mvu::cfg::DesignPoint;
+//! use finn_mvu::eval::{EvalRequest, Session, SimOptions};
+//!
+//! let point = DesignPoint::fc("demo")
+//!     .in_features(16)
+//!     .out_features(8)
+//!     .pe(4)
+//!     .simd(8)
+//!     .build()
+//!     .unwrap();
+//! let session = Session::serial();
+//! let req = EvalRequest::new(point).with_sim(SimOptions { batch: 2, ..SimOptions::default() });
+//! let eval = session.evaluate(&req).unwrap();
+//! assert!(eval.sim.as_ref().unwrap().matches_reference);
+//! assert!(eval.hls().unwrap().ffs > eval.rtl().unwrap().ffs); // the paper's invariant
+//! ```
+
+use std::fmt;
+use std::path::PathBuf;
+
+use crate::cfg::{ParamError, SweepPoint, ValidatedParams};
+use crate::coordinator::{Pipeline, PipelineConfig, Request, Response, ThroughputReport};
+use crate::estimate::Style;
+use crate::explore::{CacheStats, ExploreConfig, Explorer, PointReport, SimSummary, StyleReport};
+use crate::sim::{StallPattern, DEFAULT_FIFO_DEPTH, PIPELINE_STAGES};
+
+/// Options for the cycle-accurate simulation half of a request.
+#[derive(Debug, Clone)]
+pub struct SimOptions {
+    /// Number of input vectors to stream (the batch); 0 skips simulation.
+    pub batch: usize,
+    /// Output-decoupling FIFO depth (§5.3.2).
+    pub fifo_depth: usize,
+    /// TVALID gaps on the input stream (§5.3.1).
+    pub in_stall: StallPattern,
+    /// TREADY gaps on the output stream (§5.3.1).
+    pub out_stall: StallPattern,
+}
+
+impl Default for SimOptions {
+    fn default() -> Self {
+        SimOptions {
+            batch: 1,
+            fifo_depth: DEFAULT_FIFO_DEPTH,
+            in_stall: StallPattern::None,
+            out_stall: StallPattern::None,
+        }
+    }
+}
+
+/// One evaluation request: a validated point, which styles to estimate,
+/// and (optionally) how to simulate it.
+#[derive(Debug, Clone)]
+pub struct EvalRequest {
+    pub point: ValidatedParams,
+    /// Styles to estimate, in the order the results should appear.
+    pub styles: Vec<Style>,
+    /// `None` skips the cycle-accurate simulation.
+    pub sim: Option<SimOptions>,
+}
+
+impl EvalRequest {
+    /// Estimate both styles, no simulation — the common sweep shape.
+    pub fn new(point: ValidatedParams) -> EvalRequest {
+        EvalRequest { point, styles: vec![Style::Rtl, Style::Hls], sim: None }
+    }
+
+    /// Restrict/reorder the estimated styles.
+    pub fn styles(mut self, styles: &[Style]) -> Self {
+        self.styles = styles.to_vec();
+        self
+    }
+
+    /// Add a cycle-accurate simulation over the engine's canonical
+    /// deterministic stimulus.
+    pub fn with_sim(mut self, opts: SimOptions) -> Self {
+        self.sim = Some(opts);
+        self
+    }
+}
+
+/// The response: everything the facade knows about one evaluated point.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Evaluation {
+    /// The design point's display name.
+    pub name: String,
+    /// The paper's cycle formula, SF * NF * OD^2 + fill.
+    pub analytic_cycles: usize,
+    /// Per-style estimates, in request order.
+    pub estimates: Vec<(Style, StyleReport)>,
+    /// Present when the request carried `SimOptions` with `batch > 0`.
+    pub sim: Option<SimSummary>,
+}
+
+impl Evaluation {
+    /// The estimate for one style, if it was requested.
+    pub fn estimate_for(&self, style: Style) -> Option<&StyleReport> {
+        self.estimates.iter().find(|(s, _)| *s == style).map(|(_, r)| r)
+    }
+
+    pub fn rtl(&self) -> Option<&StyleReport> {
+        self.estimate_for(Style::Rtl)
+    }
+
+    pub fn hls(&self) -> Option<&StyleReport> {
+        self.estimate_for(Style::Hls)
+    }
+}
+
+/// Structured evaluation errors (std-only `std::error::Error` impl, like
+/// [`ParamError`]).
+#[derive(Debug)]
+pub enum EvalError {
+    /// A design point failed validation (only reachable through the
+    /// `LayerParams` exit hatch; builder-made points are valid by
+    /// construction).
+    Param(ParamError),
+    /// The cycle-accurate simulation failed (e.g. deadlock under a stall
+    /// pattern that never lets an endpoint make progress).
+    Sim { point: String, message: String },
+    /// An estimate could not be produced (corrupted cache entry).
+    Estimate { point: String, message: String },
+    /// The result cache could not be created or written.
+    Cache { message: String },
+    /// The serving pipeline failed (missing artifacts, shape mismatch…).
+    Pipeline { message: String },
+    /// A sweep or batch failed; `index` is the smallest failing input
+    /// index and `message` carries the underlying error chain.
+    Sweep { index: usize, message: String },
+}
+
+impl fmt::Display for EvalError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            EvalError::Param(e) => write!(f, "invalid design point: {e}"),
+            EvalError::Sim { point, message } => write!(f, "simulating {point}: {message}"),
+            EvalError::Estimate { point, message } => write!(f, "estimating {point}: {message}"),
+            EvalError::Cache { message } => write!(f, "result cache: {message}"),
+            EvalError::Pipeline { message } => write!(f, "serving pipeline: {message}"),
+            // the message already names the failing point ("sweep point
+            // N (…): …"); `index` is the programmatic handle
+            EvalError::Sweep { message, .. } => f.write_str(message),
+        }
+    }
+}
+
+impl std::error::Error for EvalError {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            EvalError::Param(e) => Some(e),
+            _ => None,
+        }
+    }
+}
+
+impl From<ParamError> for EvalError {
+    fn from(e: ParamError) -> EvalError {
+        EvalError::Param(e)
+    }
+}
+
+/// Session configuration (mirrors the engine's [`ExploreConfig`]).
+#[derive(Debug, Clone, Default)]
+pub struct SessionConfig {
+    /// Worker threads; 0 = one per available core.
+    pub threads: usize,
+    /// Default simulation vectors for sweep evaluation
+    /// ([`Session::evaluate_points`]); 0 = estimates only. Per-request
+    /// [`SimOptions`] are unaffected.
+    pub sim_vectors: usize,
+    /// On-disk cache directory; `None` keeps the cache in memory only.
+    pub cache_dir: Option<PathBuf>,
+}
+
+/// The unified evaluator: owns the exploration engine (thread pool +
+/// result cache) and serves [`EvalRequest`]s. One `Session` is meant to
+/// live as long as the workload — sharing it across figures, tables and
+/// ad-hoc requests is what makes the cache pay off.
+#[derive(Debug)]
+pub struct Session {
+    explorer: Explorer,
+}
+
+impl Session {
+    pub fn new(cfg: SessionConfig) -> Result<Session, EvalError> {
+        let explorer = Explorer::new(ExploreConfig {
+            threads: cfg.threads,
+            sim_vectors: cfg.sim_vectors,
+            cache_dir: cfg.cache_dir,
+        })
+        .map_err(|e| EvalError::Cache { message: e.to_string() })?;
+        Ok(Session { explorer })
+    }
+
+    /// Single-threaded, memory-cached — the reference executor.
+    pub fn serial() -> Session {
+        Session { explorer: Explorer::serial() }
+    }
+
+    /// One worker per available core, memory-cached.
+    pub fn parallel() -> Session {
+        Session { explorer: Explorer::parallel() }
+    }
+
+    /// Explicit worker count (0 = one per core), memory-cached.
+    pub fn with_threads(threads: usize) -> Session {
+        Session { explorer: Explorer::with_threads(threads) }
+    }
+
+    /// The underlying exploration engine (deterministic `par_map`, cache
+    /// internals) for power users; the facade methods cover normal use.
+    pub fn explorer(&self) -> &Explorer {
+        &self.explorer
+    }
+
+    pub fn cache_stats(&self) -> CacheStats {
+        self.explorer.cache_stats()
+    }
+
+    /// Deterministic work-stealing parallel map over arbitrary items —
+    /// re-exported from the engine so callers with custom per-point work
+    /// (the ablation benches) stay on one substrate.
+    pub fn par_map<T, R, F>(&self, items: &[T], f: F) -> Vec<anyhow::Result<R>>
+    where
+        T: Sync,
+        R: Send,
+        F: Fn(usize, &T) -> anyhow::Result<R> + Sync,
+    {
+        self.explorer.par_map(items, f)
+    }
+
+    /// Evaluate one request.
+    pub fn evaluate(&self, req: &EvalRequest) -> Result<Evaluation, EvalError> {
+        let p = &req.point;
+        let mut estimates = Vec::with_capacity(req.styles.len());
+        for &style in &req.styles {
+            let rep = self
+                .explorer
+                .estimate_style(p, style)
+                .map_err(|e| EvalError::Estimate {
+                    point: p.name.clone(),
+                    message: format!("{e:#}"),
+                })?;
+            estimates.push((style, rep));
+        }
+        let sim = match &req.sim {
+            Some(opts) if opts.batch > 0 => Some(
+                self.explorer
+                    .simulate_point(p, opts.batch, opts.fifo_depth, &opts.in_stall, &opts.out_stall)
+                    .map_err(|e| EvalError::Sim {
+                        point: p.name.clone(),
+                        message: format!("{e:#}"),
+                    })?,
+            ),
+            _ => None,
+        };
+        Ok(Evaluation {
+            name: p.name.clone(),
+            analytic_cycles: p.analytic_cycles(PIPELINE_STAGES),
+            estimates,
+            sim,
+        })
+    }
+
+    /// Evaluate a batch of requests across the thread pool. Output order
+    /// matches input order and results are identical to serial
+    /// evaluation. On failure the smallest failing request index wins —
+    /// independent of thread count — reported as
+    /// [`EvalError::Sweep`]`{ index, .. }` wrapping the request's own
+    /// error text (request names are not unique, so the index is the
+    /// reliable handle).
+    pub fn evaluate_all(&self, reqs: &[EvalRequest]) -> Result<Vec<Evaluation>, EvalError> {
+        let results = self
+            .explorer
+            .par_map(reqs, |_, r| self.evaluate(r).map_err(anyhow::Error::new));
+        let mut out = Vec::with_capacity(results.len());
+        for (i, res) in results.into_iter().enumerate() {
+            match res {
+                Ok(ev) => out.push(ev),
+                Err(e) => {
+                    let inner = match e.downcast::<EvalError>() {
+                        Ok(ev) => ev.to_string(),
+                        Err(other) => format!("{other:#}"),
+                    };
+                    return Err(EvalError::Sweep {
+                        index: i,
+                        message: format!("request {i} ({}): {inner}", reqs[i].point),
+                    });
+                }
+            }
+        }
+        Ok(out)
+    }
+
+    /// Evaluate sweep points (both styles; plus the default-stimulus
+    /// simulation when the session was configured with `sim_vectors > 0`).
+    /// This is the path every figure/table harness drives.
+    pub fn evaluate_points(&self, points: &[SweepPoint]) -> Result<Vec<PointReport>, EvalError> {
+        self.explorer.try_evaluate_points(points).map_err(|(index, e)| EvalError::Sweep {
+            index,
+            message: format!("sweep point {index} ({}): {e:#}", points[index].params),
+        })
+    }
+
+    /// Evaluate bare validated layers (`swept` becomes the list index).
+    pub fn evaluate_layers(
+        &self,
+        layers: &[ValidatedParams],
+    ) -> Result<Vec<PointReport>, EvalError> {
+        self.explorer.try_evaluate_layers(layers).map_err(|(index, e)| EvalError::Sweep {
+            index,
+            message: format!("sweep point {index} ({}): {e:#}", layers[index]),
+        })
+    }
+
+    /// Feed a finite request stream through the serving pipeline
+    /// ([`coordinator::Pipeline`](crate::coordinator::Pipeline)): one OS
+    /// thread per layer executing its AOT artifact, bounded channels as
+    /// AXI backpressure. Returns responses (completion order) plus the
+    /// latency/throughput report.
+    ///
+    /// Associated function, not a method: the pipeline owns its per-layer
+    /// worker threads and PJRT clients, so a `Session`'s thread pool and
+    /// result cache play no role in streaming.
+    pub fn stream(
+        artifacts_dir: PathBuf,
+        layer_names: Vec<String>,
+        cfg: PipelineConfig,
+        requests: Vec<Request>,
+    ) -> Result<(Vec<Response>, ThroughputReport), EvalError> {
+        Pipeline::new(artifacts_dir, layer_names, cfg)
+            .run(requests)
+            .map_err(|e| EvalError::Pipeline { message: format!("{e:#}") })
+    }
+
+    /// Convenience: stream through the NID MLP chain at the configured
+    /// batch size. Associated function, like [`Session::stream`].
+    pub fn stream_nid(
+        artifacts_dir: PathBuf,
+        cfg: PipelineConfig,
+        requests: Vec<Request>,
+    ) -> Result<(Vec<Response>, ThroughputReport), EvalError> {
+        Pipeline::nid(artifacts_dir, cfg)
+            .run(requests)
+            .map_err(|e| EvalError::Pipeline { message: format!("{e:#}") })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cfg::{nid_layers, sweep_pe, DesignPoint, SimdType};
+    use crate::estimate::estimate;
+
+    fn point() -> ValidatedParams {
+        DesignPoint::fc("t").in_features(16).out_features(8).pe(4).simd(8).build().unwrap()
+    }
+
+    #[test]
+    fn evaluate_matches_direct_estimate_and_formula() {
+        let s = Session::serial();
+        let ev = s.evaluate(&EvalRequest::new(point())).unwrap();
+        assert_eq!(ev.name, "t");
+        assert_eq!(ev.analytic_cycles, 2 * 2 + PIPELINE_STAGES + 1);
+        let direct = estimate(&point(), Style::Rtl);
+        assert_eq!(ev.rtl().unwrap().luts, direct.luts);
+        assert_eq!(ev.rtl().unwrap().delay_ns, direct.delay_ns);
+        assert!(ev.sim.is_none());
+    }
+
+    #[test]
+    fn style_selection_is_respected() {
+        let s = Session::serial();
+        let ev = s
+            .evaluate(&EvalRequest::new(point()).styles(&[Style::Hls]))
+            .unwrap();
+        assert_eq!(ev.estimates.len(), 1);
+        assert!(ev.hls().is_some() && ev.rtl().is_none());
+    }
+
+    #[test]
+    fn simulation_summary_is_attached_and_correct() {
+        let s = Session::serial();
+        let req = EvalRequest::new(point())
+            .with_sim(SimOptions { batch: 3, ..SimOptions::default() });
+        let ev = s.evaluate(&req).unwrap();
+        let sim = ev.sim.unwrap();
+        assert!(sim.matches_reference);
+        assert_eq!(sim.vectors, 3);
+        assert_eq!(sim.exec_cycles, 3 * 2 * 2 + PIPELINE_STAGES + 1);
+    }
+
+    #[test]
+    fn evaluate_all_is_order_preserving_and_equal_to_serial() {
+        let reqs: Vec<EvalRequest> = sweep_pe(SimdType::Standard)
+            .into_iter()
+            .map(|sp| EvalRequest::new(sp.params))
+            .collect();
+        let serial: Vec<Evaluation> =
+            reqs.iter().map(|r| Session::serial().evaluate(r).unwrap()).collect();
+        let par = Session::with_threads(8).evaluate_all(&reqs).unwrap();
+        assert_eq!(par, serial);
+    }
+
+    #[test]
+    fn sessions_share_cache_across_requests() {
+        let s = Session::serial();
+        let layers = nid_layers();
+        s.evaluate_layers(&layers).unwrap();
+        let misses = s.cache_stats().misses;
+        // the same geometries as bare eval requests: all hits
+        for l in &layers {
+            s.evaluate(&EvalRequest::new(l.clone())).unwrap();
+        }
+        assert_eq!(s.cache_stats().misses, misses, "{:?}", s.cache_stats());
+    }
+
+    #[test]
+    fn deadlocked_sim_reports_structured_error() {
+        let s = Session::serial();
+        // an output that is never ready deadlocks the MVU
+        let req = EvalRequest::new(point()).with_sim(SimOptions {
+            batch: 1,
+            out_stall: StallPattern::Periodic { period: 1, duty: 1, phase: 0 },
+            ..SimOptions::default()
+        });
+        match s.evaluate(&req) {
+            Err(EvalError::Sim { point, message }) => {
+                assert_eq!(point, "t");
+                assert!(message.contains("deadlock"), "{message}");
+            }
+            other => panic!("expected EvalError::Sim, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn param_error_converts() {
+        let e: EvalError = ParamError::ZeroDim { name: "x".into(), field: "pe" }.into();
+        assert!(matches!(e, EvalError::Param(_)));
+        assert!(e.to_string().contains("pe"));
+        assert!(std::error::Error::source(&e).is_some());
+    }
+}

@@ -58,9 +58,23 @@ pub fn estimate_key(p: &LayerParams, style: Style) -> String {
 }
 
 /// Cache key for a cycle-accurate simulation with the engine's canonical
-/// deterministic stimulus (`vectors` inputs from `seed`).
+/// deterministic stimulus (`vectors` inputs from `seed`) and the default
+/// flow (default FIFO depth, no stalls).
 pub fn sim_key(p: &LayerParams, vectors: usize, seed: u64) -> String {
     format!("v{}/sim/n{}/s{:016x}/{}", crate::VERSION, vectors, seed, params_key(p))
+}
+
+/// Cache key for a simulation with a non-default flow (explicit FIFO
+/// depth and/or stall patterns), described by the canonical `flow` text.
+pub fn sim_key_flow(p: &LayerParams, vectors: usize, seed: u64, flow: &str) -> String {
+    format!(
+        "v{}/simflow/n{}/s{:016x}/{}/{}",
+        crate::VERSION,
+        vectors,
+        seed,
+        flow,
+        params_key(p)
+    )
 }
 
 /// FNV-1a 64-bit content hash of a key string.
@@ -208,17 +222,22 @@ impl ResultCache {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::cfg::{LayerParams, SimdType};
+    use crate::cfg::DesignPoint;
 
-    fn params(name: &str) -> LayerParams {
-        LayerParams::fc(name, 16, 8, 4, 8, SimdType::Standard, 4, 4, 0)
+    fn params(name: &str) -> crate::cfg::ValidatedParams {
+        DesignPoint::fc(name)
+            .in_features(16)
+            .out_features(8)
+            .pe(4)
+            .simd(8)
+            .build()
+            .unwrap()
     }
 
     #[test]
     fn name_is_not_part_of_the_key() {
         assert_eq!(params_key(&params("a")), params_key(&params("b")));
-        let mut other = params("a");
-        other.pe = 8;
+        let other = DesignPoint::from_params(params("a").into_inner()).pe(8).build().unwrap();
         assert_ne!(params_key(&params("a")), params_key(&other));
     }
 

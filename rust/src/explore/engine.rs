@@ -21,17 +21,23 @@
 //!   evaluation is pure given the deterministic stimulus, and ordering is
 //!   restored structurally rather than by scheduling luck. Errors are
 //!   deterministic too — the error at the smallest failing index wins.
+//!
+//! Every entry point takes [`ValidatedParams`] (inside [`SweepPoint`]s or
+//! bare): legality was checked exactly once at `DesignPoint::build`, so
+//! the engine never re-validates on the hot path and estimation is
+//! infallible. The user-facing facade over this engine is
+//! [`eval::Session`](crate::eval::Session).
 
 use std::collections::VecDeque;
 use std::sync::mpsc::sync_channel;
 use std::sync::Mutex;
 
-use anyhow::{Context, Result};
+use anyhow::Result;
 
-use crate::cfg::{LayerParams, SimdType, SweepPoint};
+use crate::cfg::{LayerParams, SimdType, SweepPoint, ValidatedParams};
 use crate::estimate::{estimate, Style};
 use crate::quant::{matvec, Matrix};
-use crate::sim::{run_mvu, PIPELINE_STAGES};
+use crate::sim::{run_mvu_fifo, StallPattern, DEFAULT_FIFO_DEPTH, PIPELINE_STAGES};
 use crate::util::rng::Pcg32;
 
 use super::cache::{self, CacheStats, ResultCache};
@@ -155,30 +161,63 @@ impl Explorer {
     /// order; on failure the error of the smallest failing index is
     /// returned, independent of thread count.
     pub fn evaluate_points(&self, points: &[SweepPoint]) -> Result<Vec<PointReport>> {
+        self.try_evaluate_points(points).map_err(|(i, e)| {
+            e.context(format!("sweep point {} ({})", i, points[i].params))
+        })
+    }
+
+    /// Like [`evaluate_points`](Self::evaluate_points), but reports the
+    /// smallest failing input index *structurally* instead of inside the
+    /// error text — the facade (`eval::Session`) builds its typed errors
+    /// from this.
+    pub fn try_evaluate_points(
+        &self,
+        points: &[SweepPoint],
+    ) -> Result<Vec<PointReport>, (usize, anyhow::Error)> {
         let results = self.par_map(points, |_, sp| self.evaluate_point(sp));
         let mut out = Vec::with_capacity(results.len());
         for (i, r) in results.into_iter().enumerate() {
-            out.push(r.with_context(|| format!("sweep point {} ({})", i, points[i].params))?);
+            match r {
+                Ok(rep) => out.push(rep),
+                Err(e) => return Err((i, e)),
+            }
         }
         Ok(out)
     }
 
     /// Evaluate bare parameter sets (`swept` becomes the list index).
-    pub fn evaluate_layers(&self, layers: &[LayerParams]) -> Result<Vec<PointReport>> {
-        let points: Vec<SweepPoint> = layers
+    pub fn evaluate_layers(&self, layers: &[ValidatedParams]) -> Result<Vec<PointReport>> {
+        self.evaluate_points(&Self::layers_to_points(layers))
+    }
+
+    /// Structural-index variant of [`evaluate_layers`](Self::evaluate_layers).
+    pub fn try_evaluate_layers(
+        &self,
+        layers: &[ValidatedParams],
+    ) -> Result<Vec<PointReport>, (usize, anyhow::Error)> {
+        self.try_evaluate_points(&Self::layers_to_points(layers))
+    }
+
+    fn layers_to_points(layers: &[ValidatedParams]) -> Vec<SweepPoint> {
+        layers
             .iter()
             .enumerate()
             .map(|(i, p)| SweepPoint { swept: i, params: p.clone() })
-            .collect();
-        self.evaluate_points(&points)
+            .collect()
     }
 
     /// Evaluate one point, going through the cache for each part.
     pub fn evaluate_point(&self, sp: &SweepPoint) -> Result<PointReport> {
-        let rtl = self.cached_estimate(&sp.params, Style::Rtl)?;
-        let hls = self.cached_estimate(&sp.params, Style::Hls)?;
+        let rtl = self.estimate_style(&sp.params, Style::Rtl)?;
+        let hls = self.estimate_style(&sp.params, Style::Hls)?;
         let sim = if self.sim_vectors > 0 {
-            Some(self.cached_sim(&sp.params, self.sim_vectors)?)
+            Some(self.simulate_point(
+                &sp.params,
+                self.sim_vectors,
+                DEFAULT_FIFO_DEPTH,
+                &StallPattern::None,
+                &StallPattern::None,
+            )?)
         } else {
             None
         };
@@ -192,27 +231,57 @@ impl Explorer {
         })
     }
 
-    fn cached_estimate(&self, p: &LayerParams, style: Style) -> Result<StyleReport> {
+    /// Cached estimate of one design point in one style. Estimation
+    /// itself is infallible on a validated point; only a corrupted cache
+    /// entry can error.
+    pub fn estimate_style(&self, p: &ValidatedParams, style: Style) -> Result<StyleReport> {
         let key = cache::estimate_key(p, style);
         if let Some(j) = self.cache.get_json(&key) {
             return StyleReport::from_json(&j);
         }
-        let rep = StyleReport::from_estimate(&estimate(p, style)?);
+        let rep = StyleReport::from_estimate(&estimate(p, style));
         self.cache.put_json(&key, &rep.to_json())?;
         Ok(rep)
     }
 
-    fn cached_sim(&self, p: &LayerParams, vectors: usize) -> Result<SimSummary> {
+    /// Cached cycle-accurate simulation of one design point over the
+    /// engine's canonical deterministic stimulus (`vectors` inputs seeded
+    /// from the point's content hash), with an explicit output-FIFO depth
+    /// and stall patterns on both AXI endpoints. The default flow
+    /// (`DEFAULT_FIFO_DEPTH`, no stalls) shares cache entries with
+    /// `evaluate_points`' simulations.
+    pub fn simulate_point(
+        &self,
+        p: &ValidatedParams,
+        vectors: usize,
+        fifo_depth: usize,
+        in_stall: &StallPattern,
+        out_stall: &StallPattern,
+    ) -> Result<SimSummary> {
         // the stimulus seed is derived from the design point itself, so it
         // is independent of evaluation order and thread count.
         let seed = cache::content_hash(&cache::params_key(p));
-        let key = cache::sim_key(p, vectors, seed);
+        let default_flow = fifo_depth == DEFAULT_FIFO_DEPTH
+            && matches!(in_stall, StallPattern::None)
+            && matches!(out_stall, StallPattern::None);
+        let key = if default_flow {
+            cache::sim_key(p, vectors, seed)
+        } else {
+            let flow = format!(
+                "fifo{};in:{};out:{}",
+                fifo_depth,
+                stall_key(in_stall),
+                stall_key(out_stall)
+            );
+            cache::sim_key_flow(p, vectors, seed, &flow)
+        };
         if let Some(j) = self.cache.get_json(&key) {
             return SimSummary::from_json(&j);
         }
         let weights = stimulus_weights(p, seed);
         let inputs = stimulus_inputs(p, seed ^ 0x9e37_79b9_7f4a_7c15, vectors);
-        let rep = run_mvu(p, &weights, &inputs)?;
+        let rep =
+            run_mvu_fifo(p, &weights, &inputs, in_stall.clone(), out_stall.clone(), fifo_depth)?;
         let mut matches = rep.outputs.len() == inputs.len();
         for (x, y) in inputs.iter().zip(&rep.outputs) {
             matches &= &matvec(x, &weights, p.simd_type)? == y;
@@ -227,6 +296,19 @@ impl Explorer {
         };
         self.cache.put_json(&key, &sim.to_json())?;
         Ok(sim)
+    }
+}
+
+/// Canonical text form of a stall pattern for cache keys.
+fn stall_key(s: &StallPattern) -> String {
+    match s {
+        StallPattern::None => "none".to_string(),
+        StallPattern::Periodic { period, duty, phase } => format!("per{period},{duty},{phase}"),
+        StallPattern::Random { seed, p_num } => format!("rnd{seed:016x},{p_num}"),
+        StallPattern::Schedule(v) => {
+            let bits: String = v.iter().map(|&b| if b { '1' } else { '0' }).collect();
+            format!("sch{bits}")
+        }
     }
 }
 
@@ -348,6 +430,41 @@ mod tests {
             assert_eq!(sim.exec_cycles, slots + PIPELINE_STAGES + 1, "{}", r.name);
             assert_eq!(sim.stall_cycles, 0, "{}", r.name);
         }
+    }
+
+    #[test]
+    fn custom_flow_keys_do_not_collide_with_default() {
+        // SF = 1: one result word per cycle, so a sink stalled 7 of every
+        // 8 cycles provably lengthens the run (8 words at >= 1 per 8
+        // cycles) and must land in a distinct cache entry.
+        let p = crate::cfg::DesignPoint::fc("flow")
+            .in_features(8)
+            .out_features(8)
+            .pe(8)
+            .simd(8)
+            .build()
+            .unwrap();
+        let ex = Explorer::serial();
+        let clean = ex
+            .simulate_point(&p, 8, DEFAULT_FIFO_DEPTH, &StallPattern::None, &StallPattern::None)
+            .unwrap();
+        let stalled = ex
+            .simulate_point(
+                &p,
+                8,
+                2,
+                &StallPattern::None,
+                &StallPattern::Periodic { period: 8, duty: 7, phase: 0 },
+            )
+            .unwrap();
+        // the stalled run must be a distinct cache entry with more cycles
+        assert!(stalled.exec_cycles > clean.exec_cycles);
+        assert!(clean.matches_reference && stalled.matches_reference);
+        // both served from cache on a revisit, unchanged
+        let clean2 = ex
+            .simulate_point(&p, 8, DEFAULT_FIFO_DEPTH, &StallPattern::None, &StallPattern::None)
+            .unwrap();
+        assert_eq!(clean, clean2);
     }
 
     #[test]

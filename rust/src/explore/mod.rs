@@ -27,14 +27,21 @@
 //!   formats by [`points_to_table`] / [`points_to_json`].
 //!
 //! Every figure/table harness (`harness::figures`, `harness::tables`), the
-//! benches, and the `finn-mvu explore` CLI subcommand drive this engine.
-//! See DESIGN.md §Explore for the architecture notes and the determinism
-//! argument.
+//! benches, and the `finn-mvu explore` CLI subcommand drive this engine —
+//! through the [`eval::Session`](crate::eval::Session) facade, which owns
+//! an `Explorer` and presents the `EvalRequest`/`Evaluation` API. All
+//! engine entry points accept only validated design points
+//! ([`cfg::ValidatedParams`](crate::cfg::ValidatedParams), inside
+//! [`SweepPoint`](crate::cfg::SweepPoint)s), so validation never runs on
+//! the hot path. See DESIGN.md §Explore for the architecture notes and
+//! the determinism argument.
 
 mod cache;
 mod engine;
 mod report;
 
-pub use cache::{content_hash, estimate_key, params_key, sim_key, CacheStats, ResultCache};
+pub use cache::{
+    content_hash, estimate_key, params_key, sim_key, sim_key_flow, CacheStats, ResultCache,
+};
 pub use engine::{stimulus_inputs, stimulus_weights, ExploreConfig, Explorer};
 pub use report::{points_to_json, points_to_table, PointReport, SimSummary, StyleReport};

@@ -1,11 +1,12 @@
 //! Figure regeneration: the parameter sweeps of paper Figs. 8-16.
 //!
-//! All sweeps are evaluated through the [`explore`](crate::explore)
-//! engine — parallel across cores, content-addressed-cached, and
-//! byte-deterministic — instead of hand-rolled `estimate()` loops. Each
-//! function has a `_with` variant taking an explicit [`Explorer`] so
-//! benches and the CLI can share one engine (and its cache) across
-//! figures; the plain variant spins up a per-call parallel engine.
+//! All sweeps are evaluated through the [`eval::Session`](crate::eval::Session)
+//! facade over the [`explore`](crate::explore) engine — parallel across
+//! cores, content-addressed-cached, and byte-deterministic — instead of
+//! hand-rolled `estimate()` loops. Each function has a `_with` variant
+//! taking an explicit [`Session`] so benches and the CLI can share one
+//! session (and its cache) across figures; the plain variant spins up a
+//! per-call parallel session.
 
 use anyhow::Result;
 
@@ -13,7 +14,7 @@ use crate::cfg::{
     sweep_ifm_channels, sweep_ifm_dim, sweep_kernel_dim, sweep_ofm_channels, sweep_pe, sweep_simd,
     SimdType, SweepPoint,
 };
-use crate::explore::Explorer;
+use crate::eval::Session;
 use crate::util::table::{fnum, Table};
 
 /// Which parameter a figure sweeps.
@@ -99,12 +100,12 @@ pub struct FigureSeries {
 
 /// Regenerate one resource/latency figure (Figs. 8-13) for one SIMD type.
 pub fn resource_sweep_figure(kind: SweepKind, ty: SimdType) -> Result<FigureSeries> {
-    resource_sweep_figure_with(&Explorer::parallel(), kind, ty)
+    resource_sweep_figure_with(&Session::parallel(), kind, ty)
 }
 
-/// Same, driving a caller-provided exploration engine.
+/// Same, driving a caller-provided evaluation session.
 pub fn resource_sweep_figure_with(
-    ex: &Explorer,
+    ex: &Session,
     kind: SweepKind,
     ty: SimdType,
 ) -> Result<FigureSeries> {
@@ -151,7 +152,7 @@ impl FigureSeries {
 /// print the sweep for all SIMD types through `ex`, then benchmark it
 /// cold (fresh serial engine per iteration) vs warm (shared parallel
 /// engine + cache) and print the speedup.
-pub fn run_figure_bench(name: &str, kind: SweepKind, ex: &Explorer) {
+pub fn run_figure_bench(name: &str, kind: SweepKind, ex: &Session) {
     use super::bench::bench;
     for ty in SimdType::ALL {
         let series = resource_sweep_figure_with(ex, kind, ty).unwrap();
@@ -161,7 +162,7 @@ pub fn run_figure_bench(name: &str, kind: SweepKind, ex: &Explorer) {
     println!("engine cache after first pass: {}", ex.cache_stats());
 
     let cold = bench(&format!("{name}/serial_uncached"), || {
-        let fresh = Explorer::serial();
+        let fresh = Session::serial();
         for ty in SimdType::ALL {
             std::hint::black_box(resource_sweep_figure_with(&fresh, kind, ty).unwrap());
         }
@@ -183,29 +184,27 @@ pub fn run_figure_bench(name: &str, kind: SweepKind, ex: &Explorer) {
 /// Fig. 14: heat maps of HLS - RTL resource difference over a PE x SIMD
 /// grid (positive = RTL smaller), 4-bit standard type.
 pub fn fig14_heatmap() -> Result<(Table, Table)> {
-    fig14_heatmap_with(&Explorer::parallel())
+    fig14_heatmap_with(&Session::parallel())
 }
 
-/// Same, driving a caller-provided exploration engine.
-pub fn fig14_heatmap_with(ex: &Explorer) -> Result<(Table, Table)> {
+/// Same, driving a caller-provided evaluation session.
+pub fn fig14_heatmap_with(ex: &Session) -> Result<(Table, Table)> {
     let grid = [2usize, 4, 8, 16, 32, 64];
     let points: Vec<SweepPoint> = grid
         .iter()
         .flat_map(|&pe| {
             grid.iter().map(move |&simd| SweepPoint {
                 swept: simd,
-                params: crate::cfg::LayerParams::conv(
-                    &format!("hm_pe{pe}_s{simd}"),
-                    64,
-                    8,
-                    64,
-                    4,
-                    pe,
-                    simd,
-                    SimdType::Standard,
-                    4,
-                    4,
-                ),
+                params: crate::cfg::DesignPoint::conv(&format!("hm_pe{pe}_s{simd}"))
+                    .ifm_ch(64)
+                    .ifm_dim(8)
+                    .ofm_ch(64)
+                    .kernel_dim(4)
+                    .pe(pe)
+                    .simd(simd)
+                    .paper_precision(SimdType::Standard)
+                    .build()
+                    .expect("fig14 grid points are legal"),
             })
         })
         .collect();
@@ -232,12 +231,12 @@ pub fn fig14_heatmap_with(ex: &Explorer) -> Result<(Table, Table)> {
 
 /// Fig. 15: BRAM usage across all six sweeps, 1-bit precision.
 pub fn fig15_bram() -> Result<Table> {
-    fig15_bram_with(&Explorer::parallel())
+    fig15_bram_with(&Session::parallel())
 }
 
-/// Same, driving a caller-provided exploration engine. The six sweeps
+/// Same, driving a caller-provided evaluation session. The six sweeps
 /// share design points; revisited geometries are served from the cache.
-pub fn fig15_bram_with(ex: &Explorer) -> Result<Table> {
+pub fn fig15_bram_with(ex: &Session) -> Result<Table> {
     let mut points = Vec::new();
     let mut segments = Vec::new();
     for kind in SweepKind::ALL {
@@ -265,11 +264,11 @@ pub fn fig15_bram_with(ex: &Explorer) -> Result<Table> {
 
 /// Fig. 16: synthesis time vs PEs and SIMDs (standard type).
 pub fn fig16_synth_time() -> Result<Table> {
-    fig16_synth_time_with(&Explorer::parallel())
+    fig16_synth_time_with(&Session::parallel())
 }
 
-/// Same, driving a caller-provided exploration engine.
-pub fn fig16_synth_time_with(ex: &Explorer) -> Result<Table> {
+/// Same, driving a caller-provided evaluation session.
+pub fn fig16_synth_time_with(ex: &Session) -> Result<Table> {
     let mut t = Table::new(vec!["sweep", "value", "HLS (s)", "RTL (s)", "ratio"]);
     for (kind, pts) in [
         ("PEs", sweep_pe(SimdType::Standard)),
@@ -338,7 +337,7 @@ mod tests {
 
     #[test]
     fn shared_engine_reuses_results_across_figures() {
-        let ex = Explorer::serial();
+        let ex = Session::serial();
         resource_sweep_figure_with(&ex, SweepKind::Pe, SimdType::Xnor).unwrap();
         let before = ex.cache_stats();
         // Fig. 15 revisits the PE sweep's xnor points among others

@@ -1,8 +1,9 @@
 //! Table regeneration: paper Tables 4, 5 and 7.
 //!
-//! Estimates are obtained through the [`explore`](crate::explore) engine
-//! (parallel + cached) rather than hand-rolled `estimate()` loops; the
-//! `_with` variants share a caller-provided engine. Table 7's execution
+//! Estimates are obtained through the [`eval::Session`](crate::eval::Session)
+//! facade over the exploration engine (parallel + cached) rather than
+//! hand-rolled `estimate()` loops; the `_with` variants share a
+//! caller-provided session. Table 7's execution
 //! cycles still come from direct cycle-accurate runs because they may use
 //! *trained* weights from the artifact manifest, which are not part of
 //! the engine's canonical (parameter-derived) stimulus.
@@ -10,7 +11,7 @@
 use anyhow::Result;
 
 use crate::cfg::{nid_layers, table3_configs, LayerParams, SimdType};
-use crate::explore::Explorer;
+use crate::eval::Session;
 use crate::quant::Matrix;
 use crate::sim::{run_mvu, HlsMvu};
 use crate::util::rng::Pcg32;
@@ -19,11 +20,11 @@ use crate::util::table::{fmin, fnum, Table};
 
 /// Table 4: resource utilization for the Table 3 large configs.
 pub fn table4() -> Result<Table> {
-    table4_with(&Explorer::parallel())
+    table4_with(&Session::parallel())
 }
 
-/// Same, driving a caller-provided exploration engine.
-pub fn table4_with(ex: &Explorer) -> Result<Table> {
+/// Same, driving a caller-provided evaluation session.
+pub fn table4_with(ex: &Session) -> Result<Table> {
     let mut t = Table::new(vec!["Config", "LUTs(HLS)", "LUTs(RTL)", "FFs(HLS)", "FFs(RTL)"]);
     for (i, r) in ex.evaluate_points(&table3_configs())?.iter().enumerate() {
         t.row(vec![
@@ -49,11 +50,11 @@ pub struct Table5Row {
 /// Table 5: critical-path delay statistics over the four sweeps the paper
 /// reports (IFM channels, OFM channels, PEs, SIMDs) x three SIMD types.
 pub fn table5() -> Result<(Table, Vec<Table5Row>)> {
-    table5_with(&Explorer::parallel())
+    table5_with(&Session::parallel())
 }
 
-/// Same, driving a caller-provided exploration engine.
-pub fn table5_with(ex: &Explorer) -> Result<(Table, Vec<Table5Row>)> {
+/// Same, driving a caller-provided evaluation session.
+pub fn table5_with(ex: &Session) -> Result<(Table, Vec<Table5Row>)> {
     use crate::cfg::{sweep_ifm_channels, sweep_ofm_channels, sweep_pe, sweep_simd};
     let mut t = Table::new(vec![
         "Parameter", "SIMD type", "HLS min", "HLS max", "HLS mean", "RTL min", "RTL max",
@@ -122,11 +123,11 @@ pub fn random_weights(params: &LayerParams, seed: u64) -> Matrix {
 /// the cycle-accurate simulator (RTL) and the HLS behavioral model,
 /// exercising the real datapath with the trained weights when available.
 pub fn table7(weights: Option<&[Matrix]>) -> Result<(Table, Vec<Table7Row>)> {
-    table7_with(&Explorer::parallel(), weights)
+    table7_with(&Session::parallel(), weights)
 }
 
-/// Same, driving a caller-provided exploration engine for the estimates.
-pub fn table7_with(ex: &Explorer, weights: Option<&[Matrix]>) -> Result<(Table, Vec<Table7Row>)> {
+/// Same, driving a caller-provided evaluation session for the estimates.
+pub fn table7_with(ex: &Session, weights: Option<&[Matrix]>) -> Result<(Table, Vec<Table7Row>)> {
     let mut t = Table::new(vec![
         "Layer", "LUTs H/R", "FFs H/R", "BRAM18 H/R", "Delay(ns) H/R", "Synth H/R",
         "Cycles H/R",
@@ -209,7 +210,7 @@ mod tests {
         use crate::estimate::{estimate, Style};
         let p = &crate::cfg::sweep_pe(SimdType::Standard)[0].params;
         let (_, rows) = table5().unwrap();
-        let direct = estimate(p, Style::Rtl).unwrap().delay_ns;
+        let direct = estimate(p, Style::Rtl).delay_ns;
         let row = rows
             .iter()
             .find(|r| r.parameter == "PEs" && r.simd_type == SimdType::Standard)

@@ -13,60 +13,84 @@
 //!   FINN-like compiler (IR + passes), and a streaming dataflow runtime
 //!   that executes the AOT artifacts via the PJRT C API.
 //!
-//! See DESIGN.md for the system inventory and the per-experiment index.
+//! The public API is two layers (see DESIGN.md §API):
 //!
-//! # Example: simulate and estimate one design point
+//! * [`cfg::DesignPoint`] — the validated design-point builder. `build()`
+//!   runs the folding/precision legality checks exactly once and returns
+//!   a [`cfg::ValidatedParams`], the only parameter type the compute
+//!   layers accept.
+//! * [`eval::Session`] — the unified evaluator: one
+//!   [`eval::EvalRequest`] → [`eval::Evaluation`] surface over the
+//!   simulator, the estimator, the parallel cached exploration engine,
+//!   and the serving pipeline.
+//!
+//! # Example: evaluate one design point
 //!
 //! ```
-//! use finn_mvu::cfg::{LayerParams, SimdType};
-//! use finn_mvu::estimate::{estimate, Style};
-//! use finn_mvu::quant::{matvec, Matrix};
-//! use finn_mvu::sim::run_mvu;
+//! use finn_mvu::cfg::DesignPoint;
+//! use finn_mvu::eval::{EvalRequest, Session, SimOptions};
 //!
 //! // a folded 8x16 MVU: 4 PEs, 8 SIMD lanes, 4-bit operands
-//! let p = LayerParams::fc("demo", 16, 8, 4, 8, SimdType::Standard, 4, 4, 0);
-//! let w = Matrix::new(8, 16, (0..128).map(|i| (i % 5) - 2).collect()).unwrap();
-//! let x: Vec<i32> = (0..16).map(|i| (i % 7) - 3).collect();
+//! let point = DesignPoint::fc("demo")
+//!     .in_features(16)
+//!     .out_features(8)
+//!     .pe(4)
+//!     .simd(8)
+//!     .precision(4, 4, 0)
+//!     .build()?;
 //!
-//! // cycle-accurate simulation == reference integer GEMM, bit-exactly
-//! let rep = run_mvu(&p, &w, &[x.clone()]).unwrap();
-//! assert_eq!(rep.outputs[0], matvec(&x, &w, p.simd_type).unwrap());
-//! // SF*NF slots + pipeline fill (paper Table 7 cycle model)
-//! assert_eq!(rep.exec_cycles, 2 * 2 + finn_mvu::sim::PIPELINE_STAGES + 1);
+//! let session = Session::serial();
+//! let eval = session
+//!     .evaluate(&EvalRequest::new(point).with_sim(SimOptions::default()))?;
+//!
+//! // cycle-accurate simulation == reference integer GEMM, bit-exactly,
+//! // at SF*NF slots + pipeline fill (paper Table 7 cycle model)
+//! let sim = eval.sim.as_ref().unwrap();
+//! assert!(sim.matches_reference);
+//! assert_eq!(sim.exec_cycles, 2 * 2 + finn_mvu::sim::PIPELINE_STAGES + 1);
 //!
 //! // post-synthesis estimates for both styles (paper §6)
-//! let rtl = estimate(&p, Style::Rtl).unwrap();
-//! let hls = estimate(&p, Style::Hls).unwrap();
-//! assert!(hls.ffs > rtl.ffs); // the paper's invariant
+//! assert!(eval.hls().unwrap().ffs > eval.rtl().unwrap().ffs); // the paper's invariant
+//! # Ok::<(), Box<dyn std::error::Error>>(())
 //! ```
 //!
-//! # Example: explore a whole sweep in parallel, with caching
+//! # Example: evaluate a whole sweep, in parallel, with caching
 //!
-//! The [`explore`] engine evaluates sweep points across all cores with a
-//! content-addressed result cache keyed by `(LayerParams, Style)`; results
-//! are byte-identical to serial execution regardless of thread count.
+//! A [`eval::Session`] owns the exploration engine (work-stealing thread
+//! pool + content-addressed result cache keyed by `(LayerParams, Style)`);
+//! results are byte-identical to serial execution regardless of thread
+//! count.
 //!
 //! ```
 //! use finn_mvu::cfg::{sweep_ifm_channels, SimdType};
-//! use finn_mvu::explore::Explorer;
+//! use finn_mvu::eval::Session;
 //!
 //! let points = sweep_ifm_channels(SimdType::Standard); // paper Fig. 8
-//! let serial = Explorer::serial().evaluate_points(&points).unwrap();
-//! let par = Explorer::with_threads(4).evaluate_points(&points).unwrap();
+//! let serial = Session::serial().evaluate_points(&points)?;
+//! let par = Session::with_threads(4).evaluate_points(&points)?;
 //! assert_eq!(par, serial); // deterministic under parallelism
 //! assert!(par[0].hls.ffs > par[0].rtl.ffs); // same invariant, engine-side
 //!
 //! // a second pass over the same sweep is served entirely from cache
-//! let ex = Explorer::serial();
-//! ex.evaluate_points(&points).unwrap();
-//! let before = ex.cache_stats();
-//! ex.evaluate_points(&points).unwrap();
-//! assert_eq!(ex.cache_stats().misses, before.misses);
+//! let session = Session::serial();
+//! session.evaluate_points(&points)?;
+//! let before = session.cache_stats();
+//! session.evaluate_points(&points)?;
+//! assert_eq!(session.cache_stats().misses, before.misses);
+//! # Ok::<(), finn_mvu::eval::EvalError>(())
 //! ```
+//!
+//! Migrating from the 0.1 free functions: build points with
+//! [`cfg::DesignPoint`] instead of the removed `LayerParams::fc`/`conv`
+//! constructors, and evaluate through a [`eval::Session`] instead of
+//! hand-rolled `run_mvu` + `estimate` loops (both still exist as the
+//! underlying primitives, but now take `&ValidatedParams`). See README
+//! §Migrating.
 
 pub mod cfg;
 pub mod coordinator;
 pub mod estimate;
+pub mod eval;
 pub mod explore;
 pub mod harness;
 pub mod ir;

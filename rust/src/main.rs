@@ -13,10 +13,11 @@
 
 use anyhow::{bail, Context, Result};
 
-use finn_mvu::cfg::{LayerParams, SimdType};
-use finn_mvu::coordinator::{Pipeline, PipelineConfig, Request};
+use finn_mvu::cfg::{DesignPoint, SimdType, ValidatedParams};
+use finn_mvu::coordinator::{PipelineConfig, Request};
 use finn_mvu::estimate::{estimate, Style};
-use finn_mvu::explore::{points_to_json, points_to_table, ExploreConfig, Explorer};
+use finn_mvu::eval::{EvalRequest, Session, SessionConfig, SimOptions};
+use finn_mvu::explore::{points_to_json, points_to_table};
 use finn_mvu::util::json::Json;
 use finn_mvu::harness::{
     fig14_heatmap, fig15_bram, fig16_synth_time, resource_sweep_figure, table4, table5, table7,
@@ -27,7 +28,7 @@ use finn_mvu::nid::{generate, NidNetwork};
 use finn_mvu::passes::{analyze, fold_to_target, lower_to_hw};
 use finn_mvu::quant::Matrix;
 use finn_mvu::runtime::{default_artifacts_dir, Manifest};
-use finn_mvu::sim::{run_mvu, PIPELINE_STAGES};
+use finn_mvu::sim::PIPELINE_STAGES;
 use finn_mvu::util::cli::Args;
 use finn_mvu::util::rng::Pcg32;
 
@@ -51,56 +52,43 @@ COMMANDS:
   version
 ";
 
-fn params_from(a: &Args) -> Result<LayerParams> {
+fn params_from(a: &Args) -> Result<ValidatedParams> {
     let ty = SimdType::parse(a.get_or("type", "standard"))?;
-    let (wb, ib) = match ty {
-        SimdType::Xnor => (1, 1),
-        SimdType::BinaryWeights => (1, 4),
-        SimdType::Standard => (4, 4),
-    };
-    let p = LayerParams::conv(
-        "cli",
-        a.get_usize("ifm-ch", 64)?,
-        a.get_usize("ifm-dim", 8)?,
-        a.get_usize("ofm-ch", 64)?,
-        a.get_usize("kd", 4)?,
-        a.get_usize("pe", 4)?,
-        a.get_usize("simd", 4)?,
-        ty,
-        wb,
-        ib,
-    );
-    p.validate()?;
+    // the builder runs the legality checks exactly once; downstream
+    // compute layers accept only the resulting ValidatedParams
+    let p = DesignPoint::conv("cli")
+        .ifm_ch(a.get_usize("ifm-ch", 64)?)
+        .ifm_dim(a.get_usize("ifm-dim", 8)?)
+        .ofm_ch(a.get_usize("ofm-ch", 64)?)
+        .kernel_dim(a.get_usize("kd", 4)?)
+        .pe(a.get_usize("pe", 4)?)
+        .simd(a.get_usize("simd", 4)?)
+        .paper_precision(ty)
+        .build()?;
     Ok(p)
 }
 
 fn cmd_run(a: &Args) -> Result<()> {
     let p = params_from(a)?;
     let n_vec = a.get_usize("vectors", 1)?;
-    let weights = finn_mvu::harness::random_weights(&p, 42);
-    let mut rng = Pcg32::new(43);
-    let vectors: Vec<Vec<i32>> = (0..n_vec * p.output_pixels())
-        .map(|_| {
-            (0..p.matrix_cols())
-                .map(|_| match p.simd_type {
-                    SimdType::Xnor => rng.next_range(2) as i32,
-                    _ => rng.next_range(1 << p.input_bits) as i32 - (1 << (p.input_bits - 1)),
-                })
-                .collect()
-        })
-        .collect();
-    let rep = run_mvu(&p, &weights, &vectors)?;
+    let batch = n_vec * p.output_pixels();
+    let session = Session::serial();
+    let req = EvalRequest::new(p.clone())
+        .with_sim(SimOptions { batch, ..SimOptions::default() });
+    let ev = session.evaluate(&req)?;
+    let sim = ev.sim.as_ref().expect("run requested a simulation");
     println!("design: {p}");
     println!(
-        "simulated {} vectors: {} cycles ({} slots, {} stall), analytic {}",
-        vectors.len(),
-        rep.exec_cycles,
-        rep.slots_consumed,
-        rep.stall_cycles,
-        p.synapse_fold() * p.neuron_fold() * vectors.len() + PIPELINE_STAGES + 1
+        "simulated {} vectors: {} cycles ({} slots, {} stall), analytic {}, sim==ref: {}",
+        batch,
+        sim.exec_cycles,
+        sim.slots_consumed,
+        sim.stall_cycles,
+        p.synapse_fold() * p.neuron_fold() * batch + PIPELINE_STAGES + 1,
+        if sim.matches_reference { "yes" } else { "NO" }
     );
     for style in [Style::Rtl, Style::Hls] {
-        let e = estimate(&p, style)?;
+        let e = ev.estimate_for(style).expect("both styles requested");
         println!(
             "{:>4}: {:>7} LUTs {:>7} FFs {:>4} BRAM18 {:>7.3} ns {:>7.0} s synth [{}]",
             style.name(),
@@ -109,7 +97,7 @@ fn cmd_run(a: &Args) -> Result<()> {
             e.bram18,
             e.delay_ns,
             e.synth_time_s,
-            e.delay_location.name()
+            e.delay_location
         );
     }
     Ok(())
@@ -120,12 +108,12 @@ fn cmd_explore(a: &Args) -> Result<()> {
         "figure", "all", "type", "threads", "sim-vectors", "cache-dir", "json", "pretty",
     ])
     .map_err(|e| anyhow::anyhow!("{e}"))?;
-    let cfg = ExploreConfig {
+    let cfg = SessionConfig {
         threads: a.get_usize("threads", 0)?,
         sim_vectors: a.get_usize("sim-vectors", 0)?,
         cache_dir: a.get("cache-dir").map(std::path::PathBuf::from),
     };
-    let ex = Explorer::new(cfg)?;
+    let ex = Session::new(cfg)?;
 
     if a.get_bool("all") && a.has("figure") {
         bail!("--all conflicts with --figure; pass one or the other");
@@ -238,7 +226,7 @@ fn cmd_estimate(a: &Args) -> Result<()> {
     let p = params_from(a)?;
     println!("design: {p}");
     for style in [Style::Rtl, Style::Hls] {
-        let e = estimate(&p, style)?;
+        let e = estimate(&p, style);
         println!("--- {} ---\n{}", style.name(), e.netlist);
         println!(
             "critical path {:.3} ns ({}), synthesis {:.0} s\n",
@@ -287,8 +275,7 @@ fn cmd_nid(a: &Args) -> Result<()> {
         .map(|(i, r)| Request { id: i as u64, data: r.inputs.clone() })
         .collect();
     let cfg = PipelineConfig { batch, ..Default::default() };
-    let pipe = Pipeline::nid(dir, cfg);
-    let (mut resp, report) = pipe.run(reqs)?;
+    let (mut resp, report) = Session::stream_nid(dir, cfg, reqs)?;
     resp.sort_by_key(|r| r.id);
     let mut correct = 0usize;
     for (r, rec) in resp.iter().zip(&records) {

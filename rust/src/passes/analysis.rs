@@ -44,8 +44,11 @@ pub fn analyze(g: &Graph) -> Result<ModelReport> {
     let mut max_delay: f64 = 1.0;
     for node in &g.nodes {
         let Some(p) = mvu_params(&node.name, &node.op) else { continue };
-        let r = estimate(&p, Style::Rtl)?;
-        let h = estimate(&p, Style::Hls)?;
+        // validate once at the pass boundary; the estimator only accepts
+        // validated points
+        let p = p.validated()?;
+        let r = estimate(&p, Style::Rtl);
+        let h = estimate(&p, Style::Hls);
         let cycles = p.analytic_cycles(PIPELINE_STAGES);
         bottleneck = bottleneck.max(p.synapse_fold() * p.neuron_fold() * p.output_pixels());
         total_luts += r.luts;

@@ -86,7 +86,9 @@ pub fn fold_to_target(g: &Graph, target_cycles: usize, lut_budget: usize) -> Res
         let mut total = 0;
         for node in &graph.nodes {
             if let Some(p) = mvu_params(&node.name, &node.op) {
-                total += estimate(&p, Style::Rtl)?.luts;
+                // candidate folds walk the divisor lattice, so this
+                // validation can only fail on a malformed frontend graph
+                total += estimate(&p.validated()?, Style::Rtl).luts;
             }
         }
         Ok(total)

@@ -6,7 +6,7 @@ use std::path::{Path, PathBuf};
 
 use anyhow::{bail, Context, Result};
 
-use crate::cfg::{LayerParams, SimdType};
+use crate::cfg::{LayerParams, SimdType, ValidatedParams};
 use crate::quant::{Matrix, Thresholds};
 use crate::util::json::Json;
 
@@ -41,14 +41,16 @@ pub struct ArtifactInfo {
     pub batch: usize,
     pub in_shape: Vec<usize>,
     pub out_shape: Vec<usize>,
-    pub layer: Option<LayerParams>,
+    /// Sealed at the deserialization boundary: manifest data comes from
+    /// disk, so it is validated exactly once, here.
+    pub layer: Option<ValidatedParams>,
 }
 
 /// NID network metadata.
 #[derive(Debug, Clone)]
 pub struct NidInfo {
     pub decision_threshold: i32,
-    pub layers: Vec<LayerParams>,
+    pub layers: Vec<ValidatedParams>,
 }
 
 /// The parsed manifest.
@@ -61,7 +63,7 @@ pub struct Manifest {
     pub nid: Option<NidInfo>,
 }
 
-fn parse_layer(j: &Json) -> Result<LayerParams> {
+fn parse_layer(j: &Json) -> Result<ValidatedParams> {
     let get = |k: &str| -> Result<usize> {
         j.get(k).as_usize().with_context(|| format!("layer field {k}"))
     };
@@ -78,8 +80,8 @@ fn parse_layer(j: &Json) -> Result<LayerParams> {
         input_bits: get("input_bits")? as u32,
         output_bits: get("output_bits")? as u32,
     };
-    p.validate()?;
-    Ok(p)
+    // seal once at the parse boundary; consumers get ValidatedParams
+    Ok(p.validated()?)
 }
 
 impl Manifest {

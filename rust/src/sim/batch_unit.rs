@@ -7,7 +7,7 @@
 
 use anyhow::Result;
 
-use crate::cfg::LayerParams;
+use crate::cfg::{LayerParams, ValidatedParams};
 use crate::quant::Matrix;
 
 use super::stream_unit::{MvuStream, StepOut, StreamStats};
@@ -21,7 +21,10 @@ pub struct MvuBatch {
 }
 
 impl MvuBatch {
-    pub fn new(params: &LayerParams, weights: &Matrix) -> Result<MvuBatch> {
+    /// Constructors take [`ValidatedParams`] — like every sim entry
+    /// point, so illegal folds are unrepresentable here in any build
+    /// profile.
+    pub fn new(params: &ValidatedParams, weights: &Matrix) -> Result<MvuBatch> {
         Ok(MvuBatch {
             wmem: WeightMem::from_matrix(params, weights)?,
             stream: MvuStream::new(params)?,
@@ -29,7 +32,7 @@ impl MvuBatch {
     }
 
     pub fn with_fifo_depth(
-        params: &LayerParams,
+        params: &ValidatedParams,
         weights: &Matrix,
         fifo_depth: usize,
     ) -> Result<MvuBatch> {
@@ -113,12 +116,14 @@ mod tests {
     #[test]
     fn all_simd_types_match_reference() {
         for ty in SimdType::ALL {
-            let (wb, ib) = match ty {
-                SimdType::Xnor => (1, 1),
-                SimdType::BinaryWeights => (1, 4),
-                SimdType::Standard => (4, 4),
-            };
-            let p = LayerParams::fc("t", 16, 8, 4, 8, ty, wb, ib, 0);
+            let p = crate::cfg::DesignPoint::fc("t")
+                .in_features(16)
+                .out_features(8)
+                .pe(4)
+                .simd(8)
+                .paper_precision(ty)
+                .build()
+                .unwrap();
             let w = random_weights(&p, 3);
             let mut mvu = MvuBatch::new(&p, &w).unwrap();
             let mut rng = Pcg32::new(11);

@@ -11,7 +11,7 @@
 
 use anyhow::{bail, Result};
 
-use crate::cfg::LayerParams;
+use crate::cfg::{LayerParams, ValidatedParams};
 use crate::quant::{Matrix, Thresholds};
 
 use super::batch_unit::MvuBatch;
@@ -93,10 +93,11 @@ pub struct MvuChain {
 }
 
 impl MvuChain {
-    /// Build from per-layer (params, weights, thresholds). Layer i's
-    /// output channel count must equal layer i+1's input vector length.
+    /// Build from per-layer (validated params, weights, thresholds).
+    /// Layer i's output channel count must equal layer i+1's input vector
+    /// length.
     pub fn new(
-        layers: Vec<(LayerParams, Matrix, Option<Thresholds>)>,
+        layers: Vec<(ValidatedParams, Matrix, Option<Thresholds>)>,
     ) -> Result<MvuChain> {
         if layers.is_empty() {
             bail!("empty chain");
@@ -132,7 +133,7 @@ impl MvuChain {
                 conv: WidthConverter::new(0, 0), // fixed up below
                 nf_cursor: 0,
             });
-            params.push(p);
+            params.push(p.into_inner());
             let _ = i;
             let _ = n;
         }
@@ -257,13 +258,19 @@ impl MvuChain {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::cfg::SimdType;
     use crate::quant::{matvec, multithreshold};
     use crate::util::rng::Pcg32;
 
     fn layer(name: &str, fin: usize, fout: usize, pe: usize, simd: usize, seed: u64,
-             with_th: bool) -> (LayerParams, Matrix, Option<Thresholds>) {
-        let p = LayerParams::fc(name, fin, fout, pe, simd, SimdType::Standard, 2, 2, if with_th { 2 } else { 0 });
+             with_th: bool) -> (ValidatedParams, Matrix, Option<Thresholds>) {
+        let p = crate::cfg::DesignPoint::fc(name)
+            .in_features(fin)
+            .out_features(fout)
+            .pe(pe)
+            .simd(simd)
+            .precision(2, 2, if with_th { 2 } else { 0 })
+            .build()
+            .unwrap();
         let mut rng = Pcg32::new(seed);
         let w = Matrix::new(
             fout,
@@ -288,7 +295,7 @@ mod tests {
     }
 
     fn reference(
-        layers: &[(LayerParams, Matrix, Option<Thresholds>)],
+        layers: &[(ValidatedParams, Matrix, Option<Thresholds>)],
         x: &[i32],
     ) -> Vec<i32> {
         let mut v = x.to_vec();
@@ -326,7 +333,7 @@ mod tests {
         // the real Table 6 geometry with random int2 weights
         let specs = crate::cfg::nid_layers();
         let mut rng = Pcg32::new(77);
-        let layers: Vec<(LayerParams, Matrix, Option<Thresholds>)> = specs
+        let layers: Vec<(ValidatedParams, Matrix, Option<Thresholds>)> = specs
             .iter()
             .map(|p| {
                 let w = Matrix::new(

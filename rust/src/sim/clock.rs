@@ -3,7 +3,7 @@
 
 use anyhow::{bail, Result};
 
-use crate::cfg::LayerParams;
+use crate::cfg::ValidatedParams;
 use crate::quant::Matrix;
 
 use super::axis::{AxisSink, AxisSource, StallPattern};
@@ -29,14 +29,22 @@ pub struct SimReport {
 
 /// Simulate the MVU over `vectors` (each of length K^2*IC) with ideal
 /// stimulus (always-valid source, always-ready sink).
-pub fn run_mvu(params: &LayerParams, weights: &Matrix, vectors: &[Vec<i32>]) -> Result<SimReport> {
+///
+/// All `run_mvu*` entry points take a [`ValidatedParams`]: folding
+/// legality was checked exactly once in `DesignPoint::build`, so the hot
+/// path never re-validates.
+pub fn run_mvu(
+    params: &ValidatedParams,
+    weights: &Matrix,
+    vectors: &[Vec<i32>],
+) -> Result<SimReport> {
     run_mvu_stalled(params, weights, vectors, StallPattern::None, StallPattern::None)
 }
 
 /// Simulate with stall patterns injected on the input (TVALID gaps) and
 /// output (TREADY gaps) — the paper's §5.3.1 flow-control scenarios.
 pub fn run_mvu_stalled(
-    params: &LayerParams,
+    params: &ValidatedParams,
     weights: &Matrix,
     vectors: &[Vec<i32>],
     in_stall: StallPattern,
@@ -48,7 +56,7 @@ pub fn run_mvu_stalled(
 /// Full-control variant: stall patterns plus an explicit output-FIFO depth
 /// (the §5.3.2 decoupling ablation).
 pub fn run_mvu_fifo(
-    params: &LayerParams,
+    params: &ValidatedParams,
     weights: &Matrix,
     vectors: &[Vec<i32>],
     in_stall: StallPattern,
@@ -121,9 +129,20 @@ pub fn run_mvu_fifo(
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::cfg::{nid_layers, SimdType};
+    use crate::cfg::{nid_layers, DesignPoint, LayerParams, SimdType};
     use crate::quant::matvec;
     use crate::util::rng::Pcg32;
+
+    /// Standard-type FC point with 4-bit operands.
+    fn fc4(in_f: usize, out_f: usize, pe: usize, simd: usize) -> ValidatedParams {
+        DesignPoint::fc("t")
+            .in_features(in_f)
+            .out_features(out_f)
+            .pe(pe)
+            .simd(simd)
+            .build()
+            .unwrap()
+    }
 
     fn rand_matrix(params: &LayerParams, seed: u64) -> Matrix {
         let mut rng = Pcg32::new(seed);
@@ -169,7 +188,7 @@ mod tests {
 
     #[test]
     fn multi_vector_streaming_keeps_ii1() {
-        let p = LayerParams::fc("t", 16, 8, 4, 8, SimdType::Standard, 4, 4, 0);
+        let p = fc4(16, 8, 4, 8);
         let w = rand_matrix(&p, 5);
         let mut rng = Pcg32::new(6);
         let vecs: Vec<Vec<i32>> = (0..10).map(|_| rand_vec(&p, &mut rng)).collect();
@@ -184,7 +203,7 @@ mod tests {
 
     #[test]
     fn random_stalls_preserve_results() {
-        let p = LayerParams::fc("t", 16, 8, 2, 4, SimdType::Standard, 4, 4, 0);
+        let p = fc4(16, 8, 2, 4);
         let w = rand_matrix(&p, 7);
         let mut rng = Pcg32::new(8);
         let vecs: Vec<Vec<i32>> = (0..5).map(|_| rand_vec(&p, &mut rng)).collect();
@@ -204,7 +223,7 @@ mod tests {
 
     #[test]
     fn heavy_backpressure_engages_fifo() {
-        let p = LayerParams::fc("t", 8, 8, 8, 8, SimdType::Standard, 4, 4, 0);
+        let p = fc4(8, 8, 8, 8);
         // SF=1: a result every cycle, sink mostly stalled -> FIFO fills.
         let w = rand_matrix(&p, 9);
         let mut rng = Pcg32::new(10);

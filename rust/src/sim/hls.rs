@@ -13,7 +13,7 @@
 
 use anyhow::Result;
 
-use crate::cfg::LayerParams;
+use crate::cfg::{LayerParams, ValidatedParams};
 use crate::quant::{matvec, Matrix};
 
 use super::clock::SimReport;
@@ -26,13 +26,14 @@ pub struct HlsMvu {
 }
 
 impl HlsMvu {
-    pub fn new(params: &LayerParams, weights: &Matrix) -> Result<HlsMvu> {
-        params.validate()?;
+    /// Build from a validated design point (legality already checked once
+    /// in `DesignPoint::build`); only the weight shape can still mismatch.
+    pub fn new(params: &ValidatedParams, weights: &Matrix) -> Result<HlsMvu> {
         anyhow::ensure!(
             weights.rows == params.matrix_rows() && weights.cols == params.matrix_cols(),
             "weight shape mismatch"
         );
-        Ok(HlsMvu { params: params.clone(), weights: weights.clone() })
+        Ok(HlsMvu { params: params.params().clone(), weights: weights.clone() })
     }
 
     pub fn params(&self) -> &LayerParams {
@@ -76,7 +77,7 @@ impl HlsMvu {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::cfg::{nid_layers, SimdType};
+    use crate::cfg::nid_layers;
     use crate::sim::run_mvu;
     use crate::util::rng::Pcg32;
 
@@ -93,7 +94,13 @@ mod tests {
 
     #[test]
     fn hls_and_rtl_agree_numerically() {
-        let p = LayerParams::fc("t", 24, 6, 3, 8, SimdType::Standard, 4, 4, 0);
+        let p = crate::cfg::DesignPoint::fc("t")
+            .in_features(24)
+            .out_features(6)
+            .pe(3)
+            .simd(8)
+            .build()
+            .unwrap();
         let mut rng = Pcg32::new(4);
         let w = Matrix::new(
             6,

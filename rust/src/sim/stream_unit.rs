@@ -22,7 +22,7 @@
 
 use anyhow::Result;
 
-use crate::cfg::LayerParams;
+use crate::cfg::{LayerParams, ValidatedParams};
 
 use super::fifo::Fifo;
 use super::fsm::{FsmAction, FsmInputs, FsmState, MvuFsm};
@@ -76,12 +76,11 @@ pub struct MvuStream {
 }
 
 impl MvuStream {
-    pub fn new(params: &LayerParams) -> Result<MvuStream> {
+    pub fn new(params: &ValidatedParams) -> Result<MvuStream> {
         Self::with_fifo_depth(params, DEFAULT_FIFO_DEPTH)
     }
 
-    pub fn with_fifo_depth(params: &LayerParams, fifo_depth: usize) -> Result<MvuStream> {
-        params.validate()?;
+    pub fn with_fifo_depth(params: &ValidatedParams, fifo_depth: usize) -> Result<MvuStream> {
         Ok(MvuStream {
             fsm: MvuFsm::new(),
             buf: InputBuffer::new(params.input_buf_depth()),
@@ -93,7 +92,7 @@ impl MvuStream {
             comp_done: false,
             scratch: Vec::with_capacity(params.simd),
             stats: StreamStats::default(),
-            params: params.clone(),
+            params: params.params().clone(),
         })
     }
 
@@ -226,11 +225,16 @@ impl MvuStream {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::cfg::SimdType;
     use crate::quant::Matrix;
 
-    fn setup(pe: usize, simd: usize) -> (LayerParams, WeightMem) {
-        let p = LayerParams::fc("t", 8, 4, pe, simd, SimdType::Standard, 4, 4, 0);
+    fn setup(pe: usize, simd: usize) -> (crate::cfg::ValidatedParams, WeightMem) {
+        let p = crate::cfg::DesignPoint::fc("t")
+            .in_features(8)
+            .out_features(4)
+            .pe(pe)
+            .simd(simd)
+            .build()
+            .unwrap();
         let data: Vec<i32> = (0..32).map(|i| (i % 7) - 3).collect();
         let w = Matrix::new(4, 8, data).unwrap();
         let wm = WeightMem::from_matrix(&p, &w).unwrap();

@@ -8,7 +8,7 @@
 
 use anyhow::{bail, Result};
 
-use crate::cfg::LayerParams;
+use crate::cfg::ValidatedParams;
 use crate::quant::Matrix;
 
 /// All PE weight memories of one MVU.
@@ -27,8 +27,9 @@ pub struct WeightMem {
 impl WeightMem {
     /// Partition the (rows x cols) weight matrix across PE memories
     /// according to the paper's layout: PE `p` serves rows `nf * PE + p`.
-    pub fn from_matrix(params: &LayerParams, w: &Matrix) -> Result<WeightMem> {
-        params.validate()?;
+    /// Takes a [`ValidatedParams`] like every sim constructor, so an
+    /// illegal fold cannot reach the partition arithmetic.
+    pub fn from_matrix(params: &ValidatedParams, w: &Matrix) -> Result<WeightMem> {
         if w.rows != params.matrix_rows() || w.cols != params.matrix_cols() {
             bail!(
                 "weight matrix {}x{} does not match params {}x{}",
@@ -74,10 +75,15 @@ impl WeightMem {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::cfg::SimdType;
 
-    fn params() -> LayerParams {
-        LayerParams::fc("t", 8, 4, 2, 4, SimdType::Standard, 4, 4, 0)
+    fn params() -> crate::cfg::ValidatedParams {
+        crate::cfg::DesignPoint::fc("t")
+            .in_features(8)
+            .out_features(4)
+            .pe(2)
+            .simd(4)
+            .build()
+            .unwrap()
     }
 
     fn matrix() -> Matrix {

@@ -14,9 +14,16 @@ pub struct Args {
 }
 
 /// Error with usage context.
-#[derive(Debug, thiserror::Error)]
-#[error("{0}")]
+#[derive(Debug)]
 pub struct CliError(pub String);
+
+impl std::fmt::Display for CliError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(&self.0)
+    }
+}
+
+impl std::error::Error for CliError {}
 
 impl Args {
     /// Parse raw args (without argv[0]). The first non-flag token is the

@@ -23,13 +23,20 @@ pub enum Json {
 }
 
 /// Parse error with byte offset and line/column.
-#[derive(Debug, thiserror::Error)]
-#[error("json parse error at line {line}, col {col}: {msg}")]
+#[derive(Debug)]
 pub struct JsonError {
     pub msg: String,
     pub line: usize,
     pub col: usize,
 }
+
+impl fmt::Display for JsonError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "json parse error at line {}, col {}: {}", self.line, self.col, self.msg)
+    }
+}
+
+impl std::error::Error for JsonError {}
 
 impl Json {
     // ---- constructors -----------------------------------------------------

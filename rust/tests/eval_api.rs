@@ -1,0 +1,186 @@
+//! Acceptance tests for the unified evaluation facade:
+//!
+//! * the `DesignPoint` builder accepts exactly the parameter sets
+//!   `LayerParams::validate` accepts, and returns the matching
+//!   `ParamError` variant on each illegal axis;
+//! * `Session::evaluate` output is bit-identical to the underlying
+//!   `run_mvu` + `estimate` primitives for the full Table 2 grid.
+
+use finn_mvu::cfg::{
+    DesignPoint, FoldAxis, LayerParams, ParamError, SimdType, ValidatedParams,
+};
+use finn_mvu::estimate::{estimate, Style};
+use finn_mvu::eval::{EvalRequest, Session, SimOptions};
+use finn_mvu::explore::{content_hash, params_key, stimulus_inputs, stimulus_weights};
+use finn_mvu::harness::SweepKind;
+use finn_mvu::proptest::{check, Config, Gen};
+use finn_mvu::sim::run_mvu;
+
+/// A raw parameter record over a range that covers every legality axis:
+/// zero dims, non-divisor folds, oversized kernels, precision clashes.
+fn arb_raw_params(g: &mut Gen) -> LayerParams {
+    LayerParams {
+        name: "raw".to_string(),
+        ifm_ch: g.usize_in(0, 20),
+        ifm_dim: g.usize_in(0, 6),
+        ofm_ch: g.usize_in(0, 20),
+        kernel_dim: g.usize_in(0, 6),
+        pe: g.usize_in(0, 8),
+        simd: g.usize_in(0, 8),
+        simd_type: *g.choose(&SimdType::ALL),
+        weight_bits: g.usize_in(1, 4) as u32,
+        input_bits: g.usize_in(1, 4) as u32,
+        output_bits: g.usize_in(0, 2) as u32,
+    }
+}
+
+/// The builder is a front door over `validate()`: `from_params(p).build()`
+/// must accept exactly the `p` that `p.validate()` accepts and return the
+/// identical structured error otherwise.
+#[test]
+fn prop_builder_accepts_exactly_what_validate_accepts() {
+    check("builder==validate", Config::cases(300), |g| {
+        let p = arb_raw_params(g);
+        let direct = p.validate();
+        let built = DesignPoint::from_params(p.clone()).build();
+        match (direct, built) {
+            (Ok(()), Ok(vp)) => {
+                if vp.params() != &p {
+                    return Err(format!("builder altered the params for {p}"));
+                }
+                Ok(())
+            }
+            (Err(a), Err(b)) => {
+                if a != b {
+                    return Err(format!("error mismatch for {p}: {a:?} vs {b:?}"));
+                }
+                Ok(())
+            }
+            (a, b) => Err(format!("accept/reject disagree for {p}: {a:?} vs {b:?}")),
+        }
+    });
+}
+
+/// Each illegal axis yields its own `ParamError` variant, with the axis
+/// details filled in.
+#[test]
+fn prop_error_variant_matches_the_illegal_axis() {
+    check("error-variants", Config::cases(200), |g| {
+        // start from a legal base and break exactly one axis
+        let base = DesignPoint::fc("v")
+            .in_features(12)
+            .out_features(6)
+            .pe(*g.choose(&[1usize, 2, 3, 6]))
+            .simd(*g.choose(&[1usize, 2, 3, 4, 6, 12]))
+            .build()
+            .map_err(|e| e.to_string())?
+            .into_inner();
+        let axis = g.usize_in(0, 3);
+        let mut p = base;
+        match axis {
+            0 => p.simd = 5,                       // not a divisor of 12
+            1 => p.pe = 4,                         // not a divisor of 6
+            2 => p.kernel_dim = 3,                 // larger than ifm_dim = 1
+            _ => p.simd_type = SimdType::Xnor,     // 4-bit operands under xnor
+        }
+        let err = match p.clone().validated() {
+            Err(e) => e,
+            Ok(_) => return Err(format!("axis {axis} should be illegal for {p}")),
+        };
+        let matches_axis = match axis {
+            0 => matches!(
+                err,
+                ParamError::IllegalFold { axis: FoldAxis::Simd, value: 5, .. }
+            ),
+            1 => matches!(err, ParamError::IllegalFold { axis: FoldAxis::Pe, value: 4, .. }),
+            // breaking the kernel can also break SIMD divisibility first;
+            // both are fold/geometry errors, never precision
+            2 => matches!(
+                err,
+                ParamError::KernelExceedsIfm { .. } | ParamError::IllegalFold { .. }
+            ),
+            _ => matches!(err, ParamError::PrecisionRule { simd_type: SimdType::Xnor, .. }),
+        };
+        if !matches_axis {
+            return Err(format!("axis {axis}: unexpected variant {err:?}"));
+        }
+        Ok(())
+    });
+}
+
+/// The facade is a zero-cost front: for every Table 2 point (all six
+/// sweeps, all three SIMD types), `Session::evaluate` must be
+/// bit-identical to calling the `estimate` and `run_mvu` primitives
+/// directly with the engine's canonical stimulus.
+#[test]
+fn session_bit_identical_to_primitives_on_table2_grid() {
+    let session = Session::parallel();
+    let vectors = 2usize;
+    for kind in SweepKind::ALL {
+        for ty in SimdType::ALL {
+            for sp in kind.points(ty) {
+                let req = EvalRequest::new(sp.params.clone())
+                    .with_sim(SimOptions { batch: vectors, ..SimOptions::default() });
+                let ev = session.evaluate(&req).unwrap();
+
+                // estimates: field-for-field identical (f64 compared by
+                // bits via ==; both sides run the same pure function)
+                for style in [Style::Rtl, Style::Hls] {
+                    let direct = estimate(&sp.params, style);
+                    let got = ev.estimate_for(style).unwrap();
+                    assert_eq!(got.luts, direct.luts, "{} {style:?}", sp.params);
+                    assert_eq!(got.ffs, direct.ffs, "{} {style:?}", sp.params);
+                    assert_eq!(got.bram18, direct.bram18, "{} {style:?}", sp.params);
+                    assert_eq!(got.delay_ns, direct.delay_ns, "{} {style:?}", sp.params);
+                    assert_eq!(
+                        got.synth_time_s, direct.synth_time_s,
+                        "{} {style:?}",
+                        sp.params
+                    );
+                    assert_eq!(
+                        got.delay_location,
+                        direct.delay_location.name(),
+                        "{} {style:?}",
+                        sp.params
+                    );
+                }
+
+                // simulation: same canonical stimulus, same report
+                let seed = content_hash(&params_key(&sp.params));
+                let weights = stimulus_weights(&sp.params, seed);
+                let inputs =
+                    stimulus_inputs(&sp.params, seed ^ 0x9e37_79b9_7f4a_7c15, vectors);
+                let direct = run_mvu(&sp.params, &weights, &inputs).unwrap();
+                let sim = ev.sim.as_ref().unwrap();
+                assert!(sim.matches_reference, "{}", sp.params);
+                assert_eq!(sim.exec_cycles, direct.exec_cycles, "{}", sp.params);
+                assert_eq!(sim.stall_cycles, direct.stall_cycles, "{}", sp.params);
+                assert_eq!(sim.slots_consumed, direct.slots_consumed, "{}", sp.params);
+                assert_eq!(
+                    sim.fifo_max_occupancy, direct.fifo_max_occupancy,
+                    "{}",
+                    sp.params
+                );
+            }
+        }
+    }
+}
+
+/// `ValidatedParams` is the only door: a point that round-trips through
+/// the `LayerParams` exit hatch must re-validate before the compute
+/// layers accept it, and the sealed value equals the original.
+#[test]
+fn validated_params_roundtrip_preserves_identity() {
+    let vp = DesignPoint::fc("rt")
+        .in_features(48)
+        .out_features(16)
+        .pe(4)
+        .simd(6)
+        .precision(2, 2, 0)
+        .build()
+        .unwrap();
+    let raw: LayerParams = vp.clone().into_inner();
+    let back: ValidatedParams = raw.validated().unwrap();
+    assert_eq!(back, vp);
+    assert_eq!(params_key(&back), params_key(&vp));
+}

@@ -3,7 +3,7 @@
 //! ordered to serial evaluation for every thread count, and cache hits —
 //! memory or disk — must return bit-identical reports.
 
-use finn_mvu::cfg::{LayerParams, SimdType, SweepPoint};
+use finn_mvu::cfg::{DesignPoint, SimdType, SweepPoint};
 use finn_mvu::explore::{points_to_json, ExploreConfig, Explorer};
 use finn_mvu::harness::SweepKind;
 use finn_mvu::proptest::{check, Config, Gen};
@@ -28,7 +28,15 @@ fn arb_points(g: &mut Gen) -> Vec<SweepPoint> {
         let simd = g.divisor_of(cols);
         pool.push(SweepPoint {
             swept: i,
-            params: LayerParams::fc(&format!("fc{i}"), cols, rows, pe, simd, ty, wb, ib, 0),
+            params: DesignPoint::fc(&format!("fc{i}"))
+                .in_features(cols)
+                .out_features(rows)
+                .pe(pe)
+                .simd(simd)
+                .simd_type(ty)
+                .precision(wb, ib, 0)
+                .build()
+                .expect("generated folds are divisors, hence legal"),
         });
     }
     // random subset with repetition
@@ -80,17 +88,14 @@ fn prop_parallel_identical_with_simulation() {
             let simd = g.divisor_of(cols);
             points.push(SweepPoint {
                 swept: i,
-                params: LayerParams::fc(
-                    &format!("s{i}"),
-                    cols,
-                    rows,
-                    pe,
-                    simd,
-                    SimdType::Standard,
-                    2,
-                    2,
-                    0,
-                ),
+                params: DesignPoint::fc(&format!("s{i}"))
+                    .in_features(cols)
+                    .out_features(rows)
+                    .pe(pe)
+                    .simd(simd)
+                    .precision(2, 2, 0)
+                    .build()
+                    .expect("generated folds are divisors, hence legal"),
             });
         }
         let eval = |threads: usize| {
@@ -139,17 +144,25 @@ fn prop_cache_hits_bit_identical() {
     });
 }
 
-/// The cache key excludes `LayerParams::name`: the same geometry under a
-/// different label must be served from cache.
+/// The cache key excludes the point's display name: the same geometry
+/// under a different label must be served from cache.
 #[test]
 fn cache_key_ignores_point_names() {
     let ex = Explorer::serial();
-    let a = SweepPoint {
-        swept: 64,
-        params: LayerParams::conv("pe64", 64, 8, 64, 4, 64, 64, SimdType::Standard, 4, 4),
+    let geometry = |name: &str| {
+        DesignPoint::conv(name)
+            .ifm_ch(64)
+            .ifm_dim(8)
+            .ofm_ch(64)
+            .kernel_dim(4)
+            .pe(64)
+            .simd(64)
+            .paper_precision(SimdType::Standard)
+            .build()
+            .unwrap()
     };
-    let mut renamed = a.clone();
-    renamed.params.name = "simd64".to_string();
+    let a = SweepPoint { swept: 64, params: geometry("pe64") };
+    let renamed = SweepPoint { swept: 64, params: geometry("simd64") };
     let ra = ex.evaluate_points(&[a]).unwrap();
     let misses = ex.cache_stats().misses;
     let rb = ex.evaluate_points(&[renamed]).unwrap();
@@ -186,26 +199,43 @@ fn disk_cache_roundtrip_bit_identical() {
     std::fs::remove_dir_all(&dir).unwrap();
 }
 
-/// Errors are deterministic too: an invalid point mixed into a sweep
-/// yields the same error (the smallest failing index) at every thread
-/// count.
+/// Illegal folds can no longer reach the engine at all — `SweepPoint`
+/// carries a `ValidatedParams`, so the old "invalid point mid-sweep"
+/// failure mode is unrepresentable. What remains observable is that
+/// *when* per-point work fails, the error of the smallest failing index
+/// wins at every thread count.
 #[test]
 fn error_reporting_is_deterministic_across_thread_counts() {
-    let mut points = SweepKind::Pe.points(SimdType::Standard);
-    let mut bad = points[2].clone();
-    bad.params.simd = 7; // does not divide K^2*IC = 1024
-    bad.params.name = "illegal".to_string();
-    points.insert(2, bad);
+    // the type system rejects unvalidated points at the boundary
+    assert!(DesignPoint::conv("illegal")
+        .ifm_ch(64)
+        .ifm_dim(8)
+        .ofm_ch(64)
+        .kernel_dim(4)
+        .pe(64)
+        .simd(7) // does not divide K^2*IC = 1024
+        .build()
+        .is_err());
+
+    // and failing jobs keep deterministic first-failure semantics
+    let items: Vec<usize> = (0..24).collect();
     let errs: Vec<String> = [1usize, 2, 8]
         .into_iter()
         .map(|t| {
-            Explorer::with_threads(t)
-                .evaluate_points(&points)
-                .expect_err("invalid point must fail")
+            let results = Explorer::with_threads(t).par_map(&items, |i, &v| {
+                if v % 7 == 2 {
+                    anyhow::bail!("job {i} failed")
+                }
+                Ok(v)
+            });
+            results
+                .into_iter()
+                .find_map(|r| r.err())
+                .expect("some jobs must fail")
                 .to_string()
         })
         .collect();
-    assert!(errs[0].contains("sweep point 2"), "{}", errs[0]);
+    assert_eq!(errs[0], "job 2 failed");
     assert_eq!(errs[0], errs[1]);
     assert_eq!(errs[1], errs[2]);
 }

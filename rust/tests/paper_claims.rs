@@ -76,9 +76,9 @@ fn claim_rtl_speedup_45_to_80_percent() {
 #[test]
 fn claim_critical_path_location() {
     let small = &finn_mvu::cfg::sweep_ifm_channels(SimdType::Xnor)[0].params;
-    assert_eq!(estimate(small, Style::Rtl).unwrap().delay_location, PathLocation::Control);
+    assert_eq!(estimate(small, Style::Rtl).delay_location, PathLocation::Control);
     let large = finn_mvu::cfg::sweep_simd(SimdType::Standard).last().unwrap().params.clone();
-    let loc = estimate(&large, Style::Rtl).unwrap().delay_location;
+    let loc = estimate(&large, Style::Rtl).delay_location;
     assert_ne!(loc, PathLocation::Control);
 }
 

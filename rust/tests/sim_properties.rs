@@ -3,15 +3,16 @@
 //! cycle formula, data integrity and liveness under arbitrary stall
 //! patterns, and the HLS model's agreement.
 
-use finn_mvu::cfg::{LayerParams, SimdType};
+use finn_mvu::cfg::{DesignPoint, LayerParams, SimdType, ValidatedParams};
 use finn_mvu::proptest::{check, Config, Gen};
 use finn_mvu::quant::{matvec, Matrix};
 use finn_mvu::sim::{
     run_mvu, run_mvu_fifo, run_mvu_stalled, HlsMvu, StallPattern, PIPELINE_STAGES,
 };
 
-/// Draw a random legal MVU configuration.
-fn arb_params(g: &mut Gen) -> LayerParams {
+/// Draw a random legal MVU configuration (through the builder, so the
+/// simulator entry points receive the only type they accept).
+fn arb_params(g: &mut Gen) -> ValidatedParams {
     let ty = *g.choose(&SimdType::ALL);
     let (wb, ib) = match ty {
         SimdType::Xnor => (1, 1),
@@ -22,7 +23,15 @@ fn arb_params(g: &mut Gen) -> LayerParams {
     let cols = g.usize_in(1, 48);
     let pe = g.divisor_of(rows);
     let simd = g.divisor_of(cols);
-    LayerParams::fc("prop", cols, rows, pe, simd, ty, wb, ib, 0)
+    DesignPoint::fc("prop")
+        .in_features(cols)
+        .out_features(rows)
+        .pe(pe)
+        .simd(simd)
+        .simd_type(ty)
+        .precision(wb, ib, 0)
+        .build()
+        .expect("generated folds are divisors, hence legal")
 }
 
 fn arb_weights(g: &mut Gen, p: &LayerParams) -> Matrix {
@@ -186,7 +195,7 @@ fn arb_bursty_stall(g: &mut Gen) -> StallPattern {
 
 /// Draw a modest configuration for FIFO-depth properties (small folds so
 /// even heavily stalled runs stay far from the deadlock bound).
-fn arb_small_params(g: &mut Gen) -> LayerParams {
+fn arb_small_params(g: &mut Gen) -> ValidatedParams {
     let ty = *g.choose(&SimdType::ALL);
     let (wb, ib) = match ty {
         SimdType::Xnor => (1, 1),
@@ -197,7 +206,15 @@ fn arb_small_params(g: &mut Gen) -> LayerParams {
     let cols = g.usize_in(1, 32);
     let pe = g.divisor_of(rows);
     let simd = g.divisor_of(cols);
-    LayerParams::fc("fifo-prop", cols, rows, pe, simd, ty, wb, ib, 0)
+    DesignPoint::fc("fifo-prop")
+        .in_features(cols)
+        .out_features(rows)
+        .pe(pe)
+        .simd(simd)
+        .simd_type(ty)
+        .precision(wb, ib, 0)
+        .build()
+        .expect("generated folds are divisors, hence legal")
 }
 
 /// §5.3.2 liveness + integrity: for any FIFO depth >= 1 and bursty stall
@@ -373,17 +390,14 @@ fn prop_chain_matches_layerwise_reference() {
             let pe = g.divisor_of(fout);
             let simd = g.divisor_of(fin);
             let with_th = i + 1 < n_layers; // inner layers threshold
-            let p = LayerParams::fc(
-                &format!("c{i}"),
-                fin,
-                fout,
-                pe,
-                simd,
-                SimdType::Standard,
-                2,
-                2,
-                if with_th { 2 } else { 0 },
-            );
+            let p = DesignPoint::fc(&format!("c{i}"))
+                .in_features(fin)
+                .out_features(fout)
+                .pe(pe)
+                .simd(simd)
+                .precision(2, 2, if with_th { 2 } else { 0 })
+                .build()
+                .expect("generated folds are divisors, hence legal");
             let w = arb_weights(g, &p);
             let th = with_th.then(|| {
                 Thresholds::from_rows(
