@@ -16,7 +16,12 @@ fn main() -> anyhow::Result<()> {
     // 1. convergence sweeps (paper Figs. 12/13)
     for kind in [SweepKind::Pe, SweepKind::Simd] {
         let s = resource_sweep_figure(kind, SimdType::Standard)?;
-        println!("{} — {} (standard, 4-bit)\n{}", kind.figure(), kind.label(), s.to_table().render());
+        println!(
+            "{} — {} (standard, 4-bit)\n{}",
+            kind.figure(),
+            kind.label(),
+            s.to_table().render()
+        );
     }
 
     // 2. the Fig. 14 heat maps: where does the LUT crossover fall?

@@ -66,7 +66,13 @@ fn a2_dsp_binding(ex: &Session) {
     println!("== A2: LUT-bound vs DSP-bound multipliers (standard type) ==");
     let pts = sweep_simd(SimdType::Standard);
     let rows = ex.par_map(&pts, |_, sp| Ok(dsp_lut_savings(&sp.params)));
-    let mut t = Table::new(vec!["SIMD", "LUTs (LUT-mult)", "LUTs (DSP-mult)", "DSP48E1", "LUT savings"]);
+    let mut t = Table::new(vec![
+        "SIMD",
+        "LUTs (LUT-mult)",
+        "LUTs (DSP-mult)",
+        "DSP48E1",
+        "LUT savings",
+    ]);
     for (sp, row) in pts.iter().zip(rows) {
         let (lut, dsp_luts, dsps) = row.unwrap();
         t.row(vec![
@@ -140,7 +146,13 @@ fn a4_chain_overlap(ex: &Session) {
         let mut chain = MvuChain::new(layers.clone())?;
         chain.run(&inputs)
     });
-    let mut t = Table::new(vec!["records", "chain cycles", "serial cycles", "overlap", "cycles/record"]);
+    let mut t = Table::new(vec![
+        "records",
+        "chain cycles",
+        "serial cycles",
+        "overlap",
+        "cycles/record",
+    ]);
     for (n, rep) in sizes.iter().zip(reports) {
         let rep = rep.unwrap();
         let serial: usize = specs.iter().map(|p| p.analytic_cycles(4)).sum::<usize>() * n;

@@ -1,5 +1,8 @@
 //! Hot-path micro-benchmarks (DESIGN.md §Perf / EXPERIMENTS.md §Perf):
 //!
+//!   * the two simulation kernels head-to-head on the fig. 14 PE x SIMD
+//!     heatmap sweep — the batched kernel must clear >= 10x the per-cycle
+//!     oracle's cycles/second (DESIGN.md §Two-kernel simulator);
 //!   * simulator throughput in cycles/second on the NID layer-0 MVU and a
 //!     large PE=SIMD=32 conv MVU (the L3 optimization target);
 //!   * the exploration engine over the full Table 2 grid — serial-cold vs
@@ -12,9 +15,9 @@
 use finn_mvu::cfg::{nid_layers, DesignPoint, SimdType, ValidatedParams};
 use finn_mvu::eval::Session;
 use finn_mvu::harness::{bench, random_weights, SweepKind};
-use finn_mvu::quant::matvec;
+use finn_mvu::quant::{matvec, Matrix};
 use finn_mvu::runtime::{default_artifacts_dir, Engine};
-use finn_mvu::sim::run_mvu;
+use finn_mvu::sim::{reference, run_mvu, run_mvu_fifo, StallPattern, DEFAULT_FIFO_DEPTH};
 use finn_mvu::util::rng::Pcg32;
 
 fn sim_bench(name: &str, params: &ValidatedParams, n_vec: usize) {
@@ -39,6 +42,85 @@ fn sim_bench(name: &str, params: &ValidatedParams, n_vec: usize) {
         cycles as f64 / (r.mean_ns / 1e3),
         (params.pe * params.simd * cycles) as f64 / (r.mean_ns / 1e3)
     );
+}
+
+/// Fast kernel vs per-cycle oracle over the fig. 14 heatmap grid
+/// (PE x SIMD in {2..64}^2 on the 64ch/8px/k4 conv geometry): identical
+/// reports by construction (tests/kernel_identity.rs), so the headline is
+/// aggregate simulated cycles per second. The acceptance bar for the
+/// batched kernel is a >= 10x speedup.
+fn fig14_kernel_shootout() {
+    let grid = [2usize, 4, 8, 16, 32, 64];
+    let mut work: Vec<(ValidatedParams, Matrix, Vec<Vec<i32>>)> = Vec::new();
+    let mut rng = Pcg32::new(15);
+    for &pe in &grid {
+        for &simd in &grid {
+            let p = DesignPoint::conv(&format!("hm_pe{pe}_s{simd}"))
+                .ifm_ch(64)
+                .ifm_dim(8)
+                .ofm_ch(64)
+                .kernel_dim(4)
+                .pe(pe)
+                .simd(simd)
+                .paper_precision(SimdType::Standard)
+                .build()
+                .expect("fig14 grid points are legal");
+            let w = random_weights(&p, 16);
+            let vectors: Vec<Vec<i32>> = (0..8)
+                .map(|_| (0..p.matrix_cols()).map(|_| rng.next_range(4) as i32).collect())
+                .collect();
+            work.push((p, w, vectors));
+        }
+    }
+    let total_cycles: usize = work
+        .iter()
+        .map(|(p, w, v)| run_mvu(p, w, v).unwrap().exec_cycles)
+        .sum();
+    println!(
+        "fig14 sweep: {} points, {} simulated cycles per pass",
+        work.len(),
+        total_cycles
+    );
+
+    let fast = bench("sim/fig14_sweep_fast_kernel", || {
+        for (p, w, v) in &work {
+            std::hint::black_box(run_mvu(p, w, v).unwrap());
+        }
+    });
+    println!("{fast}");
+    let oracle = bench("sim/fig14_sweep_reference_kernel", || {
+        for (p, w, v) in &work {
+            std::hint::black_box(
+                reference::run_mvu_fifo(
+                    p,
+                    w,
+                    v,
+                    StallPattern::None,
+                    StallPattern::None,
+                    DEFAULT_FIFO_DEPTH,
+                )
+                .unwrap(),
+            );
+        }
+    });
+    println!("{oracle}");
+    let speedup = oracle.mean_ns / fast.mean_ns.max(1.0);
+    println!(
+        "    -> fast {:.2} Mcycles/s vs reference {:.2} Mcycles/s: {:.1}x speedup \
+         (acceptance bar: >= 10x) {}",
+        total_cycles as f64 / (fast.mean_ns / 1e3),
+        total_cycles as f64 / (oracle.mean_ns / 1e3),
+        speedup,
+        if speedup >= 10.0 { "PASS" } else { "FAIL" }
+    );
+
+    // spot-check bit-identity on one stalled flow too, so the bench
+    // doubles as a smoke test of the hybrid path
+    let (p, w, v) = &work[0];
+    let stall = StallPattern::Periodic { period: 8, duty: 5, phase: 1 };
+    let a = run_mvu_fifo(p, w, v, StallPattern::None, stall.clone(), 2).unwrap();
+    let b = reference::run_mvu_fifo(p, w, v, StallPattern::None, stall, 2).unwrap();
+    assert_eq!(a, b, "stalled-flow kernel divergence");
 }
 
 fn explore_bench() {
@@ -72,6 +154,9 @@ fn explore_bench() {
 }
 
 fn main() {
+    // the two-kernel simulator head-to-head (the tentpole acceptance run)
+    fig14_kernel_shootout();
+
     // L3 simulator hot loop
     let nid0 = nid_layers().remove(0);
     sim_bench("sim/nid_layer0_x32vec", &nid0, 32);

@@ -89,17 +89,24 @@ impl fmt::Display for ParamError {
             ParamError::KernelExceedsIfm { name, kernel_dim, ifm_dim } => {
                 write!(f, "{name}: kernel {kernel_dim} larger than IFM {ifm_dim}")
             }
-            ParamError::PrecisionRule { name, simd_type, weight_bits, input_bits } => match simd_type {
-                SimdType::Xnor => {
-                    write!(f, "{name}: xnor requires 1-bit weights and inputs (got w{weight_bits}/i{input_bits})")
+            ParamError::PrecisionRule { name, simd_type, weight_bits, input_bits } => {
+                match simd_type {
+                    SimdType::Xnor => write!(
+                        f,
+                        "{name}: xnor requires 1-bit weights and inputs (got \
+                         w{weight_bits}/i{input_bits})"
+                    ),
+                    SimdType::BinaryWeights => write!(
+                        f,
+                        "{name}: binary-weight type requires 1-bit weights (got w{weight_bits})"
+                    ),
+                    SimdType::Standard => write!(
+                        f,
+                        "{name}: standard type expects >=2-bit operands (got \
+                         w{weight_bits}/i{input_bits}; use xnor/binary)"
+                    ),
                 }
-                SimdType::BinaryWeights => {
-                    write!(f, "{name}: binary-weight type requires 1-bit weights (got w{weight_bits})")
-                }
-                SimdType::Standard => {
-                    write!(f, "{name}: standard type expects >=2-bit operands (got w{weight_bits}/i{input_bits}; use xnor/binary)")
-                }
-            },
+            }
         }
     }
 }

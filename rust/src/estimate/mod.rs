@@ -21,7 +21,10 @@ pub mod synth;
 
 pub use bram::{bram18_tiles, lutram_luts, MemoryMapping};
 pub use delay::{critical_path, CriticalPath, PathLocation};
-pub use dsp::{clock_report, dsp_count, dsp_delay_ns, elaborate_rtl_dsp, ClockReport, CLOCK_FALLBACK_NS, CLOCK_TARGET_NS};
+pub use dsp::{
+    clock_report, dsp_count, dsp_delay_ns, elaborate_rtl_dsp, ClockReport, CLOCK_FALLBACK_NS,
+    CLOCK_TARGET_NS,
+};
 pub use netlist::{Component, Netlist};
 pub use synth::synth_time_s;
 

@@ -83,9 +83,17 @@ impl Netlist {
 
 impl fmt::Display for Netlist {
     fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
-        writeln!(f, "{:<24} {:>8} {:>8} {:>8} {:>8}", "component", "LUTs", "FFs", "CARRY4", "BRAM18")?;
+        writeln!(
+            f,
+            "{:<24} {:>8} {:>8} {:>8} {:>8}",
+            "component", "LUTs", "FFs", "CARRY4", "BRAM18"
+        )?;
         for c in &self.components {
-            writeln!(f, "{:<24} {:>8} {:>8} {:>8} {:>8}", c.name, c.luts, c.ffs, c.carry4, c.bram18)?;
+            writeln!(
+                f,
+                "{:<24} {:>8} {:>8} {:>8} {:>8}",
+                c.name, c.luts, c.ffs, c.carry4, c.bram18
+            )?;
         }
         write!(
             f,

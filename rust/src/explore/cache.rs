@@ -59,17 +59,31 @@ pub fn estimate_key(p: &LayerParams, style: Style) -> String {
 
 /// Cache key for a cycle-accurate simulation with the engine's canonical
 /// deterministic stimulus (`vectors` inputs from `seed`) and the default
-/// flow (default FIFO depth, no stalls).
+/// flow (default FIFO depth, no stalls). Besides the crate version, the
+/// simulation kernel version ([`sim::SIM_KERNEL_VERSION`]) is part of the
+/// key: a kernel rewrite invalidates on-disk simulation entries instead
+/// of trusting that the new kernel reproduces the old one's reports.
+///
+/// [`sim::SIM_KERNEL_VERSION`]: crate::sim::SIM_KERNEL_VERSION
 pub fn sim_key(p: &LayerParams, vectors: usize, seed: u64) -> String {
-    format!("v{}/sim/n{}/s{:016x}/{}", crate::VERSION, vectors, seed, params_key(p))
+    format!(
+        "v{}k{}/sim/n{}/s{:016x}/{}",
+        crate::VERSION,
+        crate::sim::SIM_KERNEL_VERSION,
+        vectors,
+        seed,
+        params_key(p)
+    )
 }
 
 /// Cache key for a simulation with a non-default flow (explicit FIFO
 /// depth and/or stall patterns), described by the canonical `flow` text.
+/// Kernel-versioned like [`sim_key`].
 pub fn sim_key_flow(p: &LayerParams, vectors: usize, seed: u64, flow: &str) -> String {
     format!(
-        "v{}/simflow/n{}/s{:016x}/{}/{}",
+        "v{}k{}/simflow/n{}/s{:016x}/{}/{}",
         crate::VERSION,
+        crate::sim::SIM_KERNEL_VERSION,
         vectors,
         seed,
         flow,
@@ -245,6 +259,17 @@ mod tests {
     fn estimate_keys_distinguish_styles() {
         let p = params("k");
         assert_ne!(estimate_key(&p, Style::Rtl), estimate_key(&p, Style::Hls));
+    }
+
+    #[test]
+    fn sim_keys_are_kernel_versioned() {
+        let p = params("k");
+        let k = sim_key(&p, 2, 1);
+        let kf = sim_key_flow(&p, 2, 1, "fifo2;in:none;out:none");
+        let tag = format!("v{}k{}/", crate::VERSION, crate::sim::SIM_KERNEL_VERSION);
+        assert!(k.starts_with(&tag), "{k}");
+        assert!(kf.starts_with(&tag), "{kf}");
+        assert_ne!(k, kf);
     }
 
     #[test]

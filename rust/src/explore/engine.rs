@@ -249,7 +249,9 @@ impl Explorer {
     /// from the point's content hash), with an explicit output-FIFO depth
     /// and stall patterns on both AXI endpoints. The default flow
     /// (`DEFAULT_FIFO_DEPTH`, no stalls) shares cache entries with
-    /// `evaluate_points`' simulations.
+    /// `evaluate_points`' simulations. Both key shapes embed
+    /// [`sim::SIM_KERNEL_VERSION`](crate::sim::SIM_KERNEL_VERSION), so a
+    /// simulation-kernel change invalidates on-disk entries wholesale.
     pub fn simulate_point(
         &self,
         p: &ValidatedParams,

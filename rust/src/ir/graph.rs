@@ -145,7 +145,9 @@ mod tests {
         g.push("fc0", Op::MatMul { weights: Matrix::zeros(4, 8) });
         g.push(
             "act0",
-            Op::MultiThreshold { thresholds: Thresholds::from_rows(&vec![vec![0, 1, 2]; 4]).unwrap() },
+            Op::MultiThreshold {
+                thresholds: Thresholds::from_rows(&vec![vec![0, 1, 2]; 4]).unwrap(),
+            },
         );
         g.push("fc1", Op::MatMul { weights: Matrix::zeros(2, 4) });
         g

@@ -8,10 +8,12 @@
 //!   (`python/compile/kernels/`), AOT-lowered to HLO text;
 //! * **L2** — a FINN-style quantized network author in JAX
 //!   (`python/compile/model.py`), including the paper's NID MLP;
-//! * **L3** — this crate: a cycle-accurate RTL simulator of the MVU, an
-//!   HLS behavioral model, a 7-series resource/timing estimator, a
-//!   FINN-like compiler (IR + passes), and a streaming dataflow runtime
-//!   that executes the AOT artifacts via the PJRT C API.
+//! * **L3** — this crate: a cycle-accurate RTL simulator of the MVU (two
+//!   kernels: a per-cycle oracle and a batched interval-skipping fast
+//!   path, bit-identical by property test — DESIGN.md §Two-kernel
+//!   simulator), an HLS behavioral model, a 7-series resource/timing
+//!   estimator, a FINN-like compiler (IR + passes), and a streaming
+//!   dataflow runtime that executes the AOT artifacts via the PJRT C API.
 //!
 //! The public API is two layers (see DESIGN.md §API):
 //!

@@ -69,7 +69,12 @@ pub fn analyze(g: &Graph) -> Result<ModelReport> {
         });
     }
     let fps = if bottleneck > 0 { 1e9 / (max_delay * bottleneck as f64) } else { 0.0 };
-    Ok(ModelReport { layers, bottleneck_cycles: bottleneck, total_luts_rtl: total_luts, throughput_fps: fps })
+    Ok(ModelReport {
+        layers,
+        bottleneck_cycles: bottleneck,
+        total_luts_rtl: total_luts,
+        throughput_fps: fps,
+    })
 }
 
 #[cfg(test)]

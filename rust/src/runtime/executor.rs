@@ -20,7 +20,12 @@ impl LoadedKernel {
     pub fn run(&self, input: &[i32]) -> Result<Vec<i32>> {
         let want: usize = self.info.in_shape.iter().product();
         if input.len() != want {
-            bail!("{}: input length {} != shape {:?}", self.info.name, input.len(), self.info.in_shape);
+            bail!(
+                "{}: input length {} != shape {:?}",
+                self.info.name,
+                input.len(),
+                self.info.in_shape
+            );
         }
         let dims: Vec<i64> = self.info.in_shape.iter().map(|&d| d as i64).collect();
         let lit = xla::Literal::vec1(input).reshape(&dims)?;
@@ -30,7 +35,12 @@ impl LoadedKernel {
         let values = out.to_vec::<i32>()?;
         let want_out: usize = self.info.out_shape.iter().product();
         if values.len() != want_out {
-            bail!("{}: output length {} != shape {:?}", self.info.name, values.len(), self.info.out_shape);
+            bail!(
+                "{}: output length {} != shape {:?}",
+                self.info.name,
+                values.len(),
+                self.info.out_shape
+            );
         }
         Ok(values)
     }

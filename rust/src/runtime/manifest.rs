@@ -88,7 +88,9 @@ impl Manifest {
     /// Load `manifest.json` from an artifacts directory.
     pub fn load(dir: &Path) -> Result<Manifest> {
         let text = std::fs::read_to_string(dir.join("manifest.json"))
-            .with_context(|| format!("reading {}/manifest.json (run `make artifacts`)", dir.display()))?;
+            .with_context(|| {
+                format!("reading {}/manifest.json (run `make artifacts`)", dir.display())
+            })?;
         let j = Json::parse(&text).context("parsing manifest.json")?;
         let batch_sizes = j
             .get("batch_sizes")
@@ -107,7 +109,11 @@ impl Manifest {
                     .map(|v| v.as_usize().context("dim"))
                     .collect()
             };
-            let layer = if a.get("layer").is_null() { None } else { Some(parse_layer(a.get("layer"))?) };
+            let layer = if a.get("layer").is_null() {
+                None
+            } else {
+                Some(parse_layer(a.get("layer"))?)
+            };
             artifacts.push(ArtifactInfo {
                 name: a.get("name").as_str().context("name")?.to_string(),
                 path: dir.join(a.get("path").as_str().context("path")?),

@@ -55,6 +55,79 @@ impl StallPattern {
             _ => Pcg32::new(0),
         }
     }
+
+    /// True when the pattern draws from a PRNG: its stall decisions depend
+    /// on the number of `stalled` calls, not the cycle index, so a
+    /// cycle-skipping driver must still consult it once per modelled cycle
+    /// to keep the stream bit-identical.
+    pub fn is_random(&self) -> bool {
+        matches!(self, StallPattern::Random { .. })
+    }
+
+    /// Smallest cycle `c >= from` at which this pattern is not stalled, or
+    /// `None` if it never clears again (e.g. `Periodic` with
+    /// `duty >= period`). Addressable-by-cycle patterns only — panics on
+    /// [`StallPattern::Random`]; gate on [`is_random`](Self::is_random).
+    pub fn next_clear(&self, from: usize) -> Option<usize> {
+        match self {
+            StallPattern::None => Some(from),
+            StallPattern::Periodic { period, duty, phase } => {
+                if *period == 0 || *duty == 0 {
+                    return Some(from);
+                }
+                if *duty >= *period {
+                    return None;
+                }
+                let r = (from + phase) % period;
+                Some(if r >= *duty { from } else { from + (duty - r) })
+            }
+            StallPattern::Random { .. } => {
+                unreachable!("next_clear is undefined for Random stall patterns")
+            }
+            StallPattern::Schedule(s) => {
+                if s.is_empty() {
+                    return Some(from);
+                }
+                (from..from + s.len()).find(|c| !s[c % s.len()])
+            }
+        }
+    }
+
+    /// Number of non-stalled cycles of this pattern in `[from, to)`.
+    /// Addressable-by-cycle patterns only — panics on
+    /// [`StallPattern::Random`]; gate on [`is_random`](Self::is_random).
+    pub fn clear_count(&self, from: usize, to: usize) -> usize {
+        debug_assert!(from <= to);
+        match self {
+            StallPattern::None => to - from,
+            StallPattern::Periodic { period, duty, phase } => {
+                if *period == 0 || *duty == 0 {
+                    return to - from;
+                }
+                // stalled cycles in [0, n) are f(n + phase) - f(phase) with
+                // f(m) = (m/period)*min(duty, period) + min(m%period, duty);
+                // the f(phase) term cancels in the difference below.
+                let stalled_before = |n: usize| -> usize {
+                    let m = n + phase;
+                    (m / period) * (*duty).min(*period) + (m % period).min(*duty)
+                };
+                (to - from) - (stalled_before(to) - stalled_before(from))
+            }
+            StallPattern::Random { .. } => {
+                unreachable!("clear_count is undefined for Random stall patterns")
+            }
+            StallPattern::Schedule(s) => {
+                if s.is_empty() {
+                    return to - from;
+                }
+                let per_round: usize = s.iter().filter(|&&b| b).count();
+                let stalled_before = |n: usize| -> usize {
+                    (n / s.len()) * per_round + s[..n % s.len()].iter().filter(|&&b| b).count()
+                };
+                (to - from) - (stalled_before(to) - stalled_before(from))
+            }
+        }
+    }
 }
 
 /// Stream master: feeds a pre-computed sequence of words, honoring TREADY
@@ -185,6 +258,45 @@ mod tests {
         assert!(p.stalled(0, &mut rng));
         assert!(!p.stalled(1, &mut rng));
         assert!(p.stalled(2, &mut rng));
+    }
+
+    #[test]
+    fn next_clear_and_clear_count_match_per_cycle_evaluation() {
+        let patterns = [
+            StallPattern::None,
+            StallPattern::Periodic { period: 4, duty: 1, phase: 0 },
+            StallPattern::Periodic { period: 5, duty: 3, phase: 2 },
+            StallPattern::Periodic { period: 3, duty: 0, phase: 1 },
+            StallPattern::Periodic { period: 0, duty: 2, phase: 0 },
+            StallPattern::Schedule(vec![]),
+            StallPattern::Schedule(vec![true, true, false, true]),
+            StallPattern::Schedule(vec![false]),
+        ];
+        for p in &patterns {
+            let mut rng = Pcg32::new(0);
+            let trace: Vec<bool> = (0..64).map(|c| p.stalled(c, &mut rng)).collect();
+            for from in 0..32 {
+                let brute = (from..64).find(|&c| !trace[c]);
+                // all test patterns clear within their period, well inside 64
+                assert_eq!(p.next_clear(from), brute, "{p:?} from {from}");
+                for to in from..32 {
+                    let brute_n = trace[from..to].iter().filter(|&&b| !b).count();
+                    assert_eq!(p.clear_count(from, to), brute_n, "{p:?} [{from},{to})");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn next_clear_reports_never_ready_patterns() {
+        let always = StallPattern::Periodic { period: 3, duty: 3, phase: 0 };
+        assert_eq!(always.next_clear(7), None);
+        assert_eq!(always.clear_count(0, 30), 0);
+        let sched = StallPattern::Schedule(vec![true, true]);
+        assert_eq!(sched.next_clear(1), None);
+        assert_eq!(sched.clear_count(3, 9), 0);
+        assert!(StallPattern::Random { seed: 1, p_num: 10 }.is_random());
+        assert!(!always.is_random());
     }
 
     #[test]

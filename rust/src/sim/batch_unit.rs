@@ -58,6 +58,26 @@ impl MvuBatch {
         self.stream.drained()
     }
 
+    /// See [`MvuStream::output_blocked`].
+    pub fn output_blocked(&self) -> bool {
+        self.stream.output_blocked()
+    }
+
+    /// See [`MvuStream::quiescent_without_input`].
+    pub fn quiescent_without_input(&self) -> bool {
+        self.stream.quiescent_without_input()
+    }
+
+    /// See [`MvuStream::skip_blocked_cycles`].
+    pub fn skip_blocked_cycles(&mut self, n: usize) {
+        self.stream.skip_blocked_cycles(n);
+    }
+
+    /// See [`MvuStream::skip_idle_cycles`].
+    pub fn skip_idle_cycles(&mut self, n: usize) {
+        self.stream.skip_idle_cycles(n);
+    }
+
     /// One clock cycle: forward the AXI input offer and output readiness.
     pub fn step(&mut self, offered: Option<&[i32]>, out_ready: bool) -> StepOut {
         self.stream.step(offered, &self.wmem, out_ready)

@@ -17,7 +17,7 @@ use crate::quant::{Matrix, Thresholds};
 use super::batch_unit::MvuBatch;
 
 /// A stream-width converter: buffers lanes and re-chunks them.
-#[derive(Debug, Default)]
+#[derive(Debug)]
 struct WidthConverter {
     buf: std::collections::VecDeque<i32>,
     out_width: usize,
@@ -26,6 +26,7 @@ struct WidthConverter {
 
 impl WidthConverter {
     fn new(out_width: usize, capacity_words: usize) -> WidthConverter {
+        debug_assert!(out_width > 0);
         WidthConverter {
             buf: std::collections::VecDeque::new(),
             out_width,
@@ -42,9 +43,16 @@ impl WidthConverter {
         self.buf.extend(word.iter().copied());
     }
 
-    fn peek(&self) -> Option<Vec<i32>> {
-        (self.buf.len() >= self.out_width)
-            .then(|| self.buf.iter().take(self.out_width).copied().collect())
+    /// Copy the front word into `out` if a full word is buffered. The
+    /// caller owns the scratch buffer, so the per-cycle offer path
+    /// allocates nothing (§Perf: this runs once per stage per cycle).
+    fn peek_into(&self, out: &mut Vec<i32>) -> bool {
+        if self.buf.len() < self.out_width {
+            return false;
+        }
+        out.clear();
+        out.extend(self.buf.iter().take(self.out_width).copied());
+        true
     }
 
     fn pop(&mut self) {
@@ -114,39 +122,41 @@ impl MvuChain {
                 );
             }
         }
-        let mut stages = Vec::new();
-        let mut params = Vec::new();
+        // converter widths first (stage i re-chunks to stage i+1's SIMD
+        // width; the last stage re-chunks to the full output vector), so
+        // each stage is built fully wired.
         let n = layers.len();
+        let widths: Vec<usize> = (0..n)
+            .map(|i| {
+                if i + 1 < n {
+                    layers[i + 1].0.simd
+                } else {
+                    layers[i].0.matrix_rows()
+                }
+            })
+            .collect();
+        let mut stages = Vec::with_capacity(n);
+        let mut params = Vec::with_capacity(n);
         for (i, (p, w, th)) in layers.into_iter().enumerate() {
             if let Some(t) = &th {
                 if t.channels != p.matrix_rows() {
-                    bail!("{}: thresholds for {} channels, MVU has {}", p.name, t.channels, p.matrix_rows());
+                    bail!(
+                        "{}: thresholds for {} channels, MVU has {}",
+                        p.name,
+                        t.channels,
+                        p.matrix_rows()
+                    );
                 }
             }
-            // the converter feeds the NEXT layer's SIMD width; the last
-            // stage re-chunks to the full output vector.
-            let out_width = p.matrix_rows().min(usize::MAX);
-            let _ = out_width;
+            // capacity: a couple of full vectors of slack
+            let cap_words = 2 * p.matrix_rows().div_ceil(widths[i]).max(2);
             stages.push(Stage {
                 mvu: MvuBatch::new(&p, &w)?,
                 thresholds: th,
-                conv: WidthConverter::new(0, 0), // fixed up below
+                conv: WidthConverter::new(widths[i], cap_words),
                 nf_cursor: 0,
             });
             params.push(p.into_inner());
-            let _ = i;
-            let _ = n;
-        }
-        // wire converters: stage i feeds stage i+1's SIMD width
-        for i in 0..stages.len() {
-            let out_width = if i + 1 < stages.len() {
-                params[i + 1].simd
-            } else {
-                params[i].matrix_rows()
-            };
-            // capacity: a couple of full vectors of slack
-            let cap_words = 2 * params[i].matrix_rows().div_ceil(out_width).max(2);
-            stages[i].conv = WidthConverter::new(out_width, cap_words);
         }
         Ok(MvuChain { stages, params })
     }
@@ -168,6 +178,9 @@ impl MvuChain {
         let mut first_out_cycle = None;
         let mut cycle = 0usize;
         let max_cycles = 1_000_000usize + expected * 100_000;
+        // per-cycle scratch for stream words crossing stage boundaries —
+        // no allocation on the steady-state path (§Perf).
+        let mut word_buf: Vec<i32> = Vec::new();
 
         while outputs.len() < expected {
             if cycle > max_cycles {
@@ -178,16 +191,30 @@ impl MvuChain {
             // (classic reverse-order pipeline update).
             for i in (0..self.stages.len()).rev() {
                 // input offer for stage i
-                let offered: Option<Vec<i32>> = if i == 0 {
-                    (fed < in_words.len()).then(|| in_words[fed].clone())
+                let has_offer = if i == 0 {
+                    if fed < in_words.len() {
+                        word_buf.clear();
+                        word_buf.extend_from_slice(&in_words[fed]);
+                        true
+                    } else {
+                        false
+                    }
                 } else {
-                    self.stages[i - 1].conv.peek()
+                    self.stages[i - 1].conv.peek_into(&mut word_buf)
                 };
+                if !has_offer && self.stages[i].mvu.quiescent_without_input() {
+                    // quiescent interval for this stage: nothing offered
+                    // and nothing in flight, so a full step would only
+                    // advance the cycle counters — apply that directly.
+                    self.stages[i].mvu.skip_idle_cycles(1);
+                    continue;
+                }
+                let offered = has_offer.then(|| word_buf.as_slice());
                 // downstream readiness for stage i: the width converter
                 // must be able to absorb one output word (PE lanes).
                 let lanes = self.params[i].pe;
                 let ready = self.stages[i].conv.can_accept(lanes);
-                let r = self.stages[i].mvu.step(offered.as_deref(), ready);
+                let r = self.stages[i].mvu.step(offered, ready);
                 if r.consumed_input {
                     if i == 0 {
                         fed += 1;
@@ -213,9 +240,9 @@ impl MvuChain {
                 }
             }
             // drain the last stage's converter into full output vectors
-            while let Some(chunk) = self.stages[last].conv.peek() {
+            while self.stages[last].conv.peek_into(&mut word_buf) {
                 self.stages[last].conv.pop();
-                current.extend(chunk);
+                current.extend_from_slice(&word_buf);
                 if first_out_cycle.is_none() {
                     first_out_cycle = Some(cycle);
                 }

@@ -1,16 +1,21 @@
-//! Clocked test harness: drives an MVU with AXI stimulus and collects a
-//! cycle-accurate report.
+//! Public simulation entry points: drive an MVU with AXI stimulus and
+//! collect a cycle-accurate report.
+//!
+//! Since the two-kernel split (DESIGN.md §Two-kernel simulator) these
+//! functions dispatch to the batched kernel in [`fast`](super::fast);
+//! the original tick-by-tick driver lives on in
+//! [`reference`](super::reference) as the bit-identity oracle.
 
-use anyhow::{bail, Result};
+use anyhow::Result;
 
 use crate::cfg::ValidatedParams;
 use crate::quant::Matrix;
 
-use super::axis::{AxisSink, AxisSource, StallPattern};
-use super::batch_unit::MvuBatch;
+use super::axis::StallPattern;
 
-/// Outcome of a simulation run.
-#[derive(Debug, Clone)]
+/// Outcome of a simulation run. Equality is field-exact — the kernel
+/// identity tests compare whole reports.
+#[derive(Debug, Clone, PartialEq, Eq)]
 pub struct SimReport {
     /// Output vectors (one per input vector, OC channels each).
     pub outputs: Vec<Vec<i32>>,
@@ -54,7 +59,9 @@ pub fn run_mvu_stalled(
 }
 
 /// Full-control variant: stall patterns plus an explicit output-FIFO depth
-/// (the §5.3.2 decoupling ablation).
+/// (the §5.3.2 decoupling ablation). Dispatches to the batched kernel
+/// ([`fast`](super::fast)); `sim::reference::run_mvu_fifo` is the
+/// tick-by-tick oracle it is tested against.
 pub fn run_mvu_fifo(
     params: &ValidatedParams,
     weights: &Matrix,
@@ -63,67 +70,7 @@ pub fn run_mvu_fifo(
     out_stall: StallPattern,
     fifo_depth: usize,
 ) -> Result<SimReport> {
-    let mut mvu = MvuBatch::with_fifo_depth(params, weights, fifo_depth)?;
-    let words: Vec<Vec<i32>> = vectors
-        .iter()
-        .flat_map(|v| MvuBatch::vector_to_words(params, v))
-        .collect();
-    let mut source = AxisSource::new(words, in_stall);
-    let mut sink = AxisSink::new(out_stall);
-
-    let expected_words = vectors.len() * params.neuron_fold();
-    // generous deadlock bound: ideal cycles x 16 + constant slack
-    let max_cycles = params
-        .analytic_cycles(super::PIPELINE_STAGES)
-        .saturating_mul(vectors.len().max(1))
-        .saturating_mul(16)
-        + 4096;
-
-    let mut last_out_cycle = 0usize;
-    let mut cycle = 0usize;
-    while sink.received.len() < expected_words {
-        if cycle > max_cycles {
-            bail!(
-                "simulation deadlock: {}/{} output words after {} cycles",
-                sink.received.len(),
-                expected_words,
-                cycle
-            );
-        }
-        let has_offer = !source.exhausted() && !source.stalled_now(cycle);
-        let ready = sink.ready(cycle);
-        let offered: Option<&[i32]> = has_offer.then(|| source.peek());
-        let r = mvu.step(offered, ready);
-        if r.consumed_input {
-            source.accept();
-        } else if has_offer {
-            source.note_backpressure();
-        }
-        if let Some(word) = r.emitted {
-            sink.push(word, cycle);
-            last_out_cycle = cycle;
-        }
-        cycle += 1;
-    }
-    if !mvu.drained() {
-        bail!("simulation finished with data still in flight");
-    }
-
-    let nf = params.neuron_fold();
-    let outputs: Vec<Vec<i32>> = sink
-        .received
-        .chunks(nf)
-        .map(|chunk| MvuBatch::words_to_vector(params, chunk))
-        .collect();
-    let stats = mvu.stats();
-    Ok(SimReport {
-        outputs,
-        exec_cycles: last_out_cycle + 1,
-        stall_cycles: stats.stall_cycles,
-        source_backpressure_cycles: source.backpressure_cycles,
-        slots_consumed: stats.slots_consumed,
-        fifo_max_occupancy: mvu.fifo_max_occupancy(),
-    })
+    super::fast::run_mvu_fifo(params, weights, vectors, in_stall, out_stall, fifo_depth)
 }
 
 #[cfg(test)]

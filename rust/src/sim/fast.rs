@@ -1,0 +1,360 @@
+//! The batched / interval-skipping simulation kernel.
+//!
+//! This is the production kernel behind [`run_mvu*`](super::run_mvu): it
+//! produces reports bit-identical to the per-cycle oracle in
+//! [`reference`](super::reference) — asserted over the full Table 2 grid
+//! and under random stall patterns by `tests/kernel_identity.rs` — while
+//! advancing the clock in jumps wherever the machine is provably inert:
+//!
+//!   * **ideal flow** (no stall pattern on either endpoint): every cycle
+//!     consumes exactly one compute slot, so the whole run collapses into
+//!     closed-form cycle accounting plus one flat fold-block dot product
+//!     per output channel ([`pe_row`](super::simd_elem::pe_row)) — no FSM
+//!     dispatch, FIFO traffic or delay-line shifting at all. This is the
+//!     flow every figure/table sweep and the explore engine drive, and
+//!     where the >= 10x `hotpath` win comes from;
+//!   * **output-blocked intervals** (a result parked in the last pipeline
+//!     stage, FIFO full, sink stalled): the datapath is frozen (§5.3.2),
+//!     so the kernel jumps straight to the sink's next ready cycle and
+//!     applies the cycle/stall/backpressure counters in closed form
+//!     ([`StallPattern::next_clear`]/[`StallPattern::clear_count`]);
+//!   * **input-starved intervals** (machine drained and idle, source
+//!     stalled): idle cycles are skipped the same way.
+//!
+//! `Random` stall patterns draw one PRNG value per modelled cycle, so for
+//! them the skips degrade to a tight draw loop — no machine stepping, but
+//! one `stalled`/`ready` evaluation per cycle — keeping the PRNG streams,
+//! and therefore the reports, bit-identical to the reference. Cycles where
+//! real work happens are executed through the same [`MvuBatch::step`] the
+//! oracle uses, so the two kernels cannot drift on the hard cases.
+
+use anyhow::{bail, Result};
+
+use crate::cfg::ValidatedParams;
+use crate::quant::Matrix;
+
+use super::axis::{AxisSink, AxisSource, StallPattern};
+use super::batch_unit::MvuBatch;
+use super::clock::SimReport;
+use super::fifo;
+use super::simd_elem::pe_row;
+use super::PIPELINE_STAGES;
+
+/// Batched-kernel run: stall patterns plus an explicit output-FIFO depth.
+/// Entry point behind [`super::run_mvu_fifo`].
+pub fn run_mvu_fifo(
+    params: &ValidatedParams,
+    weights: &Matrix,
+    vectors: &[Vec<i32>],
+    in_stall: StallPattern,
+    out_stall: StallPattern,
+    fifo_depth: usize,
+) -> Result<SimReport> {
+    if matches!(in_stall, StallPattern::None) && matches!(out_stall, StallPattern::None) {
+        run_ideal(params, weights, vectors, fifo_depth)
+    } else {
+        run_skipping(params, weights, vectors, in_stall, out_stall, fifo_depth)
+    }
+}
+
+/// Ideal flow (always-valid source, always-ready sink): the machine
+/// consumes one compute slot per cycle from cycle 0 with no stall ever
+/// possible — the sink pops before the pipeline pushes, so the FIFO
+/// occupancy never exceeds one word and `output_blocked` is unreachable
+/// for any depth >= 1. Every [`SimReport`] field therefore has a closed
+/// form, and the numerics reduce to one fold-block dot product per output
+/// channel (bit-identical to slot-wise accumulation: wrapping addition is
+/// associative).
+fn run_ideal(
+    params: &ValidatedParams,
+    weights: &Matrix,
+    vectors: &[Vec<i32>],
+    fifo_depth: usize,
+) -> Result<SimReport> {
+    // same failure order as the oracle: weight shape (WeightMem), then
+    // FIFO depth (MvuStream).
+    if weights.rows != params.matrix_rows() || weights.cols != params.matrix_cols() {
+        bail!(
+            "weight matrix {}x{} does not match params {}x{}",
+            weights.rows,
+            weights.cols,
+            params.matrix_rows(),
+            params.matrix_cols()
+        );
+    }
+    fifo::ensure_depth(fifo_depth)?;
+
+    let n = vectors.len();
+    let rows = params.matrix_rows();
+    let ty = params.simd_type;
+    let mut outputs = Vec::with_capacity(n);
+    for v in vectors {
+        assert_eq!(v.len(), params.matrix_cols());
+        // output stream words are neuron-fold major and each word carries
+        // PE consecutive rows, so the reassembled vector is exactly row
+        // order 0..rows.
+        let mut out = Vec::with_capacity(rows);
+        for r in 0..rows {
+            out.push(pe_row(v, weights.row(r), ty));
+        }
+        outputs.push(out);
+    }
+
+    let sf = params.synapse_fold();
+    let nf = params.neuron_fold();
+    let slots = sf * nf * n;
+    Ok(SimReport {
+        outputs,
+        // the last output word is accepted at cycle slots + PIPELINE_STAGES;
+        // with zero vectors the oracle's `last_out_cycle` stays 0.
+        exec_cycles: if n == 0 { 1 } else { slots + PIPELINE_STAGES + 1 },
+        stall_cycles: 0,
+        // during each inter-vector READ phase ((NF-1)*SF cycles) the
+        // always-valid source offers the next vector's first word without
+        // it being accepted; the final vector's READ phase sees an
+        // exhausted source.
+        source_backpressure_cycles: if n == 0 { 0 } else { (n - 1) * (nf - 1) * sf },
+        slots_consumed: slots,
+        // one push per output word, each popped the following cycle.
+        fifo_max_occupancy: if n == 0 { 0 } else { 1 },
+    })
+}
+
+/// General flow: the oracle's cycle loop with quiescent intervals skipped.
+/// Cycles that do work run through the same machine as the reference;
+/// cycles that provably cannot change machine state are applied in bulk.
+fn run_skipping(
+    params: &ValidatedParams,
+    weights: &Matrix,
+    vectors: &[Vec<i32>],
+    in_stall: StallPattern,
+    out_stall: StallPattern,
+    fifo_depth: usize,
+) -> Result<SimReport> {
+    let mut mvu = MvuBatch::with_fifo_depth(params, weights, fifo_depth)?;
+    let words: Vec<Vec<i32>> = vectors
+        .iter()
+        .flat_map(|v| MvuBatch::vector_to_words(params, v))
+        .collect();
+    let mut source = AxisSource::new(words, in_stall.clone());
+    let mut sink = AxisSink::new(out_stall.clone());
+    // deterministic patterns are pure functions of the cycle index, so the
+    // clock can jump over them; Random ones must be drawn every cycle.
+    let deterministic = !in_stall.is_random() && !out_stall.is_random();
+
+    let expected_words = vectors.len() * params.neuron_fold();
+    // generous deadlock bound: ideal cycles x 16 + constant slack (the
+    // same bound as the reference kernel, reached with the same counts).
+    let max_cycles = params
+        .analytic_cycles(PIPELINE_STAGES)
+        .saturating_mul(vectors.len().max(1))
+        .saturating_mul(16)
+        + 4096;
+
+    let mut last_out_cycle = 0usize;
+    let mut cycle = 0usize;
+    while sink.received.len() < expected_words {
+        // Skip phase: advance `cycle` (and the counters / PRNG streams)
+        // past provably-inert cycles, then execute one real cycle. Each
+        // modelled cycle performs exactly one stall evaluation per
+        // endpoint, mirroring the reference loop.
+        let (has_offer, ready) = loop {
+            if cycle > max_cycles {
+                bail!(
+                    "simulation deadlock: {}/{} output words after {} cycles",
+                    sink.received.len(),
+                    expected_words,
+                    cycle
+                );
+            }
+            let blocked = mvu.output_blocked();
+            let starved = !blocked && mvu.quiescent_without_input();
+            if deterministic {
+                if blocked {
+                    // frozen until the sink pops: jump to its next ready
+                    // cycle (or to the deadlock bound if it never clears).
+                    let Some(t) = out_stall.next_clear(cycle) else {
+                        cycle = max_cycles + 1;
+                        continue;
+                    };
+                    if t > max_cycles {
+                        cycle = max_cycles + 1;
+                        continue;
+                    }
+                    if t > cycle {
+                        if !source.exhausted() {
+                            // cycles where TVALID was high but nothing
+                            // could be accepted
+                            source.backpressure_cycles += in_stall.clear_count(cycle, t);
+                        }
+                        mvu.skip_blocked_cycles(t - cycle);
+                        cycle = t;
+                    }
+                    break (!source.exhausted() && !source.stalled_now(cycle), true);
+                }
+                if starved {
+                    if source.exhausted() {
+                        // nothing in flight and no input will ever arrive:
+                        // run straight into the deadlock bound, like the
+                        // oracle spinning idle cycles.
+                        cycle = max_cycles + 1;
+                        continue;
+                    }
+                    let Some(t) = in_stall.next_clear(cycle) else {
+                        cycle = max_cycles + 1;
+                        continue;
+                    };
+                    if t > max_cycles {
+                        cycle = max_cycles + 1;
+                        continue;
+                    }
+                    if t > cycle {
+                        mvu.skip_idle_cycles(t - cycle);
+                        cycle = t;
+                    }
+                    break (true, sink.ready(cycle));
+                }
+                break (!source.exhausted() && !source.stalled_now(cycle), sink.ready(cycle));
+            } else {
+                let has_offer = !source.exhausted() && !source.stalled_now(cycle);
+                let ready = sink.ready(cycle);
+                if blocked && !ready {
+                    mvu.skip_blocked_cycles(1);
+                    if has_offer {
+                        source.backpressure_cycles += 1;
+                    }
+                    cycle += 1;
+                    continue;
+                }
+                if starved && !has_offer {
+                    mvu.skip_idle_cycles(1);
+                    cycle += 1;
+                    continue;
+                }
+                break (has_offer, ready);
+            }
+        };
+
+        // the executed cycle — identical to the reference loop body
+        let offered: Option<&[i32]> = has_offer.then(|| source.peek());
+        let r = mvu.step(offered, ready);
+        if r.consumed_input {
+            source.accept();
+        } else if has_offer {
+            source.note_backpressure();
+        }
+        if let Some(word) = r.emitted {
+            sink.push(word, cycle);
+            last_out_cycle = cycle;
+        }
+        cycle += 1;
+    }
+    if !mvu.drained() {
+        bail!("simulation finished with data still in flight");
+    }
+
+    let nf = params.neuron_fold();
+    let outputs: Vec<Vec<i32>> = sink
+        .received
+        .chunks(nf)
+        .map(|chunk| MvuBatch::words_to_vector(params, chunk))
+        .collect();
+    let stats = mvu.stats();
+    Ok(SimReport {
+        outputs,
+        exec_cycles: last_out_cycle + 1,
+        stall_cycles: stats.stall_cycles,
+        source_backpressure_cycles: source.backpressure_cycles,
+        slots_consumed: stats.slots_consumed,
+        fifo_max_occupancy: mvu.fifo_max_occupancy(),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cfg::DesignPoint;
+    use crate::sim::reference;
+    use crate::util::rng::Pcg32;
+
+    fn point(in_f: usize, out_f: usize, pe: usize, simd: usize) -> ValidatedParams {
+        DesignPoint::fc("fast")
+            .in_features(in_f)
+            .out_features(out_f)
+            .pe(pe)
+            .simd(simd)
+            .build()
+            .unwrap()
+    }
+
+    fn stimulus(p: &ValidatedParams, n: usize, seed: u64) -> (Matrix, Vec<Vec<i32>>) {
+        let mut rng = Pcg32::new(seed);
+        let (r, c) = (p.matrix_rows(), p.matrix_cols());
+        let w = Matrix::new(r, c, (0..r * c).map(|_| rng.next_range(8) as i32 - 4).collect())
+            .unwrap();
+        let vecs = (0..n)
+            .map(|_| (0..c).map(|_| rng.next_range(8) as i32 - 4).collect())
+            .collect();
+        (w, vecs)
+    }
+
+    #[test]
+    fn ideal_path_is_bit_identical_to_reference() {
+        for (pe, simd, n) in [(1, 1, 1), (2, 4, 3), (8, 16, 2), (4, 2, 0)] {
+            let p = point(16, 8, pe, simd);
+            let (w, vecs) = stimulus(&p, n, 7 + n as u64);
+            let fast = run_mvu_fifo(
+                &p,
+                &w,
+                &vecs,
+                StallPattern::None,
+                StallPattern::None,
+                super::super::DEFAULT_FIFO_DEPTH,
+            )
+            .unwrap();
+            let oracle = reference::run_mvu(&p, &w, &vecs).unwrap();
+            assert_eq!(fast, oracle, "pe={pe} simd={simd} n={n}");
+        }
+    }
+
+    #[test]
+    fn skipping_path_is_bit_identical_under_periodic_stalls() {
+        let p = point(16, 8, 2, 4);
+        let (w, vecs) = stimulus(&p, 4, 11);
+        let in_s = StallPattern::Periodic { period: 5, duty: 2, phase: 1 };
+        let out_s = StallPattern::Periodic { period: 7, duty: 5, phase: 3 };
+        for depth in [1usize, 2, 4] {
+            let fast =
+                run_mvu_fifo(&p, &w, &vecs, in_s.clone(), out_s.clone(), depth).unwrap();
+            let oracle =
+                reference::run_mvu_fifo(&p, &w, &vecs, in_s.clone(), out_s.clone(), depth)
+                    .unwrap();
+            assert_eq!(fast, oracle, "depth={depth}");
+        }
+    }
+
+    #[test]
+    fn skipping_path_is_bit_identical_under_random_stalls() {
+        let p = point(24, 6, 3, 4);
+        let (w, vecs) = stimulus(&p, 3, 13);
+        let in_s = StallPattern::Random { seed: 41, p_num: 120 };
+        let out_s = StallPattern::Random { seed: 42, p_num: 160 };
+        let fast = run_mvu_fifo(&p, &w, &vecs, in_s.clone(), out_s.clone(), 2).unwrap();
+        let oracle =
+            reference::run_mvu_fifo(&p, &w, &vecs, in_s.clone(), out_s.clone(), 2).unwrap();
+        assert_eq!(fast, oracle);
+    }
+
+    #[test]
+    fn never_ready_sink_deadlocks_like_reference() {
+        let p = point(8, 4, 2, 4);
+        let (w, vecs) = stimulus(&p, 1, 17);
+        let dead = StallPattern::Periodic { period: 1, duty: 1, phase: 0 };
+        let fast = run_mvu_fifo(&p, &w, &vecs, StallPattern::None, dead.clone(), 2);
+        let oracle =
+            reference::run_mvu_fifo(&p, &w, &vecs, StallPattern::None, dead, 2);
+        let (ef, eo) = (fast.unwrap_err(), oracle.unwrap_err());
+        assert_eq!(ef.to_string(), eo.to_string());
+        assert!(ef.to_string().contains("deadlock"));
+    }
+}

@@ -6,6 +6,16 @@
 
 use std::collections::VecDeque;
 
+/// Validate a FIFO capacity before construction. Depth 0 is an API error
+/// ([`Fifo::new`] would panic): every sim entry point funnels through this
+/// check so a bad [`SimOptions::fifo_depth`](crate::eval::SimOptions)
+/// surfaces as a structured `Result`, never a panic — regression-tested in
+/// `tests/sim_properties.rs`.
+pub fn ensure_depth(depth: usize) -> anyhow::Result<()> {
+    anyhow::ensure!(depth > 0, "output FIFO depth must be at least 1 (got 0)");
+    Ok(())
+}
+
 /// Bounded FIFO with occupancy tracking.
 #[derive(Debug, Clone)]
 pub struct Fifo<T> {
@@ -81,5 +91,26 @@ mod tests {
         let mut f = Fifo::new(1);
         f.push(1);
         f.push(2);
+    }
+
+    #[test]
+    fn depth_one_pop_then_push_same_cycle() {
+        // the machine's per-cycle order (§5.3.2): pop first, then push —
+        // so a depth-1 FIFO sustains one word per cycle at full.
+        let mut f = Fifo::new(1);
+        f.push(10);
+        for v in 11..20 {
+            assert!(f.is_full());
+            let got = f.pop().unwrap();
+            assert_eq!(got, v - 1);
+            f.push(v);
+        }
+        assert_eq!(f.max_occupancy, 1);
+    }
+
+    #[test]
+    fn ensure_depth_accepts_one_rejects_zero() {
+        assert!(ensure_depth(1).is_ok());
+        assert!(ensure_depth(0).unwrap_err().to_string().contains("FIFO depth"));
     }
 }

@@ -6,6 +6,13 @@
 //! remaining neuron folds (Fig. 3). The paper attributes the HLS LUT
 //! blow-up to the multiplexer network synthesized for exactly this
 //! buffer's access pattern.
+//!
+//! Stall behaviour: the write (`wr`) and replay (`rd`) pointers are
+//! advanced only by `write`/`read_next` and reset only by `restart` — a
+//! datapath stall that drops the FSM to IDLE mid-fill or mid-replay leaves
+//! both pointers untouched, so the resumed WRITE/READ continues exactly
+//! where it stopped (regression-tested at machine level in
+//! `tests/sim_properties.rs`).
 
 /// Circular-fill input buffer.
 #[derive(Debug, Clone)]

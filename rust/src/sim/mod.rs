@@ -8,18 +8,34 @@
 //!
 //! Control is cycle-accurate; the datapath is evaluated functionally at the
 //! cycle a compute slot is consumed, with a register-stage delay line
-//! modeling the pipeline latency. This keeps the simulator fast (DESIGN.md
-//! §Perf) while preserving exact cycle counts and exact numerics.
+//! modeling the pipeline latency.
+//!
+//! Two kernels implement these semantics (DESIGN.md §Two-kernel
+//! simulator):
+//!
+//!   * [`reference`] — the tick-by-tick oracle: one `step` per clock
+//!     cycle, every FSM/FIFO/delay-line event modelled explicitly;
+//!   * [`fast`] — the batched production kernel behind [`run_mvu`] /
+//!     [`run_mvu_stalled`] / [`run_mvu_fifo`]: quiescent intervals are
+//!     skipped in closed form and ideal-flow runs collapse to fold-block
+//!     dot products, bit-identical to the oracle (asserted by
+//!     `tests/kernel_identity.rs` over the Table 2 grid).
+//!
+//! Bump [`SIM_KERNEL_VERSION`] on any change that could alter a
+//! simulation report: it is part of every simulation cache key, so stale
+//! on-disk entries from an older kernel can never be served as current.
 
 pub mod axis;
 pub mod batch_unit;
 pub mod chain;
 pub mod clock;
+pub mod fast;
 pub mod fifo;
 pub mod fsm;
 pub mod hls;
 pub mod input_buffer;
 pub mod pe;
+pub mod reference;
 pub mod simd_elem;
 pub mod stream_unit;
 pub mod swu;
@@ -42,3 +58,11 @@ pub const PIPELINE_STAGES: usize = 4;
 
 /// Default output-FIFO depth (paper §5.3.2: "a small temporary FIFO").
 pub const DEFAULT_FIFO_DEPTH: usize = 4;
+
+/// Version of the simulation kernel semantics, included in every
+/// simulation cache key (`explore::cache`). Version 2 introduced the
+/// batched/interval-skipping kernel; although it is bit-identical to
+/// version 1's per-cycle kernel, keying the cache on the kernel version
+/// means a future kernel change can never be served stale results from a
+/// previous kernel's on-disk entries.
+pub const SIM_KERNEL_VERSION: u32 = 2;

@@ -23,7 +23,14 @@ impl Pe {
     /// Consume one compute slot. `first` resets the accumulator (start of
     /// a new output), `last` returns the finished dot product.
     #[inline]
-    pub fn slot(&mut self, x: &[i32], w: &[i32], ty: SimdType, first: bool, last: bool) -> Option<i32> {
+    pub fn slot(
+        &mut self,
+        x: &[i32],
+        w: &[i32],
+        ty: SimdType,
+        first: bool,
+        last: bool,
+    ) -> Option<i32> {
         let partial = pe_slot(x, w, ty);
         self.acc = if first { partial } else { self.acc.wrapping_add(partial) };
         last.then_some(self.acc)
@@ -46,6 +53,23 @@ mod tests {
         assert_eq!(pe.slot(&[3, 4], &[1, 1], SimdType::Standard, false, true), Some(10));
         // next output restarts cleanly
         assert_eq!(pe.slot(&[5, 5], &[2, 0], SimdType::Standard, true, true), Some(10));
+    }
+
+    #[test]
+    fn row_pass_equals_folded_slots() {
+        // the fast kernel (`sim::fast`) replaces SF accumulator-bracketed
+        // `slot` calls with one `pe_row` pass over the whole matrix row —
+        // bit-identical by associativity of wrapping addition.
+        use super::super::simd_elem::pe_row;
+        let x: Vec<i32> = (0..12).map(|i| i - 6).collect();
+        let w: Vec<i32> = (0..12).map(|i| (i % 5) - 2).collect();
+        let mut slotted = Pe::new();
+        let mut last = None;
+        for (s, (xc, wc)) in x.chunks(4).zip(w.chunks(4)).enumerate() {
+            last = slotted.slot(xc, wc, SimdType::Standard, s == 0, s == 2);
+        }
+        assert_eq!(pe_row(&x, &w, SimdType::Standard), last.unwrap());
+        assert_eq!(pe_row(&x, &w, SimdType::Standard), slotted.acc());
     }
 
     #[test]

@@ -1,0 +1,147 @@
+//! The per-cycle oracle kernel.
+//!
+//! This is the original tick-by-tick driver: one [`MvuBatch::step`] per
+//! clock cycle, every FSM transition, delay-line shift and FIFO operation
+//! modelled explicitly. It is kept verbatim as the semantic reference —
+//! the batched kernel in [`fast`](super::fast) (behind the public
+//! [`run_mvu*`](super::run_mvu) entry points) must reproduce its
+//! [`SimReport`]s bit-for-bit, which `tests/kernel_identity.rs` asserts
+//! over the full Table 2 grid and under random stall patterns.
+//!
+//! Use this module when auditing cycle-level behaviour or validating a
+//! kernel change; use the public entry points for throughput.
+
+use anyhow::{bail, Result};
+
+use crate::cfg::ValidatedParams;
+use crate::quant::Matrix;
+
+use super::axis::{AxisSink, AxisSource, StallPattern};
+use super::batch_unit::MvuBatch;
+use super::clock::SimReport;
+use super::{DEFAULT_FIFO_DEPTH, PIPELINE_STAGES};
+
+/// Reference run with ideal stimulus (always-valid source, always-ready
+/// sink). See [`super::run_mvu`] for the production entry point.
+pub fn run_mvu(
+    params: &ValidatedParams,
+    weights: &Matrix,
+    vectors: &[Vec<i32>],
+) -> Result<SimReport> {
+    run_mvu_stalled(params, weights, vectors, StallPattern::None, StallPattern::None)
+}
+
+/// Reference run with stall patterns on both AXI endpoints.
+pub fn run_mvu_stalled(
+    params: &ValidatedParams,
+    weights: &Matrix,
+    vectors: &[Vec<i32>],
+    in_stall: StallPattern,
+    out_stall: StallPattern,
+) -> Result<SimReport> {
+    run_mvu_fifo(params, weights, vectors, in_stall, out_stall, DEFAULT_FIFO_DEPTH)
+}
+
+/// Full-control reference run: stall patterns plus an explicit output-FIFO
+/// depth, simulated one clock cycle at a time.
+pub fn run_mvu_fifo(
+    params: &ValidatedParams,
+    weights: &Matrix,
+    vectors: &[Vec<i32>],
+    in_stall: StallPattern,
+    out_stall: StallPattern,
+    fifo_depth: usize,
+) -> Result<SimReport> {
+    let mut mvu = MvuBatch::with_fifo_depth(params, weights, fifo_depth)?;
+    let words: Vec<Vec<i32>> = vectors
+        .iter()
+        .flat_map(|v| MvuBatch::vector_to_words(params, v))
+        .collect();
+    let mut source = AxisSource::new(words, in_stall);
+    let mut sink = AxisSink::new(out_stall);
+
+    let expected_words = vectors.len() * params.neuron_fold();
+    // generous deadlock bound: ideal cycles x 16 + constant slack
+    let max_cycles = params
+        .analytic_cycles(PIPELINE_STAGES)
+        .saturating_mul(vectors.len().max(1))
+        .saturating_mul(16)
+        + 4096;
+
+    let mut last_out_cycle = 0usize;
+    let mut cycle = 0usize;
+    while sink.received.len() < expected_words {
+        if cycle > max_cycles {
+            bail!(
+                "simulation deadlock: {}/{} output words after {} cycles",
+                sink.received.len(),
+                expected_words,
+                cycle
+            );
+        }
+        let has_offer = !source.exhausted() && !source.stalled_now(cycle);
+        let ready = sink.ready(cycle);
+        let offered: Option<&[i32]> = has_offer.then(|| source.peek());
+        let r = mvu.step(offered, ready);
+        if r.consumed_input {
+            source.accept();
+        } else if has_offer {
+            source.note_backpressure();
+        }
+        if let Some(word) = r.emitted {
+            sink.push(word, cycle);
+            last_out_cycle = cycle;
+        }
+        cycle += 1;
+    }
+    if !mvu.drained() {
+        bail!("simulation finished with data still in flight");
+    }
+
+    let nf = params.neuron_fold();
+    let outputs: Vec<Vec<i32>> = sink
+        .received
+        .chunks(nf)
+        .map(|chunk| MvuBatch::words_to_vector(params, chunk))
+        .collect();
+    let stats = mvu.stats();
+    Ok(SimReport {
+        outputs,
+        exec_cycles: last_out_cycle + 1,
+        stall_cycles: stats.stall_cycles,
+        source_backpressure_cycles: source.backpressure_cycles,
+        slots_consumed: stats.slots_consumed,
+        fifo_max_occupancy: mvu.fifo_max_occupancy(),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cfg::DesignPoint;
+    use crate::quant::matvec;
+    use crate::util::rng::Pcg32;
+
+    #[test]
+    fn reference_matches_gemm_and_formula() {
+        let p = DesignPoint::fc("ref")
+            .in_features(16)
+            .out_features(8)
+            .pe(4)
+            .simd(8)
+            .build()
+            .unwrap();
+        let mut rng = Pcg32::new(3);
+        let w = Matrix::new(8, 16, (0..128).map(|_| rng.next_range(8) as i32 - 4).collect())
+            .unwrap();
+        let vecs: Vec<Vec<i32>> = (0..3)
+            .map(|_| (0..16).map(|_| rng.next_range(8) as i32 - 4).collect())
+            .collect();
+        let rep = run_mvu(&p, &w, &vecs).unwrap();
+        for (x, y) in vecs.iter().zip(&rep.outputs) {
+            assert_eq!(y, &matvec(x, &w, p.simd_type).unwrap());
+        }
+        let slots = p.synapse_fold() * p.neuron_fold() * 3;
+        assert_eq!(rep.exec_cycles, slots + PIPELINE_STAGES + 1);
+    }
+}

@@ -73,6 +73,26 @@ pub fn pe_slot(x: &[i32], w: &[i32], ty: SimdType) -> i32 {
     }
 }
 
+/// A whole weight-matrix row as one fold-block pass: bit-identical to the
+/// cycle kernel's slot-by-slot evaluation — [`pe_slot`] per `(nf, sf)`
+/// slot, `wrapping_add` across slots — because two's-complement wrapping
+/// addition is associative and commutative, so regrouping the lane sum is
+/// exact, not approximate. The fixed-width blocks break the sequential
+/// accumulator dependency so LLVM vectorizes across the former slot
+/// boundaries (§Perf: this is the fast kernel's inner loop).
+#[inline]
+pub fn pe_row(x: &[i32], w: &[i32], ty: SimdType) -> i32 {
+    debug_assert_eq!(x.len(), w.len());
+    const BLOCK: usize = 64;
+    let mut acc = 0i32;
+    let mut i = 0;
+    while i + BLOCK <= x.len() {
+        acc = acc.wrapping_add(pe_slot(&x[i..i + BLOCK], &w[i..i + BLOCK], ty));
+        i += BLOCK;
+    }
+    acc.wrapping_add(pe_slot(&x[i..], &w[i..], ty))
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -93,6 +113,46 @@ mod tests {
         assert_eq!(adder_tree(&lanes), lanes.iter().sum::<i32>());
         assert_eq!(adder_tree(&[]), 0);
         assert_eq!(adder_tree(&[42]), 42);
+    }
+
+    #[test]
+    fn pe_row_equals_slotwise_accumulation() {
+        use crate::util::rng::Pcg32;
+        let mut rng = Pcg32::new(42);
+        for ty in SimdType::ALL {
+            // lengths straddling the block size, including 0 and exact
+            // multiples
+            for n in [0usize, 1, 7, 63, 64, 65, 128, 200] {
+                let bit = matches!(ty, SimdType::Xnor | SimdType::BinaryWeights);
+                let x: Vec<i32> = (0..n)
+                    .map(|_| {
+                        if matches!(ty, SimdType::Xnor) {
+                            rng.next_range(2) as i32
+                        } else {
+                            rng.next_range(15) as i32 - 7
+                        }
+                    })
+                    .collect();
+                let w: Vec<i32> = (0..n)
+                    .map(|_| {
+                        if bit {
+                            rng.next_range(2) as i32
+                        } else {
+                            rng.next_range(15) as i32 - 7
+                        }
+                    })
+                    .collect();
+                // slot-wise oracle: arbitrary slot width 8 with remainder
+                let mut acc = 0i32;
+                let mut i = 0;
+                while i < n {
+                    let j = (i + 8).min(n);
+                    acc = acc.wrapping_add(pe_slot(&x[i..j], &w[i..j], ty));
+                    i = j;
+                }
+                assert_eq!(pe_row(&x, &w, ty), acc, "{ty} n={n}");
+            }
+        }
     }
 
     #[test]

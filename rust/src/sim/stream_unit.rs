@@ -81,6 +81,7 @@ impl MvuStream {
     }
 
     pub fn with_fifo_depth(params: &ValidatedParams, fifo_depth: usize) -> Result<MvuStream> {
+        super::fifo::ensure_depth(fifo_depth)?;
         Ok(MvuStream {
             fsm: MvuFsm::new(),
             buf: InputBuffer::new(params.input_buf_depth()),
@@ -111,6 +112,55 @@ impl MvuStream {
     /// Anything still in flight?
     pub fn drained(&self) -> bool {
         self.fifo.is_empty() && self.delay.iter().all(Option::is_none)
+    }
+
+    /// Buffered folds of the current vector remain to be replayed
+    /// (INP_BUF_FULL && !COMP_DONE, Fig. 7).
+    pub fn has_pending_folds(&self) -> bool {
+        self.buf.full() && !self.comp_done
+    }
+
+    /// A result sits in the last delay stage while the FIFO is full: unless
+    /// the sink pops a word this cycle, the whole datapath freezes
+    /// (§5.3.2). The fast kernel jumps over such intervals.
+    pub fn output_blocked(&self) -> bool {
+        self.delay[PIPELINE_STAGES - 1].is_some() && self.fifo.is_full()
+    }
+
+    /// Nothing in flight and nothing to do without new input: a [`step`]
+    /// with no offered word is provably a no-op apart from the cycle
+    /// counters. The fast kernel and [`MvuChain`](super::MvuChain) advance
+    /// the clock over such cycles without dispatching the FSM.
+    ///
+    /// [`step`]: Self::step
+    pub fn quiescent_without_input(&self) -> bool {
+        self.fsm.state == FsmState::Idle
+            && !self.has_pending_folds()
+            && self.fifo.is_empty()
+            && self.delay.iter().all(Option::is_none)
+    }
+
+    /// Advance the clock over `n` cycles in which the datapath is frozen on
+    /// output backpressure ([`output_blocked`](Self::output_blocked) with
+    /// the sink never ready): bit-identical to `n` calls of
+    /// [`step`](Self::step) each returning `stalled == true`, in closed
+    /// form. The first blocked cycle drops the FSM to IDLE (Fig. 7) and it
+    /// stays there, so forcing IDLE once covers the whole interval.
+    pub fn skip_blocked_cycles(&mut self, n: usize) {
+        debug_assert!(self.output_blocked(), "skip_blocked_cycles on a live datapath");
+        self.fsm.state = FsmState::Idle;
+        self.stats.cycles += n;
+        self.stats.stall_cycles += n;
+        self.stats.idle_cycles += n;
+    }
+
+    /// Advance the clock over `n` quiescent cycles
+    /// ([`quiescent_without_input`](Self::quiescent_without_input) with no
+    /// input offered): bit-identical to `n` idle [`step`](Self::step)s.
+    pub fn skip_idle_cycles(&mut self, n: usize) {
+        debug_assert!(self.quiescent_without_input(), "skip_idle_cycles with work pending");
+        self.stats.cycles += n;
+        self.stats.idle_cycles += n;
     }
 
     /// One clock cycle.
@@ -299,6 +349,60 @@ mod tests {
         assert_eq!(outs, 2);
         // SF*NF = 4 slots + PIPELINE_STAGES + 1
         assert_eq!(last_out_cycle + 1, p.analytic_cycles(PIPELINE_STAGES));
+    }
+
+    #[test]
+    fn skip_blocked_cycles_matches_stepped_blocked_cycles() {
+        // drive two identical machines into an output-blocked jam (never-
+        // ready sink), then advance one tick-by-tick and the other with
+        // the closed form the fast kernel uses.
+        let (p, wm) = setup(2, 4);
+        let mut a = MvuStream::with_fifo_depth(&p, 1).unwrap();
+        let mut b = MvuStream::with_fifo_depth(&p, 1).unwrap();
+        let x: Vec<i32> = (0..8).collect();
+        let words = [x[0..4].to_vec(), x[4..8].to_vec()];
+        let mut wi = 0;
+        for _ in 0..40 {
+            let offered = (wi < 2).then(|| words[wi].clone());
+            let ra = a.step(offered.as_deref(), &wm, false);
+            let rb = b.step(offered.as_deref(), &wm, false);
+            assert_eq!(ra.consumed_input, rb.consumed_input);
+            if ra.consumed_input {
+                wi += 1;
+            }
+        }
+        assert!(a.output_blocked() && b.output_blocked());
+        for _ in 0..7 {
+            let r = a.step(None, &wm, false);
+            assert!(r.stalled);
+        }
+        b.skip_blocked_cycles(7);
+        assert_eq!(a.fsm_state(), b.fsm_state());
+        assert_eq!(a.stats.cycles, b.stats.cycles);
+        assert_eq!(a.stats.stall_cycles, b.stats.stall_cycles);
+        assert_eq!(a.stats.idle_cycles, b.stats.idle_cycles);
+    }
+
+    #[test]
+    fn skip_idle_cycles_matches_stepped_idle_cycles() {
+        let (p, wm) = setup(2, 4);
+        let mut a = MvuStream::new(&p).unwrap();
+        let mut b = MvuStream::new(&p).unwrap();
+        assert!(a.quiescent_without_input());
+        for _ in 0..5 {
+            a.step(None, &wm, true);
+        }
+        b.skip_idle_cycles(5);
+        assert_eq!(a.fsm_state(), b.fsm_state());
+        assert_eq!(a.stats.cycles, b.stats.cycles);
+        assert_eq!(a.stats.idle_cycles, b.stats.idle_cycles);
+        assert!(b.quiescent_without_input());
+    }
+
+    #[test]
+    fn zero_fifo_depth_is_an_error() {
+        let (p, _) = setup(2, 4);
+        assert!(MvuStream::with_fifo_depth(&p, 0).is_err());
     }
 
     #[test]

@@ -19,7 +19,13 @@ pub struct SlidingWindowUnit {
 }
 
 impl SlidingWindowUnit {
-    pub fn new(h: usize, w: usize, ic: usize, kd: usize, stride: usize) -> Result<SlidingWindowUnit> {
+    pub fn new(
+        h: usize,
+        w: usize,
+        ic: usize,
+        kd: usize,
+        stride: usize,
+    ) -> Result<SlidingWindowUnit> {
         if kd == 0 || stride == 0 {
             bail!("kernel dim and stride must be positive");
         }

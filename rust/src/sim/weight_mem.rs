@@ -66,6 +66,20 @@ impl WeightMem {
         &self.mem[base..base + self.simd]
     }
 
+    /// All `sf_total` words of neuron fold `nf` as one contiguous slice —
+    /// addresses `nf*SF .. (nf+1)*SF` are adjacent in the flat layout, and
+    /// their concatenation is exactly row `nf*PE + p` of the weight matrix
+    /// in column order (asserted by `fold_row_is_the_matrix_row`). This
+    /// layout fact is what lets the fast kernel's ideal path read rows
+    /// straight off the source [`Matrix`] (`sim::fast::run_ideal` uses
+    /// `Matrix::row`) while staying word-for-word faithful to what the
+    /// per-cycle kernel streams out of these memories.
+    #[inline]
+    pub fn read_row(&self, p: usize, nf: usize, sf_total: usize) -> &[i32] {
+        let base = (p * self.depth + nf * sf_total) * self.simd;
+        &self.mem[base..base + sf_total * self.simd]
+    }
+
     /// Total weight bits stored (for the BRAM estimator).
     pub fn total_bits(&self, weight_bits: u32) -> usize {
         self.pe * self.depth * self.simd * weight_bits as usize
@@ -103,6 +117,22 @@ mod tests {
         assert_eq!(wm.read(0, 1), &[4, 5, 6, 7]); // row 0, sf 1
         assert_eq!(wm.read(0, 2), &[20, 21, 22, 23]); // row 2, sf 0
         assert_eq!(wm.read(1, 2), &[30, 31, 32, 33]); // PE 1 -> row 3
+    }
+
+    #[test]
+    fn fold_row_is_the_matrix_row() {
+        // read_row(p, nf, SF) must equal matrix row nf*PE + p verbatim —
+        // the contiguity argument the fast kernel's flat dot product
+        // rests on.
+        let p = params();
+        let m = matrix();
+        let wm = WeightMem::from_matrix(&p, &m).unwrap();
+        let sf = p.synapse_fold();
+        for nf in 0..p.neuron_fold() {
+            for pe in 0..p.pe {
+                assert_eq!(wm.read_row(pe, nf, sf), m.row(nf * p.pe + pe), "nf={nf} pe={pe}");
+            }
+        }
     }
 
     #[test]

@@ -21,7 +21,10 @@ fn arb_frontend(g: &mut Gen) -> (Graph, usize) {
         let cols = kd * kd * ic;
         let w = Matrix::new(oc, cols, g.vec_i32(oc * cols, -4, 3)).unwrap();
         let mut gr = Graph::new(TensorInfo { elems: ic * dim * dim, vectors: 1, bits: 2 });
-        gr.push("conv", Op::Conv { weights: w, ifm_ch: ic, ifm_dim: dim, ofm_ch: oc, kernel_dim: kd });
+        gr.push(
+            "conv",
+            Op::Conv { weights: w, ifm_ch: ic, ifm_dim: dim, ofm_ch: oc, kernel_dim: kd },
+        );
         (gr, oc, ic * dim * dim)
     } else {
         let elems = g.usize_in(2, 24);

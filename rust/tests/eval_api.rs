@@ -10,11 +10,14 @@ use finn_mvu::cfg::{
     DesignPoint, FoldAxis, LayerParams, ParamError, SimdType, ValidatedParams,
 };
 use finn_mvu::estimate::{estimate, Style};
-use finn_mvu::eval::{EvalRequest, Session, SimOptions};
-use finn_mvu::explore::{content_hash, params_key, stimulus_inputs, stimulus_weights};
+use finn_mvu::eval::{EvalError, EvalRequest, Session, SessionConfig, SimOptions};
+use finn_mvu::explore::{
+    content_hash, estimate_key, params_key, stimulus_inputs, stimulus_weights,
+};
 use finn_mvu::harness::SweepKind;
 use finn_mvu::proptest::{check, Config, Gen};
-use finn_mvu::sim::run_mvu;
+use finn_mvu::sim::{run_mvu, StallPattern};
+use finn_mvu::util::json::Json;
 
 /// A raw parameter record over a range that covers every legality axis:
 /// zero dims, non-divisor folds, oversized kernels, precision clashes.
@@ -183,4 +186,109 @@ fn validated_params_roundtrip_preserves_identity() {
     let back: ValidatedParams = raw.validated().unwrap();
     assert_eq!(back, vp);
     assert_eq!(params_key(&back), params_key(&vp));
+}
+
+fn small_point(name: &str) -> ValidatedParams {
+    DesignPoint::fc(name).in_features(16).out_features(8).pe(4).simd(8).build().unwrap()
+}
+
+/// A stall pattern under which the MVU can never deliver an output word.
+fn never_ready() -> StallPattern {
+    StallPattern::Periodic { period: 1, duty: 1, phase: 0 }
+}
+
+/// `evaluate_all` must report the *smallest* failing request index
+/// structurally, independent of thread count, with the request's own
+/// error chain in the message.
+#[test]
+fn evaluate_all_reports_first_failing_index() {
+    let dead = SimOptions { batch: 1, out_stall: never_ready(), ..SimOptions::default() };
+    let mut reqs: Vec<EvalRequest> =
+        (0..6).map(|i| EvalRequest::new(small_point(&format!("ok{i}")))).collect();
+    reqs[2] = EvalRequest::new(small_point("dead2")).with_sim(dead.clone());
+    reqs[4] = EvalRequest::new(small_point("dead4")).with_sim(dead);
+    for threads in [1usize, 4] {
+        let session = Session::with_threads(threads);
+        match session.evaluate_all(&reqs) {
+            Err(EvalError::Sweep { index, message }) => {
+                assert_eq!(index, 2, "threads={threads}: smallest failing index wins");
+                assert!(message.contains("request 2"), "{message}");
+                assert!(message.contains("deadlock"), "{message}");
+            }
+            other => panic!("threads={threads}: expected EvalError::Sweep, got {other:?}"),
+        }
+    }
+}
+
+/// `evaluate_layers` (over `try_evaluate_points`) carries the failing
+/// sweep index structurally. The only way a validated point can fail
+/// estimation is a corrupted cache entry, so poison one on disk.
+#[test]
+fn evaluate_layers_reports_failing_sweep_index_from_poisoned_cache() {
+    let dir = std::env::temp_dir().join(format!("finn-mvu-evalapi-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).unwrap();
+    let layers: Vec<ValidatedParams> = (0..4)
+        .map(|i| {
+            DesignPoint::fc(&format!("l{i}"))
+                .in_features(8 << i)
+                .out_features(8)
+                .pe(2)
+                .simd(4)
+                .build()
+                .unwrap()
+        })
+        .collect();
+    // a key-valid envelope whose value is not a StyleReport
+    let key = estimate_key(&layers[2], Style::Rtl);
+    let mut doc = Json::obj();
+    doc.set("key", Json::Str(key.clone()));
+    doc.set("value", Json::obj());
+    let path = dir.join(format!("{:016x}.json", content_hash(&key)));
+    std::fs::write(&path, doc.to_string()).unwrap();
+
+    let session = Session::new(SessionConfig {
+        threads: 1,
+        sim_vectors: 0,
+        cache_dir: Some(dir.clone()),
+    })
+    .unwrap();
+    match session.evaluate_layers(&layers) {
+        Err(EvalError::Sweep { index, message }) => {
+            assert_eq!(index, 2, "{message}");
+            assert!(message.contains("sweep point 2"), "{message}");
+        }
+        other => panic!("expected EvalError::Sweep at index 2, got {other:?}"),
+    }
+    std::fs::remove_dir_all(&dir).unwrap();
+}
+
+/// Changing any `SimOptions` field that affects the modelled flow
+/// (FIFO depth, stall patterns) must land in a fresh cache entry — and
+/// repeating an identical request must not.
+#[test]
+fn sim_options_changes_invalidate_cache_entries() {
+    let s = Session::serial();
+    let base = || EvalRequest::new(small_point("c"));
+    s.evaluate(&base().with_sim(SimOptions { batch: 2, ..SimOptions::default() })).unwrap();
+    let m0 = s.cache_stats().misses;
+
+    // identical request: served entirely from cache
+    s.evaluate(&base().with_sim(SimOptions { batch: 2, ..SimOptions::default() })).unwrap();
+    assert_eq!(s.cache_stats().misses, m0, "identical SimOptions must hit");
+
+    // different FIFO depth: new simulation entry
+    s.evaluate(&base().with_sim(SimOptions { batch: 2, fifo_depth: 2, ..SimOptions::default() }))
+        .unwrap();
+    let m1 = s.cache_stats().misses;
+    assert!(m1 > m0, "fifo_depth change must miss: {:?}", s.cache_stats());
+
+    // different stall pattern: yet another entry
+    s.evaluate(&base().with_sim(SimOptions {
+        batch: 2,
+        in_stall: StallPattern::Periodic { period: 4, duty: 1, phase: 0 },
+        ..SimOptions::default()
+    }))
+    .unwrap();
+    assert!(s.cache_stats().misses > m1, "stall change must miss: {:?}", s.cache_stats());
 }

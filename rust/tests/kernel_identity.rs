@@ -1,0 +1,209 @@
+//! Bit-identity between the two simulation kernels (DESIGN.md §Two-kernel
+//! simulator): the batched/interval-skipping production kernel
+//! (`sim::fast`, behind `run_mvu*`) must reproduce the per-cycle oracle
+//! (`sim::reference`) field-for-field — output streams, exact cycle
+//! counts, stall/backpressure counters, slot counts and the FIFO
+//! occupancy high-water mark — over the full Table 2 grid and under
+//! arbitrary stall patterns and FIFO depths.
+
+use finn_mvu::cfg::{DesignPoint, LayerParams, SimdType, ValidatedParams};
+use finn_mvu::explore::{content_hash, params_key, stimulus_inputs, stimulus_weights};
+use finn_mvu::harness::SweepKind;
+use finn_mvu::proptest::{check, Config, Gen};
+use finn_mvu::quant::Matrix;
+use finn_mvu::sim::{reference, run_mvu_fifo, StallPattern, DEFAULT_FIFO_DEPTH};
+
+/// Every Table 2 sweep configuration under all three SIMD types, with the
+/// engine's canonical deterministic stimulus: the fast kernel's report
+/// must equal the oracle's byte for byte.
+#[test]
+fn kernels_identical_over_table2_grid() {
+    let mut points = 0usize;
+    for kind in SweepKind::ALL {
+        for ty in SimdType::ALL {
+            for sp in kind.points(ty) {
+                let p = &sp.params;
+                let seed = content_hash(&params_key(p));
+                let w = stimulus_weights(p, seed);
+                let inputs = stimulus_inputs(p, seed ^ 0x9e37_79b9_7f4a_7c15, 2);
+                let fast = run_mvu_fifo(
+                    p,
+                    &w,
+                    &inputs,
+                    StallPattern::None,
+                    StallPattern::None,
+                    DEFAULT_FIFO_DEPTH,
+                )
+                .unwrap();
+                let oracle = reference::run_mvu_fifo(
+                    p,
+                    &w,
+                    &inputs,
+                    StallPattern::None,
+                    StallPattern::None,
+                    DEFAULT_FIFO_DEPTH,
+                )
+                .unwrap();
+                assert_eq!(fast, oracle, "{p}");
+                points += 1;
+            }
+        }
+    }
+    assert!(points > 50, "grid unexpectedly small: {points} points");
+}
+
+fn arb_params(g: &mut Gen) -> ValidatedParams {
+    let ty = *g.choose(&SimdType::ALL);
+    let (wb, ib) = match ty {
+        SimdType::Xnor => (1, 1),
+        SimdType::BinaryWeights => (1, *g.choose(&[2u32, 4])),
+        SimdType::Standard => (*g.choose(&[2u32, 4]), *g.choose(&[2u32, 4])),
+    };
+    let rows = g.usize_in(1, 14);
+    let cols = g.usize_in(1, 40);
+    let pe = g.divisor_of(rows);
+    let simd = g.divisor_of(cols);
+    DesignPoint::fc("ident")
+        .in_features(cols)
+        .out_features(rows)
+        .pe(pe)
+        .simd(simd)
+        .simd_type(ty)
+        .precision(wb, ib, 0)
+        .build()
+        .expect("generated folds are divisors, hence legal")
+}
+
+fn arb_weights(g: &mut Gen, p: &LayerParams) -> Matrix {
+    let (r, c) = (p.matrix_rows(), p.matrix_cols());
+    let data: Vec<i32> = (0..r * c)
+        .map(|_| match p.simd_type {
+            SimdType::Xnor | SimdType::BinaryWeights => g.i32_in(0, 1),
+            SimdType::Standard => {
+                let half = 1 << (p.weight_bits - 1);
+                g.i32_in(-half, half - 1)
+            }
+        })
+        .collect();
+    Matrix::new(r, c, data).unwrap()
+}
+
+fn arb_inputs(g: &mut Gen, p: &LayerParams, n: usize) -> Vec<Vec<i32>> {
+    (0..n)
+        .map(|_| {
+            (0..p.matrix_cols())
+                .map(|_| match p.simd_type {
+                    SimdType::Xnor => g.i32_in(0, 1),
+                    _ => {
+                        let half = 1 << (p.input_bits - 1);
+                        g.i32_in(-half, half - 1)
+                    }
+                })
+                .collect()
+        })
+        .collect()
+}
+
+/// Any pattern the public API accepts, including ones that never make
+/// progress (the kernels must then agree on the deadlock failure too).
+fn arb_stall(g: &mut Gen) -> StallPattern {
+    match g.usize_in(0, 3) {
+        0 => StallPattern::None,
+        1 => {
+            let period = g.usize_in(1, 9);
+            StallPattern::Periodic {
+                period,
+                duty: g.usize_in(0, period),
+                phase: g.usize_in(0, 6),
+            }
+        }
+        2 => StallPattern::Random { seed: g.rng.next_u64(), p_num: g.usize_in(0, 220) as u32 },
+        _ => StallPattern::Schedule((0..g.usize_in(0, 10)).map(|_| g.chance(128)).collect()),
+    }
+}
+
+/// Stalled flows, all FIFO depths, both PRNG-driven and deterministic
+/// patterns: identical `Ok` reports or identical `Err` messages.
+#[test]
+fn prop_kernels_identical_under_stalls() {
+    check("fast==reference", Config::cases(80), |g| {
+        let p = arb_params(g);
+        let w = arb_weights(g, &p);
+        let n = g.usize_in(0, 4);
+        let inputs = arb_inputs(g, &p, n);
+        let in_stall = arb_stall(g);
+        let out_stall = arb_stall(g);
+        let depth = g.usize_in(1, 6);
+        let fast = run_mvu_fifo(&p, &w, &inputs, in_stall.clone(), out_stall.clone(), depth);
+        let oracle =
+            reference::run_mvu_fifo(&p, &w, &inputs, in_stall.clone(), out_stall.clone(), depth);
+        match (fast, oracle) {
+            (Ok(a), Ok(b)) => {
+                if a != b {
+                    return Err(format!(
+                        "{p} depth={depth} ({in_stall:?}/{out_stall:?}): fast {a:?} != oracle {b:?}"
+                    ));
+                }
+                Ok(())
+            }
+            (Err(a), Err(b)) => {
+                if a.to_string() != b.to_string() {
+                    return Err(format!(
+                        "{p} depth={depth}: error divergence: fast {a:#} vs oracle {b:#}"
+                    ));
+                }
+                Ok(())
+            }
+            (a, b) => Err(format!(
+                "{p} depth={depth} ({in_stall:?}/{out_stall:?}): one kernel failed: fast \
+                 {:?} vs oracle {:?}",
+                a.map(|r| r.exec_cycles),
+                b.map(|r| r.exec_cycles)
+            )),
+        }
+    });
+}
+
+/// The fold-block numerics agree with the oracle on every SIMD type at
+/// sizes that straddle the fold-block width.
+#[test]
+fn kernels_identical_on_wide_rows() {
+    for ty in SimdType::ALL {
+        let (wb, ib) = match ty {
+            SimdType::Xnor => (1, 1),
+            SimdType::BinaryWeights => (1, 4),
+            SimdType::Standard => (4, 4),
+        };
+        let p = DesignPoint::fc("wide")
+            .in_features(200)
+            .out_features(6)
+            .pe(3)
+            .simd(8)
+            .simd_type(ty)
+            .precision(wb, ib, 0)
+            .build()
+            .unwrap();
+        let seed = content_hash(&params_key(&p));
+        let w = stimulus_weights(&p, seed);
+        let inputs = stimulus_inputs(&p, seed ^ 1, 3);
+        let fast = run_mvu_fifo(
+            &p,
+            &w,
+            &inputs,
+            StallPattern::None,
+            StallPattern::None,
+            DEFAULT_FIFO_DEPTH,
+        )
+        .unwrap();
+        let oracle = reference::run_mvu_fifo(
+            &p,
+            &w,
+            &inputs,
+            StallPattern::None,
+            StallPattern::None,
+            DEFAULT_FIFO_DEPTH,
+        )
+        .unwrap();
+        assert_eq!(fast, oracle, "{ty}");
+    }
+}

@@ -246,7 +246,10 @@ fn prop_fifo_liveness_and_integrity_under_bursts() {
         }
         let slots = p.synapse_fold() * p.neuron_fold() * n;
         if rep.slots_consumed != slots {
-            return Err(format!("slots {} != {slots} (lost or duplicated work)", rep.slots_consumed));
+            return Err(format!(
+                "slots {} != {slots} (lost or duplicated work)",
+                rep.slots_consumed
+            ));
         }
         if rep.fifo_max_occupancy > depth {
             return Err(format!("FIFO high-water {} > depth {depth}", rep.fifo_max_occupancy));
@@ -289,6 +292,76 @@ fn prop_deeper_fifo_never_stalls_more() {
         }
         Ok(())
     });
+}
+
+/// Regression (FIFO audit): a zero-depth output FIFO reachable through
+/// the public API (`SimOptions::fifo_depth = 0`) must be a structured
+/// error, not a `Fifo::new` panic.
+#[test]
+fn zero_fifo_depth_is_a_structured_error_not_a_panic() {
+    let p = DesignPoint::fc("d0").in_features(8).out_features(4).pe(2).simd(4).build().unwrap();
+    let w = Matrix::zeros(4, 8);
+    let x: Vec<i32> = (0..8).collect();
+    let err = run_mvu_fifo(&p, &w, &[x], StallPattern::None, StallPattern::None, 0)
+        .expect_err("depth 0 must be rejected");
+    assert!(err.to_string().contains("FIFO depth"), "{err:#}");
+}
+
+/// Regression (FIFO audit): depth-1 FIFO under a sink that is only ready
+/// every third cycle — every transfer is a simultaneous pop-then-push at
+/// full capacity. Data, ordering and the occupancy bound must all hold.
+#[test]
+fn depth1_fifo_simultaneous_push_pop_at_full_is_exact() {
+    let p = DesignPoint::fc("d1").in_features(8).out_features(8).pe(4).simd(8).build().unwrap();
+    let mut g = Gen::new(99, 16);
+    let w = arb_weights(&mut g, &p);
+    let inputs = arb_inputs(&mut g, &p, 6);
+    let rep = run_mvu_fifo(
+        &p,
+        &w,
+        &inputs,
+        StallPattern::None,
+        StallPattern::Periodic { period: 3, duty: 2, phase: 0 },
+        1,
+    )
+    .unwrap();
+    assert_eq!(rep.outputs.len(), inputs.len());
+    for (x, y) in inputs.iter().zip(&rep.outputs) {
+        assert_eq!(y, &matvec(x, &w, p.simd_type).unwrap());
+    }
+    assert_eq!(rep.fifo_max_occupancy, 1, "depth-1 high-water must be exactly its capacity");
+    assert!(rep.stall_cycles > 0, "a depth-1 FIFO under a 2/3-stalled sink must stall");
+}
+
+/// Regression (input-buffer stall audit): deterministic stalls landing
+/// mid-WRITE and mid-READ must leave the wr/rd pointers untouched so the
+/// fill and the replay resume exactly where they stopped.
+#[test]
+fn write_and_read_phase_stalls_resume_exactly() {
+    // SF = 4 words, NF = 4 folds: plenty of mid-fill and mid-replay cycles
+    let p = DesignPoint::fc("stall").in_features(16).out_features(8).pe(2).simd(4).build().unwrap();
+    let mut g = Gen::new(7, 16);
+    let w = arb_weights(&mut g, &p);
+    let inputs = arb_inputs(&mut g, &p, 3);
+    // input gaps hit mid-WRITE; output stalls jam the pipe mid-READ
+    let rep = run_mvu_fifo(
+        &p,
+        &w,
+        &inputs,
+        StallPattern::Schedule(vec![false, true, false, false, true]),
+        StallPattern::Schedule(vec![true, false, true, true, false, false, true]),
+        2,
+    )
+    .unwrap();
+    assert_eq!(rep.outputs.len(), inputs.len());
+    for (x, y) in inputs.iter().zip(&rep.outputs) {
+        assert_eq!(y, &matvec(x, &w, p.simd_type).unwrap());
+    }
+    assert_eq!(
+        rep.slots_consumed,
+        p.synapse_fold() * p.neuron_fold() * inputs.len(),
+        "a stalled replay must not repeat or drop compute slots"
+    );
 }
 
 #[test]
