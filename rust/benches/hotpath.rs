@@ -3,6 +3,9 @@
 //!   * the two simulation kernels head-to-head on the fig. 14 PE x SIMD
 //!     heatmap sweep — the batched kernel must clear >= 10x the per-cycle
 //!     oracle's cycles/second (DESIGN.md §Two-kernel simulator);
+//!   * the bit-packed Xnor datapath vs the flat i32 kernel it replaced on
+//!     the same grid — acceptance bar >= 4x (DESIGN.md §Packed datapath) —
+//!     plus the engine-side fold sweep with its stimulus-memo hit counts;
 //!   * simulator throughput in cycles/second on the NID layer-0 MVU and a
 //!     large PE=SIMD=32 conv MVU (the L3 optimization target);
 //!   * the exploration engine over the full Table 2 grid — serial-cold vs
@@ -13,11 +16,13 @@
 //! Run with: `cargo bench --bench hotpath`
 
 use finn_mvu::cfg::{nid_layers, DesignPoint, SimdType, ValidatedParams};
-use finn_mvu::eval::Session;
+use finn_mvu::eval::{Session, SessionConfig};
 use finn_mvu::harness::{bench, random_weights, SweepKind};
 use finn_mvu::quant::{matvec, Matrix};
 use finn_mvu::runtime::{default_artifacts_dir, Engine};
-use finn_mvu::sim::{reference, run_mvu, run_mvu_fifo, StallPattern, DEFAULT_FIFO_DEPTH};
+use finn_mvu::sim::{
+    fast, reference, run_mvu, run_mvu_fifo, StallPattern, DEFAULT_FIFO_DEPTH,
+};
 use finn_mvu::util::rng::Pcg32;
 
 fn sim_bench(name: &str, params: &ValidatedParams, n_vec: usize) {
@@ -123,6 +128,93 @@ fn fig14_kernel_shootout() {
     assert_eq!(a, b, "stalled-flow kernel divergence");
 }
 
+/// Packed vs unpacked ideal-flow datapath on the fig. 14 grid under the
+/// 1-bit Xnor type (the paper's headline datapath: XNOR + popcount).
+/// Identical reports by construction (tests/kernel_identity.rs); the
+/// headline is cycles/second, and the acceptance bar for the bit-packed
+/// SWAR datapath is >= 4x over the flat i32 kernel it replaced.
+fn xnor_packed_shootout() {
+    let grid = [2usize, 4, 8, 16, 32, 64];
+    let mut work: Vec<(ValidatedParams, Matrix, Vec<Vec<i32>>)> = Vec::new();
+    let mut rng = Pcg32::new(17);
+    for &pe in &grid {
+        for &simd in &grid {
+            let p = DesignPoint::conv(&format!("xn_pe{pe}_s{simd}"))
+                .ifm_ch(64)
+                .ifm_dim(8)
+                .ofm_ch(64)
+                .kernel_dim(4)
+                .pe(pe)
+                .simd(simd)
+                .paper_precision(SimdType::Xnor)
+                .build()
+                .expect("fig14 grid points are legal");
+            let w = random_weights(&p, 18);
+            let vectors: Vec<Vec<i32>> = (0..8)
+                .map(|_| (0..p.matrix_cols()).map(|_| rng.next_range(2) as i32).collect())
+                .collect();
+            work.push((p, w, vectors));
+        }
+    }
+    let total_cycles: usize = work
+        .iter()
+        .map(|(p, w, v)| run_mvu(p, w, v).unwrap().exec_cycles)
+        .sum();
+    println!(
+        "xnor packed shootout: {} points, {} simulated cycles per pass",
+        work.len(),
+        total_cycles
+    );
+
+    let packed = bench("sim/fig14_xnor_packed_datapath", || {
+        for (p, w, v) in &work {
+            std::hint::black_box(run_mvu(p, w, v).unwrap());
+        }
+    });
+    println!("{packed}");
+    let flat = bench("sim/fig14_xnor_unpacked_datapath", || {
+        for (p, w, v) in &work {
+            std::hint::black_box(
+                fast::run_mvu_ideal_unpacked(p, w, v, DEFAULT_FIFO_DEPTH).unwrap(),
+            );
+        }
+    });
+    println!("{flat}");
+    let speedup = flat.mean_ns / packed.mean_ns.max(1.0);
+    println!(
+        "    -> packed {:.2} Mcycles/s vs unpacked {:.2} Mcycles/s: {:.1}x speedup \
+         (acceptance bar: >= 4x) {}",
+        total_cycles as f64 / (packed.mean_ns / 1e3),
+        total_cycles as f64 / (flat.mean_ns / 1e3),
+        speedup,
+        if speedup >= 4.0 { "PASS" } else { "FAIL" }
+    );
+
+    // the same fold sweep through the engine: the stimulus memo should
+    // build the 64ch/8px/k4 Xnor stimulus once and hit for the other 35
+    // fold variants (plus reuse the one shared bit-packing throughout).
+    // A fresh Session per pass keeps this a *cold* sweep — a reused
+    // session would serve every pass after the first from the result
+    // cache and measure lookups, not simulation (see the explicit
+    // cache_warm case in explore_bench).
+    let fresh_session = || {
+        Session::new(SessionConfig { threads: 0, sim_vectors: 2, ..Default::default() })
+            .unwrap()
+    };
+    let points: Vec<finn_mvu::cfg::SweepPoint> = work
+        .iter()
+        .enumerate()
+        .map(|(i, (p, _, _))| finn_mvu::cfg::SweepPoint { swept: i, params: p.clone() })
+        .collect();
+    let sweep = bench("explore/fig14_xnor_fold_sweep_sim_cold", || {
+        std::hint::black_box(fresh_session().evaluate_points(&points).unwrap());
+    });
+    println!("{sweep}");
+    let session = fresh_session();
+    session.evaluate_points(&points).unwrap();
+    println!("    -> stimulus memo over one cold sweep: {}", session.stimulus_stats());
+}
+
 fn explore_bench() {
     // the full Table 2 grid (all six sweeps x three SIMD types)
     let points: Vec<_> = SweepKind::ALL
@@ -156,6 +248,9 @@ fn explore_bench() {
 fn main() {
     // the two-kernel simulator head-to-head (the tentpole acceptance run)
     fig14_kernel_shootout();
+
+    // the bit-packed low-precision datapath vs the flat kernel it replaced
+    xnor_packed_shootout();
 
     // L3 simulator hot loop
     let nid0 = nid_layers().remove(0);

@@ -49,7 +49,9 @@ use std::path::PathBuf;
 use crate::cfg::{ParamError, SweepPoint, ValidatedParams};
 use crate::coordinator::{Pipeline, PipelineConfig, Request, Response, ThroughputReport};
 use crate::estimate::Style;
-use crate::explore::{CacheStats, ExploreConfig, Explorer, PointReport, SimSummary, StyleReport};
+use crate::explore::{
+    CacheStats, ExploreConfig, Explorer, PointReport, SimSummary, StimulusStats, StyleReport,
+};
 use crate::sim::{StallPattern, DEFAULT_FIFO_DEPTH, PIPELINE_STAGES};
 
 /// Options for the cycle-accurate simulation half of a request.
@@ -243,6 +245,12 @@ impl Session {
 
     pub fn cache_stats(&self) -> CacheStats {
         self.explorer.cache_stats()
+    }
+
+    /// Hit/miss counters of the engine's sweep-wide stimulus memo (shared
+    /// weight matrices / packings / input batches; DESIGN.md §Explore).
+    pub fn stimulus_stats(&self) -> StimulusStats {
+        self.explorer.stimulus_stats()
     }
 
     /// Deterministic work-stealing parallel map over arbitrary items —

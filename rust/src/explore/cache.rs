@@ -50,6 +50,36 @@ pub fn params_key(p: &LayerParams) -> String {
     )
 }
 
+/// Canonical key text for a design point's simulation *stimulus*: the
+/// fields that determine what `stimulus_weights`/`stimulus_inputs`
+/// generate — matrix geometry (`ifm_ch`, `kernel_dim`, `ofm_ch`), SIMD
+/// type and operand precisions — and nothing else. PE/SIMD folds are
+/// deliberately excluded: folding reshapes *how* a matrix is streamed,
+/// not *which* matrix, so every fold variant of one layer shares one
+/// stimulus (and one entry in the engine's stimulus memo).
+pub fn stimulus_key(p: &LayerParams) -> String {
+    format!(
+        "ic={};oc={};kd={};ty={};wb={};ib={}",
+        p.ifm_ch,
+        p.ofm_ch,
+        p.kernel_dim,
+        p.simd_type.name(),
+        p.weight_bits,
+        p.input_bits
+    )
+}
+
+/// The canonical stimulus seed of a design point: the content hash of
+/// [`stimulus_key`], so it is independent of evaluation order, thread
+/// count **and folding**. Since kernel version 3 this replaces the old
+/// `content_hash(params_key(p))` derivation (which made every fold
+/// variant regenerate a different matrix); the sim cache keys embed both
+/// this seed and the full [`params_key`], so per-fold entries stay
+/// distinct.
+pub fn stimulus_seed(p: &LayerParams) -> u64 {
+    content_hash(&stimulus_key(p))
+}
+
 /// Cache key for an estimate of one design point in one style. The crate
 /// version is part of the key: a model change that ships as a new version
 /// invalidates on-disk entries instead of silently serving stale numbers.
@@ -253,6 +283,22 @@ mod tests {
         assert_eq!(params_key(&params("a")), params_key(&params("b")));
         let other = DesignPoint::from_params(params("a").into_inner()).pe(8).build().unwrap();
         assert_ne!(params_key(&params("a")), params_key(&other));
+    }
+
+    #[test]
+    fn stimulus_key_ignores_folds_but_not_geometry() {
+        let a = params("a");
+        let folded = DesignPoint::from_params(a.clone().into_inner()).pe(8).build().unwrap();
+        assert_eq!(stimulus_key(&a), stimulus_key(&folded));
+        assert_eq!(stimulus_seed(&a), stimulus_seed(&folded));
+        // but params_key (and hence the sim cache key) still differs
+        assert_ne!(params_key(&a), params_key(&folded));
+        let wider = DesignPoint::from_params(a.clone().into_inner())
+            .ifm_ch(32)
+            .simd(8)
+            .build()
+            .unwrap();
+        assert_ne!(stimulus_key(&a), stimulus_key(&wider));
     }
 
     #[test]

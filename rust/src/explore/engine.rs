@@ -28,16 +28,20 @@
 //! infallible. The user-facing facade over this engine is
 //! [`eval::Session`](crate::eval::Session).
 
-use std::collections::VecDeque;
+use std::collections::{HashMap, VecDeque};
+use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::mpsc::sync_channel;
-use std::sync::Mutex;
+use std::sync::{Arc, Mutex};
 
 use anyhow::Result;
 
 use crate::cfg::{LayerParams, SimdType, SweepPoint, ValidatedParams};
 use crate::estimate::{estimate, Style};
 use crate::quant::{matvec, Matrix};
-use crate::sim::{run_mvu_fifo, StallPattern, DEFAULT_FIFO_DEPTH, PIPELINE_STAGES};
+use crate::sim::{
+    run_mvu_shared, PackedWeightMem, SharedWeights, StallPattern, WeightMem,
+    DEFAULT_FIFO_DEPTH, PIPELINE_STAGES,
+};
 use crate::util::rng::Pcg32;
 
 use super::cache::{self, CacheStats, ResultCache};
@@ -55,6 +59,108 @@ pub struct ExploreConfig {
     pub cache_dir: Option<std::path::PathBuf>,
 }
 
+/// Hit/miss counters for the sweep-wide stimulus memo.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct StimulusStats {
+    /// Lookups served from the memo (a matrix / input batch / packing /
+    /// weight memory that did **not** have to be rebuilt).
+    pub hits: usize,
+    /// Lookups that had to generate the artifact.
+    pub misses: usize,
+}
+
+impl std::fmt::Display for StimulusStats {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{} hits, {} misses", self.hits, self.misses)
+    }
+}
+
+/// Sweep-wide stimulus memo: the canonical simulation stimulus (weight
+/// matrix, input batch) and the weight state derived from it (bit
+/// packing, per-PE memories), shared via [`Arc`] across every point of a
+/// sweep that uses them.
+///
+/// Keys are the canonical key *texts* ([`cache::stimulus_key`] for
+/// fold-independent artifacts, [`cache::params_key`] for the
+/// fold-specific flat memories), so a fig14-style fold sweep — dozens of
+/// (PE, SIMD) variants of one layer — generates and packs its weight
+/// matrix **once** instead of once per variant. Values are pure functions
+/// of their key, so concurrent workers that race on a miss compute
+/// identical values and determinism is unaffected (same argument as the
+/// result cache's deliberate lack of single-flight).
+///
+/// Like the [`ResultCache`], the memo has **no eviction**: entries live
+/// as long as the `Explorer`. That is the deliberate trade for sweep
+/// workloads (bounded, heavily overlapping geometries); a `Session`
+/// streaming unboundedly many *distinct* stalled-flow geometries would
+/// grow resident memory and should be recycled per workload, exactly as
+/// it would for the result cache.
+#[derive(Debug, Default)]
+struct StimulusMemo {
+    weights: Mutex<HashMap<String, Arc<Matrix>>>,
+    /// `None` records "not packable" (Standard-type weights), so the
+    /// packing attempt itself is also made only once per stimulus.
+    packed: Mutex<HashMap<String, Option<Arc<PackedWeightMem>>>>,
+    mems: Mutex<HashMap<String, Arc<WeightMem>>>,
+    inputs: Mutex<HashMap<(String, usize), Arc<Vec<Vec<i32>>>>>,
+    hits: AtomicUsize,
+    misses: AtomicUsize,
+}
+
+impl StimulusMemo {
+    /// Generic memo step: clone out on a hit, build outside the lock on a
+    /// miss (duplicated work on a race is identical and harmless).
+    fn get_or_build<K, V, F>(&self, map: &Mutex<HashMap<K, V>>, key: K, build: F) -> V
+    where
+        K: std::hash::Hash + Eq,
+        V: Clone,
+        F: FnOnce() -> V,
+    {
+        if let Some(v) = map.lock().unwrap().get(&key) {
+            self.hits.fetch_add(1, Ordering::Relaxed);
+            return v.clone();
+        }
+        self.misses.fetch_add(1, Ordering::Relaxed);
+        let v = build();
+        map.lock().unwrap().insert(key, v.clone());
+        v
+    }
+
+    fn weights(&self, p: &LayerParams, seed: u64) -> Arc<Matrix> {
+        self.get_or_build(&self.weights, cache::stimulus_key(p), || {
+            Arc::new(stimulus_weights(p, seed))
+        })
+    }
+
+    fn packed(&self, p: &LayerParams, w: &Matrix) -> Option<Arc<PackedWeightMem>> {
+        if matches!(p.simd_type, SimdType::Standard) {
+            return None; // Standard keeps the flat i32 datapath
+        }
+        self.get_or_build(&self.packed, cache::stimulus_key(p), || {
+            PackedWeightMem::from_matrix(w).ok().map(Arc::new)
+        })
+    }
+
+    fn mem(&self, p: &ValidatedParams, w: &Matrix) -> Arc<WeightMem> {
+        self.get_or_build(&self.mems, cache::params_key(p), || {
+            Arc::new(WeightMem::from_matrix(p, w).expect("memoized stimulus matches params"))
+        })
+    }
+
+    fn inputs(&self, p: &LayerParams, seed: u64, n: usize) -> Arc<Vec<Vec<i32>>> {
+        self.get_or_build(&self.inputs, (cache::stimulus_key(p), n), || {
+            Arc::new(stimulus_inputs(p, seed, n))
+        })
+    }
+
+    fn stats(&self) -> StimulusStats {
+        StimulusStats {
+            hits: self.hits.load(Ordering::Relaxed),
+            misses: self.misses.load(Ordering::Relaxed),
+        }
+    }
+}
+
 /// The design-space exploration engine: a work-stealing parallel map with
 /// a content-addressed result cache keyed by `(LayerParams, Style)`.
 #[derive(Debug)]
@@ -62,6 +168,7 @@ pub struct Explorer {
     threads: usize,
     sim_vectors: usize,
     cache: ResultCache,
+    stimulus: StimulusMemo,
 }
 
 impl Explorer {
@@ -70,7 +177,12 @@ impl Explorer {
             Some(dir) => ResultCache::with_dir(dir)?,
             None => ResultCache::in_memory(),
         };
-        Ok(Explorer { threads: cfg.threads, sim_vectors: cfg.sim_vectors, cache })
+        Ok(Explorer {
+            threads: cfg.threads,
+            sim_vectors: cfg.sim_vectors,
+            cache,
+            stimulus: StimulusMemo::default(),
+        })
     }
 
     /// Single-threaded, memory-cached — the reference executor the
@@ -86,7 +198,12 @@ impl Explorer {
 
     /// Explicit worker count (0 = one per core), memory-cached.
     pub fn with_threads(threads: usize) -> Explorer {
-        Explorer { threads, sim_vectors: 0, cache: ResultCache::in_memory() }
+        Explorer {
+            threads,
+            sim_vectors: 0,
+            cache: ResultCache::in_memory(),
+            stimulus: StimulusMemo::default(),
+        }
     }
 
     pub fn cache(&self) -> &ResultCache {
@@ -95,6 +212,13 @@ impl Explorer {
 
     pub fn cache_stats(&self) -> CacheStats {
         self.cache.stats()
+    }
+
+    /// Hit/miss counters of the sweep-wide stimulus memo (weight
+    /// matrices, input batches, bit packings, weight memories shared
+    /// across the points of a sweep).
+    pub fn stimulus_stats(&self) -> StimulusStats {
+        self.stimulus.stats()
     }
 
     fn worker_count(&self, jobs: usize) -> usize {
@@ -246,8 +370,11 @@ impl Explorer {
 
     /// Cached cycle-accurate simulation of one design point over the
     /// engine's canonical deterministic stimulus (`vectors` inputs seeded
-    /// from the point's content hash), with an explicit output-FIFO depth
-    /// and stall patterns on both AXI endpoints. The default flow
+    /// from the point's *stimulus* content hash —
+    /// [`cache::stimulus_seed`], fold-independent, so every fold variant
+    /// of one layer shares a single memoized weight matrix, bit packing
+    /// and input batch), with an explicit output-FIFO depth and stall
+    /// patterns on both AXI endpoints. The default flow
     /// (`DEFAULT_FIFO_DEPTH`, no stalls) shares cache entries with
     /// `evaluate_points`' simulations. Both key shapes embed
     /// [`sim::SIM_KERNEL_VERSION`](crate::sim::SIM_KERNEL_VERSION), so a
@@ -260,12 +387,16 @@ impl Explorer {
         in_stall: &StallPattern,
         out_stall: &StallPattern,
     ) -> Result<SimSummary> {
-        // the stimulus seed is derived from the design point itself, so it
-        // is independent of evaluation order and thread count.
-        let seed = cache::content_hash(&cache::params_key(p));
-        let default_flow = fifo_depth == DEFAULT_FIFO_DEPTH
-            && matches!(in_stall, StallPattern::None)
+        // the stimulus seed is derived from the design point's geometry
+        // (folds excluded), so it is independent of evaluation order,
+        // thread count and folding.
+        let seed = cache::stimulus_seed(p);
+        // ideal = which kernel path runs (packed rows vs stepped machine);
+        // default_flow = ideal at the default FIFO depth (the cache-key
+        // shape shared with `evaluate_points`).
+        let ideal = matches!(in_stall, StallPattern::None)
             && matches!(out_stall, StallPattern::None);
+        let default_flow = ideal && fifo_depth == DEFAULT_FIFO_DEPTH;
         let key = if default_flow {
             cache::sim_key(p, vectors, seed)
         } else {
@@ -280,10 +411,33 @@ impl Explorer {
         if let Some(j) = self.cache.get_json(&key) {
             return SimSummary::from_json(&j);
         }
-        let weights = stimulus_weights(p, seed);
-        let inputs = stimulus_inputs(p, seed ^ 0x9e37_79b9_7f4a_7c15, vectors);
-        let rep =
-            run_mvu_fifo(p, &weights, &inputs, in_stall.clone(), out_stall.clone(), fifo_depth)?;
+        let weights = self.stimulus.weights(p, seed);
+        let inputs = self.stimulus.inputs(p, seed ^ 0x9e37_79b9_7f4a_7c15, vectors);
+        // weight state shared sweep-wide, each piece built only for the
+        // path that reads it: the fold-independent bit packing feeds the
+        // ideal-flow packed datapath, the per-folding flat memories feed
+        // the cycle-stepped stalled path.
+        let shared = SharedWeights {
+            mem: if ideal {
+                None
+            } else {
+                Some(self.stimulus.mem(p, &weights))
+            },
+            packed: if ideal {
+                self.stimulus.packed(p, &weights)
+            } else {
+                None
+            },
+        };
+        let rep = run_mvu_shared(
+            p,
+            &weights,
+            &shared,
+            &inputs,
+            in_stall.clone(),
+            out_stall.clone(),
+            fifo_depth,
+        )?;
         let mut matches = rep.outputs.len() == inputs.len();
         for (x, y) in inputs.iter().zip(&rep.outputs) {
             matches &= &matvec(x, &weights, p.simd_type)? == y;
@@ -473,5 +627,70 @@ mod tests {
     fn empty_input_is_fine() {
         let ex = Explorer::parallel();
         assert!(ex.evaluate_points(&[]).unwrap().is_empty());
+    }
+
+    /// A fold sweep (one layer, many (PE, SIMD) variants — the fig. 14
+    /// shape) must build its stimulus once: the weight matrix, the bit
+    /// packing and the input batch each miss exactly once and hit for
+    /// every further variant. Serial engine so the hit/miss counts are
+    /// deterministic (racing parallel misses may duplicate work, never
+    /// results).
+    #[test]
+    fn fold_variants_share_stimulus_via_the_memo() {
+        use crate::cfg::DesignPoint;
+        let ex = Explorer::new(ExploreConfig { threads: 1, sim_vectors: 2, cache_dir: None })
+            .unwrap();
+        let folds = [(1usize, 2usize), (2, 4), (4, 8), (8, 16)];
+        let points: Vec<SweepPoint> = folds
+            .iter()
+            .enumerate()
+            .map(|(i, &(pe, simd))| SweepPoint {
+                swept: i,
+                params: DesignPoint::fc(&format!("fold{pe}x{simd}"))
+                    .in_features(32)
+                    .out_features(8)
+                    .pe(pe)
+                    .simd(simd)
+                    .paper_precision(SimdType::Xnor)
+                    .build()
+                    .unwrap(),
+            })
+            .collect();
+        let reports = ex.evaluate_points(&points).unwrap();
+        for r in &reports {
+            assert!(r.sim.as_ref().unwrap().matches_reference, "{}", r.name);
+        }
+        let s = ex.stimulus_stats();
+        // 4 variants x 3 artifact kinds (weights, packing, inputs); only
+        // the first variant generates each kind.
+        assert_eq!((s.misses, s.hits), (3, 9), "{s}");
+        // identical stimulus across folds: same outputs-level invariants,
+        // distinct sim cache entries (fold changes the cycle shape)
+        assert_ne!(
+            reports[0].sim.as_ref().unwrap().exec_cycles,
+            reports[3].sim.as_ref().unwrap().exec_cycles
+        );
+    }
+
+    /// Re-simulating one point under different flow conditions reuses the
+    /// memoized flat weight memory (built once) on the stalled paths.
+    #[test]
+    fn stalled_flows_share_the_flat_weight_memory() {
+        let p = crate::cfg::DesignPoint::fc("flowmem")
+            .in_features(16)
+            .out_features(8)
+            .pe(4)
+            .simd(4)
+            .build()
+            .unwrap();
+        let ex = Explorer::serial();
+        let stall = StallPattern::Periodic { period: 4, duty: 1, phase: 0 };
+        for depth in [2usize, 3, 4] {
+            ex.simulate_point(&p, 2, depth, &StallPattern::None, &stall).unwrap();
+        }
+        let s = ex.stimulus_stats();
+        // weights + inputs + one flat memory missed once each (Standard
+        // type: no packing lookup); the two re-runs hit all three.
+        assert_eq!((s.misses, s.hits), (3, 6), "{s}");
     }
 }

@@ -22,6 +22,13 @@
 //!   guard: two workers that miss the same key *simultaneously* both
 //!   compute it — evaluation is pure and idempotent, so this only costs a
 //!   little duplicated work in that narrow race, never correctness.)
+//! * a **sweep-wide stimulus memo** (inside [`Explorer`]) — the canonical
+//!   simulation stimulus is seeded fold-independently
+//!   ([`stimulus_seed`]), so every (PE, SIMD) variant of one layer shares
+//!   a single `Arc`'d weight matrix, bit packing
+//!   ([`sim::PackedWeightMem`](crate::sim::PackedWeightMem)) and input
+//!   batch instead of regenerating them per point; hit/miss counts are
+//!   reported by [`Explorer::stimulus_stats`].
 //! * [`PointReport`] / [`StyleReport`] / [`SimSummary`] — deterministic
 //!   JSON-serializable results, rendered through the repo's table/JSON
 //!   formats by [`points_to_table`] / [`points_to_json`].
@@ -41,7 +48,8 @@ mod engine;
 mod report;
 
 pub use cache::{
-    content_hash, estimate_key, params_key, sim_key, sim_key_flow, CacheStats, ResultCache,
+    content_hash, estimate_key, params_key, sim_key, sim_key_flow, stimulus_key, stimulus_seed,
+    CacheStats, ResultCache,
 };
-pub use engine::{stimulus_inputs, stimulus_weights, ExploreConfig, Explorer};
+pub use engine::{stimulus_inputs, stimulus_weights, ExploreConfig, Explorer, StimulusStats};
 pub use report::{points_to_json, points_to_table, PointReport, SimSummary, StyleReport};

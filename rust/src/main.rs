@@ -172,13 +172,23 @@ fn cmd_explore(a: &Args) -> Result<()> {
         cs.set("disk_hits", Json::from_i64(stats.disk_hits as i64));
         cs.set("misses", Json::from_i64(stats.misses as i64));
         doc.set("cache", cs);
+        let stim = ex.stimulus_stats();
+        let mut ss = Json::obj();
+        ss.set("hits", Json::from_i64(stim.hits as i64));
+        ss.set("misses", Json::from_i64(stim.misses as i64));
+        doc.set("stimulus_memo", ss);
         if a.get_bool("pretty") {
             println!("{}", doc.to_pretty(2));
         } else {
             println!("{doc}");
         }
     } else {
-        println!("cache: {} — {:.1} ms total", ex.cache_stats(), elapsed.as_secs_f64() * 1e3);
+        println!(
+            "cache: {} — stimulus memo: {} — {:.1} ms total",
+            ex.cache_stats(),
+            ex.stimulus_stats(),
+            elapsed.as_secs_f64() * 1e3
+        );
     }
     Ok(())
 }

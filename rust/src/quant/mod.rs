@@ -7,5 +7,7 @@ mod pack;
 mod thresholds;
 
 pub use matvec::{matvec, matvec_binary, matvec_standard, matvec_xnor, Matrix};
-pub use pack::{pack_bits, popcount_xnor_packed, unpack_bits, BitVec};
+pub use pack::{
+    pack_bits, pack_bits_into, popcount_xnor_packed, unpack_bits, BitVec, PackedMatrix,
+};
 pub use thresholds::{multithreshold, Thresholds};

@@ -7,6 +7,8 @@
 
 use anyhow::{bail, Result};
 
+use super::matvec::Matrix;
+
 /// A dense bit vector backed by u64 words (LSB-first within a word).
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub struct BitVec {
@@ -118,6 +120,80 @@ pub fn popcount_xnor_packed(x: &[i32], w: &[i32]) -> Result<u32> {
     xb.xnor_popcount(&wb)
 }
 
+/// Pack {0,1} lanes into zero-padded u64 words (LSB-first), reusing the
+/// caller's buffer — the per-vector packing step of the fast kernel's
+/// XNOR datapath, where a fresh allocation per input vector would show up
+/// on the hot path. Errors on the first lane outside {0,1}; the caller is
+/// expected to fall back to the unpacked lane kernel in that case.
+pub fn pack_bits_into(lanes: &[i32], out: &mut Vec<u64>) -> Result<()> {
+    out.clear();
+    out.resize(lanes.len().div_ceil(64), 0);
+    for (i, &v) in lanes.iter().enumerate() {
+        match v {
+            0 => {}
+            1 => out[i / 64] |= 1u64 << (i % 64),
+            other => bail!("lane {i} is {other}, not a bit"),
+        }
+    }
+    Ok(())
+}
+
+/// A {0,1} matrix packed one bit per lane: row-major, every row starting
+/// on a u64 word boundary (LSB-first within a word, tail words
+/// zero-padded). Word alignment per row is what lets the packed datapath
+/// kernels (`sim::simd_elem::pe_row_packed_*`) stream a whole
+/// neuron-fold block as a `&[u64]` slice — the packed analogue of
+/// `WeightMem::read_row`'s contiguity guarantee.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct PackedMatrix {
+    pub rows: usize,
+    pub cols: usize,
+    words_per_row: usize,
+    words: Vec<u64>,
+}
+
+impl PackedMatrix {
+    /// Pack a {0,1} matrix. Errors on any entry outside {0,1} — callers
+    /// (the fast simulation kernel) fall back to the flat i32 datapath,
+    /// keeping packed and unpacked evaluation bit-identical even on
+    /// operands the RTL could never store.
+    pub fn from_matrix(m: &Matrix) -> Result<PackedMatrix> {
+        if !m.in_range(0, 1) {
+            bail!("matrix entries outside {{0,1}} cannot be bit-packed");
+        }
+        let words_per_row = m.cols.div_ceil(64);
+        let mut words = vec![0u64; m.rows * words_per_row];
+        for r in 0..m.rows {
+            let base = r * words_per_row;
+            for (c, &v) in m.row(r).iter().enumerate() {
+                if v == 1 {
+                    words[base + c / 64] |= 1u64 << (c % 64);
+                }
+            }
+        }
+        Ok(PackedMatrix { rows: m.rows, cols: m.cols, words_per_row, words })
+    }
+
+    /// u64 words per packed row (`ceil(cols / 64)`).
+    pub fn words_per_row(&self) -> usize {
+        self.words_per_row
+    }
+
+    /// The packed bits of row `r` as a word slice.
+    #[inline]
+    pub fn row_words(&self, r: usize) -> &[u64] {
+        debug_assert!(r < self.rows, "row {r} out of range {}", self.rows);
+        &self.words[r * self.words_per_row..(r + 1) * self.words_per_row]
+    }
+
+    /// One lane, unpacked (for layout tests and spot checks).
+    #[inline]
+    pub fn lane(&self, r: usize, c: usize) -> i32 {
+        debug_assert!(c < self.cols, "col {c} out of range {}", self.cols);
+        ((self.row_words(r)[c / 64] >> (c % 64)) & 1) as i32
+    }
+}
+
 fn mask32(bits: u32) -> u32 {
     if bits >= 32 {
         u32::MAX
@@ -185,5 +261,77 @@ mod tests {
         let a = BitVec::zeros(5);
         let b = BitVec::zeros(6);
         assert!(a.xnor_popcount(&b).is_err());
+    }
+
+    #[test]
+    fn packed_matrix_layout_and_lanes() {
+        // 70 cols forces two words per row with a 6-bit tail
+        let m = Matrix::new(3, 70, (0..3 * 70).map(|i| ((i * 7) % 3 == 0) as i32).collect())
+            .unwrap();
+        let pm = PackedMatrix::from_matrix(&m).unwrap();
+        assert_eq!(pm.words_per_row(), 2);
+        for r in 0..3 {
+            assert_eq!(pm.row_words(r).len(), 2);
+            for c in 0..70 {
+                assert_eq!(pm.lane(r, c), m.at(r, c), "r={r} c={c}");
+            }
+            // tail padding is zero (the SWAR kernels rely on it)
+            assert_eq!(pm.row_words(r)[1] >> 6, 0, "r={r}");
+        }
+    }
+
+    #[test]
+    fn packed_matrix_rejects_nonbit_entries() {
+        let m = Matrix::new(1, 4, vec![0, 1, 2, 0]).unwrap();
+        assert!(PackedMatrix::from_matrix(&m).is_err());
+    }
+
+    #[test]
+    fn pack_bits_into_matches_pack_bits_and_rejects_nonbits() {
+        let lanes = vec![1, 0, 0, 1, 1];
+        let mut buf = vec![0xdead_beefu64; 3]; // stale contents must not leak
+        pack_bits_into(&lanes, &mut buf).unwrap();
+        assert_eq!(buf, pack_bits(&lanes, 1).words());
+        assert!(pack_bits_into(&[0, 1, -1], &mut buf).is_err());
+    }
+
+    #[test]
+    fn prop_pack_unpack_roundtrip() {
+        use crate::proptest::{check, Config};
+        check("pack/unpack roundtrip", Config::cases(200), |g| {
+            let bits = g.usize_in(1, 32) as u32;
+            let signed = g.chance(128);
+            let n = g.usize_in(0, 150);
+            let (lo, hi) = if bits == 32 {
+                (i32::MIN, i32::MAX)
+            } else if signed {
+                (-(1i32 << (bits - 1)), (1i32 << (bits - 1)) - 1)
+            } else {
+                // u64 arithmetic: (1i32 << 31) - 1 would overflow at b=31
+                (0, ((1u64 << bits) - 1).min(i32::MAX as u64) as i32)
+            };
+            let lanes: Vec<i32> = (0..n).map(|_| g.i32_in(lo, hi)).collect();
+            let got = unpack_bits(&pack_bits(&lanes, bits), bits, signed);
+            if got != lanes {
+                return Err(format!("bits={bits} signed={signed}: {lanes:?} -> {got:?}"));
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn prop_popcount_xnor_packed_counts_agreements() {
+        use crate::proptest::{check, Config};
+        check("packed xnor popcount == lanewise", Config::cases(200), |g| {
+            let n = g.usize_in(0, 300);
+            let x: Vec<i32> = (0..n).map(|_| g.i32_in(0, 1)).collect();
+            let w: Vec<i32> = (0..n).map(|_| g.i32_in(0, 1)).collect();
+            let agree = x.iter().zip(&w).filter(|(a, b)| a == b).count() as u32;
+            let got = popcount_xnor_packed(&x, &w).map_err(|e| e.to_string())?;
+            if got != agree {
+                return Err(format!("n={n}: packed {got} != lanewise {agree}"));
+            }
+            Ok(())
+        });
     }
 }

@@ -5,7 +5,9 @@
 //! unit (address `nf * SF + sf`, Eq. 2 layout) and is the level at which a
 //! complete layer (OD^2 input vectors per image) is processed.
 
-use anyhow::Result;
+use std::sync::Arc;
+
+use anyhow::{bail, Result};
 
 use crate::cfg::{LayerParams, ValidatedParams};
 use crate::quant::Matrix;
@@ -14,9 +16,14 @@ use super::stream_unit::{MvuStream, StepOut, StreamStats};
 use super::weight_mem::WeightMem;
 
 /// A complete MVU: weight memories + stream unit.
+///
+/// The memories are held behind an [`Arc`] so a caller that simulates the
+/// same weights repeatedly (the explore engine re-running one design
+/// point under different flow conditions) shares one burned-in memory
+/// instead of re-partitioning the matrix per run.
 #[derive(Debug)]
 pub struct MvuBatch {
-    wmem: WeightMem,
+    wmem: Arc<WeightMem>,
     stream: MvuStream,
 }
 
@@ -26,7 +33,7 @@ impl MvuBatch {
     /// profile.
     pub fn new(params: &ValidatedParams, weights: &Matrix) -> Result<MvuBatch> {
         Ok(MvuBatch {
-            wmem: WeightMem::from_matrix(params, weights)?,
+            wmem: Arc::new(WeightMem::from_matrix(params, weights)?),
             stream: MvuStream::new(params)?,
         })
     }
@@ -37,9 +44,36 @@ impl MvuBatch {
         fifo_depth: usize,
     ) -> Result<MvuBatch> {
         Ok(MvuBatch {
-            wmem: WeightMem::from_matrix(params, weights)?,
+            wmem: Arc::new(WeightMem::from_matrix(params, weights)?),
             stream: MvuStream::with_fifo_depth(params, fifo_depth)?,
         })
+    }
+
+    /// Build around an existing (shared) weight memory instead of
+    /// partitioning the matrix again. The memory must have been built for
+    /// the same folding; checked here so a mismatched share cannot read
+    /// out of frame.
+    pub fn with_weight_mem(
+        params: &ValidatedParams,
+        wmem: Arc<WeightMem>,
+        fifo_depth: usize,
+    ) -> Result<MvuBatch> {
+        if wmem.pe != params.pe
+            || wmem.simd != params.simd
+            || wmem.depth != params.weight_mem_depth()
+        {
+            bail!(
+                "shared weight memory (pe={} simd={} depth={}) does not match params \
+                 (pe={} simd={} depth={})",
+                wmem.pe,
+                wmem.simd,
+                wmem.depth,
+                params.pe,
+                params.simd,
+                params.weight_mem_depth()
+            );
+        }
+        Ok(MvuBatch { wmem, stream: MvuStream::with_fifo_depth(params, fifo_depth)? })
     }
 
     pub fn params(&self) -> &LayerParams {

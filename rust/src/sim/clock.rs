@@ -73,6 +73,26 @@ pub fn run_mvu_fifo(
     super::fast::run_mvu_fifo(params, weights, vectors, in_stall, out_stall, fifo_depth)
 }
 
+/// [`run_mvu_fifo`] with caller-shared weight state
+/// ([`SharedWeights`](super::SharedWeights)): a pre-partitioned
+/// [`WeightMem`](super::WeightMem) and/or pre-packed
+/// [`PackedWeightMem`](super::PackedWeightMem) built from the same
+/// weights. The explore engine drives this to amortize packing across a
+/// whole fold sweep; reports are bit-identical to [`run_mvu_fifo`].
+pub fn run_mvu_shared(
+    params: &ValidatedParams,
+    weights: &Matrix,
+    shared: &super::SharedWeights,
+    vectors: &[Vec<i32>],
+    in_stall: StallPattern,
+    out_stall: StallPattern,
+    fifo_depth: usize,
+) -> Result<SimReport> {
+    super::fast::run_mvu_fifo_shared(
+        params, weights, shared, vectors, in_stall, out_stall, fifo_depth,
+    )
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;

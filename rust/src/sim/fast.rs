@@ -8,11 +8,18 @@
 //!
 //!   * **ideal flow** (no stall pattern on either endpoint): every cycle
 //!     consumes exactly one compute slot, so the whole run collapses into
-//!     closed-form cycle accounting plus one flat fold-block dot product
-//!     per output channel ([`pe_row`](super::simd_elem::pe_row)) — no FSM
-//!     dispatch, FIFO traffic or delay-line shifting at all. This is the
-//!     flow every figure/table sweep and the explore engine drive, and
-//!     where the >= 10x `hotpath` win comes from;
+//!     closed-form cycle accounting plus one fold-block dot product per
+//!     output channel — no FSM dispatch, FIFO traffic or delay-line
+//!     shifting at all. The dot-product datapath is picked per `SimdType`
+//!     at run start (DESIGN.md §Packed datapath): `Xnor` and
+//!     `BinaryWeights` run bit-packed SWAR kernels
+//!     ([`pe_row_packed_xnor`](super::simd_elem::pe_row_packed_xnor) /
+//!     [`pe_row_packed_binary`](super::simd_elem::pe_row_packed_binary))
+//!     over u64 words — what the RTL actually synthesizes (Fig. 4) —
+//!     while `Standard` keeps the flat i32
+//!     [`pe_row`](super::simd_elem::pe_row). This is the flow every
+//!     figure/table sweep and the explore engine drive, and where the
+//!     >= 10x `hotpath` win comes from;
 //!   * **output-blocked intervals** (a result parked in the last pipeline
 //!     stage, FIFO full, sink stalled): the datapath is frozen (§5.3.2),
 //!     so the kernel jumps straight to the sink's next ready cycle and
@@ -28,17 +35,39 @@
 //! real work happens are executed through the same [`MvuBatch::step`] the
 //! oracle uses, so the two kernels cannot drift on the hard cases.
 
+use std::sync::Arc;
+
 use anyhow::{bail, Result};
 
-use crate::cfg::ValidatedParams;
-use crate::quant::Matrix;
+use crate::cfg::{SimdType, ValidatedParams};
+use crate::quant::{pack_bits_into, Matrix};
 
 use super::axis::{AxisSink, AxisSource, StallPattern};
 use super::batch_unit::MvuBatch;
 use super::clock::SimReport;
 use super::fifo;
-use super::simd_elem::pe_row;
+use super::simd_elem::{pe_row, pe_row_packed_binary, pe_row_packed_xnor};
+use super::weight_mem::{PackedWeightMem, WeightMem};
 use super::PIPELINE_STAGES;
+
+/// Pre-built weight state a caller may share across runs of the same
+/// weight matrix — the explore engine memoizes one of these per stimulus
+/// and hands it to every fold variant / flow re-run, so a fold sweep
+/// packs and partitions each matrix once instead of once per point.
+///
+/// Both fields are optional; an empty value (the default) makes the
+/// kernel build what it needs per run. **Contract:** when set, `mem` must
+/// have been built from the same `(params, weights)` the run is given
+/// (shape-checked), and `packed` from the same `weights` (shape-checked;
+/// contents are the caller's responsibility, exactly like `mem`'s).
+#[derive(Debug, Clone, Default)]
+pub struct SharedWeights {
+    /// Flat per-PE memories for the cycle-stepped (stalled) path.
+    pub mem: Option<Arc<WeightMem>>,
+    /// Bit-packed rows for the ideal-flow packed datapath
+    /// (`Xnor`/`BinaryWeights`; ignored for `Standard`).
+    pub packed: Option<Arc<PackedWeightMem>>,
+}
 
 /// Batched-kernel run: stall patterns plus an explicit output-FIFO depth.
 /// Entry point behind [`super::run_mvu_fifo`].
@@ -50,11 +79,54 @@ pub fn run_mvu_fifo(
     out_stall: StallPattern,
     fifo_depth: usize,
 ) -> Result<SimReport> {
+    run_mvu_fifo_shared(
+        params,
+        weights,
+        &SharedWeights::default(),
+        vectors,
+        in_stall,
+        out_stall,
+        fifo_depth,
+    )
+}
+
+/// [`run_mvu_fifo`] with caller-shared weight state (see
+/// [`SharedWeights`]). Behind [`super::run_mvu_shared`].
+pub fn run_mvu_fifo_shared(
+    params: &ValidatedParams,
+    weights: &Matrix,
+    shared: &SharedWeights,
+    vectors: &[Vec<i32>],
+    in_stall: StallPattern,
+    out_stall: StallPattern,
+    fifo_depth: usize,
+) -> Result<SimReport> {
     if matches!(in_stall, StallPattern::None) && matches!(out_stall, StallPattern::None) {
-        run_ideal(params, weights, vectors, fifo_depth)
+        run_ideal(params, weights, shared.packed.as_deref(), vectors, fifo_depth, false)
     } else {
-        run_skipping(params, weights, vectors, in_stall, out_stall, fifo_depth)
+        run_skipping(
+            params,
+            weights,
+            shared.mem.clone(),
+            vectors,
+            in_stall,
+            out_stall,
+            fifo_depth,
+        )
     }
+}
+
+/// The flat-i32 ideal-flow datapath in isolation (no bit-packing even for
+/// the 1-bit SIMD types). Kept public as the baseline of the
+/// packed-vs-unpacked shootout in `benches/hotpath.rs`; not a production
+/// entry point.
+pub fn run_mvu_ideal_unpacked(
+    params: &ValidatedParams,
+    weights: &Matrix,
+    vectors: &[Vec<i32>],
+    fifo_depth: usize,
+) -> Result<SimReport> {
+    run_ideal(params, weights, None, vectors, fifo_depth, true)
 }
 
 /// Ideal flow (always-valid source, always-ready sink): the machine
@@ -65,11 +137,23 @@ pub fn run_mvu_fifo(
 /// form, and the numerics reduce to one fold-block dot product per output
 /// channel (bit-identical to slot-wise accumulation: wrapping addition is
 /// associative).
+///
+/// The datapath is chosen **once at run start** from the SIMD type
+/// (DESIGN.md §Packed datapath): `Xnor` and `BinaryWeights` evaluate rows
+/// over bit-packed weights (`packed`, or packed here when the caller
+/// shares none) via the SWAR kernels
+/// ([`pe_row_packed_xnor`]/[`pe_row_packed_binary`]) — bit-identical to
+/// the flat kernel by the popcount / sign-mask identities — while
+/// `Standard` keeps the flat i32 [`pe_row`]. Operands the RTL could never
+/// store (non-bit lanes where the type requires bits) fall back to the
+/// flat kernel so packed and unpacked evaluation can never diverge.
 fn run_ideal(
     params: &ValidatedParams,
     weights: &Matrix,
+    packed: Option<&PackedWeightMem>,
     vectors: &[Vec<i32>],
     fifo_depth: usize,
+    force_flat: bool,
 ) -> Result<SimReport> {
     // same failure order as the oracle: weight shape (WeightMem), then
     // FIFO depth (MvuStream).
@@ -83,19 +167,72 @@ fn run_ideal(
         );
     }
     fifo::ensure_depth(fifo_depth)?;
+    if let Some(pw) = packed {
+        if pw.rows() != weights.rows || pw.cols() != weights.cols {
+            bail!(
+                "shared packed weights {}x{} do not match weight matrix {}x{}",
+                pw.rows(),
+                pw.cols(),
+                weights.rows,
+                weights.cols
+            );
+        }
+    }
 
     let n = vectors.len();
     let rows = params.matrix_rows();
+    let cols = params.matrix_cols();
     let ty = params.simd_type;
+    // run-start dispatch: pack the weights for the 1-bit datapaths unless
+    // the caller shared a packing (or the weights are unpackable, in
+    // which case the flat fallback keeps bit-identity).
+    let packable = !force_flat && !matches!(ty, SimdType::Standard);
+    let owned: Option<PackedWeightMem> = if packable && packed.is_none() {
+        PackedWeightMem::from_matrix(weights).ok()
+    } else {
+        None
+    };
+    let packed: Option<&PackedWeightMem> = if packable {
+        packed.or(owned.as_ref())
+    } else {
+        None
+    };
+
+    let mut xbits: Vec<u64> = Vec::new(); // reused per-vector packing buffer
     let mut outputs = Vec::with_capacity(n);
     for v in vectors {
-        assert_eq!(v.len(), params.matrix_cols());
+        assert_eq!(v.len(), cols);
         // output stream words are neuron-fold major and each word carries
         // PE consecutive rows, so the reassembled vector is exactly row
         // order 0..rows.
         let mut out = Vec::with_capacity(rows);
-        for r in 0..rows {
-            out.push(pe_row(v, weights.row(r), ty));
+        let mut flat = true;
+        if let Some(pw) = packed {
+            match ty {
+                SimdType::Xnor => {
+                    // inputs must be bits too; a non-bit lane falls this
+                    // vector back to the flat kernel (same values).
+                    if pack_bits_into(v, &mut xbits).is_ok() {
+                        for r in 0..rows {
+                            out.push(pe_row_packed_xnor(&xbits, pw.row_words(r), cols));
+                        }
+                        flat = false;
+                    }
+                }
+                SimdType::BinaryWeights => {
+                    let total = v.iter().fold(0i32, |acc, &x| acc.wrapping_add(x));
+                    for r in 0..rows {
+                        out.push(pe_row_packed_binary(v, pw.row_words(r), total));
+                    }
+                    flat = false;
+                }
+                SimdType::Standard => {}
+            }
+        }
+        if flat {
+            for r in 0..rows {
+                out.push(pe_row(v, weights.row(r), ty));
+            }
         }
         outputs.push(out);
     }
@@ -123,15 +260,22 @@ fn run_ideal(
 /// General flow: the oracle's cycle loop with quiescent intervals skipped.
 /// Cycles that do work run through the same machine as the reference;
 /// cycles that provably cannot change machine state are applied in bulk.
+/// A shared weight memory (already partitioned for this folding) skips
+/// the per-run matrix partition; the caller guarantees it was built from
+/// `weights`.
 fn run_skipping(
     params: &ValidatedParams,
     weights: &Matrix,
+    shared_mem: Option<Arc<WeightMem>>,
     vectors: &[Vec<i32>],
     in_stall: StallPattern,
     out_stall: StallPattern,
     fifo_depth: usize,
 ) -> Result<SimReport> {
-    let mut mvu = MvuBatch::with_fifo_depth(params, weights, fifo_depth)?;
+    let mut mvu = match shared_mem {
+        Some(m) => MvuBatch::with_weight_mem(params, m, fifo_depth)?,
+        None => MvuBatch::with_fifo_depth(params, weights, fifo_depth)?,
+    };
     let words: Vec<Vec<i32>> = vectors
         .iter()
         .flat_map(|v| MvuBatch::vector_to_words(params, v))
@@ -343,6 +487,143 @@ mod tests {
         let oracle =
             reference::run_mvu_fifo(&p, &w, &vecs, in_s.clone(), out_s.clone(), 2).unwrap();
         assert_eq!(fast, oracle);
+    }
+
+    /// The packed 1-bit datapaths against the oracle, with stimulus in
+    /// the legal range (bits) so the packed kernels actually engage, at
+    /// widths that straddle the u64 word boundary.
+    #[test]
+    fn packed_ideal_paths_are_bit_identical_to_reference() {
+        for ty in [SimdType::Xnor, SimdType::BinaryWeights] {
+            for (in_f, simd) in [(64usize, 8usize), (130, 13), (192, 3)] {
+                let p = DesignPoint::fc("packed")
+                    .in_features(in_f)
+                    .out_features(6)
+                    .pe(3)
+                    .simd(simd)
+                    .paper_precision(ty)
+                    .build()
+                    .unwrap();
+                let mut rng = Pcg32::new(23 + in_f as u64);
+                let w = Matrix::new(
+                    p.matrix_rows(),
+                    p.matrix_cols(),
+                    (0..p.matrix_rows() * p.matrix_cols())
+                        .map(|_| rng.next_range(2) as i32)
+                        .collect(),
+                )
+                .unwrap();
+                let vecs: Vec<Vec<i32>> = (0..3)
+                    .map(|_| {
+                        (0..p.matrix_cols())
+                            .map(|_| match ty {
+                                SimdType::Xnor => rng.next_range(2) as i32,
+                                _ => rng.next_range(16) as i32 - 8,
+                            })
+                            .collect()
+                    })
+                    .collect();
+                let fast = run_mvu_fifo(
+                    &p,
+                    &w,
+                    &vecs,
+                    StallPattern::None,
+                    StallPattern::None,
+                    super::super::DEFAULT_FIFO_DEPTH,
+                )
+                .unwrap();
+                let oracle = reference::run_mvu(&p, &w, &vecs).unwrap();
+                assert_eq!(fast, oracle, "{ty} in_f={in_f} simd={simd}");
+                // and the explicit flat datapath agrees too
+                let flat =
+                    run_mvu_ideal_unpacked(&p, &w, &vecs, super::super::DEFAULT_FIFO_DEPTH)
+                        .unwrap();
+                assert_eq!(flat, oracle, "unpacked {ty} in_f={in_f} simd={simd}");
+            }
+        }
+    }
+
+    /// Weights/inputs outside the packable range (a 2 in a 1-bit lane —
+    /// representable in the simulator's i32 lanes, never in the RTL) must
+    /// fall back to the flat kernel and still match the oracle.
+    #[test]
+    fn unpackable_operands_fall_back_bit_identically() {
+        let p = DesignPoint::fc("fallback")
+            .in_features(16)
+            .out_features(4)
+            .pe(2)
+            .simd(4)
+            .paper_precision(SimdType::BinaryWeights)
+            .build()
+            .unwrap();
+        let mut w = vec![0i32; 64];
+        w[5] = 2; // unpackable weight
+        for (i, v) in w.iter_mut().enumerate() {
+            if i % 3 == 0 {
+                *v = 1;
+            }
+        }
+        let w = Matrix::new(4, 16, w).unwrap();
+        let vecs = vec![(0..16).map(|i| i as i32 - 8).collect::<Vec<i32>>()];
+        let fast = run_mvu_fifo(
+            &p,
+            &w,
+            &vecs,
+            StallPattern::None,
+            StallPattern::None,
+            super::super::DEFAULT_FIFO_DEPTH,
+        )
+        .unwrap();
+        let oracle = reference::run_mvu(&p, &w, &vecs).unwrap();
+        assert_eq!(fast, oracle);
+    }
+
+    /// Caller-shared weight state must change nothing about the reports
+    /// (ideal and stalled flows), and a mis-shaped share must be refused.
+    #[test]
+    fn shared_weights_are_bit_identical_and_shape_checked() {
+        let p = point(16, 8, 2, 4);
+        let (w, vecs) = stimulus(&p, 3, 29);
+        let shared = SharedWeights {
+            mem: Some(Arc::new(WeightMem::from_matrix(&p, &w).unwrap())),
+            // Standard-type weights are not bits; packed stays None like
+            // the engine's memo would leave it.
+            packed: PackedWeightMem::from_matrix(&w).ok().map(Arc::new),
+        };
+        let depth = super::super::DEFAULT_FIFO_DEPTH;
+        let stall = StallPattern::Periodic { period: 5, duty: 2, phase: 0 };
+        for out_s in [StallPattern::None, stall] {
+            let plain =
+                run_mvu_fifo(&p, &w, &vecs, StallPattern::None, out_s.clone(), depth).unwrap();
+            let with_shared = run_mvu_fifo_shared(
+                &p,
+                &w,
+                &shared,
+                &vecs,
+                StallPattern::None,
+                out_s.clone(),
+                depth,
+            )
+            .unwrap();
+            assert_eq!(plain, with_shared, "{out_s:?}");
+        }
+        // a share built for a different folding is refused, not misread
+        let other = point(16, 8, 4, 8);
+        let wrong = SharedWeights {
+            mem: Some(Arc::new(WeightMem::from_matrix(&other, &w).unwrap())),
+            packed: None,
+        };
+        let err = run_mvu_fifo_shared(
+            &p,
+            &w,
+            &wrong,
+            &vecs,
+            StallPattern::None,
+            StallPattern::Periodic { period: 3, duty: 1, phase: 0 },
+            depth,
+        )
+        .unwrap_err();
+        assert!(err.to_string().contains("does not match"), "{err}");
     }
 
     #[test]

@@ -44,10 +44,12 @@ pub mod weight_mem;
 pub use axis::{AxisSink, AxisSource, StallPattern};
 pub use batch_unit::MvuBatch;
 pub use chain::{ChainReport, MvuChain};
-pub use clock::{run_mvu, run_mvu_fifo, run_mvu_stalled, SimReport};
+pub use clock::{run_mvu, run_mvu_fifo, run_mvu_shared, run_mvu_stalled, SimReport};
+pub use fast::SharedWeights;
 pub use fsm::{FsmInputs, FsmState, MvuFsm};
 pub use hls::HlsMvu;
 pub use swu::SlidingWindowUnit;
+pub use weight_mem::{PackedWeightMem, WeightMem};
 
 /// Pipeline register stages between compute-slot consumption and the
 /// output FIFO (weight/operand register, SIMD product register, adder-tree
@@ -61,8 +63,12 @@ pub const DEFAULT_FIFO_DEPTH: usize = 4;
 
 /// Version of the simulation kernel semantics, included in every
 /// simulation cache key (`explore::cache`). Version 2 introduced the
-/// batched/interval-skipping kernel; although it is bit-identical to
-/// version 1's per-cycle kernel, keying the cache on the kernel version
-/// means a future kernel change can never be served stale results from a
-/// previous kernel's on-disk entries.
-pub const SIM_KERNEL_VERSION: u32 = 2;
+/// batched/interval-skipping kernel; version 3 the bit-packed
+/// `Xnor`/`BinaryWeights` ideal-flow datapath (DESIGN.md §Packed
+/// datapath) **and** the fold-independent stimulus seed
+/// (`explore::stimulus_seed`), which changes the canonical stimulus of
+/// fold variants. The packed datapath itself is bit-identical to version
+/// 2, but keying the cache on the kernel version means a kernel change
+/// can never be served stale results from a previous kernel's on-disk
+/// entries.
+pub const SIM_KERNEL_VERSION: u32 = 3;

@@ -5,6 +5,7 @@
 //! accumulates across synapse folds.
 
 use crate::cfg::SimdType;
+use crate::quant::pack_bits_into;
 
 /// One SIMD element (Fig. 4): (a) XNOR, (b) +/-x mux, (c) multiplier.
 #[inline]
@@ -27,19 +28,42 @@ pub fn simd_lane(x: i32, w: i32, ty: SimdType) -> i32 {
     }
 }
 
-/// The PE's lane reduction: popcount for XNOR, adder tree otherwise.
-/// Implemented as a balanced binary tree (matching the logic-depth model
-/// in the delay estimator), though integer addition is associative so the
-/// result equals a linear sum.
+/// The PE's lane reduction as the RTL structures it: a balanced binary
+/// adder tree (the shape the delay estimator's logic-depth model prices).
+/// Executable documentation of that structure, held equal to the linear
+/// sums the datapath kernels use (`pe_slot`/`pe_row`) by the tests —
+/// legitimate because wrapping addition is associative and commutative.
+///
+/// Implemented as an iterative pairwise reduction over a fixed
+/// partial-sum stack (one slot per tree level, like a binary carry
+/// chain); the former formulation recursed with two slice splits per
+/// level, which is needless call-frame traffic for a model that exists
+/// to be read and property-tested against.
 pub fn adder_tree(lanes: &[i32]) -> i32 {
-    match lanes.len() {
-        0 => 0,
-        1 => lanes[0],
-        n => {
-            let (lo, hi) = lanes.split_at(n / 2);
-            adder_tree(lo).wrapping_add(adder_tree(hi))
+    // stack[k] holds the root of a complete 2^k-leaf subtree; pushing a
+    // leaf merges same-height subtrees exactly like incrementing a binary
+    // counter, so usize::BITS slots cover any slice length (and every
+    // shift below stays in range).
+    let mut stack = [0i32; usize::BITS as usize];
+    let mut count: usize = 0;
+    for &v in lanes {
+        let mut node = v;
+        let mut k = 0;
+        while count & (1 << k) != 0 {
+            node = stack[k].wrapping_add(node);
+            k += 1;
+        }
+        stack[k] = node;
+        count += 1;
+    }
+    // merge the leftover partials, low (rightmost leaves) to high
+    let mut acc = 0i32;
+    for (k, partial) in stack.iter().enumerate() {
+        if count & (1 << k) != 0 {
+            acc = partial.wrapping_add(acc);
         }
     }
+    acc
 }
 
 /// One PE compute slot: apply the SIMD lanes and reduce.
@@ -91,6 +115,85 @@ pub fn pe_row(x: &[i32], w: &[i32], ty: SimdType) -> i32 {
         i += BLOCK;
     }
     acc.wrapping_add(pe_slot(&x[i..], &w[i..], ty))
+}
+
+/// XNOR row dot product over pre-packed bits: popcount of the word-wise
+/// XNOR — exactly the Fig. 4(a) RTL datapath, 64 lanes per operation.
+/// `lanes` is the true row length; both slices are `ceil(lanes/64)`
+/// zero-padded words, and the tail mask keeps the padding (which would
+/// XNOR to all-ones) out of the count.
+///
+/// Bit-identical to [`pe_row`]`(.., SimdType::Xnor)`: both produce the
+/// agreement count modulo 2^32 (the i32 wrapping sum of `+1`s and the u32
+/// wrapping popcount accumulate the same residue).
+#[inline]
+pub fn pe_row_packed_xnor(x: &[u64], w: &[u64], lanes: usize) -> i32 {
+    debug_assert_eq!(x.len(), lanes.div_ceil(64));
+    debug_assert_eq!(w.len(), x.len());
+    let mut agree = 0u32;
+    let full = lanes / 64;
+    for i in 0..full {
+        agree = agree.wrapping_add((!(x[i] ^ w[i])).count_ones());
+    }
+    let tail = lanes % 64;
+    if tail > 0 {
+        let mask = (1u64 << tail) - 1;
+        agree = agree.wrapping_add((!(x[full] ^ w[full]) & mask).count_ones());
+    }
+    agree as i32
+}
+
+/// Binary-weight row dot product with the weight row as a sign mask:
+/// with S = sum of all lanes and S1 = sum of the lanes whose weight bit
+/// is set, `sum(w ? x : -x) = 2*S1 - S` — exact in wrapping i32
+/// arithmetic because Z/2^32 is a ring, so it is bit-identical to
+/// [`pe_row`]`(.., SimdType::BinaryWeights)`. The caller precomputes
+/// `total` (= S) once per input vector and amortizes it over every row.
+/// `wmask` is zero-padded past the row length, so the bit scan never
+/// indexes beyond `x`.
+#[inline]
+pub fn pe_row_packed_binary(x: &[i32], wmask: &[u64], total: i32) -> i32 {
+    debug_assert_eq!(wmask.len(), x.len().div_ceil(64));
+    let mut s1 = 0i32;
+    for (wi, &word) in wmask.iter().enumerate() {
+        let base = wi * 64;
+        let mut m = word;
+        while m != 0 {
+            let b = m.trailing_zeros() as usize;
+            s1 = s1.wrapping_add(x[base + b]);
+            m &= m - 1;
+        }
+    }
+    s1.wrapping_add(s1).wrapping_sub(total)
+}
+
+/// Packing wrapper over the SWAR kernels: evaluate one whole row from
+/// unpacked lanes, bit-identical to [`pe_row`] for **every** input —
+/// operands outside the packable range ({0,1} inputs/weights for Xnor,
+/// {0,1} weights for BinaryWeights) fall back to the flat kernel, exactly
+/// as the fast simulation kernel does. The hot path packs once per run
+/// and calls [`pe_row_packed_xnor`] / [`pe_row_packed_binary`] directly;
+/// this form exists for property tests and one-off callers.
+pub fn pe_row_packed(x: &[i32], w: &[i32], ty: SimdType) -> i32 {
+    debug_assert_eq!(x.len(), w.len());
+    let mut xw = Vec::new();
+    let mut ww = Vec::new();
+    match ty {
+        SimdType::Xnor => {
+            if pack_bits_into(x, &mut xw).is_err() || pack_bits_into(w, &mut ww).is_err() {
+                return pe_row(x, w, ty);
+            }
+            pe_row_packed_xnor(&xw, &ww, x.len())
+        }
+        SimdType::BinaryWeights => {
+            if pack_bits_into(w, &mut ww).is_err() {
+                return pe_row(x, w, ty);
+            }
+            let total = x.iter().fold(0i32, |a, &v| a.wrapping_add(v));
+            pe_row_packed_binary(x, &ww, total)
+        }
+        SimdType::Standard => pe_row(x, w, ty),
+    }
 }
 
 #[cfg(test)]
@@ -163,6 +266,83 @@ mod tests {
         for ty in SimdType::ALL {
             let expect = matvec(&x, &w, ty).unwrap()[0];
             assert_eq!(pe_slot(&x, w.row(0), ty), expect, "{ty}");
+        }
+    }
+
+    /// The packed-datapath identity chain on random inputs:
+    /// `popcount_xnor_packed` == `pe_slot(.., Xnor)` == `pe_row_packed`
+    /// for bit lanes, and `pe_row_packed` == `pe_row` == `pe_slot` on
+    /// every type (including wrapping-heavy BinaryWeights operands).
+    #[test]
+    fn prop_packed_row_kernels_match_pe_slot() {
+        use crate::proptest::{check, Config};
+        use crate::quant::popcount_xnor_packed;
+        check("packed == slot-wise", Config::cases(150), |g| {
+            let n = g.usize_in(0, 300);
+            for ty in SimdType::ALL {
+                let (xlo, xhi) = match ty {
+                    SimdType::Xnor => (0, 1),
+                    // wide range so 2*S1 - S actually wraps sometimes
+                    _ => (i32::MIN / 2, i32::MAX / 2),
+                };
+                let x: Vec<i32> = (0..n).map(|_| g.i32_in(xlo, xhi)).collect();
+                let w: Vec<i32> = (0..n)
+                    .map(|_| match ty {
+                        SimdType::Standard => g.i32_in(-8, 7),
+                        _ => g.i32_in(0, 1),
+                    })
+                    .collect();
+                let by_slot = pe_slot(&x, &w, ty);
+                let by_row = pe_row(&x, &w, ty);
+                let by_packed = pe_row_packed(&x, &w, ty);
+                if by_slot != by_row || by_row != by_packed {
+                    return Err(format!(
+                        "{ty} n={n}: slot {by_slot} row {by_row} packed {by_packed}"
+                    ));
+                }
+                if matches!(ty, SimdType::Xnor) {
+                    let pc = popcount_xnor_packed(&x, &w).map_err(|e| e.to_string())? as i32;
+                    if pc != by_slot {
+                        return Err(format!("xnor n={n}: popcount {pc} != slot {by_slot}"));
+                    }
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn pe_row_packed_falls_back_on_unpackable_operands() {
+        // a 2 in an xnor/binary operand cannot be bit-packed; the wrapper
+        // must agree with pe_row anyway.
+        let x = [1, 0, 2, 1];
+        let w = [1, 1, 0, 1];
+        assert_eq!(pe_row_packed(&x, &w, SimdType::Xnor), pe_row(&x, &w, SimdType::Xnor));
+        let wbad = [1, 0, 2, 1];
+        let xi = [5, -3, 7, 11];
+        assert_eq!(
+            pe_row_packed(&xi, &wbad, SimdType::BinaryWeights),
+            pe_row(&xi, &wbad, SimdType::BinaryWeights)
+        );
+    }
+
+    #[test]
+    fn packed_kernels_handle_word_boundaries() {
+        // lengths 63/64/65/128/130: full words, exact multiples, tails
+        for n in [0usize, 1, 63, 64, 65, 128, 130] {
+            let x: Vec<i32> = (0..n).map(|i| ((i * 5) % 3 == 0) as i32).collect();
+            let w: Vec<i32> = (0..n).map(|i| ((i * 7) % 2 == 0) as i32).collect();
+            assert_eq!(
+                pe_row_packed(&x, &w, SimdType::Xnor),
+                pe_row(&x, &w, SimdType::Xnor),
+                "xnor n={n}"
+            );
+            let xi: Vec<i32> = (0..n).map(|i| i as i32 * 17 - 40).collect();
+            assert_eq!(
+                pe_row_packed(&xi, &w, SimdType::BinaryWeights),
+                pe_row(&xi, &w, SimdType::BinaryWeights),
+                "binary n={n}"
+            );
         }
     }
 }

@@ -19,6 +19,12 @@
 //! The total cycle count from first input to last output equals
 //! `SF * NF * OD^2 + PIPELINE_STAGES + 1` with no stalls — asserted
 //! against the paper's Table 7 in tests.
+//!
+//! The stepped datapath here stays on flat i32 lanes deliberately: one
+//! `(nf, sf)` slot touches only `SIMD` lanes, too few to amortize
+//! bit-packing, and this unit is the semantic reference the packed
+//! ideal-flow kernels (DESIGN.md §Packed datapath) are held
+//! bit-identical to. Whole-row packed evaluation lives in `sim::fast`.
 
 use anyhow::Result;
 

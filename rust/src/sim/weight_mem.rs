@@ -9,7 +9,7 @@
 use anyhow::{bail, Result};
 
 use crate::cfg::ValidatedParams;
-use crate::quant::Matrix;
+use crate::quant::{Matrix, PackedMatrix};
 
 /// All PE weight memories of one MVU.
 ///
@@ -86,6 +86,70 @@ impl WeightMem {
     }
 }
 
+/// Bit-packed weight memories for the 1-bit datapaths
+/// (`SimdType::{Xnor, BinaryWeights}`; Standard keeps the flat i32
+/// [`WeightMem`]).
+///
+/// Storage is the weight matrix packed one bit per lane
+/// ([`PackedMatrix`]: row-major, each row word-aligned, LSB-first), which
+/// is exactly the concatenation of PE `p`'s `SIMD * B_w`-bit memory words
+/// `nf*SF .. (nf+1)*SF` for row `nf*PE + p` — the packed analogue of
+/// [`WeightMem::read_row`]'s contiguity guarantee, asserted by
+/// `packed_words_match_flat_memory`.
+///
+/// Deliberately **fold-independent**: PE/SIMD only choose how the row
+/// bits are *framed* into memory words, not where they live, so one
+/// packing serves every legal (PE, SIMD) folding of the same matrix.
+/// That is what lets the explore engine share a single
+/// `Arc<PackedWeightMem>` across a whole fold sweep (fig. 12–14 style)
+/// instead of re-packing the matrix once per fold variant.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct PackedWeightMem {
+    bits: PackedMatrix,
+}
+
+impl PackedWeightMem {
+    /// Pack a {0,1} weight matrix. Errors on entries outside {0,1} — the
+    /// fast kernel falls back to the flat datapath in that case, so
+    /// packed and unpacked runs stay bit-identical on any input.
+    pub fn from_matrix(w: &Matrix) -> Result<PackedWeightMem> {
+        Ok(PackedWeightMem { bits: PackedMatrix::from_matrix(w)? })
+    }
+
+    pub fn rows(&self) -> usize {
+        self.bits.rows
+    }
+
+    pub fn cols(&self) -> usize {
+        self.bits.cols
+    }
+
+    /// Matrix row `r` as packed words — the whole-row operand of
+    /// [`pe_row_packed_xnor`](super::simd_elem::pe_row_packed_xnor) /
+    /// [`pe_row_packed_binary`](super::simd_elem::pe_row_packed_binary).
+    #[inline]
+    pub fn row_words(&self, r: usize) -> &[u64] {
+        self.bits.row_words(r)
+    }
+
+    /// The SIMD-bit memory word of PE `p` at address `nf * SF + sf` under
+    /// the folding described by `params`, unpacked to lanes. Fold
+    /// geometry is an argument rather than state (see the type docs);
+    /// this accessor exists for layout tests and debugging, not the hot
+    /// path.
+    pub fn read(&self, params: &ValidatedParams, p: usize, addr: usize) -> Vec<i32> {
+        let sf = params.synapse_fold();
+        let (nf, s) = (addr / sf, addr % sf);
+        let row = nf * params.pe + p;
+        (0..params.simd).map(|l| self.bits.lane(row, s * params.simd + l)).collect()
+    }
+
+    /// Total weight bits stored (1 bit per lane).
+    pub fn total_bits(&self) -> usize {
+        self.bits.rows * self.bits.cols
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -146,5 +210,72 @@ mod tests {
         let p = params();
         let wm = WeightMem::from_matrix(&p, &matrix()).unwrap();
         assert_eq!(wm.total_bits(4), 4 * 8 * 4); // rows*cols*bits
+    }
+
+    /// Bit matrix for the packed-memory tests (shape of `params()`).
+    fn bit_matrix() -> Matrix {
+        Matrix::new(4, 8, (0..32).map(|i| ((i * 5) % 3 == 0) as i32).collect()).unwrap()
+    }
+
+    #[test]
+    fn packed_words_match_flat_memory() {
+        // PackedWeightMem::read under a folding must agree word-for-word
+        // with the flat WeightMem built for that folding, and row_words
+        // must carry the matrix row bits verbatim.
+        let p = params();
+        let m = bit_matrix();
+        let flat = WeightMem::from_matrix(&p, &m).unwrap();
+        let packed = PackedWeightMem::from_matrix(&m).unwrap();
+        assert_eq!((packed.rows(), packed.cols()), (m.rows, m.cols));
+        for pe in 0..p.pe {
+            for addr in 0..p.weight_mem_depth() {
+                assert_eq!(
+                    packed.read(&p, pe, addr),
+                    flat.read(pe, addr),
+                    "pe={pe} addr={addr}"
+                );
+            }
+        }
+        for r in 0..m.rows {
+            for c in 0..m.cols {
+                assert_eq!(
+                    (packed.row_words(r)[c / 64] >> (c % 64)) & 1,
+                    m.at(r, c) as u64,
+                    "r={r} c={c}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn packing_is_fold_independent() {
+        // one packing serves two different foldings of the same matrix
+        let m = bit_matrix();
+        let packed = PackedWeightMem::from_matrix(&m).unwrap();
+        for (pe, simd) in [(1usize, 8usize), (4, 2)] {
+            let p = crate::cfg::DesignPoint::fc("t")
+                .in_features(8)
+                .out_features(4)
+                .pe(pe)
+                .simd(simd)
+                .build()
+                .unwrap();
+            let flat = WeightMem::from_matrix(&p, &m).unwrap();
+            for q in 0..pe {
+                for addr in 0..p.weight_mem_depth() {
+                    assert_eq!(
+                        packed.read(&p, q, addr),
+                        flat.read(q, addr),
+                        "pe={pe} simd={simd} q={q} addr={addr}"
+                    );
+                }
+            }
+        }
+        assert_eq!(packed.total_bits(), 32);
+    }
+
+    #[test]
+    fn packed_rejects_nonbit_weights() {
+        assert!(PackedWeightMem::from_matrix(&matrix()).is_err());
     }
 }

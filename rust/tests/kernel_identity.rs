@@ -6,16 +6,25 @@
 //! occupancy high-water mark — over the full Table 2 grid and under
 //! arbitrary stall patterns and FIFO depths.
 
+use std::sync::Arc;
+
 use finn_mvu::cfg::{DesignPoint, LayerParams, SimdType, ValidatedParams};
-use finn_mvu::explore::{content_hash, params_key, stimulus_inputs, stimulus_weights};
+use finn_mvu::explore::{stimulus_inputs, stimulus_seed, stimulus_weights};
 use finn_mvu::harness::SweepKind;
 use finn_mvu::proptest::{check, Config, Gen};
 use finn_mvu::quant::Matrix;
-use finn_mvu::sim::{reference, run_mvu_fifo, StallPattern, DEFAULT_FIFO_DEPTH};
+use finn_mvu::sim::{
+    reference, run_mvu_fifo, run_mvu_shared, PackedWeightMem, SharedWeights, StallPattern,
+    WeightMem, DEFAULT_FIFO_DEPTH,
+};
 
 /// Every Table 2 sweep configuration under all three SIMD types, with the
-/// engine's canonical deterministic stimulus: the fast kernel's report
-/// must equal the oracle's byte for byte.
+/// engine's canonical deterministic stimulus (fold-independent seed, the
+/// one sweeps actually run): the fast kernel's report — packed datapath
+/// for Xnor/BinaryWeights, flat for Standard — must equal the oracle's
+/// byte for byte. Run under `--release` in CI as well: wrapping/overflow
+/// divergences between the SWAR identities and the slot-wise kernels
+/// would hide behind debug_asserts in dev builds.
 #[test]
 fn kernels_identical_over_table2_grid() {
     let mut points = 0usize;
@@ -23,7 +32,7 @@ fn kernels_identical_over_table2_grid() {
         for ty in SimdType::ALL {
             for sp in kind.points(ty) {
                 let p = &sp.params;
-                let seed = content_hash(&params_key(p));
+                let seed = stimulus_seed(p);
                 let w = stimulus_weights(p, seed);
                 let inputs = stimulus_inputs(p, seed ^ 0x9e37_79b9_7f4a_7c15, 2);
                 let fast = run_mvu_fifo(
@@ -183,7 +192,7 @@ fn kernels_identical_on_wide_rows() {
             .precision(wb, ib, 0)
             .build()
             .unwrap();
-        let seed = content_hash(&params_key(&p));
+        let seed = stimulus_seed(&p);
         let w = stimulus_weights(&p, seed);
         let inputs = stimulus_inputs(&p, seed ^ 1, 3);
         let fast = run_mvu_fifo(
@@ -206,4 +215,109 @@ fn kernels_identical_on_wide_rows() {
         .unwrap();
         assert_eq!(fast, oracle, "{ty}");
     }
+}
+
+/// The sweep-sharing contract end to end: one bit packing (and one flat
+/// memory per folding) built once and shared via `Arc` across every fold
+/// variant of a layer — exactly what the explore engine's stimulus memo
+/// does — must reproduce the oracle bit-for-bit on ideal *and* stalled
+/// flows, for both 1-bit SIMD types.
+#[test]
+fn shared_packing_identical_across_fold_sweep() {
+    for ty in [SimdType::Xnor, SimdType::BinaryWeights] {
+        // one layer (64 cols x 8 rows), the matrix packed exactly once
+        let base = DesignPoint::fc("share")
+            .in_features(64)
+            .out_features(8)
+            .pe(1)
+            .simd(1)
+            .paper_precision(ty)
+            .build()
+            .unwrap();
+        let seed = stimulus_seed(&base);
+        let w = stimulus_weights(&base, seed);
+        let inputs = stimulus_inputs(&base, seed ^ 0x9e37_79b9_7f4a_7c15, 2);
+        let packed = Arc::new(PackedWeightMem::from_matrix(&w).unwrap());
+        let out_stall = StallPattern::Periodic { period: 6, duty: 2, phase: 1 };
+        for (pe, simd) in [(1usize, 1usize), (2, 4), (4, 16), (8, 64)] {
+            let p = DesignPoint::fc("share")
+                .in_features(64)
+                .out_features(8)
+                .pe(pe)
+                .simd(simd)
+                .paper_precision(ty)
+                .build()
+                .unwrap();
+            assert_eq!(stimulus_seed(&p), seed, "stimulus seed must be fold-independent");
+            let shared = SharedWeights {
+                mem: Some(Arc::new(WeightMem::from_matrix(&p, &w).unwrap())),
+                packed: Some(packed.clone()),
+            };
+            for out_s in [StallPattern::None, out_stall.clone()] {
+                let fast = run_mvu_shared(
+                    &p,
+                    &w,
+                    &shared,
+                    &inputs,
+                    StallPattern::None,
+                    out_s.clone(),
+                    DEFAULT_FIFO_DEPTH,
+                )
+                .unwrap();
+                let oracle = reference::run_mvu_fifo(
+                    &p,
+                    &w,
+                    &inputs,
+                    StallPattern::None,
+                    out_s,
+                    DEFAULT_FIFO_DEPTH,
+                )
+                .unwrap();
+                assert_eq!(fast, oracle, "{ty} pe={pe} simd={simd}");
+            }
+        }
+    }
+}
+
+/// Operands outside the packable range (a non-bit lane in a 1-bit
+/// position) must route the fast kernel onto the flat fallback and still
+/// match the oracle — in release builds too, where no debug_assert can
+/// mask a divergence.
+#[test]
+fn unpackable_weights_fall_back_identically() {
+    let p = DesignPoint::fc("nonbit")
+        .in_features(12)
+        .out_features(4)
+        .pe(2)
+        .simd(4)
+        .simd_type(SimdType::BinaryWeights)
+        .precision(1, 4, 0)
+        .build()
+        .unwrap();
+    let mut data = vec![0i32; 48];
+    for (i, v) in data.iter_mut().enumerate() {
+        *v = (i % 2) as i32;
+    }
+    data[7] = 3; // never representable in one weight bit
+    let w = Matrix::new(4, 12, data).unwrap();
+    let inputs = vec![(0..12).map(|i| i - 6).collect::<Vec<i32>>()];
+    let fast = run_mvu_fifo(
+        &p,
+        &w,
+        &inputs,
+        StallPattern::None,
+        StallPattern::None,
+        DEFAULT_FIFO_DEPTH,
+    )
+    .unwrap();
+    let oracle = reference::run_mvu_fifo(
+        &p,
+        &w,
+        &inputs,
+        StallPattern::None,
+        StallPattern::None,
+        DEFAULT_FIFO_DEPTH,
+    )
+    .unwrap();
+    assert_eq!(fast, oracle);
 }
