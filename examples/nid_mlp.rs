@@ -88,6 +88,20 @@ fn main() -> anyhow::Result<()> {
     }
     println!("[simulator] end-to-end {} cycles for one record", total_cycles);
 
+    // ---- 3b. the same network as one dataflow *chain* ----------------------
+    // real inter-layer backpressure, simulated by the next-event chain
+    // kernel (sim::run_chain, bit-identical to the per-cycle MvuChain
+    // oracle) — the paper's Table 7 pipeline view of the same weights.
+    let chain_layers = manifest.nid_chain()?;
+    let chain_rep = finn_mvu::sim::run_chain(&chain_layers, &[sample.inputs.clone()])?;
+    assert_eq!(chain_rep.outputs[0], v, "chain diverges from layer-serial simulation");
+    println!(
+        "[simulator] chain: {} cycles end to end (first out {}, {:.2}x overlap vs layer-serial)",
+        chain_rep.exec_cycles,
+        chain_rep.first_out_cycle,
+        total_cycles as f64 / chain_rep.exec_cycles as f64
+    );
+
     // ---- 4. reference accuracy + cross-path exactness -----------------------
     let mut correct = 0usize;
     for (i, rec) in records.iter().enumerate() {

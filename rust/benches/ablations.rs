@@ -19,7 +19,7 @@ use finn_mvu::estimate::Style;
 use finn_mvu::eval::Session;
 use finn_mvu::harness::random_weights;
 use finn_mvu::quant::Thresholds;
-use finn_mvu::sim::{run_mvu_fifo, ChainReport, MvuChain, StallPattern};
+use finn_mvu::sim::{run_chain, run_mvu_fifo, ChainReport, StallPattern};
 use finn_mvu::util::rng::Pcg32;
 use finn_mvu::util::table::{fnum, Table};
 
@@ -143,8 +143,9 @@ fn a4_chain_overlap(ex: &Session) {
         let inputs: Vec<Vec<i32>> = (0..n)
             .map(|_| (0..600).map(|_| rng.next_range(4) as i32).collect())
             .collect();
-        let mut chain = MvuChain::new(layers.clone())?;
-        chain.run(&inputs)
+        // the next-event fast kernel (bit-identical to the per-cycle
+        // MvuChain oracle — tests/chain_identity.rs)
+        run_chain(&layers, &inputs)
     });
     let mut t = Table::new(vec![
         "records",

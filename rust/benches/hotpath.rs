@@ -16,12 +16,14 @@
 //! Run with: `cargo bench --bench hotpath`
 
 use finn_mvu::cfg::{nid_layers, DesignPoint, SimdType, ValidatedParams};
-use finn_mvu::eval::{Session, SessionConfig};
+use finn_mvu::eval::{ChainRequest, Session, SessionConfig, SimOptions};
+use finn_mvu::explore::stimulus_thresholds;
 use finn_mvu::harness::{bench, random_weights, SweepKind};
-use finn_mvu::quant::{matvec, Matrix};
+use finn_mvu::quant::{matvec, Matrix, Thresholds};
 use finn_mvu::runtime::{default_artifacts_dir, Engine};
 use finn_mvu::sim::{
-    fast, reference, run_mvu, run_mvu_fifo, StallPattern, DEFAULT_FIFO_DEPTH,
+    fast, reference, run_chain_stalled, run_mvu, run_mvu_fifo, MvuChain, StallPattern,
+    DEFAULT_FIFO_DEPTH,
 };
 use finn_mvu::util::rng::Pcg32;
 
@@ -215,6 +217,105 @@ fn xnor_packed_shootout() {
     println!("    -> stimulus memo over one cold sweep: {}", session.stimulus_stats());
 }
 
+/// Next-event chain kernel vs the per-cycle chain oracle on the 3-layer
+/// NID MLP geometry under the paper's 1-bit Xnor datapath, with periodic
+/// stalls on both chain endpoints (the Table 7 hot path: end-to-end
+/// throughput set by the bottleneck layer's initiation interval).
+/// Identical reports by construction (tests/chain_identity.rs), so the
+/// headline is simulated chain cycles per second; the acceptance bar for
+/// the next-event kernel with packed Xnor stages is >= 5x.
+fn nid_chain_shootout() {
+    let fc = |name: &str, fin: usize, fout: usize, pe: usize, simd: usize, ob: u32| {
+        DesignPoint::fc(name)
+            .in_features(fin)
+            .out_features(fout)
+            .pe(pe)
+            .simd(simd)
+            .simd_type(SimdType::Xnor)
+            .precision(1, 1, ob)
+            .build()
+            .unwrap()
+    };
+    let points =
+        [fc("xn0", 600, 64, 64, 50, 1), fc("xn1", 64, 64, 16, 32, 1), fc("xn2", 64, 1, 1, 8, 0)];
+    let layers: Vec<(ValidatedParams, Matrix, Option<Thresholds>)> = points
+        .iter()
+        .enumerate()
+        .map(|(i, p)| {
+            (p.clone(), random_weights(p, 40 + i as u64), stimulus_thresholds(p, 50 + i as u64))
+        })
+        .collect();
+    let mut rng = Pcg32::new(19);
+    let inputs: Vec<Vec<i32>> = (0..32)
+        .map(|_| (0..600).map(|_| rng.next_range(2) as i32).collect())
+        .collect();
+    let in_s = StallPattern::Periodic { period: 6, duty: 2, phase: 1 };
+    let out_s = StallPattern::Periodic { period: 5, duty: 2, phase: 0 };
+    let run_fast = || {
+        run_chain_stalled(&layers, &inputs, in_s.clone(), out_s.clone(), DEFAULT_FIFO_DEPTH)
+            .unwrap()
+    };
+    let run_oracle = || {
+        MvuChain::new(&layers)
+            .unwrap()
+            .run_stalled(&inputs, in_s.clone(), out_s.clone())
+            .unwrap()
+    };
+    let rep = run_fast();
+    assert_eq!(rep, run_oracle(), "chain kernel divergence");
+    println!(
+        "nid chain shootout: 3 Xnor layers, {} vectors, {} chain cycles per pass \
+         (bottleneck II 12)",
+        inputs.len(),
+        rep.exec_cycles
+    );
+
+    let fast_b = bench("sim/nid_chain_fast_kernel", || {
+        std::hint::black_box(run_fast());
+    });
+    println!("{fast_b}");
+    let oracle_b = bench("sim/nid_chain_reference_kernel", || {
+        std::hint::black_box(run_oracle());
+    });
+    println!("{oracle_b}");
+    let speedup = oracle_b.mean_ns / fast_b.mean_ns.max(1.0);
+    println!(
+        "    -> fast {:.2} Mcycles/s vs reference {:.2} Mcycles/s: {:.1}x speedup \
+         (acceptance bar: >= 5x) {}",
+        rep.exec_cycles as f64 / (fast_b.mean_ns / 1e3),
+        rep.exec_cycles as f64 / (oracle_b.mean_ns / 1e3),
+        speedup,
+        if speedup >= 5.0 { "PASS" } else { "FAIL" }
+    );
+
+    // the same network through the engine as a fold sweep: every fold
+    // variant of the chain reuses the memoized per-layer weight
+    // matrices, thresholds and bit packings (chain-side memo counters).
+    let session = Session::serial();
+    let variants = [
+        [(64usize, 50usize), (16, 32), (1, 8)],
+        [(32, 25), (8, 16), (1, 4)],
+        [(16, 20), (4, 8), (1, 2)],
+    ];
+    for folds in &variants {
+        let layers: Vec<ValidatedParams> = [(600usize, 64usize, 1u32), (64, 64, 1), (64, 1, 0)]
+            .iter()
+            .zip(folds)
+            .map(|(&(fin, fout, ob), &(pe, simd))| {
+                fc(&format!("xn{fin}x{fout}p{pe}"), fin, fout, pe, simd, ob)
+            })
+            .collect();
+        let req = ChainRequest::new(layers)
+            .with_sim(SimOptions { batch: 4, ..SimOptions::default() });
+        let sum = session.evaluate_chain(&req).unwrap();
+        assert!(sum.matches_reference);
+    }
+    println!(
+        "    -> chain fold sweep (3 variants) stimulus memo: {}",
+        session.stimulus_stats()
+    );
+}
+
 fn explore_bench() {
     // the full Table 2 grid (all six sweeps x three SIMD types)
     let points: Vec<_> = SweepKind::ALL
@@ -251,6 +352,9 @@ fn main() {
 
     // the bit-packed low-precision datapath vs the flat kernel it replaced
     xnor_packed_shootout();
+
+    // the next-event chain kernel vs the per-cycle chain oracle
+    nid_chain_shootout();
 
     // L3 simulator hot loop
     let nid0 = nid_layers().remove(0);

@@ -4,12 +4,68 @@
 //!
 //! Run with: `cargo bench --bench table7_nid`
 
+use finn_mvu::cfg::{nid_layers, ValidatedParams};
 use finn_mvu::coordinator::{Pipeline, PipelineConfig, Request};
 use finn_mvu::eval::Session;
-use finn_mvu::harness::{bench_with, table7_with};
+use finn_mvu::explore::stimulus_thresholds;
+use finn_mvu::harness::{bench, bench_with, random_weights, table7_with};
 use finn_mvu::nid::generate;
+use finn_mvu::quant::{Matrix, Thresholds};
 use finn_mvu::runtime::{default_artifacts_dir, Manifest};
+use finn_mvu::sim::{run_chain_stalled, MvuChain, StallPattern, DEFAULT_FIFO_DEPTH};
+use finn_mvu::util::rng::Pcg32;
 use std::time::Duration;
+
+/// The NID MLP as a cycle-accurate chain (trained weights when the
+/// artifacts exist, the engine's canonical random stimulus otherwise):
+/// next-event fast kernel vs the per-cycle chain oracle under periodic
+/// endpoint stalls — end-to-end throughput is set by the bottleneck
+/// layer's initiation interval (paper Table 7).
+fn chain_shootout(layers: &[(ValidatedParams, Matrix, Option<Thresholds>)], trained: bool) {
+    let mut rng = Pcg32::new(901);
+    let inputs: Vec<Vec<i32>> = (0..32)
+        .map(|_| (0..600).map(|_| rng.next_range(4) as i32).collect())
+        .collect();
+    let in_s = StallPattern::Periodic { period: 8, duty: 3, phase: 0 };
+    let out_s = StallPattern::Periodic { period: 7, duty: 2, phase: 3 };
+    let run_fast = || {
+        run_chain_stalled(layers, &inputs, in_s.clone(), out_s.clone(), DEFAULT_FIFO_DEPTH)
+            .unwrap()
+    };
+    let run_oracle = || {
+        MvuChain::new(layers)
+            .unwrap()
+            .run_stalled(&inputs, in_s.clone(), out_s.clone())
+            .unwrap()
+    };
+    let rep = run_fast();
+    assert_eq!(rep, run_oracle(), "chain kernel divergence");
+    let ii = MvuChain::new(layers).unwrap().bottleneck_ii();
+    println!(
+        "NID chain ({} weights): {} vectors in {} cycles (first out {}, bottleneck II {}, \
+         steady state >= {} cycles)",
+        if trained { "trained" } else { "random" },
+        inputs.len(),
+        rep.exec_cycles,
+        rep.first_out_cycle,
+        ii,
+        ii * inputs.len()
+    );
+    let fast_b = bench("table7/nid_chain_fast_kernel", || {
+        std::hint::black_box(run_fast());
+    });
+    println!("{fast_b}");
+    let oracle_b = bench("table7/nid_chain_reference_kernel", || {
+        std::hint::black_box(run_oracle());
+    });
+    println!("{oracle_b}");
+    println!(
+        "    -> fast {:.2} Mcycles/s vs reference {:.2} Mcycles/s: {:.1}x speedup",
+        rep.exec_cycles as f64 / (fast_b.mean_ns / 1e3),
+        rep.exec_cycles as f64 / (oracle_b.mean_ns / 1e3),
+        oracle_b.mean_ns / fast_b.mean_ns.max(1.0)
+    );
+}
 
 fn main() {
     let ex = Session::parallel();
@@ -35,6 +91,26 @@ fn main() {
             r.synth_s.0 / r.synth_s.1,
             (r.delay_ns.0 - r.delay_ns.1) / r.delay_ns.0 * 100.0
         );
+    }
+
+    // cycle-accurate chain shootout (fast kernel vs per-cycle oracle)
+    let chain = Manifest::load(&dir).ok().and_then(|m| m.nid_chain().ok());
+    match chain {
+        Some(layers) => chain_shootout(&layers, true),
+        None => {
+            let layers: Vec<(ValidatedParams, Matrix, Option<Thresholds>)> = nid_layers()
+                .iter()
+                .enumerate()
+                .map(|(i, p)| {
+                    (
+                        p.clone(),
+                        random_weights(p, 70 + i as u64),
+                        stimulus_thresholds(p, 80 + i as u64),
+                    )
+                })
+                .collect();
+            chain_shootout(&layers, false);
+        }
     }
 
     // end-to-end serving benchmark over the real artifacts

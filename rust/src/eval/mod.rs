@@ -20,7 +20,9 @@
 //!
 //! [`Session::evaluate`] serves one request, [`Session::evaluate_all`] a
 //! batch (in parallel, input order preserved), [`Session::evaluate_points`]
-//! whole sweeps, and [`Session::stream`] feeds inference requests through
+//! whole sweeps, [`Session::evaluate_chain`] a multi-layer chain request
+//! ([`ChainRequest`], e.g. the NID MLP) through the next-event chain
+//! kernel, and [`Session::stream`] feeds inference requests through
 //! the [`coordinator::Pipeline`](crate::coordinator::Pipeline) serving
 //! stack. Errors are structured ([`EvalError`], wrapping
 //! [`ParamError`](crate::cfg::ParamError) where applicable), not strings.
@@ -50,7 +52,8 @@ use crate::cfg::{ParamError, SweepPoint, ValidatedParams};
 use crate::coordinator::{Pipeline, PipelineConfig, Request, Response, ThroughputReport};
 use crate::estimate::Style;
 use crate::explore::{
-    CacheStats, ExploreConfig, Explorer, PointReport, SimSummary, StimulusStats, StyleReport,
+    CacheStats, ChainSummary, ExploreConfig, Explorer, PointReport, SimSummary, StimulusStats,
+    StyleReport,
 };
 use crate::sim::{StallPattern, DEFAULT_FIFO_DEPTH, PIPELINE_STAGES};
 
@@ -105,6 +108,35 @@ impl EvalRequest {
     /// deterministic stimulus.
     pub fn with_sim(mut self, opts: SimOptions) -> Self {
         self.sim = Some(opts);
+        self
+    }
+}
+
+/// A multi-layer evaluation request: the chain's validated layers in
+/// dataflow order plus the simulation flow options. Served by
+/// [`Session::evaluate_chain`] through the next-event chain kernel
+/// ([`sim::run_chain`](crate::sim::run_chain)) with per-layer stimulus
+/// shared sweep-wide via the engine's memo, and cached like single-point
+/// simulations (kernel-versioned keys).
+#[derive(Debug, Clone)]
+pub struct ChainRequest {
+    pub layers: Vec<ValidatedParams>,
+    /// Flow options; `batch` is the number of input vectors streamed.
+    pub sim: SimOptions,
+}
+
+impl ChainRequest {
+    pub fn new(layers: Vec<ValidatedParams>) -> ChainRequest {
+        ChainRequest { layers, sim: SimOptions::default() }
+    }
+
+    /// The paper's Table 6 NID MLP geometry.
+    pub fn nid() -> ChainRequest {
+        ChainRequest::new(crate::cfg::nid_layers())
+    }
+
+    pub fn with_sim(mut self, sim: SimOptions) -> Self {
+        self.sim = sim;
         self
     }
 }
@@ -298,6 +330,31 @@ impl Session {
         })
     }
 
+    /// Evaluate a multi-layer chain request: one cycle-accurate run of
+    /// the whole dataflow pipeline (real inter-layer backpressure)
+    /// through the next-event chain kernel, over the engine's canonical
+    /// per-layer stimulus. Results come from the result cache on
+    /// revisits; the NID serving path
+    /// ([`Session::stream_nid`]) executes the same layer geometry, so
+    /// this is its cycle-level twin.
+    pub fn evaluate_chain(&self, req: &ChainRequest) -> Result<ChainSummary, EvalError> {
+        let name = req
+            .layers
+            .iter()
+            .map(|p| p.name.as_str())
+            .collect::<Vec<_>>()
+            .join(">");
+        self.explorer
+            .simulate_chain(
+                &req.layers,
+                req.sim.batch,
+                req.sim.fifo_depth,
+                &req.sim.in_stall,
+                &req.sim.out_stall,
+            )
+            .map_err(|e| EvalError::Sim { point: name, message: format!("{e:#}") })
+    }
+
     /// Evaluate a batch of requests across the thread pool. Output order
     /// matches input order and results are identical to serial
     /// evaluation. On failure the smallest failing request index wins —
@@ -449,6 +506,44 @@ mod tests {
             s.evaluate(&EvalRequest::new(l.clone())).unwrap();
         }
         assert_eq!(s.cache_stats().misses, misses, "{:?}", s.cache_stats());
+    }
+
+    #[test]
+    fn chain_request_runs_the_nid_mlp_and_caches() {
+        let s = Session::serial();
+        let req = ChainRequest::nid().with_sim(SimOptions { batch: 2, ..SimOptions::default() });
+        let first = s.evaluate_chain(&req).unwrap();
+        assert!(first.matches_reference);
+        assert_eq!(first.bottleneck_ii, 12);
+        assert_eq!(first.layers.len(), 4);
+        // slots: SF*NF per layer per vector
+        for (l, p) in first.layers.iter().zip(&req.layers) {
+            assert_eq!(l.slots_consumed, p.synapse_fold() * p.neuron_fold() * 2, "{}", l.name);
+        }
+        let hits = s.cache_stats().total_hits();
+        let again = s.evaluate_chain(&req).unwrap();
+        assert_eq!(first, again);
+        assert!(s.cache_stats().total_hits() > hits);
+        // the chain path reports its memo traffic on the chain counters
+        let stim = s.stimulus_stats();
+        assert!(stim.chain_misses > 0, "{stim}");
+    }
+
+    #[test]
+    fn deadlocked_chain_reports_structured_error() {
+        let s = Session::serial();
+        let req = ChainRequest::nid().with_sim(SimOptions {
+            batch: 1,
+            out_stall: StallPattern::Periodic { period: 1, duty: 1, phase: 0 },
+            ..SimOptions::default()
+        });
+        match s.evaluate_chain(&req) {
+            Err(EvalError::Sim { point, message }) => {
+                assert!(point.contains("layer0") && point.contains(">"), "{point}");
+                assert!(message.contains("chain deadlock"), "{message}");
+            }
+            other => panic!("expected EvalError::Sim, got {other:?}"),
+        }
     }
 
     #[test]

@@ -121,6 +121,32 @@ pub fn sim_key_flow(p: &LayerParams, vectors: usize, seed: u64, flow: &str) -> S
     )
 }
 
+/// Cache key for a cycle-accurate **chain** simulation over the engine's
+/// canonical deterministic stimulus: per-layer weight matrices and
+/// thresholds seeded from each layer's [`stimulus_seed`] (derivable from
+/// the layer text, so no separate seed field), `vectors` inputs from the
+/// first layer's seed, and the canonical `flow` text (FIFO depth + stall
+/// patterns). Layers appear in chain order as full [`params_key`]s —
+/// which already carry the output precision that decides each layer's
+/// threshold unit — so the key covers everything that shapes the run.
+/// Kernel-versioned like [`sim_key`]: the chain kernel landed
+/// in [`sim::SIM_KERNEL_VERSION`](crate::sim::SIM_KERNEL_VERSION) 4, so
+/// no older on-disk entry can ever alias a chain result.
+pub fn chain_key<'a, I>(layers: I, vectors: usize, flow: &str) -> String
+where
+    I: IntoIterator<Item = &'a LayerParams>,
+{
+    let layer_text: Vec<String> = layers.into_iter().map(params_key).collect();
+    format!(
+        "v{}k{}/chain/n{}/{}/{}",
+        crate::VERSION,
+        crate::sim::SIM_KERNEL_VERSION,
+        vectors,
+        flow,
+        layer_text.join("|")
+    )
+}
+
 /// FNV-1a 64-bit content hash of a key string.
 pub fn content_hash(key: &str) -> u64 {
     let mut h: u64 = 0xcbf2_9ce4_8422_2325;
@@ -316,6 +342,17 @@ mod tests {
         assert!(k.starts_with(&tag), "{k}");
         assert!(kf.starts_with(&tag), "{kf}");
         assert_ne!(k, kf);
+    }
+
+    #[test]
+    fn chain_keys_are_kernel_versioned_and_order_sensitive() {
+        let a = params("a");
+        let b = DesignPoint::from_params(a.clone().into_inner()).pe(8).build().unwrap();
+        let fwd = chain_key([a.params(), b.params()], 2, "fifo4");
+        let rev = chain_key([b.params(), a.params()], 2, "fifo4");
+        assert_ne!(fwd, rev);
+        let tag = format!("v{}k{}/chain/", crate::VERSION, crate::sim::SIM_KERNEL_VERSION);
+        assert!(fwd.starts_with(&tag), "{fwd}");
     }
 
     #[test]

@@ -37,15 +37,15 @@ use anyhow::Result;
 
 use crate::cfg::{LayerParams, SimdType, SweepPoint, ValidatedParams};
 use crate::estimate::{estimate, Style};
-use crate::quant::{matvec, Matrix};
+use crate::quant::{matvec, multithreshold, Matrix, Thresholds};
 use crate::sim::{
-    run_mvu_shared, PackedWeightMem, SharedWeights, StallPattern, WeightMem,
-    DEFAULT_FIFO_DEPTH, PIPELINE_STAGES,
+    run_chain_shared, run_mvu_shared, ChainStage, PackedWeightMem, SharedWeights, StallPattern,
+    WeightMem, DEFAULT_FIFO_DEPTH, PIPELINE_STAGES,
 };
 use crate::util::rng::Pcg32;
 
 use super::cache::{self, CacheStats, ResultCache};
-use super::report::{PointReport, SimSummary, StyleReport};
+use super::report::{ChainLayerSummary, ChainSummary, PointReport, SimSummary, StyleReport};
 
 /// Engine configuration.
 #[derive(Debug, Clone, Default)]
@@ -59,7 +59,10 @@ pub struct ExploreConfig {
     pub cache_dir: Option<std::path::PathBuf>,
 }
 
-/// Hit/miss counters for the sweep-wide stimulus memo.
+/// Hit/miss counters for the sweep-wide stimulus memo. Single-MVU and
+/// chain evaluations are counted separately, so sweep-wide sharing stays
+/// observable for multi-layer requests too (a NID fold sweep should show
+/// chain hits piling up while chain misses stay at one per artifact).
 #[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
 pub struct StimulusStats {
     /// Lookups served from the memo (a matrix / input batch / packing /
@@ -67,11 +70,19 @@ pub struct StimulusStats {
     pub hits: usize,
     /// Lookups that had to generate the artifact.
     pub misses: usize,
+    /// Memo hits issued by chain evaluations ([`Explorer::simulate_chain`]).
+    pub chain_hits: usize,
+    /// Memo misses issued by chain evaluations.
+    pub chain_misses: usize,
 }
 
 impl std::fmt::Display for StimulusStats {
     fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
-        write!(f, "{} hits, {} misses", self.hits, self.misses)
+        write!(f, "{} hits, {} misses", self.hits, self.misses)?;
+        if self.chain_hits > 0 || self.chain_misses > 0 {
+            write!(f, " (chain: {} hits, {} misses)", self.chain_hits, self.chain_misses)?;
+        }
+        Ok(())
     }
 }
 
@@ -103,60 +114,89 @@ struct StimulusMemo {
     packed: Mutex<HashMap<String, Option<Arc<PackedWeightMem>>>>,
     mems: Mutex<HashMap<String, Arc<WeightMem>>>,
     inputs: Mutex<HashMap<(String, usize), Arc<Vec<Vec<i32>>>>>,
+    /// Canonical thresholding units for chain stages (keyed by stimulus
+    /// text + output precision — the two things that shape them).
+    thresholds: Mutex<HashMap<(String, u32), Arc<Thresholds>>>,
     hits: AtomicUsize,
     misses: AtomicUsize,
+    chain_hits: AtomicUsize,
+    chain_misses: AtomicUsize,
 }
 
 impl StimulusMemo {
     /// Generic memo step: clone out on a hit, build outside the lock on a
     /// miss (duplicated work on a race is identical and harmless).
-    fn get_or_build<K, V, F>(&self, map: &Mutex<HashMap<K, V>>, key: K, build: F) -> V
+    /// `chain` routes the hit/miss to the chain-evaluation counters.
+    fn get_or_build<K, V, F>(&self, map: &Mutex<HashMap<K, V>>, key: K, chain: bool, build: F) -> V
     where
         K: std::hash::Hash + Eq,
         V: Clone,
         F: FnOnce() -> V,
     {
+        let (hits, misses) = if chain {
+            (&self.chain_hits, &self.chain_misses)
+        } else {
+            (&self.hits, &self.misses)
+        };
         if let Some(v) = map.lock().unwrap().get(&key) {
-            self.hits.fetch_add(1, Ordering::Relaxed);
+            hits.fetch_add(1, Ordering::Relaxed);
             return v.clone();
         }
-        self.misses.fetch_add(1, Ordering::Relaxed);
+        misses.fetch_add(1, Ordering::Relaxed);
         let v = build();
         map.lock().unwrap().insert(key, v.clone());
         v
     }
 
-    fn weights(&self, p: &LayerParams, seed: u64) -> Arc<Matrix> {
-        self.get_or_build(&self.weights, cache::stimulus_key(p), || {
+    fn weights(&self, p: &LayerParams, seed: u64, chain: bool) -> Arc<Matrix> {
+        self.get_or_build(&self.weights, cache::stimulus_key(p), chain, || {
             Arc::new(stimulus_weights(p, seed))
         })
     }
 
-    fn packed(&self, p: &LayerParams, w: &Matrix) -> Option<Arc<PackedWeightMem>> {
+    fn packed(&self, p: &LayerParams, w: &Matrix, chain: bool) -> Option<Arc<PackedWeightMem>> {
         if matches!(p.simd_type, SimdType::Standard) {
             return None; // Standard keeps the flat i32 datapath
         }
-        self.get_or_build(&self.packed, cache::stimulus_key(p), || {
+        self.get_or_build(&self.packed, cache::stimulus_key(p), chain, || {
             PackedWeightMem::from_matrix(w).ok().map(Arc::new)
         })
     }
 
-    fn mem(&self, p: &ValidatedParams, w: &Matrix) -> Arc<WeightMem> {
-        self.get_or_build(&self.mems, cache::params_key(p), || {
+    fn mem(&self, p: &ValidatedParams, w: &Matrix, chain: bool) -> Arc<WeightMem> {
+        self.get_or_build(&self.mems, cache::params_key(p), chain, || {
             Arc::new(WeightMem::from_matrix(p, w).expect("memoized stimulus matches params"))
         })
     }
 
-    fn inputs(&self, p: &LayerParams, seed: u64, n: usize) -> Arc<Vec<Vec<i32>>> {
-        self.get_or_build(&self.inputs, (cache::stimulus_key(p), n), || {
+    fn inputs(&self, p: &LayerParams, seed: u64, n: usize, chain: bool) -> Arc<Vec<Vec<i32>>> {
+        self.get_or_build(&self.inputs, (cache::stimulus_key(p), n), chain, || {
             Arc::new(stimulus_inputs(p, seed, n))
         })
+    }
+
+    fn thresholds(&self, p: &LayerParams, seed: u64, chain: bool) -> Option<Arc<Thresholds>> {
+        if p.output_bits == 0 {
+            return None;
+        }
+        Some(self.get_or_build(
+            &self.thresholds,
+            (cache::stimulus_key(p), p.output_bits),
+            chain,
+            || {
+                Arc::new(
+                    stimulus_thresholds(p, seed).expect("output_bits > 0 implies thresholds"),
+                )
+            },
+        ))
     }
 
     fn stats(&self) -> StimulusStats {
         StimulusStats {
             hits: self.hits.load(Ordering::Relaxed),
             misses: self.misses.load(Ordering::Relaxed),
+            chain_hits: self.chain_hits.load(Ordering::Relaxed),
+            chain_misses: self.chain_misses.load(Ordering::Relaxed),
         }
     }
 }
@@ -411,8 +451,8 @@ impl Explorer {
         if let Some(j) = self.cache.get_json(&key) {
             return SimSummary::from_json(&j);
         }
-        let weights = self.stimulus.weights(p, seed);
-        let inputs = self.stimulus.inputs(p, seed ^ 0x9e37_79b9_7f4a_7c15, vectors);
+        let weights = self.stimulus.weights(p, seed, false);
+        let inputs = self.stimulus.inputs(p, seed ^ 0x9e37_79b9_7f4a_7c15, vectors, false);
         // weight state shared sweep-wide, each piece built only for the
         // path that reads it: the fold-independent bit packing feeds the
         // ideal-flow packed datapath, the per-folding flat memories feed
@@ -421,10 +461,10 @@ impl Explorer {
             mem: if ideal {
                 None
             } else {
-                Some(self.stimulus.mem(p, &weights))
+                Some(self.stimulus.mem(p, &weights, false))
             },
             packed: if ideal {
-                self.stimulus.packed(p, &weights)
+                self.stimulus.packed(p, &weights, false)
             } else {
                 None
             },
@@ -452,6 +492,108 @@ impl Explorer {
         };
         self.cache.put_json(&key, &sim.to_json())?;
         Ok(sim)
+    }
+
+    /// Cached cycle-accurate **chain** simulation over the engine's
+    /// canonical deterministic stimulus: per-layer weight matrices and
+    /// (for layers with `output_bits > 0`) thresholding units seeded
+    /// from each layer's fold-independent [`cache::stimulus_seed`], and
+    /// `vectors` input vectors from the first layer's seed. All stimulus
+    /// artifacts — matrices, thresholds, the per-folding flat memories
+    /// and the fold-independent bit packings handed to the kernel as
+    /// per-stage [`SharedWeights`] — come out of the sweep-wide stimulus
+    /// memo, so a fold sweep over a multi-layer network (the NID MLP
+    /// under different foldings) generates and packs each layer's
+    /// stimulus exactly once; the chain-side hit/miss counters are
+    /// reported by [`stimulus_stats`](Self::stimulus_stats). Results are
+    /// cached under [`cache::chain_key`] (kernel-versioned), and runs go
+    /// through the next-event fast kernel
+    /// ([`sim::run_chain_shared`](crate::sim::run_chain_shared)).
+    pub fn simulate_chain(
+        &self,
+        layers: &[ValidatedParams],
+        vectors: usize,
+        fifo_depth: usize,
+        in_stall: &StallPattern,
+        out_stall: &StallPattern,
+    ) -> Result<ChainSummary> {
+        anyhow::ensure!(!layers.is_empty(), "empty chain");
+        let flow = format!(
+            "fifo{};in:{};out:{}",
+            fifo_depth,
+            stall_key(in_stall),
+            stall_key(out_stall)
+        );
+        let key = cache::chain_key(layers.iter().map(|p| p.params()), vectors, &flow);
+        if let Some(j) = self.cache.get_json(&key) {
+            return ChainSummary::from_json(&j);
+        }
+        let mut weights: Vec<Arc<Matrix>> = Vec::with_capacity(layers.len());
+        let mut thresholds: Vec<Option<Arc<Thresholds>>> = Vec::with_capacity(layers.len());
+        let mut shared: Vec<SharedWeights> = Vec::with_capacity(layers.len());
+        for p in layers {
+            let seed = cache::stimulus_seed(p);
+            let w = self.stimulus.weights(p, seed, true);
+            thresholds.push(self.stimulus.thresholds(p, seed ^ 0x6a09_e667_f3bc_c909, true));
+            shared.push(SharedWeights {
+                // chains always read the flat memories (row fallback and
+                // Standard stages) and the packing where it exists.
+                mem: Some(self.stimulus.mem(p, &w, true)),
+                packed: self.stimulus.packed(p, &w, true),
+            });
+            weights.push(w);
+        }
+        let in_seed = cache::stimulus_seed(&layers[0]) ^ 0x9e37_79b9_7f4a_7c15;
+        let inputs = self.stimulus.inputs(&layers[0], in_seed, vectors, true);
+        let specs: Vec<ChainStage<'_>> = layers
+            .iter()
+            .enumerate()
+            .map(|(i, p)| ChainStage {
+                params: p,
+                weights: &weights[i],
+                thresholds: thresholds[i].as_deref(),
+                shared: shared[i].clone(),
+            })
+            .collect();
+        let rep = run_chain_shared(
+            &specs,
+            &inputs,
+            in_stall.clone(),
+            out_stall.clone(),
+            fifo_depth,
+        )?;
+        // layer-wise functional reference (matvec + multithreshold)
+        let mut matches = rep.outputs.len() == inputs.len();
+        for (x, y) in inputs.iter().zip(&rep.outputs) {
+            let mut v = x.clone();
+            for (i, p) in layers.iter().enumerate() {
+                let acc = matvec(&v, &weights[i], p.simd_type)?;
+                v = match &thresholds[i] {
+                    Some(t) => multithreshold(&acc, t)?,
+                    None => acc,
+                };
+            }
+            matches &= &v == y;
+        }
+        let bottleneck_ii = crate::sim::chain_bottleneck_ii(layers.iter().map(|p| p.params()));
+        let sum = ChainSummary {
+            vectors,
+            exec_cycles: rep.exec_cycles,
+            first_out_cycle: rep.first_out_cycle,
+            bottleneck_ii,
+            matches_reference: matches,
+            layers: rep
+                .layer_stats
+                .iter()
+                .map(|l| ChainLayerSummary {
+                    name: l.name.clone(),
+                    stall_cycles: l.stall_cycles,
+                    slots_consumed: l.slots_consumed,
+                })
+                .collect(),
+        };
+        self.cache.put_json(&key, &sum.to_json())?;
+        Ok(sum)
     }
 }
 
@@ -490,6 +632,33 @@ fn next_job(queues: &[Mutex<VecDeque<usize>>], own: usize) -> Option<usize> {
 /// can never drift apart.
 pub fn stimulus_weights(params: &LayerParams, seed: u64) -> Matrix {
     crate::harness::random_weights(params, seed)
+}
+
+/// Canonical thresholding unit for a chain stage with `output_bits > 0`
+/// (`None` otherwise): `2^OB - 1` sorted thresholds per output channel,
+/// spread over the layer's accumulator range so the multithreshold
+/// actually discriminates (an Xnor row of `C` columns accumulates in
+/// `[0, C]`; the signed types straddle zero). Deterministic in
+/// `(params, seed)` like the other stimulus generators.
+pub fn stimulus_thresholds(params: &LayerParams, seed: u64) -> Option<Thresholds> {
+    if params.output_bits == 0 {
+        return None;
+    }
+    let steps = (1usize << params.output_bits) - 1;
+    let cols = params.matrix_cols() as i32;
+    let (lo, span) = match params.simd_type {
+        SimdType::Xnor => (0i32, cols as u32 + 1),
+        _ => (-cols, 2 * cols as u32 + 1),
+    };
+    let mut rng = Pcg32::new(seed);
+    let rows: Vec<Vec<i32>> = (0..params.matrix_rows())
+        .map(|_| {
+            let mut t: Vec<i32> = (0..steps).map(|_| rng.next_range(span) as i32 + lo).collect();
+            t.sort_unstable();
+            t
+        })
+        .collect();
+    Some(Thresholds::from_rows(&rows).expect("generated threshold rows are well-formed"))
 }
 
 /// Canonical input vectors for the simulation of one design point.
@@ -670,6 +839,90 @@ mod tests {
             reports[0].sim.as_ref().unwrap().exec_cycles,
             reports[3].sim.as_ref().unwrap().exec_cycles
         );
+    }
+
+    /// NID-geometry Xnor chain layers under explicit foldings.
+    fn nid_xnor_chain(folds: &[(usize, usize); 4]) -> Vec<ValidatedParams> {
+        use crate::cfg::DesignPoint;
+        let shape = [(600usize, 64usize, 1u32), (64, 64, 1), (64, 64, 1), (64, 1, 0)];
+        shape
+            .iter()
+            .zip(folds)
+            .map(|(&(fin, fout, ob), &(pe, simd))| {
+                DesignPoint::fc(&format!("nx{fin}x{fout}p{pe}s{simd}"))
+                    .in_features(fin)
+                    .out_features(fout)
+                    .pe(pe)
+                    .simd(simd)
+                    .simd_type(SimdType::Xnor)
+                    .precision(1, 1, ob)
+                    .build()
+                    .unwrap()
+            })
+            .collect()
+    }
+
+    /// A fold sweep over the NID MLP as a *chain* must reuse every
+    /// fold-independent stimulus artifact via the memo: the second fold
+    /// variant regenerates nothing but its per-folding flat memories.
+    /// Exact counts (serial engine): variant A touches weights 4x (layers
+    /// 1 and 2 share one geometry, so 3 misses + 1 hit), thresholds 3x
+    /// (2m+1h), flat memories 4x (3m+1h), packings 4x (3m+1h) and the
+    /// input batch once (1m) = 12 misses / 4 hits; variant B re-misses
+    /// only its three distinct flat memories (3m / 13h).
+    #[test]
+    fn chain_fold_variants_share_stimulus_via_the_memo() {
+        let ex = Explorer::serial();
+        let a = nid_xnor_chain(&[(64, 50), (16, 32), (16, 32), (1, 8)]);
+        let b = nid_xnor_chain(&[(32, 25), (8, 16), (8, 16), (1, 4)]);
+        let ra = ex
+            .simulate_chain(&a, 2, DEFAULT_FIFO_DEPTH, &StallPattern::None, &StallPattern::None)
+            .unwrap();
+        assert!(ra.matches_reference);
+        let s = ex.stimulus_stats();
+        assert_eq!((s.chain_misses, s.chain_hits), (12, 4), "{s}");
+        // single-point counters untouched by chain evaluations
+        assert_eq!((s.misses, s.hits), (0, 0), "{s}");
+        let rb = ex
+            .simulate_chain(&b, 2, DEFAULT_FIFO_DEPTH, &StallPattern::None, &StallPattern::None)
+            .unwrap();
+        assert!(rb.matches_reference);
+        let s = ex.stimulus_stats();
+        assert_eq!((s.chain_misses, s.chain_hits), (15, 17), "{s}");
+        // same network, different folding: same functional outputs are
+        // implied by matches_reference; the cycle shapes differ.
+        assert_eq!(ra.bottleneck_ii, 12);
+        assert_ne!(ra.exec_cycles, rb.exec_cycles);
+    }
+
+    /// Chain summaries are served from the result cache on revisits, and
+    /// flow changes land in distinct entries.
+    #[test]
+    fn chain_results_are_cached_under_kernel_versioned_keys() {
+        let ex = Explorer::serial();
+        let layers = nid_xnor_chain(&[(64, 50), (16, 32), (16, 32), (1, 8)]);
+        let none = StallPattern::None;
+        let first =
+            ex.simulate_chain(&layers, 2, DEFAULT_FIFO_DEPTH, &none, &none).unwrap();
+        let hits_before = ex.cache_stats().total_hits();
+        let again =
+            ex.simulate_chain(&layers, 2, DEFAULT_FIFO_DEPTH, &none, &none).unwrap();
+        assert_eq!(first, again);
+        assert!(ex.cache_stats().total_hits() > hits_before);
+        // a different flow lands in its own entry (key covers fifo+stalls)
+        let entries = ex.cache().entries();
+        let stalled = ex
+            .simulate_chain(
+                &layers,
+                2,
+                2,
+                &StallPattern::None,
+                &StallPattern::Periodic { period: 4, duty: 2, phase: 0 },
+            )
+            .unwrap();
+        assert!(stalled.matches_reference);
+        assert!(stalled.exec_cycles >= first.exec_cycles);
+        assert_eq!(ex.cache().entries(), entries + 1);
     }
 
     /// Re-simulating one point under different flow conditions reuses the

@@ -29,9 +29,14 @@
 //!   ([`sim::PackedWeightMem`](crate::sim::PackedWeightMem)) and input
 //!   batch instead of regenerating them per point; hit/miss counts are
 //!   reported by [`Explorer::stimulus_stats`].
-//! * [`PointReport`] / [`StyleReport`] / [`SimSummary`] — deterministic
-//!   JSON-serializable results, rendered through the repo's table/JSON
-//!   formats by [`points_to_table`] / [`points_to_json`].
+//! * [`PointReport`] / [`StyleReport`] / [`SimSummary`] /
+//!   [`ChainSummary`] — deterministic JSON-serializable results,
+//!   rendered through the repo's table/JSON formats by
+//!   [`points_to_table`] / [`points_to_json`]. Multi-layer chains are
+//!   simulated by [`Explorer::simulate_chain`] through the next-event
+//!   chain kernel with per-layer stimulus shared via the memo
+//!   (hit/miss counters split out as
+//!   [`StimulusStats::chain_hits`]/[`StimulusStats::chain_misses`]).
 //!
 //! Every figure/table harness (`harness::figures`, `harness::tables`), the
 //! benches, and the `finn-mvu explore` CLI subcommand drive this engine —
@@ -48,8 +53,14 @@ mod engine;
 mod report;
 
 pub use cache::{
-    content_hash, estimate_key, params_key, sim_key, sim_key_flow, stimulus_key, stimulus_seed,
-    CacheStats, ResultCache,
+    chain_key, content_hash, estimate_key, params_key, sim_key, sim_key_flow, stimulus_key,
+    stimulus_seed, CacheStats, ResultCache,
 };
-pub use engine::{stimulus_inputs, stimulus_weights, ExploreConfig, Explorer, StimulusStats};
-pub use report::{points_to_json, points_to_table, PointReport, SimSummary, StyleReport};
+pub use engine::{
+    stimulus_inputs, stimulus_thresholds, stimulus_weights, ExploreConfig, Explorer,
+    StimulusStats,
+};
+pub use report::{
+    points_to_json, points_to_table, ChainLayerSummary, ChainSummary, PointReport, SimSummary,
+    StyleReport,
+};

@@ -108,6 +108,97 @@ impl SimSummary {
     }
 }
 
+/// Per-layer slice of a chain simulation summary.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ChainLayerSummary {
+    pub name: String,
+    pub stall_cycles: usize,
+    pub slots_consumed: usize,
+}
+
+/// Summary of one multi-layer chain simulation over the engine's
+/// canonical deterministic stimulus (cached under
+/// [`chain_key`](super::chain_key) like [`SimSummary`] is under the
+/// single-MVU keys).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ChainSummary {
+    /// Number of input vectors streamed through the chain.
+    pub vectors: usize,
+    /// Total cycles until the last output vector left the chain.
+    pub exec_cycles: usize,
+    /// Cycle at which the first output word left the last layer.
+    pub first_out_cycle: usize,
+    /// Analytic steady-state initiation interval (bottleneck fold).
+    pub bottleneck_ii: usize,
+    /// All outputs agreed bit-exactly with the layer-wise reference
+    /// (matvec + multithreshold per layer).
+    pub matches_reference: bool,
+    pub layers: Vec<ChainLayerSummary>,
+}
+
+impl ChainSummary {
+    pub fn to_json(&self) -> Json {
+        let mut j = Json::obj();
+        j.set("vectors", Json::from_i64(self.vectors as i64));
+        j.set("exec_cycles", Json::from_i64(self.exec_cycles as i64));
+        j.set("first_out_cycle", Json::from_i64(self.first_out_cycle as i64));
+        j.set("bottleneck_ii", Json::from_i64(self.bottleneck_ii as i64));
+        j.set("matches_reference", Json::Bool(self.matches_reference));
+        let layers: Vec<Json> = self
+            .layers
+            .iter()
+            .map(|l| {
+                let mut lj = Json::obj();
+                lj.set("name", Json::Str(l.name.clone()));
+                lj.set("stall_cycles", Json::from_i64(l.stall_cycles as i64));
+                lj.set("slots_consumed", Json::from_i64(l.slots_consumed as i64));
+                lj
+            })
+            .collect();
+        j.set("layers", Json::Arr(layers));
+        j
+    }
+
+    pub fn from_json(j: &Json) -> Result<ChainSummary> {
+        let layers = j
+            .get("layers")
+            .as_arr()
+            .context("chain summary: layers")?
+            .iter()
+            .map(|lj| {
+                Ok(ChainLayerSummary {
+                    name: lj.get("name").as_str().context("chain layer: name")?.to_string(),
+                    stall_cycles: lj
+                        .get("stall_cycles")
+                        .as_usize()
+                        .context("chain layer: stall_cycles")?,
+                    slots_consumed: lj
+                        .get("slots_consumed")
+                        .as_usize()
+                        .context("chain layer: slots_consumed")?,
+                })
+            })
+            .collect::<Result<Vec<_>>>()?;
+        Ok(ChainSummary {
+            vectors: j.get("vectors").as_usize().context("chain summary: vectors")?,
+            exec_cycles: j.get("exec_cycles").as_usize().context("chain summary: exec_cycles")?,
+            first_out_cycle: j
+                .get("first_out_cycle")
+                .as_usize()
+                .context("chain summary: first_out_cycle")?,
+            bottleneck_ii: j
+                .get("bottleneck_ii")
+                .as_usize()
+                .context("chain summary: bottleneck_ii")?,
+            matches_reference: j
+                .get("matches_reference")
+                .as_bool()
+                .context("chain summary: matches_reference")?,
+            layers,
+        })
+    }
+}
+
 /// Everything the engine knows about one evaluated sweep point.
 #[derive(Debug, Clone, PartialEq)]
 pub struct PointReport {
@@ -273,6 +364,25 @@ mod tests {
         let with_sim = points_to_table("PEs", &[point("a", Some(sim))]);
         let s = with_sim.render();
         assert!(s.contains("sim cycles") && s.contains("yes"));
+    }
+
+    #[test]
+    fn chain_summary_roundtrip_is_lossless() {
+        let s = ChainSummary {
+            vectors: 4,
+            exec_cycles: 71,
+            first_out_cycle: 23,
+            bottleneck_ii: 12,
+            matches_reference: true,
+            layers: vec![
+                ChainLayerSummary { name: "l0".into(), stall_cycles: 3, slots_consumed: 48 },
+                ChainLayerSummary { name: "l1".into(), stall_cycles: 0, slots_consumed: 32 },
+            ],
+        };
+        let j = s.to_json();
+        assert_eq!(ChainSummary::from_json(&j).unwrap(), s);
+        let text = j.to_string();
+        assert_eq!(Json::parse(&text).unwrap().to_string(), text);
     }
 
     #[test]

@@ -11,11 +11,13 @@
 //! * **L3** — this crate: a cycle-accurate RTL simulator of the MVU (two
 //!   kernels: a per-cycle oracle and a batched interval-skipping fast
 //!   path whose 1-bit datapaths run bit-packed XNOR-popcount / sign-mask
-//!   SWAR kernels, all bit-identical by property test — DESIGN.md
-//!   §Two-kernel simulator, §Packed datapath), an HLS behavioral model, a
-//!   7-series resource/timing estimator, a FINN-like compiler (IR +
-//!   passes), and a streaming dataflow runtime that executes the AOT
-//!   artifacts via the PJRT C API.
+//!   SWAR kernels — and the same split for multi-layer chains, whose
+//!   next-event kernel behind `sim::run_chain` drives the NID MLP hot
+//!   path, all bit-identical by property test — DESIGN.md §Two-kernel
+//!   simulator, §Packed datapath, §Chain fast kernel), an HLS
+//!   behavioral model, a 7-series resource/timing estimator, a FINN-like
+//!   compiler (IR + passes), and a streaming dataflow runtime that
+//!   executes the AOT artifacts via the PJRT C API.
 //!
 //! The public API is two layers (see DESIGN.md §API):
 //!

@@ -176,6 +176,8 @@ fn cmd_explore(a: &Args) -> Result<()> {
         let mut ss = Json::obj();
         ss.set("hits", Json::from_i64(stim.hits as i64));
         ss.set("misses", Json::from_i64(stim.misses as i64));
+        ss.set("chain_hits", Json::from_i64(stim.chain_hits as i64));
+        ss.set("chain_misses", Json::from_i64(stim.chain_misses as i64));
         doc.set("stimulus_memo", ss);
         if a.get_bool("pretty") {
             println!("{}", doc.to_pretty(2));

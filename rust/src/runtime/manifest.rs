@@ -182,6 +182,31 @@ impl Manifest {
         Ok(out)
     }
 
+    /// The trained NID network as a simulatable chain: per-layer
+    /// validated params, weights and thresholds in dataflow order — the
+    /// exact shape [`sim::run_chain`](crate::sim::run_chain) and
+    /// [`sim::MvuChain`](crate::sim::MvuChain) accept, so the manifest's
+    /// trained artifacts drive the cycle-accurate chain kernels directly
+    /// (benches/table7_nid.rs).
+    pub fn nid_chain(&self) -> Result<Vec<(ValidatedParams, Matrix, Option<Thresholds>)>> {
+        let nid = self.nid.as_ref().context("manifest carries no NID metadata")?;
+        let weights = self.nid_weights()?;
+        if nid.layers.len() != weights.len() {
+            bail!(
+                "manifest NID metadata has {} layers but nid_weights.json has {}",
+                nid.layers.len(),
+                weights.len()
+            );
+        }
+        Ok(nid
+            .layers
+            .iter()
+            .cloned()
+            .zip(weights)
+            .map(|(p, (w, th))| (p, w, th))
+            .collect())
+    }
+
     /// Load the generic-artifact weights keyed by artifact base name.
     pub fn generic_weights(&self) -> Result<BTreeMap<String, Matrix>> {
         let text = std::fs::read_to_string(self.dir.join("generic_weights.json"))
@@ -243,6 +268,20 @@ mod tests {
         assert!(ws[3].1.is_none());
         // 2-bit weights
         assert!(ws.iter().all(|(m, _)| m.in_range(-2, 1)));
+    }
+
+    #[test]
+    fn nid_chain_is_simulatable() {
+        let Some(m) = manifest() else { return };
+        let layers = m.nid_chain().unwrap();
+        assert_eq!(layers.len(), 4);
+        // wired end to end: the trained network runs through the fast
+        // chain kernel and the per-cycle oracle identically.
+        let inputs: Vec<Vec<i32>> = vec![(0..600).map(|i| (i % 4) as i32).collect()];
+        let fast = crate::sim::run_chain(&layers, &inputs).unwrap();
+        let oracle =
+            crate::sim::MvuChain::new(&layers).unwrap().run(&inputs).unwrap();
+        assert_eq!(fast, oracle);
     }
 
     #[test]

@@ -13,7 +13,7 @@ use crate::cfg::{LayerParams, ValidatedParams};
 use crate::quant::Matrix;
 
 use super::stream_unit::{MvuStream, StepOut, StreamStats};
-use super::weight_mem::WeightMem;
+use super::weight_mem::{PackedWeightMem, WeightMem};
 
 /// A complete MVU: weight memories + stream unit.
 ///
@@ -76,6 +76,35 @@ impl MvuBatch {
         Ok(MvuBatch { wmem, stream: MvuStream::with_fifo_depth(params, fifo_depth)? })
     }
 
+    /// Build around shared weight state with the deferred **row
+    /// datapath** ([`MvuStream::with_row_datapath`]): identical cycle
+    /// behaviour, whole-row (packed where possible) dot products instead
+    /// of per-slot accumulation. The chain fast kernel's stage
+    /// constructor. Both shares are shape-checked against `params`.
+    pub fn with_row_datapath(
+        params: &ValidatedParams,
+        wmem: Arc<WeightMem>,
+        packed: Option<Arc<PackedWeightMem>>,
+        fifo_depth: usize,
+    ) -> Result<MvuBatch> {
+        if wmem.pe != params.pe
+            || wmem.simd != params.simd
+            || wmem.depth != params.weight_mem_depth()
+        {
+            bail!(
+                "shared weight memory (pe={} simd={} depth={}) does not match params \
+                 (pe={} simd={} depth={})",
+                wmem.pe,
+                wmem.simd,
+                wmem.depth,
+                params.pe,
+                params.simd,
+                params.weight_mem_depth()
+            );
+        }
+        Ok(MvuBatch { wmem, stream: MvuStream::with_row_datapath(params, fifo_depth, packed)? })
+    }
+
     pub fn params(&self) -> &LayerParams {
         self.stream.params()
     }
@@ -100,6 +129,11 @@ impl MvuBatch {
     /// See [`MvuStream::quiescent_without_input`].
     pub fn quiescent_without_input(&self) -> bool {
         self.stream.quiescent_without_input()
+    }
+
+    /// See [`MvuStream::parked_on_output`].
+    pub fn parked_on_output(&self) -> bool {
+        self.stream.parked_on_output()
     }
 
     /// See [`MvuStream::skip_blocked_cycles`].

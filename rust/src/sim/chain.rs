@@ -8,13 +8,32 @@
 //! plumbing FINN generates between MVTUs. The chain exposes the paper's
 //! end-to-end quantities: pipeline fill, steady-state initiation interval
 //! and the bottleneck layer.
+//!
+//! Two kernels share the machinery here (DESIGN.md §Chain fast kernel):
+//!
+//!   * [`MvuChain`] — the per-cycle **oracle**: every stage stepped one
+//!     clock at a time through the slot-wise datapath;
+//!   * [`fast::chain`](super::fast::chain) — the production kernel behind
+//!     [`run_chain`](super::run_chain): the same [`ChainCore`] machine
+//!     driven with next-event clock jumps and the deferred row/packed
+//!     datapath, bit-identical to the oracle (tests/chain_identity.rs).
+//!
+//! Both accept stall patterns on the chain's AXI endpoints (TVALID gaps
+//! on the first layer's input, TREADY gaps on the last layer's output) —
+//! the paper's §5.3.1 flow scenarios applied end to end.
+
+use std::sync::Arc;
 
 use anyhow::{bail, Result};
 
-use crate::cfg::{LayerParams, ValidatedParams};
+use crate::cfg::{LayerParams, SimdType, ValidatedParams};
 use crate::quant::{Matrix, Thresholds};
 
+use super::axis::StallPattern;
 use super::batch_unit::MvuBatch;
+use super::fast::SharedWeights;
+use super::weight_mem::{PackedWeightMem, WeightMem};
+use super::DEFAULT_FIFO_DEPTH;
 
 /// A stream-width converter: buffers lanes and re-chunks them.
 #[derive(Debug)]
@@ -36,6 +55,11 @@ impl WidthConverter {
 
     fn can_accept(&self, lanes: usize) -> bool {
         self.buf.len() + lanes <= self.capacity
+    }
+
+    /// A full output word is buffered.
+    fn has_full_word(&self) -> bool {
+        self.buf.len() >= self.out_width
     }
 
     fn push(&mut self, word: &[i32]) {
@@ -73,16 +97,41 @@ struct Stage {
     nf_cursor: usize,
 }
 
-/// Per-layer statistics after a chain run.
+/// One layer of a chain run: validated params, its weight matrix, the
+/// optional thresholding unit, and (for the fast kernel) pre-built
+/// weight state shared across runs — the explore engine hands one
+/// [`SharedWeights`] per layer out of its stimulus memo so a fold sweep
+/// partitions and packs each matrix once.
 #[derive(Debug, Clone)]
+pub struct ChainStage<'a> {
+    pub params: &'a ValidatedParams,
+    pub weights: &'a Matrix,
+    pub thresholds: Option<&'a Thresholds>,
+    pub shared: SharedWeights,
+}
+
+impl<'a> ChainStage<'a> {
+    /// Spec without shared state (the kernel builds what it needs).
+    pub fn new(
+        params: &'a ValidatedParams,
+        weights: &'a Matrix,
+        thresholds: Option<&'a Thresholds>,
+    ) -> ChainStage<'a> {
+        ChainStage { params, weights, thresholds, shared: SharedWeights::default() }
+    }
+}
+
+/// Per-layer statistics after a chain run.
+#[derive(Debug, Clone, PartialEq, Eq)]
 pub struct ChainLayerStats {
     pub name: String,
     pub stall_cycles: usize,
     pub slots_consumed: usize,
 }
 
-/// Result of a chain simulation.
-#[derive(Debug, Clone)]
+/// Result of a chain simulation. Equality is field-exact — the chain
+/// identity tests compare whole reports between the two kernels.
+#[derive(Debug, Clone, PartialEq, Eq)]
 pub struct ChainReport {
     /// Final network outputs, one vector per input vector.
     pub outputs: Vec<Vec<i32>>,
@@ -94,24 +143,84 @@ pub struct ChainReport {
     pub layer_stats: Vec<ChainLayerStats>,
 }
 
-/// A chain of MVU layers simulated cycle by cycle.
-pub struct MvuChain {
-    stages: Vec<Stage>,
-    params: Vec<LayerParams>,
+/// How a stage's next cycle is classified by the fast kernel's span
+/// detector: `Idle`/`Blocked` steps are provable counter increments the
+/// clock can jump over; an `Active` step must execute.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub(in crate::sim) enum StageClass {
+    /// A step this cycle would change machine state.
+    Active,
+    /// Counter-only cycle: quiescent without input, or output words
+    /// parked in the FIFO behind an unready downstream converter.
+    Idle,
+    /// Frozen on output backpressure (§5.3.2): stall counters only.
+    Blocked,
 }
 
-impl MvuChain {
-    /// Build from per-layer (validated params, weights, thresholds).
-    /// Layer i's output channel count must equal layer i+1's input vector
-    /// length.
-    pub fn new(
-        layers: Vec<(ValidatedParams, Matrix, Option<Thresholds>)>,
-    ) -> Result<MvuChain> {
+/// Deadlock bound shared by both kernels (the error message embeds the
+/// cycle count, so the bound itself must agree between them). Same shape
+/// as the single-MVU fast kernel's — the layer-serial ideal cycle count
+/// scaled by a stall factor plus constant slack — but with far more
+/// headroom: the public API accepts arbitrarily sparse legal patterns
+/// (`Periodic` with `duty = period - 1`, `Random` with `p_num` near
+/// 255 stretch runtime by up to ~3 orders of magnitude), and those must
+/// complete, not trip the bound. The fast kernel jumps straight to this
+/// bound on a true deadlock, so its size only costs time in the
+/// per-cycle oracle's deadlock tests (which use small chains).
+pub(in crate::sim) fn chain_max_cycles(params: &[LayerParams], expected: usize) -> usize {
+    let serial: usize = params
+        .iter()
+        .map(|p| p.analytic_cycles(super::PIPELINE_STAGES))
+        .sum();
+    serial.saturating_mul(expected.max(1)).saturating_mul(1024) + 65_536
+}
+
+pub(in crate::sim) fn chain_deadlock(cycle: usize, got: usize, expected: usize) -> anyhow::Error {
+    anyhow::anyhow!("chain deadlock after {cycle} cycles ({got}/{expected} outputs)")
+}
+
+/// Analytic steady-state initiation interval of a chain: the bottleneck
+/// layer's fold, `max(SF * NF * OD^2)` over the layers (paper: the
+/// folding pass balances exactly this). The single source of truth —
+/// [`MvuChain::bottleneck_ii`] and the explore engine's cached
+/// `ChainSummary::bottleneck_ii` both come from here.
+pub fn chain_bottleneck_ii<'a, I>(layers: I) -> usize
+where
+    I: IntoIterator<Item = &'a LayerParams>,
+{
+    layers
+        .into_iter()
+        .map(|p| p.synapse_fold() * p.neuron_fold() * p.output_pixels())
+        .max()
+        .unwrap_or(0)
+}
+
+/// The wired chain machine both kernels drive: stages, inter-stage
+/// converters and the per-cycle update. The oracle steps it one cycle at
+/// a time; the fast kernel interleaves the same executed cycles with
+/// closed-form span skips.
+pub(in crate::sim) struct ChainCore {
+    stages: Vec<Stage>,
+    params: Vec<LayerParams>,
+    /// Reusable scratch for stream words crossing stage boundaries — no
+    /// allocation on the steady-state path (§Perf).
+    word_buf: Vec<i32>,
+}
+
+impl ChainCore {
+    /// Build and wire the stages. `row_mode` selects the deferred
+    /// row/packed datapath ([`MvuBatch::with_row_datapath`]) used by the
+    /// fast kernel; the oracle keeps the slot-wise datapath.
+    pub(in crate::sim) fn build(
+        layers: &[ChainStage<'_>],
+        fifo_depth: usize,
+        row_mode: bool,
+    ) -> Result<ChainCore> {
         if layers.is_empty() {
             bail!("empty chain");
         }
         for w in layers.windows(2) {
-            let (a, b) = (&w[0].0, &w[1].0);
+            let (a, b) = (w[0].params, w[1].params);
             if a.matrix_rows() != b.matrix_cols() {
                 bail!(
                     "chain mismatch: {} produces {} channels, {} consumes {}",
@@ -129,16 +238,17 @@ impl MvuChain {
         let widths: Vec<usize> = (0..n)
             .map(|i| {
                 if i + 1 < n {
-                    layers[i + 1].0.simd
+                    layers[i + 1].params.simd
                 } else {
-                    layers[i].0.matrix_rows()
+                    layers[i].params.matrix_rows()
                 }
             })
             .collect();
         let mut stages = Vec::with_capacity(n);
         let mut params = Vec::with_capacity(n);
-        for (i, (p, w, th)) in layers.into_iter().enumerate() {
-            if let Some(t) = &th {
+        for (i, st) in layers.iter().enumerate() {
+            let p = st.params;
+            if let Some(t) = st.thresholds {
                 if t.channels != p.matrix_rows() {
                     bail!(
                         "{}: thresholds for {} channels, MVU has {}",
@@ -148,113 +258,164 @@ impl MvuChain {
                     );
                 }
             }
+            let mvu = if row_mode {
+                let wmem = match &st.shared.mem {
+                    Some(m) => m.clone(),
+                    None => Arc::new(WeightMem::from_matrix(p, st.weights)?),
+                };
+                // fold-independent packing for the 1-bit SIMD types;
+                // unpackable weights keep the flat row fallback.
+                let packed = match (&st.shared.packed, p.simd_type) {
+                    (_, SimdType::Standard) => None,
+                    (Some(pk), _) => Some(pk.clone()),
+                    (None, _) => PackedWeightMem::from_matrix(st.weights).ok().map(Arc::new),
+                };
+                MvuBatch::with_row_datapath(p, wmem, packed, fifo_depth)?
+            } else {
+                match &st.shared.mem {
+                    Some(m) => MvuBatch::with_weight_mem(p, m.clone(), fifo_depth)?,
+                    None => MvuBatch::with_fifo_depth(p, st.weights, fifo_depth)?,
+                }
+            };
             // capacity: a couple of full vectors of slack
             let cap_words = 2 * p.matrix_rows().div_ceil(widths[i]).max(2);
             stages.push(Stage {
-                mvu: MvuBatch::new(&p, &w)?,
-                thresholds: th,
+                mvu,
+                thresholds: st.thresholds.cloned(),
                 conv: WidthConverter::new(widths[i], cap_words),
                 nf_cursor: 0,
             });
-            params.push(p.into_inner());
+            params.push(p.params().clone());
         }
-        Ok(MvuChain { stages, params })
+        Ok(ChainCore { stages, params, word_buf: Vec::new() })
     }
 
-    /// Run the chain over input vectors (each of layer-0 length).
-    pub fn run(&mut self, inputs: &[Vec<i32>]) -> Result<ChainReport> {
-        let p0 = &self.params[0];
-        let in_words: Vec<Vec<i32>> = inputs
-            .iter()
-            .flat_map(|v| MvuBatch::vector_to_words(p0, v))
-            .collect();
-        let last = self.stages.len() - 1;
-        let out_len = self.params[last].matrix_rows();
-        let expected = inputs.len();
+    pub(in crate::sim) fn params(&self) -> &[LayerParams] {
+        &self.params
+    }
 
-        let mut fed = 0usize;
-        let mut outputs: Vec<Vec<i32>> = Vec::with_capacity(expected);
-        let mut current: Vec<i32> = Vec::with_capacity(out_len);
-        let mut first_out_cycle = None;
-        let mut cycle = 0usize;
-        let max_cycles = 1_000_000usize + expected * 100_000;
-        // per-cycle scratch for stream words crossing stage boundaries —
-        // no allocation on the steady-state path (§Perf).
-        let mut word_buf: Vec<i32> = Vec::new();
+    pub(in crate::sim) fn stage_count(&self) -> usize {
+        self.stages.len()
+    }
 
-        while outputs.len() < expected {
-            if cycle > max_cycles {
-                bail!("chain deadlock after {cycle} cycles ({}/{expected} outputs)", outputs.len());
+    /// One simulated cycle over every stage, stepped from the LAST to the
+    /// FIRST so that a word popped downstream frees space upstream within
+    /// the same cycle order (classic reverse-order pipeline update).
+    /// `input` is the word offered to stage 0 this cycle (TVALID
+    /// asserted); returns whether stage 0 consumed it.
+    pub(in crate::sim) fn step_cycle(&mut self, input: Option<&[i32]>) -> bool {
+        let mut consumed_source = false;
+        for i in (0..self.stages.len()).rev() {
+            // input offer for stage i
+            let has_offer = if i == 0 {
+                input.is_some()
+            } else {
+                self.stages[i - 1].conv.peek_into(&mut self.word_buf)
+            };
+            if !has_offer && self.stages[i].mvu.quiescent_without_input() {
+                // quiescent interval for this stage: nothing offered
+                // and nothing in flight, so a full step would only
+                // advance the cycle counters — apply that directly.
+                self.stages[i].mvu.skip_idle_cycles(1);
+                continue;
             }
-            // step stages from the LAST to the FIRST so that a word popped
-            // downstream frees space upstream within the same cycle order
-            // (classic reverse-order pipeline update).
-            for i in (0..self.stages.len()).rev() {
-                // input offer for stage i
-                let has_offer = if i == 0 {
-                    if fed < in_words.len() {
-                        word_buf.clear();
-                        word_buf.extend_from_slice(&in_words[fed]);
-                        true
-                    } else {
-                        false
-                    }
+            let offered: Option<&[i32]> = if i == 0 {
+                input
+            } else {
+                has_offer.then(|| self.word_buf.as_slice())
+            };
+            // downstream readiness for stage i: the width converter
+            // must be able to absorb one output word (PE lanes).
+            let lanes = self.params[i].pe;
+            let ready = self.stages[i].conv.can_accept(lanes);
+            let r = self.stages[i].mvu.step(offered, ready);
+            if r.consumed_input {
+                if i == 0 {
+                    consumed_source = true;
                 } else {
-                    self.stages[i - 1].conv.peek_into(&mut word_buf)
-                };
-                if !has_offer && self.stages[i].mvu.quiescent_without_input() {
-                    // quiescent interval for this stage: nothing offered
-                    // and nothing in flight, so a full step would only
-                    // advance the cycle counters — apply that directly.
-                    self.stages[i].mvu.skip_idle_cycles(1);
-                    continue;
+                    self.stages[i - 1].conv.pop();
                 }
-                let offered = has_offer.then(|| word_buf.as_slice());
-                // downstream readiness for stage i: the width converter
-                // must be able to absorb one output word (PE lanes).
-                let lanes = self.params[i].pe;
-                let ready = self.stages[i].conv.can_accept(lanes);
-                let r = self.stages[i].mvu.step(offered, ready);
-                if r.consumed_input {
-                    if i == 0 {
-                        fed += 1;
-                    } else {
-                        self.stages[i - 1].conv.pop();
+            }
+            if let Some(mut word) = r.emitted {
+                // apply thresholding (the T of the MVTU) lane-wise, in
+                // place — the emitted word is owned, so the steady-state
+                // path allocates nothing here (§Perf).
+                let stage = &mut self.stages[i];
+                let pe = self.params[i].pe;
+                let base = stage.nf_cursor * pe;
+                if let Some(t) = &stage.thresholds {
+                    for (k, v) in word.iter_mut().enumerate() {
+                        *v = t.apply_one(base + k, *v);
                     }
                 }
-                if let Some(word) = r.emitted {
-                    // apply thresholding (the T of the MVTU) lane-wise
-                    let stage = &mut self.stages[i];
-                    let pe = self.params[i].pe;
-                    let base = stage.nf_cursor * pe;
-                    let processed: Vec<i32> = match &stage.thresholds {
-                        Some(t) => word
-                            .iter()
-                            .enumerate()
-                            .map(|(k, &acc)| t.apply_one(base + k, acc))
-                            .collect(),
-                        None => word,
-                    };
-                    stage.nf_cursor = (stage.nf_cursor + 1) % self.params[i].neuron_fold();
-                    stage.conv.push(&processed);
-                }
+                stage.nf_cursor = (stage.nf_cursor + 1) % self.params[i].neuron_fold();
+                stage.conv.push(&word);
             }
-            // drain the last stage's converter into full output vectors
-            while self.stages[last].conv.peek_into(&mut word_buf) {
-                self.stages[last].conv.pop();
-                current.extend_from_slice(&word_buf);
-                if first_out_cycle.is_none() {
-                    first_out_cycle = Some(cycle);
-                }
-                if current.len() == out_len {
-                    outputs.push(std::mem::take(&mut current));
-                }
-            }
-            cycle += 1;
         }
+        consumed_source
+    }
 
-        let layer_stats = self
-            .stages
+    /// Pop one full output word off the last stage's converter (the
+    /// chain's TREADY-gated output handshake: at most one word per ready
+    /// cycle). Returns the word's lanes, valid until the next call.
+    pub(in crate::sim) fn drain_word(&mut self) -> Option<&[i32]> {
+        let last = self.stages.len() - 1;
+        if !self.stages[last].conv.peek_into(&mut self.word_buf) {
+            return None;
+        }
+        self.stages[last].conv.pop();
+        Some(&self.word_buf)
+    }
+
+    /// A full output word is waiting at the chain's output.
+    pub(in crate::sim) fn output_word_ready(&self) -> bool {
+        self.stages[self.stages.len() - 1].conv.has_full_word()
+    }
+
+    /// Classify stage `i`'s next cycle (see [`StageClass`]). `has_offer`
+    /// is whether a word is offered to the stage this cycle — the
+    /// upstream converter's state for `i > 0`, the gated source for
+    /// stage 0. Sound because every signal the classification reads
+    /// (converter occupancies, machine state) is frozen while *all*
+    /// stages are non-`Active` and the output drain does not fire.
+    pub(in crate::sim) fn classify_stage(&self, i: usize, has_offer: bool) -> StageClass {
+        let s = &self.stages[i];
+        let ready = s.conv.can_accept(self.params[i].pe);
+        if !has_offer && s.mvu.quiescent_without_input() {
+            StageClass::Idle
+        } else if s.mvu.output_blocked() && !ready {
+            StageClass::Blocked
+        } else if !has_offer && !ready && s.mvu.parked_on_output() {
+            // counters-only step: no pop (sink unready), no delay shift
+            // (line empty), FSM stays IDLE — same increments as idle.
+            StageClass::Idle
+        } else {
+            StageClass::Active
+        }
+    }
+
+    /// Whether stage `i > 0` is offered a word (upstream full word).
+    pub(in crate::sim) fn upstream_offer(&self, i: usize) -> bool {
+        debug_assert!(i > 0);
+        self.stages[i - 1].conv.has_full_word()
+    }
+
+    /// Advance every stage's clock by `n` cycles in closed form,
+    /// according to the span classification. Bit-identical to `n`
+    /// per-cycle iterations in which every stage is `Idle`/`Blocked`
+    /// (the skip methods apply exactly the counters those steps would).
+    pub(in crate::sim) fn skip_span(&mut self, classes: &[StageClass], n: usize) {
+        for (s, &c) in self.stages.iter_mut().zip(classes) {
+            match c {
+                StageClass::Idle => s.mvu.skip_idle_cycles(n),
+                StageClass::Blocked => s.mvu.skip_blocked_cycles(n),
+                StageClass::Active => unreachable!("span skip with an active stage"),
+            }
+        }
+    }
+
+    pub(in crate::sim) fn layer_stats(&self) -> Vec<ChainLayerStats> {
+        self.stages
             .iter()
             .zip(&self.params)
             .map(|(s, p)| ChainLayerStats {
@@ -262,23 +423,118 @@ impl MvuChain {
                 stall_cycles: s.mvu.stats().stall_cycles,
                 slots_consumed: s.mvu.stats().slots_consumed,
             })
+            .collect()
+    }
+
+    /// See [`chain_bottleneck_ii`].
+    pub(in crate::sim) fn bottleneck_ii(&self) -> usize {
+        chain_bottleneck_ii(self.params.iter())
+    }
+}
+
+/// A chain of MVU layers simulated cycle by cycle — the per-cycle
+/// **oracle** the fast kernel ([`run_chain`](super::run_chain)) is held
+/// bit-identical to.
+pub struct MvuChain {
+    core: ChainCore,
+}
+
+impl MvuChain {
+    /// Build from per-layer (validated params, weights, thresholds).
+    /// Layer i's output channel count must equal layer i+1's input vector
+    /// length. Borrows the layers — the weight matrices are partitioned
+    /// into the per-PE memories, never cloned.
+    pub fn new(
+        layers: &[(ValidatedParams, Matrix, Option<Thresholds>)],
+    ) -> Result<MvuChain> {
+        Self::with_fifo_depth(layers, DEFAULT_FIFO_DEPTH)
+    }
+
+    /// [`MvuChain::new`] with an explicit per-stage output-FIFO depth
+    /// (the §5.3.2 decoupling ablation, chain-wide).
+    pub fn with_fifo_depth(
+        layers: &[(ValidatedParams, Matrix, Option<Thresholds>)],
+        fifo_depth: usize,
+    ) -> Result<MvuChain> {
+        let specs: Vec<ChainStage<'_>> = layers
+            .iter()
+            .map(|(p, w, th)| ChainStage::new(p, w, th.as_ref()))
             .collect();
+        Ok(MvuChain { core: ChainCore::build(&specs, fifo_depth, false)? })
+    }
+
+    /// Run the chain over input vectors (each of layer-0 length) with
+    /// ideal stimulus (always-valid source, always-ready sink).
+    pub fn run(&mut self, inputs: &[Vec<i32>]) -> Result<ChainReport> {
+        self.run_stalled(inputs, StallPattern::None, StallPattern::None)
+    }
+
+    /// Run with stall patterns on the chain's AXI endpoints: TVALID gaps
+    /// on the first layer's input stream, TREADY gaps on the last
+    /// layer's output stream (§5.3.1 end to end). Patterns are evaluated
+    /// once per cycle — `Random` ones draw one PRNG value per cycle per
+    /// endpoint, which the fast kernel reproduces exactly.
+    pub fn run_stalled(
+        &mut self,
+        inputs: &[Vec<i32>],
+        in_stall: StallPattern,
+        out_stall: StallPattern,
+    ) -> Result<ChainReport> {
+        let p0 = &self.core.params()[0];
+        let in_words: Vec<Vec<i32>> = inputs
+            .iter()
+            .flat_map(|v| MvuBatch::vector_to_words(p0, v))
+            .collect();
+        let out_len = self.core.params()[self.core.stage_count() - 1].matrix_rows();
+        let expected = inputs.len();
+        let max_cycles = chain_max_cycles(self.core.params(), expected);
+
+        let mut in_rng = in_stall.make_rng();
+        let mut out_rng = out_stall.make_rng();
+        let mut fed = 0usize;
+        let mut outputs: Vec<Vec<i32>> = Vec::with_capacity(expected);
+        let mut current: Vec<i32> = Vec::with_capacity(out_len);
+        let mut first_out_cycle = None;
+        let mut cycle = 0usize;
+
+        while outputs.len() < expected {
+            if cycle > max_cycles {
+                return Err(chain_deadlock(cycle, outputs.len(), expected));
+            }
+            // one stall evaluation per endpoint per cycle (keeps Random
+            // PRNG streams aligned with the fast kernel's)
+            let in_ok = !in_stall.stalled(cycle, &mut in_rng);
+            let out_ok = !out_stall.stalled(cycle, &mut out_rng);
+            let offered = (fed < in_words.len() && in_ok).then(|| in_words[fed].as_slice());
+            if self.core.step_cycle(offered) {
+                fed += 1;
+            }
+            if out_ok {
+                if let Some(word) = self.core.drain_word() {
+                    if first_out_cycle.is_none() {
+                        first_out_cycle = Some(cycle);
+                    }
+                    current.extend_from_slice(word);
+                    if current.len() == out_len {
+                        outputs.push(std::mem::take(&mut current));
+                    }
+                }
+            }
+            cycle += 1;
+        }
+
         Ok(ChainReport {
             outputs,
             first_out_cycle: first_out_cycle.unwrap_or(0),
             exec_cycles: cycle,
-            layer_stats,
+            layer_stats: self.core.layer_stats(),
         })
     }
 
     /// Analytic steady-state initiation interval: the bottleneck layer's
     /// fold (paper: the folding pass balances exactly this).
     pub fn bottleneck_ii(&self) -> usize {
-        self.params
-            .iter()
-            .map(|p| p.synapse_fold() * p.neuron_fold() * p.output_pixels())
-            .max()
-            .unwrap_or(0)
+        self.core.bottleneck_ii()
     }
 }
 
@@ -342,7 +598,7 @@ mod tests {
             layer("l0", 16, 8, 2, 4, 1, true),
             layer("l1", 8, 4, 2, 2, 2, false),
         ];
-        let mut chain = MvuChain::new(layers.clone()).unwrap();
+        let mut chain = MvuChain::new(&layers).unwrap();
         let mut rng = Pcg32::new(9);
         let inputs: Vec<Vec<i32>> = (0..6)
             .map(|_| (0..16).map(|_| rng.next_range(4) as i32).collect())
@@ -388,7 +644,7 @@ mod tests {
                 (p.clone(), w, th)
             })
             .collect();
-        let mut chain = MvuChain::new(layers.clone()).unwrap();
+        let mut chain = MvuChain::new(&layers).unwrap();
         let inputs: Vec<Vec<i32>> = (0..4)
             .map(|_| (0..600).map(|_| rng.next_range(4) as i32).collect())
             .collect();
@@ -410,6 +666,40 @@ mod tests {
     #[test]
     fn chain_rejects_mismatched_layers() {
         let layers = vec![layer("a", 16, 8, 2, 4, 1, false), layer("b", 9, 4, 2, 3, 2, false)];
-        assert!(MvuChain::new(layers).is_err());
+        assert!(MvuChain::new(&layers).is_err());
+    }
+
+    /// Endpoint stalls slow the chain down but never change the results,
+    /// and a never-ready output deadlocks with the structured message.
+    #[test]
+    fn stalled_chain_preserves_results() {
+        let layers = vec![
+            layer("s0", 16, 8, 2, 4, 3, true),
+            layer("s1", 8, 4, 2, 2, 4, false),
+        ];
+        let mut rng = Pcg32::new(10);
+        let inputs: Vec<Vec<i32>> = (0..4)
+            .map(|_| (0..16).map(|_| rng.next_range(4) as i32).collect())
+            .collect();
+        let clean = MvuChain::new(&layers).unwrap().run(&inputs).unwrap();
+        let stalled = MvuChain::with_fifo_depth(&layers, 1)
+            .unwrap()
+            .run_stalled(
+                &inputs,
+                StallPattern::Periodic { period: 3, duty: 1, phase: 0 },
+                StallPattern::Periodic { period: 5, duty: 3, phase: 2 },
+            )
+            .unwrap();
+        assert_eq!(clean.outputs, stalled.outputs);
+        assert!(stalled.exec_cycles > clean.exec_cycles);
+        let dead = MvuChain::new(&layers)
+            .unwrap()
+            .run_stalled(
+                &inputs[..1],
+                StallPattern::None,
+                StallPattern::Periodic { period: 1, duty: 1, phase: 0 },
+            )
+            .unwrap_err();
+        assert!(dead.to_string().contains("chain deadlock"), "{dead}");
     }
 }

@@ -1,0 +1,360 @@
+//! The next-event **chain** kernel — the production path behind
+//! [`run_chain`](crate::sim::run_chain) for multi-layer dataflow
+//! accelerators (the Table 7 NID MLP hot path).
+//!
+//! The per-cycle oracle ([`MvuChain`](crate::sim::MvuChain)) dispatches
+//! every stage every clock. This kernel produces bit-identical
+//! [`ChainReport`]s (asserted by `tests/chain_identity.rs`) while doing
+//! strictly less work per simulated cycle, on two axes:
+//!
+//!   * **datapath** — stages run the deferred row datapath
+//!     (`MvuStream::with_row_datapath`): compute slots stop accumulating
+//!     per `(nf, sf)` slot and each neuron fold's output word is instead
+//!     evaluated as whole-row dot products at its last synapse fold —
+//!     bit-packed XNOR-popcount / sign-mask SWAR kernels for
+//!     `Xnor`/`BinaryWeights` stages (64 lanes per word op, DESIGN.md
+//!     §Packed datapath), flat `pe_row` for `Standard`. Chains stop
+//!     paying the flat per-slot i32 path the oracle models;
+//!   * **clock** — a next-event rule over the whole chain: each cycle,
+//!     every stage's upcoming step is classified as `Active` (must
+//!     execute), `Idle` (counter-only: quiescent, or output words parked
+//!     behind an unready converter) or `Blocked` (frozen on §5.3.2
+//!     backpressure). When *no* stage is `Active` and the output drain
+//!     cannot fire, the chain state is provably frozen until an endpoint
+//!     stall clears, so the clock jumps straight to the minimum of the
+//!     source's and sink's `StallPattern::next_clear` targets and the
+//!     per-stage counters are applied in closed form
+//!     (`skip_idle_cycles`/`skip_blocked_cycles`).
+//!
+//! `Random` endpoint patterns draw one PRNG value per modelled cycle, so
+//! the kernel degrades to per-cycle stepping for them (identical draws,
+//! identical reports); executed cycles always run through the *same*
+//! [`ChainCore`] update the oracle uses, so the kernels cannot drift on
+//! the cycles that do real work. The steady state itself is anchored
+//! analytically by the bottleneck initiation interval
+//! ([`MvuChain::bottleneck_ii`](crate::sim::MvuChain::bottleneck_ii)):
+//! after pipeline fill an output vector leaves every `II_max` cycles,
+//! which the chain shootout in `benches/table7_nid.rs` cross-checks.
+
+use anyhow::Result;
+
+use crate::cfg::ValidatedParams;
+use crate::quant::{Matrix, Thresholds};
+
+use super::super::axis::StallPattern;
+use super::super::batch_unit::MvuBatch;
+use super::super::chain::{
+    chain_deadlock, chain_max_cycles, ChainCore, ChainReport, ChainStage, StageClass,
+};
+use super::super::DEFAULT_FIFO_DEPTH;
+
+/// Fast-kernel chain run with ideal stimulus (always-valid source,
+/// always-ready sink) and the default per-stage FIFO depth. The default
+/// entry point behind [`sim::run_chain`](crate::sim::run_chain).
+pub fn run_chain(
+    layers: &[(ValidatedParams, Matrix, Option<Thresholds>)],
+    inputs: &[Vec<i32>],
+) -> Result<ChainReport> {
+    run_chain_stalled(
+        layers,
+        inputs,
+        StallPattern::None,
+        StallPattern::None,
+        DEFAULT_FIFO_DEPTH,
+    )
+}
+
+/// Fast-kernel chain run with stall patterns on the chain's AXI
+/// endpoints and an explicit per-stage output-FIFO depth.
+pub fn run_chain_stalled(
+    layers: &[(ValidatedParams, Matrix, Option<Thresholds>)],
+    inputs: &[Vec<i32>],
+    in_stall: StallPattern,
+    out_stall: StallPattern,
+    fifo_depth: usize,
+) -> Result<ChainReport> {
+    let specs: Vec<ChainStage<'_>> = layers
+        .iter()
+        .map(|(p, w, th)| ChainStage::new(p, w, th.as_ref()))
+        .collect();
+    run_chain_shared(&specs, inputs, in_stall, out_stall, fifo_depth)
+}
+
+/// [`run_chain_stalled`] over explicit per-layer specs, each optionally
+/// carrying pre-built weight state ([`ChainStage::shared`]). The explore
+/// engine drives this with its stimulus memo so a fold sweep over a
+/// multi-layer network partitions and packs every matrix once.
+pub fn run_chain_shared(
+    layers: &[ChainStage<'_>],
+    inputs: &[Vec<i32>],
+    in_stall: StallPattern,
+    out_stall: StallPattern,
+    fifo_depth: usize,
+) -> Result<ChainReport> {
+    let mut core = ChainCore::build(layers, fifo_depth, true)?;
+    let in_words: Vec<Vec<i32>> = inputs
+        .iter()
+        .flat_map(|v| MvuBatch::vector_to_words(&core.params()[0], v))
+        .collect();
+    let n = core.stage_count();
+    let out_len = core.params()[n - 1].matrix_rows();
+    let expected = inputs.len();
+    let max_cycles = chain_max_cycles(core.params(), expected);
+    // deterministic patterns are pure functions of the cycle index, so
+    // the clock can jump over them; Random ones must be drawn per cycle.
+    let deterministic = !in_stall.is_random() && !out_stall.is_random();
+    let mut in_rng = in_stall.make_rng();
+    let mut out_rng = out_stall.make_rng();
+
+    let mut fed = 0usize;
+    let mut outputs: Vec<Vec<i32>> = Vec::with_capacity(expected);
+    let mut current: Vec<i32> = Vec::with_capacity(out_len);
+    let mut first_out_cycle = None;
+    let mut cycle = 0usize;
+    let mut classes: Vec<StageClass> = vec![StageClass::Active; n];
+
+    while outputs.len() < expected {
+        if cycle > max_cycles {
+            return Err(chain_deadlock(cycle, outputs.len(), expected));
+        }
+        // Gate phase: find the next cycle in which anything can happen,
+        // applying closed-form counter skips over the frozen spans.
+        let (in_ok, out_ok) = 'gate: {
+            if !deterministic {
+                break 'gate (
+                    !in_stall.stalled(cycle, &mut in_rng),
+                    !out_stall.stalled(cycle, &mut out_rng),
+                );
+            }
+            loop {
+                if cycle > max_cycles {
+                    // ran into the deadlock bound while skipping; the
+                    // outer loop reports it with the same cycle count
+                    // the oracle reaches by stepping.
+                    break 'gate (false, false);
+                }
+                let in_ok = !in_stall.stalled(cycle, &mut in_rng);
+                let out_ok = !out_stall.stalled(cycle, &mut out_rng);
+                let has_input = fed < in_words.len() && in_ok;
+                let mut all_inert = true;
+                for i in 0..n {
+                    let offer = if i == 0 { has_input } else { core.upstream_offer(i) };
+                    classes[i] = core.classify_stage(i, offer);
+                    if classes[i] == StageClass::Active {
+                        all_inert = false;
+                        break;
+                    }
+                }
+                let drain_fires = out_ok && core.output_word_ready();
+                if !all_inert || drain_fires {
+                    break 'gate (in_ok, out_ok);
+                }
+                // Every stage is frozen and the drain cannot fire: the
+                // only future events are the source clearing (stage 0
+                // idle with words left to feed — it is stalled *now*, or
+                // it would be active) and the sink clearing (a full
+                // output word waiting behind TREADY). No event at all
+                // runs straight into the deadlock bound, exactly like
+                // the oracle spinning there cycle by cycle.
+                let mut next: Option<usize> = None;
+                if fed < in_words.len() && classes[0] != StageClass::Blocked {
+                    next = in_stall.next_clear(cycle);
+                }
+                if core.output_word_ready() {
+                    next = match (next, out_stall.next_clear(cycle)) {
+                        (None, t) => t,
+                        (s, None) => s,
+                        (Some(a), Some(b)) => Some(a.min(b)),
+                    };
+                }
+                let target = next.unwrap_or(max_cycles + 1).min(max_cycles + 1);
+                debug_assert!(target > cycle, "span skip must make progress");
+                core.skip_span(&classes, target - cycle);
+                cycle = target;
+            }
+        };
+        if cycle > max_cycles {
+            continue;
+        }
+
+        // the executed cycle — identical to the oracle loop body
+        let offered = (fed < in_words.len() && in_ok).then(|| in_words[fed].as_slice());
+        if core.step_cycle(offered) {
+            fed += 1;
+        }
+        if out_ok {
+            if let Some(word) = core.drain_word() {
+                if first_out_cycle.is_none() {
+                    first_out_cycle = Some(cycle);
+                }
+                current.extend_from_slice(word);
+                if current.len() == out_len {
+                    outputs.push(std::mem::take(&mut current));
+                }
+            }
+        }
+        cycle += 1;
+    }
+
+    Ok(ChainReport {
+        outputs,
+        first_out_cycle: first_out_cycle.unwrap_or(0),
+        exec_cycles: cycle,
+        layer_stats: core.layer_stats(),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cfg::{DesignPoint, SimdType};
+    use crate::sim::MvuChain;
+    use crate::util::rng::Pcg32;
+
+    type Layer = (ValidatedParams, Matrix, Option<Thresholds>);
+
+    fn layer(
+        name: &str,
+        (fin, fout): (usize, usize),
+        (pe, simd): (usize, usize),
+        ty: SimdType,
+        ob: u32,
+        seed: u64,
+    ) -> Layer {
+        let (wb, ib) = match ty {
+            SimdType::Xnor => (1, 1),
+            SimdType::BinaryWeights => (1, 2),
+            SimdType::Standard => (2, 2),
+        };
+        let p = DesignPoint::fc(name)
+            .in_features(fin)
+            .out_features(fout)
+            .pe(pe)
+            .simd(simd)
+            .simd_type(ty)
+            .precision(wb, ib, ob)
+            .build()
+            .unwrap();
+        let mut rng = Pcg32::new(seed);
+        let bit = !matches!(ty, SimdType::Standard);
+        let w = Matrix::new(
+            fout,
+            fin,
+            (0..fin * fout)
+                .map(|_| {
+                    if bit {
+                        rng.next_range(2) as i32
+                    } else {
+                        rng.next_range(4) as i32 - 2
+                    }
+                })
+                .collect(),
+        )
+        .unwrap();
+        let th = (ob > 0).then(|| {
+            let steps = (1usize << ob) - 1;
+            let span = (2 * fin + 1) as u32;
+            Thresholds::from_rows(
+                &(0..fout)
+                    .map(|_| {
+                        let mut t: Vec<i32> = (0..steps)
+                            .map(|_| rng.next_range(span) as i32 - fin as i32)
+                            .collect();
+                        t.sort();
+                        t
+                    })
+                    .collect::<Vec<_>>(),
+            )
+            .unwrap()
+        });
+        (p, w, th)
+    }
+
+    fn inputs_for(p: &ValidatedParams, n: usize, seed: u64) -> Vec<Vec<i32>> {
+        let mut rng = Pcg32::new(seed);
+        (0..n)
+            .map(|_| {
+                (0..p.matrix_cols())
+                    .map(|_| match p.simd_type {
+                        SimdType::Xnor => rng.next_range(2) as i32,
+                        _ => rng.next_range(4) as i32,
+                    })
+                    .collect()
+            })
+            .collect()
+    }
+
+    #[test]
+    fn fast_chain_is_bit_identical_on_ideal_flow() {
+        for ty in SimdType::ALL {
+            let layers = vec![
+                layer("c0", (16, 8), (2, 4), ty, 1, 5),
+                layer("c1", (8, 4), (2, 2), ty, 0, 6),
+            ];
+            let inputs = inputs_for(&layers[0].0, 5, 7);
+            let fast = run_chain(&layers, &inputs).unwrap();
+            let oracle = MvuChain::new(&layers).unwrap().run(&inputs).unwrap();
+            assert_eq!(fast, oracle, "{ty}");
+        }
+    }
+
+    #[test]
+    fn fast_chain_is_bit_identical_under_periodic_stalls() {
+        let layers = vec![
+            layer("p0", (16, 8), (4, 4), SimdType::Xnor, 1, 11),
+            layer("p1", (8, 8), (2, 4), SimdType::Xnor, 1, 12),
+            layer("p2", (8, 2), (1, 2), SimdType::Xnor, 0, 13),
+        ];
+        let inputs = inputs_for(&layers[0].0, 4, 14);
+        let in_s = StallPattern::Periodic { period: 7, duty: 4, phase: 2 };
+        let out_s = StallPattern::Periodic { period: 5, duty: 3, phase: 1 };
+        for depth in [1usize, 2, 32] {
+            let fast = run_chain_stalled(
+                &layers,
+                &inputs,
+                in_s.clone(),
+                out_s.clone(),
+                depth,
+            )
+            .unwrap();
+            let oracle = MvuChain::with_fifo_depth(&layers, depth)
+                .unwrap()
+                .run_stalled(&inputs, in_s.clone(), out_s.clone())
+                .unwrap();
+            assert_eq!(fast, oracle, "depth={depth}");
+        }
+    }
+
+    #[test]
+    fn fast_chain_is_bit_identical_under_random_stalls() {
+        let layers = vec![
+            layer("r0", (12, 6), (3, 4), SimdType::Standard, 2, 21),
+            layer("r1", (6, 3), (1, 3), SimdType::Standard, 0, 22),
+        ];
+        let inputs = inputs_for(&layers[0].0, 3, 23);
+        let in_s = StallPattern::Random { seed: 31, p_num: 120 };
+        let out_s = StallPattern::Random { seed: 32, p_num: 90 };
+        let fast =
+            run_chain_stalled(&layers, &inputs, in_s.clone(), out_s.clone(), 2).unwrap();
+        let oracle = MvuChain::with_fifo_depth(&layers, 2)
+            .unwrap()
+            .run_stalled(&inputs, in_s, out_s)
+            .unwrap();
+        assert_eq!(fast, oracle);
+    }
+
+    #[test]
+    fn never_ready_sink_deadlocks_like_the_oracle() {
+        let layers = vec![layer("d0", (8, 4), (2, 4), SimdType::Standard, 0, 41)];
+        let inputs = inputs_for(&layers[0].0, 1, 42);
+        let dead = StallPattern::Periodic { period: 1, duty: 1, phase: 0 };
+        let fast =
+            run_chain_stalled(&layers, &inputs, StallPattern::None, dead.clone(), 2).unwrap_err();
+        let oracle = MvuChain::with_fifo_depth(&layers, 2)
+            .unwrap()
+            .run_stalled(&inputs, StallPattern::None, dead)
+            .unwrap_err();
+        assert_eq!(fast.to_string(), oracle.to_string());
+        assert!(fast.to_string().contains("chain deadlock"));
+    }
+}

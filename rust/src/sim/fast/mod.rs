@@ -34,6 +34,11 @@
 //! and therefore the reports, bit-identical to the reference. Cycles where
 //! real work happens are executed through the same [`MvuBatch::step`] the
 //! oracle uses, so the two kernels cannot drift on the hard cases.
+//!
+//! [`chain`] extends the same discipline to multi-layer chains: the
+//! next-event kernel behind [`run_chain`](super::run_chain).
+
+pub mod chain;
 
 use std::sync::Arc;
 

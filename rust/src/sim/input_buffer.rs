@@ -70,6 +70,18 @@ impl InputBuffer {
     pub fn peek(&self, slot: usize) -> &[i32] {
         &self.words[slot]
     }
+
+    /// Copy the complete buffered vector (words 0..depth concatenated)
+    /// into `out`. Only meaningful when the buffer is full — the row
+    /// datapath calls this exactly once per vector, at the first last-
+    /// synapse-fold slot, where fullness is guaranteed.
+    pub fn copy_vector_into(&self, out: &mut Vec<i32>) {
+        debug_assert!(self.full(), "vector copy before buffer full");
+        out.clear();
+        for w in &self.words {
+            out.extend_from_slice(w);
+        }
+    }
 }
 
 #[cfg(test)]
@@ -101,6 +113,17 @@ mod tests {
         b.write(&[9]);
         assert_eq!(b.peek(0), &[9]);
         assert_eq!(b.peek(1), &[2]); // old data until overwritten
+    }
+
+    #[test]
+    fn copy_vector_concatenates_in_write_order() {
+        let mut b = InputBuffer::new(3);
+        b.write(&[1, 2]);
+        b.write(&[3, 4]);
+        b.write(&[5, 6]);
+        let mut v = vec![99];
+        b.copy_vector_into(&mut v);
+        assert_eq!(v, vec![1, 2, 3, 4, 5, 6]);
     }
 
     #[test]

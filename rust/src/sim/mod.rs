@@ -21,6 +21,12 @@
 //!     dot products, bit-identical to the oracle (asserted by
 //!     `tests/kernel_identity.rs` over the Table 2 grid).
 //!
+//! Multi-layer chains follow the same split: [`MvuChain`] is the
+//! per-cycle oracle, and [`run_chain`] / [`run_chain_stalled`] /
+//! [`run_chain_shared`] dispatch to the next-event kernel in
+//! [`fast::chain`] (bit-identical, asserted by `tests/chain_identity.rs`
+//! over the NID MLP grid).
+//!
 //! Bump [`SIM_KERNEL_VERSION`] on any change that could alter a
 //! simulation report: it is part of every simulation cache key, so stale
 //! on-disk entries from an older kernel can never be served as current.
@@ -43,8 +49,9 @@ pub mod weight_mem;
 
 pub use axis::{AxisSink, AxisSource, StallPattern};
 pub use batch_unit::MvuBatch;
-pub use chain::{ChainReport, MvuChain};
+pub use chain::{chain_bottleneck_ii, ChainLayerStats, ChainReport, ChainStage, MvuChain};
 pub use clock::{run_mvu, run_mvu_fifo, run_mvu_shared, run_mvu_stalled, SimReport};
+pub use fast::chain::{run_chain, run_chain_shared, run_chain_stalled};
 pub use fast::SharedWeights;
 pub use fsm::{FsmInputs, FsmState, MvuFsm};
 pub use hls::HlsMvu;
@@ -67,8 +74,10 @@ pub const DEFAULT_FIFO_DEPTH: usize = 4;
 /// `Xnor`/`BinaryWeights` ideal-flow datapath (DESIGN.md §Packed
 /// datapath) **and** the fold-independent stimulus seed
 /// (`explore::stimulus_seed`), which changes the canonical stimulus of
-/// fold variants. The packed datapath itself is bit-identical to version
-/// 2, but keying the cache on the kernel version means a kernel change
-/// can never be served stale results from a previous kernel's on-disk
-/// entries.
-pub const SIM_KERNEL_VERSION: u32 = 3;
+/// fold variants; version 4 the next-event chain kernel
+/// ([`fast::chain`], DESIGN.md §Chain fast kernel) together with the
+/// chain entries the explore cache now stores. Each new kernel is
+/// bit-identical to its predecessor where they overlap, but keying the
+/// cache on the kernel version means a kernel change can never be
+/// served stale results from a previous kernel's on-disk entries.
+pub const SIM_KERNEL_VERSION: u32 = 4;

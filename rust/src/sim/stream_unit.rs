@@ -20,21 +20,33 @@
 //! `SF * NF * OD^2 + PIPELINE_STAGES + 1` with no stalls — asserted
 //! against the paper's Table 7 in tests.
 //!
-//! The stepped datapath here stays on flat i32 lanes deliberately: one
+//! The default stepped datapath stays on flat i32 lanes deliberately: one
 //! `(nf, sf)` slot touches only `SIMD` lanes, too few to amortize
 //! bit-packing, and this unit is the semantic reference the packed
 //! ideal-flow kernels (DESIGN.md §Packed datapath) are held
-//! bit-identical to. Whole-row packed evaluation lives in `sim::fast`.
+//! bit-identical to. The chain fast kernel (`sim::fast::chain`) instead
+//! runs this unit with the **row datapath** ([`RowDatapath`]): identical
+//! FSM/FIFO/delay-line timing, but the per-slot multiply-accumulate is
+//! deferred to the last synapse fold of each neuron fold and evaluated as
+//! whole-row dot products over the buffered vector — packed SWAR kernels
+//! for the 1-bit SIMD types, flat `pe_row` otherwise. Deferral is exact:
+//! every value a row pass produces equals the slot-wise accumulation
+//! (wrapping i32 addition is associative), and no timing depends on the
+//! accumulator contents.
+
+use std::sync::Arc;
 
 use anyhow::Result;
 
-use crate::cfg::{LayerParams, ValidatedParams};
+use crate::cfg::{LayerParams, SimdType, ValidatedParams};
+use crate::quant::pack_bits_into;
 
 use super::fifo::Fifo;
 use super::fsm::{FsmAction, FsmInputs, FsmState, MvuFsm};
 use super::input_buffer::InputBuffer;
 use super::pe::Pe;
-use super::weight_mem::WeightMem;
+use super::simd_elem::{pe_row, pe_row_packed_binary, pe_row_packed_xnor};
+use super::weight_mem::{PackedWeightMem, WeightMem};
 use super::{DEFAULT_FIFO_DEPTH, PIPELINE_STAGES};
 
 /// Result of one clock cycle.
@@ -60,6 +72,26 @@ pub struct StreamStats {
     pub outputs_emitted: usize,
 }
 
+/// Deferred whole-row datapath state (see the module docs). Timing is
+/// untouched — only *where* the dot products are evaluated changes, so a
+/// row-mode stream is bit-identical to the slot-wise one.
+#[derive(Debug)]
+struct RowDatapath {
+    /// Fold-independent bit packing of the weight matrix
+    /// (`Xnor`/`BinaryWeights`); `None` keeps the flat row fallback.
+    packed: Option<Arc<PackedWeightMem>>,
+    /// Flat copy of the current input vector (rebuilt once per vector
+    /// from the input buffer, reused across neuron folds).
+    vec: Vec<i32>,
+    /// Bit-packed `vec` for the XNOR kernel (valid iff `xnor_packable`).
+    xbits: Vec<u64>,
+    xnor_packable: bool,
+    /// Wrapping lane sum of `vec` (the BinaryWeights `S` term).
+    total: i32,
+    /// Per-vector state above is valid for the vector in the buffer.
+    prepared: bool,
+}
+
 /// The stream unit.
 #[derive(Debug)]
 pub struct MvuStream {
@@ -67,6 +99,8 @@ pub struct MvuStream {
     fsm: MvuFsm,
     buf: InputBuffer,
     pes: Vec<Pe>,
+    /// `Some` switches the compute slots to the deferred row datapath.
+    row: Option<RowDatapath>,
     /// Register delay line: stage 0 is filled by the PE bank, the last
     /// stage drains into the FIFO.
     delay: Vec<Option<Vec<i32>>>,
@@ -92,6 +126,7 @@ impl MvuStream {
             fsm: MvuFsm::new(),
             buf: InputBuffer::new(params.input_buf_depth()),
             pes: (0..params.pe).map(|_| Pe::new()).collect(),
+            row: None,
             delay: vec![None; PIPELINE_STAGES],
             fifo: Fifo::new(fifo_depth),
             cur_sf: 0,
@@ -101,6 +136,41 @@ impl MvuStream {
             stats: StreamStats::default(),
             params: params.params().clone(),
         })
+    }
+
+    /// A stream unit running the deferred **row datapath**: identical
+    /// cycle behaviour, but compute slots accumulate nothing — each
+    /// neuron fold's output word is evaluated as whole-row dot products
+    /// over the buffered vector at its last synapse fold, through the
+    /// packed SWAR kernels when `packed` is given (`Xnor` /
+    /// `BinaryWeights`) and the flat [`pe_row`] otherwise. `packed` must
+    /// be a packing of this design point's weight matrix (shape-checked).
+    pub fn with_row_datapath(
+        params: &ValidatedParams,
+        fifo_depth: usize,
+        packed: Option<Arc<PackedWeightMem>>,
+    ) -> Result<MvuStream> {
+        if let Some(pk) = &packed {
+            if pk.rows() != params.matrix_rows() || pk.cols() != params.matrix_cols() {
+                anyhow::bail!(
+                    "shared packed weights {}x{} do not match params {}x{}",
+                    pk.rows(),
+                    pk.cols(),
+                    params.matrix_rows(),
+                    params.matrix_cols()
+                );
+            }
+        }
+        let mut s = Self::with_fifo_depth(params, fifo_depth)?;
+        s.row = Some(RowDatapath {
+            packed,
+            vec: Vec::with_capacity(params.matrix_cols()),
+            xbits: Vec::new(),
+            xnor_packable: false,
+            total: 0,
+            prepared: false,
+        });
+        Ok(s)
     }
 
     pub fn params(&self) -> &LayerParams {
@@ -146,6 +216,19 @@ impl MvuStream {
             && self.delay.iter().all(Option::is_none)
     }
 
+    /// Output words are parked in the FIFO with the datapath otherwise
+    /// empty and the FSM idle: a [`step`](Self::step) with no offered
+    /// word and an unready sink is then provably a no-op apart from the
+    /// cycle counters (no pop, no delay shift, FSM stays IDLE) — the same
+    /// counter increments as a quiescent cycle. The chain fast kernel
+    /// skips such intervals with [`skip_idle_cycles`](Self::skip_idle_cycles).
+    pub fn parked_on_output(&self) -> bool {
+        self.fsm.state == FsmState::Idle
+            && !self.has_pending_folds()
+            && !self.fifo.is_empty()
+            && self.delay.iter().all(Option::is_none)
+    }
+
     /// Advance the clock over `n` cycles in which the datapath is frozen on
     /// output backpressure ([`output_blocked`](Self::output_blocked) with
     /// the sink never ready): bit-identical to `n` calls of
@@ -163,8 +246,14 @@ impl MvuStream {
     /// Advance the clock over `n` quiescent cycles
     /// ([`quiescent_without_input`](Self::quiescent_without_input) with no
     /// input offered): bit-identical to `n` idle [`step`](Self::step)s.
+    /// Equally valid for [`parked_on_output`](Self::parked_on_output)
+    /// intervals with an unready sink — those steps increment exactly the
+    /// same counters.
     pub fn skip_idle_cycles(&mut self, n: usize) {
-        debug_assert!(self.quiescent_without_input(), "skip_idle_cycles with work pending");
+        debug_assert!(
+            self.quiescent_without_input() || self.parked_on_output(),
+            "skip_idle_cycles with work pending"
+        );
         self.stats.cycles += n;
         self.stats.idle_cycles += n;
     }
@@ -225,6 +314,9 @@ impl MvuStream {
                     self.cur_sf = 0;
                     self.cur_nf = 0;
                     self.comp_done = false;
+                    if let Some(row) = &mut self.row {
+                        row.prepared = false;
+                    }
                 }
                 self.buf.write(word);
                 self.compute_slot(word, wmem);
@@ -252,19 +344,25 @@ impl MvuStream {
         debug_assert!(self.cur_nf < nf_total, "slot beyond comp_done");
         let first = self.cur_sf == 0;
         let last = self.cur_sf == sf_total - 1;
-        let addr = self.cur_nf * sf_total + self.cur_sf;
-        let ty = self.params.simd_type;
-        let mut result: Option<Vec<i32>> = last.then(|| Vec::with_capacity(self.pes.len()));
-        for (p, pe) in self.pes.iter_mut().enumerate() {
-            let w = wmem.read(p, addr);
-            let r = pe.slot(x, w, ty, first, last);
-            if let (Some(out), Some(v)) = (&mut result, r) {
-                out.push(v);
+        if self.row.is_some() {
+            if last {
+                self.compute_row_word(wmem, sf_total);
             }
-        }
-        if let Some(word) = result {
-            debug_assert!(self.delay[0].is_none(), "delay stage collision");
-            self.delay[0] = Some(word);
+        } else {
+            let addr = self.cur_nf * sf_total + self.cur_sf;
+            let ty = self.params.simd_type;
+            let mut result: Option<Vec<i32>> = last.then(|| Vec::with_capacity(self.pes.len()));
+            for (p, pe) in self.pes.iter_mut().enumerate() {
+                let w = wmem.read(p, addr);
+                let r = pe.slot(x, w, ty, first, last);
+                if let (Some(out), Some(v)) = (&mut result, r) {
+                    out.push(v);
+                }
+            }
+            if let Some(word) = result {
+                debug_assert!(self.delay[0].is_none(), "delay stage collision");
+                self.delay[0] = Some(word);
+            }
         }
         self.stats.slots_consumed += 1;
         self.cur_sf += 1;
@@ -275,6 +373,53 @@ impl MvuStream {
                 self.comp_done = true;
             }
         }
+    }
+
+    /// Row-datapath evaluation of neuron fold `cur_nf`'s output word: one
+    /// whole-row dot product per PE over the buffered vector. Called only
+    /// at the last synapse fold, where the input buffer provably holds
+    /// the complete vector (nf 0 finishes on the write of word SF-1; the
+    /// replay folds run from a full buffer). Bit-identical to the
+    /// slot-wise accumulation by associativity of wrapping addition and
+    /// the SWAR identities (DESIGN.md §Packed datapath); unpackable
+    /// operands fall back to the flat [`pe_row`].
+    fn compute_row_word(&mut self, wmem: &WeightMem, sf_total: usize) {
+        let mut row = self.row.take().expect("row datapath state");
+        if !row.prepared {
+            row.vec.clear();
+            self.buf.copy_vector_into(&mut row.vec);
+            match self.params.simd_type {
+                SimdType::Xnor => {
+                    row.xnor_packable =
+                        row.packed.is_some() && pack_bits_into(&row.vec, &mut row.xbits).is_ok();
+                }
+                SimdType::BinaryWeights => {
+                    row.total = row.vec.iter().fold(0i32, |a, &v| a.wrapping_add(v));
+                }
+                SimdType::Standard => {}
+            }
+            row.prepared = true;
+        }
+        let pe_n = self.params.pe;
+        let cols = self.params.matrix_cols();
+        let ty = self.params.simd_type;
+        let mut word = Vec::with_capacity(pe_n);
+        for p in 0..pe_n {
+            let r = self.cur_nf * pe_n + p;
+            let v = match (ty, &row.packed) {
+                (SimdType::Xnor, Some(pk)) if row.xnor_packable => {
+                    pe_row_packed_xnor(&row.xbits, pk.row_words(r), cols)
+                }
+                (SimdType::BinaryWeights, Some(pk)) => {
+                    pe_row_packed_binary(&row.vec, pk.row_words(r), row.total)
+                }
+                _ => pe_row(&row.vec, wmem.read_row(p, self.cur_nf, sf_total), ty),
+            };
+            word.push(v);
+        }
+        debug_assert!(self.delay[0].is_none(), "delay stage collision");
+        self.delay[0] = Some(word);
+        self.row = Some(row);
     }
 }
 
@@ -409,6 +554,104 @@ mod tests {
     fn zero_fifo_depth_is_an_error() {
         let (p, _) = setup(2, 4);
         assert!(MvuStream::with_fifo_depth(&p, 0).is_err());
+    }
+
+    /// The row datapath must be cycle-for-cycle and value-for-value
+    /// identical to the slot-wise one, including under backpressure and
+    /// across multiple vectors (the chain fast kernel's core lemma).
+    #[test]
+    fn row_datapath_is_bit_identical_to_slotwise() {
+        use crate::cfg::SimdType;
+        for ty in SimdType::ALL {
+            let p = crate::cfg::DesignPoint::fc("row")
+                .in_features(8)
+                .out_features(4)
+                .pe(2)
+                .simd(4)
+                .paper_precision(ty)
+                .build()
+                .unwrap();
+            let mut rng = crate::util::rng::Pcg32::new(31);
+            let bit = !matches!(ty, SimdType::Standard);
+            let data: Vec<i32> = (0..32)
+                .map(|_| {
+                    if bit {
+                        rng.next_range(2) as i32
+                    } else {
+                        rng.next_range(8) as i32 - 4
+                    }
+                })
+                .collect();
+            let w = Matrix::new(4, 8, data).unwrap();
+            let wm = WeightMem::from_matrix(&p, &w).unwrap();
+            let packed = PackedWeightMem::from_matrix(&w).ok().map(Arc::new);
+            let mut slot = MvuStream::with_fifo_depth(&p, 2).unwrap();
+            let mut row = MvuStream::with_row_datapath(&p, 2, packed).unwrap();
+            let words: Vec<Vec<i32>> = (0..3)
+                .flat_map(|_| {
+                    let v: Vec<i32> = (0..8)
+                        .map(|_| {
+                            if matches!(ty, SimdType::Xnor) {
+                                rng.next_range(2) as i32
+                            } else {
+                                rng.next_range(8) as i32 - 4
+                            }
+                        })
+                        .collect();
+                    vec![v[0..4].to_vec(), v[4..8].to_vec()]
+                })
+                .collect();
+            let mut wi = 0;
+            for cycle in 0..120 {
+                let offered = (wi < words.len()).then(|| words[wi].clone());
+                let ready = cycle % 3 != 0; // periodic backpressure
+                let a = slot.step(offered.as_deref(), &wm, ready);
+                let b = row.step(offered.as_deref(), &wm, ready);
+                assert_eq!(a.consumed_input, b.consumed_input, "{ty} cycle {cycle}");
+                assert_eq!(a.stalled, b.stalled, "{ty} cycle {cycle}");
+                assert_eq!(a.emitted, b.emitted, "{ty} cycle {cycle}");
+                if a.consumed_input {
+                    wi += 1;
+                }
+            }
+            assert_eq!(slot.stats.cycles, row.stats.cycles, "{ty}");
+            assert_eq!(slot.stats.slots_consumed, row.stats.slots_consumed, "{ty}");
+            assert_eq!(slot.stats.stall_cycles, row.stats.stall_cycles, "{ty}");
+            assert!(slot.drained() && row.drained(), "{ty}");
+        }
+    }
+
+    #[test]
+    fn parked_on_output_matches_skip_semantics() {
+        // run a vector to completion with a never-ready sink and depth
+        // large enough that the datapath never blocks: the words park in
+        // the FIFO, and stepped vs skipped idle cycles agree.
+        let (p, wm) = setup(2, 4);
+        let mut a = MvuStream::with_fifo_depth(&p, 4).unwrap();
+        let mut b = MvuStream::with_fifo_depth(&p, 4).unwrap();
+        let x: Vec<i32> = (0..8).collect();
+        let words = [x[0..4].to_vec(), x[4..8].to_vec()];
+        let mut wi = 0;
+        for _ in 0..20 {
+            let offered = (wi < 2).then(|| words[wi].clone());
+            let ra = a.step(offered.as_deref(), &wm, false);
+            let rb = b.step(offered.as_deref(), &wm, false);
+            assert_eq!(ra.consumed_input, rb.consumed_input);
+            if ra.consumed_input {
+                wi += 1;
+            }
+        }
+        assert!(a.parked_on_output() && b.parked_on_output());
+        assert!(!a.output_blocked());
+        for _ in 0..6 {
+            let r = a.step(None, &wm, false);
+            assert!(!r.stalled && r.emitted.is_none());
+        }
+        b.skip_idle_cycles(6);
+        assert_eq!(a.fsm_state(), b.fsm_state());
+        assert_eq!(a.stats.cycles, b.stats.cycles);
+        assert_eq!(a.stats.idle_cycles, b.stats.idle_cycles);
+        assert_eq!(a.stats.stall_cycles, b.stats.stall_cycles);
     }
 
     #[test]

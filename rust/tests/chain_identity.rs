@@ -1,0 +1,295 @@
+//! Bit-identity between the two *chain* kernels (DESIGN.md §Chain fast
+//! kernel): the next-event production kernel (`sim::run_chain*`, behind
+//! every chain evaluation) must reproduce the per-cycle oracle
+//! (`sim::MvuChain`) field-for-field — output vectors, pipeline-fill and
+//! exact total cycle counts, and per-layer stall/slot counters — over
+//! the NID MLP grid (all layer shapes x fold variants x both the
+//! Standard and packed-Xnor datapaths), under periodic/random/schedule
+//! stall patterns on both chain endpoints, across FIFO depths
+//! {1, 2, 32}, and including agreement on deadlock failures. Run under
+//! `--release` in CI as well, alongside `kernel_identity`: the packed
+//! SWAR row kernels rely on wrapping identities that debug_asserts and
+//! debug overflow checks can mask in dev builds.
+
+use finn_mvu::cfg::{DesignPoint, SimdType, ValidatedParams};
+use finn_mvu::explore::{stimulus_seed, stimulus_thresholds, stimulus_weights};
+use finn_mvu::proptest::{check, Config, Gen};
+use finn_mvu::quant::{Matrix, Thresholds};
+use finn_mvu::sim::{run_chain, run_chain_stalled, MvuChain, StallPattern};
+
+type Layer = (ValidatedParams, Matrix, Option<Thresholds>);
+
+/// The Table 6 NID MLP geometry (600-64-64-64-1) under an explicit
+/// folding and SIMD type, with the engine's canonical stimulus: weights
+/// from each layer's fold-independent seed, thresholds between layers
+/// (1-bit under Xnor so inter-layer streams stay bits, 2-bit under
+/// Standard like the trained network).
+fn nid_variant(ty: SimdType, folds: &[(usize, usize); 4]) -> Vec<Layer> {
+    let (wb, ib, inner_ob) = match ty {
+        SimdType::Xnor => (1u32, 1u32, 1u32),
+        SimdType::BinaryWeights => (1, 2, 1),
+        SimdType::Standard => (2, 2, 2),
+    };
+    let shape = [(600usize, 64usize), (64, 64), (64, 64), (64, 1)];
+    shape
+        .iter()
+        .zip(folds)
+        .enumerate()
+        .map(|(i, (&(fin, fout), &(pe, simd)))| {
+            let ob = if i + 1 < shape.len() { inner_ob } else { 0 };
+            let p = DesignPoint::fc(&format!("nid{i}_p{pe}s{simd}"))
+                .in_features(fin)
+                .out_features(fout)
+                .pe(pe)
+                .simd(simd)
+                .simd_type(ty)
+                .precision(wb, ib, ob)
+                .build()
+                .expect("NID fold variants are legal");
+            let seed = stimulus_seed(&p);
+            let w = stimulus_weights(&p, seed.wrapping_add(i as u64));
+            let th = stimulus_thresholds(&p, seed ^ 0x6a09_e667_f3bc_c909);
+            (p, w, th)
+        })
+        .collect()
+}
+
+fn nid_inputs(ty: SimdType, n: usize, seed: u64) -> Vec<Vec<i32>> {
+    let mut rng = finn_mvu::util::rng::Pcg32::new(seed);
+    (0..n)
+        .map(|_| {
+            (0..600)
+                .map(|_| match ty {
+                    SimdType::Xnor => rng.next_range(2) as i32,
+                    _ => rng.next_range(4) as i32,
+                })
+                .collect()
+        })
+        .collect()
+}
+
+fn assert_identical(layers: &[Layer], inputs: &[Vec<i32>], in_s: &StallPattern,
+                    out_s: &StallPattern, depth: usize, label: &str) {
+    let fast = run_chain_stalled(layers, inputs, in_s.clone(), out_s.clone(), depth);
+    let oracle = MvuChain::with_fifo_depth(layers, depth)
+        .and_then(|mut c| c.run_stalled(inputs, in_s.clone(), out_s.clone()));
+    match (fast, oracle) {
+        (Ok(a), Ok(b)) => assert_eq!(a, b, "{label}"),
+        (Err(a), Err(b)) => assert_eq!(a.to_string(), b.to_string(), "{label}"),
+        (a, b) => panic!(
+            "{label}: one kernel failed: fast {:?} vs oracle {:?}",
+            a.map(|r| r.exec_cycles),
+            b.map(|r| r.exec_cycles)
+        ),
+    }
+}
+
+/// The full NID grid: every layer shape under two fold variants, the
+/// Standard (flat rows) and Xnor (packed rows) datapaths, six endpoint
+/// flow scenarios and three FIFO depths.
+#[test]
+fn chain_kernels_identical_over_nid_grid() {
+    let fold_variants: [[(usize, usize); 4]; 2] = [
+        [(64, 50), (16, 32), (16, 32), (1, 8)], // the paper's folding
+        [(16, 25), (8, 16), (4, 8), (1, 2)],    // a slower re-folding
+    ];
+    let scenarios: Vec<(StallPattern, StallPattern)> = vec![
+        (StallPattern::None, StallPattern::None),
+        (StallPattern::Periodic { period: 5, duty: 2, phase: 1 }, StallPattern::None),
+        (StallPattern::None, StallPattern::Periodic { period: 4, duty: 2, phase: 0 }),
+        (
+            StallPattern::Periodic { period: 7, duty: 3, phase: 2 },
+            StallPattern::Periodic { period: 5, duty: 3, phase: 1 },
+        ),
+        (
+            StallPattern::Random { seed: 91, p_num: 100 },
+            StallPattern::Random { seed: 92, p_num: 140 },
+        ),
+        (
+            StallPattern::Schedule(vec![true, false, false, true, false]),
+            StallPattern::Periodic { period: 3, duty: 1, phase: 0 },
+        ),
+    ];
+    let mut runs = 0usize;
+    for ty in [SimdType::Standard, SimdType::Xnor] {
+        for (v, folds) in fold_variants.iter().enumerate() {
+            let layers = nid_variant(ty, folds);
+            let inputs = nid_inputs(ty, 3, 100 + v as u64);
+            for (s, (in_s, out_s)) in scenarios.iter().enumerate() {
+                for depth in [1usize, 2, 32] {
+                    assert_identical(
+                        &layers,
+                        &inputs,
+                        in_s,
+                        out_s,
+                        depth,
+                        &format!("{ty} variant {v} scenario {s} depth {depth}"),
+                    );
+                    runs += 1;
+                }
+            }
+        }
+    }
+    assert_eq!(runs, 2 * 2 * 6 * 3);
+}
+
+/// Deadlock agreement: a sink that never asserts TREADY and a source
+/// that never asserts TVALID must fail both kernels with the *same*
+/// structured message (same cycle count at the shared bound).
+#[test]
+fn chain_kernels_agree_on_deadlocks() {
+    let small = |seed: u64| -> Vec<Layer> {
+        let p0 = DesignPoint::fc("d0")
+            .in_features(8)
+            .out_features(4)
+            .pe(2)
+            .simd(4)
+            .precision(2, 2, 2)
+            .build()
+            .unwrap();
+        let p1 = DesignPoint::fc("d1")
+            .in_features(4)
+            .out_features(2)
+            .pe(1)
+            .simd(2)
+            .precision(2, 2, 0)
+            .build()
+            .unwrap();
+        [p0, p1]
+            .into_iter()
+            .enumerate()
+            .map(|(i, p)| {
+                let w = stimulus_weights(&p, seed + i as u64);
+                let th = stimulus_thresholds(&p, seed ^ 0xabcd);
+                (p, w, th)
+            })
+            .collect()
+    };
+    let layers = small(7);
+    let inputs: Vec<Vec<i32>> = vec![(0..8).map(|i| i % 4).collect()];
+    let never = StallPattern::Periodic { period: 1, duty: 1, phase: 0 };
+    // never-ready sink: the chain jams on output backpressure
+    assert_identical(&layers, &inputs, &StallPattern::None, &never, 2, "dead sink");
+    // never-valid source: the chain idles forever waiting for data
+    assert_identical(&layers, &inputs, &never, &StallPattern::None, 2, "dead source");
+}
+
+/// Property: arbitrary short chains (random legal folds, optional
+/// thresholds, any stall pattern the public API accepts, FIFO depths
+/// 1..=6) — identical reports or identical failures.
+#[test]
+fn prop_chain_kernels_identical() {
+    fn arb_stall(g: &mut Gen) -> StallPattern {
+        match g.usize_in(0, 3) {
+            0 => StallPattern::None,
+            1 => {
+                let period = g.usize_in(1, 8);
+                StallPattern::Periodic {
+                    period,
+                    duty: g.usize_in(0, period.min(6)),
+                    phase: g.usize_in(0, 5),
+                }
+            }
+            2 => StallPattern::Random {
+                seed: g.rng.next_u64(),
+                p_num: g.usize_in(0, 200) as u32,
+            },
+            _ => StallPattern::Schedule((0..g.usize_in(0, 8)).map(|_| g.chance(128)).collect()),
+        }
+    }
+    check("fast chain == oracle chain", Config::cases(40), |g| {
+        let ty = *g.choose(&SimdType::ALL);
+        let (wb, ib) = match ty {
+            SimdType::Xnor => (1u32, 1u32),
+            SimdType::BinaryWeights => (1, 2),
+            SimdType::Standard => (2, 2),
+        };
+        let n_layers = g.usize_in(2, 3);
+        let mut dims = vec![g.usize_in(2, 20)];
+        for _ in 0..n_layers {
+            dims.push(g.usize_in(1, 10));
+        }
+        let mut layers: Vec<Layer> = Vec::new();
+        for i in 0..n_layers {
+            let (fin, fout) = (dims[i], dims[i + 1]);
+            let inner = i + 1 < n_layers;
+            // inner layers must threshold so the next layer's input stays
+            // in range (bits under Xnor)
+            let ob = if inner {
+                if matches!(ty, SimdType::Xnor) {
+                    1
+                } else {
+                    2
+                }
+            } else {
+                0
+            };
+            let p = DesignPoint::fc(&format!("pc{i}"))
+                .in_features(fin)
+                .out_features(fout)
+                .pe(g.divisor_of(fout))
+                .simd(g.divisor_of(fin))
+                .simd_type(ty)
+                .precision(wb, ib, ob)
+                .build()
+                .expect("generated folds are divisors, hence legal");
+            let w = stimulus_weights(&p, g.rng.next_u64());
+            let th = stimulus_thresholds(&p, g.rng.next_u64());
+            layers.push((p, w, th));
+        }
+        let n_vec = g.usize_in(0, 4);
+        let inputs: Vec<Vec<i32>> = (0..n_vec)
+            .map(|_| {
+                (0..dims[0])
+                    .map(|_| match ty {
+                        SimdType::Xnor => g.i32_in(0, 1),
+                        _ => g.i32_in(0, 3),
+                    })
+                    .collect()
+            })
+            .collect();
+        let in_s = arb_stall(g);
+        let out_s = arb_stall(g);
+        let depth = g.usize_in(1, 6);
+        let fast = run_chain_stalled(&layers, &inputs, in_s.clone(), out_s.clone(), depth);
+        let oracle = MvuChain::with_fifo_depth(&layers, depth)
+            .and_then(|mut c| c.run_stalled(&inputs, in_s.clone(), out_s.clone()));
+        match (fast, oracle) {
+            (Ok(a), Ok(b)) => {
+                if a != b {
+                    return Err(format!(
+                        "{ty} depth={depth} ({in_s:?}/{out_s:?}): fast {a:?} != oracle {b:?}"
+                    ));
+                }
+                Ok(())
+            }
+            (Err(a), Err(b)) => {
+                if a.to_string() != b.to_string() {
+                    return Err(format!(
+                        "{ty} depth={depth}: error divergence: fast {a:#} vs oracle {b:#}"
+                    ));
+                }
+                Ok(())
+            }
+            (a, b) => Err(format!(
+                "{ty} depth={depth} ({in_s:?}/{out_s:?}): one kernel failed: fast {:?} vs \
+                 oracle {:?}",
+                a.map(|r| r.exec_cycles),
+                b.map(|r| r.exec_cycles)
+            )),
+        }
+    });
+}
+
+/// The ideal-flow default entry point (`run_chain`, default FIFO depth)
+/// agrees with the oracle at its default depth too.
+#[test]
+fn default_entry_point_matches_oracle_default() {
+    for ty in [SimdType::Standard, SimdType::Xnor] {
+        let layers = nid_variant(ty, &[(64, 50), (16, 32), (16, 32), (1, 8)]);
+        let inputs = nid_inputs(ty, 2, 55);
+        let fast = run_chain(&layers, &inputs).unwrap();
+        let oracle = MvuChain::new(&layers).unwrap().run(&inputs).unwrap();
+        assert_eq!(fast, oracle, "{ty}");
+    }
+}

@@ -10,7 +10,7 @@ use finn_mvu::cfg::{
     DesignPoint, FoldAxis, LayerParams, ParamError, SimdType, ValidatedParams,
 };
 use finn_mvu::estimate::{estimate, Style};
-use finn_mvu::eval::{EvalError, EvalRequest, Session, SessionConfig, SimOptions};
+use finn_mvu::eval::{ChainRequest, EvalError, EvalRequest, Session, SessionConfig, SimOptions};
 use finn_mvu::explore::{
     content_hash, estimate_key, params_key, stimulus_inputs, stimulus_seed, stimulus_weights,
 };
@@ -292,4 +292,32 @@ fn sim_options_changes_invalidate_cache_entries() {
     }))
     .unwrap();
     assert!(s.cache_stats().misses > m1, "stall change must miss: {:?}", s.cache_stats());
+}
+
+/// Chain evaluations through the facade: deterministic across sessions
+/// (same canonical stimulus), kernel-verified against the layer-wise
+/// reference, and cache-keyed on the flow like single-point simulations.
+#[test]
+fn evaluate_chain_is_deterministic_and_flow_keyed() {
+    let req = ChainRequest::nid().with_sim(SimOptions { batch: 2, ..SimOptions::default() });
+    let a = Session::serial().evaluate_chain(&req).unwrap();
+    let b = Session::serial().evaluate_chain(&req).unwrap();
+    assert_eq!(a, b, "fresh sessions must produce identical chain summaries");
+    assert!(a.matches_reference);
+    assert!(a.first_out_cycle < a.exec_cycles);
+    // steady state: one output vector per bottleneck II once filled
+    assert!(a.exec_cycles >= a.bottleneck_ii * 2);
+
+    let s = Session::serial();
+    s.evaluate_chain(&req).unwrap();
+    let m0 = s.cache_stats().misses;
+    s.evaluate_chain(&req).unwrap();
+    assert_eq!(s.cache_stats().misses, m0, "identical chain request must hit");
+    let stalled = req.clone().with_sim(SimOptions {
+        batch: 2,
+        out_stall: StallPattern::Periodic { period: 6, duty: 2, phase: 0 },
+        ..SimOptions::default()
+    });
+    s.evaluate_chain(&stalled).unwrap();
+    assert!(s.cache_stats().misses > m0, "flow change must miss: {:?}", s.cache_stats());
 }

@@ -488,7 +488,7 @@ fn prop_chain_matches_layerwise_reference() {
         }
         let inputs: Vec<Vec<i32>> =
             (0..g.usize_in(1, 4)).map(|_| g.vec_i32(dims[0], 0, 3)).collect();
-        let mut chain = MvuChain::new(layers.clone()).map_err(|e| e.to_string())?;
+        let mut chain = MvuChain::new(&layers).map_err(|e| e.to_string())?;
         let rep = chain.run(&inputs).map_err(|e| e.to_string())?;
         for (x, y) in inputs.iter().zip(&rep.outputs) {
             let mut v = x.clone();
