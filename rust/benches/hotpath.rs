@@ -6,6 +6,10 @@
 //!   * the bit-packed Xnor datapath vs the flat i32 kernel it replaced on
 //!     the same grid — acceptance bar >= 4x (DESIGN.md §Packed datapath) —
 //!     plus the engine-side fold sweep with its stimulus-memo hit counts;
+//!   * the blocked multi-vector datapath: one B=32 blocked evaluation vs
+//!     32 independent single-vector runs — acceptance bar >= 3x, enforced
+//!     (DESIGN.md §Batched datapath) — plus a memo-invariance check
+//!     across batch sizes;
 //!   * simulator throughput in cycles/second on the NID layer-0 MVU and a
 //!     large PE=SIMD=32 conv MVU (the L3 optimization target);
 //!   * the exploration engine over the full Table 2 grid — serial-cold vs
@@ -217,6 +221,96 @@ fn xnor_packed_shootout() {
     println!("    -> stimulus memo over one cold sweep: {}", session.stimulus_stats());
 }
 
+/// Blocked multi-vector datapath (DESIGN.md §Batched datapath): one
+/// B=32 blocked evaluation vs the 32 independent single-vector calls a
+/// batch-1 caller would make, on a large-column Xnor MVU (1024 packed
+/// columns). The blocked traversal loads each weight word once per row
+/// word and reuses it across the whole batch — and amortizes the
+/// per-call weight packing 32x — so the acceptance bar is >= 3x,
+/// enforced here (identical outputs by construction,
+/// tests/kernel_identity.rs `prop_blocked_equals_independent_runs`).
+fn blocked_batch_shootout() {
+    let p = DesignPoint::conv("blk_pe8_s8")
+        .ifm_ch(64)
+        .ifm_dim(8)
+        .ofm_ch(64)
+        .kernel_dim(4)
+        .pe(8)
+        .simd(8)
+        .paper_precision(SimdType::Xnor)
+        .build()
+        .unwrap();
+    let w = random_weights(&p, 23);
+    let mut rng = Pcg32::new(24);
+    let vectors: Vec<Vec<i32>> = (0..32)
+        .map(|_| (0..p.matrix_cols()).map(|_| rng.next_range(2) as i32).collect())
+        .collect();
+    let rep = run_mvu(&p, &w, &vectors).unwrap();
+    println!(
+        "blocked batch shootout: {} cols x {} rows Xnor, batch 32, {} cycles per blocked pass",
+        p.matrix_cols(),
+        p.matrix_rows(),
+        rep.exec_cycles
+    );
+
+    let blocked = bench("sim/blocked_batch32", || {
+        std::hint::black_box(run_mvu(&p, &w, &vectors).unwrap());
+    });
+    println!("{blocked}");
+    let independent = bench("sim/independent_batch1_x32", || {
+        for v in &vectors {
+            std::hint::black_box(run_mvu(&p, &w, std::slice::from_ref(v)).unwrap());
+        }
+    });
+    println!("{independent}");
+    let speedup = independent.mean_ns / blocked.mean_ns.max(1.0);
+    println!(
+        "    -> blocked {:.2} Mvec/s vs independent {:.2} Mvec/s: {:.1}x speedup \
+         (acceptance bar: >= 3x) {}",
+        32.0 / (blocked.mean_ns / 1e3),
+        32.0 / (independent.mean_ns / 1e3),
+        speedup,
+        if speedup >= 3.0 { "PASS" } else { "FAIL" }
+    );
+    assert!(speedup >= 3.0, "blocked batch speedup {speedup:.1}x below the 3x bar");
+
+    // engine segment: the sweep-wide stimulus memo is keyed on geometry
+    // and vector count, never on how the kernel traverses the batch —
+    // a 32-vector session must show exactly the hit/miss profile of a
+    // 2-vector one over the same fold sweep.
+    let points: Vec<finn_mvu::cfg::SweepPoint> = [2usize, 8, 32]
+        .iter()
+        .flat_map(|&pe| [2usize, 8, 32].iter().map(move |&simd| (pe, simd)))
+        .enumerate()
+        .map(|(i, (pe, simd))| finn_mvu::cfg::SweepPoint {
+            swept: i,
+            params: DesignPoint::conv(&format!("blk_pe{pe}_s{simd}"))
+                .ifm_ch(64)
+                .ifm_dim(8)
+                .ofm_ch(64)
+                .kernel_dim(4)
+                .pe(pe)
+                .simd(simd)
+                .paper_precision(SimdType::Xnor)
+                .build()
+                .unwrap(),
+        })
+        .collect();
+    let stats_at = |sim_vectors: usize| {
+        let s = Session::new(SessionConfig { threads: 0, sim_vectors, ..Default::default() })
+            .unwrap();
+        s.evaluate_points(&points).unwrap();
+        s.stimulus_stats()
+    };
+    let (small, large) = (stats_at(2), stats_at(32));
+    assert_eq!(
+        (small.hits, small.misses),
+        (large.hits, large.misses),
+        "stimulus memo must be batch-size independent"
+    );
+    println!("    -> stimulus memo at batch 2 vs 32: {small} == {large} (unchanged)");
+}
+
 /// Next-event chain kernel vs the per-cycle chain oracle on the 3-layer
 /// NID MLP geometry under the paper's 1-bit Xnor datapath, with periodic
 /// stalls on both chain endpoints (the Table 7 hot path: end-to-end
@@ -352,6 +446,9 @@ fn main() {
 
     // the bit-packed low-precision datapath vs the flat kernel it replaced
     xnor_packed_shootout();
+
+    // the blocked multi-vector datapath vs independent single-vector runs
+    blocked_batch_shootout();
 
     // the next-event chain kernel vs the per-cycle chain oracle
     nid_chain_shootout();

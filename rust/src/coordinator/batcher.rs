@@ -136,6 +136,27 @@ mod tests {
         assert_eq!(batch.data, vec![5, 6, 0, 0, 0, 0, 0, 0]);
     }
 
+    /// The `oldest` reset in `flush()` must start a fresh timeout window
+    /// for the next fill cycle: a push after a timeout flush must not
+    /// inherit the previous cycle's (stale) deadline.
+    #[test]
+    fn timeout_tracks_each_fill_cycle() {
+        let mut b = Batcher::new(2, 4, Duration::from_millis(10));
+        let t0 = Instant::now();
+        b.push(1, &[1, 1], t0);
+        let first = b.poll(t0 + Duration::from_millis(11)).unwrap();
+        assert_eq!(first.ids, vec![1]);
+        // empty batcher: polling far past the old deadline flushes nothing
+        assert!(b.poll(t0 + Duration::from_millis(50)).is_none());
+        // second cycle: the clock starts at this push, not at t0
+        let t1 = t0 + Duration::from_millis(20);
+        b.push(2, &[2, 2], t1);
+        assert!(b.poll(t1 + Duration::from_millis(9)).is_none(), "deadline must be fresh");
+        let second = b.poll(t1 + Duration::from_millis(10)).unwrap();
+        assert_eq!(second.ids, vec![2]);
+        assert_eq!(b.pending(), 0);
+    }
+
     #[test]
     fn flush_remaining_on_shutdown() {
         let mut b = Batcher::new(1, 2, Duration::from_secs(9));

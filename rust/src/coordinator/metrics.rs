@@ -10,6 +10,10 @@ pub struct LatencyRecorder {
     samples_us: Vec<f64>,
     started: Option<Instant>,
     finished: Option<Instant>,
+    /// First `record` time — the elapsed-span fallback when `start()`
+    /// was never called, so a recorder with samples always reports a
+    /// nonzero wall span instead of 0 rps.
+    first_record: Option<Instant>,
     completed: usize,
 }
 
@@ -23,9 +27,13 @@ impl LatencyRecorder {
     }
 
     pub fn record(&mut self, latency: Duration) {
+        let now = Instant::now();
         self.samples_us.push(latency.as_secs_f64() * 1e6);
         self.completed += 1;
-        self.finished = Some(Instant::now());
+        if self.first_record.is_none() {
+            self.first_record = Some(now);
+        }
+        self.finished = Some(now);
     }
 
     pub fn completed(&self) -> usize {
@@ -33,7 +41,9 @@ impl LatencyRecorder {
     }
 
     pub fn report(&self) -> ThroughputReport {
-        let elapsed = match (self.started, self.finished) {
+        // elapsed span: explicit start to last record, falling back to
+        // first-record-to-last-record when `start()` was never called.
+        let elapsed = match (self.started.or(self.first_record), self.finished) {
             (Some(a), Some(b)) => b.duration_since(a).as_secs_f64(),
             _ => 0.0,
         };
@@ -94,5 +104,21 @@ mod tests {
         assert!((rep.latency_mean_us - 200.0).abs() < 1.0);
         assert!(rep.latency_max_us >= 299.0);
         assert!(rep.throughput_rps > 0.0);
+    }
+
+    /// Without `start()`, the elapsed span falls back to the
+    /// first-record-to-last-record window: samples present must never
+    /// report 0 elapsed / 0 rps.
+    #[test]
+    fn report_without_start_uses_record_span() {
+        let mut r = LatencyRecorder::new();
+        r.record(Duration::from_micros(100));
+        std::thread::sleep(Duration::from_millis(2));
+        r.record(Duration::from_micros(300));
+        let rep = r.report();
+        assert_eq!(rep.requests, 2);
+        assert!(rep.elapsed_s > 0.0, "elapsed {} must be nonzero", rep.elapsed_s);
+        assert!(rep.throughput_rps > 0.0, "rps {} must be nonzero", rep.throughput_rps);
+        assert!((rep.latency_mean_us - 200.0).abs() < 1.0);
     }
 }

@@ -60,7 +60,12 @@ use crate::sim::{StallPattern, DEFAULT_FIFO_DEPTH, PIPELINE_STAGES};
 /// Options for the cycle-accurate simulation half of a request.
 #[derive(Debug, Clone)]
 pub struct SimOptions {
-    /// Number of input vectors to stream (the batch); 0 skips simulation.
+    /// Number of input vectors to stream (the batch); 0 skips simulation
+    /// entirely (`Evaluation::sim` stays `None`). On ideal flows the
+    /// whole batch is evaluated through the blocked multi-vector kernel
+    /// (DESIGN.md §Batched datapath): one weight-matrix traversal for the
+    /// batch, not a per-vector loop — larger batches amortize weight
+    /// streaming while staying bit-identical to per-vector runs.
     pub batch: usize,
     /// Output-decoupling FIFO depth (§5.3.2).
     pub fifo_depth: usize,
@@ -481,6 +486,20 @@ mod tests {
         assert!(sim.matches_reference);
         assert_eq!(sim.vectors, 3);
         assert_eq!(sim.exec_cycles, 3 * 2 * 2 + PIPELINE_STAGES + 1);
+    }
+
+    /// `batch: 0` skips the simulation half entirely — the documented
+    /// contract, distinct from a zero-vector *run* (which would attach a
+    /// summary with `exec_cycles == 1`).
+    #[test]
+    fn zero_batch_skips_simulation() {
+        let s = Session::serial();
+        let req = EvalRequest::new(point())
+            .with_sim(SimOptions { batch: 0, ..SimOptions::default() });
+        let ev = s.evaluate(&req).unwrap();
+        assert!(ev.sim.is_none());
+        // estimates are still produced
+        assert!(ev.rtl().is_some() && ev.hls().is_some());
     }
 
     #[test]

@@ -92,7 +92,9 @@ pub fn estimate_key(p: &LayerParams, style: Style) -> String {
 /// flow (default FIFO depth, no stalls). Besides the crate version, the
 /// simulation kernel version ([`sim::SIM_KERNEL_VERSION`]) is part of the
 /// key: a kernel rewrite invalidates on-disk simulation entries instead
-/// of trusting that the new kernel reproduces the old one's reports.
+/// of trusting that the new kernel reproduces the old one's reports —
+/// most recently version 5's blocked multi-vector datapath (DESIGN.md
+/// §Batched datapath), which re-keyed every ideal-flow entry.
 ///
 /// [`sim::SIM_KERNEL_VERSION`]: crate::sim::SIM_KERNEL_VERSION
 pub fn sim_key(p: &LayerParams, vectors: usize, seed: u64) -> String {

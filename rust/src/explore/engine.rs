@@ -416,7 +416,11 @@ impl Explorer {
     /// and input batch), with an explicit output-FIFO depth and stall
     /// patterns on both AXI endpoints. The default flow
     /// (`DEFAULT_FIFO_DEPTH`, no stalls) shares cache entries with
-    /// `evaluate_points`' simulations. Both key shapes embed
+    /// `evaluate_points`' simulations, and its whole input batch is
+    /// handed to [`run_mvu_shared`] in one call, which evaluates it
+    /// through the blocked multi-vector kernel (DESIGN.md §Batched
+    /// datapath): each weight word is loaded once and reused across the
+    /// batch. Both key shapes embed
     /// [`sim::SIM_KERNEL_VERSION`](crate::sim::SIM_KERNEL_VERSION), so a
     /// simulation-kernel change invalidates on-disk entries wholesale.
     pub fn simulate_point(
@@ -508,7 +512,10 @@ impl Explorer {
     /// reported by [`stimulus_stats`](Self::stimulus_stats). Results are
     /// cached under [`cache::chain_key`] (kernel-versioned), and runs go
     /// through the next-event fast kernel
-    /// ([`sim::run_chain_shared`](crate::sim::run_chain_shared)).
+    /// ([`sim::run_chain_shared`](crate::sim::run_chain_shared)), which
+    /// precomputes every stage's row outputs for the whole batch with
+    /// the blocked multi-vector kernel and replays them through the
+    /// cycle-exact control machinery (DESIGN.md §Batched datapath).
     pub fn simulate_chain(
         &self,
         layers: &[ValidatedParams],

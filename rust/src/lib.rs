@@ -11,10 +11,12 @@
 //! * **L3** — this crate: a cycle-accurate RTL simulator of the MVU (two
 //!   kernels: a per-cycle oracle and a batched interval-skipping fast
 //!   path whose 1-bit datapaths run bit-packed XNOR-popcount / sign-mask
-//!   SWAR kernels — and the same split for multi-layer chains, whose
-//!   next-event kernel behind `sim::run_chain` drives the NID MLP hot
-//!   path, all bit-identical by property test — DESIGN.md §Two-kernel
-//!   simulator, §Packed datapath, §Chain fast kernel), an HLS
+//!   SWAR kernels and whose multi-vector batches are evaluated blocked
+//!   row-major, one weight-word load reused across the batch — and the
+//!   same split for multi-layer chains, whose next-event kernel behind
+//!   `sim::run_chain` drives the NID MLP hot path, all bit-identical by
+//!   property test — DESIGN.md §Two-kernel simulator, §Packed datapath,
+//!   §Batched datapath, §Chain fast kernel), an HLS
 //!   behavioral model, a 7-series resource/timing estimator, a FINN-like
 //!   compiler (IR + passes), and a streaming dataflow runtime that
 //!   executes the AOT artifacts via the PJRT C API.

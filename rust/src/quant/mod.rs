@@ -8,6 +8,7 @@ mod thresholds;
 
 pub use matvec::{matvec, matvec_binary, matvec_standard, matvec_xnor, Matrix};
 pub use pack::{
-    pack_bits, pack_bits_into, popcount_xnor_packed, unpack_bits, BitVec, PackedMatrix,
+    pack_bits, pack_bits_columns, pack_bits_into, popcount_xnor_packed, unpack_bits, BitVec,
+    PackedMatrix,
 };
 pub use thresholds::{multithreshold, Thresholds};

@@ -138,6 +138,36 @@ pub fn pack_bits_into(lanes: &[i32], out: &mut Vec<u64>) -> Result<()> {
     Ok(())
 }
 
+/// Pack a batch of {0,1} vectors into per-vector **bit-planes**: vector
+/// `b`'s bits occupy words `[b*wpv, (b+1)*wpv)` with
+/// `wpv = lanes.div_ceil(64)` (LSB-first within a word, tail words
+/// zero-padded), reusing the caller's buffer. This is the batched
+/// analogue of [`pack_bits_into`] — the blocked multi-vector kernels
+/// (`sim::simd_elem::pe_rows_batched_xnor`) walk one weight word across
+/// every plane while it is register-hot, so the whole batch must be
+/// packed up front in one pass. Every vector must have exactly `lanes`
+/// lanes; errors on the first lane outside {0,1}, naming the vector —
+/// the caller falls back to the flat lane kernel for the whole batch.
+pub fn pack_bits_columns(vectors: &[Vec<i32>], lanes: usize, out: &mut Vec<u64>) -> Result<()> {
+    let wpv = lanes.div_ceil(64);
+    out.clear();
+    out.resize(vectors.len() * wpv, 0);
+    for (b, v) in vectors.iter().enumerate() {
+        if v.len() != lanes {
+            bail!("vector {b} has {} lanes, expected {lanes}", v.len());
+        }
+        let base = b * wpv;
+        for (i, &x) in v.iter().enumerate() {
+            match x {
+                0 => {}
+                1 => out[base + i / 64] |= 1u64 << (i % 64),
+                other => bail!("vector {b} lane {i} is {other}, not a bit"),
+            }
+        }
+    }
+    Ok(())
+}
+
 /// A {0,1} matrix packed one bit per lane: row-major, every row starting
 /// on a u64 word boundary (LSB-first within a word, tail words
 /// zero-padded). Word alignment per row is what lets the packed datapath
@@ -293,6 +323,37 @@ mod tests {
         pack_bits_into(&lanes, &mut buf).unwrap();
         assert_eq!(buf, pack_bits(&lanes, 1).words());
         assert!(pack_bits_into(&[0, 1, -1], &mut buf).is_err());
+    }
+
+    #[test]
+    fn pack_bits_columns_planes_match_per_vector_packing() {
+        // 130 lanes force 3 words per plane with a 2-bit tail
+        let lanes = 130usize;
+        let vectors: Vec<Vec<i32>> = (0..5)
+            .map(|b| (0..lanes).map(|i| ((i * 7 + b * 3) % 5 < 2) as i32).collect())
+            .collect();
+        let mut planes = vec![0xdead_beefu64; 2]; // stale contents must not leak
+        pack_bits_columns(&vectors, lanes, &mut planes).unwrap();
+        let wpv = lanes.div_ceil(64);
+        assert_eq!(planes.len(), vectors.len() * wpv);
+        let mut single = Vec::new();
+        for (b, v) in vectors.iter().enumerate() {
+            pack_bits_into(v, &mut single).unwrap();
+            assert_eq!(&planes[b * wpv..(b + 1) * wpv], single.as_slice(), "plane {b}");
+        }
+        // empty batch packs to an empty buffer
+        pack_bits_columns(&[], lanes, &mut planes).unwrap();
+        assert!(planes.is_empty());
+    }
+
+    #[test]
+    fn pack_bits_columns_rejects_nonbits_and_wrong_lengths() {
+        let mut out = Vec::new();
+        let bad = vec![vec![0, 1, 0, 1], vec![0, 1, 2, 1]];
+        let err = pack_bits_columns(&bad, 4, &mut out).unwrap_err();
+        assert!(err.to_string().contains("vector 1 lane 2"), "{err}");
+        let short = vec![vec![0, 1, 0]];
+        assert!(pack_bits_columns(&short, 4, &mut out).is_err());
     }
 
     #[test]

@@ -151,8 +151,31 @@ impl MvuBatch {
         self.stream.step(offered, &self.wmem, out_ready)
     }
 
+    /// See [`MvuStream::preload_row_outputs`]: hand the row datapath its
+    /// precomputed per-vector raw row outputs (value replay).
+    pub fn preload_row_outputs(&mut self, outputs: Vec<Vec<i32>>) {
+        self.stream.preload_row_outputs(outputs);
+    }
+
+    /// Structured shape validation for a batch of input vectors — the
+    /// error every sim entry point (both kernels, single-unit and chain)
+    /// returns for a malformed vector, checked *after* construction
+    /// errors (weight shape, FIFO depth) so the kernels agree on failure
+    /// ordering.
+    pub fn ensure_vector_shapes(params: &LayerParams, vectors: &[Vec<i32>]) -> Result<()> {
+        let cols = params.matrix_cols();
+        for (i, v) in vectors.iter().enumerate() {
+            if v.len() != cols {
+                bail!("input vector {i} has {} lanes, expected {cols}", v.len());
+            }
+        }
+        Ok(())
+    }
+
     /// Split a flat input vector (length K^2*IC) into SIMD-wide stream
-    /// words, the on-wire format of the MVU input stream.
+    /// words, the on-wire format of the MVU input stream. Callers validate
+    /// shapes up front via [`MvuBatch::ensure_vector_shapes`]; the assert
+    /// here is the internal invariant backstop.
     pub fn vector_to_words(params: &LayerParams, v: &[i32]) -> Vec<Vec<i32>> {
         assert_eq!(v.len(), params.matrix_cols());
         v.chunks(params.simd).map(|c| c.to_vec()).collect()

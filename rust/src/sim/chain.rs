@@ -294,6 +294,15 @@ impl ChainCore {
         &self.params
     }
 
+    /// Hand stage `i`'s row datapath its precomputed raw row outputs
+    /// (value replay, [`MvuBatch::preload_row_outputs`]): the chain fast
+    /// kernel evaluates each stage's whole batch through the blocked
+    /// kernel up front, so the per-cycle machine only replays values.
+    /// Requires `row_mode` stages.
+    pub(in crate::sim) fn preload_stage_rows(&mut self, i: usize, outputs: Vec<Vec<i32>>) {
+        self.stages[i].mvu.preload_row_outputs(outputs);
+    }
+
     pub(in crate::sim) fn stage_count(&self) -> usize {
         self.stages.len()
     }
@@ -481,6 +490,7 @@ impl MvuChain {
         out_stall: StallPattern,
     ) -> Result<ChainReport> {
         let p0 = &self.core.params()[0];
+        MvuBatch::ensure_vector_shapes(p0, inputs)?;
         let in_words: Vec<Vec<i32>> = inputs
             .iter()
             .flat_map(|v| MvuBatch::vector_to_words(p0, v))

@@ -8,13 +8,16 @@
 //! strictly less work per simulated cycle, on two axes:
 //!
 //!   * **datapath** — stages run the deferred row datapath
-//!     (`MvuStream::with_row_datapath`): compute slots stop accumulating
-//!     per `(nf, sf)` slot and each neuron fold's output word is instead
-//!     evaluated as whole-row dot products at its last synapse fold —
-//!     bit-packed XNOR-popcount / sign-mask SWAR kernels for
-//!     `Xnor`/`BinaryWeights` stages (64 lanes per word op, DESIGN.md
-//!     §Packed datapath), flat `pe_row` for `Standard`. Chains stop
-//!     paying the flat per-slot i32 path the oracle models;
+//!     (`MvuStream::with_row_datapath`) in **value-replay** mode: before
+//!     the clock starts, every stage's raw row outputs over the whole
+//!     batch are computed by the blocked batch kernel
+//!     (`eval_rows_batched`, DESIGN.md §Batched datapath — each stage's
+//!     weight matrix walked once per batch, bit-packed SWAR kernels for
+//!     `Xnor`/`BinaryWeights`, flat for `Standard`) and preloaded into
+//!     the stage; the per-cycle machine then replays those values at
+//!     exactly the cycles a live evaluation would produce them. Chains
+//!     stop paying both the flat per-slot i32 path the oracle models and
+//!     the per-vector weight re-streaming;
 //!   * **clock** — a next-event rule over the whole chain: each cycle,
 //!     every stage's upcoming step is classified as `Active` (must
 //!     execute), `Idle` (counter-only: quiescent, or output words parked
@@ -92,6 +95,39 @@ pub fn run_chain_shared(
     fifo_depth: usize,
 ) -> Result<ChainReport> {
     let mut core = ChainCore::build(layers, fifo_depth, true)?;
+    MvuBatch::ensure_vector_shapes(&core.params()[0], inputs)?;
+    // Blocked batch precompute + value replay (DESIGN.md §Batched
+    // datapath): every stage's raw row outputs over the whole batch are
+    // evaluated up front with the blocked kernel — each stage's weight
+    // matrix is walked once per batch instead of once per vector — and
+    // handed to the stage's row datapath, which then only replays values
+    // at the cycles the live evaluation would produce them. Sound because
+    // no timing or control signal in the chain machinery depends on data
+    // values; exact because the blocked kernel is bit-identical to the
+    // per-vector row evaluation (wrapping-add regrouping). Each stage's
+    // input batch is the previous stage's *thresholded* outputs (the
+    // chain applies thresholds lane-wise on emission), while the preload
+    // itself is the raw accumulators.
+    if !inputs.is_empty() {
+        let mut stage_in: Vec<Vec<i32>> = inputs.to_vec();
+        for (i, st) in layers.iter().enumerate() {
+            let raw = super::eval_rows_batched(
+                st.params,
+                st.weights,
+                st.shared.packed.as_deref(),
+                &stage_in,
+                false,
+            );
+            stage_in = match st.thresholds {
+                Some(t) => raw
+                    .iter()
+                    .map(|v| v.iter().enumerate().map(|(r, &a)| t.apply_one(r, a)).collect())
+                    .collect(),
+                None => raw.clone(),
+            };
+            core.preload_stage_rows(i, raw);
+        }
+    }
     let in_words: Vec<Vec<i32>> = inputs
         .iter()
         .flat_map(|v| MvuBatch::vector_to_words(&core.params()[0], v))

@@ -8,18 +8,19 @@
 //!
 //!   * **ideal flow** (no stall pattern on either endpoint): every cycle
 //!     consumes exactly one compute slot, so the whole run collapses into
-//!     closed-form cycle accounting plus one fold-block dot product per
-//!     output channel — no FSM dispatch, FIFO traffic or delay-line
-//!     shifting at all. The dot-product datapath is picked per `SimdType`
-//!     at run start (DESIGN.md §Packed datapath): `Xnor` and
-//!     `BinaryWeights` run bit-packed SWAR kernels
-//!     ([`pe_row_packed_xnor`](super::simd_elem::pe_row_packed_xnor) /
-//!     [`pe_row_packed_binary`](super::simd_elem::pe_row_packed_binary))
+//!     closed-form cycle accounting plus the numerics — no FSM dispatch,
+//!     FIFO traffic or delay-line shifting at all. The numerics run the
+//!     blocked row-major traversal ([`eval_rows_batched`], DESIGN.md
+//!     §Batched datapath): the weight matrix is walked **once per batch**
+//!     and every input vector is evaluated against each row while its
+//!     words are hot, through the blocked SWAR kernels
+//!     ([`pe_rows_batched_xnor`](super::simd_elem::pe_rows_batched_xnor) /
+//!     [`pe_rows_batched_binary`](super::simd_elem::pe_rows_batched_binary))
 //!     over u64 words — what the RTL actually synthesizes (Fig. 4) —
-//!     while `Standard` keeps the flat i32
-//!     [`pe_row`](super::simd_elem::pe_row). This is the flow every
-//!     figure/table sweep and the explore engine drive, and where the
-//!     >= 10x `hotpath` win comes from;
+//!     while `Standard` keeps the flat i32 path
+//!     ([`pe_rows_batched_flat`](super::simd_elem::pe_rows_batched_flat)).
+//!     This is the flow every figure/table sweep and the explore engine
+//!     drive, and where the >= 10x `hotpath` win comes from;
 //!   * **output-blocked intervals** (a result parked in the last pipeline
 //!     stage, FIFO full, sink stalled): the datapath is frozen (§5.3.2),
 //!     so the kernel jumps straight to the sink's next ready cycle and
@@ -45,13 +46,13 @@ use std::sync::Arc;
 use anyhow::{bail, Result};
 
 use crate::cfg::{SimdType, ValidatedParams};
-use crate::quant::{pack_bits_into, Matrix};
+use crate::quant::{pack_bits_columns, Matrix};
 
 use super::axis::{AxisSink, AxisSource, StallPattern};
 use super::batch_unit::MvuBatch;
 use super::clock::SimReport;
 use super::fifo;
-use super::simd_elem::{pe_row, pe_row_packed_binary, pe_row_packed_xnor};
+use super::simd_elem::{pe_rows_batched_binary, pe_rows_batched_flat, pe_rows_batched_xnor};
 use super::weight_mem::{PackedWeightMem, WeightMem};
 use super::PIPELINE_STAGES;
 
@@ -143,15 +144,21 @@ pub fn run_mvu_ideal_unpacked(
 /// channel (bit-identical to slot-wise accumulation: wrapping addition is
 /// associative).
 ///
-/// The datapath is chosen **once at run start** from the SIMD type
-/// (DESIGN.md §Packed datapath): `Xnor` and `BinaryWeights` evaluate rows
-/// over bit-packed weights (`packed`, or packed here when the caller
-/// shares none) via the SWAR kernels
-/// ([`pe_row_packed_xnor`]/[`pe_row_packed_binary`]) — bit-identical to
-/// the flat kernel by the popcount / sign-mask identities — while
-/// `Standard` keeps the flat i32 [`pe_row`]. Operands the RTL could never
-/// store (non-bit lanes where the type requires bits) fall back to the
-/// flat kernel so packed and unpacked evaluation can never diverge.
+/// The numerics run the **blocked row-major traversal** (DESIGN.md
+/// §Batched datapath): instead of re-streaming the whole weight matrix
+/// once per vector, [`eval_rows_batched`] walks the rows once and
+/// evaluates every vector of the batch against each row while its weight
+/// words are register-hot — bit-identical to the per-vector kernels
+/// because wrapping addition is associative and commutative, so the
+/// regrouping is exact. The datapath is chosen once at run start from the
+/// SIMD type (DESIGN.md §Packed datapath): `Xnor` and `BinaryWeights`
+/// evaluate bit-packed weights (`packed`, or packed here when the caller
+/// shares none) via the blocked SWAR kernels
+/// ([`pe_rows_batched_xnor`]/[`pe_rows_batched_binary`]) while `Standard`
+/// keeps the flat i32 path ([`pe_rows_batched_flat`]). Operands the RTL
+/// could never store (non-bit lanes where the type requires bits) fall
+/// back to the flat kernel so packed and unpacked evaluation can never
+/// diverge.
 fn run_ideal(
     params: &ValidatedParams,
     weights: &Matrix,
@@ -160,8 +167,8 @@ fn run_ideal(
     fifo_depth: usize,
     force_flat: bool,
 ) -> Result<SimReport> {
-    // same failure order as the oracle: weight shape (WeightMem), then
-    // FIFO depth (MvuStream).
+    // same failure order as the oracle: weight shape (WeightMem), FIFO
+    // depth (MvuStream), then input-vector shapes.
     if weights.rows != params.matrix_rows() || weights.cols != params.matrix_cols() {
         bail!(
             "weight matrix {}x{} does not match params {}x{}",
@@ -183,64 +190,10 @@ fn run_ideal(
             );
         }
     }
+    MvuBatch::ensure_vector_shapes(params, vectors)?;
 
     let n = vectors.len();
-    let rows = params.matrix_rows();
-    let cols = params.matrix_cols();
-    let ty = params.simd_type;
-    // run-start dispatch: pack the weights for the 1-bit datapaths unless
-    // the caller shared a packing (or the weights are unpackable, in
-    // which case the flat fallback keeps bit-identity).
-    let packable = !force_flat && !matches!(ty, SimdType::Standard);
-    let owned: Option<PackedWeightMem> = if packable && packed.is_none() {
-        PackedWeightMem::from_matrix(weights).ok()
-    } else {
-        None
-    };
-    let packed: Option<&PackedWeightMem> = if packable {
-        packed.or(owned.as_ref())
-    } else {
-        None
-    };
-
-    let mut xbits: Vec<u64> = Vec::new(); // reused per-vector packing buffer
-    let mut outputs = Vec::with_capacity(n);
-    for v in vectors {
-        assert_eq!(v.len(), cols);
-        // output stream words are neuron-fold major and each word carries
-        // PE consecutive rows, so the reassembled vector is exactly row
-        // order 0..rows.
-        let mut out = Vec::with_capacity(rows);
-        let mut flat = true;
-        if let Some(pw) = packed {
-            match ty {
-                SimdType::Xnor => {
-                    // inputs must be bits too; a non-bit lane falls this
-                    // vector back to the flat kernel (same values).
-                    if pack_bits_into(v, &mut xbits).is_ok() {
-                        for r in 0..rows {
-                            out.push(pe_row_packed_xnor(&xbits, pw.row_words(r), cols));
-                        }
-                        flat = false;
-                    }
-                }
-                SimdType::BinaryWeights => {
-                    let total = v.iter().fold(0i32, |acc, &x| acc.wrapping_add(x));
-                    for r in 0..rows {
-                        out.push(pe_row_packed_binary(v, pw.row_words(r), total));
-                    }
-                    flat = false;
-                }
-                SimdType::Standard => {}
-            }
-        }
-        if flat {
-            for r in 0..rows {
-                out.push(pe_row(v, weights.row(r), ty));
-            }
-        }
-        outputs.push(out);
-    }
+    let outputs = eval_rows_batched(params, weights, packed, vectors, force_flat);
 
     let sf = params.synapse_fold();
     let nf = params.neuron_fold();
@@ -262,6 +215,116 @@ fn run_ideal(
     })
 }
 
+/// Blocked row-major batch evaluation (DESIGN.md §Batched datapath):
+/// compute `outputs[b][r] = weights.row(r) · vectors[b]` by walking the
+/// weight rows **once** and evaluating all B vectors against each row
+/// while its words are hot — each 64-lane weight word is loaded once and
+/// reused B times, the weight-reuse that the per-vector traversal
+/// re-streams away. Per `SimdType`, the batch is prepared once up front:
+///
+///   * `Xnor`: all B input vectors are bit-packed into per-vector planes
+///     via [`pack_bits_columns`] (one packing pass per batch, not per
+///     row), then [`pe_rows_batched_xnor`] per row. A non-bit lane in any
+///     vector falls the **whole batch** back to the flat path — the
+///     values are identical either way, so reports cannot diverge;
+///   * `BinaryWeights`: the batch is transposed lane-major
+///     (`xt[lane*B + b]`) with per-vector wrapping totals, then
+///     [`pe_rows_batched_binary`] shares one weight-row bit scan across
+///     the batch;
+///   * `Standard` (and every fallback): [`pe_rows_batched_flat`] keeps
+///     the flat i32 kernel, still amortizing the row across the batch.
+///
+/// Bit-identity with per-vector evaluation holds because every kernel
+/// accumulates the same per-lane terms with wrapping i32/u32 addition,
+/// which is associative and commutative in Z/2^32 — any regrouping
+/// (word-major, batch-major, packed vs flat) produces the same bits.
+/// Callers must have validated vector shapes
+/// ([`MvuBatch::ensure_vector_shapes`]) and, when `packed` is given, its
+/// shape against `weights`.
+pub(in crate::sim) fn eval_rows_batched(
+    params: &ValidatedParams,
+    weights: &Matrix,
+    packed: Option<&PackedWeightMem>,
+    vectors: &[Vec<i32>],
+    force_flat: bool,
+) -> Vec<Vec<i32>> {
+    let n = vectors.len();
+    let rows = params.matrix_rows();
+    let cols = params.matrix_cols();
+    let ty = params.simd_type;
+    // run-start dispatch: pack the weights for the 1-bit datapaths unless
+    // the caller shared a packing (or the weights are unpackable, in
+    // which case the flat fallback keeps bit-identity).
+    let packable = !force_flat && !matches!(ty, SimdType::Standard);
+    let owned: Option<PackedWeightMem> = if packable && packed.is_none() {
+        PackedWeightMem::from_matrix(weights).ok()
+    } else {
+        None
+    };
+    let packed: Option<&PackedWeightMem> = if packable {
+        packed.or(owned.as_ref())
+    } else {
+        None
+    };
+
+    enum Path {
+        /// Per-vector bit-planes + words per vector.
+        Xnor(Vec<u64>, usize),
+        /// Lane-major transposed batch + per-vector wrapping totals.
+        Binary(Vec<i32>, Vec<i32>),
+        Flat,
+    }
+    let path = match (packed, ty) {
+        (Some(_), SimdType::Xnor) => {
+            let mut planes = Vec::new();
+            match pack_bits_columns(vectors, cols, &mut planes) {
+                Ok(()) => Path::Xnor(planes, cols.div_ceil(64)),
+                Err(_) => Path::Flat,
+            }
+        }
+        (Some(_), SimdType::BinaryWeights) => {
+            let mut xt = vec![0i32; cols * n];
+            let mut totals = vec![0i32; n];
+            for (b, v) in vectors.iter().enumerate() {
+                let mut t = 0i32;
+                for (lane, &x) in v.iter().enumerate() {
+                    xt[lane * n + b] = x;
+                    t = t.wrapping_add(x);
+                }
+                totals[b] = t;
+            }
+            Path::Binary(xt, totals)
+        }
+        _ => Path::Flat,
+    };
+
+    // output stream words are neuron-fold major and each word carries PE
+    // consecutive rows, so the reassembled vectors are exactly row order
+    // 0..rows — filling outputs[b] row by row matches the per-vector path.
+    let mut outputs: Vec<Vec<i32>> = (0..n).map(|_| Vec::with_capacity(rows)).collect();
+    if n == 0 {
+        return outputs;
+    }
+    let mut row_out = vec![0i32; n];
+    for r in 0..rows {
+        match &path {
+            Path::Xnor(planes, wpv) => {
+                let pw = packed.expect("Xnor path requires packed weights");
+                pe_rows_batched_xnor(planes, *wpv, pw.row_words(r), cols, &mut row_out);
+            }
+            Path::Binary(xt, totals) => {
+                let pw = packed.expect("Binary path requires packed weights");
+                pe_rows_batched_binary(xt, n, pw.row_words(r), totals, &mut row_out);
+            }
+            Path::Flat => pe_rows_batched_flat(vectors, weights.row(r), ty, &mut row_out),
+        }
+        for (out, &o) in outputs.iter_mut().zip(row_out.iter()) {
+            out.push(o);
+        }
+    }
+    outputs
+}
+
 /// General flow: the oracle's cycle loop with quiescent intervals skipped.
 /// Cycles that do work run through the same machine as the reference;
 /// cycles that provably cannot change machine state are applied in bulk.
@@ -281,6 +344,7 @@ fn run_skipping(
         Some(m) => MvuBatch::with_weight_mem(params, m, fifo_depth)?,
         None => MvuBatch::with_fifo_depth(params, weights, fifo_depth)?,
     };
+    MvuBatch::ensure_vector_shapes(params, vectors)?;
     let words: Vec<Vec<i32>> = vectors
         .iter()
         .flat_map(|v| MvuBatch::vector_to_words(params, v))

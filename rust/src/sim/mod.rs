@@ -17,8 +17,10 @@
 //!     cycle, every FSM/FIFO/delay-line event modelled explicitly;
 //!   * [`fast`] — the batched production kernel behind [`run_mvu`] /
 //!     [`run_mvu_stalled`] / [`run_mvu_fifo`]: quiescent intervals are
-//!     skipped in closed form and ideal-flow runs collapse to fold-block
-//!     dot products, bit-identical to the oracle (asserted by
+//!     skipped in closed form and ideal-flow runs collapse to the blocked
+//!     row-major batch evaluation (DESIGN.md §Batched datapath — the
+//!     weight matrix walked once per batch, not once per vector),
+//!     bit-identical to the oracle (asserted by
 //!     `tests/kernel_identity.rs` over the Table 2 grid).
 //!
 //! Multi-layer chains follow the same split: [`MvuChain`] is the
@@ -76,8 +78,12 @@ pub const DEFAULT_FIFO_DEPTH: usize = 4;
 /// (`explore::stimulus_seed`), which changes the canonical stimulus of
 /// fold variants; version 4 the next-event chain kernel
 /// ([`fast::chain`], DESIGN.md §Chain fast kernel) together with the
-/// chain entries the explore cache now stores. Each new kernel is
-/// bit-identical to its predecessor where they overlap, but keying the
-/// cache on the kernel version means a kernel change can never be
-/// served stale results from a previous kernel's on-disk entries.
-pub const SIM_KERNEL_VERSION: u32 = 4;
+/// chain entries the explore cache now stores; version 5 the blocked
+/// multi-vector datapath (DESIGN.md §Batched datapath): ideal-flow runs
+/// and chain stages evaluate whole batches row-major through the blocked
+/// SWAR kernels, and malformed input vectors now return structured
+/// errors instead of panicking. Each new kernel is bit-identical to its
+/// predecessor where they overlap, but keying the cache on the kernel
+/// version means a kernel change can never be served stale results from
+/// a previous kernel's on-disk entries.
+pub const SIM_KERNEL_VERSION: u32 = 5;

@@ -53,6 +53,7 @@ pub fn run_mvu_fifo(
     fifo_depth: usize,
 ) -> Result<SimReport> {
     let mut mvu = MvuBatch::with_fifo_depth(params, weights, fifo_depth)?;
+    MvuBatch::ensure_vector_shapes(params, vectors)?;
     let words: Vec<Vec<i32>> = vectors
         .iter()
         .flat_map(|v| MvuBatch::vector_to_words(params, v))

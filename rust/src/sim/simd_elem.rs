@@ -167,6 +167,101 @@ pub fn pe_row_packed_binary(x: &[i32], wmask: &[u64], total: i32) -> i32 {
     s1.wrapping_add(s1).wrapping_sub(total)
 }
 
+/// Blocked multi-vector XNOR row kernel (DESIGN.md §Batched datapath):
+/// evaluate one weight row against `out.len()` input vectors in a single
+/// pass. `planes` holds the batch as per-vector bit-planes
+/// ([`crate::quant::pack_bits_columns`]): vector `b`'s packed bits at
+/// words `[b*words_per_vec, (b+1)*words_per_vec)`. The weight word is the
+/// OUTER loop — loaded once and reused across all B vectors while
+/// register-hot, which is the weight-reuse the per-vector kernel cannot
+/// have — and `out[b]` accumulates vector `b`'s agreement count.
+///
+/// Bit-identical to [`pe_row_packed_xnor`] per vector: both accumulate
+/// the same per-word popcounts with wrapping addition, and wrapping
+/// addition is associative and commutative, so the word-major regrouping
+/// is exact (u32 and i32 wrapping adds are the same bit operation).
+#[inline]
+pub fn pe_rows_batched_xnor(
+    planes: &[u64],
+    words_per_vec: usize,
+    w: &[u64],
+    lanes: usize,
+    out: &mut [i32],
+) {
+    debug_assert_eq!(words_per_vec, lanes.div_ceil(64));
+    debug_assert_eq!(w.len(), words_per_vec);
+    debug_assert_eq!(planes.len(), out.len() * words_per_vec);
+    out.fill(0);
+    let full = lanes / 64;
+    for (i, &wi) in w.iter().enumerate().take(full) {
+        for (b, o) in out.iter_mut().enumerate() {
+            let x = planes[b * words_per_vec + i];
+            *o = o.wrapping_add((!(x ^ wi)).count_ones() as i32);
+        }
+    }
+    let tail = lanes % 64;
+    if tail > 0 {
+        let mask = (1u64 << tail) - 1;
+        let wi = w[full];
+        for (b, o) in out.iter_mut().enumerate() {
+            let x = planes[b * words_per_vec + full];
+            *o = o.wrapping_add((!(x ^ wi) & mask).count_ones() as i32);
+        }
+    }
+}
+
+/// Blocked multi-vector binary-weight row kernel: one weight-row bit scan
+/// serves all B vectors. `xt` is the batch transposed lane-major —
+/// `xt[lane * B + b]` is vector `b`'s lane `lane` — so each set weight
+/// bit touches B consecutive values (one cache line for small B), and
+/// `totals[b]` is vector `b`'s precomputed wrapping lane sum (the `S`
+/// term, amortized over every row like the per-vector kernel's `total`).
+///
+/// Bit-identical to [`pe_row_packed_binary`] per vector: the same set
+/// lanes are summed into `s1` (order irrelevant under wrapping addition)
+/// and the same `2*S1 - S` identity closes each output.
+#[inline]
+pub fn pe_rows_batched_binary(
+    xt: &[i32],
+    batch: usize,
+    wmask: &[u64],
+    totals: &[i32],
+    out: &mut [i32],
+) {
+    debug_assert_eq!(out.len(), batch);
+    debug_assert_eq!(totals.len(), batch);
+    debug_assert_eq!(xt.len() % batch.max(1), 0);
+    debug_assert_eq!(wmask.len(), (xt.len() / batch.max(1)).div_ceil(64));
+    out.fill(0);
+    for (wi, &word) in wmask.iter().enumerate() {
+        let base = wi * 64;
+        let mut m = word;
+        while m != 0 {
+            let lane = base + m.trailing_zeros() as usize;
+            let xs = &xt[lane * batch..(lane + 1) * batch];
+            for (o, &x) in out.iter_mut().zip(xs) {
+                *o = o.wrapping_add(x);
+            }
+            m &= m - 1;
+        }
+    }
+    for (o, &t) in out.iter_mut().zip(totals) {
+        *o = (*o).wrapping_add(*o).wrapping_sub(t);
+    }
+}
+
+/// Blocked multi-vector flat row kernel: one [`pe_row`] per vector over
+/// the same weight row while it is cache-hot — the `Standard`-type (and
+/// unpackable-operand fallback) arm of the blocked traversal. Trivially
+/// bit-identical to B independent [`pe_row`] calls.
+#[inline]
+pub fn pe_rows_batched_flat(vectors: &[Vec<i32>], wrow: &[i32], ty: SimdType, out: &mut [i32]) {
+    debug_assert_eq!(vectors.len(), out.len());
+    for (o, v) in out.iter_mut().zip(vectors) {
+        *o = pe_row(v, wrow, ty);
+    }
+}
+
 /// Packing wrapper over the SWAR kernels: evaluate one whole row from
 /// unpacked lanes, bit-identical to [`pe_row`] for **every** input —
 /// operands outside the packable range ({0,1} inputs/weights for Xnor,
@@ -324,6 +419,88 @@ mod tests {
             pe_row_packed(&xi, &wbad, SimdType::BinaryWeights),
             pe_row(&xi, &wbad, SimdType::BinaryWeights)
         );
+    }
+
+    /// The blocked multi-vector kernels are a pure regrouping of the
+    /// per-vector kernels: for every batch size (including 0 and 1) and
+    /// lane counts straddling the word boundary, batched output `b` must
+    /// equal the per-vector packed kernel on vector `b` alone.
+    #[test]
+    fn prop_batched_rows_match_per_vector_kernels() {
+        use crate::proptest::{check, Config};
+        use crate::quant::{pack_bits_columns, pack_bits_into};
+        check("batched == per-vector", Config::cases(120), |g| {
+            let lanes = *g.choose(&[0usize, 1, 5, 63, 64, 65, 130]);
+            let batch = *g.choose(&[0usize, 1, 2, 7, 32, 33]);
+            // Xnor: bit vectors against one bit weight row.
+            let w: Vec<i32> = (0..lanes).map(|_| g.i32_in(0, 1)).collect();
+            let vecs: Vec<Vec<i32>> =
+                (0..batch).map(|_| (0..lanes).map(|_| g.i32_in(0, 1)).collect()).collect();
+            let mut planes = Vec::new();
+            pack_bits_columns(&vecs, lanes, &mut planes).map_err(|e| e.to_string())?;
+            let mut ww = Vec::new();
+            pack_bits_into(&w, &mut ww).map_err(|e| e.to_string())?;
+            let mut out = vec![0i32; batch];
+            pe_rows_batched_xnor(&planes, lanes.div_ceil(64), &ww, lanes, &mut out);
+            for (b, v) in vecs.iter().enumerate() {
+                let mut xw = Vec::new();
+                pack_bits_into(v, &mut xw).map_err(|e| e.to_string())?;
+                let per = pe_row_packed_xnor(&xw, &ww, lanes);
+                if out[b] != per {
+                    return Err(format!(
+                        "xnor lanes={lanes} b={b}: batched {} != per-vector {per}",
+                        out[b]
+                    ));
+                }
+            }
+            // BinaryWeights: wide signed vectors (wrapping-heavy) against
+            // the same bit weight row, lane-major transposed.
+            let ivecs: Vec<Vec<i32>> = (0..batch)
+                .map(|_| (0..lanes).map(|_| g.i32_in(i32::MIN / 2, i32::MAX / 2)).collect())
+                .collect();
+            let mut xt = vec![0i32; lanes * batch];
+            for (b, v) in ivecs.iter().enumerate() {
+                for (lane, &x) in v.iter().enumerate() {
+                    xt[lane * batch + b] = x;
+                }
+            }
+            let totals: Vec<i32> = ivecs
+                .iter()
+                .map(|v| v.iter().fold(0i32, |a, &x| a.wrapping_add(x)))
+                .collect();
+            let mut bout = vec![0i32; batch];
+            pe_rows_batched_binary(&xt, batch, &ww, &totals, &mut bout);
+            let mut fout = vec![0i32; batch];
+            pe_rows_batched_flat(&ivecs, &w, SimdType::BinaryWeights, &mut fout);
+            for (b, v) in ivecs.iter().enumerate() {
+                let per = pe_row_packed_binary(v, &ww, totals[b]);
+                if bout[b] != per || fout[b] != pe_row(v, &w, SimdType::BinaryWeights) {
+                    return Err(format!(
+                        "binary lanes={lanes} b={b}: batched {} flat {} per-vector {per}",
+                        bout[b], fout[b]
+                    ));
+                }
+            }
+            Ok(())
+        });
+    }
+
+    /// Batched kernels must clear stale accumulator contents: `out` is an
+    /// output parameter, not an accumulator across calls.
+    #[test]
+    fn batched_kernels_reset_output_buffer() {
+        let vecs = vec![vec![1, 0, 1], vec![0, 0, 1]];
+        let w = [1, 1, 0];
+        let mut planes = Vec::new();
+        crate::quant::pack_bits_columns(&vecs, 3, &mut planes).unwrap();
+        let mut ww = Vec::new();
+        crate::quant::pack_bits_into(&w, &mut ww).unwrap();
+        let mut out = vec![i32::MIN; 2];
+        pe_rows_batched_xnor(&planes, 1, &ww, 3, &mut out);
+        pe_rows_batched_xnor(&planes, 1, &ww, 3, &mut out); // second call: same result
+        for (b, v) in vecs.iter().enumerate() {
+            assert_eq!(out[b], pe_row(v, &w, SimdType::Xnor), "b={b}");
+        }
     }
 
     #[test]

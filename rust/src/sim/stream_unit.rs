@@ -90,6 +90,18 @@ struct RowDatapath {
     total: i32,
     /// Per-vector state above is valid for the vector in the buffer.
     prepared: bool,
+    /// Value replay (DESIGN.md §Batched datapath): `precomputed[i][r]` is
+    /// raw row `r` of the `i`-th vector this stream will consume, computed
+    /// up front by the blocked batch kernel. When set, `compute_row_word`
+    /// emits these values instead of evaluating dot products — sound
+    /// because no timing or control signal in the stream unit depends on
+    /// accumulator contents, and exact because the blocked kernel is
+    /// bit-identical to the per-row evaluation it replaces.
+    precomputed: Option<Vec<Vec<i32>>>,
+    /// Index into `precomputed` of the *next* vector to begin.
+    vec_cursor: usize,
+    /// Index into `precomputed` of the vector currently being replayed.
+    cur_vec: usize,
 }
 
 /// The stream unit.
@@ -169,8 +181,25 @@ impl MvuStream {
             xnor_packable: false,
             total: 0,
             prepared: false,
+            precomputed: None,
+            vec_cursor: 0,
+            cur_vec: 0,
         });
         Ok(s)
+    }
+
+    /// Hand a row-datapath stream the precomputed raw row outputs of every
+    /// vector it will consume, in consumption order (value replay — see
+    /// [`RowDatapath::precomputed`]). `outputs[i][r]` must equal the raw
+    /// dot product of vector `i` with weight row `r`; the chain fast
+    /// kernel computes them with the blocked batch kernel
+    /// (`eval_rows_batched`) so each stage's weight matrix is walked once
+    /// per batch instead of once per vector. Requires the row datapath;
+    /// calling on a slot-wise stream is a caller bug.
+    pub fn preload_row_outputs(&mut self, outputs: Vec<Vec<i32>>) {
+        let row = self.row.as_mut().expect("preload_row_outputs requires the row datapath");
+        row.precomputed = Some(outputs);
+        row.vec_cursor = 0;
     }
 
     pub fn params(&self) -> &LayerParams {
@@ -386,17 +415,24 @@ impl MvuStream {
     fn compute_row_word(&mut self, wmem: &WeightMem, sf_total: usize) {
         let mut row = self.row.take().expect("row datapath state");
         if !row.prepared {
-            row.vec.clear();
-            self.buf.copy_vector_into(&mut row.vec);
-            match self.params.simd_type {
-                SimdType::Xnor => {
-                    row.xnor_packable =
-                        row.packed.is_some() && pack_bits_into(&row.vec, &mut row.xbits).is_ok();
+            if row.precomputed.is_some() {
+                // value replay: the next vector's rows are already
+                // computed; nothing to copy or pack.
+                row.cur_vec = row.vec_cursor;
+                row.vec_cursor += 1;
+            } else {
+                row.vec.clear();
+                self.buf.copy_vector_into(&mut row.vec);
+                match self.params.simd_type {
+                    SimdType::Xnor => {
+                        row.xnor_packable = row.packed.is_some()
+                            && pack_bits_into(&row.vec, &mut row.xbits).is_ok();
+                    }
+                    SimdType::BinaryWeights => {
+                        row.total = row.vec.iter().fold(0i32, |a, &v| a.wrapping_add(v));
+                    }
+                    SimdType::Standard => {}
                 }
-                SimdType::BinaryWeights => {
-                    row.total = row.vec.iter().fold(0i32, |a, &v| a.wrapping_add(v));
-                }
-                SimdType::Standard => {}
             }
             row.prepared = true;
         }
@@ -406,14 +442,18 @@ impl MvuStream {
         let mut word = Vec::with_capacity(pe_n);
         for p in 0..pe_n {
             let r = self.cur_nf * pe_n + p;
-            let v = match (ty, &row.packed) {
-                (SimdType::Xnor, Some(pk)) if row.xnor_packable => {
-                    pe_row_packed_xnor(&row.xbits, pk.row_words(r), cols)
+            let v = if let Some(pre) = &row.precomputed {
+                pre[row.cur_vec][r]
+            } else {
+                match (ty, &row.packed) {
+                    (SimdType::Xnor, Some(pk)) if row.xnor_packable => {
+                        pe_row_packed_xnor(&row.xbits, pk.row_words(r), cols)
+                    }
+                    (SimdType::BinaryWeights, Some(pk)) => {
+                        pe_row_packed_binary(&row.vec, pk.row_words(r), row.total)
+                    }
+                    _ => pe_row(&row.vec, wmem.read_row(p, self.cur_nf, sf_total), ty),
                 }
-                (SimdType::BinaryWeights, Some(pk)) => {
-                    pe_row_packed_binary(&row.vec, pk.row_words(r), row.total)
-                }
-                _ => pe_row(&row.vec, wmem.read_row(p, self.cur_nf, sf_total), ty),
             };
             word.push(v);
         }
@@ -618,6 +658,77 @@ mod tests {
             assert_eq!(slot.stats.slots_consumed, row.stats.slots_consumed, "{ty}");
             assert_eq!(slot.stats.stall_cycles, row.stats.stall_cycles, "{ty}");
             assert!(slot.drained() && row.drained(), "{ty}");
+        }
+    }
+
+    /// Value replay ([`MvuStream::preload_row_outputs`]) must be
+    /// cycle-for-cycle and value-for-value identical to the row datapath
+    /// computing its own dot products — including under backpressure and
+    /// across the multi-vector boundary where `prepared` resets.
+    #[test]
+    fn preloaded_row_outputs_are_bit_identical_to_computed() {
+        use crate::cfg::SimdType;
+        for ty in SimdType::ALL {
+            let p = crate::cfg::DesignPoint::fc("pre")
+                .in_features(8)
+                .out_features(4)
+                .pe(2)
+                .simd(4)
+                .paper_precision(ty)
+                .build()
+                .unwrap();
+            let mut rng = crate::util::rng::Pcg32::new(47);
+            let bit = !matches!(ty, SimdType::Standard);
+            let data: Vec<i32> = (0..32)
+                .map(|_| {
+                    if bit {
+                        rng.next_range(2) as i32
+                    } else {
+                        rng.next_range(8) as i32 - 4
+                    }
+                })
+                .collect();
+            let w = Matrix::new(4, 8, data).unwrap();
+            let wm = WeightMem::from_matrix(&p, &w).unwrap();
+            let packed = PackedWeightMem::from_matrix(&w).ok().map(Arc::new);
+            let vecs: Vec<Vec<i32>> = (0..3)
+                .map(|_| {
+                    (0..8)
+                        .map(|_| {
+                            if matches!(ty, SimdType::Xnor) {
+                                rng.next_range(2) as i32
+                            } else {
+                                rng.next_range(8) as i32 - 4
+                            }
+                        })
+                        .collect()
+                })
+                .collect();
+            let raw: Vec<Vec<i32>> =
+                vecs.iter().map(|v| crate::quant::matvec(v, &w, ty).unwrap()).collect();
+            let mut live = MvuStream::with_row_datapath(&p, 2, packed.clone()).unwrap();
+            let mut replay = MvuStream::with_row_datapath(&p, 2, packed).unwrap();
+            replay.preload_row_outputs(raw);
+            let words: Vec<Vec<i32>> = vecs
+                .iter()
+                .flat_map(|v| vec![v[0..4].to_vec(), v[4..8].to_vec()])
+                .collect();
+            let mut wi = 0;
+            for cycle in 0..120 {
+                let offered = (wi < words.len()).then(|| words[wi].clone());
+                let ready = cycle % 3 != 0; // periodic backpressure
+                let a = live.step(offered.as_deref(), &wm, ready);
+                let b = replay.step(offered.as_deref(), &wm, ready);
+                assert_eq!(a.consumed_input, b.consumed_input, "{ty} cycle {cycle}");
+                assert_eq!(a.stalled, b.stalled, "{ty} cycle {cycle}");
+                assert_eq!(a.emitted, b.emitted, "{ty} cycle {cycle}");
+                if a.consumed_input {
+                    wi += 1;
+                }
+            }
+            assert_eq!(live.stats.cycles, replay.stats.cycles, "{ty}");
+            assert_eq!(live.stats.slots_consumed, replay.stats.slots_consumed, "{ty}");
+            assert!(live.drained() && replay.drained(), "{ty}");
         }
     }
 

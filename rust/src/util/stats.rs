@@ -32,15 +32,18 @@ impl Summary {
         Some(Summary { n, min, max, mean, median, stddev: var.sqrt() })
     }
 
-    /// Percentile by nearest-rank (p in [0, 100]).
+    /// Percentile by nearest-rank (p in [0, 100]): the smallest sample
+    /// with at least p% of the data at or below it — rank `ceil(p/100·n)`
+    /// (1-based), clamped to [1, n] so p=0 yields the minimum.
     pub fn percentile(xs: &[f64], p: f64) -> Option<f64> {
         if xs.is_empty() {
             return None;
         }
         let mut sorted: Vec<f64> = xs.to_vec();
         sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
-        let rank = ((p / 100.0) * (sorted.len() as f64 - 1.0)).round() as usize;
-        Some(sorted[rank.min(sorted.len() - 1)])
+        let n = sorted.len();
+        let rank = ((p / 100.0) * n as f64).ceil() as usize;
+        Some(sorted[rank.clamp(1, n) - 1])
     }
 }
 
@@ -130,6 +133,31 @@ mod tests {
         assert_eq!(Summary::percentile(&xs, 100.0), Some(100.0));
         let p50 = Summary::percentile(&xs, 50.0).unwrap();
         assert!((p50 - 50.0).abs() <= 1.0);
+    }
+
+    /// True nearest-rank edge cases: rank `ceil(p/100·n)` at the sample
+    /// sizes where the old `round(p/100·(n−1))` formula went wrong (n=2,
+    /// p50 must be the MIN — at most half the data lies at or below it).
+    #[test]
+    fn percentile_nearest_rank_edge_cases() {
+        // n = 1: every percentile is the single sample
+        let one = [7.0];
+        for p in [0.0, 50.0, 99.0, 100.0] {
+            assert_eq!(Summary::percentile(&one, p), Some(7.0), "n=1 p={p}");
+        }
+        // n = 2: p50 -> rank ceil(1.0) = 1 -> min (the old formula
+        // returned the max); p99/p100 -> max; p0 -> min
+        let two = [10.0, 20.0];
+        assert_eq!(Summary::percentile(&two, 0.0), Some(10.0));
+        assert_eq!(Summary::percentile(&two, 50.0), Some(10.0));
+        assert_eq!(Summary::percentile(&two, 99.0), Some(20.0));
+        assert_eq!(Summary::percentile(&two, 100.0), Some(20.0));
+        // n = 100: ranks land exactly on ceil(p) for integer samples
+        let hundred: Vec<f64> = (1..=100).map(|i| i as f64).collect();
+        assert_eq!(Summary::percentile(&hundred, 50.0), Some(50.0));
+        assert_eq!(Summary::percentile(&hundred, 99.0), Some(99.0));
+        assert_eq!(Summary::percentile(&hundred, 100.0), Some(100.0));
+        assert_eq!(Summary::percentile(&hundred, 0.0), Some(1.0));
     }
 
     #[test]

@@ -133,6 +133,42 @@ fn chain_kernels_identical_over_nid_grid() {
     assert_eq!(runs, 2 * 2 * 6 * 3);
 }
 
+/// The blocked multi-vector chain datapath (DESIGN.md §Batched
+/// datapath) across batch sizes straddling the blocking sweet spot: the
+/// fast kernel precomputes every stage's row outputs for the whole
+/// batch with the blocked kernel and replays them through the
+/// cycle-exact control machinery, the oracle steps vector-by-vector —
+/// the reports must still match field for field, on the ideal flow and
+/// under endpoint stalls.
+#[test]
+fn chain_kernels_identical_across_batch_sizes() {
+    let paper_folds = [(64usize, 50usize), (16, 32), (16, 32), (1, 8)];
+    for ty in [SimdType::Standard, SimdType::Xnor] {
+        let layers = nid_variant(ty, &paper_folds);
+        let all = nid_inputs(ty, 33, 4242);
+        for b in [1usize, 2, 31, 32, 33] {
+            assert_identical(
+                &layers,
+                &all[..b],
+                &StallPattern::None,
+                &StallPattern::None,
+                2,
+                &format!("{ty} batch {b} ideal"),
+            );
+        }
+        // one stalled flow at the blocking boundary: batching must not
+        // perturb the stepped control path either
+        assert_identical(
+            &layers,
+            &all[..32],
+            &StallPattern::Periodic { period: 5, duty: 2, phase: 1 },
+            &StallPattern::Random { seed: 17, p_num: 120 },
+            2,
+            &format!("{ty} batch 32 stalled"),
+        );
+    }
+}
+
 /// Deadlock agreement: a sink that never asserts TREADY and a source
 /// that never asserts TVALID must fail both kernels with the *same*
 /// structured message (same cycle count at the shared bound).

@@ -61,6 +61,182 @@ fn kernels_identical_over_table2_grid() {
     assert!(points > 50, "grid unexpectedly small: {points} points");
 }
 
+/// The blocked multi-vector datapath (DESIGN.md §Batched datapath)
+/// across batch sizes straddling the blocking sweet spot: the fast
+/// kernel evaluates the whole batch row-major (one weight word load per
+/// row word, reused across the batch), the oracle strictly
+/// vector-by-vector — the reports must still match field for field.
+/// Heavy grid points (the kernel-dim sweep reaches ~83k slots/vector)
+/// are capped to keep the per-cycle oracle affordable in dev builds;
+/// the batch-size coverage floor below pins that the cap still leaves
+/// the grid's breadth intact.
+#[test]
+fn kernels_identical_across_batch_sizes() {
+    let mut covered = 0usize;
+    for kind in SweepKind::ALL {
+        for ty in SimdType::ALL {
+            for sp in kind.points(ty) {
+                let p = &sp.params;
+                let slots_per_vec = (p.matrix_rows() / p.pe) * (p.matrix_cols() / p.simd);
+                if slots_per_vec > 2048 {
+                    continue; // covered at n=2 by kernels_identical_over_table2_grid
+                }
+                let seed = stimulus_seed(p);
+                let w = stimulus_weights(p, seed);
+                let all = stimulus_inputs(p, seed ^ 0x9e37_79b9_7f4a_7c15, 33);
+                for b in [1usize, 2, 31, 32, 33] {
+                    let inputs = &all[..b];
+                    let fast = run_mvu_fifo(
+                        p,
+                        &w,
+                        inputs,
+                        StallPattern::None,
+                        StallPattern::None,
+                        DEFAULT_FIFO_DEPTH,
+                    )
+                    .unwrap();
+                    let oracle = reference::run_mvu_fifo(
+                        p,
+                        &w,
+                        inputs,
+                        StallPattern::None,
+                        StallPattern::None,
+                        DEFAULT_FIFO_DEPTH,
+                    )
+                    .unwrap();
+                    assert_eq!(fast, oracle, "{p} batch={b}");
+                }
+                covered += 1;
+            }
+        }
+    }
+    assert!(covered >= 60, "batch-size coverage unexpectedly small: {covered} points");
+}
+
+/// Malformed input vectors (wrong lane count) are a structured error —
+/// not a panic — from BOTH kernels, with identical messages, on the
+/// ideal closed-form flow and the stalled stepped flow alike.
+#[test]
+fn malformed_vectors_error_identically() {
+    let p = DesignPoint::fc("malformed")
+        .in_features(12)
+        .out_features(4)
+        .pe(2)
+        .simd(4)
+        .precision(2, 2, 0)
+        .build()
+        .unwrap();
+    let seed = stimulus_seed(&p);
+    let w = stimulus_weights(&p, seed);
+    // vector 1 is short among well-formed neighbours
+    let mut inputs = stimulus_inputs(&p, seed ^ 3, 3);
+    inputs[1].truncate(5);
+    let stall = StallPattern::Periodic { period: 3, duty: 1, phase: 0 };
+    for out_s in [StallPattern::None, stall] {
+        let fast =
+            run_mvu_fifo(&p, &w, &inputs, StallPattern::None, out_s.clone(), DEFAULT_FIFO_DEPTH);
+        let oracle = reference::run_mvu_fifo(
+            &p,
+            &w,
+            &inputs,
+            StallPattern::None,
+            out_s,
+            DEFAULT_FIFO_DEPTH,
+        );
+        let (fe, oe) = (fast.unwrap_err(), oracle.unwrap_err());
+        assert_eq!(fe.to_string(), oe.to_string());
+        assert_eq!(fe.to_string(), "input vector 1 has 5 lanes, expected 12");
+    }
+}
+
+/// The empty batch: no vectors means no execution beyond the idle
+/// cycle — both kernels agree and report `exec_cycles == 1` with an
+/// untouched FIFO.
+#[test]
+fn zero_vectors_report_exec_cycles_one() {
+    for ty in SimdType::ALL {
+        let (wb, ib) = match ty {
+            SimdType::Xnor => (1, 1),
+            SimdType::BinaryWeights => (1, 2),
+            SimdType::Standard => (4, 4),
+        };
+        let p = DesignPoint::fc("empty")
+            .in_features(8)
+            .out_features(4)
+            .pe(2)
+            .simd(4)
+            .simd_type(ty)
+            .precision(wb, ib, 0)
+            .build()
+            .unwrap();
+        let w = stimulus_weights(&p, stimulus_seed(&p));
+        let inputs: Vec<Vec<i32>> = Vec::new();
+        let fast = run_mvu_fifo(
+            &p,
+            &w,
+            &inputs,
+            StallPattern::None,
+            StallPattern::None,
+            DEFAULT_FIFO_DEPTH,
+        )
+        .unwrap();
+        let oracle = reference::run_mvu_fifo(
+            &p,
+            &w,
+            &inputs,
+            StallPattern::None,
+            StallPattern::None,
+            DEFAULT_FIFO_DEPTH,
+        )
+        .unwrap();
+        assert_eq!(fast, oracle, "{ty}");
+        assert_eq!(fast.exec_cycles, 1, "{ty}");
+        assert_eq!(fast.slots_consumed, 0, "{ty}");
+        assert_eq!(fast.fifo_max_occupancy, 0, "{ty}");
+    }
+}
+
+/// Property: one blocked run over B vectors produces exactly the
+/// outputs of B independent single-vector runs — the regrouping of
+/// wrapping adds behind the blocked traversal changes nothing, on any
+/// SIMD type, at any batch size.
+#[test]
+fn prop_blocked_equals_independent_runs() {
+    check("blocked == B independent runs", Config::cases(60), |g| {
+        let p = arb_params(g);
+        let w = arb_weights(g, &p);
+        let b = g.usize_in(1, 36);
+        let inputs = arb_inputs(g, &p, b);
+        let batched = run_mvu_fifo(
+            &p,
+            &w,
+            &inputs,
+            StallPattern::None,
+            StallPattern::None,
+            DEFAULT_FIFO_DEPTH,
+        )
+        .map_err(|e| format!("{p} batch={b}: {e:#}"))?;
+        for (i, v) in inputs.iter().enumerate() {
+            let single = run_mvu_fifo(
+                &p,
+                &w,
+                std::slice::from_ref(v),
+                StallPattern::None,
+                StallPattern::None,
+                DEFAULT_FIFO_DEPTH,
+            )
+            .map_err(|e| format!("{p} vector {i}: {e:#}"))?;
+            if single.outputs[0] != batched.outputs[i] {
+                return Err(format!(
+                    "{p} batch={b}: vector {i} diverges: single {:?} != blocked {:?}",
+                    single.outputs[0], batched.outputs[i]
+                ));
+            }
+        }
+        Ok(())
+    });
+}
+
 fn arb_params(g: &mut Gen) -> ValidatedParams {
     let ty = *g.choose(&SimdType::ALL);
     let (wb, ib) = match ty {
