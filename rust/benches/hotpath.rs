@@ -20,7 +20,8 @@
 //! Run with: `cargo bench --bench hotpath`
 
 use finn_mvu::cfg::{nid_layers, DesignPoint, SimdType, ValidatedParams};
-use finn_mvu::eval::{ChainRequest, Session, SessionConfig, SimOptions};
+use finn_mvu::device::{ArrivalProcess, PolicyKind};
+use finn_mvu::eval::{ChainRequest, DeviceRequest, Session, SessionConfig, SimOptions};
 use finn_mvu::explore::stimulus_thresholds;
 use finn_mvu::harness::{bench, random_weights, SweepKind};
 use finn_mvu::quant::{matvec, Matrix, Thresholds};
@@ -30,6 +31,7 @@ use finn_mvu::sim::{
     DEFAULT_FIFO_DEPTH,
 };
 use finn_mvu::util::rng::Pcg32;
+use finn_mvu::util::table::{fnum, Table};
 
 fn sim_bench(name: &str, params: &ValidatedParams, n_vec: usize) {
     let w = random_weights(params, 11);
@@ -410,6 +412,82 @@ fn nid_chain_shootout() {
     );
 }
 
+/// Simulated accelerator card (DESIGN.md §Device subsystem): a 4-unit
+/// NID-chain card swept over arrival rate x scheduler policy to locate
+/// the saturation knee, then a 1M-request overload scenario on 8 units.
+/// Service times come from the engine's cached chain simulations, so one
+/// shared session calibrates each policy's profile once. The acceptance
+/// bar: at the saturated end of the sweep, the batch-aware policy (B=32)
+/// must beat round-robin on aggregate throughput.
+fn device_bench() {
+    let session = Session::parallel();
+    let policies = [
+        PolicyKind::RoundRobin,
+        PolicyKind::LeastLoaded,
+        PolicyKind::BatchAware { block: 32, max_wait: 256 },
+    ];
+    // mean inter-arrival gaps in cycles: from light load down to overload
+    // (the NID chain's bottleneck II is 12 cycles/vector, so a 4-unit
+    // card saturates near gap 3 even with perfect batching)
+    let gaps = [64.0, 32.0, 16.0, 8.0, 4.0, 2.0];
+    let mut table = Table::new(vec!["gap", "policy", "req/kcycle", "wait p99", "util"]);
+    let mut knee: Vec<(f64, String, f64)> = Vec::new();
+    for &gap in &gaps {
+        for policy in &policies {
+            let mut req = DeviceRequest::nid(4);
+            req.card.policy = policy.clone();
+            req.card.arrival = ArrivalProcess::Poisson { mean_gap: gap };
+            req.card.seed = 7;
+            req.card.requests = 20_000;
+            let s = session.evaluate_device(&req).unwrap();
+            let util = s.per_unit.iter().map(|u| u.utilization).sum::<f64>()
+                / s.per_unit.len() as f64;
+            table.row(vec![
+                fnum(gap, 0),
+                s.policy.clone(),
+                fnum(s.throughput_rpkc, 2),
+                fnum(s.wait.p99, 0),
+                fnum(util, 3),
+            ]);
+            knee.push((gap, s.policy.clone(), s.throughput_rpkc));
+        }
+    }
+    println!("device knee sweep: 4-unit NID card, 20k requests per cell\n{}", table.render());
+    let at_saturation = |p: &str| {
+        knee.iter()
+            .filter(|(g, name, _)| *g == 2.0 && name.starts_with(p))
+            .map(|(_, _, rpkc)| *rpkc)
+            .next()
+            .unwrap()
+    };
+    let (rr, batch) = (at_saturation("round-robin"), at_saturation("batch-aware"));
+    println!(
+        "    -> at saturation (gap 2): batch-aware {} vs round-robin {} req/kcycle \
+         (acceptance bar: batch-aware >= round-robin) {}",
+        fnum(batch, 2),
+        fnum(rr, 2),
+        if batch >= rr { "PASS" } else { "FAIL" }
+    );
+    assert!(batch >= rr, "batch-aware ({batch}) below round-robin ({rr}) at saturation");
+
+    // the load scenario: 1M requests through an 8-unit batch-aware card
+    // at ~80% load — the wall-clock headline for the event loop itself
+    let mut big = DeviceRequest::nid(8);
+    big.card.policy = PolicyKind::BatchAware { block: 32, max_wait: 256 };
+    big.card.arrival = ArrivalProcess::Poisson { mean_gap: 2.0 };
+    big.card.seed = 7;
+    big.card.requests = 1_000_000;
+    let t0 = std::time::Instant::now();
+    let s = session.evaluate_device(&big).unwrap();
+    let wall = t0.elapsed().as_secs_f64();
+    println!(
+        "device load scenario: {s}\n    -> 1M requests simulated in {:.2} s wall \
+         ({:.2} M requests/s)",
+        wall,
+        1.0 / wall.max(1e-9)
+    );
+}
+
 fn explore_bench() {
     // the full Table 2 grid (all six sweeps x three SIMD types)
     let points: Vec<_> = SweepKind::ALL
@@ -469,6 +547,9 @@ fn main() {
 
     // the design-space exploration workload (the tentpole hot path)
     explore_bench();
+
+    // the simulated accelerator card: saturation knee + 1M-request load
+    device_bench();
 
     // reference GEMM baseline
     let w = random_weights(&nid0, 13);

@@ -5,16 +5,23 @@
 //! flushes early on timeout — the standard dynamic-batching policy of
 //! serving systems, here with the padding semantics the fixed-shape
 //! executables need.
+//!
+//! The core is generic over a [`Timeline`] so the same fill/deadline
+//! logic serves both the real-time pipeline ([`Batcher`] = wall-clock
+//! `Instant`s) and the simulated accelerator card ([`TickBatcher`] =
+//! virtual `u64` cycle counts, where determinism is mandatory).
 
 use std::time::{Duration, Instant};
 
-/// A batch of flattened request payloads.
+use super::vclock::Timeline;
+
+/// A batch of flattened request payloads, stamped on a [`Timeline`].
 #[derive(Debug, Clone)]
-pub struct Batch {
+pub struct BatchAt<T: Timeline> {
     /// Request ids, one per real (non-padding) row.
     pub ids: Vec<u64>,
     /// Submission timestamps aligned with `ids` (for latency accounting).
-    pub stamps: Vec<Instant>,
+    pub stamps: Vec<T>,
     /// Flattened row-major payload of `capacity * row_len` (padded rows
     /// are zero).
     pub data: Vec<i32>,
@@ -22,7 +29,13 @@ pub struct Batch {
     pub capacity: usize,
 }
 
-impl Batch {
+/// Wall-clock batch, as produced by the serving [`Batcher`].
+pub type Batch = BatchAt<Instant>;
+
+/// Virtual-time batch, stamped in clock cycles.
+pub type TickBatch = BatchAt<u64>;
+
+impl<T: Timeline> BatchAt<T> {
     pub fn occupancy(&self) -> usize {
         self.ids.len()
     }
@@ -32,22 +45,30 @@ impl Batch {
     }
 }
 
-/// Accumulating batcher.
+/// Accumulating batcher over an arbitrary [`Timeline`].
 #[derive(Debug)]
-pub struct Batcher {
+pub struct BatcherAt<T: Timeline> {
     row_len: usize,
     capacity: usize,
-    max_wait: Duration,
+    max_wait: T::Wait,
     pending_ids: Vec<u64>,
-    pending_stamps: Vec<Instant>,
+    pending_stamps: Vec<T>,
     pending_data: Vec<i32>,
-    oldest: Option<Instant>,
+    oldest: Option<T>,
 }
 
-impl Batcher {
-    pub fn new(row_len: usize, capacity: usize, max_wait: Duration) -> Batcher {
+/// Wall-clock batcher used by the serving pipeline.
+pub type Batcher = BatcherAt<Instant>;
+
+/// Virtual-time batcher: identical fill/deadline-flush semantics, but on
+/// `u64` clock cycles. The device scheduler's batch-aware policy holds
+/// requests in one of these.
+pub type TickBatcher = BatcherAt<u64>;
+
+impl<T: Timeline> BatcherAt<T> {
+    pub fn new(row_len: usize, capacity: usize, max_wait: T::Wait) -> BatcherAt<T> {
         assert!(capacity > 0 && row_len > 0);
-        Batcher {
+        BatcherAt {
             row_len,
             capacity,
             max_wait,
@@ -62,8 +83,15 @@ impl Batcher {
         self.pending_ids.len()
     }
 
+    /// The time at which `poll` would flush the current partial batch,
+    /// if anything is pending. This is what lets a discrete-event loop
+    /// jump straight to the deadline instead of polling every cycle.
+    pub fn next_deadline(&self) -> Option<T> {
+        self.oldest.map(|t| t.advance(self.max_wait))
+    }
+
     /// Add a request; returns a full batch if this push filled it.
-    pub fn push(&mut self, id: u64, row: &[i32], now: Instant) -> Option<Batch> {
+    pub fn push(&mut self, id: u64, row: &[i32], now: T) -> Option<BatchAt<T>> {
         assert_eq!(row.len(), self.row_len, "request row length");
         if self.pending_ids.is_empty() {
             self.oldest = Some(now);
@@ -79,9 +107,9 @@ impl Batcher {
 
     /// Flush on timeout: returns a (padded) partial batch if the oldest
     /// pending request has waited longer than `max_wait`.
-    pub fn poll(&mut self, now: Instant) -> Option<Batch> {
+    pub fn poll(&mut self, now: T) -> Option<BatchAt<T>> {
         match self.oldest {
-            Some(t) if now.duration_since(t) >= self.max_wait && !self.pending_ids.is_empty() => {
+            Some(t) if now.since(t) >= self.max_wait && !self.pending_ids.is_empty() => {
                 Some(self.flush())
             }
             _ => None,
@@ -89,7 +117,7 @@ impl Batcher {
     }
 
     /// Force out whatever is pending (shutdown path).
-    pub fn flush_remaining(&mut self) -> Option<Batch> {
+    pub fn flush_remaining(&mut self) -> Option<BatchAt<T>> {
         if self.pending_ids.is_empty() {
             None
         } else {
@@ -97,13 +125,13 @@ impl Batcher {
         }
     }
 
-    fn flush(&mut self) -> Batch {
+    fn flush(&mut self) -> BatchAt<T> {
         let ids = std::mem::take(&mut self.pending_ids);
         let stamps = std::mem::take(&mut self.pending_stamps);
         let mut data = std::mem::take(&mut self.pending_data);
         data.resize(self.capacity * self.row_len, 0); // zero-pad
         self.oldest = None;
-        Batch { ids, stamps, data, row_len: self.row_len, capacity: self.capacity }
+        BatchAt { ids, stamps, data, row_len: self.row_len, capacity: self.capacity }
     }
 }
 
@@ -164,5 +192,32 @@ mod tests {
         b.push(1, &[9], Instant::now());
         let batch = b.flush_remaining().unwrap();
         assert_eq!(batch.ids, vec![1]);
+    }
+
+    /// The same semantics on the virtual clock: fill at capacity,
+    /// deadline flush at `oldest + max_wait` cycles, computable ahead of
+    /// time via `next_deadline` for event-driven use.
+    #[test]
+    fn tick_batcher_fill_and_deadline() {
+        let mut b = TickBatcher::new(1, 3, 16);
+        assert!(b.next_deadline().is_none());
+        assert!(b.push(10, &[1], 100).is_none());
+        assert_eq!(b.next_deadline(), Some(116));
+        assert!(b.push(11, &[2], 105).is_none());
+        // deadline tracks the oldest pending request, not the newest
+        assert_eq!(b.next_deadline(), Some(116));
+        assert!(b.poll(115).is_none());
+        let batch = b.poll(116).unwrap();
+        assert_eq!(batch.ids, vec![10, 11]);
+        assert_eq!(batch.stamps, vec![100, 105]);
+        assert_eq!(batch.occupancy(), 2);
+        assert_eq!(batch.data, vec![1, 2, 0]); // padded to capacity
+        assert!(b.next_deadline().is_none());
+        // fill flush, no deadline involved
+        b.push(12, &[3], 200);
+        b.push(13, &[4], 200);
+        let full = b.push(14, &[5], 201).unwrap();
+        assert!(full.is_full());
+        assert_eq!(full.ids, vec![12, 13, 14]);
     }
 }

@@ -1,34 +1,69 @@
 //! Latency/throughput metrics for the serving reports.
+//!
+//! [`LatencyRecorderAt`] is generic over a [`Timeline`]: the serving
+//! pipeline records wall-clock [`Duration`]s ([`LatencyRecorder`], where
+//! samples are microseconds and the elapsed span is seconds), while the
+//! simulated accelerator card records virtual-clock waits
+//! ([`TickRecorder`], where both samples and the elapsed span are plain
+//! `u64` cycle counts — see [`Timeline::wait_value`]). Either way the
+//! result is the same [`ThroughputReport`] shape.
+
+use anyhow::{Context, Result};
 
 use std::time::{Duration, Instant};
 
+use super::vclock::Timeline;
+use crate::util::json::Json;
 use crate::util::stats::Summary;
 
-/// Records per-request latencies.
-#[derive(Debug, Default)]
-pub struct LatencyRecorder {
-    samples_us: Vec<f64>,
-    started: Option<Instant>,
-    finished: Option<Instant>,
-    /// First `record` time — the elapsed-span fallback when `start()`
+/// Records per-request latencies on an arbitrary [`Timeline`].
+#[derive(Debug)]
+pub struct LatencyRecorderAt<T: Timeline> {
+    samples: Vec<f64>,
+    started: Option<T>,
+    finished: Option<T>,
+    /// First `record` time — the elapsed-span fallback when `start`
     /// was never called, so a recorder with samples always reports a
-    /// nonzero wall span instead of 0 rps.
-    first_record: Option<Instant>,
+    /// nonzero span instead of 0 rps.
+    first_record: Option<T>,
     completed: usize,
 }
 
-impl LatencyRecorder {
-    pub fn new() -> LatencyRecorder {
-        LatencyRecorder::default()
+/// Wall-clock recorder used by the serving pipeline (samples in
+/// microseconds, elapsed span in seconds).
+pub type LatencyRecorder = LatencyRecorderAt<Instant>;
+
+/// Virtual-time recorder used by the device simulator. Samples and the
+/// elapsed span are clock cycles, so `throughput_rps` is requests per
+/// cycle and the `*_us` fields hold cycle counts.
+pub type TickRecorder = LatencyRecorderAt<u64>;
+
+impl<T: Timeline> Default for LatencyRecorderAt<T> {
+    fn default() -> LatencyRecorderAt<T> {
+        LatencyRecorderAt {
+            samples: Vec::new(),
+            started: None,
+            finished: None,
+            first_record: None,
+            completed: 0,
+        }
+    }
+}
+
+impl<T: Timeline> LatencyRecorderAt<T> {
+    pub fn new() -> LatencyRecorderAt<T> {
+        LatencyRecorderAt::default()
     }
 
-    pub fn start(&mut self) {
-        self.started = Some(Instant::now());
+    /// Mark the start of the measured span.
+    pub fn start_at(&mut self, now: T) {
+        self.started = Some(now);
     }
 
-    pub fn record(&mut self, latency: Duration) {
-        let now = Instant::now();
-        self.samples_us.push(latency.as_secs_f64() * 1e6);
+    /// Record one completed request: its latency, and the completion
+    /// time that closes the elapsed span.
+    pub fn record_at(&mut self, now: T, latency: T::Wait) {
+        self.samples.push(T::wait_value(latency));
         self.completed += 1;
         if self.first_record.is_none() {
             self.first_record = Some(now);
@@ -42,27 +77,42 @@ impl LatencyRecorder {
 
     pub fn report(&self) -> ThroughputReport {
         // elapsed span: explicit start to last record, falling back to
-        // first-record-to-last-record when `start()` was never called.
+        // first-record-to-last-record when `start` was never called.
         let elapsed = match (self.started.or(self.first_record), self.finished) {
-            (Some(a), Some(b)) => b.duration_since(a).as_secs_f64(),
+            (Some(a), Some(b)) => T::span_value(b.since(a)),
             _ => 0.0,
         };
-        let summary = Summary::of(&self.samples_us);
+        let summary = Summary::of(&self.samples);
         ThroughputReport {
             requests: self.completed,
             elapsed_s: elapsed,
             throughput_rps: if elapsed > 0.0 { self.completed as f64 / elapsed } else { 0.0 },
             latency_mean_us: summary.map_or(0.0, |s| s.mean),
-            latency_p50_us: Summary::percentile(&self.samples_us, 50.0).unwrap_or(0.0),
-            latency_p99_us: Summary::percentile(&self.samples_us, 99.0).unwrap_or(0.0),
+            latency_p50_us: Summary::percentile(&self.samples, 50.0).unwrap_or(0.0),
+            latency_p99_us: Summary::percentile(&self.samples, 99.0).unwrap_or(0.0),
             latency_max_us: summary.map_or(0.0, |s| s.max),
         }
     }
 }
 
+impl LatencyRecorder {
+    /// Mark the start of the measured span (wall clock).
+    pub fn start(&mut self) {
+        self.start_at(Instant::now());
+    }
+
+    /// Record one completed wall-clock latency.
+    pub fn record(&mut self, latency: Duration) {
+        self.record_at(Instant::now(), latency);
+    }
+}
+
 /// Final serving report (printed by the NID example, quoted in
-/// EXPERIMENTS.md).
-#[derive(Debug, Clone, Copy)]
+/// EXPERIMENTS.md). Produced by [`LatencyRecorder`] with wall-clock
+/// units (seconds / microseconds); when produced by a [`TickRecorder`]
+/// every field is in clock cycles (and `throughput_rps` is requests per
+/// cycle).
+#[derive(Debug, Clone, Copy, PartialEq)]
 pub struct ThroughputReport {
     pub requests: usize,
     pub elapsed_s: f64,
@@ -73,11 +123,53 @@ pub struct ThroughputReport {
     pub latency_max_us: f64,
 }
 
+impl ThroughputReport {
+    pub fn to_json(&self) -> Json {
+        let mut j = Json::obj();
+        j.set("requests", Json::from_i64(self.requests as i64));
+        j.set("elapsed_s", Json::Num(self.elapsed_s));
+        j.set("throughput_rps", Json::Num(self.throughput_rps));
+        j.set("latency_mean_us", Json::Num(self.latency_mean_us));
+        j.set("latency_p50_us", Json::Num(self.latency_p50_us));
+        j.set("latency_p99_us", Json::Num(self.latency_p99_us));
+        j.set("latency_max_us", Json::Num(self.latency_max_us));
+        j
+    }
+
+    pub fn from_json(j: &Json) -> Result<ThroughputReport> {
+        Ok(ThroughputReport {
+            requests: j.get("requests").as_usize().context("throughput report: requests")?,
+            elapsed_s: j.get("elapsed_s").as_f64().context("throughput report: elapsed_s")?,
+            throughput_rps: j
+                .get("throughput_rps")
+                .as_f64()
+                .context("throughput report: throughput_rps")?,
+            latency_mean_us: j
+                .get("latency_mean_us")
+                .as_f64()
+                .context("throughput report: latency_mean_us")?,
+            latency_p50_us: j
+                .get("latency_p50_us")
+                .as_f64()
+                .context("throughput report: latency_p50_us")?,
+            latency_p99_us: j
+                .get("latency_p99_us")
+                .as_f64()
+                .context("throughput report: latency_p99_us")?,
+            latency_max_us: j
+                .get("latency_max_us")
+                .as_f64()
+                .context("throughput report: latency_max_us")?,
+        })
+    }
+}
+
 impl std::fmt::Display for ThroughputReport {
     fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
         write!(
             f,
-            "{} requests in {:.3}s -> {:.0} req/s; latency mean {:.0}us p50 {:.0}us p99 {:.0}us max {:.0}us",
+            "{} requests in {:.3}s -> {:.0} req/s; latency mean {:.0}us p50 {:.0}us \
+             p99 {:.0}us max {:.0}us",
             self.requests,
             self.elapsed_s,
             self.throughput_rps,
@@ -120,5 +212,40 @@ mod tests {
         assert!(rep.elapsed_s > 0.0, "elapsed {} must be nonzero", rep.elapsed_s);
         assert!(rep.throughput_rps > 0.0, "rps {} must be nonzero", rep.throughput_rps);
         assert!((rep.latency_mean_us - 200.0).abs() < 1.0);
+    }
+
+    /// On the virtual clock everything is cycles: a request completing
+    /// at cycle 400 with 150 cycles of latency contributes a 150-cycle
+    /// sample, and the elapsed span is measured in cycles too.
+    #[test]
+    fn tick_recorder_counts_cycles() {
+        let mut r = TickRecorder::new();
+        r.start_at(0);
+        r.record_at(200, 50);
+        r.record_at(400, 150);
+        let rep = r.report();
+        assert_eq!(rep.requests, 2);
+        assert_eq!(rep.elapsed_s, 400.0); // cycles, not seconds
+        assert_eq!(rep.latency_mean_us, 100.0); // cycles, not us
+        assert_eq!(rep.latency_max_us, 150.0);
+        assert_eq!(rep.throughput_rps, 2.0 / 400.0); // requests per cycle
+    }
+
+    /// ThroughputReport serializes through util::json and roundtrips
+    /// exactly (the CLI JSON path depends on this).
+    #[test]
+    fn throughput_report_json_roundtrip() {
+        let rep = ThroughputReport {
+            requests: 1000,
+            elapsed_s: 1.25,
+            throughput_rps: 800.0,
+            latency_mean_us: 42.5,
+            latency_p50_us: 40.0,
+            latency_p99_us: 99.0,
+            latency_max_us: 123.0,
+        };
+        let text = rep.to_json().to_string();
+        let back = ThroughputReport::from_json(&Json::parse(&text).unwrap()).unwrap();
+        assert_eq!(back, rep);
     }
 }

@@ -8,6 +8,14 @@
 //! batch size, and a metrics collector tracks latency/throughput for the
 //! paper-style reports (EXPERIMENTS.md §E13).
 //!
+//! The batcher and recorder are generic over a [`Timeline`]
+//! (`vclock`): the pipeline instantiates them on wall-clock `Instant`s,
+//! while the simulated accelerator card (`device/`) reuses the same
+//! components on a virtual `u64` cycle clock ([`TickBatcher`],
+//! [`TickRecorder`]) where byte-determinism is required. The pipeline
+//! itself is the single-unit real-time configuration of that device
+//! layer: its feeder/collector loop is `device::serve::serve_unit`.
+//!
 //! tokio is unavailable in the offline registry (DESIGN.md §8); OS threads
 //! with `sync_channel` are a faithful — arguably more faithful — model of
 //! the paper's dataflow semantics.
@@ -15,7 +23,9 @@
 mod batcher;
 mod metrics;
 mod pipeline;
+mod vclock;
 
-pub use batcher::{Batch, Batcher};
-pub use metrics::{LatencyRecorder, ThroughputReport};
+pub use batcher::{Batch, BatchAt, Batcher, BatcherAt, TickBatch, TickBatcher};
+pub use metrics::{LatencyRecorder, LatencyRecorderAt, ThroughputReport, TickRecorder};
 pub use pipeline::{Pipeline, PipelineConfig, Request, Response};
+pub use vclock::Timeline;

@@ -16,14 +16,15 @@
 
 use std::path::PathBuf;
 use std::sync::mpsc::{sync_channel, Receiver, SyncSender};
-use std::time::{Duration, Instant};
+use std::time::Duration;
 
 use anyhow::{Context, Result};
 
+use crate::device::serve::ServeConfig;
 use crate::runtime::Engine;
 
-use super::batcher::{Batch, Batcher};
-use super::metrics::{LatencyRecorder, ThroughputReport};
+use super::batcher::Batch;
+use super::metrics::ThroughputReport;
 
 /// One inference request.
 #[derive(Debug, Clone)]
@@ -110,10 +111,8 @@ impl Pipeline {
         };
 
         let barrier = std::sync::Barrier::new(n_layers + 1);
-        let mut responses = Vec::with_capacity(requests.len());
-        let mut recorder = LatencyRecorder::new();
 
-        std::thread::scope(|scope| -> Result<()> {
+        let (responses, report) = std::thread::scope(|scope| -> Result<_> {
             // build the channel chain
             let mut senders: Vec<SyncSender<Batch>> = Vec::new();
             let mut receivers: Vec<Receiver<Batch>> = Vec::new();
@@ -162,47 +161,19 @@ impl Pipeline {
             let final_rx = rx_opt.take().unwrap();
 
             barrier.wait(); // all kernels compiled; start the clock
-            recorder.start();
 
-            // feeder (this thread): batch and push
-            let mut batcher = Batcher::new(row_len, self.cfg.batch, self.cfg.max_wait);
-            let expected = requests.len();
-            let feeder = scope.spawn(move || -> Result<()> {
-                for req in requests {
-                    if let Some(gap) = self.cfg.arrival_gap {
-                        std::thread::sleep(gap);
-                    }
-                    if let Some(b) = batcher.push(req.id, &req.data, Instant::now()) {
-                        feeder_tx.send(b).ok();
-                    } else if let Some(b) = batcher.poll(Instant::now()) {
-                        feeder_tx.send(b).ok();
-                    }
-                }
-                if let Some(b) = batcher.flush_remaining() {
-                    feeder_tx.send(b).ok();
-                }
-                Ok(())
-            });
-
-            // collector (this thread)
-            while responses.len() < expected {
-                let batch = final_rx
-                    .recv()
-                    .context("pipeline closed before all responses arrived")?;
-                let now = Instant::now();
-                for (i, (&id, &stamp)) in batch.ids.iter().zip(&batch.stamps).enumerate() {
-                    let start = i * batch.row_len;
-                    let output = batch.data[start..start + batch.row_len].to_vec();
-                    let latency = now.duration_since(stamp);
-                    recorder.record(latency);
-                    responses.push(Response { id, output, latency });
-                }
-            }
-            feeder.join().expect("feeder panicked")?;
-            Ok(())
+            // the worker chain is one serving unit; the device layer's
+            // real-time front does the feeding, batching, collection,
+            // and latency accounting
+            let serve_cfg = ServeConfig {
+                row_len,
+                batch: self.cfg.batch,
+                max_wait: self.cfg.max_wait,
+                arrival_gap: self.cfg.arrival_gap,
+            };
+            crate::device::serve::serve_unit(feeder_tx, &final_rx, requests, &serve_cfg)
         })?;
 
-        let report = recorder.report();
         Ok((responses, report))
     }
 }

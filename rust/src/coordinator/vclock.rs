@@ -1,0 +1,104 @@
+//! Virtual-clock abstraction for the serving components.
+//!
+//! The batcher and the latency recorder were written against wall-clock
+//! [`Instant`]s, which the real-time serving pipeline needs — but the
+//! simulated accelerator card (`device::card`) runs in *virtual* time
+//! (u64 clock cycles) and must be byte-deterministic. [`Timeline`]
+//! abstracts the two: `Instant` for real time, `u64` cycle counts for
+//! simulated time. [`Batcher`](super::Batcher) and
+//! [`LatencyRecorder`](super::LatencyRecorder) are thin `Instant`
+//! instantiations of the generic cores, so existing callers are
+//! unaffected, while the device scheduler reuses the exact same
+//! fill/deadline-flush and percentile machinery on cycle counts.
+
+use std::time::{Duration, Instant};
+
+/// A point on a timeline: wall-clock [`Instant`]s or virtual `u64`
+/// clock cycles. `Wait` is the corresponding span type
+/// ([`Duration`] / `u64` cycles).
+pub trait Timeline: Copy {
+    type Wait: Copy + PartialOrd;
+
+    /// Span from `earlier` to `self` (saturating at zero).
+    fn since(self, earlier: Self) -> Self::Wait;
+
+    /// The time point `wait` after `self`.
+    fn advance(self, wait: Self::Wait) -> Self;
+
+    /// A wait as a latency sample: microseconds for wall time, cycles
+    /// for virtual time.
+    fn wait_value(wait: Self::Wait) -> f64;
+
+    /// A wait as an elapsed span: seconds for wall time, cycles for
+    /// virtual time.
+    fn span_value(wait: Self::Wait) -> f64;
+}
+
+impl Timeline for Instant {
+    type Wait = Duration;
+
+    fn since(self, earlier: Instant) -> Duration {
+        self.duration_since(earlier)
+    }
+
+    fn advance(self, wait: Duration) -> Instant {
+        self + wait
+    }
+
+    fn wait_value(wait: Duration) -> f64 {
+        wait.as_secs_f64() * 1e6
+    }
+
+    fn span_value(wait: Duration) -> f64 {
+        wait.as_secs_f64()
+    }
+}
+
+/// Virtual time: a clock-cycle count. Latency samples and elapsed spans
+/// are both plain cycle counts.
+impl Timeline for u64 {
+    type Wait = u64;
+
+    fn since(self, earlier: u64) -> u64 {
+        self.saturating_sub(earlier)
+    }
+
+    fn advance(self, wait: u64) -> u64 {
+        self + wait
+    }
+
+    fn wait_value(wait: u64) -> f64 {
+        wait as f64
+    }
+
+    fn span_value(wait: u64) -> f64 {
+        wait as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn instant_timeline_roundtrips() {
+        let t0 = Instant::now();
+        let t1 = t0.advance(Duration::from_micros(250));
+        assert_eq!(t1.since(t0), Duration::from_micros(250));
+        // saturates instead of panicking when the order is reversed
+        assert_eq!(t0.since(t1), Duration::ZERO);
+        assert!((Instant::wait_value(Duration::from_micros(250)) - 250.0).abs() < 1e-9);
+        assert!((Instant::span_value(Duration::from_millis(1500)) - 1.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn cycle_timeline_roundtrips() {
+        let t0 = 100u64;
+        let t1 = t0.advance(40);
+        assert_eq!(t1, 140);
+        assert_eq!(t1.since(t0), 40);
+        assert_eq!(t0.since(t1), 0);
+        assert_eq!(u64::wait_value(40), 40.0);
+        assert_eq!(u64::span_value(40), 40.0);
+    }
+}

@@ -1,0 +1,188 @@
+//! Deterministic seeded arrival processes for the device simulator.
+//!
+//! Three request-stream shapes, all driven by [`Pcg32`] so the same
+//! seed reproduces the same arrival trace bit-for-bit:
+//!
+//! * **Poisson** — memoryless traffic: exponential inter-arrival gaps
+//!   around a mean, the standard open-loop load model.
+//! * **Bursty** — a two-state Markov-modulated Poisson process that
+//!   alternates geometric-length runs of fast and slow traffic, the
+//!   classic "bursts then lulls" pattern that stresses queueing.
+//! * **Diurnal** — a Poisson process whose mean gap swings sinusoidally
+//!   over a long period, modeling a day/night load curve.
+//!
+//! Times are virtual clock cycles. Internally the generator accumulates
+//! in `f64` and rounds once per arrival, so the integer cycle stream is
+//! monotone non-decreasing and free of cumulative rounding drift.
+
+use anyhow::{ensure, Result};
+
+use crate::util::rng::Pcg32;
+
+/// An arrival-process specification. Gaps are mean inter-arrival times
+/// in clock cycles.
+#[derive(Debug, Clone, PartialEq)]
+pub enum ArrivalProcess {
+    /// Exponential inter-arrival gaps with the given mean.
+    Poisson { mean_gap: f64 },
+    /// Two-state Markov-modulated Poisson: runs of `fast_gap` traffic
+    /// alternating with runs of `slow_gap` traffic; each state persists
+    /// for a geometric number of arrivals with mean `mean_run`.
+    Bursty { fast_gap: f64, slow_gap: f64, mean_run: f64 },
+    /// Poisson with a sinusoidally modulated mean gap:
+    /// `mean_gap * (1 + swing * sin(2π t / period))`, `swing ∈ [0, 1)`.
+    Diurnal { mean_gap: f64, swing: f64, period: f64 },
+}
+
+impl ArrivalProcess {
+    pub fn validate(&self) -> Result<()> {
+        match *self {
+            ArrivalProcess::Poisson { mean_gap } => {
+                ensure!(mean_gap > 0.0, "poisson arrival: mean_gap must be > 0, got {mean_gap}");
+            }
+            ArrivalProcess::Bursty { fast_gap, slow_gap, mean_run } => {
+                ensure!(fast_gap > 0.0, "bursty arrival: fast_gap must be > 0, got {fast_gap}");
+                ensure!(slow_gap > 0.0, "bursty arrival: slow_gap must be > 0, got {slow_gap}");
+                ensure!(mean_run >= 1.0, "bursty arrival: mean_run must be >= 1, got {mean_run}");
+            }
+            ArrivalProcess::Diurnal { mean_gap, swing, period } => {
+                ensure!(mean_gap > 0.0, "diurnal arrival: mean_gap must be > 0, got {mean_gap}");
+                ensure!(
+                    (0.0..1.0).contains(&swing),
+                    "diurnal arrival: swing must be in [0, 1), got {swing}"
+                );
+                ensure!(period > 0.0, "diurnal arrival: period must be > 0, got {period}");
+            }
+        }
+        Ok(())
+    }
+
+    /// Short name for reports ("poisson", "bursty", "diurnal").
+    pub fn name(&self) -> &'static str {
+        match self {
+            ArrivalProcess::Poisson { .. } => "poisson",
+            ArrivalProcess::Bursty { .. } => "bursty",
+            ArrivalProcess::Diurnal { .. } => "diurnal",
+        }
+    }
+
+    /// The long-run mean inter-arrival gap, for load estimates.
+    pub fn mean_gap(&self) -> f64 {
+        match *self {
+            ArrivalProcess::Poisson { mean_gap } => mean_gap,
+            // states have equal mean run lengths, so each contributes
+            // half the arrivals
+            ArrivalProcess::Bursty { fast_gap, slow_gap, .. } => 0.5 * (fast_gap + slow_gap),
+            // the sinusoid averages out over a full period
+            ArrivalProcess::Diurnal { mean_gap, .. } => mean_gap,
+        }
+    }
+}
+
+/// Seeded generator producing a monotone stream of arrival times.
+#[derive(Debug)]
+pub struct ArrivalGen {
+    process: ArrivalProcess,
+    rng: Pcg32,
+    /// Exact (unrounded) time of the last arrival, in cycles.
+    clock: f64,
+    /// Bursty state: currently in the fast phase?
+    fast: bool,
+}
+
+impl ArrivalGen {
+    pub fn new(process: ArrivalProcess, seed: u64) -> Result<ArrivalGen> {
+        process.validate()?;
+        Ok(ArrivalGen { process, rng: Pcg32::new(seed), clock: 0.0, fast: true })
+    }
+
+    /// Draw from Exp(mean): `-ln(1 - u) * mean`, u ∈ [0, 1). The
+    /// argument of `ln` is in (0, 1], so the draw is finite and >= 0.
+    fn exp_gap(&mut self, mean: f64) -> f64 {
+        let u = self.rng.next_f64();
+        -(1.0 - u).ln() * mean
+    }
+
+    /// The next arrival time in cycles. Consecutive calls are monotone
+    /// non-decreasing (several arrivals may round to the same cycle).
+    pub fn next_time(&mut self) -> u64 {
+        let gap = match self.process {
+            ArrivalProcess::Poisson { mean_gap } => self.exp_gap(mean_gap),
+            ArrivalProcess::Bursty { fast_gap, slow_gap, mean_run } => {
+                let mean = if self.fast { fast_gap } else { slow_gap };
+                let gap = self.exp_gap(mean);
+                // geometric run length: leave the state with prob 1/mean_run
+                if self.rng.next_f64() * mean_run < 1.0 {
+                    self.fast = !self.fast;
+                }
+                gap
+            }
+            ArrivalProcess::Diurnal { mean_gap, swing, period } => {
+                let phase = 2.0 * std::f64::consts::PI * self.clock / period;
+                let local = mean_gap * (1.0 + swing * phase.sin());
+                self.exp_gap(local)
+            }
+        };
+        self.clock += gap;
+        self.clock.round() as u64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn collect(process: ArrivalProcess, seed: u64, n: usize) -> Vec<u64> {
+        let mut g = ArrivalGen::new(process, seed).unwrap();
+        (0..n).map(|_| g.next_time()).collect()
+    }
+
+    #[test]
+    fn poisson_is_monotone_and_seeded() {
+        let p = ArrivalProcess::Poisson { mean_gap: 25.0 };
+        let a = collect(p.clone(), 42, 500);
+        assert!(a.windows(2).all(|w| w[0] <= w[1]), "arrival times must be monotone");
+        assert_eq!(a, collect(p.clone(), 42, 500), "same seed, same trace");
+        assert_ne!(a, collect(p, 43, 500), "different seed, different trace");
+    }
+
+    #[test]
+    fn poisson_mean_gap_is_close() {
+        let n = 4000;
+        let a = collect(ArrivalProcess::Poisson { mean_gap: 40.0 }, 7, n);
+        let mean = *a.last().unwrap() as f64 / n as f64;
+        assert!((mean - 40.0).abs() < 8.0, "empirical mean gap {mean} too far from 40");
+    }
+
+    #[test]
+    fn bursty_mixes_both_phases() {
+        let p = ArrivalProcess::Bursty { fast_gap: 2.0, slow_gap: 200.0, mean_run: 20.0 };
+        let a = collect(p, 11, 2000);
+        assert!(a.windows(2).all(|w| w[0] <= w[1]));
+        let gaps: Vec<u64> = a.windows(2).map(|w| w[1] - w[0]).collect();
+        let fast = gaps.iter().filter(|&&g| g < 20).count();
+        let slow = gaps.iter().filter(|&&g| g >= 20).count();
+        assert!(fast > 200 && slow > 200, "expected both phases, got fast={fast} slow={slow}");
+    }
+
+    #[test]
+    fn diurnal_rate_swings_with_phase() {
+        let p = ArrivalProcess::Diurnal { mean_gap: 10.0, swing: 0.9, period: 20_000.0 };
+        let a = collect(p, 3, 4000);
+        assert!(a.windows(2).all(|w| w[0] <= w[1]));
+        // the first quarter period (sin > 0) must be slower than the
+        // third quarter (sin < 0)
+        let q1 = a.iter().filter(|&&t| t < 5_000).count();
+        let q3 = a.iter().filter(|&&t| (10_000..15_000).contains(&t)).count();
+        assert!(q3 > q1 * 2, "diurnal swing not visible: q1={q1} q3={q3}");
+    }
+
+    #[test]
+    fn invalid_processes_are_rejected() {
+        assert!(ArrivalGen::new(ArrivalProcess::Poisson { mean_gap: 0.0 }, 1).is_err());
+        let bad_run = ArrivalProcess::Bursty { fast_gap: 1.0, slow_gap: 2.0, mean_run: 0.5 };
+        assert!(ArrivalGen::new(bad_run, 1).is_err());
+        let bad_swing = ArrivalProcess::Diurnal { mean_gap: 1.0, swing: 1.0, period: 100.0 };
+        assert!(ArrivalGen::new(bad_swing, 1).is_err());
+    }
+}

@@ -1,0 +1,501 @@
+//! Discrete-event simulation of a whole accelerator card.
+//!
+//! The card is N unit instances (each an MVU or a NID chain) fed by a
+//! dispatch policy. Time is a virtual `u64` cycle clock advanced
+//! event-to-event — arrivals, block completions, and policy flush
+//! deadlines — never cycle-by-cycle, so a million-request scenario is a
+//! few million events, not billions of cycles.
+//!
+//! Service times come from a pluggable [`ServiceModel`]: the fast path
+//! is a [`ServiceProfile`] calibrated once per occupancy from the
+//! engine's cached cycle-accurate summaries (`ChainSummary` /
+//! `SimSummary`); the slow path (`eval::Session::evaluate_device` with
+//! `slow = true`) runs the actual chain kernel per dispatch for
+//! spot-validation. Both produce identical summaries because the
+//! kernels themselves are deterministic.
+//!
+//! Determinism: the event loop is single-threaded, every tie at a given
+//! cycle resolves in a fixed order (completions by ascending unit
+//! index, then arrivals in id order, then deadline flushes), arrivals
+//! are seeded PCG streams, and no wall-clock value ever enters the
+//! summary — so one seed + config yields byte-identical
+//! [`DeviceSummary`] JSON on every run and every thread count.
+
+use std::collections::VecDeque;
+
+use anyhow::{ensure, Result};
+
+use super::arrival::{ArrivalGen, ArrivalProcess};
+use super::report::{DelayStats, DeviceSummary, TracePoint, UnitStats};
+use super::scheduler::{Dispatch, PolicyKind, SchedulerPolicy, UnitView};
+use crate::coordinator::TickRecorder;
+
+/// Service-time source: cycles one unit needs to execute a dispatched
+/// block of `occupancy` requests.
+pub trait ServiceModel {
+    fn cycles(&mut self, occupancy: usize) -> Result<u64>;
+}
+
+/// Calibrated service times, one entry per block occupancy `1..=B`.
+/// This is the fast path: the cycle counts are looked up once from the
+/// engine's cached simulations and replayed for every dispatch.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ServiceProfile {
+    cycles: Vec<u64>,
+}
+
+impl ServiceProfile {
+    pub fn new(cycles: Vec<u64>) -> Result<ServiceProfile> {
+        ensure!(!cycles.is_empty(), "service profile needs at least occupancy 1");
+        ensure!(cycles.iter().all(|&c| c > 0), "service times must be nonzero");
+        Ok(ServiceProfile { cycles })
+    }
+
+    pub fn max_occupancy(&self) -> usize {
+        self.cycles.len()
+    }
+}
+
+impl ServiceModel for ServiceProfile {
+    fn cycles(&mut self, occupancy: usize) -> Result<u64> {
+        ensure!(
+            occupancy >= 1 && occupancy <= self.cycles.len(),
+            "service profile covers occupancy 1..={}, got {}",
+            self.cycles.len(),
+            occupancy
+        );
+        Ok(self.cycles[occupancy - 1])
+    }
+}
+
+/// Queue-depth traces stop growing past this many samples so a long
+/// overload run cannot balloon the summary.
+pub const TRACE_CAP: usize = 4096;
+
+/// One simulated-card scenario.
+#[derive(Debug, Clone, PartialEq)]
+pub struct DeviceConfig {
+    /// Unit instances on the card.
+    pub units: usize,
+    pub policy: PolicyKind,
+    pub arrival: ArrivalProcess,
+    /// Seed for the arrival process.
+    pub seed: u64,
+    /// Requests to push through the card.
+    pub requests: usize,
+    /// Sample the card-wide queue depth every this many cycles
+    /// (0 = tracing off).
+    pub trace_every: u64,
+}
+
+impl DeviceConfig {
+    pub fn new(units: usize, policy: PolicyKind, arrival: ArrivalProcess) -> DeviceConfig {
+        DeviceConfig { units, policy, arrival, seed: 1, requests: 1000, trace_every: 0 }
+    }
+
+    pub fn validate(&self) -> Result<()> {
+        ensure!(self.units >= 1, "device needs at least one unit");
+        ensure!(self.requests >= 1, "device needs at least one request");
+        self.policy.validate()?;
+        self.arrival.validate()
+    }
+}
+
+/// Full per-request timing, produced by [`run_card_traced`] for the
+/// property tests.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct RequestRecord {
+    pub id: u64,
+    pub unit: usize,
+    pub arrival: u64,
+    /// Service start of the block this request rode in.
+    pub start: u64,
+    pub done: u64,
+}
+
+/// A dispatched block sitting in (or at the head of) a unit's queue.
+#[derive(Debug)]
+struct Block {
+    ids: Vec<u64>,
+    service: u64,
+    started: u64,
+}
+
+#[derive(Debug, Default)]
+struct UnitState {
+    current: Option<Block>,
+    queue: VecDeque<Block>,
+    queued_requests: usize,
+    queued_service: u64,
+    requests: usize,
+    batches: usize,
+    busy_cycles: u64,
+    max_queue_depth: usize,
+}
+
+impl UnitState {
+    fn busy_until(&self) -> Option<u64> {
+        self.current.as_ref().map(|b| b.started + b.service)
+    }
+}
+
+struct Core<'a> {
+    service: &'a mut dyn ServiceModel,
+    units: Vec<UnitState>,
+    /// Arrival time per request id (filled as requests arrive).
+    arrivals: Vec<u64>,
+    wait_rec: TickRecorder,
+    sojourn_rec: TickRecorder,
+    records: Option<Vec<RequestRecord>>,
+    total_requests: usize,
+    total_batches: usize,
+    /// Time of the last completion so far.
+    end: u64,
+}
+
+impl Core<'_> {
+    fn views(&self, now: u64) -> Vec<UnitView> {
+        self.units
+            .iter()
+            .map(|u| {
+                let left = u.busy_until().map_or(0, |t| t.saturating_sub(now));
+                UnitView {
+                    busy_cycles_left: left,
+                    queued_batches: u.queue.len(),
+                    queued_requests: u.queued_requests,
+                    backlog_cycles: left + u.queued_service,
+                }
+            })
+            .collect()
+    }
+
+    /// Requests waiting anywhere on the card (held by the policy or
+    /// queued at a unit), excluding blocks in service.
+    fn depth(&self, held: usize) -> usize {
+        held + self.units.iter().map(|u| u.queued_requests).sum::<usize>()
+    }
+
+    fn apply(&mut self, now: u64, dispatches: Vec<Dispatch>) -> Result<()> {
+        for d in dispatches {
+            ensure!(
+                d.unit < self.units.len(),
+                "policy dispatched to unit {} of a {}-unit card",
+                d.unit,
+                self.units.len()
+            );
+            ensure!(!d.ids.is_empty(), "policy dispatched an empty block");
+            let service = self.service.cycles(d.ids.len())?;
+            ensure!(service > 0, "service model returned 0 cycles");
+            let block = Block { ids: d.ids, service, started: 0 };
+            if self.units[d.unit].current.is_none() {
+                self.start(d.unit, block, now);
+            } else {
+                let u = &mut self.units[d.unit];
+                u.queued_requests += block.ids.len();
+                u.queued_service += block.service;
+                u.queue.push_back(block);
+                u.max_queue_depth = u.max_queue_depth.max(u.queued_requests);
+            }
+        }
+        Ok(())
+    }
+
+    fn start(&mut self, unit: usize, mut block: Block, now: u64) {
+        block.started = now;
+        for &id in &block.ids {
+            let wait = now - self.arrivals[id as usize];
+            self.wait_rec.record_at(now, wait);
+        }
+        let u = &mut self.units[unit];
+        u.busy_cycles += block.service;
+        u.current = Some(block);
+    }
+
+    fn complete(&mut self, unit: usize, now: u64) {
+        let block = self.units[unit].current.take().expect("completing an idle unit");
+        for &id in &block.ids {
+            let arrival = self.arrivals[id as usize];
+            self.sojourn_rec.record_at(now, now - arrival);
+            if let Some(recs) = &mut self.records {
+                recs.push(RequestRecord { id, unit, arrival, start: block.started, done: now });
+            }
+        }
+        self.total_requests += block.ids.len();
+        self.total_batches += 1;
+        self.end = now;
+        let next = {
+            let u = &mut self.units[unit];
+            u.requests += block.ids.len();
+            u.batches += 1;
+            u.queue.pop_front().map(|b| {
+                u.queued_requests -= b.ids.len();
+                u.queued_service -= b.service;
+                b
+            })
+        };
+        if let Some(b) = next {
+            self.start(unit, b, now);
+        }
+    }
+}
+
+/// Run one scenario; returns the aggregate summary.
+pub fn run_card(cfg: &DeviceConfig, service: &mut dyn ServiceModel) -> Result<DeviceSummary> {
+    Ok(run_impl(cfg, service, false)?.0)
+}
+
+/// Like [`run_card`], additionally returning one [`RequestRecord`] per
+/// request (in completion order) for property tests.
+pub fn run_card_traced(
+    cfg: &DeviceConfig,
+    service: &mut dyn ServiceModel,
+) -> Result<(DeviceSummary, Vec<RequestRecord>)> {
+    run_impl(cfg, service, true)
+}
+
+fn run_impl(
+    cfg: &DeviceConfig,
+    service: &mut dyn ServiceModel,
+    traced: bool,
+) -> Result<(DeviceSummary, Vec<RequestRecord>)> {
+    cfg.validate()?;
+    let mut policy = cfg.policy.build()?;
+    let mut gen = ArrivalGen::new(cfg.arrival.clone(), cfg.seed)?;
+    let mut core = Core {
+        service,
+        units: (0..cfg.units).map(|_| UnitState::default()).collect(),
+        arrivals: vec![0; cfg.requests],
+        wait_rec: TickRecorder::new(),
+        sojourn_rec: TickRecorder::new(),
+        records: traced.then(|| Vec::with_capacity(cfg.requests)),
+        total_requests: 0,
+        total_batches: 0,
+        end: 0,
+    };
+    core.wait_rec.start_at(0);
+    core.sojourn_rec.start_at(0);
+    let mut trace: Vec<TracePoint> = Vec::new();
+    let mut next_id: u64 = 1;
+    let mut next_arrival: Option<(u64, u64)> = Some((gen.next_time(), 0));
+    let mut now: u64 = 0;
+
+    loop {
+        let completion = core.units.iter().filter_map(UnitState::busy_until).min();
+        let arrival_t = next_arrival.map(|(t, _)| t);
+        let flush = policy.next_flush();
+        let Some(t) = [completion, arrival_t, flush].into_iter().flatten().min() else {
+            // no scheduled events left: drain anything the policy still
+            // holds (e.g. a partial block whose deadline is far away
+            // relative to a finished arrival stream), then stop.
+            if policy.held() > 0 {
+                let views = core.views(now);
+                let ds = policy.drain(now, &views);
+                ensure!(!ds.is_empty(), "policy held {} requests but drained none", policy.held());
+                core.apply(now, ds)?;
+                continue;
+            }
+            break;
+        };
+        debug_assert!(t >= now, "event time {t} before clock {now}");
+
+        // queue depth is constant between events; sample the multiples
+        // of `trace_every` crossed on the way to `t`
+        if cfg.trace_every > 0 && trace.len() < TRACE_CAP {
+            let depth = core.depth(policy.held());
+            let mut s = (now / cfg.trace_every + 1) * cfg.trace_every;
+            while s <= t && trace.len() < TRACE_CAP {
+                trace.push(TracePoint { cycle: s, depth });
+                s += cfg.trace_every;
+            }
+        }
+        now = t;
+
+        // 1) block completions, ascending unit index
+        for i in 0..core.units.len() {
+            if core.units[i].busy_until() == Some(now) {
+                core.complete(i, now);
+            }
+        }
+        // 2) arrivals at exactly `now`, in id order
+        while let Some((t_arr, id)) = next_arrival {
+            if t_arr > now {
+                break;
+            }
+            core.arrivals[id as usize] = t_arr;
+            let views = core.views(now);
+            let ds = policy.on_request(now, id, &views);
+            core.apply(now, ds)?;
+            next_arrival = if (next_id as usize) < cfg.requests {
+                let t = gen.next_time();
+                let id = next_id;
+                next_id += 1;
+                Some((t, id))
+            } else {
+                None
+            };
+        }
+        // 3) deadline flushes due by `now`
+        while policy.next_flush().is_some_and(|d| d <= now) {
+            let views = core.views(now);
+            let ds = policy.on_flush(now, &views);
+            if ds.is_empty() {
+                break;
+            }
+            core.apply(now, ds)?;
+        }
+    }
+
+    ensure!(
+        core.total_requests == cfg.requests,
+        "device served {} of {} requests",
+        core.total_requests,
+        cfg.requests
+    );
+    let total_cycles = core.end;
+    ensure!(total_cycles > 0, "device finished at cycle 0");
+    let per_unit: Vec<UnitStats> = core
+        .units
+        .iter()
+        .enumerate()
+        .map(|(i, u)| UnitStats {
+            unit: i,
+            requests: u.requests,
+            batches: u.batches,
+            busy_cycles: u.busy_cycles,
+            utilization: u.busy_cycles as f64 / total_cycles as f64,
+            max_queue_depth: u.max_queue_depth,
+        })
+        .collect();
+    let summary = DeviceSummary {
+        policy: cfg.policy.name(),
+        arrival: cfg.arrival.name().to_string(),
+        units: cfg.units,
+        requests: core.total_requests,
+        total_cycles,
+        throughput_rpkc: core.total_requests as f64 / total_cycles as f64 * 1000.0,
+        mean_occupancy: core.total_requests as f64 / core.total_batches as f64,
+        wait: DelayStats::from_tick_report(&core.wait_rec.report()),
+        sojourn: DelayStats::from_tick_report(&core.sojourn_rec.report()),
+        per_unit,
+        trace,
+    };
+    Ok((summary, core.records.unwrap_or_default()))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn poisson_cfg(units: usize, policy: PolicyKind, gap: f64, requests: usize) -> DeviceConfig {
+        let mut cfg = DeviceConfig::new(units, policy, ArrivalProcess::Poisson { mean_gap: gap });
+        cfg.requests = requests;
+        cfg.seed = 9;
+        cfg
+    }
+
+    #[test]
+    fn conserves_requests_and_bounds_utilization() {
+        let cfg = poisson_cfg(3, PolicyKind::RoundRobin, 5.0, 400);
+        let mut svc = ServiceProfile::new(vec![10]).unwrap();
+        let (summary, records) = run_card_traced(&cfg, &mut svc).unwrap();
+        assert_eq!(summary.requests, 400);
+        assert_eq!(records.len(), 400);
+        let mut ids: Vec<u64> = records.iter().map(|r| r.id).collect();
+        ids.sort_unstable();
+        assert_eq!(ids, (0..400).collect::<Vec<u64>>(), "each id exactly once");
+        for r in &records {
+            assert!(r.arrival <= r.start && r.start < r.done);
+        }
+        assert_eq!(summary.per_unit.iter().map(|u| u.requests).sum::<usize>(), 400);
+        for u in &summary.per_unit {
+            assert!((0.0..=1.0).contains(&u.utilization), "utilization {}", u.utilization);
+        }
+        assert!(summary.throughput_rpkc > 0.0);
+        assert_eq!(summary.mean_occupancy, 1.0);
+    }
+
+    #[test]
+    fn fifo_within_each_unit() {
+        let cfg = poisson_cfg(2, PolicyKind::LeastLoaded, 2.0, 300);
+        let mut svc = ServiceProfile::new(vec![25]).unwrap();
+        let (_, records) = run_card_traced(&cfg, &mut svc).unwrap();
+        for unit in 0..2 {
+            let starts: Vec<(u64, u64)> = records
+                .iter()
+                .filter(|r| r.unit == unit)
+                .map(|r| (r.start, r.id))
+                .collect();
+            // completion order == start order on a FIFO unit; ids must
+            // be served in arrival order per unit
+            for w in starts.windows(2) {
+                assert!(w[0].0 <= w[1].0, "unit {unit} starts out of order");
+                assert!(w[0].1 < w[1].1, "unit {unit} serves ids out of arrival order");
+            }
+        }
+    }
+
+    #[test]
+    fn same_seed_same_summary_bytes() {
+        let cfg = poisson_cfg(4, PolicyKind::BatchAware { block: 8, max_wait: 64 }, 3.0, 500);
+        let mut a = ServiceProfile::new((1..=8).map(|o| 20 + 3 * o as u64).collect()).unwrap();
+        let mut b = a.clone();
+        let s1 = run_card(&cfg, &mut a).unwrap();
+        let s2 = run_card(&cfg, &mut b).unwrap();
+        assert_eq!(s1, s2);
+        assert_eq!(s1.to_json().to_string(), s2.to_json().to_string());
+    }
+
+    /// Blocked dispatch amortizes service: with a profile where a block
+    /// of 8 costs far less than 8 singles, batch-aware must beat
+    /// round-robin under overload.
+    #[test]
+    fn batching_wins_under_overload() {
+        let profile: Vec<u64> = (1..=8).map(|o| 40 + 2 * o as u64).collect();
+        let rr_cfg = poisson_cfg(2, PolicyKind::RoundRobin, 1.0, 600);
+        let mut svc = ServiceProfile::new(profile.clone()).unwrap();
+        let rr = run_card(&rr_cfg, &mut svc).unwrap();
+        let ba_cfg =
+            poisson_cfg(2, PolicyKind::BatchAware { block: 8, max_wait: 128 }, 1.0, 600);
+        let mut svc = ServiceProfile::new(profile).unwrap();
+        let ba = run_card(&ba_cfg, &mut svc).unwrap();
+        assert!(
+            ba.throughput_rpkc > rr.throughput_rpkc,
+            "batch-aware {} must beat round-robin {}",
+            ba.throughput_rpkc,
+            rr.throughput_rpkc
+        );
+        assert!(ba.mean_occupancy > 4.0, "blocks should fill under overload");
+    }
+
+    #[test]
+    fn trace_samples_on_schedule() {
+        let mut cfg = poisson_cfg(1, PolicyKind::RoundRobin, 2.0, 200);
+        cfg.trace_every = 50;
+        let mut svc = ServiceProfile::new(vec![10]).unwrap();
+        let summary = run_card(&cfg, &mut svc).unwrap();
+        assert!(!summary.trace.is_empty());
+        for t in &summary.trace {
+            assert_eq!(t.cycle % 50, 0);
+        }
+        let cycles: Vec<u64> = summary.trace.iter().map(|t| t.cycle).collect();
+        assert!(cycles.windows(2).all(|w| w[0] < w[1]), "trace strictly increasing");
+    }
+
+    #[test]
+    fn rejects_invalid_configs() {
+        let ok = ArrivalProcess::Poisson { mean_gap: 10.0 };
+        let mut svc = ServiceProfile::new(vec![10]).unwrap();
+        let cfg = DeviceConfig::new(0, PolicyKind::RoundRobin, ok.clone());
+        assert!(run_card(&cfg, &mut svc).is_err(), "0 units");
+        let mut cfg = DeviceConfig::new(1, PolicyKind::RoundRobin, ok);
+        cfg.requests = 0;
+        assert!(run_card(&cfg, &mut svc).is_err(), "0 requests");
+        assert!(ServiceProfile::new(vec![]).is_err());
+        assert!(ServiceProfile::new(vec![5, 0]).is_err());
+        // a profile only covers the occupancies it was calibrated for
+        let mut small = ServiceProfile::new(vec![10]).unwrap();
+        assert_eq!(small.max_occupancy(), 1);
+        assert!(small.cycles(2).is_err());
+        assert!(small.cycles(0).is_err());
+    }
+}

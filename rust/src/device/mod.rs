@@ -1,0 +1,46 @@
+//! Simulated accelerator card: N units, a traffic scheduler, and
+//! queueing metrics.
+//!
+//! The paper evaluates one MVU (or one NID chain) in isolation; this
+//! module asks the deployment question — what happens when a card full
+//! of replicated units serves a live request stream? It models the
+//! whole card in *simulated* time:
+//!
+//! * [`card`] — the discrete-event core: N unit instances, each a FIFO
+//!   queue plus an in-service block, advanced arrival-to-completion on
+//!   a virtual `u64` cycle clock. Service times come from a pluggable
+//!   [`ServiceModel`]: the calibrated [`ServiceProfile`] fast path
+//!   (cycle counts from the engine's cached simulations) or a slow
+//!   mode that runs the actual chain kernel per dispatch
+//!   (`eval::Session::evaluate_device` wires both).
+//! * [`scheduler`] — pluggable dispatch policies: round-robin,
+//!   least-loaded (join-shortest-queue), and a batch-aware policy that
+//!   holds requests to fill a block of B for the blocked multi-vector
+//!   datapath, reusing the serving batcher's deadline-flush semantics
+//!   on the virtual clock.
+//! * [`arrival`] — deterministic seeded arrival processes (Poisson,
+//!   bursty/Markov-modulated, diurnal) built on `util::rng`.
+//! * [`report`] — [`DeviceSummary`]: aggregate throughput, queueing
+//!   delay percentiles, per-unit utilization, queue-depth traces; JSON
+//!   through `util::json`.
+//! * [`serve`] — the real-time single-unit serving front
+//!   ([`serve_unit`]) that `coordinator::Pipeline` routes through.
+//!
+//! Everything is byte-deterministic for a given seed + config: the
+//! event loop is single-threaded, ties resolve in a fixed order, and no
+//! wall-clock value enters a summary. See DESIGN.md §Device subsystem.
+
+pub mod arrival;
+pub mod card;
+pub mod report;
+pub mod scheduler;
+pub mod serve;
+
+pub use arrival::{ArrivalGen, ArrivalProcess};
+pub use card::{
+    run_card, run_card_traced, DeviceConfig, RequestRecord, ServiceModel, ServiceProfile,
+    TRACE_CAP,
+};
+pub use report::{DelayStats, DeviceSummary, TracePoint, UnitStats};
+pub use scheduler::{Dispatch, PolicyKind, SchedulerPolicy, UnitView};
+pub use serve::{serve_unit, ServeConfig};

@@ -1,0 +1,296 @@
+//! Device-simulation summaries: queueing metrics per card and per unit.
+//!
+//! Everything here is derived purely from virtual-clock quantities
+//! (cycle counts), never from wall time, so a [`DeviceSummary`] — and
+//! its JSON rendering — is byte-identical across runs, machines, and
+//! engine thread counts for the same seed and config.
+
+use anyhow::{Context, Result};
+
+use crate::coordinator::ThroughputReport;
+use crate::util::json::Json;
+use crate::util::table::{fnum, Table};
+
+/// Percentiles of a delay distribution, in clock cycles.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct DelayStats {
+    pub mean: f64,
+    pub p50: f64,
+    pub p99: f64,
+    pub max: f64,
+}
+
+impl DelayStats {
+    /// Lift a [`TickRecorder`](crate::coordinator::TickRecorder) report
+    /// (whose `*_us` fields hold cycles) into named cycle stats.
+    pub fn from_tick_report(r: &ThroughputReport) -> DelayStats {
+        DelayStats {
+            mean: r.latency_mean_us,
+            p50: r.latency_p50_us,
+            p99: r.latency_p99_us,
+            max: r.latency_max_us,
+        }
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mut j = Json::obj();
+        j.set("mean", Json::Num(self.mean));
+        j.set("p50", Json::Num(self.p50));
+        j.set("p99", Json::Num(self.p99));
+        j.set("max", Json::Num(self.max));
+        j
+    }
+
+    pub fn from_json(j: &Json) -> Result<DelayStats> {
+        Ok(DelayStats {
+            mean: j.get("mean").as_f64().context("delay stats: mean")?,
+            p50: j.get("p50").as_f64().context("delay stats: p50")?,
+            p99: j.get("p99").as_f64().context("delay stats: p99")?,
+            max: j.get("max").as_f64().context("delay stats: max")?,
+        })
+    }
+}
+
+/// Per-unit load accounting.
+#[derive(Debug, Clone, PartialEq)]
+pub struct UnitStats {
+    pub unit: usize,
+    /// Requests this unit served.
+    pub requests: usize,
+    /// Dispatched blocks this unit served.
+    pub batches: usize,
+    /// Cycles the unit spent executing (not idle).
+    pub busy_cycles: u64,
+    /// `busy_cycles / total_cycles`, always in [0, 1].
+    pub utilization: f64,
+    /// High-water mark of requests waiting in this unit's queue
+    /// (excluding the block in service).
+    pub max_queue_depth: usize,
+}
+
+impl UnitStats {
+    pub fn to_json(&self) -> Json {
+        let mut j = Json::obj();
+        j.set("unit", Json::from_i64(self.unit as i64));
+        j.set("requests", Json::from_i64(self.requests as i64));
+        j.set("batches", Json::from_i64(self.batches as i64));
+        j.set("busy_cycles", Json::from_i64(self.busy_cycles as i64));
+        j.set("utilization", Json::Num(self.utilization));
+        j.set("max_queue_depth", Json::from_i64(self.max_queue_depth as i64));
+        j
+    }
+
+    pub fn from_json(j: &Json) -> Result<UnitStats> {
+        Ok(UnitStats {
+            unit: j.get("unit").as_usize().context("unit stats: unit")?,
+            requests: j.get("requests").as_usize().context("unit stats: requests")?,
+            batches: j.get("batches").as_usize().context("unit stats: batches")?,
+            busy_cycles: j.get("busy_cycles").as_i64().context("unit stats: busy_cycles")? as u64,
+            utilization: j.get("utilization").as_f64().context("unit stats: utilization")?,
+            max_queue_depth: j
+                .get("max_queue_depth")
+                .as_usize()
+                .context("unit stats: max_queue_depth")?,
+        })
+    }
+}
+
+/// One sample of the card-wide queue depth (requests waiting anywhere:
+/// held by the policy or queued at a unit, excluding blocks in service).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct TracePoint {
+    pub cycle: u64,
+    pub depth: usize,
+}
+
+/// Aggregate result of one device simulation.
+#[derive(Debug, Clone, PartialEq)]
+pub struct DeviceSummary {
+    /// Policy name (see `PolicyKind::name`).
+    pub policy: String,
+    /// Arrival-process name ("poisson", "bursty", "diurnal").
+    pub arrival: String,
+    pub units: usize,
+    /// Requests served (always equals the configured request count).
+    pub requests: usize,
+    /// Virtual time of the last completion.
+    pub total_cycles: u64,
+    /// Aggregate throughput in requests per thousand cycles.
+    pub throughput_rpkc: f64,
+    /// Mean requests per dispatched block (1.0 unless batch-aware).
+    pub mean_occupancy: f64,
+    /// Queueing delay: arrival to service start, in cycles.
+    pub wait: DelayStats,
+    /// Sojourn time: arrival to completion, in cycles.
+    pub sojourn: DelayStats,
+    pub per_unit: Vec<UnitStats>,
+    /// Queue-depth samples every `trace_every` cycles (empty when
+    /// tracing is off).
+    pub trace: Vec<TracePoint>,
+}
+
+impl DeviceSummary {
+    pub fn to_json(&self) -> Json {
+        let mut j = Json::obj();
+        j.set("policy", Json::Str(self.policy.clone()));
+        j.set("arrival", Json::Str(self.arrival.clone()));
+        j.set("units", Json::from_i64(self.units as i64));
+        j.set("requests", Json::from_i64(self.requests as i64));
+        j.set("total_cycles", Json::from_i64(self.total_cycles as i64));
+        j.set("throughput_rpkc", Json::Num(self.throughput_rpkc));
+        j.set("mean_occupancy", Json::Num(self.mean_occupancy));
+        j.set("wait_cycles", self.wait.to_json());
+        j.set("sojourn_cycles", self.sojourn.to_json());
+        j.set("per_unit", Json::Arr(self.per_unit.iter().map(UnitStats::to_json).collect()));
+        let trace: Vec<Json> = self
+            .trace
+            .iter()
+            .map(|t| {
+                let mut tj = Json::obj();
+                tj.set("cycle", Json::from_i64(t.cycle as i64));
+                tj.set("depth", Json::from_i64(t.depth as i64));
+                tj
+            })
+            .collect();
+        j.set("trace", Json::Arr(trace));
+        j
+    }
+
+    pub fn from_json(j: &Json) -> Result<DeviceSummary> {
+        let per_unit = j
+            .get("per_unit")
+            .as_arr()
+            .context("device summary: per_unit")?
+            .iter()
+            .map(UnitStats::from_json)
+            .collect::<Result<Vec<_>>>()?;
+        let trace = j
+            .get("trace")
+            .as_arr()
+            .context("device summary: trace")?
+            .iter()
+            .map(|tj| {
+                Ok(TracePoint {
+                    cycle: tj.get("cycle").as_i64().context("trace point: cycle")? as u64,
+                    depth: tj.get("depth").as_usize().context("trace point: depth")?,
+                })
+            })
+            .collect::<Result<Vec<_>>>()?;
+        Ok(DeviceSummary {
+            policy: j.get("policy").as_str().context("device summary: policy")?.to_string(),
+            arrival: j.get("arrival").as_str().context("device summary: arrival")?.to_string(),
+            units: j.get("units").as_usize().context("device summary: units")?,
+            requests: j.get("requests").as_usize().context("device summary: requests")?,
+            total_cycles: j.get("total_cycles").as_i64().context("device summary: total_cycles")?
+                as u64,
+            throughput_rpkc: j
+                .get("throughput_rpkc")
+                .as_f64()
+                .context("device summary: throughput_rpkc")?,
+            mean_occupancy: j
+                .get("mean_occupancy")
+                .as_f64()
+                .context("device summary: mean_occupancy")?,
+            wait: DelayStats::from_json(j.get("wait_cycles")).context("device summary: wait")?,
+            sojourn: DelayStats::from_json(j.get("sojourn_cycles"))
+                .context("device summary: sojourn")?,
+            per_unit,
+            trace,
+        })
+    }
+
+    /// Per-unit utilization table for the CLI text path.
+    pub fn unit_table(&self) -> Table {
+        let mut t = Table::new(vec!["unit", "requests", "batches", "busy", "util", "max queue"]);
+        for u in &self.per_unit {
+            t.row(vec![
+                u.unit.to_string(),
+                u.requests.to_string(),
+                u.batches.to_string(),
+                u.busy_cycles.to_string(),
+                fnum(u.utilization, 3),
+                u.max_queue_depth.to_string(),
+            ]);
+        }
+        t
+    }
+}
+
+impl std::fmt::Display for DeviceSummary {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "{} requests over {} units ({}, {}) in {} cycles -> {} req/kcycle; \
+             wait p50 {} p99 {} max {} cycles; occupancy {}",
+            self.requests,
+            self.units,
+            self.policy,
+            self.arrival,
+            self.total_cycles,
+            fnum(self.throughput_rpkc, 3),
+            fnum(self.wait.p50, 0),
+            fnum(self.wait.p99, 0),
+            fnum(self.wait.max, 0),
+            fnum(self.mean_occupancy, 2),
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> DeviceSummary {
+        DeviceSummary {
+            policy: "batch-aware(B=32,wait=256)".to_string(),
+            arrival: "poisson".to_string(),
+            units: 4,
+            requests: 2000,
+            total_cycles: 123_456,
+            throughput_rpkc: 16.2,
+            mean_occupancy: 30.5,
+            wait: DelayStats { mean: 120.0, p50: 100.0, p99: 400.0, max: 512.0 },
+            sojourn: DelayStats { mean: 500.0, p50: 450.0, p99: 900.0, max: 1024.0 },
+            per_unit: vec![
+                UnitStats {
+                    unit: 0,
+                    requests: 1001,
+                    batches: 32,
+                    busy_cycles: 110_000,
+                    utilization: 0.891,
+                    max_queue_depth: 64,
+                },
+                UnitStats {
+                    unit: 1,
+                    requests: 999,
+                    batches: 31,
+                    busy_cycles: 100_000,
+                    utilization: 0.81,
+                    max_queue_depth: 50,
+                },
+            ],
+            trace: vec![TracePoint { cycle: 1000, depth: 12 }],
+        }
+    }
+
+    #[test]
+    fn json_roundtrip_is_exact() {
+        let s = sample();
+        let text = s.to_json().to_string();
+        let back = DeviceSummary::from_json(&Json::parse(&text).unwrap()).unwrap();
+        assert_eq!(back, s);
+        // deterministic rendering: serialize twice, same bytes
+        assert_eq!(text, back.to_json().to_string());
+    }
+
+    #[test]
+    fn table_and_display_render() {
+        let s = sample();
+        let table = s.unit_table().render();
+        assert!(table.contains("util"));
+        assert!(table.contains("0.891"));
+        let line = s.to_string();
+        assert!(line.contains("req/kcycle"));
+        assert!(line.contains("p99 400"));
+    }
+}

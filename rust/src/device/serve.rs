@@ -1,0 +1,142 @@
+//! Real-time serving front of a single unit.
+//!
+//! [`serve_unit`] is the feeder/collector loop the dataflow
+//! [`Pipeline`](crate::coordinator::Pipeline) runs around its worker
+//! chain: batch incoming requests to the artifact batch size (with
+//! deadline flush), push them into the unit's input channel, collect
+//! completed batches from its output channel, and account per-request
+//! latency. The pipeline is exactly a one-unit device in real time —
+//! the simulated card (`device::card`) plays the same roles on the
+//! virtual clock across N units.
+
+use std::sync::mpsc::{Receiver, SyncSender};
+use std::time::{Duration, Instant};
+
+use anyhow::{Context, Result};
+
+use crate::coordinator::{Batch, Batcher, LatencyRecorder, Request, Response, ThroughputReport};
+
+/// Serving parameters for one unit (a subset of `PipelineConfig` plus
+/// the validated request row length).
+#[derive(Debug, Clone, Copy)]
+pub struct ServeConfig {
+    /// Elements per request row (validated against the manifest).
+    pub row_len: usize,
+    /// Artifact batch size.
+    pub batch: usize,
+    /// Batcher deadline-flush timeout.
+    pub max_wait: Duration,
+    /// Optional open-loop inter-arrival gap for the feeder.
+    pub arrival_gap: Option<Duration>,
+}
+
+/// Feed a finite request stream into a unit's input channel and collect
+/// all responses from its output channel. Returns responses in
+/// completion order plus the throughput report. The clock starts at the
+/// call, so run any setup (compilation, barriers) first.
+pub fn serve_unit(
+    feeder_tx: SyncSender<Batch>,
+    final_rx: &Receiver<Batch>,
+    requests: Vec<Request>,
+    cfg: &ServeConfig,
+) -> Result<(Vec<Response>, ThroughputReport)> {
+    let expected = requests.len();
+    let mut responses = Vec::with_capacity(expected);
+    let mut recorder = LatencyRecorder::new();
+    recorder.start();
+    std::thread::scope(|scope| -> Result<()> {
+        // feeder thread: batch and push
+        let feeder = scope.spawn(move || -> Result<()> {
+            let mut batcher = Batcher::new(cfg.row_len, cfg.batch, cfg.max_wait);
+            for req in requests {
+                if let Some(gap) = cfg.arrival_gap {
+                    std::thread::sleep(gap);
+                }
+                if let Some(b) = batcher.push(req.id, &req.data, Instant::now()) {
+                    feeder_tx.send(b).ok();
+                } else if let Some(b) = batcher.poll(Instant::now()) {
+                    feeder_tx.send(b).ok();
+                }
+            }
+            if let Some(b) = batcher.flush_remaining() {
+                feeder_tx.send(b).ok();
+            }
+            Ok(())
+        });
+
+        // collector (this thread)
+        while responses.len() < expected {
+            let batch =
+                final_rx.recv().context("pipeline closed before all responses arrived")?;
+            let now = Instant::now();
+            for (i, (&id, &stamp)) in batch.ids.iter().zip(&batch.stamps).enumerate() {
+                let start = i * batch.row_len;
+                let output = batch.data[start..start + batch.row_len].to_vec();
+                let latency = now.duration_since(stamp);
+                recorder.record(latency);
+                responses.push(Response { id, output, latency });
+            }
+        }
+        feeder.join().expect("feeder panicked")?;
+        Ok(())
+    })?;
+    Ok((responses, recorder.report()))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::mpsc::sync_channel;
+
+    /// A stand-in unit that increments every element — enough to verify
+    /// batching, padding, collection, and latency accounting without
+    /// PJRT artifacts.
+    #[test]
+    fn serves_through_an_echo_unit() {
+        let (tx_in, rx_in) = sync_channel::<Batch>(4);
+        let (tx_out, rx_out) = sync_channel::<Batch>(4);
+        let worker = std::thread::spawn(move || {
+            while let Ok(mut b) = rx_in.recv() {
+                for v in &mut b.data {
+                    *v += 1;
+                }
+                if tx_out.send(b).is_err() {
+                    break;
+                }
+            }
+        });
+        let requests: Vec<Request> =
+            (0..10).map(|id| Request { id, data: vec![id as i32, 2] }).collect();
+        let cfg = ServeConfig {
+            row_len: 2,
+            batch: 4,
+            max_wait: Duration::from_millis(1),
+            arrival_gap: None,
+        };
+        let (mut responses, report) = serve_unit(tx_in, &rx_out, requests, &cfg).unwrap();
+        worker.join().unwrap();
+        responses.sort_by_key(|r| r.id);
+        assert_eq!(responses.len(), 10);
+        for r in &responses {
+            assert_eq!(r.output, vec![r.id as i32 + 1, 3], "request {}", r.id);
+        }
+        assert_eq!(report.requests, 10);
+        assert!(report.throughput_rps > 0.0);
+    }
+
+    #[test]
+    fn reports_a_dead_unit_as_an_error() {
+        let (tx_in, _rx_in) = sync_channel::<Batch>(4);
+        let (tx_out, rx_out) = sync_channel::<Batch>(1);
+        drop(tx_out); // the unit died before producing anything
+        let requests: Vec<Request> = (0..3).map(|id| Request { id, data: vec![0] }).collect();
+        let cfg = ServeConfig {
+            row_len: 1,
+            batch: 4,
+            max_wait: Duration::from_millis(1),
+            arrival_gap: None,
+        };
+        let err = serve_unit(tx_in, &rx_out, requests, &cfg).unwrap_err();
+        assert!(err.to_string().contains("pipeline closed"), "got: {err:#}");
+    }
+}

@@ -22,8 +22,11 @@
 //! batch (in parallel, input order preserved), [`Session::evaluate_points`]
 //! whole sweeps, [`Session::evaluate_chain`] a multi-layer chain request
 //! ([`ChainRequest`], e.g. the NID MLP) through the next-event chain
-//! kernel, and [`Session::stream`] feeds inference requests through
-//! the [`coordinator::Pipeline`](crate::coordinator::Pipeline) serving
+//! kernel, [`Session::evaluate_device`] a whole simulated accelerator
+//! card ([`DeviceRequest`]: N replicated units behind a traffic
+//! scheduler, queueing metrics out), and [`Session::stream`] feeds
+//! inference requests through the
+//! [`coordinator::Pipeline`](crate::coordinator::Pipeline) serving
 //! stack. Errors are structured ([`EvalError`], wrapping
 //! [`ParamError`](crate::cfg::ParamError) where applicable), not strings.
 //!
@@ -50,6 +53,10 @@ use std::path::PathBuf;
 
 use crate::cfg::{ParamError, SweepPoint, ValidatedParams};
 use crate::coordinator::{Pipeline, PipelineConfig, Request, Response, ThroughputReport};
+use crate::device::{
+    self, ArrivalProcess, DeviceConfig, DeviceSummary, PolicyKind, RequestRecord, ServiceModel,
+    ServiceProfile,
+};
 use crate::estimate::Style;
 use crate::explore::{
     CacheStats, ChainSummary, ExploreConfig, Explorer, PointReport, SimSummary, StimulusStats,
@@ -146,6 +153,75 @@ impl ChainRequest {
     }
 }
 
+/// What each unit on a simulated card executes per dispatched block.
+#[derive(Debug, Clone)]
+pub enum DeviceWorkload {
+    /// A single MVU design point.
+    Point(ValidatedParams),
+    /// A multi-layer chain (e.g. the NID MLP) per unit.
+    Chain(Vec<ValidatedParams>),
+}
+
+impl DeviceWorkload {
+    /// Display name for errors and reports.
+    pub fn name(&self) -> String {
+        match self {
+            DeviceWorkload::Point(p) => p.name.clone(),
+            DeviceWorkload::Chain(ls) => {
+                ls.iter().map(|p| p.name.as_str()).collect::<Vec<_>>().join(">")
+            }
+        }
+    }
+}
+
+/// A whole-card simulation request: the per-unit workload, the card
+/// scenario (units, policy, arrival process, seed, request count), the
+/// simulation flow, and the service-time mode. Served by
+/// [`Session::evaluate_device`].
+#[derive(Debug, Clone)]
+pub struct DeviceRequest {
+    pub workload: DeviceWorkload,
+    pub card: DeviceConfig,
+    /// Output-decoupling FIFO depth used when measuring service times.
+    pub fifo_depth: usize,
+    /// `false` (default): calibrate a [`ServiceProfile`] once per block
+    /// occupancy from the engine's cached simulations, then replay it —
+    /// the fast path. `true`: run the actual kernel per dispatch
+    /// (spot-validation; identical summaries, far slower).
+    pub slow: bool,
+}
+
+impl DeviceRequest {
+    pub fn new(workload: DeviceWorkload, card: DeviceConfig) -> DeviceRequest {
+        DeviceRequest { workload, card, fifo_depth: DEFAULT_FIFO_DEPTH, slow: false }
+    }
+
+    /// The acceptance scenario: a card of `units` NID-MLP chains behind
+    /// a least-loaded scheduler under seeded Poisson traffic.
+    pub fn nid(units: usize) -> DeviceRequest {
+        DeviceRequest::new(
+            DeviceWorkload::Chain(crate::cfg::nid_layers()),
+            DeviceConfig::new(
+                units,
+                PolicyKind::LeastLoaded,
+                ArrivalProcess::Poisson { mean_gap: 50.0 },
+            ),
+        )
+    }
+
+    /// A card of single-MVU units running one design point.
+    pub fn point(p: ValidatedParams, units: usize) -> DeviceRequest {
+        DeviceRequest::new(
+            DeviceWorkload::Point(p),
+            DeviceConfig::new(
+                units,
+                PolicyKind::LeastLoaded,
+                ArrivalProcess::Poisson { mean_gap: 50.0 },
+            ),
+        )
+    }
+}
+
 /// The response: everything the facade knows about one evaluated point.
 #[derive(Debug, Clone, PartialEq)]
 pub struct Evaluation {
@@ -191,6 +267,9 @@ pub enum EvalError {
     Cache { message: String },
     /// The serving pipeline failed (missing artifacts, shape mismatch…).
     Pipeline { message: String },
+    /// The device simulation failed (invalid card config, a service
+    /// calibration that diverged from the reference, a policy bug).
+    Device { message: String },
     /// A sweep or batch failed; `index` is the smallest failing input
     /// index and `message` carries the underlying error chain.
     Sweep { index: usize, message: String },
@@ -204,6 +283,7 @@ impl fmt::Display for EvalError {
             EvalError::Estimate { point, message } => write!(f, "estimating {point}: {message}"),
             EvalError::Cache { message } => write!(f, "result cache: {message}"),
             EvalError::Pipeline { message } => write!(f, "serving pipeline: {message}"),
+            EvalError::Device { message } => write!(f, "device simulation: {message}"),
             // the message already names the failing point ("sweep point
             // N (…): …"); `index` is the programmatic handle
             EvalError::Sweep { message, .. } => f.write_str(message),
@@ -411,6 +491,113 @@ impl Session {
         })
     }
 
+    /// Simulate a whole accelerator card: `req.card.units` instances of
+    /// the workload behind the configured scheduler policy, driven by
+    /// the seeded arrival process on a discrete-event virtual clock.
+    /// Service times are the engine's cycle-accurate counts — calibrated
+    /// once per block occupancy through the result cache (fast path) or
+    /// measured by really running the kernel per dispatch (`slow`).
+    /// The summary is byte-deterministic for a given seed + config,
+    /// regardless of session thread count or service mode.
+    pub fn evaluate_device(&self, req: &DeviceRequest) -> Result<DeviceSummary, EvalError> {
+        Ok(self.run_device(req, false)?.0)
+    }
+
+    /// [`evaluate_device`](Self::evaluate_device) plus one
+    /// [`RequestRecord`] per request (completion order) for property
+    /// tests and traces.
+    pub fn evaluate_device_traced(
+        &self,
+        req: &DeviceRequest,
+    ) -> Result<(DeviceSummary, Vec<RequestRecord>), EvalError> {
+        self.run_device(req, true)
+    }
+
+    fn run_device(
+        &self,
+        req: &DeviceRequest,
+        traced: bool,
+    ) -> Result<(DeviceSummary, Vec<RequestRecord>), EvalError> {
+        let dev_err = |e: anyhow::Error| EvalError::Device {
+            message: format!("{} on {}: {e:#}", req.workload.name(), req.card.policy.name()),
+        };
+        let run = |svc: &mut dyn ServiceModel| {
+            if traced {
+                device::run_card_traced(&req.card, svc)
+            } else {
+                device::run_card(&req.card, svc).map(|s| (s, Vec::new()))
+            }
+        };
+        if req.slow {
+            let mut svc = KernelService { session: self, req };
+            run(&mut svc).map_err(dev_err)
+        } else {
+            let mut profile = self.calibrate_service(req)?;
+            run(&mut profile).map_err(dev_err)
+        }
+    }
+
+    /// Measure the workload's service time for every block occupancy the
+    /// policy can dispatch (`1..=B`), in parallel across the session's
+    /// thread pool; results come from the result cache on revisits and
+    /// are deterministic regardless of thread count.
+    fn calibrate_service(&self, req: &DeviceRequest) -> Result<ServiceProfile, EvalError> {
+        let occs: Vec<usize> = (1..=req.card.policy.max_occupancy()).collect();
+        let results = self
+            .explorer
+            .par_map(&occs, |_, &o| self.service_cycles(&req.workload, o, req.fifo_depth, true));
+        let mut cycles = Vec::with_capacity(occs.len());
+        for (i, r) in results.into_iter().enumerate() {
+            cycles.push(r.map_err(|e| EvalError::Device {
+                message: format!(
+                    "calibrating {} at occupancy {}: {e:#}",
+                    req.workload.name(),
+                    occs[i]
+                ),
+            })?);
+        }
+        ServiceProfile::new(cycles)
+            .map_err(|e| EvalError::Device { message: format!("{e:#}") })
+    }
+
+    /// One service-time measurement: the exec cycles of a cycle-accurate
+    /// run over `occupancy` vectors (ideal flow), via the result cache
+    /// or bypassing it (`cached = false`, the slow mode's per-dispatch
+    /// path). Divergence from the functional reference is an error —
+    /// this is where the slow mode's spot-validation bites.
+    fn service_cycles(
+        &self,
+        workload: &DeviceWorkload,
+        occupancy: usize,
+        fifo_depth: usize,
+        cached: bool,
+    ) -> anyhow::Result<u64> {
+        let none = StallPattern::None;
+        let (exec, matches) = match workload {
+            DeviceWorkload::Point(p) => {
+                let s = if cached {
+                    self.explorer.simulate_point(p, occupancy, fifo_depth, &none, &none)?
+                } else {
+                    self.explorer.simulate_point_uncached(p, occupancy, fifo_depth, &none, &none)?
+                };
+                (s.exec_cycles, s.matches_reference)
+            }
+            DeviceWorkload::Chain(ls) => {
+                let s = if cached {
+                    self.explorer.simulate_chain(ls, occupancy, fifo_depth, &none, &none)?
+                } else {
+                    self.explorer.simulate_chain_uncached(ls, occupancy, fifo_depth, &none, &none)?
+                };
+                (s.exec_cycles, s.matches_reference)
+            }
+        };
+        anyhow::ensure!(
+            matches,
+            "simulation diverged from the functional reference at occupancy {occupancy}"
+        );
+        Ok(exec as u64)
+    }
+
     /// Feed a finite request stream through the serving pipeline
     /// ([`coordinator::Pipeline`](crate::coordinator::Pipeline)): one OS
     /// thread per layer executing its AOT artifact, bounded channels as
@@ -441,6 +628,21 @@ impl Session {
         Pipeline::nid(artifacts_dir, cfg)
             .run(requests)
             .map_err(|e| EvalError::Pipeline { message: format!("{e:#}") })
+    }
+}
+
+/// Slow-mode service model: every dispatch really runs the kernel with
+/// the result cache bypassed, so the device loop doubles as a
+/// spot-validation of the calibrated profile — both modes must produce
+/// byte-identical summaries.
+struct KernelService<'a> {
+    session: &'a Session,
+    req: &'a DeviceRequest,
+}
+
+impl ServiceModel for KernelService<'_> {
+    fn cycles(&mut self, occupancy: usize) -> anyhow::Result<u64> {
+        self.session.service_cycles(&self.req.workload, occupancy, self.req.fifo_depth, false)
     }
 }
 
@@ -580,6 +782,58 @@ mod tests {
                 assert!(message.contains("deadlock"), "{message}");
             }
             other => panic!("expected EvalError::Sim, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn device_request_runs_a_point_workload_card() {
+        let s = Session::serial();
+        let mut req = DeviceRequest::point(point(), 2);
+        req.card.requests = 60;
+        req.card.seed = 5;
+        req.card.arrival = ArrivalProcess::Poisson { mean_gap: 20.0 };
+        let (sum, records) = s.evaluate_device_traced(&req).unwrap();
+        assert_eq!(sum.requests, 60);
+        assert_eq!(sum.units, 2);
+        assert_eq!(records.len(), 60);
+        for u in &sum.per_unit {
+            assert!((0.0..=1.0).contains(&u.utilization), "utilization {}", u.utilization);
+        }
+        // least-loaded singleton dispatches: every block has occupancy 1,
+        // so every service interval is the point's exec cycles
+        // (SF*NF + fill = 9 for the 16x8 pe4 simd8 point)
+        for r in &records {
+            assert_eq!(r.done - r.start, 9, "request {}", r.id);
+        }
+    }
+
+    /// The slow mode (kernel per dispatch, cache bypassed) must agree
+    /// byte-for-byte with the calibrated-profile fast path.
+    #[test]
+    fn slow_mode_matches_calibrated_profile() {
+        let s = Session::serial();
+        let mut req = DeviceRequest::point(point(), 2);
+        req.card.requests = 40;
+        req.card.seed = 3;
+        req.card.policy = PolicyKind::BatchAware { block: 4, max_wait: 32 };
+        req.card.arrival = ArrivalProcess::Bursty { fast_gap: 4.0, slow_gap: 60.0, mean_run: 8.0 };
+        let fast = s.evaluate_device(&req).unwrap();
+        req.slow = true;
+        let slow = s.evaluate_device(&req).unwrap();
+        assert_eq!(fast, slow);
+        assert_eq!(fast.to_json().to_string(), slow.to_json().to_string());
+    }
+
+    #[test]
+    fn device_errors_are_structured() {
+        let s = Session::serial();
+        let mut req = DeviceRequest::point(point(), 0); // invalid: no units
+        req.card.requests = 10;
+        match s.evaluate_device(&req) {
+            Err(EvalError::Device { message }) => {
+                assert!(message.contains("at least one unit"), "{message}");
+            }
+            other => panic!("expected EvalError::Device, got {other:?}"),
         }
     }
 

@@ -455,6 +455,27 @@ impl Explorer {
         if let Some(j) = self.cache.get_json(&key) {
             return SimSummary::from_json(&j);
         }
+        let sim = self.simulate_point_uncached(p, vectors, fifo_depth, in_stall, out_stall)?;
+        self.cache.put_json(&key, &sim.to_json())?;
+        Ok(sim)
+    }
+
+    /// [`simulate_point`](Self::simulate_point) without the result
+    /// cache: always runs the kernel (stimulus is still memoized). This
+    /// is the device simulator's slow spot-validation path — service
+    /// times measured by really executing the MVU per dispatch, which
+    /// must agree byte-for-byte with the cached profile.
+    pub fn simulate_point_uncached(
+        &self,
+        p: &ValidatedParams,
+        vectors: usize,
+        fifo_depth: usize,
+        in_stall: &StallPattern,
+        out_stall: &StallPattern,
+    ) -> Result<SimSummary> {
+        let seed = cache::stimulus_seed(p);
+        let ideal = matches!(in_stall, StallPattern::None)
+            && matches!(out_stall, StallPattern::None);
         let weights = self.stimulus.weights(p, seed, false);
         let inputs = self.stimulus.inputs(p, seed ^ 0x9e37_79b9_7f4a_7c15, vectors, false);
         // weight state shared sweep-wide, each piece built only for the
@@ -486,16 +507,14 @@ impl Explorer {
         for (x, y) in inputs.iter().zip(&rep.outputs) {
             matches &= &matvec(x, &weights, p.simd_type)? == y;
         }
-        let sim = SimSummary {
+        Ok(SimSummary {
             vectors,
             exec_cycles: rep.exec_cycles,
             stall_cycles: rep.stall_cycles,
             slots_consumed: rep.slots_consumed,
             fifo_max_occupancy: rep.fifo_max_occupancy,
             matches_reference: matches,
-        };
-        self.cache.put_json(&key, &sim.to_json())?;
-        Ok(sim)
+        })
     }
 
     /// Cached cycle-accurate **chain** simulation over the engine's
@@ -535,6 +554,24 @@ impl Explorer {
         if let Some(j) = self.cache.get_json(&key) {
             return ChainSummary::from_json(&j);
         }
+        let sum = self.simulate_chain_uncached(layers, vectors, fifo_depth, in_stall, out_stall)?;
+        self.cache.put_json(&key, &sum.to_json())?;
+        Ok(sum)
+    }
+
+    /// [`simulate_chain`](Self::simulate_chain) without the result
+    /// cache: always runs the chain kernel (stimulus is still
+    /// memoized). The device simulator's slow mode calls this per
+    /// dispatch to spot-validate the calibrated service profile.
+    pub fn simulate_chain_uncached(
+        &self,
+        layers: &[ValidatedParams],
+        vectors: usize,
+        fifo_depth: usize,
+        in_stall: &StallPattern,
+        out_stall: &StallPattern,
+    ) -> Result<ChainSummary> {
+        anyhow::ensure!(!layers.is_empty(), "empty chain");
         let mut weights: Vec<Arc<Matrix>> = Vec::with_capacity(layers.len());
         let mut thresholds: Vec<Option<Arc<Thresholds>>> = Vec::with_capacity(layers.len());
         let mut shared: Vec<SharedWeights> = Vec::with_capacity(layers.len());
@@ -583,7 +620,7 @@ impl Explorer {
             matches &= &v == y;
         }
         let bottleneck_ii = crate::sim::chain_bottleneck_ii(layers.iter().map(|p| p.params()));
-        let sum = ChainSummary {
+        Ok(ChainSummary {
             vectors,
             exec_cycles: rep.exec_cycles,
             first_out_cycle: rep.first_out_cycle,
@@ -598,9 +635,7 @@ impl Explorer {
                     slots_consumed: l.slots_consumed,
                 })
                 .collect(),
-        };
-        self.cache.put_json(&key, &sum.to_json())?;
-        Ok(sum)
+        })
     }
 }
 

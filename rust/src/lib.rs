@@ -32,6 +32,15 @@
 //!   simulator, the estimator, the parallel cached exploration engine,
 //!   and the serving pipeline.
 //!
+//! On top of both sits the simulated accelerator card ([`device`]): N
+//! replicated MVU/NID-chain units behind a pluggable traffic scheduler
+//! (round-robin, least-loaded, batch-aware), driven by seeded arrival
+//! processes on a discrete-event virtual clock whose service times are
+//! the engine's cached cycle counts — [`eval::DeviceRequest`] →
+//! [`eval::Session::evaluate_device`] → [`device::DeviceSummary`] with
+//! queueing-delay percentiles and per-unit utilization, byte-identical
+//! for a given seed across runs and thread counts.
+//!
 //! # Example: evaluate one design point
 //!
 //! ```
@@ -97,6 +106,7 @@
 
 pub mod cfg;
 pub mod coordinator;
+pub mod device;
 pub mod estimate;
 pub mod eval;
 pub mod explore;

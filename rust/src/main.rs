@@ -9,6 +9,7 @@
 //!   estimate  resource/timing/synth estimate for explicit parameters
 //!   tables    print Tables 4, 5 and 7
 //!   nid       serve the NID MLP through the dataflow pipeline (PJRT)
+//!   device    simulate a multi-unit accelerator card under seeded traffic
 //!   compile   demo the FINN-style compiler flow (lower -> fold -> analyze)
 
 use anyhow::{bail, Context, Result};
@@ -16,7 +17,8 @@ use anyhow::{bail, Context, Result};
 use finn_mvu::cfg::{DesignPoint, SimdType, ValidatedParams};
 use finn_mvu::coordinator::{PipelineConfig, Request};
 use finn_mvu::estimate::{estimate, Style};
-use finn_mvu::eval::{EvalRequest, Session, SessionConfig, SimOptions};
+use finn_mvu::device::{ArrivalProcess, PolicyKind};
+use finn_mvu::eval::{DeviceRequest, EvalRequest, Session, SessionConfig, SimOptions};
 use finn_mvu::explore::{points_to_json, points_to_table};
 use finn_mvu::util::json::Json;
 use finn_mvu::harness::{
@@ -31,6 +33,7 @@ use finn_mvu::runtime::{default_artifacts_dir, Manifest};
 use finn_mvu::sim::PIPELINE_STAGES;
 use finn_mvu::util::cli::Args;
 use finn_mvu::util::rng::Pcg32;
+use finn_mvu::util::table::fnum;
 
 const USAGE: &str = "\
 finn-mvu — RTL-vs-HLS co-design study of the FINN matrix-vector unit
@@ -48,6 +51,11 @@ COMMANDS:
   estimate  (same shape flags as run)
   tables    [--which 4|5|7]
   nid       [--requests N] [--batch N] [--artifacts DIR]
+  device    [--units N] [--policy rr|ll|batch] [--block N] [--max-wait CYC]
+            [--arrival poisson|bursty|diurnal] [--gap CYC] [--mean-run N]
+            [--swing F] [--period CYC] [--requests N] [--seed N]
+            [--workload nid|mvu (+ run shape flags)] [--slow]
+            [--trace-every CYC] [--threads N] [--json] [--pretty]
   compile   [--target-cycles N] [--lut-budget N]
   version
 ";
@@ -305,6 +313,83 @@ fn cmd_nid(a: &Args) -> Result<()> {
     Ok(())
 }
 
+fn cmd_device(a: &Args) -> Result<()> {
+    a.check_known(&[
+        "units", "policy", "block", "max-wait", "arrival", "gap", "mean-run", "swing", "period",
+        "requests", "seed", "workload", "slow", "trace-every", "threads", "json", "pretty",
+        "ifm-ch", "ifm-dim", "ofm-ch", "kd", "pe", "simd", "type",
+    ])
+    .map_err(|e| anyhow::anyhow!("{e}"))?;
+
+    let units = a.get_usize("units", 4)?;
+    let mut req = match a.get_or("workload", "nid") {
+        "nid" => DeviceRequest::nid(units),
+        "mvu" => DeviceRequest::point(params_from(a)?, units),
+        other => bail!("unknown workload {other:?} (nid|mvu)"),
+    };
+
+    req.card.policy = match a.get_or("policy", "ll") {
+        "rr" => PolicyKind::RoundRobin,
+        "ll" => PolicyKind::LeastLoaded,
+        "batch" => PolicyKind::BatchAware {
+            block: a.get_usize("block", 32)?,
+            max_wait: a.get_usize("max-wait", 256)? as u64,
+        },
+        other => bail!("unknown policy {other:?} (rr|ll|batch)"),
+    };
+    let gap = a.get_f64("gap", 50.0)?;
+    req.card.arrival = match a.get_or("arrival", "poisson") {
+        "poisson" => ArrivalProcess::Poisson { mean_gap: gap },
+        // bursty defaults: 4x faster in bursts, 4x slower between them
+        "bursty" => ArrivalProcess::Bursty {
+            fast_gap: gap / 4.0,
+            slow_gap: gap * 4.0,
+            mean_run: a.get_f64("mean-run", 64.0)?,
+        },
+        "diurnal" => ArrivalProcess::Diurnal {
+            mean_gap: gap,
+            swing: a.get_f64("swing", 0.8)?,
+            period: a.get_f64("period", gap * 200.0)?,
+        },
+        other => bail!("unknown arrival process {other:?} (poisson|bursty|diurnal)"),
+    };
+    req.card.seed = a.get_usize("seed", 1)? as u64;
+    req.card.requests = a.get_usize("requests", 2000)?;
+    req.card.trace_every = a.get_usize("trace-every", 0)? as u64;
+    req.slow = a.get_bool("slow");
+
+    let session = Session::new(SessionConfig {
+        threads: a.get_usize("threads", 0)?,
+        ..SessionConfig::default()
+    })?;
+    let summary = session.evaluate_device(&req)?;
+
+    if a.get_bool("json") {
+        let doc = summary.to_json();
+        if a.get_bool("pretty") {
+            println!("{}", doc.to_pretty(2));
+        } else {
+            println!("{doc}");
+        }
+    } else {
+        // no wall-clock values here: this output is byte-identical
+        // across runs and thread counts for the same flags
+        println!("card: {summary}");
+        println!(
+            "sojourn mean {} p50 {} p99 {} max {} cycles",
+            fnum(summary.sojourn.mean, 0),
+            fnum(summary.sojourn.p50, 0),
+            fnum(summary.sojourn.p99, 0),
+            fnum(summary.sojourn.max, 0),
+        );
+        println!("{}", summary.unit_table().render());
+        if !summary.trace.is_empty() {
+            println!("queue-depth trace: {} samples (use --json to dump)", summary.trace.len());
+        }
+    }
+    Ok(())
+}
+
 fn cmd_compile(a: &Args) -> Result<()> {
     let target = a.get_usize("target-cycles", 64)?;
     let budget = a.get_usize("lut-budget", usize::MAX / 2)?;
@@ -359,6 +444,7 @@ fn main() -> Result<()> {
         Some("estimate") => cmd_estimate(&args),
         Some("tables") => cmd_tables(&args),
         Some("nid") => cmd_nid(&args),
+        Some("device") => cmd_device(&args),
         Some("compile") => cmd_compile(&args),
         Some("version") => {
             println!("finn-mvu {}", finn_mvu::VERSION);

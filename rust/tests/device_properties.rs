@@ -1,0 +1,160 @@
+//! Properties of the simulated accelerator card (DESIGN.md §Device
+//! subsystem), across every scheduler policy:
+//!
+//!   * request conservation — every arrival completes exactly once, no
+//!     drops, no duplicates, and service within a unit is FIFO;
+//!   * sane accounting — arrival <= start <= done per request, per-unit
+//!     utilization in [0, 1];
+//!   * byte-determinism — the full `DeviceSummary` JSON is identical
+//!     across repeated runs and across engine thread counts {1, 2, 8}
+//!     (calibration fans out over the thread pool; the event loop itself
+//!     is single-threaded virtual time);
+//!   * the scheduling regression the subsystem exists to show: under
+//!     saturation, the batch-aware policy (B=32) must beat round-robin
+//!     on aggregate throughput by amortizing the pipeline fill.
+//!
+//! Run in CI under `--release` alongside the kernel-identity suites.
+
+use finn_mvu::cfg::{DesignPoint, ValidatedParams};
+use finn_mvu::device::{ArrivalProcess, PolicyKind};
+use finn_mvu::eval::{DeviceRequest, Session};
+
+/// A cheap fc MVU (16x8, PE 4, SIMD 8): 4b + 5 exec cycles for a block
+/// of b vectors, so batching has a measurable win and calibration stays
+/// fast even at B=32.
+fn point() -> ValidatedParams {
+    DesignPoint::fc("prop").in_features(16).out_features(8).pe(4).simd(8).build().unwrap()
+}
+
+fn policies() -> Vec<PolicyKind> {
+    vec![
+        PolicyKind::RoundRobin,
+        PolicyKind::LeastLoaded,
+        PolicyKind::BatchAware { block: 8, max_wait: 64 },
+    ]
+}
+
+#[test]
+fn requests_are_conserved_and_fifo_within_each_unit() {
+    let session = Session::serial();
+    for (ai, arrival) in [
+        ArrivalProcess::Poisson { mean_gap: 6.0 },
+        ArrivalProcess::Bursty { fast_gap: 2.0, slow_gap: 20.0, mean_run: 16.0 },
+        ArrivalProcess::Diurnal { mean_gap: 6.0, swing: 0.8, period: 400.0 },
+    ]
+    .into_iter()
+    .enumerate()
+    {
+        for policy in policies() {
+            let mut req = DeviceRequest::point(point(), 2);
+            req.card.policy = policy;
+            req.card.arrival = arrival.clone();
+            req.card.seed = 11 + ai as u64;
+            req.card.requests = 400;
+            let (summary, mut records) = session.evaluate_device_traced(&req).unwrap();
+            let label = format!("{} / {}", summary.policy, summary.arrival);
+
+            // conservation: ids 0..n, each exactly once
+            assert_eq!(records.len(), 400, "{label}: dropped/duplicated requests");
+            assert_eq!(summary.requests, 400, "{label}: summary request count");
+            let mut ids: Vec<u64> = records.iter().map(|r| r.id).collect();
+            ids.sort_unstable();
+            assert_eq!(ids, (0..400).collect::<Vec<u64>>(), "{label}: id set");
+
+            // per-request causality
+            for r in &records {
+                assert!(r.arrival <= r.start, "{label}: request {} started early", r.id);
+                assert!(r.start < r.done, "{label}: request {} zero service", r.id);
+            }
+
+            // FIFO within a unit: in start order, ids stay ascending
+            records.sort_by_key(|r| (r.unit, r.start, r.id));
+            for pair in records.windows(2) {
+                if pair[0].unit == pair[1].unit {
+                    assert!(
+                        pair[0].id < pair[1].id,
+                        "{label}: unit {} served {} before {}",
+                        pair[0].unit,
+                        pair[1].id,
+                        pair[0].id
+                    );
+                }
+            }
+
+            // accounting sanity
+            let served: usize = summary.per_unit.iter().map(|u| u.requests).sum();
+            assert_eq!(served, 400, "{label}: per-unit request counts");
+            for u in &summary.per_unit {
+                assert!(
+                    (0.0..=1.0).contains(&u.utilization),
+                    "{label}: unit {} utilization {} outside [0, 1]",
+                    u.unit,
+                    u.utilization
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn summaries_are_byte_identical_across_runs_and_thread_counts() {
+    // the acceptance scenario shape: a 4-unit NID-chain card, with a
+    // batch-aware policy so calibration really fans out over the pool
+    let req = {
+        let mut r = DeviceRequest::nid(4);
+        r.card.policy = PolicyKind::BatchAware { block: 4, max_wait: 128 };
+        r.card.seed = 7;
+        r.card.requests = 1200;
+        r.card.trace_every = 500;
+        r
+    };
+    let baseline = {
+        let s = Session::with_threads(1);
+        let json = s.evaluate_device(&req).unwrap().to_json().to_string();
+        // same session, second run: served from the result cache, same bytes
+        assert_eq!(s.evaluate_device(&req).unwrap().to_json().to_string(), json);
+        json
+    };
+    for threads in [2usize, 8] {
+        let s = Session::with_threads(threads);
+        assert_eq!(
+            s.evaluate_device(&req).unwrap().to_json().to_string(),
+            baseline,
+            "device summary diverged at {threads} engine threads"
+        );
+    }
+}
+
+#[test]
+fn batch_aware_beats_round_robin_at_saturation() {
+    // arrivals at 1 per 2 cycles against 4 units serving 4b + 5 cycles
+    // per block: round-robin (b = 1) offers 4/9 < 1/2 requests per cycle
+    // and saturates, while B=32 blocks amortize the fill to ~4.16
+    // cycles/request and keep up
+    let session = Session::serial();
+    let run = |policy: PolicyKind| {
+        let mut req = DeviceRequest::point(point(), 4);
+        req.card.policy = policy;
+        req.card.arrival = ArrivalProcess::Poisson { mean_gap: 2.0 };
+        req.card.seed = 3;
+        req.card.requests = 4000;
+        session.evaluate_device(&req).unwrap()
+    };
+    let rr = run(PolicyKind::RoundRobin);
+    let batch = run(PolicyKind::BatchAware { block: 32, max_wait: 256 });
+    assert!(
+        batch.throughput_rpkc > rr.throughput_rpkc,
+        "batch-aware ({} req/kcycle) must beat round-robin ({} req/kcycle) at saturation",
+        batch.throughput_rpkc,
+        rr.throughput_rpkc
+    );
+    assert!(
+        batch.mean_occupancy > 4.0,
+        "batch-aware card under overload should fill blocks (occupancy {})",
+        batch.mean_occupancy
+    );
+    // and the saturated round-robin card should be pegged
+    for u in &rr.per_unit {
+        assert!(u.utilization > 0.9, "saturated rr unit {} at {}", u.unit, u.utilization);
+    }
+}
