@@ -45,7 +45,8 @@ fn main() -> anyhow::Result<()> {
     for style in [Style::Rtl, Style::Hls] {
         let e = eval.estimate_for(style).expect("both styles requested");
         println!(
-            "{:>4}: {:>6} LUTs {:>6} FFs {:>3} BRAM18  {:>6.3} ns critical path  {:>5.0} s synthesis",
+            "{:>4}: {:>6} LUTs {:>6} FFs {:>3} BRAM18  {:>6.3} ns critical path  \
+             {:>5.0} s synthesis",
             style.name(),
             e.luts,
             e.ffs,

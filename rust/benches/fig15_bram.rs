@@ -34,7 +34,8 @@ fn main() {
         }
     }
     println!(
-        "shape: HLS total {hls_total} vs RTL total {rtl_total} BRAM18 ({:.1}x); RTL uses zero BRAM at {rtl_zero_points}/{points} design points",
+        "shape: HLS total {hls_total} vs RTL total {rtl_total} BRAM18 ({:.1}x); \
+         RTL uses zero BRAM at {rtl_zero_points}/{points} design points",
         hls_total as f64 / rtl_total.max(1) as f64
     );
 

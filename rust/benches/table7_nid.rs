@@ -81,9 +81,18 @@ fn main() {
     );
     println!("{}", t.render());
     println!("paper Table 7 reference rows:");
-    println!("  Layer #0: LUTs 30744/43894 FFs 21159/12965 delay 7.081/5.292 synth 38'45\"/5'21\" cycles 17/17");
-    println!("  Layer #1/2: LUTs 4653/5454 FFs 3276/4970 delay 7.453/4.959 synth 17'48\"/3'59\" cycles 13/13");
-    println!("  Layer #3: LUTs 248/133 FFs 364/158 delay 7.132/4.959 synth 16'28\"/1'43\" cycles 12/13");
+    println!(
+        "  Layer #0: LUTs 30744/43894 FFs 21159/12965 delay 7.081/5.292 \
+         synth 38'45\"/5'21\" cycles 17/17"
+    );
+    println!(
+        "  Layer #1/2: LUTs 4653/5454 FFs 3276/4970 delay 7.453/4.959 \
+         synth 17'48\"/3'59\" cycles 13/13"
+    );
+    println!(
+        "  Layer #3: LUTs 248/133 FFs 364/158 delay 7.132/4.959 \
+         synth 16'28\"/1'43\" cycles 12/13"
+    );
     for r in &rows {
         println!(
             "{}: synth ratio HLS/RTL = {:.1}x, RTL delay {:.0}% faster",

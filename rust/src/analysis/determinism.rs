@@ -1,0 +1,398 @@
+//! `determinism` pass: byte-identical outputs are a contract, not luck.
+//!
+//! Everything the engine, simulator and device layer report is promised
+//! byte-identical across runs and thread counts (DESIGN.md §Explore,
+//! §Device subsystem); the two classic ways to silently break that are
+//! wall-clock reads and hash-map iteration order. Two rules:
+//!
+//! * **wall-clock** — `Instant::now` / `SystemTime` may appear only in
+//!   the serving layer, where elapsed wall time *is* the measurement:
+//!   `coordinator/` (pipeline, batcher deadlines, latency metrics),
+//!   `harness/bench.rs`, `main.rs` (CLI timing footer) and
+//!   `device/serve.rs`. Anywhere else under `rust/src/` is a finding.
+//! * **hash-iteration** — iterating a `HashMap`/`HashSet`
+//!   (`.iter()`, `.keys()`, `.values()`, `.drain()`, `for … in map`)
+//!   observes nondeterministic order. Bindings whose declared type or
+//!   initializer mentions `HashMap`/`HashSet` are tracked per file
+//!   (let-bindings, fn params, struct fields accessed via `self.`);
+//!   any iteration over one is a finding — collect-and-sort into a
+//!   `Vec`, or switch the container to `BTreeMap`, before anything
+//!   feeds a report or serialization. Point lookups (`get`, `insert`,
+//!   `entry`, `len`) stay free.
+
+use super::lexer::{in_spans, matching, test_spans, Token, TokenKind};
+use super::{Finding, RepoModel};
+
+/// Files where wall-clock reads are the point (serving / benching).
+const WALL_CLOCK_ALLOWED: [&str; 3] =
+    ["rust/src/harness/bench.rs", "rust/src/main.rs", "rust/src/device/serve.rs"];
+
+const ITER_METHODS: [&str; 10] = [
+    "iter",
+    "iter_mut",
+    "into_iter",
+    "keys",
+    "into_keys",
+    "values",
+    "values_mut",
+    "into_values",
+    "drain",
+    "retain",
+];
+
+pub fn run(model: &RepoModel, out: &mut Vec<Finding>) {
+    for file in model.files.iter().filter(|f| f.rel.starts_with("rust/src/")) {
+        let tokens = &file.lex.tokens;
+        let spans = test_spans(tokens);
+        if !wall_clock_allowed(&file.rel) {
+            scan_wall_clock(&file.rel, tokens, &spans, out);
+        }
+        scan_hash_iteration(&file.rel, tokens, &spans, out);
+    }
+}
+
+fn wall_clock_allowed(rel: &str) -> bool {
+    rel.starts_with("rust/src/coordinator/") || WALL_CLOCK_ALLOWED.contains(&rel)
+}
+
+fn scan_wall_clock(
+    rel: &str,
+    tokens: &[Token],
+    spans: &[(usize, usize)],
+    out: &mut Vec<Finding>,
+) {
+    for (i, t) in tokens.iter().enumerate() {
+        if t.kind != TokenKind::Ident || in_spans(spans, i) {
+            continue;
+        }
+        let hit = match t.text.as_str() {
+            "Instant" => {
+                tokens.get(i + 1).is_some_and(|a| a.is_punct(':'))
+                    && tokens.get(i + 2).is_some_and(|b| b.is_punct(':'))
+                    && tokens.get(i + 3).is_some_and(|n| n.is_ident("now"))
+            }
+            "SystemTime" => true,
+            _ => false,
+        };
+        if hit {
+            out.push(Finding {
+                pass: "determinism",
+                file: rel.to_string(),
+                line: t.line,
+                message: format!(
+                    "wall-clock read ({}) outside the serving allowlist — outputs \
+                     must be byte-identical across runs",
+                    t.text
+                ),
+                suppressed: None,
+            });
+        }
+    }
+}
+
+/// How a hash-typed binding may legally be referenced at a use site.
+#[derive(Debug, Clone, PartialEq, Eq)]
+struct HashBinding {
+    name: String,
+    /// Struct fields are only recognized behind `self.`; let-bindings and
+    /// fn params are bare identifiers.
+    needs_self: bool,
+    /// Token range the binding is visible in (fn body for params,
+    /// declaration-to-EOF otherwise — an over-approximation that errs
+    /// toward flagging, with per-site suppression as the escape hatch).
+    scope: (usize, usize),
+}
+
+fn scan_hash_iteration(
+    rel: &str,
+    tokens: &[Token],
+    spans: &[(usize, usize)],
+    out: &mut Vec<Finding>,
+) {
+    let fns = fn_ranges(tokens);
+    let mut bindings: Vec<HashBinding> = Vec::new();
+    for (i, t) in tokens.iter().enumerate() {
+        if t.kind == TokenKind::Ident && (t.text == "HashMap" || t.text == "HashSet") {
+            if let Some(b) = classify_binding(tokens, i, &fns) {
+                if !bindings.contains(&b) {
+                    bindings.push(b);
+                }
+            }
+        }
+    }
+    for b in &bindings {
+        for i in b.scope.0..=b.scope.1.min(tokens.len().saturating_sub(1)) {
+            if !tokens[i].is_ident(&b.name) || in_spans(spans, i) {
+                continue;
+            }
+            // base index of the receiver expression (`self` for fields)
+            let base = if b.needs_self {
+                if i >= 2 && tokens[i - 1].is_punct('.') && tokens[i - 2].is_ident("self") {
+                    i - 2
+                } else {
+                    continue;
+                }
+            } else {
+                if i >= 1 && tokens[i - 1].is_punct('.') {
+                    continue; // a field of some other type sharing the name
+                }
+                i
+            };
+            if let Some(method) = chained_iter_method(tokens, i) {
+                out.push(iteration_finding(rel, &tokens[i], &b.name, &method));
+            } else if in_for_loop(tokens, base) {
+                out.push(iteration_finding(rel, &tokens[i], &b.name, "for … in"));
+            }
+        }
+    }
+}
+
+fn iteration_finding(rel: &str, t: &Token, name: &str, how: &str) -> Finding {
+    Finding {
+        pass: "determinism",
+        file: rel.to_string(),
+        line: t.line,
+        message: format!(
+            "`{name}` is a HashMap/HashSet and `{how}` observes nondeterministic \
+             order — collect and sort, or use BTreeMap"
+        ),
+        suppressed: None,
+    }
+}
+
+/// Walk back from a `HashMap`/`HashSet` token to the binding it types.
+fn classify_binding(
+    tokens: &[Token],
+    h: usize,
+    fns: &[FnRange],
+) -> Option<HashBinding> {
+    let mut j = h;
+    let mut colon_binder: Option<usize> = None;
+    let mut steps = 0;
+    while j > 0 && steps < 60 {
+        j -= 1;
+        steps += 1;
+        let t = &tokens[j];
+        if t.is_punct(';') {
+            break;
+        }
+        if t.is_ident("let") {
+            // `let [mut] name … = … HashMap…`
+            let mut k = j + 1;
+            if tokens.get(k).is_some_and(|t| t.is_ident("mut")) {
+                k += 1;
+            }
+            let name = tokens.get(k).filter(|t| t.kind == TokenKind::Ident)?;
+            let scope_end = enclosing_fn(fns, h).map(|f| f.body.1).unwrap_or(tokens.len() - 1);
+            return Some(HashBinding {
+                name: name.text.clone(),
+                needs_self: false,
+                scope: (h, scope_end),
+            });
+        }
+        if colon_binder.is_none()
+            && t.is_punct(':')
+            && !tokens.get(j + 1).is_some_and(|n| n.is_punct(':'))
+            && j > 0
+            && !tokens[j - 1].is_punct(':')
+            && tokens[j - 1].kind == TokenKind::Ident
+        {
+            colon_binder = Some(j - 1);
+        }
+    }
+    let binder = colon_binder?;
+    let name = tokens[binder].text.clone();
+    if let Some(f) = fns.iter().find(|f| f.params.0 <= binder && binder <= f.params.1) {
+        // fn parameter: visible (bare) throughout that fn's body
+        Some(HashBinding { name, needs_self: false, scope: f.body })
+    } else {
+        // struct/enum field: recognized behind `self.` anywhere in the file
+        Some(HashBinding { name, needs_self: true, scope: (0, tokens.len().saturating_sub(1)) })
+    }
+}
+
+/// Follow a method chain from the binding reference; return the first
+/// iteration-order-observing method, if any.
+fn chained_iter_method(tokens: &[Token], recv: usize) -> Option<String> {
+    let mut j = recv + 1;
+    for _ in 0..8 {
+        if !tokens.get(j).is_some_and(|t| t.is_punct('.')) {
+            return None;
+        }
+        let m = tokens.get(j + 1)?;
+        if m.kind != TokenKind::Ident {
+            return None;
+        }
+        if ITER_METHODS.contains(&m.text.as_str()) {
+            return Some(format!(".{}()", m.text));
+        }
+        j += 2;
+        if tokens.get(j).is_some_and(|t| t.is_punct('(')) {
+            j = matching(tokens, j)? + 1;
+        }
+    }
+    None
+}
+
+/// `for pat in map` / `for pat in &map` / `for pat in &mut map`.
+fn in_for_loop(tokens: &[Token], base: usize) -> bool {
+    let prev = |k: usize| base.checked_sub(k).map(|p| &tokens[p]);
+    match prev(1) {
+        Some(t) if t.is_ident("in") => true,
+        Some(t) if t.is_punct('&') => match prev(2) {
+            Some(t2) if t2.is_ident("in") => true,
+            _ => false,
+        },
+        Some(t) if t.is_ident("mut") => matches!(
+            (prev(2), prev(3)),
+            (Some(a), Some(b)) if a.is_punct('&') && b.is_ident("in")
+        ),
+        _ => false,
+    }
+}
+
+/// Token ranges of each `fn`: its parameter list and its body.
+struct FnRange {
+    params: (usize, usize),
+    body: (usize, usize),
+}
+
+fn fn_ranges(tokens: &[Token]) -> Vec<FnRange> {
+    let mut out = Vec::new();
+    let mut i = 0;
+    while i < tokens.len() {
+        if tokens[i].is_ident("fn") {
+            // find the param `(` (skipping the name and any generics)
+            let mut j = i + 1;
+            let mut angle = 0i32;
+            while let Some(t) = tokens.get(j) {
+                if t.is_punct('<') {
+                    angle += 1;
+                } else if t.is_punct('>') {
+                    angle -= 1;
+                } else if t.is_punct('(') && angle == 0 {
+                    break;
+                } else if t.is_punct('{') || t.is_punct(';') {
+                    break;
+                }
+                j += 1;
+            }
+            if tokens.get(j).is_some_and(|t| t.is_punct('(')) {
+                if let Some(close) = matching(tokens, j) {
+                    let params = (j, close);
+                    // body `{` (or `;` for a declaration)
+                    let mut k = close + 1;
+                    while let Some(t) = tokens.get(k) {
+                        if t.is_punct('{') || t.is_punct(';') {
+                            break;
+                        }
+                        k += 1;
+                    }
+                    if tokens.get(k).is_some_and(|t| t.is_punct('{')) {
+                        if let Some(end) = matching(tokens, k) {
+                            out.push(FnRange { params, body: (k, end) });
+                            i = j + 1; // nested fns still get their own entry
+                            continue;
+                        }
+                    }
+                }
+            }
+        }
+        i += 1;
+    }
+    out
+}
+
+fn enclosing_fn(fns: &[FnRange], idx: usize) -> Option<&FnRange> {
+    // innermost body containing idx
+    fns.iter()
+        .filter(|f| f.body.0 <= idx && idx <= f.body.1)
+        .min_by_key(|f| f.body.1 - f.body.0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::lexer::lex;
+    use super::*;
+
+    fn scan(rel: &str, src: &str) -> Vec<Finding> {
+        let lexed = lex(src);
+        let spans = test_spans(&lexed.tokens);
+        let mut out = Vec::new();
+        if !wall_clock_allowed(rel) {
+            scan_wall_clock(rel, &lexed.tokens, &spans, &mut out);
+        }
+        scan_hash_iteration(rel, &lexed.tokens, &spans, &mut out);
+        out
+    }
+
+    #[test]
+    fn wall_clock_flagged_outside_allowlist() {
+        let src = "fn f() { let t = Instant::now(); }";
+        assert_eq!(scan("rust/src/sim/clock.rs", src).len(), 1);
+        assert!(scan("rust/src/coordinator/batcher.rs", src).is_empty());
+        assert!(scan("rust/src/main.rs", src).is_empty());
+        // Instant as a type (no ::now) is not a read
+        assert!(scan("rust/src/sim/x.rs", "fn f(t: Instant) {}").is_empty());
+        // SystemTime is flagged in any position
+        assert_eq!(scan("rust/src/sim/x.rs", "use std::time::SystemTime;").len(), 1);
+    }
+
+    #[test]
+    fn hash_iteration_flagged_for_let_param_and_field() {
+        let let_src = "fn f() { let m = HashMap::new(); for k in m.keys() { use_(k); } }";
+        let out = scan("rust/src/explore/x.rs", let_src);
+        assert_eq!(out.len(), 1);
+        assert!(out[0].message.contains("keys"));
+
+        let param_src = "fn g(m: &HashMap<K, V>) { for (k, v) in m { use_(k, v); } }";
+        assert_eq!(scan("rust/src/explore/x.rs", param_src).len(), 1);
+
+        let field_src = "
+struct S { cache: HashMap<String, u32> }
+impl S {
+    fn dump(&self) { for k in self.cache.keys() { p(k); } }
+}";
+        assert_eq!(scan("rust/src/explore/x.rs", field_src).len(), 1);
+    }
+
+    #[test]
+    fn point_lookups_and_name_collisions_stay_clean() {
+        // get/insert/entry/len are order-free
+        let src = "
+struct S { m: HashMap<String, u32> }
+impl S {
+    fn f(&mut self) -> Option<&u32> { self.m.lock(); self.m.get(\"k\") }
+    fn g(&mut self) { self.m.insert(String::new(), 1); let n = self.m.len(); use_(n); }
+}";
+        assert!(scan("rust/src/explore/x.rs", src).is_empty());
+        // a *local* slice named like a hash field is not the field:
+        // fields only match behind `self.`
+        let src = "
+struct S { inputs: HashMap<String, u32> }
+fn free(inputs: &[u32]) -> usize { inputs.iter().count() }";
+        assert!(scan("rust/src/explore/x.rs", src).is_empty());
+    }
+
+    #[test]
+    fn chained_guard_iteration_is_caught() {
+        let src = "
+struct S { m: Mutex<HashMap<String, u32>> }
+impl S {
+    fn dump(&self) { for k in self.m.lock().unwrap().keys() { p(k); } }
+}";
+        let out = scan("rust/src/explore/x.rs", src);
+        assert_eq!(out.len(), 1);
+    }
+
+    #[test]
+    fn tests_are_exempt() {
+        let src = "
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn t() { let t = Instant::now(); let m = HashMap::new(); for k in m.keys() { p(k); } }
+}";
+        assert!(scan("rust/src/sim/x.rs", src).is_empty());
+    }
+}

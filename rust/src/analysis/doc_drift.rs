@@ -1,0 +1,616 @@
+//! `doc-drift` pass: DESIGN.md / README.md must not reference ghosts.
+//!
+//! Both documents quote concrete paths (`sim::run_mvu_stalled`,
+//! `explore::stimulus_thresholds`, `DeviceRequest { workload, .. }`);
+//! when an item is renamed or removed the prose silently rots. This
+//! pass extracts every backtick-quoted reference containing `::` (plus
+//! single-name `Struct { field, .. }` literals) from the checked
+//! documents and resolves it against a symbol index built from the
+//! lexed sources.
+//!
+//! The resolver is deliberately *lenient*: it anchors each segment to
+//! known module components, type names or item names without verifying
+//! the full containment chain, so a reorganized-but-existing item never
+//! fires. What fires is a reference to a name that exists nowhere —
+//! exactly the rename/removal rot the pass is for. Paths rooted in
+//! external crates (`std::`, `anyhow::`) and prelude types (`Vec`,
+//! `Option`, …) are skipped. Intentional references to removed APIs
+//! (e.g. a migration guide) carry a markdown suppression:
+//! `<!-- lint: allow(doc-drift, <reason>) -->` on the same line or the
+//! line above.
+
+use std::collections::{BTreeMap, BTreeSet};
+
+use super::lexer::{matching, Token, TokenKind};
+use super::{Finding, RepoModel};
+
+/// Path roots that never resolve in-tree.
+const EXTERNAL_ROOTS: [&str; 4] = ["std", "core", "alloc", "anyhow"];
+
+/// Prelude-ish type names usable without a `std::` root.
+const PRELUDE: [&str; 14] = [
+    "Vec", "String", "Option", "Result", "Box", "Arc", "Mutex", "HashMap", "HashSet", "BTreeMap",
+    "Path", "PathBuf", "Instant", "Duration",
+];
+
+pub fn run(model: &RepoModel, out: &mut Vec<Finding>) {
+    let idx = Index::build(model);
+    for doc in &model.docs {
+        for r in extract_refs(&doc.text) {
+            if let Err(seg) = resolve(&idx, &r) {
+                out.push(Finding {
+                    pass: "doc-drift",
+                    file: doc.rel.clone(),
+                    line: r.line,
+                    message: format!(
+                        "`{}` does not resolve to any item in the tree \
+                         (unknown segment `{seg}`)",
+                        r.display()
+                    ),
+                    suppressed: None,
+                });
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------- index
+
+/// Names declared anywhere under `rust/src/`.
+#[derive(Debug, Default)]
+pub struct Index {
+    /// Every path component of every module (`sim`, `fast`, `json`, …).
+    modules: BTreeSet<String>,
+    /// Every declared name: fns, consts, statics, types, macros, mods.
+    items: BTreeSet<String>,
+    /// Per-type members (impl fns/consts, enum variants, trait methods)
+    /// and fields (struct fields, struct-variant payload fields).
+    types: BTreeMap<String, TypeEntry>,
+}
+
+#[derive(Debug, Default)]
+pub struct TypeEntry {
+    members: BTreeSet<String>,
+    fields: BTreeSet<String>,
+}
+
+impl Index {
+    pub fn build(model: &RepoModel) -> Index {
+        let mut idx = Index::default();
+        for file in model.files.iter().filter(|f| f.rel.starts_with("rust/src/")) {
+            for comp in file.rel["rust/src/".len()..].trim_end_matches(".rs").split('/') {
+                if !matches!(comp, "mod" | "lib" | "main") {
+                    idx.modules.insert(comp.to_string());
+                }
+            }
+            idx.index_tokens(&file.lex.tokens);
+        }
+        idx
+    }
+
+    pub fn index_tokens(&mut self, tokens: &[Token]) {
+        let mut i = 0;
+        while i < tokens.len() {
+            let t = &tokens[i];
+            if t.kind == TokenKind::Ident {
+                match t.text.as_str() {
+                    "struct" => self.index_struct(tokens, i),
+                    "enum" => self.index_enum(tokens, i),
+                    "trait" => self.index_trait(tokens, i),
+                    "impl" => self.index_impl(tokens, i),
+                    "fn" | "const" | "static" | "type" => {
+                        if let Some(name) = ident_after(tokens, i + 1) {
+                            self.items.insert(name);
+                        }
+                    }
+                    "mod" => {
+                        if let Some(name) = ident_after(tokens, i + 1) {
+                            self.modules.insert(name.clone());
+                            self.items.insert(name);
+                        }
+                    }
+                    "macro_rules" => {
+                        if let Some(name) = ident_after(tokens, i + 2) {
+                            self.items.insert(name);
+                        }
+                    }
+                    _ => {}
+                }
+            }
+            i += 1;
+        }
+    }
+
+    fn entry(&mut self, name: &str) -> &mut TypeEntry {
+        self.items.insert(name.to_string());
+        self.types.entry(name.to_string()).or_default()
+    }
+
+    fn index_struct(&mut self, tokens: &[Token], kw: usize) {
+        let Some(name) = ident_after(tokens, kw + 1) else { return };
+        self.entry(&name);
+        if let Some(open) = body_open(tokens, kw + 2) {
+            for f in brace_field_names(tokens, open) {
+                self.entry(&name).fields.insert(f);
+            }
+        }
+    }
+
+    fn index_enum(&mut self, tokens: &[Token], kw: usize) {
+        let Some(name) = ident_after(tokens, kw + 1) else { return };
+        self.entry(&name);
+        let Some(open) = body_open(tokens, kw + 2) else { return };
+        let Some(close) = matching(tokens, open) else { return };
+        // variants: idents at depth 1 right after `{` or `,`
+        let mut j = open + 1;
+        let mut at_start = true;
+        while j < close {
+            let t = &tokens[j];
+            if at_start && t.kind == TokenKind::Ident && t.text != "pub" {
+                self.entry(&name).members.insert(t.text.clone());
+                if tokens.get(j + 1).is_some_and(|n| n.is_punct('{')) {
+                    for f in brace_field_names(tokens, j + 1) {
+                        self.entry(&t.text.clone()).fields.insert(f);
+                    }
+                }
+                at_start = false;
+            } else if t.is_punct(',') {
+                at_start = true;
+            } else if t.kind == TokenKind::Open && t.text != "<" {
+                j = matching(tokens, j).unwrap_or(close);
+            }
+            j += 1;
+        }
+    }
+
+    fn index_trait(&mut self, tokens: &[Token], kw: usize) {
+        let Some(name) = ident_after(tokens, kw + 1) else { return };
+        self.entry(&name);
+        let Some(open) = body_open(tokens, kw + 2) else { return };
+        for m in body_member_names(tokens, open) {
+            self.entry(&name).members.insert(m);
+        }
+    }
+
+    fn index_impl(&mut self, tokens: &[Token], kw: usize) {
+        // `impl [<G>] Path [for Path] [where …] {` — the target type is
+        // the last path ident before the body (after `for` when present)
+        let mut j = kw + 1;
+        let mut target: Option<String> = None;
+        let mut angle = 0i32;
+        while let Some(t) = tokens.get(j) {
+            if t.is_punct('<') {
+                angle += 1;
+            } else if t.is_punct('>') {
+                angle -= 1;
+            } else if angle == 0 {
+                if t.is_punct('{') {
+                    break;
+                }
+                if t.kind == TokenKind::Ident && t.text == "where" {
+                    break;
+                }
+                if t.kind == TokenKind::Ident && t.text == "for" {
+                    target = None; // restart: the trait path was not the target
+                } else if t.kind == TokenKind::Ident {
+                    target = Some(t.text.clone());
+                }
+            }
+            j += 1;
+        }
+        // advance to the body `{` if we stopped at `where`
+        while tokens.get(j).is_some_and(|t| !t.is_punct('{')) {
+            j += 1;
+        }
+        let (Some(target), Some(open)) = (target, Some(j).filter(|&j| j < tokens.len())) else {
+            return;
+        };
+        for m in body_member_names(tokens, open) {
+            self.items.insert(m.clone());
+            self.entry(&target).members.insert(m);
+        }
+    }
+}
+
+/// The next Ident token at or after `i`, skipping nothing.
+fn ident_after(tokens: &[Token], i: usize) -> Option<String> {
+    tokens.get(i).filter(|t| t.kind == TokenKind::Ident).map(|t| t.text.clone())
+}
+
+/// Find the body `{` after a type name, skipping generics and bounds.
+fn body_open(tokens: &[Token], from: usize) -> Option<usize> {
+    let mut angle = 0i32;
+    for (j, t) in tokens.iter().enumerate().skip(from) {
+        if t.is_punct('<') {
+            angle += 1;
+        } else if t.is_punct('>') {
+            angle -= 1;
+        } else if angle == 0 {
+            if t.is_punct('{') {
+                return Some(j);
+            }
+            if t.is_punct(';') || t.is_punct('(') {
+                return None; // tuple struct / unit struct
+            }
+        }
+    }
+    None
+}
+
+/// `name:` field names at depth 1 of the brace group opening at `open`.
+fn brace_field_names(tokens: &[Token], open: usize) -> Vec<String> {
+    let Some(close) = matching(tokens, open) else { return Vec::new() };
+    let mut out = Vec::new();
+    let mut j = open + 1;
+    while j < close {
+        let t = &tokens[j];
+        if t.kind == TokenKind::Open && t.text != "<" {
+            j = matching(tokens, j).unwrap_or(close);
+        } else if t.kind == TokenKind::Ident
+            && tokens.get(j + 1).is_some_and(|n| n.is_punct(':'))
+            && !tokens.get(j + 2).is_some_and(|n| n.is_punct(':'))
+        {
+            out.push(t.text.clone());
+            j += 1;
+        }
+        j += 1;
+    }
+    out
+}
+
+/// `fn`/`const`/`type` names at depth 1 of an impl/trait body.
+fn body_member_names(tokens: &[Token], open: usize) -> Vec<String> {
+    let Some(close) = matching(tokens, open) else { return Vec::new() };
+    let mut out = Vec::new();
+    let mut j = open + 1;
+    while j < close {
+        let t = &tokens[j];
+        if t.is_punct('{') {
+            j = matching(tokens, j).unwrap_or(close);
+        } else if t.kind == TokenKind::Ident && matches!(t.text.as_str(), "fn" | "const" | "type")
+        {
+            if let Some(name) = ident_after(tokens, j + 1) {
+                out.push(name);
+                j += 1;
+            }
+        }
+        j += 1;
+    }
+    out
+}
+
+// ----------------------------------------------------------- references
+
+/// One reference extracted from a markdown inline-code span.
+#[derive(Debug, PartialEq, Eq)]
+pub struct DocRef {
+    pub segments: Vec<String>,
+    /// `::{a, b}` — each member continues the path independently.
+    pub group: Vec<String>,
+    /// Trailing `*` on the final segment (`run_mvu*`).
+    pub glob: bool,
+    /// `{ a, b }` struct-literal fields following the path.
+    pub fields: Vec<String>,
+    pub line: u32,
+}
+
+impl DocRef {
+    fn display(&self) -> String {
+        let mut s = self.segments.join("::");
+        if !self.group.is_empty() {
+            s.push_str(&format!("::{{{}}}", self.group.join(", ")));
+        }
+        if self.glob {
+            s.push('*');
+        }
+        if !self.fields.is_empty() {
+            s.push_str(&format!(" {{ {} }}", self.fields.join(", ")));
+        }
+        s
+    }
+}
+
+/// Extract references from inline code spans, skipping fenced blocks.
+pub fn extract_refs(text: &str) -> Vec<DocRef> {
+    let mut out = Vec::new();
+    let mut fenced = false;
+    for (i, line) in text.lines().enumerate() {
+        if line.trim_start().starts_with("```") {
+            fenced = !fenced;
+            continue;
+        }
+        if fenced {
+            continue;
+        }
+        // odd-indexed pieces of a backtick split are inline code
+        for (k, span) in line.split('`').enumerate() {
+            if k % 2 == 1 {
+                scan_span(span, i as u32 + 1, &mut out);
+            }
+        }
+    }
+    out
+}
+
+fn scan_span(span: &str, line: u32, out: &mut Vec<DocRef>) {
+    let chars: Vec<char> = span.chars().collect();
+    let mut i = 0;
+    let ident_start = |c: char| c.is_ascii_alphabetic() || c == '_';
+    let ident_char = |c: char| c.is_ascii_alphanumeric() || c == '_';
+    let read_ident = |i: &mut usize| {
+        let s = *i;
+        while *i < chars.len() && ident_char(chars[*i]) {
+            *i += 1;
+        }
+        chars[s..*i].iter().collect::<String>()
+    };
+    while i < chars.len() {
+        if !ident_start(chars[i]) {
+            i += 1;
+            continue;
+        }
+        let mut r = DocRef {
+            segments: vec![read_ident(&mut i)],
+            group: Vec::new(),
+            glob: false,
+            fields: Vec::new(),
+            line,
+        };
+        loop {
+            if i + 1 < chars.len() && chars[i] == ':' && chars[i + 1] == ':' {
+                i += 2;
+                if i < chars.len() && chars[i] == '{' {
+                    i += 1;
+                    while i < chars.len() && chars[i] != '}' {
+                        if ident_start(chars[i]) {
+                            r.group.push(read_ident(&mut i));
+                        } else {
+                            i += 1;
+                        }
+                    }
+                    break;
+                }
+                if i < chars.len() && ident_start(chars[i]) {
+                    r.segments.push(read_ident(&mut i));
+                    continue;
+                }
+                break;
+            }
+            break;
+        }
+        if i < chars.len() && chars[i] == '*' {
+            r.glob = true;
+            i += 1;
+        }
+        if i < chars.len() && chars[i] == '!' {
+            i += 1; // macro bang carries no resolution weight
+        }
+        // ` { a, b }` struct-literal fields. Only a *closed* brace group
+        // counts (a pseudo-struct wrapped across prose lines is not
+        // checkable); only depth-1 idents outside value position count,
+        // so nested `Inner { .. }` payloads and the types after a `:`
+        // (`sim: Option<…>`) are not field names.
+        let mut j = i;
+        while j < chars.len() && chars[j] == ' ' {
+            j += 1;
+        }
+        if j < chars.len() && chars[j] == '{' {
+            let mut k = j + 1;
+            let mut depth = 1i32;
+            let mut fields = Vec::new();
+            let mut value_pos = false; // between `:` and the next depth-1 `,`
+            while k < chars.len() && depth > 0 {
+                let c = chars[k];
+                if c == '{' {
+                    depth += 1;
+                    k += 1;
+                } else if c == '}' {
+                    depth -= 1;
+                    k += 1;
+                } else if c == ',' {
+                    if depth == 1 {
+                        value_pos = false;
+                    }
+                    k += 1;
+                } else if c == ':' {
+                    if depth == 1 {
+                        value_pos = true;
+                    }
+                    k += 1;
+                } else if depth == 1 && !value_pos && ident_start(c) {
+                    fields.push(read_ident(&mut k));
+                } else {
+                    k += 1;
+                }
+            }
+            if depth == 0 {
+                r.fields = fields;
+                i = k;
+            } else {
+                i = chars.len(); // unclosed: the rest is pseudo-struct prose
+            }
+        }
+        let pathy = r.segments.len() > 1 || !r.group.is_empty();
+        // the bare struct-literal form requires a type-cased name, so
+        // math notation (`Σ_{w_i=1}`) never reads as a reference
+        let struct_lit = !r.fields.is_empty()
+            && r.segments.len() == 1
+            && r.segments[0].starts_with(|c: char| c.is_ascii_uppercase());
+        if pathy || struct_lit {
+            out.push(r);
+        }
+    }
+}
+
+// ----------------------------------------------------------- resolution
+
+/// `Ok(())` when the reference anchors to known names; `Err(segment)`
+/// names the first segment that resolves nowhere.
+pub fn resolve(idx: &Index, r: &DocRef) -> Result<(), String> {
+    let mut segs: &[String] = &r.segments;
+    if segs.first().is_some_and(|s| s == "crate") {
+        segs = &segs[1..];
+    }
+    match segs.first().map(String::as_str) {
+        None => return Ok(()),
+        Some(s) if EXTERNAL_ROOTS.contains(&s) => return Ok(()),
+        Some(s) if PRELUDE.contains(&s) => return Ok(()),
+        Some("self" | "super") => return Ok(()),
+        _ => {}
+    }
+    let mut at_type: Option<&TypeEntry> = None;
+    for (i, seg) in segs.iter().enumerate() {
+        let last = i + 1 == segs.len() && r.group.is_empty();
+        at_type = resolve_segment(idx, at_type, seg, last && r.glob)
+            .ok_or_else(|| seg.clone())?;
+    }
+    for g in &r.group {
+        resolve_segment(idx, at_type, g, r.glob).ok_or_else(|| g.clone())?;
+    }
+    if !r.fields.is_empty() {
+        // check fields only when the terminal resolves to an indexed
+        // struct — otherwise there is nothing to check against
+        if let Some(t) = segs.last().and_then(|s| idx.types.get(s)) {
+            if !t.fields.is_empty() {
+                for f in &r.fields {
+                    if !t.fields.contains(f) && !t.members.contains(f) {
+                        return Err(format!("{}.{f}", segs.last().unwrap()));
+                    }
+                }
+            }
+        }
+    }
+    Ok(())
+}
+
+/// Resolve one path segment in the current context; returns the new
+/// type context (`Some` when the segment names an indexed type).
+fn resolve_segment<'a>(
+    idx: &'a Index,
+    at_type: Option<&'a TypeEntry>,
+    seg: &str,
+    glob: bool,
+) -> Option<Option<&'a TypeEntry>> {
+    if let Some(t) = at_type {
+        let known = if glob {
+            t.members.iter().chain(&t.fields).any(|m| m.starts_with(seg))
+        } else {
+            t.members.contains(seg) || t.fields.contains(seg)
+        };
+        if !known {
+            return None;
+        }
+        return Some(idx.types.get(seg)); // variant chaining when indexed
+    }
+    if glob {
+        return idx
+            .items
+            .iter()
+            .any(|m| m.starts_with(seg))
+            .then_some(None);
+    }
+    if idx.modules.contains(seg) {
+        return Some(None);
+    }
+    if let Some(t) = idx.types.get(seg) {
+        return Some(Some(t));
+    }
+    idx.items.contains(seg).then_some(None)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::{RepoModel, SourceFile};
+    use super::*;
+    use std::path::PathBuf;
+
+    fn model() -> RepoModel {
+        let src = r#"
+pub const SIM_KERNEL_VERSION: u32 = 5;
+pub struct StimulusStats { pub chain_hits: u64, pub chain_misses: u64 }
+pub enum ParamError { IllegalFold { axis: usize, value: usize, total: usize }, Other }
+pub struct Session;
+impl Session {
+    pub fn new(cfg: SessionConfig) -> Session { Session }
+}
+pub struct SessionConfig { pub threads: usize, pub cache_dir: String }
+pub fn run_mvu() {}
+pub fn run_mvu_fifo() {}
+pub fn pe_row() {}
+"#;
+        RepoModel {
+            root: PathBuf::new(),
+            files: vec![SourceFile::parse("rust/src/sim/clock.rs".to_string(), src.to_string())],
+            docs: Vec::new(),
+            fingerprint_manifest: None,
+            kernel_version: None,
+        }
+    }
+
+    fn first_ref(md: &str) -> DocRef {
+        let mut v = extract_refs(md);
+        assert_eq!(v.len(), 1, "{md:?} → {v:?}");
+        v.remove(0)
+    }
+
+    #[test]
+    fn extraction_shapes() {
+        let r = first_ref("see `sim::run_mvu*` for details");
+        assert_eq!(r.segments, ["sim", "run_mvu"]);
+        assert!(r.glob);
+
+        let r = first_ref("`StimulusStats::{chain_hits, chain_misses}`");
+        assert_eq!(r.segments, ["StimulusStats"]);
+        assert_eq!(r.group, ["chain_hits", "chain_misses"]);
+
+        let r = first_ref("`ParamError::IllegalFold { axis, value, total }`");
+        assert_eq!(r.segments, ["ParamError", "IllegalFold"]);
+        assert_eq!(r.fields, ["axis", "value", "total"]);
+
+        // plain words and fenced blocks contribute nothing
+        assert!(extract_refs("run `finn-mvu lint --json` then").is_empty());
+        assert!(extract_refs("```rust\nuse crate::sim::nothing_here;\n```").is_empty());
+
+        // a pseudo-struct wrapped across prose lines (the brace never
+        // closes in the span) and math notation are not references
+        assert!(extract_refs("`EvalRequest { point, sim: Option<SimOptions { batch,`").is_empty());
+        assert!(extract_refs("`S1 = Σ_{w_i=1} x_i`").is_empty());
+
+        // a type in a field's value position is not a field name
+        let r = first_ref("`SessionConfig { threads: usize, cache_dir }`");
+        assert_eq!(r.fields, ["threads", "cache_dir"]);
+    }
+
+    #[test]
+    fn resolves_real_and_rejects_ghosts() {
+        let m = model();
+        let idx = Index::build(&m);
+        let ok = |md: &str| resolve(&idx, &first_ref(md)).is_ok();
+        assert!(ok("`sim::run_mvu*`"));
+        assert!(ok("`clock::pe_row`"));
+        assert!(ok("`sim::SIM_KERNEL_VERSION`"));
+        assert!(ok("`StimulusStats::{chain_hits, chain_misses}`"));
+        assert!(ok("`ParamError::IllegalFold { axis, value, total }`"));
+        assert!(ok("`Session::new(SessionConfig)`"));
+        assert!(ok("`std::time::DoesNotMatter`"));
+        assert!(ok("`anyhow::bail!`"));
+        assert!(!ok("`sim::run_gone`"));
+        assert!(!ok("`StimulusStats::{chain_hits, gone_field}`"));
+        assert!(!ok("`ParamError::NotAVariant`"));
+    }
+
+    #[test]
+    fn ghost_reference_produces_finding() {
+        let mut m = model();
+        m.docs.push(super::super::DocFile {
+            rel: "DESIGN.md".to_string(),
+            text: "Call `sim::run_mvu` then `sim::bogus_item`.\n".to_string(),
+            suppressions: Vec::new(),
+        });
+        let mut out = Vec::new();
+        run(&m, &mut out);
+        assert_eq!(out.len(), 1);
+        assert_eq!(out[0].line, 1);
+        assert!(out[0].message.contains("bogus_item"));
+    }
+}

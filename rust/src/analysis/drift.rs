@@ -1,0 +1,237 @@
+//! `kernel-drift` pass: sim changes must bump `SIM_KERNEL_VERSION`.
+//!
+//! The explore cache keys every memoized simulation result on
+//! [`SIM_KERNEL_VERSION`] (`sim/mod.rs`), so editing any kernel source
+//! without bumping it silently serves stale cached reports. The rule
+//! was previously prose in DESIGN.md; this pass makes it mechanical:
+//!
+//! * a manifest at [`FINGERPRINT_REL`] records the FNV-1a fingerprint
+//!   (the same [`content_hash`] the cache itself uses) of every file
+//!   under `rust/src/sim/`, keyed to the version it was taken at;
+//! * the pass recomputes the fingerprints and fails when any file
+//!   changed, appeared or vanished while the version stayed put, or
+//!   when the manifest's recorded version disagrees with the constant.
+//!
+//! After a legitimate kernel change, bump `SIM_KERNEL_VERSION` and run
+//! `finn-mvu lint --update-fingerprint` to re-key the manifest.
+//!
+//! [`SIM_KERNEL_VERSION`]: crate::sim::SIM_KERNEL_VERSION
+//! [`content_hash`]: crate::explore::content_hash
+//! [`FINGERPRINT_REL`]: super::FINGERPRINT_REL
+
+use super::lexer::{Token, TokenKind};
+use super::{Finding, RepoModel, FINGERPRINT_REL};
+use crate::explore::content_hash;
+
+/// Pull the value of `SIM_KERNEL_VERSION` out of `sim/mod.rs`'s token
+/// stream (`pub const SIM_KERNEL_VERSION: u32 = <n>;`).
+pub fn parse_kernel_version(tokens: &[Token]) -> Option<u32> {
+    let at = tokens.iter().position(|t| t.is_ident("SIM_KERNEL_VERSION"))?;
+    tokens[at..]
+        .iter()
+        .take_while(|t| !t.is_punct(';'))
+        .find(|t| t.kind == TokenKind::Num)
+        .and_then(|t| t.text.parse().ok())
+}
+
+/// `(repo-relative path, fingerprint)` for every sim source, sorted.
+pub fn current_entries(model: &RepoModel) -> Vec<(String, u64)> {
+    // sim_files() iterates model.files, which RepoModel::load sorted
+    let mut entries: Vec<(String, u64)> =
+        model.sim_files().map(|f| (f.rel.clone(), content_hash(&f.text))).collect();
+    entries.sort();
+    entries
+}
+
+/// Render a manifest for `version` over `entries`.
+pub fn render_manifest(version: u32, entries: &[(String, u64)]) -> String {
+    let mut out = String::new();
+    out.push_str("# finn-mvu sim kernel fingerprint (FNV-1a, matches explore::content_hash)\n");
+    out.push_str(
+        "# regenerate after a SIM_KERNEL_VERSION bump:  finn-mvu lint --update-fingerprint\n",
+    );
+    out.push_str(&format!("version {version}\n"));
+    for (rel, hash) in entries {
+        out.push_str(&format!("{hash:016x} {rel}\n"));
+    }
+    out
+}
+
+/// Parsed manifest contents.
+pub struct Manifest {
+    pub version: u32,
+    pub entries: Vec<(String, u64)>,
+}
+
+/// Parse a manifest; `Err` carries a one-line description of the defect.
+pub fn parse_manifest(text: &str) -> Result<Manifest, String> {
+    let mut version = None;
+    let mut entries = Vec::new();
+    for (i, line) in text.lines().enumerate() {
+        let line = line.trim();
+        if line.is_empty() || line.starts_with('#') {
+            continue;
+        }
+        if let Some(v) = line.strip_prefix("version ") {
+            version = Some(v.trim().parse::<u32>().map_err(|_| {
+                format!("line {}: unparsable version {v:?}", i + 1)
+            })?);
+        } else {
+            let (hash, rel) = line
+                .split_once(' ')
+                .ok_or_else(|| format!("line {}: expected `<hash> <path>`", i + 1))?;
+            let hash = u64::from_str_radix(hash, 16)
+                .map_err(|_| format!("line {}: unparsable hash {hash:?}", i + 1))?;
+            entries.push((rel.trim().to_string(), hash));
+        }
+    }
+    let version = version.ok_or("missing `version <n>` line".to_string())?;
+    entries.sort();
+    Ok(Manifest { version, entries })
+}
+
+/// Compare the live tree against the committed manifest. Pure over its
+/// inputs so tests can feed synthetic mutations.
+pub fn check(
+    kernel_version: Option<u32>,
+    current: &[(String, u64)],
+    manifest: Option<&str>,
+) -> Vec<Finding> {
+    let finding = |file: &str, line: u32, message: String| Finding {
+        pass: "kernel-drift",
+        file: file.to_string(),
+        line,
+        message,
+        suppressed: None,
+    };
+    let Some(version) = kernel_version else {
+        return vec![finding(
+            "rust/src/sim/mod.rs",
+            1,
+            "cannot parse SIM_KERNEL_VERSION from sim/mod.rs".to_string(),
+        )];
+    };
+    let Some(manifest) = manifest else {
+        return vec![finding(
+            FINGERPRINT_REL,
+            1,
+            "fingerprint manifest is missing — run `finn-mvu lint --update-fingerprint`"
+                .to_string(),
+        )];
+    };
+    let parsed = match parse_manifest(manifest) {
+        Ok(m) => m,
+        Err(e) => return vec![finding(FINGERPRINT_REL, 1, format!("malformed manifest: {e}"))],
+    };
+    if parsed.version != version {
+        return vec![finding(
+            FINGERPRINT_REL,
+            1,
+            format!(
+                "manifest was taken at SIM_KERNEL_VERSION {} but the constant is {} — \
+                 run `finn-mvu lint --update-fingerprint`",
+                parsed.version, version
+            ),
+        )];
+    }
+    let mut out = Vec::new();
+    let bump = format!(
+        "without a SIM_KERNEL_VERSION bump (still {version}) — stale cached reports \
+         would be served; bump sim/mod.rs, then `finn-mvu lint --update-fingerprint`"
+    );
+    for (rel, hash) in current {
+        match parsed.entries.iter().find(|(r, _)| r == rel) {
+            None => out.push(finding(rel, 1, format!("sim source added {bump}"))),
+            Some((_, h)) if h != hash => {
+                out.push(finding(rel, 1, format!("sim source changed {bump}")))
+            }
+            Some(_) => {}
+        }
+    }
+    for (rel, _) in &parsed.entries {
+        if !current.iter().any(|(r, _)| r == rel) {
+            out.push(finding(rel, 1, format!("sim source removed {bump}")));
+        }
+    }
+    out
+}
+
+pub fn run(model: &RepoModel, out: &mut Vec<Finding>) {
+    let current = current_entries(model);
+    out.extend(check(model.kernel_version, &current, model.fingerprint_manifest.as_deref()));
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::lexer::lex;
+    use super::*;
+
+    fn entries(pairs: &[(&str, u64)]) -> Vec<(String, u64)> {
+        pairs.iter().map(|(r, h)| (r.to_string(), *h)).collect()
+    }
+
+    #[test]
+    fn parses_kernel_version() {
+        let lexed = lex("/// cache key\npub const SIM_KERNEL_VERSION: u32 = 5;\n");
+        assert_eq!(parse_kernel_version(&lexed.tokens), Some(5));
+        assert_eq!(parse_kernel_version(&lex("fn f() {}").tokens), None);
+    }
+
+    #[test]
+    fn manifest_round_trips() {
+        let e = entries(&[("rust/src/sim/clock.rs", 0xdead_beef), ("rust/src/sim/mod.rs", 7)]);
+        let text = render_manifest(5, &e);
+        let m = parse_manifest(&text).unwrap();
+        assert_eq!(m.version, 5);
+        assert_eq!(m.entries, e);
+    }
+
+    #[test]
+    fn clean_when_manifest_matches() {
+        let e = entries(&[("rust/src/sim/mod.rs", 42)]);
+        let text = render_manifest(5, &e);
+        assert!(check(Some(5), &e, Some(&text)).is_empty());
+    }
+
+    #[test]
+    fn mutated_sim_source_without_bump_fails() {
+        let committed = entries(&[("rust/src/sim/mod.rs", 42), ("rust/src/sim/clock.rs", 9)]);
+        let text = render_manifest(5, &committed);
+        // clock.rs content changed: hash moves, version did not
+        let live = entries(&[("rust/src/sim/mod.rs", 42), ("rust/src/sim/clock.rs", 10)]);
+        let out = check(Some(5), &live, Some(&text));
+        assert_eq!(out.len(), 1);
+        assert_eq!(out[0].file, "rust/src/sim/clock.rs");
+        assert!(out[0].message.contains("changed without a SIM_KERNEL_VERSION bump"));
+        // bumping the constant + regenerating the manifest clears it
+        let regenerated = render_manifest(6, &live);
+        assert!(check(Some(6), &live, Some(&regenerated)).is_empty());
+        // bumping the constant alone flags the stale manifest instead
+        let out = check(Some(6), &live, Some(&text));
+        assert_eq!(out.len(), 1);
+        assert!(out[0].message.contains("taken at SIM_KERNEL_VERSION 5"));
+    }
+
+    #[test]
+    fn added_and_removed_sources_fail() {
+        let committed = entries(&[("rust/src/sim/mod.rs", 1)]);
+        let text = render_manifest(5, &committed);
+        let live = entries(&[("rust/src/sim/mod.rs", 1), ("rust/src/sim/new.rs", 2)]);
+        let out = check(Some(5), &live, Some(&text));
+        assert_eq!(out.len(), 1);
+        assert!(out[0].message.contains("added"));
+        let out = check(Some(5), &[], Some(&text));
+        assert_eq!(out.len(), 1);
+        assert!(out[0].message.contains("removed"));
+    }
+
+    #[test]
+    fn missing_or_malformed_manifest_fails() {
+        assert!(check(Some(5), &[], None)[0].message.contains("missing"));
+        assert!(check(None, &[], Some("version 5\n"))[0]
+            .message
+            .contains("SIM_KERNEL_VERSION"));
+        let out = check(Some(5), &[], Some("not a manifest\n"));
+        assert!(out[0].message.contains("malformed"));
+    }
+}

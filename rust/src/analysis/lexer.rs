@@ -1,0 +1,753 @@
+//! A real Rust lexer for the self-hosted static-analysis passes.
+//!
+//! The manual pre-commit discipline this subsystem replaces was a
+//! balanced-delimiter lex of every `.rs` file — which only works if the
+//! lexer actually understands the places a brace is *not* a brace: string
+//! literals (including raw strings with arbitrary `#` fences and byte /
+//! raw-byte variants), char literals, nested block comments, and the
+//! `'a`-lifetime-vs-`'a'`-char ambiguity. This module implements exactly
+//! that subset of the Rust lexical grammar: enough to tokenize this
+//! repository byte-faithfully, with line/column positions on every token
+//! so findings anchor to real source locations.
+//!
+//! Comments are not discarded: they are collected separately (the
+//! suppression syntax `// lint: allow(<pass>, <reason>)` lives in
+//! comments), and delimiter balance is checked during the lex (the
+//! `style` pass surfaces any violation as a finding).
+
+/// What a token is. `Punct` is a single punctuation character; multi-char
+/// operators appear as consecutive `Punct` tokens (`::` is two colons at
+/// adjacent columns), which is all the pass pipeline needs.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum TokenKind {
+    /// Identifier or keyword (`fn`, `unwrap`, `SIM_KERNEL_VERSION`, …).
+    Ident,
+    /// Raw identifier (`r#type`).
+    RawIdent,
+    /// Lifetime (`'a`, `'static`, `'_`) — *not* a char literal.
+    Lifetime,
+    /// Char literal (`'x'`, `'\n'`, `'\u{1F600}'`).
+    Char,
+    /// Byte literal (`b'x'`).
+    Byte,
+    /// String literal (`"…"`, escapes handled).
+    Str,
+    /// Raw string literal (`r"…"`, `r#"…"#`, any fence width).
+    RawStr,
+    /// Byte string literal (`b"…"`).
+    ByteStr,
+    /// Raw byte string literal (`br#"…"#`).
+    RawByteStr,
+    /// Numeric literal (`42`, `0xFF`, `1_000`, `2.5e-3`, `1f64`).
+    Num,
+    /// Single punctuation character.
+    Punct,
+    /// Opening delimiter: `(`, `[` or `{`.
+    Open,
+    /// Closing delimiter: `)`, `]` or `}`.
+    Close,
+}
+
+/// One lexed token with its 1-based source position.
+#[derive(Debug, Clone)]
+pub struct Token {
+    pub kind: TokenKind,
+    /// The exact source slice (for literals this includes the quotes).
+    pub text: String,
+    pub line: u32,
+    pub col: u32,
+}
+
+impl Token {
+    /// True if this token is an identifier with exactly this text.
+    pub fn is_ident(&self, s: &str) -> bool {
+        self.kind == TokenKind::Ident && self.text == s
+    }
+
+    /// True if this token is a single punctuation char `c`.
+    pub fn is_punct(&self, c: char) -> bool {
+        (self.kind == TokenKind::Punct || self.kind == TokenKind::Open
+            || self.kind == TokenKind::Close)
+            && self.text.len() == c.len_utf8()
+            && self.text.chars().next() == Some(c)
+    }
+}
+
+/// A comment, kept out of the token stream but retained for suppression
+/// parsing. `line` is the line the comment *ends* on, so a multi-line
+/// block comment suppresses findings right below its closing `*/`.
+#[derive(Debug, Clone)]
+pub struct Comment {
+    pub text: String,
+    pub line: u32,
+    pub block: bool,
+}
+
+/// A lexical-integrity violation: unbalanced delimiter, unterminated
+/// string/comment. Surfaced by the `style` pass.
+#[derive(Debug, Clone)]
+pub struct LexError {
+    pub line: u32,
+    pub col: u32,
+    pub message: String,
+}
+
+/// The result of lexing one file.
+#[derive(Debug, Clone, Default)]
+pub struct Lexed {
+    pub tokens: Vec<Token>,
+    pub comments: Vec<Comment>,
+    pub errors: Vec<LexError>,
+}
+
+struct Cursor {
+    chars: Vec<char>,
+    i: usize,
+    line: u32,
+    col: u32,
+}
+
+impl Cursor {
+    fn peek(&self, ahead: usize) -> Option<char> {
+        self.chars.get(self.i + ahead).copied()
+    }
+
+    fn bump(&mut self) -> Option<char> {
+        let c = self.chars.get(self.i).copied()?;
+        self.i += 1;
+        if c == '\n' {
+            self.line += 1;
+            self.col = 1;
+        } else {
+            self.col += 1;
+        }
+        Some(c)
+    }
+}
+
+fn is_ident_start(c: char) -> bool {
+    c.is_alphabetic() || c == '_'
+}
+
+fn is_ident_continue(c: char) -> bool {
+    c.is_alphanumeric() || c == '_'
+}
+
+/// Tokenize one Rust source file. Never fails: malformed input degrades
+/// to `errors` entries plus a best-effort token stream.
+pub fn lex(src: &str) -> Lexed {
+    let mut cur = Cursor { chars: src.chars().collect(), i: 0, line: 1, col: 1 };
+    let mut out = Lexed::default();
+    // delimiter stack: (open char, line, col)
+    let mut stack: Vec<(char, u32, u32)> = Vec::new();
+
+    while let Some(c) = cur.peek(0) {
+        let (line, col) = (cur.line, cur.col);
+        if c.is_whitespace() {
+            cur.bump();
+            continue;
+        }
+        if c == '/' && cur.peek(1) == Some('/') {
+            let mut text = String::new();
+            while let Some(ch) = cur.peek(0) {
+                if ch == '\n' {
+                    break;
+                }
+                text.push(ch);
+                cur.bump();
+            }
+            out.comments.push(Comment { text, line, block: false });
+            continue;
+        }
+        if c == '/' && cur.peek(1) == Some('*') {
+            lex_block_comment(&mut cur, &mut out, line, col);
+            continue;
+        }
+        // string-ish prefixes must be checked before the generic ident
+        // path: r"…", r#"…"#, r#ident, b"…", b'…', br#"…"#
+        if is_ident_start(c) {
+            if let Some(tok) = try_lex_prefixed_literal(&mut cur, &mut out, line, col) {
+                out.tokens.push(tok);
+                continue;
+            }
+            let mut text = String::new();
+            while let Some(ch) = cur.peek(0) {
+                if !is_ident_continue(ch) {
+                    break;
+                }
+                text.push(ch);
+                cur.bump();
+            }
+            out.tokens.push(Token { kind: TokenKind::Ident, text, line, col });
+            continue;
+        }
+        if c == '"' {
+            let text = lex_quoted(&mut cur, &mut out, '"');
+            out.tokens.push(Token { kind: TokenKind::Str, text, line, col });
+            continue;
+        }
+        if c == '\'' {
+            out.tokens.push(lex_tick(&mut cur, &mut out, line, col));
+            continue;
+        }
+        if c.is_ascii_digit() {
+            out.tokens.push(lex_number(&mut cur, line, col));
+            continue;
+        }
+        match c {
+            '(' | '[' | '{' => {
+                stack.push((c, line, col));
+                cur.bump();
+                out.tokens.push(Token { kind: TokenKind::Open, text: c.to_string(), line, col });
+            }
+            ')' | ']' | '}' => {
+                let expected = match c {
+                    ')' => '(',
+                    ']' => '[',
+                    _ => '{',
+                };
+                match stack.pop() {
+                    Some((open, _, _)) if open == expected => {}
+                    Some((open, ol, oc)) => out.errors.push(LexError {
+                        line,
+                        col,
+                        message: format!(
+                            "mismatched delimiter: {c:?} closes {open:?} opened at {ol}:{oc}"
+                        ),
+                    }),
+                    None => out.errors.push(LexError {
+                        line,
+                        col,
+                        message: format!("unmatched closing delimiter {c:?}"),
+                    }),
+                }
+                cur.bump();
+                out.tokens.push(Token { kind: TokenKind::Close, text: c.to_string(), line, col });
+            }
+            _ => {
+                cur.bump();
+                out.tokens.push(Token { kind: TokenKind::Punct, text: c.to_string(), line, col });
+            }
+        }
+    }
+    for (open, ol, oc) in stack {
+        out.errors.push(LexError {
+            line: ol,
+            col: oc,
+            message: format!("unclosed delimiter {open:?}"),
+        });
+    }
+    out
+}
+
+/// Nested block comment: `/* … /* … */ … */` counts depth.
+fn lex_block_comment(cur: &mut Cursor, out: &mut Lexed, line: u32, col: u32) {
+    let mut text = String::new();
+    let mut depth = 0usize;
+    loop {
+        if cur.peek(0) == Some('/') && cur.peek(1) == Some('*') {
+            depth += 1;
+            text.push_str("/*");
+            cur.bump();
+            cur.bump();
+        } else if cur.peek(0) == Some('*') && cur.peek(1) == Some('/') {
+            depth -= 1;
+            text.push_str("*/");
+            cur.bump();
+            cur.bump();
+            if depth == 0 {
+                break;
+            }
+        } else if let Some(ch) = cur.bump() {
+            text.push(ch);
+        } else {
+            out.errors.push(LexError {
+                line,
+                col,
+                message: "unterminated block comment".to_string(),
+            });
+            break;
+        }
+    }
+    out.comments.push(Comment { text, line: cur.line, block: true });
+}
+
+/// `r`/`b`/`rb`/`br` literal prefixes. Returns `None` when the chars at
+/// the cursor are a plain identifier after all (`radius`, `break`, …).
+fn try_lex_prefixed_literal(
+    cur: &mut Cursor,
+    out: &mut Lexed,
+    line: u32,
+    col: u32,
+) -> Option<Token> {
+    let c0 = cur.peek(0)?;
+    match c0 {
+        'r' | 'b' => {}
+        _ => return None,
+    }
+    // how many prefix chars before the quote / fence?
+    let (byte, raw, skip) = match (c0, cur.peek(1)) {
+        ('b', Some('r')) => (true, true, 2),
+        ('b', Some('\'')) => {
+            cur.bump(); // consume 'b'
+            let text = format!("b{}", lex_char_body(cur, out, line, col));
+            return Some(Token { kind: TokenKind::Byte, text, line, col });
+        }
+        ('b', Some('"')) => (true, false, 1),
+        ('r', _) => (false, true, 1),
+        _ => return None,
+    };
+    if raw {
+        // count the `#` fence after the prefix
+        let mut fence = 0usize;
+        while cur.peek(skip + fence) == Some('#') {
+            fence += 1;
+        }
+        match cur.peek(skip + fence) {
+            Some('"') => {}
+            // `r#ident` is a raw identifier, not a raw string
+            Some(ch) if fence == 1 && c0 == 'r' && is_ident_start(ch) => {
+                let mut text = String::new();
+                cur.bump(); // r
+                cur.bump(); // #
+                text.push_str("r#");
+                while let Some(ch) = cur.peek(0) {
+                    if !is_ident_continue(ch) {
+                        break;
+                    }
+                    text.push(ch);
+                    cur.bump();
+                }
+                return Some(Token { kind: TokenKind::RawIdent, text, line, col });
+            }
+            _ => return None, // plain ident starting with r/br
+        }
+        let mut text = String::new();
+        for _ in 0..skip + fence + 1 {
+            text.push(cur.bump().expect("peeked above"));
+        }
+        // raw string: no escapes; ends at `"` followed by `fence` hashes
+        loop {
+            match cur.peek(0) {
+                Some('"') => {
+                    let mut ok = true;
+                    for k in 0..fence {
+                        if cur.peek(1 + k) != Some('#') {
+                            ok = false;
+                            break;
+                        }
+                    }
+                    text.push(cur.bump().expect("peeked"));
+                    if ok {
+                        for _ in 0..fence {
+                            text.push(cur.bump().expect("peeked"));
+                        }
+                        break;
+                    }
+                }
+                Some(_) => text.push(cur.bump().expect("peeked")),
+                None => {
+                    out.errors.push(LexError {
+                        line,
+                        col,
+                        message: "unterminated raw string literal".to_string(),
+                    });
+                    break;
+                }
+            }
+        }
+        let kind = if byte { TokenKind::RawByteStr } else { TokenKind::RawStr };
+        return Some(Token { kind, text, line, col });
+    }
+    // b"…"
+    cur.bump(); // consume 'b'
+    let text = format!("b{}", lex_quoted(cur, out, '"'));
+    Some(Token { kind: TokenKind::ByteStr, text, line, col })
+}
+
+/// Cooked string body starting at the opening quote: backslash escapes
+/// (including `\"` and line continuations) are skipped, not interpreted.
+fn lex_quoted(cur: &mut Cursor, out: &mut Lexed, quote: char) -> String {
+    let (line, col) = (cur.line, cur.col);
+    let mut text = String::new();
+    text.push(cur.bump().expect("caller peeked the quote"));
+    loop {
+        match cur.peek(0) {
+            Some('\\') => {
+                text.push(cur.bump().expect("peeked"));
+                if let Some(e) = cur.bump() {
+                    text.push(e);
+                }
+            }
+            Some(ch) if ch == quote => {
+                text.push(cur.bump().expect("peeked"));
+                break;
+            }
+            Some(_) => text.push(cur.bump().expect("peeked")),
+            None => {
+                out.errors.push(LexError {
+                    line,
+                    col,
+                    message: "unterminated string literal".to_string(),
+                });
+                break;
+            }
+        }
+    }
+    text
+}
+
+/// After a `'`: decide lifetime vs char literal.
+///
+/// The grammar's classic ambiguity: `'a'` is a char, `'a` in `<'a>` is a
+/// lifetime. Rule used here (same as rustc's lexer): it is a char literal
+/// iff the char after the next one is `'` (covers `'x'` for any single
+/// `x`), or the next char is `\` (escape — chars only, lifetimes never
+/// contain one). Otherwise an identifier-start char begins a lifetime.
+fn lex_tick(cur: &mut Cursor, out: &mut Lexed, line: u32, col: u32) -> Token {
+    match (cur.peek(1), cur.peek(2)) {
+        (Some('\\'), _) => {
+            let text = lex_char_body(cur, out, line, col);
+            Token { kind: TokenKind::Char, text, line, col }
+        }
+        (Some(c1), Some('\'')) if c1 != '\'' => {
+            // 'x' — any single scalar, identifier-ish or not
+            let mut text = String::new();
+            for _ in 0..3 {
+                text.push(cur.bump().expect("peeked"));
+            }
+            Token { kind: TokenKind::Char, text, line, col }
+        }
+        (Some(c1), _) if is_ident_start(c1) => {
+            let mut text = String::new();
+            text.push(cur.bump().expect("peeked")); // '
+            while let Some(ch) = cur.peek(0) {
+                if !is_ident_continue(ch) {
+                    break;
+                }
+                text.push(ch);
+                cur.bump();
+            }
+            Token { kind: TokenKind::Lifetime, text, line, col }
+        }
+        _ => {
+            // stray quote — emit as punct, let the style pass see errors
+            cur.bump();
+            Token { kind: TokenKind::Punct, text: "'".to_string(), line, col }
+        }
+    }
+}
+
+/// Char-literal body starting at the opening `'`; handles `\x41`,
+/// `\u{1F600}`, `\'`, `\\` and friends by skipping escaped chars.
+fn lex_char_body(cur: &mut Cursor, out: &mut Lexed, line: u32, col: u32) -> String {
+    let mut text = String::new();
+    text.push(cur.bump().expect("caller peeked the quote"));
+    loop {
+        match cur.peek(0) {
+            Some('\\') => {
+                text.push(cur.bump().expect("peeked"));
+                match cur.bump() {
+                    Some('u') => {
+                        text.push('u');
+                        if cur.peek(0) == Some('{') {
+                            while let Some(ch) = cur.bump() {
+                                text.push(ch);
+                                if ch == '}' {
+                                    break;
+                                }
+                            }
+                        }
+                    }
+                    Some(e) => text.push(e),
+                    None => {}
+                }
+            }
+            Some('\'') => {
+                text.push(cur.bump().expect("peeked"));
+                break;
+            }
+            Some(_) => text.push(cur.bump().expect("peeked")),
+            None => {
+                out.errors.push(LexError {
+                    line,
+                    col,
+                    message: "unterminated char literal".to_string(),
+                });
+                break;
+            }
+        }
+    }
+    text
+}
+
+/// Numeric literal: integers with any radix prefix, `_` separators,
+/// type suffixes, floats with exponents. Lenient — the passes never
+/// interpret the value, they only need the span consumed atomically.
+fn lex_number(cur: &mut Cursor, line: u32, col: u32) -> Token {
+    let mut text = String::new();
+    let mut prev = '\0';
+    while let Some(ch) = cur.peek(0) {
+        let take = if is_ident_continue(ch) {
+            true
+        } else if ch == '.' {
+            // 1.5 yes; 0..10 no; 1.max(2) no (method call on literal)
+            !text.contains('.')
+                && matches!(cur.peek(1), Some(d) if d.is_ascii_digit())
+        } else {
+            // exponent sign: 2.5e-3 / 1e+9 (not in hex literals)
+            (ch == '+' || ch == '-')
+                && (prev == 'e' || prev == 'E')
+                && !text.starts_with("0x")
+                && !text.starts_with("0X")
+        };
+        if !take {
+            break;
+        }
+        text.push(ch);
+        prev = ch;
+        cur.bump();
+    }
+    Token { kind: TokenKind::Num, text, line, col }
+}
+
+/// Index ranges of tokens inside test-only code: a `#[cfg(test)]` or
+/// `#[test]` attribute followed by a `mod` or `fn` item covers that
+/// item's whole brace-delimited body. The panic-path and determinism
+/// passes skip these ranges — test code may panic and may time things.
+pub fn test_spans(tokens: &[Token]) -> Vec<(usize, usize)> {
+    let mut spans = Vec::new();
+    let mut i = 0;
+    while i < tokens.len() {
+        if tokens[i].is_punct('#') && i + 1 < tokens.len() && tokens[i + 1].is_punct('[') {
+            let start = i;
+            let Some(close) = matching(tokens, i + 1) else { break };
+            let is_test_attr = tokens[i + 2..close].iter().any(|t| t.is_ident("test"))
+                && matches!(
+                    tokens.get(i + 2),
+                    Some(t) if t.is_ident("test") || t.is_ident("cfg")
+                );
+            i = close + 1;
+            if !is_test_attr {
+                continue;
+            }
+            // skip any further attributes between this one and the item
+            while i + 1 < tokens.len() && tokens[i].is_punct('#') && tokens[i + 1].is_punct('[') {
+                match matching(tokens, i + 1) {
+                    Some(c) => i = c + 1,
+                    None => return spans,
+                }
+            }
+            // allow qualifiers before the item keyword (`pub(crate) unsafe fn`)
+            let mut j = i;
+            let mut item = None;
+            while let Some(t) = tokens.get(j) {
+                if t.is_ident("mod") || t.is_ident("fn") {
+                    item = Some(j);
+                    break;
+                }
+                let qualifier = matches!(t.kind, TokenKind::Ident)
+                    || t.is_punct('(')
+                    || t.is_punct(')')
+                    || t.is_punct(':');
+                if !qualifier {
+                    break;
+                }
+                j += 1;
+            }
+            let Some(item) = item else { continue };
+            // find the body `{` and cover through its matching `}`
+            let mut k = item;
+            while let Some(t) = tokens.get(k) {
+                if t.is_punct('{') {
+                    break;
+                }
+                if t.is_punct(';') {
+                    // `fn x();` — declaration only, nothing to cover
+                    k = tokens.len();
+                    break;
+                }
+                k += 1;
+            }
+            if let Some(close) = matching(tokens, k) {
+                spans.push((start, close));
+                i = close + 1;
+            }
+        } else {
+            i += 1;
+        }
+    }
+    spans
+}
+
+/// Index of the close delimiter matching the open delimiter at `open`.
+pub fn matching(tokens: &[Token], open: usize) -> Option<usize> {
+    let open_tok = tokens.get(open)?;
+    if open_tok.kind != TokenKind::Open {
+        return None;
+    }
+    let mut depth = 0usize;
+    for (k, t) in tokens.iter().enumerate().skip(open) {
+        match t.kind {
+            TokenKind::Open => depth += 1,
+            TokenKind::Close => {
+                depth -= 1;
+                if depth == 0 {
+                    return Some(k);
+                }
+            }
+            _ => {}
+        }
+    }
+    None
+}
+
+/// True if token index `i` falls inside any of `spans`.
+pub fn in_spans(spans: &[(usize, usize)], i: usize) -> bool {
+    spans.iter().any(|&(a, b)| a <= i && i <= b)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn kinds(src: &str) -> Vec<(TokenKind, String)> {
+        lex(src).tokens.into_iter().map(|t| (t.kind, t.text)).collect()
+    }
+
+    #[test]
+    fn raw_strings_with_fences() {
+        let toks = kinds(r####"let s = r#"has "quotes" and }{ inside"#;"####);
+        assert!(toks
+            .iter()
+            .any(|(k, t)| *k == TokenKind::RawStr && t.contains("}{ inside")));
+        // delimiters inside the raw string must not unbalance the lex
+        assert!(lex(r####"fn f() { let s = r#"}}}"#; }"####).errors.is_empty());
+        // fence of width 2
+        let toks = kinds(r#####"r##"inner "# still inside"##"#####);
+        assert_eq!(toks.len(), 1);
+        assert_eq!(toks[0].0, TokenKind::RawStr);
+    }
+
+    #[test]
+    fn raw_ident_vs_raw_string() {
+        let toks = kinds("r#type r#\"str\"#");
+        assert_eq!(toks[0], (TokenKind::RawIdent, "r#type".to_string()));
+        assert_eq!(toks[1].0, TokenKind::RawStr);
+    }
+
+    #[test]
+    fn nested_block_comments() {
+        let lexed = lex("a /* outer /* inner */ still outer */ b");
+        assert_eq!(lexed.tokens.len(), 2);
+        assert_eq!(lexed.comments.len(), 1);
+        assert!(lexed.comments[0].text.contains("inner"));
+        assert!(lexed.errors.is_empty());
+        // unterminated nesting is an error, not a hang
+        assert!(!lex("/* open /* deeper */ never closed").errors.is_empty());
+    }
+
+    #[test]
+    fn lifetimes_vs_char_literals() {
+        let toks = kinds("fn f<'a>(x: &'a str) -> char { 'a' }");
+        let lifetimes: Vec<_> =
+            toks.iter().filter(|(k, _)| *k == TokenKind::Lifetime).collect();
+        let chars: Vec<_> = toks.iter().filter(|(k, _)| *k == TokenKind::Char).collect();
+        assert_eq!(lifetimes.len(), 2);
+        assert_eq!(chars.len(), 1);
+        assert_eq!(chars[0].1, "'a'");
+        // 'static in bounds, escaped quote char, unicode escape
+        let toks = kinds(r"fn g<T: 'static>() { let a = '\''; let b = '\u{1F600}'; }");
+        assert_eq!(
+            toks.iter().filter(|(k, _)| *k == TokenKind::Lifetime).count(),
+            1
+        );
+        assert_eq!(toks.iter().filter(|(k, _)| *k == TokenKind::Char).count(), 2);
+    }
+
+    #[test]
+    fn byte_and_raw_byte_strings() {
+        let toks = kinds(r###"let x = b"bytes"; let y = br#"raw { bytes"#; let z = b'q';"###);
+        assert!(toks.iter().any(|(k, _)| *k == TokenKind::ByteStr));
+        assert!(toks
+            .iter()
+            .any(|(k, t)| *k == TokenKind::RawByteStr && t.contains("{ bytes")));
+        assert!(toks.iter().any(|(k, t)| *k == TokenKind::Byte && t == "b'q'"));
+        // and none of the braces inside unbalance anything
+        assert!(lex(r###"fn f() { let y = br#"{{{"#; }"###).errors.is_empty());
+    }
+
+    #[test]
+    fn delimiters_inside_cooked_strings() {
+        let lexed = lex(r#"fn f() { let s = "ignore } these { \" () ["; }"#);
+        assert!(lexed.errors.is_empty());
+        let opens = lexed.tokens.iter().filter(|t| t.kind == TokenKind::Open).count();
+        let closes = lexed.tokens.iter().filter(|t| t.kind == TokenKind::Close).count();
+        assert_eq!(opens, 2); // fn parens + body brace
+        assert_eq!(closes, 2);
+    }
+
+    #[test]
+    fn unbalanced_delimiters_reported() {
+        assert!(!lex("fn f() { (").errors.is_empty());
+        assert!(!lex("fn f() } ").errors.is_empty());
+        let mismatched = lex("fn f() { )");
+        assert!(mismatched.errors.iter().any(|e| e.message.contains("closes")));
+    }
+
+    #[test]
+    fn numbers_do_not_eat_ranges_or_methods() {
+        let toks = kinds("0..10");
+        assert_eq!(toks[0], (TokenKind::Num, "0".to_string()));
+        assert_eq!(toks[3], (TokenKind::Num, "10".to_string()));
+        let toks = kinds("2.5e-3 0xFF_u32 1_000 7.max(2)");
+        assert_eq!(toks[0], (TokenKind::Num, "2.5e-3".to_string()));
+        assert_eq!(toks[1], (TokenKind::Num, "0xFF_u32".to_string()));
+        assert_eq!(toks[2], (TokenKind::Num, "1_000".to_string()));
+        assert_eq!(toks[3], (TokenKind::Num, "7".to_string()));
+        assert_eq!(toks[5].1, "max");
+    }
+
+    #[test]
+    fn line_comment_suppression_text_is_kept() {
+        let lexed = lex("let x = 1; // lint: allow(style, demo)\nlet y = 2;");
+        assert_eq!(lexed.comments.len(), 1);
+        assert!(lexed.comments[0].text.contains("lint: allow(style, demo)"));
+        assert_eq!(lexed.comments[0].line, 1);
+    }
+
+    #[test]
+    fn test_spans_cover_cfg_test_mod_and_test_fns() {
+        let src = "
+fn live() { x.unwrap(); }
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn t() { y.unwrap(); }
+}
+#[test]
+fn free_test() { z.unwrap(); }
+";
+        let lexed = lex(src);
+        let spans = test_spans(&lexed.tokens);
+        assert_eq!(spans.len(), 2); // the mod (covers its inner fn) + free fn
+        let unwraps: Vec<usize> = lexed
+            .tokens
+            .iter()
+            .enumerate()
+            .filter(|(_, t)| t.is_ident("unwrap"))
+            .map(|(i, _)| i)
+            .collect();
+        assert_eq!(unwraps.len(), 3);
+        assert!(!in_spans(&spans, unwraps[0])); // live code
+        assert!(in_spans(&spans, unwraps[1])); // inside cfg(test) mod
+        assert!(in_spans(&spans, unwraps[2])); // inside #[test] fn
+    }
+
+    #[test]
+    fn positions_are_one_based_and_line_accurate() {
+        let lexed = lex("a\n  b\n");
+        assert_eq!((lexed.tokens[0].line, lexed.tokens[0].col), (1, 1));
+        assert_eq!((lexed.tokens[1].line, lexed.tokens[1].col), (2, 3));
+    }
+}

@@ -1,0 +1,376 @@
+//! Self-hosted static analysis: the repo's invariants as executable passes.
+//!
+//! Every PR before this subsystem was verified by hand: a manual
+//! balanced-delimiter lex of all `.rs` files, a >100-column scan, and
+//! cross-greps for wall-clock calls and panic paths (CHANGES.md, ROADMAP
+//! debt item). This module makes those invariants machine-checkable: it
+//! tokenizes the repository's own sources with a real Rust lexer
+//! ([`lexer`]) and runs a pass pipeline over the token streams:
+//!
+//! * `determinism` — no wall-clock reads outside the serving layer and
+//!   no `HashMap`/`HashSet` iteration: reports must be byte-identical
+//!   across runs and thread counts.
+//! * `panic-path` — no `unwrap()`/`expect(`/`panic!` in non-test `sim/`
+//!   kernel code; kernels return structured errors (the PR 6 policy,
+//!   [`MvuBatch::ensure_vector_shapes`]).
+//! * `kernel-drift` — `rust/src/sim/**` fingerprints match the
+//!   committed manifest for the current [`SIM_KERNEL_VERSION`], so sim
+//!   changes force a version bump and the cache-key rule stays honest.
+//! * `doc-drift` — every backtick-quoted `path::item` in DESIGN.md and
+//!   README.md resolves to a real item in the tree.
+//! * `style` — delimiters balance (lexer-verified) and no line exceeds
+//!   100 columns.
+//!
+//! Findings are suppressed per site with a comment on the same line or
+//! the line above: `// lint: allow(<pass>, <reason>)` in Rust sources,
+//! `<!-- lint: allow(<pass>, <reason>) -->` in markdown. The pipeline is
+//! surfaced as the `finn-mvu lint` CLI subcommand and enforced by
+//! `tests/lint_clean.rs`, which fails on any unsuppressed finding.
+//!
+//! [`MvuBatch::ensure_vector_shapes`]: crate::sim::MvuBatch::ensure_vector_shapes
+//! [`SIM_KERNEL_VERSION`]: crate::sim::SIM_KERNEL_VERSION
+
+pub mod determinism;
+pub mod doc_drift;
+pub mod drift;
+pub mod lexer;
+pub mod panic_path;
+pub mod report;
+pub mod style;
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{Context, Result};
+
+pub use report::{findings_table, findings_to_json, summary_table};
+
+/// Names of all registered passes, in pipeline order.
+pub const PASS_NAMES: [&str; 5] =
+    ["determinism", "panic-path", "kernel-drift", "doc-drift", "style"];
+
+/// Repo-relative path of the committed sim fingerprint manifest.
+pub const FINGERPRINT_REL: &str = "rust/src/analysis/sim.fingerprint";
+
+/// One analyzed finding. `suppressed` carries the reason text of the
+/// matching `lint: allow` comment when one covers this site.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Finding {
+    pub pass: &'static str,
+    /// Repo-relative path with `/` separators.
+    pub file: String,
+    /// 1-based line the finding anchors to.
+    pub line: u32,
+    pub message: String,
+    pub suppressed: Option<String>,
+}
+
+/// A per-site suppression parsed from a comment.
+#[derive(Debug, Clone)]
+pub struct Suppression {
+    pub pass: String,
+    /// Line the comment ends on; covers findings on this line and the next.
+    pub line: u32,
+    pub reason: String,
+}
+
+/// One lexed Rust source file.
+#[derive(Debug)]
+pub struct SourceFile {
+    /// Repo-relative path with `/` separators (`rust/src/sim/mod.rs`).
+    pub rel: String,
+    pub text: String,
+    pub lex: lexer::Lexed,
+    pub suppressions: Vec<Suppression>,
+}
+
+/// One markdown document checked by the doc-drift pass.
+#[derive(Debug)]
+pub struct DocFile {
+    pub rel: String,
+    pub text: String,
+    pub suppressions: Vec<Suppression>,
+}
+
+/// Everything the passes need, loaded once: lexed sources, docs, the
+/// committed fingerprint manifest and the current kernel version.
+#[derive(Debug)]
+pub struct RepoModel {
+    pub root: PathBuf,
+    pub files: Vec<SourceFile>,
+    pub docs: Vec<DocFile>,
+    /// Raw text of [`FINGERPRINT_REL`], if committed.
+    pub fingerprint_manifest: Option<String>,
+    /// `SIM_KERNEL_VERSION`, parsed from the `sim/mod.rs` token stream.
+    pub kernel_version: Option<u32>,
+}
+
+impl RepoModel {
+    /// Load and lex the repository at `root` (the directory containing
+    /// `rust/` and DESIGN.md). Scans `rust/src`, `rust/tests`,
+    /// `rust/benches` and `examples` for `.rs` files, in sorted order so
+    /// every run sees an identical model.
+    pub fn load(root: &Path) -> Result<RepoModel> {
+        let mut rels: Vec<String> = Vec::new();
+        for dir in ["rust/src", "rust/tests", "rust/benches", "examples"] {
+            collect_rs(root, Path::new(dir), &mut rels)
+                .with_context(|| format!("scanning {dir}"))?;
+        }
+        rels.sort();
+        let mut files = Vec::with_capacity(rels.len());
+        for rel in rels {
+            let text = std::fs::read_to_string(root.join(&rel))
+                .with_context(|| format!("reading {rel}"))?;
+            files.push(SourceFile::parse(rel, text));
+        }
+        let mut docs = Vec::new();
+        for rel in ["DESIGN.md", "README.md"] {
+            let path = root.join(rel);
+            if path.is_file() {
+                let text =
+                    std::fs::read_to_string(&path).with_context(|| format!("reading {rel}"))?;
+                let suppressions = markdown_suppressions(&text);
+                docs.push(DocFile { rel: rel.to_string(), text, suppressions });
+            }
+        }
+        let fingerprint_manifest = std::fs::read_to_string(root.join(FINGERPRINT_REL)).ok();
+        let kernel_version = files
+            .iter()
+            .find(|f| f.rel == "rust/src/sim/mod.rs")
+            .and_then(|f| drift::parse_kernel_version(&f.lex.tokens));
+        let root = root.to_path_buf();
+        Ok(RepoModel { root, files, docs, fingerprint_manifest, kernel_version })
+    }
+
+    /// The sim kernel sources covered by the fingerprint, sorted by path.
+    pub fn sim_files(&self) -> impl Iterator<Item = &SourceFile> {
+        self.files.iter().filter(|f| f.rel.starts_with("rust/src/sim/"))
+    }
+}
+
+impl SourceFile {
+    /// Lex `text` and extract its suppression comments.
+    pub fn parse(rel: String, text: String) -> SourceFile {
+        let lex = lexer::lex(&text);
+        let suppressions =
+            lex.comments.iter().filter_map(|c| parse_suppression(&c.text, c.line)).collect();
+        SourceFile { rel, text, lex, suppressions }
+    }
+}
+
+fn collect_rs(root: &Path, dir: &Path, out: &mut Vec<String>) -> Result<()> {
+    let abs = root.join(dir);
+    if !abs.is_dir() {
+        return Ok(());
+    }
+    for entry in std::fs::read_dir(&abs).with_context(|| format!("listing {}", abs.display()))? {
+        let entry = entry?;
+        let path = entry.path();
+        let name = entry.file_name().to_string_lossy().into_owned();
+        if path.is_dir() {
+            collect_rs(root, &dir.join(&name), out)?;
+        } else if name.ends_with(".rs") {
+            let rel = dir.join(&name);
+            out.push(rel.to_string_lossy().replace('\\', "/"));
+        }
+    }
+    Ok(())
+}
+
+/// Parse `lint: allow(<pass>, <reason>)` out of one comment's text.
+pub fn parse_suppression(comment: &str, line: u32) -> Option<Suppression> {
+    let start = comment.find("lint: allow(")?;
+    let inner = &comment[start + "lint: allow(".len()..];
+    let close = inner.find(')')?;
+    let body = &inner[..close];
+    let (pass, reason) = match body.split_once(',') {
+        Some((p, r)) => (p.trim(), r.trim()),
+        None => (body.trim(), ""),
+    };
+    if pass.is_empty() {
+        return None;
+    }
+    Some(Suppression { pass: pass.to_string(), line, reason: reason.to_string() })
+}
+
+/// Extract `<!-- lint: allow(pass, reason) -->` suppressions from markdown.
+pub fn markdown_suppressions(text: &str) -> Vec<Suppression> {
+    text.lines()
+        .enumerate()
+        .filter(|(_, l)| l.contains("<!--"))
+        .filter_map(|(i, l)| parse_suppression(l, i as u32 + 1))
+        .collect()
+}
+
+/// The outcome of one pipeline run.
+#[derive(Debug, Default)]
+pub struct Analysis {
+    /// All findings, suppressed ones included, ordered by pass then site.
+    pub findings: Vec<Finding>,
+}
+
+impl Analysis {
+    pub fn unsuppressed(&self) -> impl Iterator<Item = &Finding> {
+        self.findings.iter().filter(|f| f.suppressed.is_none())
+    }
+
+    /// `(findings, suppressed)` counts for one pass.
+    pub fn counts(&self, pass: &str) -> (usize, usize) {
+        let mut active = 0;
+        let mut suppressed = 0;
+        for f in self.findings.iter().filter(|f| f.pass == pass) {
+            if f.suppressed.is_some() {
+                suppressed += 1;
+            } else {
+                active += 1;
+            }
+        }
+        (active, suppressed)
+    }
+
+    pub fn is_clean(&self) -> bool {
+        self.unsuppressed().next().is_none()
+    }
+}
+
+/// Run the named passes (see [`PASS_NAMES`]) over a loaded model and
+/// apply per-site suppressions.
+pub fn run_passes(model: &RepoModel, passes: &[&str]) -> Result<Analysis> {
+    let mut findings = Vec::new();
+    for &name in passes {
+        match name {
+            "determinism" => determinism::run(model, &mut findings),
+            "panic-path" => panic_path::run(model, &mut findings),
+            "kernel-drift" => drift::run(model, &mut findings),
+            "doc-drift" => doc_drift::run(model, &mut findings),
+            "style" => style::run(model, &mut findings),
+            other => anyhow::bail!(
+                "unknown pass {other:?} (known: {})",
+                PASS_NAMES.join(", ")
+            ),
+        }
+    }
+    apply_suppressions(model, &mut findings);
+    Ok(Analysis { findings })
+}
+
+/// Run the full pipeline.
+pub fn run(model: &RepoModel) -> Result<Analysis> {
+    run_passes(model, &PASS_NAMES)
+}
+
+fn apply_suppressions(model: &RepoModel, findings: &mut [Finding]) {
+    for f in findings.iter_mut() {
+        let suppressions: &[Suppression] =
+            match model.files.iter().find(|s| s.rel == f.file) {
+                Some(src) => &src.suppressions,
+                None => match model.docs.iter().find(|d| d.rel == f.file) {
+                    Some(doc) => &doc.suppressions,
+                    None => continue,
+                },
+            };
+        // a comment suppresses findings on its own line (trailing form)
+        // and on the line right below it (comment-above form)
+        if let Some(s) = suppressions
+            .iter()
+            .find(|s| s.pass == f.pass && (s.line == f.line || s.line + 1 == f.line))
+        {
+            f.suppressed = Some(if s.reason.is_empty() {
+                "allowed".to_string()
+            } else {
+                s.reason.clone()
+            });
+        }
+    }
+}
+
+/// Locate the repository root: the compile-time manifest directory's
+/// parent when it still exists (the normal case for `cargo test` and
+/// `cargo run` from a checkout), otherwise walk up from the current
+/// directory looking for the `rust/Cargo.toml` + `ROADMAP.md` pair.
+pub fn repo_root() -> Result<PathBuf> {
+    let compiled = Path::new(env!("CARGO_MANIFEST_DIR"));
+    if let Some(root) = compiled.parent() {
+        if root.join("rust/Cargo.toml").is_file() {
+            return Ok(root.to_path_buf());
+        }
+    }
+    let mut dir = std::env::current_dir().context("cwd")?;
+    loop {
+        if dir.join("rust/Cargo.toml").is_file() && dir.join("ROADMAP.md").is_file() {
+            return Ok(dir);
+        }
+        if !dir.pop() {
+            anyhow::bail!(
+                "cannot locate the repository root (no rust/Cargo.toml above the \
+                 current directory); pass --root"
+            );
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn suppression_parsing() {
+        let s = parse_suppression("// lint: allow(panic-path, FSM invariant)", 7).unwrap();
+        assert_eq!(s.pass, "panic-path");
+        assert_eq!(s.reason, "FSM invariant");
+        assert_eq!(s.line, 7);
+        let s = parse_suppression("/* lint: allow(style) */", 1).unwrap();
+        assert_eq!(s.pass, "style");
+        assert_eq!(s.reason, "");
+        assert!(parse_suppression("// plain comment", 1).is_none());
+        assert!(parse_suppression("// lint: allow()", 1).is_none());
+    }
+
+    #[test]
+    fn markdown_suppression_parsing() {
+        let md = "text\n<!-- lint: allow(doc-drift, removed API shown on purpose) -->\nmore";
+        let s = markdown_suppressions(md);
+        assert_eq!(s.len(), 1);
+        assert_eq!(s[0].pass, "doc-drift");
+        assert_eq!(s[0].line, 2);
+    }
+
+    #[test]
+    fn suppression_covers_same_and_next_line() {
+        let src = "fn f() {\n    // lint: allow(style, demo)\n    long();\n}\n".to_string();
+        let file = SourceFile::parse("rust/src/x.rs".to_string(), src);
+        let model = RepoModel {
+            root: PathBuf::new(),
+            files: vec![file],
+            docs: Vec::new(),
+            fingerprint_manifest: None,
+            kernel_version: None,
+        };
+        let mut findings = vec![
+            Finding {
+                pass: "style",
+                file: "rust/src/x.rs".to_string(),
+                line: 3,
+                message: "m".to_string(),
+                suppressed: None,
+            },
+            Finding {
+                pass: "style",
+                file: "rust/src/x.rs".to_string(),
+                line: 2,
+                message: "m".to_string(),
+                suppressed: None,
+            },
+            Finding {
+                pass: "determinism",
+                file: "rust/src/x.rs".to_string(),
+                line: 3,
+                message: "m".to_string(),
+                suppressed: None,
+            },
+        ];
+        apply_suppressions(&model, &mut findings);
+        assert!(findings[0].suppressed.is_some()); // next line
+        assert!(findings[1].suppressed.is_some()); // same line
+        assert!(findings[2].suppressed.is_none()); // other pass untouched
+    }
+}

@@ -1,0 +1,106 @@
+//! `panic-path` pass: structured errors only in the simulation kernels.
+//!
+//! PR 6 established the policy that malformed input reaching `sim::`
+//! entry points must produce a structured, kernel-identical error —
+//! never a panic (see `MvuBatch::ensure_vector_shapes`). This pass
+//! enforces the policy mechanically: any `unwrap()`, `expect(` or
+//! `panic!` in **non-test** code under `rust/src/sim/` is a finding.
+//!
+//! Test modules (`#[cfg(test)]`, `#[test]`) are exempt — a test
+//! asserting its own setup may panic. Internal invariants that are
+//! provably unreachable from user input stay as `expect`/`panic!` but
+//! must carry a per-site `// lint: allow(panic-path, <reason>)`, which
+//! doubles as documentation of *why* the site cannot fire.
+//! `assert!`-family macros are deliberately out of scope: the repo
+//! treats them as invariant backstops (they compile out of the
+//! reasoning the way `debug_assert!` does in release), and the paper's
+//! determinism argument rests on error *values*, not on aborts.
+
+use super::lexer::{in_spans, test_spans, Token, TokenKind};
+use super::{Finding, RepoModel};
+
+pub fn run(model: &RepoModel, out: &mut Vec<Finding>) {
+    for file in model.files.iter().filter(|f| f.rel.starts_with("rust/src/sim/")) {
+        scan_tokens(&file.rel, &file.lex.tokens, out);
+    }
+}
+
+/// Scan one token stream; separated from [`run`] so tests can feed
+/// synthetic sources.
+pub fn scan_tokens(rel: &str, tokens: &[Token], out: &mut Vec<Finding>) {
+    let spans = test_spans(tokens);
+    for (i, t) in tokens.iter().enumerate() {
+        if t.kind != TokenKind::Ident || in_spans(&spans, i) {
+            continue;
+        }
+        let finding = |msg: String| Finding {
+            pass: "panic-path",
+            file: rel.to_string(),
+            line: t.line,
+            message: msg,
+            suppressed: None,
+        };
+        let prev_dot = i > 0 && tokens[i - 1].is_punct('.');
+        let next_open_paren = tokens.get(i + 1).is_some_and(|n| n.is_punct('('));
+        match t.text.as_str() {
+            "unwrap" if prev_dot && next_open_paren => out.push(finding(
+                ".unwrap() in kernel code — return a structured error \
+                 or annotate the invariant"
+                    .to_string(),
+            )),
+            "expect" if prev_dot && next_open_paren => out.push(finding(
+                ".expect(..) in kernel code — return a structured error \
+                 or annotate the invariant"
+                    .to_string(),
+            )),
+            "panic" if tokens.get(i + 1).is_some_and(|n| n.is_punct('!')) => out.push(
+                finding("panic! in kernel code — return a structured error".to_string()),
+            ),
+            _ => {}
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::lexer::lex;
+    use super::*;
+
+    fn scan(src: &str) -> Vec<Finding> {
+        let mut out = Vec::new();
+        scan_tokens("rust/src/sim/x.rs", &lex(src).tokens, &mut out);
+        out
+    }
+
+    #[test]
+    fn flags_live_code_only() {
+        let src = "
+fn live(x: Option<u32>) -> u32 { x.unwrap() }
+fn msg(x: Option<u32>) -> u32 { x.expect(\"set\") }
+fn boom() { panic!(\"no\"); }
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn fine() { None::<u32>.unwrap(); panic!(); }
+}
+";
+        let out = scan(src);
+        assert_eq!(out.len(), 3);
+        assert_eq!(out[0].line, 2);
+        assert_eq!(out[1].line, 3);
+        assert_eq!(out[2].line, 4);
+    }
+
+    #[test]
+    fn ignores_lookalikes() {
+        // unwrap_or / expect-named idents / panic as plain word
+        let out = scan(
+            "fn f(x: Option<u32>) -> u32 { x.unwrap_or(0) }
+             fn expect(n: u32) -> u32 { n }
+             fn g() -> u32 { expect(3) }
+             // comment saying unwrap() and panic!
+             fn h() -> &'static str { \"don't panic!\" }",
+        );
+        assert!(out.is_empty(), "{out:?}");
+    }
+}

@@ -1,0 +1,125 @@
+//! Rendering for `finn-mvu lint`: the per-pass summary table, the
+//! finding list, and the `--json` form (via the in-tree `util::json`
+//! writer, so output is deterministic like every other report).
+
+use crate::util::json::Json;
+use crate::util::table::Table;
+
+use super::{Analysis, Finding, PASS_NAMES};
+
+/// Per-pass summary: findings / suppressed / status.
+pub fn summary_table(analysis: &Analysis) -> String {
+    let mut t = Table::new(vec!["pass", "findings", "suppressed", "status"]);
+    for pass in PASS_NAMES {
+        let (active, suppressed) = analysis.counts(pass);
+        let status = if active == 0 { "ok" } else { "FAIL" };
+        t.row(vec![
+            pass.to_string(),
+            active.to_string(),
+            suppressed.to_string(),
+            status.to_string(),
+        ]);
+    }
+    t.render()
+}
+
+/// One line per unsuppressed finding: `file:line  [pass] message`.
+pub fn findings_table(analysis: &Analysis) -> String {
+    let mut out = String::new();
+    for f in analysis.unsuppressed() {
+        out.push_str(&render_finding(f));
+        out.push('\n');
+    }
+    out
+}
+
+pub fn render_finding(f: &Finding) -> String {
+    format!("{}:{}  [{}] {}", f.file, f.line, f.pass, f.message)
+}
+
+/// The full analysis as a JSON object:
+/// `{"clean": bool, "passes": {name: {findings, suppressed}}, "findings": [...]}`.
+/// Suppressed findings are included with their reason so the JSON form
+/// is a complete audit of every annotated site.
+pub fn findings_to_json(analysis: &Analysis) -> Json {
+    let mut passes = Json::obj();
+    for pass in PASS_NAMES {
+        let (active, suppressed) = analysis.counts(pass);
+        let mut p = Json::obj();
+        p.set("findings", Json::from_i64(active as i64));
+        p.set("suppressed", Json::from_i64(suppressed as i64));
+        passes.set(pass, p);
+    }
+    let findings = analysis
+        .findings
+        .iter()
+        .map(|f| {
+            let mut o = Json::obj();
+            o.set("pass", Json::Str(f.pass.to_string()));
+            o.set("file", Json::Str(f.file.clone()));
+            o.set("line", Json::from_i64(f.line as i64));
+            o.set("message", Json::Str(f.message.clone()));
+            match &f.suppressed {
+                Some(reason) => o.set("suppressed", Json::Str(reason.clone())),
+                None => o.set("suppressed", Json::Null),
+            };
+            o
+        })
+        .collect();
+    let mut root = Json::obj();
+    root.set("clean", Json::Bool(analysis.is_clean()));
+    root.set("passes", passes);
+    root.set("findings", Json::Arr(findings));
+    root
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn analysis() -> Analysis {
+        Analysis {
+            findings: vec![
+                Finding {
+                    pass: "style",
+                    file: "rust/src/a.rs".to_string(),
+                    line: 3,
+                    message: "line is 120 columns (max 100)".to_string(),
+                    suppressed: None,
+                },
+                Finding {
+                    pass: "panic-path",
+                    file: "rust/src/sim/b.rs".to_string(),
+                    line: 9,
+                    message: "panic! in kernel code".to_string(),
+                    suppressed: Some("FSM invariant".to_string()),
+                },
+            ],
+        }
+    }
+
+    #[test]
+    fn table_and_findings_render() {
+        let a = analysis();
+        let summary = summary_table(&a);
+        assert!(summary.contains("style"));
+        assert!(summary.contains("FAIL"));
+        let list = findings_table(&a);
+        assert!(list.contains("rust/src/a.rs:3  [style]"));
+        // suppressed finding is not listed
+        assert!(!list.contains("b.rs"));
+    }
+
+    #[test]
+    fn json_shape() {
+        let j = findings_to_json(&analysis());
+        assert_eq!(j.get("clean").as_bool(), Some(false));
+        assert_eq!(j.get("passes").get("style").get("findings").as_i64(), Some(1));
+        assert_eq!(j.get("passes").get("panic-path").get("suppressed").as_i64(), Some(1));
+        assert_eq!(j.get("findings").at(0).get("line").as_i64(), Some(3));
+        assert_eq!(
+            j.get("findings").at(1).get("suppressed").as_str(),
+            Some("FSM invariant")
+        );
+    }
+}

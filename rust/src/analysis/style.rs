@@ -1,0 +1,82 @@
+//! `style` pass: the mechanical source discipline, formalized.
+//!
+//! Two rules, both previously enforced by hand before every commit:
+//!
+//! * **lexical integrity** — every file must lex cleanly: balanced
+//!   `()[]{}` delimiters (checked by the real lexer, so braces inside
+//!   string literals and comments never count) and no unterminated
+//!   string/char/comment. This is the automated form of the
+//!   balanced-delimiter lex that verified PRs 1–7.
+//! * **line length** — no line longer than 100 columns (counted in
+//!   chars), the repo-wide wrap rule from PR 3.
+
+use super::{Finding, RepoModel};
+
+pub const MAX_COLUMNS: usize = 100;
+
+pub fn run(model: &RepoModel, out: &mut Vec<Finding>) {
+    for file in &model.files {
+        for err in &file.lex.errors {
+            out.push(Finding {
+                pass: "style",
+                file: file.rel.clone(),
+                line: err.line,
+                message: format!("lexical integrity: {} (col {})", err.message, err.col),
+                suppressed: None,
+            });
+        }
+        for (i, line) in file.text.lines().enumerate() {
+            let cols = line.chars().count();
+            if cols > MAX_COLUMNS {
+                out.push(Finding {
+                    pass: "style",
+                    file: file.rel.clone(),
+                    line: i as u32 + 1,
+                    message: format!("line is {cols} columns (max {MAX_COLUMNS})"),
+                    suppressed: None,
+                });
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::{RepoModel, SourceFile};
+    use super::*;
+    use std::path::PathBuf;
+
+    fn model_of(rel: &str, src: &str) -> RepoModel {
+        RepoModel {
+            root: PathBuf::new(),
+            files: vec![SourceFile::parse(rel.to_string(), src.to_string())],
+            docs: Vec::new(),
+            fingerprint_manifest: None,
+            kernel_version: None,
+        }
+    }
+
+    #[test]
+    fn flags_long_lines_and_unbalanced_delims() {
+        let long = format!("fn f() {{}}\n// {}\n", "x".repeat(120));
+        let m = model_of("rust/src/a.rs", &long);
+        let mut out = Vec::new();
+        run(&m, &mut out);
+        assert_eq!(out.len(), 1);
+        assert_eq!(out[0].line, 2);
+        assert!(out[0].message.contains("columns"));
+
+        let m = model_of("rust/src/b.rs", "fn f() { (((\n");
+        let mut out = Vec::new();
+        run(&m, &mut out);
+        assert!(out.iter().any(|f| f.message.contains("unclosed")));
+    }
+
+    #[test]
+    fn string_braces_are_not_violations() {
+        let m = model_of("rust/src/c.rs", "fn f() -> &'static str { \"}}}{{{\" }\n");
+        let mut out = Vec::new();
+        run(&m, &mut out);
+        assert!(out.is_empty());
+    }
+}

@@ -97,6 +97,12 @@
 //! # Ok::<(), finn_mvu::eval::EvalError>(())
 //! ```
 //!
+//! The repository checks its own invariants: [`analysis`] lexes every
+//! `.rs` source in the tree and runs a static-analysis pass pipeline
+//! (determinism, panic paths in kernels, sim-fingerprint drift against
+//! `SIM_KERNEL_VERSION`, doc drift, style), surfaced as `finn-mvu lint`
+//! and enforced by `tests/lint_clean.rs`.
+//!
 //! Migrating from the 0.1 free functions: build points with
 //! [`cfg::DesignPoint`] instead of the removed `LayerParams::fc`/`conv`
 //! constructors, and evaluate through a [`eval::Session`] instead of
@@ -104,6 +110,7 @@
 //! underlying primitives, but now take `&ValidatedParams`). See README
 //! §Migrating.
 
+pub mod analysis;
 pub mod cfg;
 pub mod coordinator;
 pub mod device;

@@ -11,9 +11,11 @@
 //!   nid       serve the NID MLP through the dataflow pipeline (PJRT)
 //!   device    simulate a multi-unit accelerator card under seeded traffic
 //!   compile   demo the FINN-style compiler flow (lower -> fold -> analyze)
+//!   lint      run the self-hosted static-analysis passes over this repo
 
 use anyhow::{bail, Context, Result};
 
+use finn_mvu::analysis;
 use finn_mvu::cfg::{DesignPoint, SimdType, ValidatedParams};
 use finn_mvu::coordinator::{PipelineConfig, Request};
 use finn_mvu::estimate::{estimate, Style};
@@ -57,6 +59,8 @@ COMMANDS:
             [--workload nid|mvu (+ run shape flags)] [--slow]
             [--trace-every CYC] [--threads N] [--json] [--pretty]
   compile   [--target-cycles N] [--lut-budget N]
+  lint      [--pass determinism|panic-path|kernel-drift|doc-drift|style[,..]]
+            [--root DIR] [--update-fingerprint] [--json] [--pretty]
   version
 ";
 
@@ -435,6 +439,59 @@ fn cmd_compile(a: &Args) -> Result<()> {
     Ok(())
 }
 
+fn cmd_lint(a: &Args) -> Result<()> {
+    a.check_known(&["pass", "root", "update-fingerprint", "json", "pretty"])
+        .map_err(|e| anyhow::anyhow!("{e}"))?;
+    let root = match a.get("root") {
+        Some(r) => std::path::PathBuf::from(r),
+        None => analysis::repo_root()?,
+    };
+    let model = analysis::RepoModel::load(&root)
+        .with_context(|| format!("loading repo model from {}", root.display()))?;
+
+    if a.get_bool("update-fingerprint") {
+        let version = model
+            .kernel_version
+            .context("cannot parse SIM_KERNEL_VERSION from rust/src/sim/mod.rs")?;
+        let entries = analysis::drift::current_entries(&model);
+        let path = root.join(analysis::FINGERPRINT_REL);
+        std::fs::write(&path, analysis::drift::render_manifest(version, &entries))
+            .with_context(|| format!("writing {}", path.display()))?;
+        println!(
+            "wrote {} ({} sim sources at SIM_KERNEL_VERSION {version})",
+            analysis::FINGERPRINT_REL,
+            entries.len()
+        );
+        return Ok(());
+    }
+
+    let passes: Vec<&str> = match a.get("pass") {
+        Some(p) => p.split(',').map(str::trim).collect(),
+        None => analysis::PASS_NAMES.to_vec(),
+    };
+    let result = analysis::run_passes(&model, &passes)?;
+
+    if a.get_bool("json") {
+        let doc = analysis::findings_to_json(&result);
+        if a.get_bool("pretty") {
+            println!("{}", doc.to_pretty(2));
+        } else {
+            println!("{doc}");
+        }
+    } else {
+        print!("{}", analysis::summary_table(&result));
+        let list = analysis::findings_table(&result);
+        if !list.is_empty() {
+            println!("\n{list}");
+        }
+    }
+    let unsuppressed = result.unsuppressed().count();
+    if unsuppressed > 0 {
+        bail!("{unsuppressed} unsuppressed lint finding(s)");
+    }
+    Ok(())
+}
+
 fn main() -> Result<()> {
     let args = Args::from_env().map_err(|e| anyhow::anyhow!("{e}\n{USAGE}"))?;
     match args.command.as_deref() {
@@ -446,6 +503,7 @@ fn main() -> Result<()> {
         Some("nid") => cmd_nid(&args),
         Some("device") => cmd_device(&args),
         Some("compile") => cmd_compile(&args),
+        Some("lint") => cmd_lint(&args),
         Some("version") => {
             println!("finn-mvu {}", finn_mvu::VERSION);
             Ok(())

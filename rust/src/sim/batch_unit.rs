@@ -153,8 +153,8 @@ impl MvuBatch {
 
     /// See [`MvuStream::preload_row_outputs`]: hand the row datapath its
     /// precomputed per-vector raw row outputs (value replay).
-    pub fn preload_row_outputs(&mut self, outputs: Vec<Vec<i32>>) {
-        self.stream.preload_row_outputs(outputs);
+    pub fn preload_row_outputs(&mut self, outputs: Vec<Vec<i32>>) -> Result<()> {
+        self.stream.preload_row_outputs(outputs)
     }
 
     /// Structured shape validation for a batch of input vectors — the

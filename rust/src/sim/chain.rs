@@ -299,8 +299,12 @@ impl ChainCore {
     /// kernel evaluates each stage's whole batch through the blocked
     /// kernel up front, so the per-cycle machine only replays values.
     /// Requires `row_mode` stages.
-    pub(in crate::sim) fn preload_stage_rows(&mut self, i: usize, outputs: Vec<Vec<i32>>) {
-        self.stages[i].mvu.preload_row_outputs(outputs);
+    pub(in crate::sim) fn preload_stage_rows(
+        &mut self,
+        i: usize,
+        outputs: Vec<Vec<i32>>,
+    ) -> Result<()> {
+        self.stages[i].mvu.preload_row_outputs(outputs)
     }
 
     pub(in crate::sim) fn stage_count(&self) -> usize {

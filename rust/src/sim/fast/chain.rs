@@ -125,7 +125,7 @@ pub fn run_chain_shared(
                     .collect(),
                 None => raw.clone(),
             };
-            core.preload_stage_rows(i, raw);
+            core.preload_stage_rows(i, raw)?;
         }
     }
     let in_words: Vec<Vec<i32>> = inputs

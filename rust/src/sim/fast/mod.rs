@@ -309,10 +309,12 @@ pub(in crate::sim) fn eval_rows_batched(
     for r in 0..rows {
         match &path {
             Path::Xnor(planes, wpv) => {
+                // lint: allow(panic-path, the Xnor path is chosen above only when packed is Some)
                 let pw = packed.expect("Xnor path requires packed weights");
                 pe_rows_batched_xnor(planes, *wpv, pw.row_words(r), cols, &mut row_out);
             }
             Path::Binary(xt, totals) => {
+                // lint: allow(panic-path, the Binary path is chosen above only when packed is Some)
                 let pw = packed.expect("Binary path requires packed weights");
                 pe_rows_batched_binary(xt, n, pw.row_words(r), totals, &mut row_out);
             }

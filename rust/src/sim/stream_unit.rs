@@ -194,12 +194,23 @@ impl MvuStream {
     /// dot product of vector `i` with weight row `r`; the chain fast
     /// kernel computes them with the blocked batch kernel
     /// (`eval_rows_batched`) so each stage's weight matrix is walked once
-    /// per batch instead of once per vector. Requires the row datapath;
-    /// calling on a slot-wise stream is a caller bug.
-    pub fn preload_row_outputs(&mut self, outputs: Vec<Vec<i32>>) {
-        let row = self.row.as_mut().expect("preload_row_outputs requires the row datapath");
+    /// per batch instead of once per vector. Returns a structured error
+    /// when called on a slot-wise stream or when any preloaded vector
+    /// does not carry one output per weight row.
+    pub fn preload_row_outputs(&mut self, outputs: Vec<Vec<i32>>) -> Result<()> {
+        let rows = self.params.matrix_rows();
+        if let Some(bad) = outputs.iter().position(|o| o.len() != rows) {
+            anyhow::bail!(
+                "preload_row_outputs: outputs[{bad}] has {} rows, expected {rows}",
+                outputs[bad].len()
+            );
+        }
+        let Some(row) = self.row.as_mut() else {
+            anyhow::bail!("preload_row_outputs requires the row datapath (slot-wise stream)");
+        };
         row.precomputed = Some(outputs);
         row.vec_cursor = 0;
+        Ok(())
     }
 
     pub fn params(&self) -> &LayerParams {
@@ -336,6 +347,7 @@ impl MvuStream {
             }
             FsmAction::ConsumeInput => {
                 self.stats.write_cycles += 1;
+                // lint: allow(panic-path, FSM emits ConsumeInput only when in_valid was asserted)
                 let word = offered.expect("FSM consumed without an offer");
                 if self.comp_done {
                     // previous vector fully processed: restart for the next
@@ -413,6 +425,7 @@ impl MvuStream {
     /// the SWAR identities (DESIGN.md §Packed datapath); unpackable
     /// operands fall back to the flat [`pe_row`].
     fn compute_row_word(&mut self, wmem: &WeightMem, sf_total: usize) {
+        // lint: allow(panic-path, compute_slot dispatches here only when self.row is Some)
         let mut row = self.row.take().expect("row datapath state");
         if !row.prepared {
             if row.precomputed.is_some() {
@@ -708,7 +721,7 @@ mod tests {
                 vecs.iter().map(|v| crate::quant::matvec(v, &w, ty).unwrap()).collect();
             let mut live = MvuStream::with_row_datapath(&p, 2, packed.clone()).unwrap();
             let mut replay = MvuStream::with_row_datapath(&p, 2, packed).unwrap();
-            replay.preload_row_outputs(raw);
+            replay.preload_row_outputs(raw).unwrap();
             let words: Vec<Vec<i32>> = vecs
                 .iter()
                 .flat_map(|v| vec![v[0..4].to_vec(), v[4..8].to_vec()])
