@@ -20,7 +20,7 @@
 //! Run with: `cargo bench --bench hotpath`
 
 use finn_mvu::cfg::{nid_layers, DesignPoint, SimdType, ValidatedParams};
-use finn_mvu::device::{ArrivalProcess, PolicyKind};
+use finn_mvu::device::{ArrivalProcess, Fault, FaultPlan, PolicyKind, RetryPolicy};
 use finn_mvu::eval::{ChainRequest, DeviceRequest, Session, SessionConfig, SimOptions};
 use finn_mvu::explore::stimulus_thresholds;
 use finn_mvu::harness::{bench, random_weights, SweepKind};
@@ -488,6 +488,70 @@ fn device_bench() {
     );
 }
 
+/// Brownout scenario (DESIGN.md §Device subsystem, fault model): the
+/// 8-unit NID card again, but two units die a quarter of the way
+/// through the run. Two acceptance bars: an *empty* fault plan must be
+/// byte-identical to the plain run (the fault machinery costs nothing
+/// when idle), and with retries enabled the six survivors must absorb
+/// the failed-over work — goodput >= 0.99 of offered load.
+fn brownout_bench() {
+    let session = Session::parallel();
+    let mk = || {
+        let mut r = DeviceRequest::nid(8);
+        r.card.policy = PolicyKind::LeastLoaded;
+        r.card.arrival = ArrivalProcess::Poisson { mean_gap: 4.0 };
+        r.card.seed = 7;
+        r.card.requests = 50_000;
+        r
+    };
+
+    // zero-fault byte-identity: attaching an empty plan must not perturb
+    // a single byte of the summary
+    let plain = session.evaluate_device(&mk()).unwrap();
+    let idle = session.evaluate_device(&mk().with_faults(FaultPlan::none())).unwrap();
+    assert_eq!(
+        plain.to_json().to_string(),
+        idle.to_json().to_string(),
+        "empty fault plan perturbed the summary"
+    );
+
+    // the brownout: units 0 and 1 die at cycle 50k (~25% through the
+    // arrival stream); retries fail their drained queues over to the
+    // six surviving units
+    let faults = FaultPlan {
+        faults: vec![Fault::Death { unit: 0, at: 50_000 }, Fault::Death { unit: 1, at: 50_000 }],
+        seed: 7,
+    };
+    let req = mk()
+        .with_faults(faults)
+        .with_retries(RetryPolicy { max_attempts: 4, ..RetryPolicy::default() });
+    let t0 = std::time::Instant::now();
+    let s = session.evaluate_device(&req).unwrap();
+    let wall = t0.elapsed().as_secs_f64();
+    let f = s.fault.as_ref().expect("faulty run must carry a fault summary");
+    assert_eq!(f.deaths, 2, "both deaths must fire");
+    assert_eq!(f.completed + f.timed_out + f.dropped(), f.offered, "request conservation");
+    let goodput = f.completed as f64 / f.offered as f64;
+    println!(
+        "device brownout: 2/8 units die at cycle 50k; {} of {} requests completed \
+         ({} retries, {} dropped) in {:.2} s wall",
+        f.completed,
+        f.offered,
+        f.retries,
+        f.dropped(),
+        wall
+    );
+    println!(
+        "    -> goodput {:.3} at {} req/kcycle vs healthy {} req/kcycle \
+         (acceptance bar: >= 0.99 goodput, zero-fault byte-identical) {}",
+        goodput,
+        fnum(s.throughput_rpkc, 2),
+        fnum(plain.throughput_rpkc, 2),
+        if goodput >= 0.99 { "PASS" } else { "FAIL" }
+    );
+    assert!(goodput >= 0.99, "brownout goodput {goodput:.3} below the 0.99 bar");
+}
+
 fn explore_bench() {
     // the full Table 2 grid (all six sweeps x three SIMD types)
     let points: Vec<_> = SweepKind::ALL
@@ -550,6 +614,9 @@ fn main() {
 
     // the simulated accelerator card: saturation knee + 1M-request load
     device_bench();
+
+    // fault-tolerant serving: brownout recovery + zero-fault byte-identity
+    brownout_bench();
 
     // reference GEMM baseline
     let w = random_weights(&nid0, 13);

@@ -36,16 +36,30 @@ pub enum ArrivalProcess {
 
 impl ArrivalProcess {
     pub fn validate(&self) -> Result<()> {
+        // every parameter must be finite: an infinite (or NaN-poisoned)
+        // gap would saturate the f64 clock and wedge the event loop on
+        // a never-advancing arrival stream
+        let finite = |name: &str, v: f64| -> Result<()> {
+            ensure!(v.is_finite(), "{} arrival: {name} must be finite, got {v}", self.name());
+            Ok(())
+        };
         match *self {
             ArrivalProcess::Poisson { mean_gap } => {
+                finite("mean_gap", mean_gap)?;
                 ensure!(mean_gap > 0.0, "poisson arrival: mean_gap must be > 0, got {mean_gap}");
             }
             ArrivalProcess::Bursty { fast_gap, slow_gap, mean_run } => {
+                finite("fast_gap", fast_gap)?;
+                finite("slow_gap", slow_gap)?;
+                finite("mean_run", mean_run)?;
                 ensure!(fast_gap > 0.0, "bursty arrival: fast_gap must be > 0, got {fast_gap}");
                 ensure!(slow_gap > 0.0, "bursty arrival: slow_gap must be > 0, got {slow_gap}");
                 ensure!(mean_run >= 1.0, "bursty arrival: mean_run must be >= 1, got {mean_run}");
             }
             ArrivalProcess::Diurnal { mean_gap, swing, period } => {
+                finite("mean_gap", mean_gap)?;
+                finite("swing", swing)?;
+                finite("period", period)?;
                 ensure!(mean_gap > 0.0, "diurnal arrival: mean_gap must be > 0, got {mean_gap}");
                 ensure!(
                     (0.0..1.0).contains(&swing),
@@ -184,5 +198,24 @@ mod tests {
         assert!(ArrivalGen::new(bad_run, 1).is_err());
         let bad_swing = ArrivalProcess::Diurnal { mean_gap: 1.0, swing: 1.0, period: 100.0 };
         assert!(ArrivalGen::new(bad_swing, 1).is_err());
+    }
+
+    /// Non-finite parameters must be rejected up front: an infinite
+    /// mean gap saturates the f64 clock and the event loop would spin
+    /// on an arrival stream that never advances.
+    #[test]
+    fn non_finite_parameters_are_rejected() {
+        let inf = f64::INFINITY;
+        let nan = f64::NAN;
+        assert!(ArrivalGen::new(ArrivalProcess::Poisson { mean_gap: inf }, 1).is_err());
+        assert!(ArrivalGen::new(ArrivalProcess::Poisson { mean_gap: nan }, 1).is_err());
+        let b = ArrivalProcess::Bursty { fast_gap: 1.0, slow_gap: inf, mean_run: 2.0 };
+        assert!(ArrivalGen::new(b, 1).is_err());
+        let b = ArrivalProcess::Bursty { fast_gap: 1.0, slow_gap: 2.0, mean_run: inf };
+        assert!(ArrivalGen::new(b, 1).is_err());
+        let d = ArrivalProcess::Diurnal { mean_gap: 1.0, swing: 0.5, period: nan };
+        assert!(ArrivalGen::new(d, 1).is_err());
+        let d = ArrivalProcess::Diurnal { mean_gap: 1.0, swing: nan, period: 100.0 };
+        assert!(ArrivalGen::new(d, 1).is_err());
     }
 }

@@ -2,7 +2,8 @@
 //!
 //! The card is N unit instances (each an MVU or a NID chain) fed by a
 //! dispatch policy. Time is a virtual `u64` cycle clock advanced
-//! event-to-event — arrivals, block completions, and policy flush
+//! event-to-event — arrivals, block completions, policy flush
+//! deadlines, fault activations, backoff expiries, and request
 //! deadlines — never cycle-by-cycle, so a million-request scenario is a
 //! few million events, not billions of cycles.
 //!
@@ -14,21 +15,38 @@
 //! spot-validation. Both produce identical summaries because the
 //! kernels themselves are deterministic.
 //!
+//! Fault tolerance: a seeded [`FaultPlan`] can hang, kill, slow, or
+//! corrupt units mid-run; the card answers with per-request deadlines,
+//! bounded-backoff retries, a watchdog-driven quarantine/probation
+//! health tracker, and optional load shedding once live capacity drops
+//! below a watermark. All of it is inert when the config carries no
+//! fault/retry/deadline/shed options — that path is byte-identical to
+//! the pre-fault subsystem.
+//!
 //! Determinism: the event loop is single-threaded, every tie at a given
 //! cycle resolves in a fixed order (completions by ascending unit
-//! index, then arrivals in id order, then deadline flushes), arrivals
-//! are seeded PCG streams, and no wall-clock value ever enters the
-//! summary — so one seed + config yields byte-identical
+//! index, then fault activations in schedule order, quarantine expiries
+//! and hang thaws by ascending unit, deadline timeouts, arrivals in id
+//! order, retry releases, and finally policy flushes), arrivals and
+//! retry jitter are seeded PCG streams, and no wall-clock value ever
+//! enters the summary — so one seed + config yields byte-identical
 //! [`DeviceSummary`] JSON on every run and every thread count.
 
-use std::collections::VecDeque;
+use std::collections::{BTreeMap, BTreeSet, VecDeque};
 
-use anyhow::{ensure, Result};
+use anyhow::{bail, ensure, Result};
 
 use super::arrival::{ArrivalGen, ArrivalProcess};
-use super::report::{DelayStats, DeviceSummary, TracePoint, UnitStats};
+use super::fault::{
+    CorruptionLab, Fault, FaultPlan, HealthEvent, HealthPolicy, HealthState, RetryPolicy,
+    ShedPolicy,
+};
+use super::report::{
+    DelayStats, DeviceSummary, FaultSummary, HealthPoint, TracePoint, UnitHealth, UnitStats,
+};
 use super::scheduler::{Dispatch, PolicyKind, SchedulerPolicy, UnitView};
 use crate::coordinator::TickRecorder;
+use crate::util::rng::Pcg32;
 
 /// Service-time source: cycles one unit needs to execute a dispatched
 /// block of `occupancy` requests.
@@ -69,7 +87,8 @@ impl ServiceModel for ServiceProfile {
 }
 
 /// Queue-depth traces stop growing past this many samples so a long
-/// overload run cannot balloon the summary.
+/// overload run cannot balloon the summary; overflow is counted in
+/// `DeviceSummary::trace_dropped` rather than silently discarded.
 pub const TRACE_CAP: usize = 4096;
 
 /// One simulated-card scenario.
@@ -86,18 +105,63 @@ pub struct DeviceConfig {
     /// Sample the card-wide queue depth every this many cycles
     /// (0 = tracing off).
     pub trace_every: u64,
+    /// Injected faults; [`FaultPlan::none`] is the healthy card.
+    pub faults: FaultPlan,
+    /// Per-request deadline in cycles from arrival. Enforced when a
+    /// request is waiting (parked, backing off, or at block start); a
+    /// block already in service always runs to completion.
+    pub deadline: Option<u64>,
+    pub retry: RetryPolicy,
+    pub shed: ShedPolicy,
+    pub health: HealthPolicy,
+    /// Checked dispatch: after a corrupted unit completes a block, the
+    /// probe is re-run against the golden weights (DMR-style); a
+    /// mismatch fails the block and quarantines the unit. Requires a
+    /// [`CorruptionLab`] via [`run_card_faulty`].
+    pub checked: bool,
 }
 
 impl DeviceConfig {
     pub fn new(units: usize, policy: PolicyKind, arrival: ArrivalProcess) -> DeviceConfig {
-        DeviceConfig { units, policy, arrival, seed: 1, requests: 1000, trace_every: 0 }
+        DeviceConfig {
+            units,
+            policy,
+            arrival,
+            seed: 1,
+            requests: 1000,
+            trace_every: 0,
+            faults: FaultPlan::none(),
+            deadline: None,
+            retry: RetryPolicy::default(),
+            shed: ShedPolicy::None,
+            health: HealthPolicy::default(),
+            checked: false,
+        }
     }
 
     pub fn validate(&self) -> Result<()> {
         ensure!(self.units >= 1, "device needs at least one unit");
         ensure!(self.requests >= 1, "device needs at least one request");
+        if let Some(d) = self.deadline {
+            ensure!(d >= 1, "deadline must be >= 1 cycle");
+        }
+        self.faults.validate(self.units)?;
+        self.retry.validate()?;
+        self.shed.validate()?;
+        self.health.validate()?;
         self.policy.validate()?;
         self.arrival.validate()
+    }
+
+    /// True when any robustness machinery is active. When false the
+    /// event loop takes exactly the pre-fault path and the summary
+    /// carries no fault section.
+    pub fn is_robust(&self) -> bool {
+        !self.faults.is_empty()
+            || self.deadline.is_some()
+            || self.retry.max_attempts > 1
+            || self.shed != ShedPolicy::None
+            || self.checked
     }
 }
 
@@ -111,14 +175,19 @@ pub struct RequestRecord {
     /// Service start of the block this request rode in.
     pub start: u64,
     pub done: u64,
+    /// Dispatch attempts this request consumed (1 = no retries).
+    pub attempts: u32,
 }
 
 /// A dispatched block sitting in (or at the head of) a unit's queue.
 #[derive(Debug)]
 struct Block {
     ids: Vec<u64>,
+    /// Nominal service cycles at dispatch occupancy.
     service: u64,
     started: u64,
+    /// Completion cycle, including straggler slowdown and hang slips.
+    done: u64,
 }
 
 #[derive(Debug, Default)]
@@ -131,11 +200,43 @@ struct UnitState {
     batches: usize,
     busy_cycles: u64,
     max_queue_depth: usize,
+    health: HealthState,
+    /// Cycle a transient hang releases the unit (0 = not frozen).
+    frozen_until: u64,
+    quarantined_until: u64,
+    strikes: u32,
+    probation_left: u32,
+    corrupted: bool,
+    timeline: Vec<HealthEvent>,
 }
 
 impl UnitState {
     fn busy_until(&self) -> Option<u64> {
-        self.current.as_ref().map(|b| b.started + b.service)
+        self.current.as_ref().map(|b| b.done)
+    }
+}
+
+#[derive(Debug, Default)]
+struct FaultCounters {
+    hangs: usize,
+    deaths: usize,
+    stragglers: usize,
+    corruptions: usize,
+    detected: usize,
+    silent_served: usize,
+    retries: usize,
+    timed_out: usize,
+    shed_rejected: usize,
+    shed_dropped: usize,
+    retries_exhausted: usize,
+    stranded: usize,
+    quarantines: usize,
+    strikes: usize,
+}
+
+impl FaultCounters {
+    fn dropped(&self) -> usize {
+        self.shed_rejected + self.shed_dropped + self.retries_exhausted + self.stranded
     }
 }
 
@@ -151,6 +252,28 @@ struct Core<'a> {
     total_batches: usize,
     /// Time of the last completion so far.
     end: u64,
+    // --- robustness machinery, inert when `robust` is false ---
+    robust: bool,
+    deadline: Option<u64>,
+    retry_cfg: RetryPolicy,
+    health_cfg: HealthPolicy,
+    checked: bool,
+    shed: ShedPolicy,
+    plan: FaultPlan,
+    /// Dispatch attempts per request id.
+    attempts: Vec<u32>,
+    /// Requests with no operational unit to go to, waiting for one.
+    parked: BTreeSet<u64>,
+    /// (ready cycle, id): requests backing off before a retry.
+    retry_q: BTreeSet<(u64, u64)>,
+    retry_ready: BTreeMap<u64, u64>,
+    /// (deadline cycle, id): pending timeout events for waiting
+    /// requests; entries whose request already left are stale and
+    /// ignored when they fire.
+    waiting_deadlines: BTreeSet<(u64, u64)>,
+    jitter: Pcg32,
+    lab: Option<&'a mut CorruptionLab>,
+    counters: FaultCounters,
 }
 
 impl Core<'_> {
@@ -164,15 +287,23 @@ impl Core<'_> {
                     queued_batches: u.queue.len(),
                     queued_requests: u.queued_requests,
                     backlog_cycles: left + u.queued_service,
+                    eligible: u.health.operational(),
                 }
             })
             .collect()
     }
 
-    /// Requests waiting anywhere on the card (held by the policy or
-    /// queued at a unit), excluding blocks in service.
+    /// Requests waiting anywhere on the card (held by the policy,
+    /// queued at a unit, parked, or backing off), excluding blocks in
+    /// service.
     fn depth(&self, held: usize) -> usize {
         held + self.units.iter().map(|u| u.queued_requests).sum::<usize>()
+            + self.parked.len()
+            + self.retry_q.len()
+    }
+
+    fn expired(&self, id: u64, now: u64) -> bool {
+        self.deadline.is_some_and(|d| now >= self.arrivals[id as usize] + d)
     }
 
     fn apply(&mut self, now: u64, dispatches: Vec<Dispatch>) -> Result<()> {
@@ -184,11 +315,26 @@ impl Core<'_> {
                 self.units.len()
             );
             ensure!(!d.ids.is_empty(), "policy dispatched an empty block");
+            if self.robust && !self.units[d.unit].health.operational() {
+                // every fallback unit was down: park the requests until
+                // a unit comes back (or their deadlines fire)
+                for id in d.ids {
+                    self.park(now, id);
+                }
+                continue;
+            }
             let service = self.service.cycles(d.ids.len())?;
             ensure!(service > 0, "service model returned 0 cycles");
-            let block = Block { ids: d.ids, service, started: 0 };
-            if self.units[d.unit].current.is_none() {
-                self.start(d.unit, block, now);
+            for &id in &d.ids {
+                self.attempts[id as usize] += 1;
+            }
+            let block = Block { ids: d.ids, service, started: 0, done: 0 };
+            if self.units[d.unit].current.is_none()
+                && (!self.robust || now >= self.units[d.unit].frozen_until)
+            {
+                if !self.begin(d.unit, block, now)? {
+                    self.pump(d.unit, now)?;
+                }
             } else {
                 let u = &mut self.units[d.unit];
                 u.queued_requests += block.ids.len();
@@ -200,67 +346,433 @@ impl Core<'_> {
         Ok(())
     }
 
-    fn start(&mut self, unit: usize, mut block: Block, now: u64) {
+    /// Start a block on an idle unit. Expired requests are dropped from
+    /// the block first (timeout outcome); returns false when that
+    /// empties it and nothing started.
+    fn begin(&mut self, unit: usize, mut block: Block, now: u64) -> Result<bool> {
+        if self.robust {
+            if let Some(d) = self.deadline {
+                let before = block.ids.len();
+                block.ids.retain(|&id| now < self.arrivals[id as usize] + d);
+                let expired = before - block.ids.len();
+                if block.ids.is_empty() {
+                    self.counters.timed_out += expired;
+                    return Ok(false);
+                }
+                if expired > 0 {
+                    self.counters.timed_out += expired;
+                    block.service = self.service.cycles(block.ids.len())?;
+                }
+            }
+        }
+        let mut work = block.service;
+        if self.robust {
+            let factor = self.plan.straggle_factor(unit, now);
+            if factor > 1.0 {
+                work = ((block.service as f64 * factor).round() as u64).max(block.service);
+            }
+        }
         block.started = now;
+        block.done = now + work;
         for &id in &block.ids {
             let wait = now - self.arrivals[id as usize];
             self.wait_rec.record_at(now, wait);
         }
         let u = &mut self.units[unit];
-        u.busy_cycles += block.service;
+        u.busy_cycles += work;
         u.current = Some(block);
+        Ok(true)
     }
 
-    fn complete(&mut self, unit: usize, now: u64) {
+    /// Feed the queue into the unit until a block starts (skipped while
+    /// the unit is busy, frozen, or not operational).
+    fn pump(&mut self, unit: usize, now: u64) -> Result<()> {
+        loop {
+            let u = &self.units[unit];
+            if u.current.is_some()
+                || (self.robust && (now < u.frozen_until || !u.health.operational()))
+            {
+                return Ok(());
+            }
+            let Some(b) = self.units[unit].queue.pop_front() else {
+                return Ok(());
+            };
+            let u = &mut self.units[unit];
+            u.queued_requests -= b.ids.len();
+            u.queued_service -= b.service;
+            if self.begin(unit, b, now)? {
+                return Ok(());
+            }
+        }
+    }
+
+    fn complete(&mut self, unit: usize, now: u64) -> Result<()> {
         let block = self.units[unit].current.take().expect("completing an idle unit");
+        if self.robust {
+            if self.checked && self.units[unit].corrupted {
+                let clean = self.lab.as_ref().map_or(true, |lab| lab.check_unit(unit));
+                if !clean {
+                    // the probe re-run against the golden weights caught
+                    // the corrupted result: fail the block, quarantine
+                    // the unit for a scrub
+                    self.counters.detected += 1;
+                    self.fail_requests(now, block.ids);
+                    self.quarantine(unit, now);
+                    return Ok(());
+                }
+            } else if self.units[unit].corrupted {
+                self.counters.silent_served += block.ids.len();
+            }
+        }
         for &id in &block.ids {
             let arrival = self.arrivals[id as usize];
             self.sojourn_rec.record_at(now, now - arrival);
             if let Some(recs) = &mut self.records {
-                recs.push(RequestRecord { id, unit, arrival, start: block.started, done: now });
+                recs.push(RequestRecord {
+                    id,
+                    unit,
+                    arrival,
+                    start: block.started,
+                    done: now,
+                    attempts: self.attempts[id as usize],
+                });
             }
         }
         self.total_requests += block.ids.len();
         self.total_batches += 1;
         self.end = now;
-        let next = {
+        {
             let u = &mut self.units[unit];
             u.requests += block.ids.len();
             u.batches += 1;
-            u.queue.pop_front().map(|b| {
+        }
+        if self.robust {
+            let actual = now - block.started;
+            if actual as f64 > block.service as f64 * self.health_cfg.watchdog_factor {
+                self.counters.strikes += 1;
+                let u = &mut self.units[unit];
+                u.strikes += 1;
+                if u.strikes >= self.health_cfg.strike_threshold && u.health.operational() {
+                    self.quarantine(unit, now);
+                    return Ok(());
+                }
+            } else if self.units[unit].health == HealthState::Probation {
+                let u = &mut self.units[unit];
+                u.probation_left = u.probation_left.saturating_sub(1);
+                if u.probation_left == 0 {
+                    u.health = HealthState::Healthy;
+                    u.strikes = 0;
+                    u.timeline.push(HealthEvent { cycle: now, state: HealthState::Healthy });
+                }
+            }
+        }
+        self.pump(unit, now)
+    }
+
+    /// Take the unit out of rotation; its queue fails over.
+    fn quarantine(&mut self, unit: usize, now: u64) {
+        let drained = {
+            let u = &mut self.units[unit];
+            let mut ids = Vec::new();
+            while let Some(b) = u.queue.pop_front() {
                 u.queued_requests -= b.ids.len();
                 u.queued_service -= b.service;
-                b
-            })
+                ids.extend(b.ids);
+            }
+            u.health = HealthState::Quarantined;
+            u.quarantined_until = now + self.health_cfg.quarantine_cycles;
+            u.strikes = 0;
+            u.timeline.push(HealthEvent { cycle: now, state: HealthState::Quarantined });
+            ids
         };
-        if let Some(b) = next {
-            self.start(unit, b, now);
+        self.counters.quarantines += 1;
+        self.fail_requests(now, drained);
+    }
+
+    /// Permanent death: in-flight and queued work fails over, the
+    /// executed-but-wasted part of the current block leaves
+    /// `busy_cycles`.
+    fn kill(&mut self, unit: usize, now: u64) {
+        let mut ids = Vec::new();
+        {
+            let u = &mut self.units[unit];
+            if let Some(b) = u.current.take() {
+                u.busy_cycles -= b.done.saturating_sub(now);
+                ids.extend(b.ids);
+            }
+            while let Some(b) = u.queue.pop_front() {
+                u.queued_requests -= b.ids.len();
+                u.queued_service -= b.service;
+                ids.extend(b.ids);
+            }
+            u.health = HealthState::Dead;
+            u.frozen_until = 0;
+            u.timeline.push(HealthEvent { cycle: now, state: HealthState::Dead });
+        }
+        self.counters.deaths += 1;
+        self.fail_requests(now, ids);
+    }
+
+    /// Quarantine expired: scrub the weight copy and re-enter on
+    /// probation (or straight to healthy).
+    fn rehab(&mut self, unit: usize, now: u64) -> Result<()> {
+        if self.units[unit].corrupted {
+            if let Some(lab) = self.lab.as_mut() {
+                lab.scrub(unit);
+            }
+            self.units[unit].corrupted = false;
+        }
+        let state = if self.health_cfg.probation_successes == 0 {
+            HealthState::Healthy
+        } else {
+            HealthState::Probation
+        };
+        let u = &mut self.units[unit];
+        u.probation_left = self.health_cfg.probation_successes;
+        u.health = state;
+        u.quarantined_until = 0;
+        u.timeline.push(HealthEvent { cycle: now, state });
+        self.pump(unit, now)
+    }
+
+    /// A batch of requests lost their unit (death, quarantine, or a
+    /// detected corruption): time out the expired, drop the exhausted,
+    /// and schedule a backoff retry for the rest.
+    fn fail_requests(&mut self, now: u64, ids: Vec<u64>) {
+        for id in ids {
+            if self.expired(id, now) {
+                self.counters.timed_out += 1;
+            } else if self.attempts[id as usize] >= self.retry_cfg.max_attempts {
+                self.counters.retries_exhausted += 1;
+            } else {
+                let back = self.retry_cfg.backoff(self.attempts[id as usize], &mut self.jitter);
+                self.counters.retries += 1;
+                self.enqueue_retry(id, now + back);
+            }
+        }
+    }
+
+    fn enqueue_retry(&mut self, id: u64, ready: u64) {
+        self.retry_q.insert((ready, id));
+        self.retry_ready.insert(id, ready);
+        if let Some(d) = self.deadline {
+            self.waiting_deadlines.insert((self.arrivals[id as usize] + d, id));
+        }
+    }
+
+    fn park(&mut self, now: u64, id: u64) {
+        if self.expired(id, now) {
+            self.counters.timed_out += 1;
+            return;
+        }
+        self.parked.insert(id);
+        if let Some(d) = self.deadline {
+            self.waiting_deadlines.insert((self.arrivals[id as usize] + d, id));
+        }
+    }
+
+    /// A deadline event fired for `id`: count a timeout if it is still
+    /// waiting (parked or backing off); otherwise the entry is stale.
+    fn expire_waiting(&mut self, id: u64) {
+        if self.parked.remove(&id) {
+            self.counters.timed_out += 1;
+        } else if let Some(ready) = self.retry_ready.remove(&id) {
+            self.retry_q.remove(&(ready, id));
+            self.counters.timed_out += 1;
+        }
+    }
+
+    /// Shed gate for a new arrival. Admission is denied (or bought by
+    /// dropping the oldest waiter) only while live capacity is below
+    /// the watermark *and* the waiting depth is at the cap.
+    fn admit_arrival(&mut self, held: usize) -> Result<bool> {
+        let (min_live, max_depth, drop_oldest) = match self.shed {
+            ShedPolicy::None => return Ok(true),
+            ShedPolicy::RejectNew { min_live, max_depth } => (min_live, max_depth, false),
+            ShedPolicy::DropOldest { min_live, max_depth } => (min_live, max_depth, true),
+        };
+        let live = self.units.iter().filter(|u| u.health.operational()).count();
+        if live >= min_live || self.depth(held) < max_depth {
+            return Ok(true);
+        }
+        if drop_oldest && self.evict_oldest()? {
+            self.counters.shed_dropped += 1;
+            return Ok(true);
+        }
+        self.counters.shed_rejected += 1;
+        Ok(false)
+    }
+
+    /// Drop the oldest (smallest-id) request waiting anywhere on the
+    /// card. False when nothing is waiting outside the policy's hold.
+    fn evict_oldest(&mut self) -> Result<bool> {
+        let parked_min = self.parked.first().copied();
+        let retry_min = self.retry_ready.first_key_value().map(|(&id, _)| id);
+        let mut queued_min: Option<(u64, usize)> = None;
+        for (i, u) in self.units.iter().enumerate() {
+            for b in &u.queue {
+                for &id in &b.ids {
+                    if queued_min.map_or(true, |(m, _)| id < m) {
+                        queued_min = Some((id, i));
+                    }
+                }
+            }
+        }
+        let best = [
+            parked_min.map(|id| (id, 0usize)),
+            retry_min.map(|id| (id, 1usize)),
+            queued_min.map(|(id, _)| (id, 2usize)),
+        ]
+        .into_iter()
+        .flatten()
+        .min();
+        let Some((id, src)) = best else {
+            return Ok(false);
+        };
+        match src {
+            0 => {
+                self.parked.remove(&id);
+            }
+            1 => {
+                let ready = self.retry_ready.remove(&id).expect("retry entry");
+                self.retry_q.remove(&(ready, id));
+            }
+            _ => {
+                let unit = queued_min.expect("queued entry").1;
+                self.remove_queued(unit, id)?;
+            }
+        }
+        Ok(true)
+    }
+
+    /// Remove one request from a queued block on `unit`, re-costing the
+    /// shrunk block (and deleting it when emptied).
+    fn remove_queued(&mut self, unit: usize, id: u64) -> Result<()> {
+        let svc = &mut *self.service;
+        let u = &mut self.units[unit];
+        for bi in 0..u.queue.len() {
+            if let Some(pos) = u.queue[bi].ids.iter().position(|&x| x == id) {
+                u.queue[bi].ids.remove(pos);
+                u.queued_requests -= 1;
+                let old = u.queue[bi].service;
+                if u.queue[bi].ids.is_empty() {
+                    u.queue.remove(bi);
+                    u.queued_service -= old;
+                } else {
+                    let new = svc.cycles(u.queue[bi].ids.len())?;
+                    u.queue[bi].service = new;
+                    u.queued_service = u.queued_service - old + new;
+                }
+                return Ok(());
+            }
+        }
+        bail!("request {id} not queued on unit {unit}");
+    }
+
+    /// Apply one fault that just activated. Dead units absorb further
+    /// faults silently.
+    fn activate(&mut self, f: &Fault, fault_index: usize, now: u64) {
+        let unit = f.unit();
+        if self.units[unit].health == HealthState::Dead {
+            return;
+        }
+        match *f {
+            Fault::Hang { cycles, .. } => {
+                self.counters.hangs += 1;
+                let u = &mut self.units[unit];
+                u.frozen_until = u.frozen_until.max(now + cycles);
+                if let Some(b) = &mut u.current {
+                    // the in-flight block's completion slips with the
+                    // freeze; the watchdog sees the slip as a strike
+                    b.done += cycles;
+                    u.busy_cycles += cycles;
+                }
+            }
+            Fault::Death { .. } => {
+                self.kill(unit, now);
+            }
+            Fault::Straggler { .. } => {
+                // the slowdown itself applies at block start via
+                // `FaultPlan::straggle_factor`
+                self.counters.stragglers += 1;
+            }
+            Fault::Corruption { flips, .. } => {
+                self.counters.corruptions += 1;
+                if let Some(lab) = self.lab.as_mut() {
+                    lab.corrupt(unit, flips, self.plan.corruption_seed(fault_index));
+                }
+                self.units[unit].corrupted = true;
+            }
         }
     }
 }
 
+/// Re-dispatch a waiting request (retry release or un-parking) through
+/// the policy, unless its deadline already passed.
+fn release_waiting(
+    core: &mut Core,
+    policy: &mut dyn SchedulerPolicy,
+    now: u64,
+    id: u64,
+) -> Result<()> {
+    if core.expired(id, now) {
+        core.counters.timed_out += 1;
+        return Ok(());
+    }
+    let views = core.views(now);
+    let ds = policy.on_request(now, id, &views);
+    core.apply(now, ds)
+}
+
 /// Run one scenario; returns the aggregate summary.
 pub fn run_card(cfg: &DeviceConfig, service: &mut dyn ServiceModel) -> Result<DeviceSummary> {
-    Ok(run_impl(cfg, service, false)?.0)
+    Ok(run_impl(cfg, service, None, false)?.0)
 }
 
 /// Like [`run_card`], additionally returning one [`RequestRecord`] per
-/// request (in completion order) for property tests.
+/// completed request (in completion order) for property tests.
 pub fn run_card_traced(
     cfg: &DeviceConfig,
     service: &mut dyn ServiceModel,
 ) -> Result<(DeviceSummary, Vec<RequestRecord>)> {
-    run_impl(cfg, service, true)
+    run_impl(cfg, service, None, true)
+}
+
+/// Run a scenario whose [`FaultPlan`] includes corruption faults: the
+/// [`CorruptionLab`] holds the golden weights and per-unit copies.
+pub fn run_card_faulty(
+    cfg: &DeviceConfig,
+    service: &mut dyn ServiceModel,
+    lab: Option<&mut CorruptionLab>,
+) -> Result<DeviceSummary> {
+    Ok(run_impl(cfg, service, lab, false)?.0)
+}
+
+/// [`run_card_faulty`] with per-request records.
+pub fn run_card_faulty_traced(
+    cfg: &DeviceConfig,
+    service: &mut dyn ServiceModel,
+    lab: Option<&mut CorruptionLab>,
+) -> Result<(DeviceSummary, Vec<RequestRecord>)> {
+    run_impl(cfg, service, lab, true)
 }
 
 fn run_impl(
     cfg: &DeviceConfig,
     service: &mut dyn ServiceModel,
+    lab: Option<&mut CorruptionLab>,
     traced: bool,
 ) -> Result<(DeviceSummary, Vec<RequestRecord>)> {
     cfg.validate()?;
+    ensure!(
+        lab.is_some() || !cfg.faults.has_corruption(),
+        "corruption faults need a CorruptionLab (use run_card_faulty)"
+    );
+    let robust = cfg.is_robust();
     let mut policy = cfg.policy.build()?;
     let mut gen = ArrivalGen::new(cfg.arrival.clone(), cfg.seed)?;
+    let schedule = cfg.faults.schedule();
+    let mut fault_idx = 0usize;
     let mut core = Core {
         service,
         units: (0..cfg.units).map(|_| UnitState::default()).collect(),
@@ -271,10 +783,26 @@ fn run_impl(
         total_requests: 0,
         total_batches: 0,
         end: 0,
+        robust,
+        deadline: cfg.deadline,
+        retry_cfg: cfg.retry.clone(),
+        health_cfg: cfg.health.clone(),
+        checked: cfg.checked,
+        shed: cfg.shed.clone(),
+        plan: cfg.faults.clone(),
+        attempts: vec![0; cfg.requests],
+        parked: BTreeSet::new(),
+        retry_q: BTreeSet::new(),
+        retry_ready: BTreeMap::new(),
+        waiting_deadlines: BTreeSet::new(),
+        jitter: Pcg32::with_stream(cfg.seed ^ cfg.faults.seed, 0x6a),
+        lab,
+        counters: FaultCounters::default(),
     };
     core.wait_rec.start_at(0);
     core.sojourn_rec.start_at(0);
     let mut trace: Vec<TracePoint> = Vec::new();
+    let mut trace_dropped: usize = 0;
     let mut next_id: u64 = 1;
     let mut next_arrival: Option<(u64, u64)> = Some((gen.next_time(), 0));
     let mut now: u64 = 0;
@@ -283,7 +811,22 @@ fn run_impl(
         let completion = core.units.iter().filter_map(UnitState::busy_until).min();
         let arrival_t = next_arrival.map(|(t, _)| t);
         let flush = policy.next_flush();
-        let Some(t) = [completion, arrival_t, flush].into_iter().flatten().min() else {
+        let fault_t = schedule.get(fault_idx).map(|&fi| cfg.faults.faults[fi].at());
+        let thaw =
+            core.units.iter().filter(|u| u.frozen_until > 0).map(|u| u.frozen_until).min();
+        let quar = core
+            .units
+            .iter()
+            .filter(|u| u.health == HealthState::Quarantined)
+            .map(|u| u.quarantined_until)
+            .min();
+        let retry_t = core.retry_q.first().map(|&(ready, _)| ready);
+        let dl = core.waiting_deadlines.first().map(|&(t, _)| t);
+        let Some(t) = [completion, arrival_t, flush, fault_t, thaw, quar, retry_t, dl]
+            .into_iter()
+            .flatten()
+            .min()
+        else {
             // no scheduled events left: drain anything the policy still
             // holds (e.g. a partial block whose deadline is far away
             // relative to a finished arrival stream), then stop.
@@ -294,18 +837,34 @@ fn run_impl(
                 core.apply(now, ds)?;
                 continue;
             }
+            if robust && !core.parked.is_empty() {
+                if core.units.iter().any(|u| u.health.operational()) {
+                    while let Some(id) = core.parked.pop_first() {
+                        release_waiting(&mut core, policy.as_mut(), now, id)?;
+                    }
+                } else {
+                    // every unit is down and no deadline will fire:
+                    // the parked requests are stranded
+                    core.counters.stranded += core.parked.len();
+                    core.parked.clear();
+                }
+                continue;
+            }
             break;
         };
         debug_assert!(t >= now, "event time {t} before clock {now}");
 
         // queue depth is constant between events; sample the multiples
         // of `trace_every` crossed on the way to `t`
-        if cfg.trace_every > 0 && trace.len() < TRACE_CAP {
+        if cfg.trace_every > 0 {
             let depth = core.depth(policy.held());
             let mut s = (now / cfg.trace_every + 1) * cfg.trace_every;
             while s <= t && trace.len() < TRACE_CAP {
                 trace.push(TracePoint { cycle: s, depth });
                 s += cfg.trace_every;
+            }
+            if s <= t {
+                trace_dropped += ((t - s) / cfg.trace_every + 1) as usize;
             }
         }
         now = t;
@@ -313,18 +872,55 @@ fn run_impl(
         // 1) block completions, ascending unit index
         for i in 0..core.units.len() {
             if core.units[i].busy_until() == Some(now) {
-                core.complete(i, now);
+                core.complete(i, now)?;
             }
         }
-        // 2) arrivals at exactly `now`, in id order
+        if robust {
+            // 2) fault activations due now, in schedule order
+            while let Some(&fi) = schedule.get(fault_idx) {
+                let f = &cfg.faults.faults[fi];
+                if f.at() > now {
+                    break;
+                }
+                fault_idx += 1;
+                core.activate(f, fi, now);
+            }
+            // 3) quarantine expiries, ascending unit index
+            for i in 0..core.units.len() {
+                if core.units[i].health == HealthState::Quarantined
+                    && core.units[i].quarantined_until <= now
+                {
+                    core.rehab(i, now)?;
+                }
+            }
+            // 4) hang thaws, ascending unit index
+            for i in 0..core.units.len() {
+                if core.units[i].frozen_until > 0 && core.units[i].frozen_until <= now {
+                    core.units[i].frozen_until = 0;
+                    core.pump(i, now)?;
+                }
+            }
+            // 5) request deadlines due now
+            while let Some(&(dt, id)) = core.waiting_deadlines.first() {
+                if dt > now {
+                    break;
+                }
+                core.waiting_deadlines.pop_first();
+                core.expire_waiting(id);
+            }
+        }
+        // 6) arrivals at exactly `now`, in id order
         while let Some((t_arr, id)) = next_arrival {
             if t_arr > now {
                 break;
             }
             core.arrivals[id as usize] = t_arr;
-            let views = core.views(now);
-            let ds = policy.on_request(now, id, &views);
-            core.apply(now, ds)?;
+            let admitted = if robust { core.admit_arrival(policy.held())? } else { true };
+            if admitted {
+                let views = core.views(now);
+                let ds = policy.on_request(now, id, &views);
+                core.apply(now, ds)?;
+            }
             next_arrival = if (next_id as usize) < cfg.requests {
                 let t = gen.next_time();
                 let id = next_id;
@@ -334,7 +930,18 @@ fn run_impl(
                 None
             };
         }
-        // 3) deadline flushes due by `now`
+        if robust {
+            // 7) retries whose backoff elapsed, in (ready, id) order
+            while let Some(&(ready, id)) = core.retry_q.first() {
+                if ready > now {
+                    break;
+                }
+                core.retry_q.pop_first();
+                core.retry_ready.remove(&id);
+                release_waiting(&mut core, policy.as_mut(), now, id)?;
+            }
+        }
+        // 8) deadline flushes due by `now`
         while policy.next_flush().is_some_and(|d| d <= now) {
             let views = core.views(now);
             let ds = policy.on_flush(now, &views);
@@ -343,15 +950,25 @@ fn run_impl(
             }
             core.apply(now, ds)?;
         }
+        // 9) parked requests re-enter once a unit is operational again
+        if robust
+            && !core.parked.is_empty()
+            && core.units.iter().any(|u| u.health.operational())
+        {
+            while let Some(id) = core.parked.pop_first() {
+                release_waiting(&mut core, policy.as_mut(), now, id)?;
+            }
+        }
     }
 
+    let completed = core.total_requests;
+    let lost = core.counters.timed_out + core.counters.dropped();
     ensure!(
-        core.total_requests == cfg.requests,
-        "device served {} of {} requests",
-        core.total_requests,
+        completed + lost == cfg.requests,
+        "device lost track of requests: {completed} completed + {lost} lost of {}",
         cfg.requests
     );
-    let total_cycles = core.end;
+    let total_cycles = if robust { core.end.max(now).max(1) } else { core.end };
     ensure!(total_cycles > 0, "device finished at cycle 0");
     let per_unit: Vec<UnitStats> = core
         .units
@@ -366,18 +983,58 @@ fn run_impl(
             max_queue_depth: u.max_queue_depth,
         })
         .collect();
+    let mean_occupancy = if core.total_batches == 0 {
+        0.0
+    } else {
+        completed as f64 / core.total_batches as f64
+    };
+    let fault = robust.then(|| FaultSummary {
+        offered: cfg.requests,
+        completed,
+        offered_rpkc: cfg.requests as f64 / total_cycles as f64 * 1000.0,
+        hangs: core.counters.hangs,
+        deaths: core.counters.deaths,
+        stragglers: core.counters.stragglers,
+        corruptions: core.counters.corruptions,
+        detected: core.counters.detected,
+        silent_served: core.counters.silent_served,
+        retries: core.counters.retries,
+        timed_out: core.counters.timed_out,
+        shed_rejected: core.counters.shed_rejected,
+        shed_dropped: core.counters.shed_dropped,
+        retries_exhausted: core.counters.retries_exhausted,
+        stranded: core.counters.stranded,
+        quarantines: core.counters.quarantines,
+        strikes: core.counters.strikes,
+        health: core
+            .units
+            .iter()
+            .enumerate()
+            .map(|(i, u)| UnitHealth {
+                unit: i,
+                state: u.health.name().to_string(),
+                timeline: u
+                    .timeline
+                    .iter()
+                    .map(|e| HealthPoint { cycle: e.cycle, state: e.state.name().to_string() })
+                    .collect(),
+            })
+            .collect(),
+    });
     let summary = DeviceSummary {
         policy: cfg.policy.name(),
         arrival: cfg.arrival.name().to_string(),
         units: cfg.units,
-        requests: core.total_requests,
+        requests: completed,
         total_cycles,
-        throughput_rpkc: core.total_requests as f64 / total_cycles as f64 * 1000.0,
-        mean_occupancy: core.total_requests as f64 / core.total_batches as f64,
+        throughput_rpkc: completed as f64 / total_cycles as f64 * 1000.0,
+        mean_occupancy,
         wait: DelayStats::from_tick_report(&core.wait_rec.report()),
         sojourn: DelayStats::from_tick_report(&core.sojourn_rec.report()),
         per_unit,
         trace,
+        trace_dropped,
+        fault,
     };
     Ok((summary, core.records.unwrap_or_default()))
 }
@@ -405,6 +1062,7 @@ mod tests {
         assert_eq!(ids, (0..400).collect::<Vec<u64>>(), "each id exactly once");
         for r in &records {
             assert!(r.arrival <= r.start && r.start < r.done);
+            assert_eq!(r.attempts, 1, "healthy card never retries");
         }
         assert_eq!(summary.per_unit.iter().map(|u| u.requests).sum::<usize>(), 400);
         for u in &summary.per_unit {
@@ -412,6 +1070,7 @@ mod tests {
         }
         assert!(summary.throughput_rpkc > 0.0);
         assert_eq!(summary.mean_occupancy, 1.0);
+        assert!(summary.fault.is_none(), "healthy run must not grow a fault section");
     }
 
     #[test]
@@ -481,15 +1140,50 @@ mod tests {
         assert!(cycles.windows(2).all(|w| w[0] < w[1]), "trace strictly increasing");
     }
 
+    /// Dense sampling on a long run overflows TRACE_CAP; the overflow
+    /// must be counted, not silently discarded.
+    #[test]
+    fn trace_overflow_is_counted() {
+        let mut cfg = poisson_cfg(1, PolicyKind::RoundRobin, 50.0, 300);
+        cfg.trace_every = 1;
+        let mut svc = ServiceProfile::new(vec![10]).unwrap();
+        let summary = run_card(&cfg, &mut svc).unwrap();
+        assert_eq!(summary.trace.len(), TRACE_CAP);
+        assert!(summary.trace_dropped > 0, "dropped samples must be counted");
+    }
+
+    #[test]
+    fn dead_unit_fails_over_to_the_living() {
+        let mut cfg = poisson_cfg(2, PolicyKind::LeastLoaded, 4.0, 300);
+        cfg.faults =
+            FaultPlan { faults: vec![Fault::Death { unit: 0, at: 200 }], seed: 5 };
+        cfg.retry.max_attempts = 4;
+        let mut svc = ServiceProfile::new(vec![12]).unwrap();
+        let (summary, records) = run_card_faulty_traced(&cfg, &mut svc, None).unwrap();
+        let f = summary.fault.as_ref().expect("fault section");
+        assert_eq!(f.deaths, 1);
+        assert_eq!(f.completed + f.timed_out + f.shed_rejected + f.shed_dropped
+            + f.retries_exhausted + f.stranded, f.offered);
+        assert!(records.iter().all(|r| r.unit == 1 || r.done <= 200 + 12));
+        assert_eq!(summary.fault.as_ref().unwrap().health[0].state, "dead");
+    }
+
     #[test]
     fn rejects_invalid_configs() {
         let ok = ArrivalProcess::Poisson { mean_gap: 10.0 };
         let mut svc = ServiceProfile::new(vec![10]).unwrap();
         let cfg = DeviceConfig::new(0, PolicyKind::RoundRobin, ok.clone());
         assert!(run_card(&cfg, &mut svc).is_err(), "0 units");
-        let mut cfg = DeviceConfig::new(1, PolicyKind::RoundRobin, ok);
+        let mut cfg = DeviceConfig::new(1, PolicyKind::RoundRobin, ok.clone());
         cfg.requests = 0;
         assert!(run_card(&cfg, &mut svc).is_err(), "0 requests");
+        let mut cfg = DeviceConfig::new(1, PolicyKind::RoundRobin, ok.clone());
+        cfg.deadline = Some(0);
+        assert!(run_card(&cfg, &mut svc).is_err(), "0-cycle deadline");
+        let mut cfg = DeviceConfig::new(1, PolicyKind::RoundRobin, ok);
+        cfg.faults =
+            FaultPlan { faults: vec![Fault::Corruption { unit: 0, at: 1, flips: 1 }], seed: 0 };
+        assert!(run_card(&cfg, &mut svc).is_err(), "corruption without a lab");
         assert!(ServiceProfile::new(vec![]).is_err());
         assert!(ServiceProfile::new(vec![5, 0]).is_err());
         // a profile only covers the occupancies it was calibrated for

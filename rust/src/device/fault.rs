@@ -1,0 +1,713 @@
+//! Seeded fault injection and the robustness policies that answer it.
+//!
+//! A real FPGA card is not the healthy abstraction `card.rs` started as:
+//! units hang on transient upsets, die outright, straggle under thermal
+//! throttling, and — rarest but worst — serve *wrong answers* after a
+//! configuration-memory upset flips weight bits. This module makes all
+//! four failure modes injectable on the virtual clock, as deterministic
+//! data rather than random chaos:
+//!
+//! * [`Fault`] / [`FaultPlan`] — an explicit, validated list of fault
+//!   events (unit, cycle, magnitude). Plans are plain data: build them
+//!   by hand, from the CLI DSL ([`FaultPlan::parse`]), or seeded from a
+//!   [`Pcg32`] stream ([`FaultPlan::random`]) so a "chaos run" replays
+//!   bit-for-bit from its seed like the arrival processes do.
+//! * [`RetryPolicy`] — bounded retries with exponential backoff and
+//!   seeded jitter for work that failed over from a dead or quarantined
+//!   unit.
+//! * [`HealthPolicy`] / [`HealthState`] — the per-unit watchdog state
+//!   machine: repeated slow completions (strikes) quarantine a unit;
+//!   after `quarantine_cycles` it re-enters on probation and must serve
+//!   clean blocks before it counts as healthy again.
+//! * [`ShedPolicy`] — graceful degradation: when live capacity drops
+//!   below a watermark and the backlog passes a depth bound, the card
+//!   sheds load (reject new arrivals, or drop the oldest waiter).
+//! * [`CorruptionLab`] — the compute-corruption model. It owns the
+//!   golden [`WeightMem`] plus per-unit private copies; a corruption
+//!   fault flips seeded bits in one unit's copy, and checked-dispatch
+//!   mode re-runs a probe row through both copies (DMR-style detection)
+//!   when that unit completes a block. Detection is honest: a flipped
+//!   bit whose column multiplies a zero probe lane stays silent.
+//!
+//! Everything here is pure data + seeded PRNG on the virtual clock, so
+//! a faulty run is exactly as byte-deterministic as a healthy one.
+
+use anyhow::{bail, ensure, Context, Result};
+
+use crate::cfg::{SimdType, ValidatedParams};
+use crate::quant::Matrix;
+use crate::sim::simd_elem::pe_row;
+use crate::sim::WeightMem;
+use crate::util::rng::Pcg32;
+
+/// One injected fault event, pinned to a unit and a virtual cycle.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Fault {
+    /// The unit freezes for `cycles` starting at `at`: an in-flight
+    /// block's completion slips by `cycles`, and nothing new starts
+    /// until the freeze ends. Models a transient control-logic upset.
+    Hang { unit: usize, at: u64, cycles: u64 },
+    /// The unit dies permanently at `at`; in-flight and queued work
+    /// fails over through the retry path.
+    Death { unit: usize, at: u64 },
+    /// Blocks *started* in `[from, until)` on this unit take
+    /// `factor` times their nominal service. Models thermal throttling
+    /// or a degraded clock domain.
+    Straggler { unit: usize, from: u64, until: u64, factor: f64 },
+    /// `flips` seeded bit flips land in the unit's private weight-memory
+    /// copy at `at` (requires a [`CorruptionLab`]). Until the unit is
+    /// scrubbed it may serve wrong results — silently, unless
+    /// checked-dispatch mode catches the probe mismatch.
+    Corruption { unit: usize, at: u64, flips: usize },
+}
+
+impl Fault {
+    pub fn unit(&self) -> usize {
+        match *self {
+            Fault::Hang { unit, .. }
+            | Fault::Death { unit, .. }
+            | Fault::Straggler { unit, .. }
+            | Fault::Corruption { unit, .. } => unit,
+        }
+    }
+
+    /// Activation cycle (the window start for a straggler).
+    pub fn at(&self) -> u64 {
+        match *self {
+            Fault::Hang { at, .. } | Fault::Death { at, .. } | Fault::Corruption { at, .. } => at,
+            Fault::Straggler { from, .. } => from,
+        }
+    }
+
+    pub fn kind(&self) -> &'static str {
+        match self {
+            Fault::Hang { .. } => "hang",
+            Fault::Death { .. } => "death",
+            Fault::Straggler { .. } => "straggler",
+            Fault::Corruption { .. } => "corruption",
+        }
+    }
+
+    fn validate(&self, units: usize) -> Result<()> {
+        ensure!(
+            self.unit() < units,
+            "{} fault targets unit {} of a {units}-unit card",
+            self.kind(),
+            self.unit()
+        );
+        match *self {
+            Fault::Hang { cycles, .. } => ensure!(cycles >= 1, "hang: cycles must be >= 1"),
+            Fault::Straggler { from, until, factor, .. } => {
+                ensure!(until > from, "straggler: window [{from}, {until}) is empty");
+                ensure!(
+                    factor.is_finite() && factor >= 1.0,
+                    "straggler: factor must be finite and >= 1, got {factor}"
+                );
+            }
+            Fault::Corruption { flips, .. } => {
+                ensure!(flips >= 1, "corruption: flips must be >= 1")
+            }
+            Fault::Death { .. } => {}
+        }
+        Ok(())
+    }
+}
+
+/// A deterministic fault-injection plan: an explicit event list plus the
+/// seed that derives corruption bit positions and retry jitter. The
+/// empty plan ([`FaultPlan::none`]) is the healthy card and leaves the
+/// device summary byte-identical to the pre-fault subsystem.
+#[derive(Debug, Clone, PartialEq, Default)]
+pub struct FaultPlan {
+    pub faults: Vec<Fault>,
+    /// Seed for corruption bit positions (per-event streams) and retry
+    /// jitter. Irrelevant when the plan is empty.
+    pub seed: u64,
+}
+
+impl FaultPlan {
+    /// The healthy card: no faults.
+    pub fn none() -> FaultPlan {
+        FaultPlan::default()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.faults.is_empty()
+    }
+
+    pub fn has_corruption(&self) -> bool {
+        self.faults.iter().any(|f| matches!(f, Fault::Corruption { .. }))
+    }
+
+    pub fn validate(&self, units: usize) -> Result<()> {
+        for f in &self.faults {
+            f.validate(units)?;
+        }
+        Ok(())
+    }
+
+    /// Activation order for the event loop: ascending activation cycle,
+    /// ties by target unit then plan position. Returns indices into
+    /// `self.faults`.
+    pub fn schedule(&self) -> Vec<usize> {
+        let mut order: Vec<usize> = (0..self.faults.len()).collect();
+        order.sort_by_key(|&i| (self.faults[i].at(), self.faults[i].unit(), i));
+        order
+    }
+
+    /// Combined straggle multiplier for a block starting on `unit` at
+    /// `now` (overlapping windows compound multiplicatively).
+    pub fn straggle_factor(&self, unit: usize, now: u64) -> f64 {
+        let mut factor = 1.0;
+        for f in &self.faults {
+            if let Fault::Straggler { unit: u, from, until, factor: x } = *f {
+                if u == unit && (from..until).contains(&now) {
+                    factor *= x;
+                }
+            }
+        }
+        factor
+    }
+
+    /// A seeded random plan of `count` mixed-kind faults over the first
+    /// `horizon` cycles — same seed, same plan, byte-for-byte.
+    pub fn random(seed: u64, units: usize, horizon: u64, count: usize) -> FaultPlan {
+        let mut rng = Pcg32::with_stream(seed, 0xfa);
+        let horizon = horizon.max(1);
+        let faults = (0..count)
+            .map(|_| {
+                let unit = rng.next_range(units.max(1) as u32) as usize;
+                let at = 1 + rng.next_u64() % horizon;
+                match rng.next_range(4) {
+                    0 => Fault::Hang { unit, at, cycles: 1 + rng.next_u64() % (horizon / 8 + 1) },
+                    1 => Fault::Death { unit, at },
+                    2 => Fault::Straggler {
+                        unit,
+                        from: at,
+                        until: at + 1 + rng.next_u64() % (horizon / 4 + 1),
+                        factor: 2.0 + rng.next_range(6) as f64,
+                    },
+                    _ => Fault::Corruption { unit, at, flips: 1 + rng.next_range(8) as usize },
+                }
+            })
+            .collect();
+        FaultPlan { faults, seed }
+    }
+
+    /// Parse the CLI fault DSL: comma-separated events, each one of
+    ///
+    /// * `hang:U@T+K` — unit U frozen K cycles starting at T
+    /// * `die:U@T` — unit U dead at T
+    /// * `slow:U@A..B*F` — unit U straggles by factor F in `[A, B)`
+    /// * `flip:U@T*N` — N weight-bit flips on unit U at T
+    /// * `rand:N` — N seeded random faults over the first `horizon`
+    ///   cycles (appended after the explicit events)
+    ///
+    /// `seed` feeds `rand:` expansion, corruption bit positions and
+    /// retry jitter.
+    pub fn parse(spec: &str, seed: u64, units: usize, horizon: u64) -> Result<FaultPlan> {
+        let mut faults = Vec::new();
+        for item in spec.split(',').map(str::trim).filter(|s| !s.is_empty()) {
+            let (kind, rest) = item
+                .split_once(':')
+                .with_context(|| format!("fault {item:?}: expected kind:spec"))?;
+            match kind {
+                "rand" => {
+                    let n: usize =
+                        rest.parse().with_context(|| format!("fault {item:?}: bad count"))?;
+                    faults.extend(FaultPlan::random(seed, units, horizon, n).faults);
+                }
+                "hang" => {
+                    let (u, rest) = split_num(rest, '@', item)?;
+                    let (t, k) = split_num(rest, '+', item)?;
+                    faults.push(Fault::Hang {
+                        unit: u as usize,
+                        at: t,
+                        cycles: k.parse().with_context(|| format!("fault {item:?}: cycles"))?,
+                    });
+                }
+                "die" => {
+                    let (u, t) = split_num(rest, '@', item)?;
+                    faults.push(Fault::Death {
+                        unit: u as usize,
+                        at: t.parse().with_context(|| format!("fault {item:?}: cycle"))?,
+                    });
+                }
+                "slow" => {
+                    let (u, rest) = split_num(rest, '@', item)?;
+                    let (window, f) = rest
+                        .split_once('*')
+                        .with_context(|| format!("fault {item:?}: expected window*factor"))?;
+                    let (a, b) = window
+                        .split_once("..")
+                        .with_context(|| format!("fault {item:?}: expected A..B window"))?;
+                    faults.push(Fault::Straggler {
+                        unit: u as usize,
+                        from: a.parse().with_context(|| format!("fault {item:?}: from"))?,
+                        until: b.parse().with_context(|| format!("fault {item:?}: until"))?,
+                        factor: f.parse().with_context(|| format!("fault {item:?}: factor"))?,
+                    });
+                }
+                "flip" => {
+                    let (u, rest) = split_num(rest, '@', item)?;
+                    let (t, n) = split_num(rest, '*', item)?;
+                    faults.push(Fault::Corruption {
+                        unit: u as usize,
+                        at: t,
+                        flips: n.parse().with_context(|| format!("fault {item:?}: flips"))?,
+                    });
+                }
+                other => bail!("unknown fault kind {other:?} in {item:?}"),
+            }
+        }
+        let plan = FaultPlan { faults, seed };
+        plan.validate(units)?;
+        Ok(plan)
+    }
+
+    /// Per-event seed for a corruption's bit positions: stable in the
+    /// plan seed and the event's position, independent of other events.
+    pub fn corruption_seed(&self, fault_index: usize) -> u64 {
+        self.seed ^ 0x9e37_79b9_7f4a_7c15u64.wrapping_mul(fault_index as u64 + 1)
+    }
+}
+
+/// `"N@rest"` -> `(N, rest)` for the little DSL above.
+fn split_num<'a>(s: &'a str, sep: char, item: &str) -> Result<(u64, &'a str)> {
+    let (n, rest) =
+        s.split_once(sep).with_context(|| format!("fault {item:?}: expected {sep:?}"))?;
+    Ok((n.parse().with_context(|| format!("fault {item:?}: bad number {n:?}"))?, rest))
+}
+
+/// Bounded retry with exponential backoff + seeded jitter for requests
+/// whose unit failed under them. `max_attempts == 1` disables retries
+/// (the default): a failed request is dropped as retries-exhausted.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct RetryPolicy {
+    /// Total dispatch attempts per request (first try included).
+    pub max_attempts: u32,
+    /// Backoff before retry `n` is `min(backoff_base << (n-1),
+    /// backoff_cap)` cycles plus jitter.
+    pub backoff_base: u64,
+    pub backoff_cap: u64,
+    /// Max extra cycles of seeded jitter per backoff (decorrelates
+    /// retry storms; drawn from a dedicated deterministic stream).
+    pub jitter: u64,
+}
+
+impl Default for RetryPolicy {
+    fn default() -> RetryPolicy {
+        RetryPolicy { max_attempts: 1, backoff_base: 16, backoff_cap: 1024, jitter: 8 }
+    }
+}
+
+impl RetryPolicy {
+    pub fn validate(&self) -> Result<()> {
+        ensure!(self.max_attempts >= 1, "retry: max_attempts must be >= 1");
+        ensure!(self.backoff_cap >= self.backoff_base, "retry: backoff_cap < backoff_base");
+        Ok(())
+    }
+
+    /// Backoff before the next try after `attempts` completed attempts
+    /// (`attempts >= 1`).
+    pub fn backoff(&self, attempts: u32, jitter_rng: &mut Pcg32) -> u64 {
+        let exp = (attempts - 1).min(62);
+        let base = self.backoff_base.saturating_mul(1u64 << exp).min(self.backoff_cap);
+        let jitter =
+            if self.jitter > 0 { jitter_rng.next_u64() % (self.jitter + 1) } else { 0 };
+        base + jitter
+    }
+}
+
+/// Load shedding under degraded capacity: active once fewer than
+/// `min_live` units are operational *and* the card-wide waiting depth
+/// (policy-held + queued + parked + backoff) reaches `max_depth`.
+#[derive(Debug, Clone, PartialEq, Eq, Default)]
+pub enum ShedPolicy {
+    /// Never shed: requests wait unboundedly (the pre-fault behavior).
+    #[default]
+    None,
+    /// Refuse new arrivals while degraded — protects waiters' latency.
+    RejectNew { min_live: usize, max_depth: usize },
+    /// Drop the oldest waiting request to admit the newcomer — bounds
+    /// staleness instead (fresh work is worth more than stale work).
+    DropOldest { min_live: usize, max_depth: usize },
+}
+
+impl ShedPolicy {
+    pub fn validate(&self) -> Result<()> {
+        match *self {
+            ShedPolicy::None => Ok(()),
+            ShedPolicy::RejectNew { min_live, max_depth }
+            | ShedPolicy::DropOldest { min_live, max_depth } => {
+                ensure!(min_live >= 1, "shed: min_live must be >= 1");
+                ensure!(max_depth >= 1, "shed: max_depth must be >= 1");
+                Ok(())
+            }
+        }
+    }
+}
+
+/// Watchdog + quarantine parameters for per-unit health tracking.
+#[derive(Debug, Clone, PartialEq)]
+pub struct HealthPolicy {
+    /// Strikes (watchdog-slow completions) before quarantine.
+    pub strike_threshold: u32,
+    /// A completion counts as a strike when its actual duration exceeds
+    /// `watchdog_factor` times the block's nominal service.
+    pub watchdog_factor: f64,
+    /// Cycles a quarantined unit sits out; its weight copy is scrubbed
+    /// on re-entry.
+    pub quarantine_cycles: u64,
+    /// Clean completions required on probation before the unit counts
+    /// as healthy again (0 = straight back to healthy).
+    pub probation_successes: u32,
+}
+
+impl Default for HealthPolicy {
+    fn default() -> HealthPolicy {
+        HealthPolicy {
+            strike_threshold: 3,
+            watchdog_factor: 2.0,
+            quarantine_cycles: 4096,
+            probation_successes: 4,
+        }
+    }
+}
+
+impl HealthPolicy {
+    pub fn validate(&self) -> Result<()> {
+        ensure!(self.strike_threshold >= 1, "health: strike_threshold must be >= 1");
+        ensure!(
+            self.watchdog_factor.is_finite() && self.watchdog_factor >= 1.0,
+            "health: watchdog_factor must be finite and >= 1, got {}",
+            self.watchdog_factor
+        );
+        ensure!(self.quarantine_cycles >= 1, "health: quarantine_cycles must be >= 1");
+        Ok(())
+    }
+}
+
+/// Per-unit health as the card's tracker sees it. `Dead` is terminal;
+/// the others cycle `Healthy -> Quarantined -> Probation -> Healthy`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum HealthState {
+    #[default]
+    Healthy,
+    Quarantined,
+    Probation,
+    Dead,
+}
+
+impl HealthState {
+    pub fn name(&self) -> &'static str {
+        match self {
+            HealthState::Healthy => "healthy",
+            HealthState::Quarantined => "quarantined",
+            HealthState::Probation => "probation",
+            HealthState::Dead => "dead",
+        }
+    }
+
+    /// Can the unit accept dispatches? Frozen units still count — a
+    /// transient hang is invisible to the scheduler until the watchdog
+    /// trips — but quarantined and dead units do not.
+    pub fn operational(&self) -> bool {
+        matches!(self, HealthState::Healthy | HealthState::Probation)
+    }
+}
+
+/// One health transition on a unit's timeline.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct HealthEvent {
+    pub cycle: u64,
+    pub state: HealthState,
+}
+
+/// The compute-corruption model: golden weights, per-unit private
+/// copies, and the DMR-style probe check.
+///
+/// The golden [`WeightMem`] is built from the same canonical stimulus
+/// the explore engine simulates with (the eval layer wires
+/// `explore::stimulus_weights` / `stimulus_inputs` in), so "re-run the
+/// row through the golden shared weights" means exactly the weights the
+/// unit was calibrated against. Each unit's private copy is materialized
+/// lazily on its first corruption; clean copies compare equal by
+/// construction, so the probe re-run is elided for them.
+#[derive(Debug, Clone)]
+pub struct CorruptionLab {
+    params: ValidatedParams,
+    golden: WeightMem,
+    probe: Vec<i32>,
+    /// Golden probe output per matrix row (row `nf*PE + p`).
+    golden_out: Vec<i32>,
+    copies: Vec<Option<WeightMem>>,
+}
+
+impl CorruptionLab {
+    /// Build from the layer geometry, its weight matrix, and one probe
+    /// input vector (length `matrix_cols`, in the layer's input domain).
+    pub fn new(
+        params: &ValidatedParams,
+        weights: &Matrix,
+        probe: Vec<i32>,
+    ) -> Result<CorruptionLab> {
+        ensure!(
+            probe.len() == params.matrix_cols(),
+            "corruption lab: probe length {} != matrix cols {}",
+            probe.len(),
+            params.matrix_cols()
+        );
+        let golden = WeightMem::from_matrix(params, weights)?;
+        let sf = params.synapse_fold();
+        let golden_out = (0..params.matrix_rows())
+            .map(|r| {
+                let (p, nf) = (r % params.pe, r / params.pe);
+                pe_row(&probe, golden.read_row(p, nf, sf), params.simd_type)
+            })
+            .collect();
+        Ok(CorruptionLab {
+            params: params.clone(),
+            golden,
+            probe,
+            golden_out,
+            copies: Vec::new(),
+        })
+    }
+
+    /// Flip `flips` seeded bits in `unit`'s private copy (created from
+    /// the golden memory on first use). Returns the flips applied.
+    pub fn corrupt(&mut self, unit: usize, flips: usize, seed: u64) -> usize {
+        if self.copies.len() <= unit {
+            self.copies.resize_with(unit + 1, || None);
+        }
+        let golden = &self.golden;
+        let copy = self.copies[unit].get_or_insert_with(|| golden.clone());
+        let signed = self.params.simd_type == SimdType::Standard;
+        copy.flip_bits(seed, flips, self.params.weight_bits, signed)
+    }
+
+    /// Does `unit`'s copy currently differ from the golden memory?
+    /// (Omniscient view, used for silent-corruption accounting — the
+    /// scheduler itself only learns what [`check_unit`](Self::check_unit)
+    /// detects.)
+    pub fn is_corrupted(&self, unit: usize) -> bool {
+        self.copy(unit).is_some_and(|c| c.diff_lanes(&self.golden) > 0)
+    }
+
+    /// Checked-dispatch probe: re-run every row of `unit`'s copy against
+    /// the golden outputs. `true` = all rows agree (the unit looks
+    /// clean); `false` = mismatch detected. A corrupted lane whose probe
+    /// input is zero contributes nothing to the dot product, so silent
+    /// corruption is genuinely possible for the multi-bit datapaths.
+    pub fn check_unit(&self, unit: usize) -> bool {
+        let Some(copy) = self.copy(unit) else { return true };
+        let sf = self.params.synapse_fold();
+        (0..self.params.matrix_rows()).all(|r| {
+            let (p, nf) = (r % self.params.pe, r / self.params.pe);
+            pe_row(&self.probe, copy.read_row(p, nf, sf), self.params.simd_type)
+                == self.golden_out[r]
+        })
+    }
+
+    /// Restore `unit`'s copy from the golden memory (quarantine exit).
+    pub fn scrub(&mut self, unit: usize) {
+        if let Some(slot) = self.copies.get_mut(unit) {
+            *slot = None;
+        }
+    }
+
+    fn copy(&self, unit: usize) -> Option<&WeightMem> {
+        self.copies.get(unit).and_then(Option::as_ref)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::harness::random_weights;
+
+    fn params() -> ValidatedParams {
+        let b = crate::cfg::DesignPoint::fc("t").in_features(16).out_features(8);
+        b.pe(4).simd(8).build().unwrap()
+    }
+
+    fn lab() -> CorruptionLab {
+        let p = params();
+        let w = random_weights(&p, 7);
+        let probe = vec![1; p.matrix_cols()];
+        CorruptionLab::new(&p, &w, probe).unwrap()
+    }
+
+    #[test]
+    fn plan_validates_targets_and_shapes() {
+        let ok = FaultPlan {
+            faults: vec![
+                Fault::Hang { unit: 0, at: 10, cycles: 5 },
+                Fault::Death { unit: 3, at: 99 },
+                Fault::Straggler { unit: 1, from: 5, until: 50, factor: 3.0 },
+                Fault::Corruption { unit: 2, at: 20, flips: 4 },
+            ],
+            seed: 1,
+        };
+        assert!(ok.validate(4).is_ok());
+        assert!(ok.validate(3).is_err(), "unit 3 out of range on a 3-unit card");
+        assert!(ok.has_corruption());
+        let bad = FaultPlan { faults: vec![Fault::Hang { unit: 0, at: 1, cycles: 0 }], seed: 0 };
+        assert!(bad.validate(1).is_err());
+        let empty_window = Fault::Straggler { unit: 0, from: 9, until: 9, factor: 2.0 };
+        let bad = FaultPlan { faults: vec![empty_window], seed: 0 };
+        assert!(bad.validate(1).is_err());
+        assert!(FaultPlan::none().is_empty());
+        assert!(FaultPlan::none().validate(1).is_ok());
+    }
+
+    #[test]
+    fn schedule_orders_by_cycle_unit_position() {
+        let plan = FaultPlan {
+            faults: vec![
+                Fault::Death { unit: 1, at: 50 },
+                Fault::Hang { unit: 0, at: 50, cycles: 2 },
+                Fault::Corruption { unit: 0, at: 10, flips: 1 },
+            ],
+            seed: 0,
+        };
+        assert_eq!(plan.schedule(), vec![2, 1, 0]);
+    }
+
+    #[test]
+    fn straggle_windows_compound() {
+        let plan = FaultPlan {
+            faults: vec![
+                Fault::Straggler { unit: 0, from: 10, until: 20, factor: 2.0 },
+                Fault::Straggler { unit: 0, from: 15, until: 30, factor: 3.0 },
+                Fault::Straggler { unit: 1, from: 0, until: 100, factor: 5.0 },
+            ],
+            seed: 0,
+        };
+        assert_eq!(plan.straggle_factor(0, 9), 1.0);
+        assert_eq!(plan.straggle_factor(0, 10), 2.0);
+        assert_eq!(plan.straggle_factor(0, 17), 6.0);
+        assert_eq!(plan.straggle_factor(0, 20), 3.0);
+        assert_eq!(plan.straggle_factor(0, 30), 1.0);
+        assert_eq!(plan.straggle_factor(1, 50), 5.0);
+    }
+
+    #[test]
+    fn random_plans_are_seed_deterministic() {
+        let a = FaultPlan::random(42, 8, 100_000, 12);
+        let b = FaultPlan::random(42, 8, 100_000, 12);
+        assert_eq!(a, b, "same seed, same plan");
+        assert_eq!(a.faults.len(), 12);
+        assert!(a.validate(8).is_ok());
+        assert_ne!(a, FaultPlan::random(43, 8, 100_000, 12), "different seed, different plan");
+    }
+
+    #[test]
+    fn dsl_round_trips_each_kind() {
+        let spec = "hang:0@100+50, die:3@2000, slow:1@10..500*2.5, flip:2@40*3";
+        let plan = FaultPlan::parse(spec, 9, 4, 10_000).unwrap();
+        assert_eq!(
+            plan.faults,
+            vec![
+                Fault::Hang { unit: 0, at: 100, cycles: 50 },
+                Fault::Death { unit: 3, at: 2000 },
+                Fault::Straggler { unit: 1, from: 10, until: 500, factor: 2.5 },
+                Fault::Corruption { unit: 2, at: 40, flips: 3 },
+            ]
+        );
+        let rand = FaultPlan::parse("rand:5", 9, 4, 10_000).unwrap();
+        assert_eq!(rand.faults, FaultPlan::random(9, 4, 10_000, 5).faults);
+        assert!(FaultPlan::parse("melt:0@1", 9, 4, 100).is_err());
+        assert!(FaultPlan::parse("die:9@1", 9, 4, 100).is_err(), "target unit validated");
+        assert!(FaultPlan::parse("hang:0@x+1", 9, 4, 100).is_err());
+    }
+
+    #[test]
+    fn backoff_is_capped_exponential_with_jitter() {
+        let retry =
+            RetryPolicy { max_attempts: 5, backoff_base: 16, backoff_cap: 100, jitter: 0 };
+        let mut rng = Pcg32::new(1);
+        assert_eq!(retry.backoff(1, &mut rng), 16);
+        assert_eq!(retry.backoff(2, &mut rng), 32);
+        assert_eq!(retry.backoff(3, &mut rng), 64);
+        assert_eq!(retry.backoff(4, &mut rng), 100, "capped");
+        assert_eq!(retry.backoff(63, &mut rng), 100, "shift saturates, still capped");
+        let jittered = RetryPolicy { jitter: 8, ..retry };
+        let mut a = Pcg32::with_stream(3, 7);
+        let mut b = Pcg32::with_stream(3, 7);
+        for n in 1..=4u32 {
+            let x = jittered.backoff(n, &mut a);
+            assert_eq!(x, jittered.backoff(n, &mut b), "jitter is seed-deterministic");
+            let base = (16u64 << (n - 1)).min(100);
+            assert!(x >= base && x <= base + 8, "attempt {n}: {x} outside [{base}, {base}+8]");
+        }
+        assert!(RetryPolicy { max_attempts: 0, ..RetryPolicy::default() }.validate().is_err());
+        assert!(RetryPolicy { backoff_base: 10, backoff_cap: 5, ..RetryPolicy::default() }
+            .validate()
+            .is_err());
+    }
+
+    #[test]
+    fn policies_validate() {
+        assert!(ShedPolicy::None.validate().is_ok());
+        assert!(ShedPolicy::RejectNew { min_live: 0, max_depth: 8 }.validate().is_err());
+        assert!(ShedPolicy::DropOldest { min_live: 2, max_depth: 0 }.validate().is_err());
+        assert!(HealthPolicy::default().validate().is_ok());
+        assert!(HealthPolicy { strike_threshold: 0, ..HealthPolicy::default() }
+            .validate()
+            .is_err());
+        assert!(HealthPolicy { watchdog_factor: 0.5, ..HealthPolicy::default() }
+            .validate()
+            .is_err());
+        assert!(HealthPolicy { quarantine_cycles: 0, ..HealthPolicy::default() }
+            .validate()
+            .is_err());
+        assert!(HealthState::Healthy.operational());
+        assert!(HealthState::Probation.operational());
+        assert!(!HealthState::Quarantined.operational());
+        assert!(!HealthState::Dead.operational());
+    }
+
+    #[test]
+    fn lab_detects_flips_and_scrubs() {
+        let mut lab = lab();
+        assert!(!lab.is_corrupted(2));
+        assert!(lab.check_unit(2), "clean unit passes the probe");
+        let applied = lab.corrupt(2, 6, 99);
+        assert_eq!(applied, 6);
+        assert!(lab.is_corrupted(2));
+        // the all-ones probe feeds every lane, so a changed weight
+        // always moves some row's dot product
+        assert!(!lab.check_unit(2), "probe must catch an active lane flip");
+        assert!(lab.check_unit(0), "other units unaffected");
+        lab.scrub(2);
+        assert!(!lab.is_corrupted(2));
+        assert!(lab.check_unit(2), "scrubbed unit passes again");
+    }
+
+    #[test]
+    fn lab_corruption_is_seed_deterministic() {
+        let mut a = lab();
+        let mut b = lab();
+        a.corrupt(1, 3, 42);
+        b.corrupt(1, 3, 42);
+        let pa = &params();
+        let sf = pa.synapse_fold();
+        for nf in 0..pa.neuron_fold() {
+            for pe in 0..pa.pe {
+                assert_eq!(
+                    a.copy(1).unwrap().read_row(pe, nf, sf),
+                    b.copy(1).unwrap().read_row(pe, nf, sf)
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn lab_rejects_bad_probe() {
+        let p = params();
+        let w = random_weights(&p, 7);
+        assert!(CorruptionLab::new(&p, &w, vec![1; 3]).is_err());
+    }
+}

@@ -20,8 +20,16 @@
 //!   on the virtual clock.
 //! * [`arrival`] — deterministic seeded arrival processes (Poisson,
 //!   bursty/Markov-modulated, diurnal) built on `util::rng`.
+//! * [`fault`] — seeded fault injection ([`FaultPlan`]: hangs, deaths,
+//!   stragglers, weight-memory corruption) plus the robustness knobs
+//!   the card answers with: [`RetryPolicy`] (bounded exponential
+//!   backoff + jitter), [`HealthPolicy`] (watchdog strikes, quarantine,
+//!   probation), [`ShedPolicy`] (reject-new / drop-oldest load
+//!   shedding), and the [`CorruptionLab`] golden-weight DMR check.
 //! * [`report`] — [`DeviceSummary`]: aggregate throughput, queueing
-//!   delay percentiles, per-unit utilization, queue-depth traces; JSON
+//!   delay percentiles, per-unit utilization, queue-depth traces, and
+//!   the optional [`FaultSummary`] (fault counts, retries, timeouts,
+//!   drops, per-unit health timelines, goodput vs. offered load); JSON
 //!   through `util::json`.
 //! * [`serve`] — the real-time single-unit serving front
 //!   ([`serve_unit`]) that `coordinator::Pipeline` routes through.
@@ -32,15 +40,21 @@
 
 pub mod arrival;
 pub mod card;
+pub mod fault;
 pub mod report;
 pub mod scheduler;
 pub mod serve;
 
 pub use arrival::{ArrivalGen, ArrivalProcess};
 pub use card::{
-    run_card, run_card_traced, DeviceConfig, RequestRecord, ServiceModel, ServiceProfile,
-    TRACE_CAP,
+    run_card, run_card_faulty, run_card_faulty_traced, run_card_traced, DeviceConfig,
+    RequestRecord, ServiceModel, ServiceProfile, TRACE_CAP,
 };
-pub use report::{DelayStats, DeviceSummary, TracePoint, UnitStats};
+pub use fault::{
+    CorruptionLab, Fault, FaultPlan, HealthPolicy, HealthState, RetryPolicy, ShedPolicy,
+};
+pub use report::{
+    DelayStats, DeviceSummary, FaultSummary, HealthPoint, TracePoint, UnitHealth, UnitStats,
+};
 pub use scheduler::{Dispatch, PolicyKind, SchedulerPolicy, UnitView};
 pub use serve::{serve_unit, ServeConfig};

@@ -103,6 +103,168 @@ pub struct TracePoint {
     pub depth: usize,
 }
 
+/// One health transition on a unit's timeline, by state name.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct HealthPoint {
+    pub cycle: u64,
+    pub state: String,
+}
+
+/// Final health state and transition timeline of one unit.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct UnitHealth {
+    pub unit: usize,
+    /// State at end of run ("healthy", "quarantined", "probation",
+    /// "dead").
+    pub state: String,
+    pub timeline: Vec<HealthPoint>,
+}
+
+impl UnitHealth {
+    pub fn to_json(&self) -> Json {
+        let mut j = Json::obj();
+        j.set("unit", Json::from_i64(self.unit as i64));
+        j.set("state", Json::Str(self.state.clone()));
+        let tl: Vec<Json> = self
+            .timeline
+            .iter()
+            .map(|p| {
+                let mut pj = Json::obj();
+                pj.set("cycle", Json::from_i64(p.cycle as i64));
+                pj.set("state", Json::Str(p.state.clone()));
+                pj
+            })
+            .collect();
+        j.set("timeline", Json::Arr(tl));
+        j
+    }
+
+    pub fn from_json(j: &Json) -> Result<UnitHealth> {
+        let timeline = j
+            .get("timeline")
+            .as_arr()
+            .context("unit health: timeline")?
+            .iter()
+            .map(|pj| {
+                Ok(HealthPoint {
+                    cycle: pj.get("cycle").as_i64().context("health point: cycle")? as u64,
+                    state: pj.get("state").as_str().context("health point: state")?.to_string(),
+                })
+            })
+            .collect::<Result<Vec<_>>>()?;
+        Ok(UnitHealth {
+            unit: j.get("unit").as_usize().context("unit health: unit")?,
+            state: j.get("state").as_str().context("unit health: state")?.to_string(),
+            timeline,
+        })
+    }
+}
+
+/// Fault-tolerance accounting for a robust run: what was injected, what
+/// it cost, and where every non-completed request went. Present in the
+/// summary only when the config enables any robustness machinery, so
+/// healthy summaries stay byte-identical to the pre-fault subsystem.
+#[derive(Debug, Clone, PartialEq)]
+pub struct FaultSummary {
+    /// Requests offered to the card (the configured count).
+    pub offered: usize,
+    /// Requests that finished service (the summary's goodput base).
+    pub completed: usize,
+    /// Offered load in requests per thousand cycles; compare against
+    /// the summary's `throughput_rpkc` (goodput) for degradation.
+    pub offered_rpkc: f64,
+    pub hangs: usize,
+    pub deaths: usize,
+    pub stragglers: usize,
+    pub corruptions: usize,
+    /// Corrupted blocks caught by checked dispatch (failed + retried).
+    pub detected: usize,
+    /// Requests served by a corrupted unit with nobody noticing.
+    pub silent_served: usize,
+    /// Backoff retries scheduled after a unit failed under a request.
+    pub retries: usize,
+    /// Requests that missed their deadline.
+    pub timed_out: usize,
+    /// Arrivals refused by the reject-new shed policy.
+    pub shed_rejected: usize,
+    /// Waiting requests evicted by the drop-oldest shed policy.
+    pub shed_dropped: usize,
+    /// Requests dropped after their last allowed attempt failed.
+    pub retries_exhausted: usize,
+    /// Requests left waiting when every unit was permanently down.
+    pub stranded: usize,
+    pub quarantines: usize,
+    /// Watchdog strikes (slow completions) across all units.
+    pub strikes: usize,
+    pub health: Vec<UnitHealth>,
+}
+
+impl FaultSummary {
+    /// Requests dropped (as opposed to timed out or completed).
+    pub fn dropped(&self) -> usize {
+        self.shed_rejected + self.shed_dropped + self.retries_exhausted + self.stranded
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mut j = Json::obj();
+        j.set("offered", Json::from_i64(self.offered as i64));
+        j.set("completed", Json::from_i64(self.completed as i64));
+        j.set("offered_rpkc", Json::Num(self.offered_rpkc));
+        j.set("hangs", Json::from_i64(self.hangs as i64));
+        j.set("deaths", Json::from_i64(self.deaths as i64));
+        j.set("stragglers", Json::from_i64(self.stragglers as i64));
+        j.set("corruptions", Json::from_i64(self.corruptions as i64));
+        j.set("detected", Json::from_i64(self.detected as i64));
+        j.set("silent_served", Json::from_i64(self.silent_served as i64));
+        j.set("retries", Json::from_i64(self.retries as i64));
+        j.set("timed_out", Json::from_i64(self.timed_out as i64));
+        j.set("shed_rejected", Json::from_i64(self.shed_rejected as i64));
+        j.set("shed_dropped", Json::from_i64(self.shed_dropped as i64));
+        j.set("retries_exhausted", Json::from_i64(self.retries_exhausted as i64));
+        j.set("stranded", Json::from_i64(self.stranded as i64));
+        j.set("quarantines", Json::from_i64(self.quarantines as i64));
+        j.set("strikes", Json::from_i64(self.strikes as i64));
+        j.set("health", Json::Arr(self.health.iter().map(UnitHealth::to_json).collect()));
+        j
+    }
+
+    pub fn from_json(j: &Json) -> Result<FaultSummary> {
+        let health = j
+            .get("health")
+            .as_arr()
+            .context("fault summary: health")?
+            .iter()
+            .map(UnitHealth::from_json)
+            .collect::<Result<Vec<_>>>()?;
+        let count = |key: &str| -> Result<usize> {
+            j.get(key).as_usize().with_context(|| format!("fault summary: {key}"))
+        };
+        Ok(FaultSummary {
+            offered: count("offered")?,
+            completed: count("completed")?,
+            offered_rpkc: j
+                .get("offered_rpkc")
+                .as_f64()
+                .context("fault summary: offered_rpkc")?,
+            hangs: count("hangs")?,
+            deaths: count("deaths")?,
+            stragglers: count("stragglers")?,
+            corruptions: count("corruptions")?,
+            detected: count("detected")?,
+            silent_served: count("silent_served")?,
+            retries: count("retries")?,
+            timed_out: count("timed_out")?,
+            shed_rejected: count("shed_rejected")?,
+            shed_dropped: count("shed_dropped")?,
+            retries_exhausted: count("retries_exhausted")?,
+            stranded: count("stranded")?,
+            quarantines: count("quarantines")?,
+            strikes: count("strikes")?,
+            health,
+        })
+    }
+}
+
 /// Aggregate result of one device simulation.
 #[derive(Debug, Clone, PartialEq)]
 pub struct DeviceSummary {
@@ -127,6 +289,12 @@ pub struct DeviceSummary {
     /// Queue-depth samples every `trace_every` cycles (empty when
     /// tracing is off).
     pub trace: Vec<TracePoint>,
+    /// Samples that fell past `TRACE_CAP` and were not recorded; 0
+    /// means the trace is complete.
+    pub trace_dropped: usize,
+    /// Fault-tolerance accounting; `None` for a healthy (non-robust)
+    /// run, keeping its JSON byte-identical to the pre-fault subsystem.
+    pub fault: Option<FaultSummary>,
 }
 
 impl DeviceSummary {
@@ -153,6 +321,14 @@ impl DeviceSummary {
             })
             .collect();
         j.set("trace", Json::Arr(trace));
+        // optional keys: absent unless set, so healthy complete-trace
+        // summaries render byte-identically to the pre-fault subsystem
+        if self.trace_dropped > 0 {
+            j.set("trace_dropped", Json::from_i64(self.trace_dropped as i64));
+        }
+        if let Some(f) = &self.fault {
+            j.set("fault", f.to_json());
+        }
         j
     }
 
@@ -196,6 +372,16 @@ impl DeviceSummary {
                 .context("device summary: sojourn")?,
             per_unit,
             trace,
+            trace_dropped: if j.get("trace_dropped").is_null() {
+                0
+            } else {
+                j.get("trace_dropped").as_usize().context("device summary: trace_dropped")?
+            },
+            fault: if j.get("fault").is_null() {
+                None
+            } else {
+                Some(FaultSummary::from_json(j.get("fault")).context("device summary: fault")?)
+            },
         })
     }
 
@@ -270,7 +456,42 @@ mod tests {
                 },
             ],
             trace: vec![TracePoint { cycle: 1000, depth: 12 }],
+            trace_dropped: 0,
+            fault: None,
         }
+    }
+
+    fn faulty_sample() -> DeviceSummary {
+        let mut s = sample();
+        s.trace_dropped = 17;
+        s.fault = Some(FaultSummary {
+            offered: 2100,
+            completed: 2000,
+            offered_rpkc: 17.0,
+            hangs: 2,
+            deaths: 1,
+            stragglers: 1,
+            corruptions: 1,
+            detected: 1,
+            silent_served: 0,
+            retries: 40,
+            timed_out: 60,
+            shed_rejected: 25,
+            shed_dropped: 10,
+            retries_exhausted: 5,
+            stranded: 0,
+            quarantines: 2,
+            strikes: 6,
+            health: vec![UnitHealth {
+                unit: 0,
+                state: "probation".to_string(),
+                timeline: vec![
+                    HealthPoint { cycle: 5000, state: "quarantined".to_string() },
+                    HealthPoint { cycle: 9096, state: "probation".to_string() },
+                ],
+            }],
+        });
+        s
     }
 
     #[test]
@@ -281,6 +502,23 @@ mod tests {
         assert_eq!(back, s);
         // deterministic rendering: serialize twice, same bytes
         assert_eq!(text, back.to_json().to_string());
+        // a healthy summary must not leak robustness keys
+        assert!(!text.contains("\"fault\""));
+        assert!(!text.contains("trace_dropped"));
+    }
+
+    #[test]
+    fn faulty_json_roundtrip_is_exact() {
+        let s = faulty_sample();
+        let text = s.to_json().to_string();
+        let back = DeviceSummary::from_json(&Json::parse(&text).unwrap()).unwrap();
+        assert_eq!(back, s);
+        assert_eq!(text, back.to_json().to_string());
+        assert!(text.contains("\"fault\""));
+        assert!(text.contains("\"trace_dropped\""));
+        let f = back.fault.unwrap();
+        assert_eq!(f.dropped(), 40);
+        assert_eq!(f.completed + f.timed_out + f.dropped(), f.offered);
     }
 
     #[test]

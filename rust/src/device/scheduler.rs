@@ -37,6 +37,10 @@ pub struct UnitView {
     /// Total committed work: busy cycles left plus the service cycles
     /// of every queued batch.
     pub backlog_cycles: u64,
+    /// Can this unit accept dispatches? Quarantined and dead units are
+    /// ineligible; policies route around them (falling back to any unit
+    /// only when none is eligible — the card then parks the requests).
+    pub eligible: bool,
 }
 
 /// One dispatch decision: these request ids (in arrival order) form one
@@ -123,16 +127,29 @@ impl PolicyKind {
     }
 }
 
-/// The unit with the smallest committed backlog; ties go to the lowest
-/// index so the choice is deterministic.
+/// The eligible unit with the smallest committed backlog; ties go to
+/// the lowest index so the choice is deterministic. When no unit is
+/// eligible, falls back to the plain minimum (the card parks the
+/// dispatch until a unit comes back).
 fn least_loaded(units: &[UnitView]) -> usize {
-    let mut best = 0;
-    for (i, u) in units.iter().enumerate().skip(1) {
-        if u.backlog_cycles < units[best].backlog_cycles {
-            best = i;
+    let mut best: Option<usize> = None;
+    for (i, u) in units.iter().enumerate() {
+        if !u.eligible {
+            continue;
+        }
+        if best.map_or(true, |b| u.backlog_cycles < units[b].backlog_cycles) {
+            best = Some(i);
         }
     }
-    best
+    best.unwrap_or_else(|| {
+        let mut b = 0;
+        for (i, u) in units.iter().enumerate().skip(1) {
+            if u.backlog_cycles < units[b].backlog_cycles {
+                b = i;
+            }
+        }
+        b
+    })
 }
 
 struct RoundRobin {
@@ -141,8 +158,18 @@ struct RoundRobin {
 
 impl SchedulerPolicy for RoundRobin {
     fn on_request(&mut self, _now: u64, id: u64, units: &[UnitView]) -> Vec<Dispatch> {
-        let unit = self.next % units.len();
-        self.next = (self.next + 1) % units.len();
+        let n = units.len();
+        // first eligible unit at or after the cursor; a fully-down card
+        // falls back to the cursor unit (the card parks the request)
+        let mut unit = self.next % n;
+        for off in 0..n {
+            let cand = (self.next + off) % n;
+            if units[cand].eligible {
+                unit = cand;
+                break;
+            }
+        }
+        self.next = (unit + 1) % n;
         vec![Dispatch { unit, ids: vec![id] }]
     }
 
@@ -224,7 +251,8 @@ mod tests {
                 busy_cycles_left: 0,
                 queued_batches: 0,
                 queued_requests: 0,
-                backlog_cycles: 0
+                backlog_cycles: 0,
+                eligible: true
             };
             n
         ]
@@ -280,6 +308,31 @@ mod tests {
         assert!(p.on_request(400, 4, &units).is_empty());
         assert_eq!(p.drain(400, &units)[0].ids, vec![4]);
         assert_eq!(p.held(), 0);
+    }
+
+    #[test]
+    fn policies_route_around_ineligible_units() {
+        let mut units = idle(3);
+        units[0].backlog_cycles = 5;
+        units[1].backlog_cycles = 10;
+        units[2].backlog_cycles = 20;
+        units[0].eligible = false;
+        // least-loaded skips the smaller but ineligible unit 0
+        let mut p = PolicyKind::LeastLoaded.build().unwrap();
+        assert_eq!(p.on_request(0, 0, &units)[0].unit, 1);
+        // round-robin skips unit 0 from the cursor
+        let mut p = PolicyKind::RoundRobin.build().unwrap();
+        let targets: Vec<usize> =
+            (0..4).map(|i| p.on_request(i, i, &units)[0].unit).collect();
+        assert_eq!(targets, vec![1, 2, 1, 2]);
+        // fully-down card: fall back to a deterministic unit anyway
+        for u in &mut units {
+            u.eligible = false;
+        }
+        let mut p = PolicyKind::LeastLoaded.build().unwrap();
+        assert_eq!(p.on_request(0, 0, &units)[0].unit, 0);
+        let mut p = PolicyKind::RoundRobin.build().unwrap();
+        assert_eq!(p.on_request(0, 0, &units)[0].unit, 0);
     }
 
     #[test]

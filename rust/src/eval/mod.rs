@@ -54,13 +54,13 @@ use std::path::PathBuf;
 use crate::cfg::{ParamError, SweepPoint, ValidatedParams};
 use crate::coordinator::{Pipeline, PipelineConfig, Request, Response, ThroughputReport};
 use crate::device::{
-    self, ArrivalProcess, DeviceConfig, DeviceSummary, PolicyKind, RequestRecord, ServiceModel,
-    ServiceProfile,
+    self, ArrivalProcess, CorruptionLab, DeviceConfig, DeviceSummary, FaultPlan, PolicyKind,
+    RequestRecord, RetryPolicy, ServiceModel, ServiceProfile, ShedPolicy,
 };
 use crate::estimate::Style;
 use crate::explore::{
-    CacheStats, ChainSummary, ExploreConfig, Explorer, PointReport, SimSummary, StimulusStats,
-    StyleReport,
+    stimulus_inputs, stimulus_seed, stimulus_weights, CacheStats, ChainSummary, ExploreConfig,
+    Explorer, PointReport, SimSummary, StimulusStats, StyleReport,
 };
 use crate::sim::{StallPattern, DEFAULT_FIFO_DEPTH, PIPELINE_STAGES};
 
@@ -220,6 +220,38 @@ impl DeviceRequest {
             ),
         )
     }
+
+    /// Inject a seeded fault plan (hangs, deaths, stragglers, weight
+    /// corruption) into the card scenario.
+    pub fn with_faults(mut self, plan: FaultPlan) -> DeviceRequest {
+        self.card.faults = plan;
+        self
+    }
+
+    /// Give every request a deadline, in cycles from arrival.
+    pub fn with_deadline(mut self, cycles: u64) -> DeviceRequest {
+        self.card.deadline = Some(cycles);
+        self
+    }
+
+    /// Retry failed-over requests with bounded exponential backoff.
+    pub fn with_retries(mut self, retry: RetryPolicy) -> DeviceRequest {
+        self.card.retry = retry;
+        self
+    }
+
+    /// Shed load when live capacity drops below the policy's watermark.
+    pub fn with_shed(mut self, shed: ShedPolicy) -> DeviceRequest {
+        self.card.shed = shed;
+        self
+    }
+
+    /// Checked dispatch: re-run corrupted units' blocks against the
+    /// golden weights (DMR-style detection) and quarantine on mismatch.
+    pub fn with_checked_dispatch(mut self) -> DeviceRequest {
+        self.card.checked = true;
+        self
+    }
 }
 
 /// The response: everything the facade knows about one evaluated point.
@@ -270,6 +302,9 @@ pub enum EvalError {
     /// The device simulation failed (invalid card config, a service
     /// calibration that diverged from the reference, a policy bug).
     Device { message: String },
+    /// The fault-injection setup failed (a corruption plan without a
+    /// usable workload, or a corruption lab that could not be built).
+    Fault { message: String },
     /// A sweep or batch failed; `index` is the smallest failing input
     /// index and `message` carries the underlying error chain.
     Sweep { index: usize, message: String },
@@ -284,6 +319,7 @@ impl fmt::Display for EvalError {
             EvalError::Cache { message } => write!(f, "result cache: {message}"),
             EvalError::Pipeline { message } => write!(f, "serving pipeline: {message}"),
             EvalError::Device { message } => write!(f, "device simulation: {message}"),
+            EvalError::Fault { message } => write!(f, "fault injection: {message}"),
             // the message already names the failing point ("sweep point
             // N (…): …"); `index` is the programmatic handle
             EvalError::Sweep { message, .. } => f.write_str(message),
@@ -521,11 +557,12 @@ impl Session {
         let dev_err = |e: anyhow::Error| EvalError::Device {
             message: format!("{} on {}: {e:#}", req.workload.name(), req.card.policy.name()),
         };
-        let run = |svc: &mut dyn ServiceModel| {
+        let mut lab = self.corruption_lab(req)?;
+        let mut run = |svc: &mut dyn ServiceModel| {
             if traced {
-                device::run_card_traced(&req.card, svc)
+                device::run_card_faulty_traced(&req.card, svc, lab.as_mut())
             } else {
-                device::run_card(&req.card, svc).map(|s| (s, Vec::new()))
+                device::run_card_faulty(&req.card, svc, lab.as_mut()).map(|s| (s, Vec::new()))
             }
         };
         if req.slow {
@@ -535,6 +572,30 @@ impl Session {
             let mut profile = self.calibrate_service(req)?;
             run(&mut profile).map_err(dev_err)
         }
+    }
+
+    /// Build the golden-weights [`CorruptionLab`] when the fault plan
+    /// injects weight corruption: the weights and the probe vector are
+    /// the engine's canonical stimulus for the (first) layer, so checked
+    /// dispatch models DMR against exactly the weights the kernels use.
+    fn corruption_lab(&self, req: &DeviceRequest) -> Result<Option<CorruptionLab>, EvalError> {
+        if !req.card.faults.has_corruption() {
+            return Ok(None);
+        }
+        let p = match &req.workload {
+            DeviceWorkload::Point(p) => p,
+            DeviceWorkload::Chain(ls) => ls.first().ok_or_else(|| EvalError::Fault {
+                message: "corruption faults need a non-empty workload".to_string(),
+            })?,
+        };
+        let seed = stimulus_seed(p);
+        let weights = stimulus_weights(p, seed);
+        let probe = stimulus_inputs(p, seed ^ 0x9e37_79b9_7f4a_7c15, 1)
+            .pop()
+            .ok_or_else(|| EvalError::Fault { message: "empty probe stimulus".to_string() })?;
+        CorruptionLab::new(p, &weights, probe)
+            .map(Some)
+            .map_err(|e| EvalError::Fault { message: format!("{}: {e:#}", req.workload.name()) })
     }
 
     /// Measure the workload's service time for every block occupancy the
@@ -835,6 +896,34 @@ mod tests {
             }
             other => panic!("expected EvalError::Device, got {other:?}"),
         }
+    }
+
+    /// End-to-end corruption path: a corrupted unit under checked
+    /// dispatch is caught by the golden-weight probe, quarantined,
+    /// scrubbed, and the run stays byte-deterministic.
+    #[test]
+    fn corrupted_device_run_detects_and_recovers() {
+        use crate::device::Fault;
+        let s = Session::serial();
+        let mut req = DeviceRequest::point(point(), 2)
+            .with_faults(FaultPlan {
+                faults: vec![Fault::Corruption { unit: 0, at: 40, flips: 32 }],
+                seed: 77,
+            })
+            .with_retries(RetryPolicy { max_attempts: 4, ..RetryPolicy::default() })
+            .with_checked_dispatch();
+        req.card.requests = 80;
+        req.card.seed = 5;
+        req.card.arrival = ArrivalProcess::Poisson { mean_gap: 20.0 };
+        let a = s.evaluate_device(&req).unwrap();
+        let f = a.fault.as_ref().expect("fault section");
+        assert_eq!(f.corruptions, 1);
+        assert!(f.detected >= 1, "checked dispatch must catch the flips: {f:?}");
+        assert_eq!(f.silent_served, 0, "checked mode serves nothing silently");
+        assert!(f.quarantines >= 1);
+        assert_eq!(f.completed + f.timed_out + f.dropped(), f.offered);
+        let b = s.evaluate_device(&req).unwrap();
+        assert_eq!(a.to_json().to_string(), b.to_json().to_string());
     }
 
     #[test]

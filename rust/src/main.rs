@@ -19,7 +19,9 @@ use finn_mvu::analysis;
 use finn_mvu::cfg::{DesignPoint, SimdType, ValidatedParams};
 use finn_mvu::coordinator::{PipelineConfig, Request};
 use finn_mvu::estimate::{estimate, Style};
-use finn_mvu::device::{ArrivalProcess, PolicyKind};
+use finn_mvu::device::{
+    ArrivalProcess, FaultPlan, HealthPolicy, PolicyKind, RetryPolicy, ShedPolicy,
+};
 use finn_mvu::eval::{DeviceRequest, EvalRequest, Session, SessionConfig, SimOptions};
 use finn_mvu::explore::{points_to_json, points_to_table};
 use finn_mvu::util::json::Json;
@@ -58,6 +60,13 @@ COMMANDS:
             [--swing F] [--period CYC] [--requests N] [--seed N]
             [--workload nid|mvu (+ run shape flags)] [--slow]
             [--trace-every CYC] [--threads N] [--json] [--pretty]
+            [--faults SPEC] [--fault-seed N] [--deadline CYC]
+            [--retries N] [--backoff CYC] [--backoff-cap CYC]
+            [--jitter CYC] [--shed reject|drop-oldest] [--min-live N]
+            [--max-depth N] [--checked] [--quarantine CYC]
+            [--strikes N] [--watchdog F] [--probation N]
+            SPEC is comma-separated: hang:U@T+K | die:U@T |
+            slow:U@A..B*F | flip:U@T*N | rand:N
   compile   [--target-cycles N] [--lut-budget N]
   lint      [--pass determinism|panic-path|kernel-drift|doc-drift|style[,..]]
             [--root DIR] [--update-fingerprint] [--json] [--pretty]
@@ -321,7 +330,9 @@ fn cmd_device(a: &Args) -> Result<()> {
     a.check_known(&[
         "units", "policy", "block", "max-wait", "arrival", "gap", "mean-run", "swing", "period",
         "requests", "seed", "workload", "slow", "trace-every", "threads", "json", "pretty",
-        "ifm-ch", "ifm-dim", "ofm-ch", "kd", "pe", "simd", "type",
+        "ifm-ch", "ifm-dim", "ofm-ch", "kd", "pe", "simd", "type", "faults", "fault-seed",
+        "deadline", "retries", "backoff", "backoff-cap", "jitter", "shed", "min-live",
+        "max-depth", "checked", "quarantine", "strikes", "watchdog", "probation",
     ])
     .map_err(|e| anyhow::anyhow!("{e}"))?;
 
@@ -362,6 +373,38 @@ fn cmd_device(a: &Args) -> Result<()> {
     req.card.trace_every = a.get_usize("trace-every", 0)? as u64;
     req.slow = a.get_bool("slow");
 
+    if let Some(spec) = a.get("faults") {
+        // horizon for rand:N placement: the expected span of the
+        // arrival stream under the configured mean gap
+        let horizon = (req.card.requests as f64 * req.card.arrival.mean_gap()).max(1.0) as u64;
+        let fault_seed = a.get_usize("fault-seed", 1)? as u64;
+        req.card.faults = FaultPlan::parse(spec, fault_seed, units, horizon)?;
+    }
+    if a.has("deadline") {
+        req.card.deadline = Some(a.get_usize("deadline", 0)? as u64);
+    }
+    req.card.retry = RetryPolicy {
+        max_attempts: a.get_usize("retries", 0)? as u32 + 1,
+        backoff_base: a.get_usize("backoff", 16)? as u64,
+        backoff_cap: a.get_usize("backoff-cap", 1024)? as u64,
+        jitter: a.get_usize("jitter", 8)? as u64,
+    };
+    let min_live = a.get_usize("min-live", 1)?;
+    let max_depth = a.get_usize("max-depth", 256)?;
+    req.card.shed = match a.get("shed") {
+        None => ShedPolicy::None,
+        Some("reject") => ShedPolicy::RejectNew { min_live, max_depth },
+        Some("drop-oldest") => ShedPolicy::DropOldest { min_live, max_depth },
+        Some(other) => bail!("unknown shed policy {other:?} (reject|drop-oldest)"),
+    };
+    req.card.health = HealthPolicy {
+        strike_threshold: a.get_usize("strikes", 3)? as u32,
+        watchdog_factor: a.get_f64("watchdog", 2.0)?,
+        quarantine_cycles: a.get_usize("quarantine", 4096)? as u64,
+        probation_successes: a.get_usize("probation", 4)? as u32,
+    };
+    req.card.checked = a.get_bool("checked");
+
     let session = Session::new(SessionConfig {
         threads: a.get_usize("threads", 0)?,
         ..SessionConfig::default()
@@ -387,8 +430,38 @@ fn cmd_device(a: &Args) -> Result<()> {
             fnum(summary.sojourn.max, 0),
         );
         println!("{}", summary.unit_table().render());
+        if let Some(f) = &summary.fault {
+            println!(
+                "faults: {} hangs, {} deaths, {} stragglers, {} corruptions \
+                 ({} detected, {} served silently)",
+                f.hangs, f.deaths, f.stragglers, f.corruptions, f.detected, f.silent_served
+            );
+            println!(
+                "outcomes: {}/{} completed, {} timed out, {} dropped ({} rejected, \
+                 {} evicted, {} retries exhausted, {} stranded); {} retries",
+                f.completed,
+                f.offered,
+                f.timed_out,
+                f.dropped(),
+                f.shed_rejected,
+                f.shed_dropped,
+                f.retries_exhausted,
+                f.stranded,
+                f.retries
+            );
+            println!(
+                "health: {} quarantines, {} strikes; goodput {} vs offered {} req/kcycle",
+                f.quarantines,
+                f.strikes,
+                fnum(summary.throughput_rpkc, 3),
+                fnum(f.offered_rpkc, 3)
+            );
+        }
         if !summary.trace.is_empty() {
             println!("queue-depth trace: {} samples (use --json to dump)", summary.trace.len());
+        }
+        if summary.trace_dropped > 0 {
+            println!("queue-depth trace truncated: {} samples dropped", summary.trace_dropped);
         }
     }
     Ok(())

@@ -222,6 +222,14 @@ impl PackedMatrix {
         debug_assert!(c < self.cols, "col {c} out of range {}", self.cols);
         ((self.row_words(r)[c / 64] >> (c % 64)) & 1) as i32
     }
+
+    /// Flip the single bit at `(r, c)` — the fault-injection hook behind
+    /// `sim::weight_mem::PackedWeightMem::flip_bits`. Tail-pad bits past
+    /// `cols` are unreachable, so packed invariants survive any flip.
+    pub fn toggle(&mut self, r: usize, c: usize) {
+        assert!(r < self.rows && c < self.cols, "toggle ({r}, {c}) out of range");
+        self.words[r * self.words_per_row + c / 64] ^= 1u64 << (c % 64);
+    }
 }
 
 fn mask32(bits: u32) -> u32 {
@@ -314,6 +322,22 @@ mod tests {
     fn packed_matrix_rejects_nonbit_entries() {
         let m = Matrix::new(1, 4, vec![0, 1, 2, 0]).unwrap();
         assert!(PackedMatrix::from_matrix(&m).is_err());
+    }
+
+    #[test]
+    fn packed_matrix_toggle_flips_one_lane() {
+        let m = Matrix::new(2, 70, vec![0; 140]).unwrap();
+        let mut pm = PackedMatrix::from_matrix(&m).unwrap();
+        pm.toggle(1, 69); // tail word of row 1
+        for r in 0..2 {
+            for c in 0..70 {
+                let expect = (r == 1 && c == 69) as i32;
+                assert_eq!(pm.lane(r, c), expect, "r={r} c={c}");
+            }
+        }
+        assert_eq!(pm.row_words(1)[1] >> 6, 0, "tail padding stays zero");
+        pm.toggle(1, 69);
+        assert_eq!(pm, PackedMatrix::from_matrix(&m).unwrap(), "toggle is an involution");
     }
 
     #[test]

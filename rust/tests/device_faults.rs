@@ -1,0 +1,362 @@
+//! Fault-injection and fault-tolerant serving for the simulated
+//! accelerator card (DESIGN.md §Device subsystem, fault model):
+//!
+//!   * zero-fault byte-identity — an empty [`FaultPlan`] (and every
+//!     robustness knob at its default) leaves the `DeviceSummary` JSON
+//!     byte-identical to the pre-fault subsystem, with no `fault` or
+//!     `trace_dropped` keys;
+//!   * seeded-fault determinism — a faulty scenario is byte-identical
+//!     across repeated runs and across engine thread counts {1, 2, 8};
+//!   * request conservation — under every policy x fault mix,
+//!     `completed + timed_out + dropped == offered`;
+//!   * the degradation behaviors themselves: deadline expiry behind a
+//!     hang, load shedding during a brownout, watchdog quarantine of a
+//!     straggler, and checked-dispatch detection of weight corruption
+//!     (vs. silent service without the check);
+//!   * the `--faults` CLI DSL parses and rejects as documented.
+//!
+//! Run in CI under `--release` alongside the kernel-identity suites.
+
+use finn_mvu::cfg::{DesignPoint, ValidatedParams};
+use finn_mvu::device::{
+    run_card, run_card_faulty, run_card_faulty_traced, ArrivalProcess, DeviceConfig, Fault,
+    FaultPlan, HealthPolicy, PolicyKind, RetryPolicy, ServiceProfile, ShedPolicy,
+};
+use finn_mvu::eval::{DeviceRequest, Session};
+
+/// The cheap fc MVU the device property tests use (16x8, PE 4, SIMD 8).
+fn point() -> ValidatedParams {
+    DesignPoint::fc("faulty").in_features(16).out_features(8).pe(4).simd(8).build().unwrap()
+}
+
+/// Calibrated-profile stand-in: 4b + 5 cycles for a block of b <= 8.
+fn profile() -> ServiceProfile {
+    ServiceProfile::new((1..=8).map(|b| 4 * b + 5).collect()).unwrap()
+}
+
+fn cfg(units: usize, policy: PolicyKind, gap: f64, requests: usize) -> DeviceConfig {
+    let mut c = DeviceConfig::new(units, policy, ArrivalProcess::Poisson { mean_gap: gap });
+    c.requests = requests;
+    c.seed = 11;
+    c
+}
+
+fn policies() -> Vec<PolicyKind> {
+    vec![
+        PolicyKind::RoundRobin,
+        PolicyKind::LeastLoaded,
+        PolicyKind::BatchAware { block: 8, max_wait: 64 },
+    ]
+}
+
+#[test]
+fn zero_fault_plan_is_byte_identical_to_the_pre_fault_card() {
+    let mut base = cfg(3, PolicyKind::LeastLoaded, 5.0, 500);
+    base.trace_every = 200;
+    let plain = run_card(&base, &mut profile()).unwrap().to_json().to_string();
+    assert!(!plain.contains("\"fault\""), "healthy summary must not carry a fault section");
+    assert!(!plain.contains("trace_dropped"), "untruncated trace must not advertise drops");
+
+    // an explicitly attached empty plan takes the same code path
+    let mut idle = base.clone();
+    idle.faults = FaultPlan::none();
+    assert_eq!(
+        run_card(&idle, &mut profile()).unwrap().to_json().to_string(),
+        plain,
+        "empty fault plan perturbed the summary"
+    );
+
+    // robustness machinery armed but never firing: the summary gains a
+    // zeroed fault section and changes in no other byte
+    let mut armed = base.clone();
+    armed.deadline = Some(1 << 40);
+    armed.retry = RetryPolicy { max_attempts: 3, ..RetryPolicy::default() };
+    let mut s = run_card_faulty(&armed, &mut profile(), None).unwrap();
+    let f = s.fault.take().expect("robust config must carry a fault section");
+    assert_eq!(f.completed, f.offered, "nothing fired, nothing may be lost");
+    assert_eq!(
+        (f.hangs, f.deaths, f.stragglers, f.corruptions, f.retries, f.timed_out, f.dropped()),
+        (0, 0, 0, 0, 0, 0, 0),
+        "idle robustness machinery must count nothing"
+    );
+    assert_eq!(
+        s.to_json().to_string(),
+        plain,
+        "armed-but-idle robustness changed bytes outside the fault section"
+    );
+}
+
+#[test]
+fn faulty_runs_are_byte_deterministic() {
+    let mut c = cfg(3, PolicyKind::LeastLoaded, 4.0, 600);
+    c.trace_every = 100;
+    c.faults = FaultPlan {
+        faults: vec![
+            Fault::Hang { unit: 0, at: 150, cycles: 300 },
+            Fault::Death { unit: 2, at: 700 },
+            Fault::Straggler { unit: 1, from: 200, until: 1_200, factor: 3.0 },
+        ],
+        seed: 5,
+    };
+    c.deadline = Some(400);
+    c.retry = RetryPolicy { max_attempts: 3, ..RetryPolicy::default() };
+    c.shed = ShedPolicy::RejectNew { min_live: 2, max_depth: 32 };
+    let a = run_card_faulty(&c, &mut profile(), None).unwrap().to_json().to_string();
+    let b = run_card_faulty(&c, &mut profile(), None).unwrap().to_json().to_string();
+    assert_eq!(a, b, "same seed + same plan must be byte-identical");
+    assert!(a.contains("\"fault\""), "faulty summary must carry the fault section");
+
+    // seeded random plans are themselves deterministic
+    assert_eq!(FaultPlan::random(5, 4, 2_000, 8), FaultPlan::random(5, 4, 2_000, 8));
+    assert_ne!(FaultPlan::random(5, 4, 2_000, 8), FaultPlan::random(6, 4, 2_000, 8));
+}
+
+#[test]
+fn faulty_summaries_are_byte_identical_across_engine_thread_counts() {
+    let req = {
+        let mut r = DeviceRequest::nid(4);
+        r.card.policy = PolicyKind::BatchAware { block: 4, max_wait: 128 };
+        r.card.seed = 7;
+        r.card.requests = 1200;
+        r.card.trace_every = 500;
+        r
+    }
+    .with_faults(FaultPlan {
+        faults: vec![
+            Fault::Hang { unit: 2, at: 3_000, cycles: 800 },
+            Fault::Death { unit: 1, at: 6_000 },
+        ],
+        seed: 21,
+    })
+    .with_deadline(4_000)
+    .with_retries(RetryPolicy { max_attempts: 3, ..RetryPolicy::default() });
+    let baseline = {
+        let s = Session::with_threads(1);
+        let json = s.evaluate_device(&req).unwrap().to_json().to_string();
+        // second run through the same session: cached, same bytes
+        assert_eq!(s.evaluate_device(&req).unwrap().to_json().to_string(), json);
+        json
+    };
+    assert!(baseline.contains("\"fault\""));
+    for threads in [2usize, 8] {
+        let s = Session::with_threads(threads);
+        assert_eq!(
+            s.evaluate_device(&req).unwrap().to_json().to_string(),
+            baseline,
+            "faulty device summary diverged at {threads} engine threads"
+        );
+    }
+}
+
+#[test]
+fn requests_are_conserved_under_every_policy_and_fault_mix() {
+    let mixes: Vec<(&str, FaultPlan)> = vec![
+        (
+            "hangs",
+            FaultPlan {
+                faults: vec![
+                    Fault::Hang { unit: 0, at: 50, cycles: 200 },
+                    Fault::Hang { unit: 1, at: 300, cycles: 100 },
+                ],
+                seed: 3,
+            },
+        ),
+        ("death", FaultPlan { faults: vec![Fault::Death { unit: 0, at: 200 }], seed: 3 }),
+        (
+            "straggler",
+            FaultPlan {
+                faults: vec![Fault::Straggler { unit: 1, from: 100, until: 900, factor: 3.0 }],
+                seed: 3,
+            },
+        ),
+        (
+            // a seeded mixed bag; corruption events are dropped because
+            // this test runs without a CorruptionLab
+            "random",
+            FaultPlan {
+                faults: FaultPlan::random(33, 2, 2_000, 12)
+                    .faults
+                    .into_iter()
+                    .filter(|f| !matches!(f, Fault::Corruption { .. }))
+                    .collect(),
+                seed: 33,
+            },
+        ),
+    ];
+    for policy in policies() {
+        for (name, plan) in &mixes {
+            let mut c = cfg(2, policy.clone(), 4.0, 600);
+            c.faults = plan.clone();
+            c.deadline = Some(400);
+            c.retry = RetryPolicy { max_attempts: 3, ..RetryPolicy::default() };
+            c.shed = ShedPolicy::RejectNew { min_live: 2, max_depth: 32 };
+            let (s, records) = run_card_faulty_traced(&c, &mut profile(), None).unwrap();
+            let f = s.fault.as_ref().expect("faulty run must carry a fault summary");
+            let label = format!("{} / {name}", s.policy);
+            assert_eq!(f.offered, 600, "{label}: offered");
+            assert_eq!(
+                f.completed + f.timed_out + f.dropped(),
+                f.offered,
+                "{label}: conservation"
+            );
+            assert_eq!(s.requests, f.completed, "{label}: summary counts completions");
+            assert_eq!(records.len(), f.completed, "{label}: one record per completion");
+            assert_eq!(
+                s.per_unit.iter().map(|u| u.requests).sum::<usize>(),
+                f.completed,
+                "{label}: per-unit accounting"
+            );
+            for r in &records {
+                assert!(r.arrival <= r.start && r.start < r.done, "{label}: causality");
+                assert!(
+                    (1..=3).contains(&r.attempts),
+                    "{label}: request {} took {} attempts",
+                    r.id,
+                    r.attempts
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn deadlines_expire_requests_stuck_behind_a_hang() {
+    let mut c = cfg(1, PolicyKind::LeastLoaded, 5.0, 400);
+    c.faults =
+        FaultPlan { faults: vec![Fault::Hang { unit: 0, at: 30, cycles: 600 }], seed: 1 };
+    c.deadline = Some(100);
+    let s = run_card_faulty(&c, &mut profile(), None).unwrap();
+    let f = s.fault.as_ref().unwrap();
+    assert_eq!(f.hangs, 1);
+    assert!(
+        f.timed_out > 0,
+        "requests queued behind a 600-cycle hang must blow a 100-cycle deadline"
+    );
+    assert!(f.completed > 0, "the card must still serve after the thaw");
+    assert_eq!(f.completed + f.timed_out + f.dropped(), f.offered);
+}
+
+#[test]
+fn load_shedding_kicks_in_during_a_brownout() {
+    let brownout = |shed: ShedPolicy| {
+        // one of two units dies early under heavy traffic: the survivor
+        // cannot keep up, so the watermark policy must start shedding
+        let mut c = cfg(2, PolicyKind::LeastLoaded, 2.0, 400);
+        c.faults = FaultPlan { faults: vec![Fault::Death { unit: 0, at: 100 }], seed: 2 };
+        c.shed = shed;
+        run_card_faulty(&c, &mut profile(), None).unwrap()
+    };
+    let reject = brownout(ShedPolicy::RejectNew { min_live: 2, max_depth: 8 });
+    let fr = reject.fault.as_ref().unwrap();
+    assert!(fr.shed_rejected > 0, "reject-new never fired");
+    assert_eq!(fr.shed_dropped, 0, "reject-new must not evict waiters");
+    assert_eq!(fr.completed + fr.timed_out + fr.dropped(), fr.offered);
+
+    let drop_old = brownout(ShedPolicy::DropOldest { min_live: 2, max_depth: 8 });
+    let fd = drop_old.fault.as_ref().unwrap();
+    assert!(fd.shed_dropped > 0, "drop-oldest never fired");
+    assert_eq!(fd.completed + fd.timed_out + fd.dropped(), fd.offered);
+}
+
+#[test]
+fn the_watchdog_quarantines_a_straggler_and_probations_it_back() {
+    let mut c = cfg(2, PolicyKind::RoundRobin, 4.0, 600);
+    // factor 3 on a x2 watchdog: every block on unit 0 is a strike
+    c.faults = FaultPlan {
+        faults: vec![Fault::Straggler { unit: 0, from: 0, until: 100_000, factor: 3.0 }],
+        seed: 4,
+    };
+    c.health = HealthPolicy {
+        strike_threshold: 2,
+        watchdog_factor: 2.0,
+        quarantine_cycles: 250,
+        probation_successes: 1,
+    };
+    c.retry = RetryPolicy { max_attempts: 3, ..RetryPolicy::default() };
+    let s = run_card_faulty(&c, &mut profile(), None).unwrap();
+    let f = s.fault.as_ref().unwrap();
+    assert_eq!(f.stragglers, 1);
+    assert!(f.strikes >= 2, "slow completions must accumulate strikes, got {}", f.strikes);
+    assert!(f.quarantines >= 1, "two strikes must quarantine the unit");
+    let timeline = &f.health[0].timeline;
+    assert!(
+        timeline.iter().any(|p| p.state == "quarantined"),
+        "unit 0 timeline records no quarantine: {timeline:?}"
+    );
+    assert!(
+        timeline.iter().any(|p| p.state == "probation"),
+        "unit 0 never re-entered on probation: {timeline:?}"
+    );
+    assert_eq!(f.completed + f.timed_out + f.dropped(), f.offered);
+}
+
+#[test]
+fn checked_dispatch_catches_corruption_that_unchecked_service_misses() {
+    let session = Session::serial();
+    let base = || {
+        let mut r = DeviceRequest::point(point(), 2);
+        r.card.seed = 5;
+        r.card.requests = 80;
+        r.card.arrival = ArrivalProcess::Poisson { mean_gap: 20.0 };
+        r.with_faults(FaultPlan {
+            faults: vec![Fault::Corruption { unit: 0, at: 40, flips: 32 }],
+            seed: 77,
+        })
+    };
+
+    // unchecked: the corrupted unit keeps serving, silently
+    let silent = session.evaluate_device(&base()).unwrap();
+    let fs = silent.fault.as_ref().unwrap();
+    assert_eq!(fs.corruptions, 1);
+    assert_eq!(fs.detected, 0, "nothing checks, nothing detects");
+    assert!(fs.silent_served > 0, "the corrupted unit must have served requests");
+    assert_eq!(fs.completed, fs.offered, "unchecked service completes everything");
+
+    // checked dispatch: the DMR probe flags the unit and quarantines it
+    let checked = session
+        .evaluate_device(
+            &base()
+                .with_checked_dispatch()
+                .with_retries(RetryPolicy { max_attempts: 4, ..RetryPolicy::default() }),
+        )
+        .unwrap();
+    let fc = checked.fault.as_ref().unwrap();
+    assert_eq!(fc.corruptions, 1);
+    assert!(fc.detected >= 1, "the probe must catch a 32-bit weight corruption");
+    assert_eq!(fc.silent_served, 0, "checked mode may not serve corrupted results");
+    assert!(fc.quarantines >= 1, "detection must quarantine the unit");
+    assert_eq!(fc.completed + fc.timed_out + fc.dropped(), fc.offered);
+}
+
+#[test]
+fn the_fault_dsl_parses_and_rejects_as_documented() {
+    let plan =
+        FaultPlan::parse("hang:0@100+50, die:1@200, slow:0@10..90*2.5, flip:1@50*3", 9, 2, 1_000)
+            .unwrap();
+    assert_eq!(plan.seed, 9);
+    assert_eq!(
+        plan.faults,
+        vec![
+            Fault::Hang { unit: 0, at: 100, cycles: 50 },
+            Fault::Death { unit: 1, at: 200 },
+            Fault::Straggler { unit: 0, from: 10, until: 90, factor: 2.5 },
+            Fault::Corruption { unit: 1, at: 50, flips: 3 },
+        ]
+    );
+
+    // rand:N expands to the seeded random plan, appended in order
+    let expanded = FaultPlan::parse("die:0@5, rand:4", 3, 4, 2_000).unwrap();
+    assert_eq!(expanded.faults[0], Fault::Death { unit: 0, at: 5 });
+    assert_eq!(&expanded.faults[1..], &FaultPlan::random(3, 4, 2_000, 4).faults[..]);
+
+    for bad in [
+        "boom:1@2",        // unknown kind
+        "die:9@1",         // unit off the card
+        "slow:0@90..10*2", // empty straggle window
+        "hang:0@5+0",      // zero-cycle hang
+        "die:1",           // missing @cycle
+        "flip:0@5*0",      // zero flips
+    ] {
+        assert!(FaultPlan::parse(bad, 1, 2, 100).is_err(), "{bad:?} must be rejected");
+    }
+}
