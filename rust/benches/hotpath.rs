@@ -21,8 +21,13 @@
 
 use finn_mvu::cfg::{nid_layers, DesignPoint, SimdType, ValidatedParams};
 use finn_mvu::device::{ArrivalProcess, Fault, FaultPlan, PolicyKind, RetryPolicy};
-use finn_mvu::eval::{ChainRequest, DeviceRequest, Session, SessionConfig, SimOptions};
-use finn_mvu::explore::stimulus_thresholds;
+use finn_mvu::estimate::Style;
+use finn_mvu::eval::{ChainRequest, DeviceRequest, EvalRequest, Session, SessionConfig, SimOptions};
+use finn_mvu::explore::{estimate_key, stimulus_thresholds};
+use finn_mvu::serve::{
+    run_frontend, synthetic_load, BreakerPolicy, FaultyBackend, InjectedFaults, RatePolicy,
+    ServeKind, ServePolicy, SessionBackend, Shed, Tier,
+};
 use finn_mvu::harness::{bench, random_weights, SweepKind};
 use finn_mvu::quant::{matvec, Matrix, Thresholds};
 use finn_mvu::runtime::{default_artifacts_dir, Engine};
@@ -552,6 +557,70 @@ fn brownout_bench() {
     assert!(goodput >= 0.99, "brownout goodput {goodput:.3} below the 0.99 bar");
 }
 
+/// Overload scenario for the serving frontend (DESIGN.md §Serving
+/// core): ~1M synthetic requests arriving far faster than any tier can
+/// serve, with a 400k-cycle Full-tier outage and a flaky Fast tier
+/// injected mid-run. Acceptance bars: the run never panics, both
+/// conservation identities hold at 1M scale, every response is
+/// tier-labeled, the ladder actually degrades, and the breakers trip.
+fn serve_overload_bench() {
+    let session = Session::parallel();
+    let p = DesignPoint::fc("serve-bench")
+        .in_features(64)
+        .out_features(32)
+        .pe(4)
+        .simd(8)
+        .precision(4, 4, 0)
+        .build()
+        .unwrap();
+    let eval_req = EvalRequest::new(p.clone()).with_sim(SimOptions::default());
+    let kinds = [
+        ServeKind::Evaluate(std::sync::Arc::new(eval_req)),
+        ServeKind::CacheQuery { key: estimate_key(&p, Style::Rtl) },
+        ServeKind::Infer(std::sync::Arc::new(ChainRequest {
+            layers: nid_layers(),
+            sim: SimOptions::default(),
+        })),
+    ];
+    let requests = synthetic_load(1_000_000, 2.0, 7, &kinds);
+    let policy = ServePolicy {
+        queue_depth: 512,
+        shed: Shed::DropOldest,
+        rate: Some(RatePolicy { burst: 256, per: 8 }),
+        deadline: Some(5_000),
+        batch: 32,
+        max_wait: 64,
+        retry: RetryPolicy { max_attempts: 3, backoff_base: 16, backoff_cap: 256, jitter: 8 },
+        breaker: BreakerPolicy { trip_after: 4, open_for: 2048, probes: 1 },
+        ladder: true,
+        service: [1200, 240, 24, 4],
+        seed: 7,
+    };
+    let plan = InjectedFaults::none()
+        .with_outage(Tier::Full, 200_000, 600_000)
+        .with_every(Tier::Fast, 7);
+    let inner = SessionBackend::new(&session);
+    let faulty = FaultyBackend::new(&inner, plan);
+    let t0 = std::time::Instant::now();
+    let out = run_frontend(&faulty, &requests, &policy).unwrap();
+    let wall = t0.elapsed().as_secs_f64();
+    let s = &out.summary;
+    println!(
+        "serve overload: 1M requests, Full outage 200k..600k, flaky Fast\n{s}\n    -> {:.2} s \
+         wall ({:.2} M requests/s through admission)",
+        wall,
+        1.0 / wall.max(1e-9)
+    );
+    assert!(s.conserved(), "conservation violated at 1M scale");
+    assert_eq!(s.tiers.iter().sum::<usize>(), s.completed, "every response is tier-labeled");
+    assert!(s.completed > 0 && s.degraded > 0, "ladder never degraded: {s:?}");
+    assert!(s.breaker_opens >= 1, "breakers never tripped: {s:?}");
+    println!(
+        "    -> acceptance: conserved, {} completions ({} degraded), {} breaker opens PASS",
+        s.completed, s.degraded, s.breaker_opens
+    );
+}
+
 fn explore_bench() {
     // the full Table 2 grid (all six sweeps x three SIMD types)
     let points: Vec<_> = SweepKind::ALL
@@ -617,6 +686,9 @@ fn main() {
 
     // fault-tolerant serving: brownout recovery + zero-fault byte-identity
     brownout_bench();
+
+    // the resilient serving frontend under 1M-request overload + faults
+    serve_overload_bench();
 
     // reference GEMM baseline
     let w = random_weights(&nid0, 13);

@@ -27,5 +27,7 @@ mod vclock;
 
 pub use batcher::{Batch, BatchAt, Batcher, BatcherAt, TickBatch, TickBatcher};
 pub use metrics::{LatencyRecorder, LatencyRecorderAt, ThroughputReport, TickRecorder};
-pub use pipeline::{Pipeline, PipelineConfig, Request, Response};
+pub use pipeline::{
+    DeadWorker, KernelFactory, Pipeline, PipelineConfig, Request, Response, UnitKernel,
+};
 pub use vclock::Timeline;

@@ -20,11 +20,93 @@ use std::time::Duration;
 
 use anyhow::{Context, Result};
 
-use crate::device::serve::ServeConfig;
-use crate::runtime::Engine;
+use crate::device::serve::{ClosedEarly, ServeConfig};
+use crate::runtime::{Engine, LoadedKernel};
 
 use super::batcher::Batch;
 use super::metrics::ThroughputReport;
+
+/// One layer's compute kernel, owned by its worker thread.
+pub trait UnitKernel {
+    /// Elements per output row.
+    fn out_row(&self) -> usize;
+    /// Run one batch (row-major, padded to the batch capacity).
+    fn run_batch(&mut self, data: &[i32]) -> Result<Vec<i32>>;
+}
+
+/// Builds one layer's kernel *inside* its worker thread (PJRT clients
+/// are not `Send`, so construction cannot happen on the caller). `Sync`
+/// because every worker shares one factory reference.
+pub trait KernelFactory: Sync {
+    fn build(&self, index: usize, name: &str) -> Result<Box<dyn UnitKernel>>;
+}
+
+/// The production factory: one PJRT engine + loaded artifact per worker.
+struct EngineFactory {
+    dir: PathBuf,
+}
+
+struct EngineKernel {
+    /// Keeps the worker's PJRT client alive for the kernel's lifetime.
+    _engine: Engine,
+    kernel: std::sync::Arc<LoadedKernel>,
+}
+
+impl UnitKernel for EngineKernel {
+    fn out_row(&self) -> usize {
+        self.kernel.info.out_shape.iter().skip(1).product()
+    }
+
+    fn run_batch(&mut self, data: &[i32]) -> Result<Vec<i32>> {
+        self.kernel.run(data)
+    }
+}
+
+impl KernelFactory for EngineFactory {
+    fn build(&self, _index: usize, name: &str) -> Result<Box<dyn UnitKernel>> {
+        let engine = Engine::new(&self.dir)?;
+        let kernel = engine.load(name)?;
+        Ok(Box::new(EngineKernel { _engine: engine, kernel }))
+    }
+}
+
+/// Structured dead-worker report: which layer failed, why, and which
+/// request ids were submitted but never collected. Before this type
+/// existed a worker that failed during setup returned without reaching
+/// the start barrier and [`Pipeline::run`] blocked forever.
+#[derive(Debug, Clone)]
+pub struct DeadWorker {
+    /// Chain index of the failed layer.
+    pub layer: usize,
+    /// Artifact name of the failed layer.
+    pub name: String,
+    /// The worker's error chain (or a panic note).
+    pub detail: String,
+    /// Ids submitted to the pipeline but never collected.
+    pub in_flight: Vec<u64>,
+}
+
+impl std::fmt::Display for DeadWorker {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "pipeline worker {} ({}) died: {}; {} request(s) in flight",
+            self.layer,
+            self.name,
+            self.detail,
+            self.in_flight.len()
+        )?;
+        if !self.in_flight.is_empty() {
+            let shown: Vec<String> =
+                self.in_flight.iter().take(16).map(|id| id.to_string()).collect();
+            let more = if self.in_flight.len() > 16 { ", .." } else { "" };
+            write!(f, " [{}{more}]", shown.join(", "))?;
+        }
+        Ok(())
+    }
+}
+
+impl std::error::Error for DeadWorker {}
 
 /// One inference request.
 #[derive(Debug, Clone)]
@@ -89,14 +171,12 @@ impl Pipeline {
     /// happens before the clock starts (a barrier separates setup from
     /// serving).
     pub fn run(&self, requests: Vec<Request>) -> Result<(Vec<Response>, ThroughputReport)> {
-        let n_layers = self.layer_names.len();
-        anyhow::ensure!(n_layers > 0, "empty pipeline");
         let row_len = {
             // validate the chain against the manifest before spawning
             let m = crate::runtime::Manifest::load(&self.artifacts_dir)?;
             let mut prev_out: Option<Vec<usize>> = None;
             let mut first_row = 0usize;
-            for (i, name) in self.layer_names.iter().enumerate() {
+            for name in &self.layer_names {
                 let a = m.find(name)?;
                 anyhow::ensure!(a.batch == self.cfg.batch, "{name}: batch mismatch");
                 if let Some(prev) = &prev_out {
@@ -105,14 +185,34 @@ impl Pipeline {
                     first_row = a.in_shape.iter().skip(1).product();
                 }
                 prev_out = Some(a.out_shape.clone());
-                let _ = i;
             }
             first_row
         };
+        let factory = EngineFactory { dir: self.artifacts_dir.clone() };
+        self.run_with(&factory, row_len, requests)
+    }
 
+    /// [`run`](Pipeline::run) over an explicit [`KernelFactory`] (tests
+    /// drive the pipeline without PJRT artifacts through this). Two
+    /// liveness guarantees hold that plain worker closures did not give:
+    ///
+    /// * workers **always** reach the start barrier — a failed kernel
+    ///   build surfaces as a [`DeadWorker`] error instead of leaving the
+    ///   collector blocked forever on a barrier that never completes;
+    /// * worker results are joined, so a mid-run kernel failure names
+    ///   the dead layer and the request ids still in flight.
+    pub fn run_with(
+        &self,
+        factory: &dyn KernelFactory,
+        row_len: usize,
+        requests: Vec<Request>,
+    ) -> Result<(Vec<Response>, ThroughputReport)> {
+        let n_layers = self.layer_names.len();
+        anyhow::ensure!(n_layers > 0, "empty pipeline");
+        let submitted: Vec<u64> = requests.iter().map(|r| r.id).collect();
         let barrier = std::sync::Barrier::new(n_layers + 1);
 
-        let (responses, report) = std::thread::scope(|scope| -> Result<_> {
+        std::thread::scope(|scope| -> Result<_> {
             // build the channel chain
             let mut senders: Vec<SyncSender<Batch>> = Vec::new();
             let mut receivers: Vec<Receiver<Batch>> = Vec::new();
@@ -125,22 +225,25 @@ impl Pipeline {
             let mut rx_iter = receivers.into_iter();
             let first_rx = rx_iter.next().unwrap();
             let mut rx_opt = Some(first_rx);
+            let mut workers = Vec::with_capacity(n_layers);
             for (k, name) in self.layer_names.iter().enumerate() {
                 let rx = rx_opt.take().unwrap();
                 rx_opt = rx_iter.next();
                 let tx = senders[k + 1].clone();
-                let dir = self.artifacts_dir.clone();
                 let barrier = &barrier;
                 let name = name.clone();
-                scope.spawn(move || -> Result<()> {
-                    // each worker owns its own PJRT client (not Send)
-                    let engine = Engine::new(&dir)?;
-                    let kernel = engine.load(&name)?;
-                    let out_row: usize = kernel.info.out_shape.iter().skip(1).product();
+                workers.push(scope.spawn(move || -> Result<()> {
+                    // setup is fallible, but the barrier is reached
+                    // unconditionally: returning before it would leave
+                    // the other side waiting forever
+                    let built = factory.build(k, &name);
                     barrier.wait();
+                    let mut kernel =
+                        built.with_context(|| format!("building kernel for {name}"))?;
+                    let out_row = kernel.out_row();
                     while let Ok(batch) = rx.recv() {
                         let out = kernel
-                            .run(&batch.data)
+                            .run_batch(&batch.data)
                             .with_context(|| format!("executing {name}"))?;
                         let next = Batch {
                             ids: batch.ids,
@@ -154,7 +257,7 @@ impl Pipeline {
                         }
                     }
                     Ok(())
-                });
+                }));
             }
             drop(senders.drain(1..).collect::<Vec<_>>()); // workers hold clones
             let feeder_tx = senders.pop().unwrap();
@@ -171,10 +274,47 @@ impl Pipeline {
                 max_wait: self.cfg.max_wait,
                 arrival_gap: self.cfg.arrival_gap,
             };
-            crate::device::serve::serve_unit(feeder_tx, &final_rx, requests, &serve_cfg)
-        })?;
+            let served =
+                crate::device::serve::serve_unit(feeder_tx, &final_rx, requests, &serve_cfg);
 
-        Ok((responses, report))
+            // serve_unit dropped every channel endpoint it held, so the
+            // worker chain has unwound (channel closure cascades both
+            // ways); join to harvest the first structured failure
+            let mut failed: Option<(usize, String)> = None;
+            for (k, handle) in workers.into_iter().enumerate() {
+                let detail = match handle.join() {
+                    Ok(Ok(())) => None,
+                    Ok(Err(e)) => Some(format!("{e:#}")),
+                    Err(_) => Some("worker thread panicked".to_string()),
+                };
+                if failed.is_none() {
+                    if let Some(d) = detail {
+                        failed = Some((k, d));
+                    }
+                }
+            }
+            match (served, failed) {
+                (Ok(ok), _) => Ok(ok),
+                (Err(e), Some((layer, detail))) => {
+                    let completed: std::collections::BTreeSet<u64> = e
+                        .downcast_ref::<ClosedEarly>()
+                        .map(|c| c.completed_ids.iter().copied().collect())
+                        .unwrap_or_default();
+                    let in_flight: Vec<u64> = submitted
+                        .iter()
+                        .copied()
+                        .filter(|id| !completed.contains(id))
+                        .collect();
+                    Err(anyhow::Error::new(DeadWorker {
+                        layer,
+                        name: self.layer_names[layer].clone(),
+                        detail,
+                        in_flight,
+                    }))
+                }
+                (Err(e), None) => Err(e),
+            }
+        })
     }
 }
 
@@ -186,6 +326,102 @@ mod tests {
 
     fn have_artifacts() -> bool {
         default_artifacts_dir().join("manifest.json").exists()
+    }
+
+    /// A +1-per-layer kernel with injectable setup and mid-run faults —
+    /// drives `run_with` without PJRT artifacts.
+    struct TestKernel {
+        die_after: Option<usize>,
+        seen: usize,
+    }
+
+    impl UnitKernel for TestKernel {
+        fn out_row(&self) -> usize {
+            1
+        }
+
+        fn run_batch(&mut self, data: &[i32]) -> Result<Vec<i32>> {
+            if self.die_after.map_or(false, |n| self.seen >= n) {
+                anyhow::bail!("injected kernel fault");
+            }
+            self.seen += 1;
+            Ok(data.iter().map(|v| v + 1).collect())
+        }
+    }
+
+    struct TestFactory {
+        /// Layer index whose build fails (the pre-fix permanent hang).
+        die_setup: Option<usize>,
+        /// (layer, batches processed before failing).
+        die_after: Option<(usize, usize)>,
+    }
+
+    impl KernelFactory for TestFactory {
+        fn build(&self, index: usize, _name: &str) -> Result<Box<dyn UnitKernel>> {
+            if self.die_setup == Some(index) {
+                anyhow::bail!("injected setup fault");
+            }
+            let die_after = self.die_after.and_then(|(l, n)| (l == index).then_some(n));
+            Ok(Box::new(TestKernel { die_after, seen: 0 }))
+        }
+    }
+
+    fn test_pipeline(batch: usize) -> Pipeline {
+        let cfg = PipelineConfig {
+            batch,
+            channel_depth: 2,
+            max_wait: Duration::from_millis(1),
+            arrival_gap: None,
+        };
+        Pipeline::new(PathBuf::from("unused"), vec!["a".into(), "b".into()], cfg)
+    }
+
+    fn unit_requests(n: u64) -> Vec<Request> {
+        (0..n).map(|id| Request { id, data: vec![id as i32] }).collect()
+    }
+
+    #[test]
+    fn run_with_applies_every_layer() {
+        let p = test_pipeline(2);
+        let factory = TestFactory { die_setup: None, die_after: None };
+        let (mut resp, report) = p.run_with(&factory, 1, unit_requests(6)).unwrap();
+        resp.sort_by_key(|r| r.id);
+        assert_eq!(report.requests, 6);
+        for r in &resp {
+            assert_eq!(r.output, vec![r.id as i32 + 2], "request {}", r.id);
+        }
+    }
+
+    /// Regression: a worker that failed during setup used to return
+    /// before the start barrier, leaving `run` blocked forever. It must
+    /// now finish with a structured [`DeadWorker`] naming every
+    /// submitted id as in flight.
+    #[test]
+    fn setup_failure_reports_dead_worker_instead_of_hanging() {
+        let p = test_pipeline(2);
+        let factory = TestFactory { die_setup: Some(1), die_after: None };
+        let err = p.run_with(&factory, 1, unit_requests(6)).unwrap_err();
+        let dead = err.downcast_ref::<DeadWorker>().expect("typed DeadWorker");
+        assert_eq!(dead.layer, 1);
+        assert_eq!(dead.name, "b");
+        assert!(dead.detail.contains("injected setup fault"), "got: {}", dead.detail);
+        assert_eq!(dead.in_flight, vec![0, 1, 2, 3, 4, 5]);
+        assert!(err.to_string().contains("6 request(s) in flight"), "got: {err:#}");
+    }
+
+    /// A worker dying mid-run names the failed layer and exactly the
+    /// ids that never came back (buffered batches are still delivered
+    /// before the channel reports closure).
+    #[test]
+    fn midrun_failure_names_the_in_flight_requests() {
+        let p = test_pipeline(2);
+        let factory = TestFactory { die_setup: None, die_after: Some((1, 1)) };
+        let err = p.run_with(&factory, 1, unit_requests(8)).unwrap_err();
+        let dead = err.downcast_ref::<DeadWorker>().expect("typed DeadWorker");
+        assert_eq!(dead.layer, 1);
+        assert_eq!(dead.name, "b");
+        assert!(dead.detail.contains("injected kernel fault"), "got: {}", dead.detail);
+        assert_eq!(dead.in_flight, vec![2, 3, 4, 5, 6, 7]);
     }
 
     #[test]

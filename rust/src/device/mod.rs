@@ -57,4 +57,4 @@ pub use report::{
     DelayStats, DeviceSummary, FaultSummary, HealthPoint, TracePoint, UnitHealth, UnitStats,
 };
 pub use scheduler::{Dispatch, PolicyKind, SchedulerPolicy, UnitView};
-pub use serve::{serve_unit, ServeConfig};
+pub use serve::{serve_unit, ClosedEarly, ServeConfig};

@@ -12,9 +12,34 @@
 use std::sync::mpsc::{Receiver, SyncSender};
 use std::time::{Duration, Instant};
 
-use anyhow::{Context, Result};
+use anyhow::Result;
 
 use crate::coordinator::{Batch, Batcher, LatencyRecorder, Request, Response, ThroughputReport};
+
+/// Typed "unit died" failure: the output channel closed with responses
+/// still outstanding. Carries what *was* collected so callers (the
+/// pipeline) can name the requests left in flight instead of guessing
+/// from a string.
+#[derive(Debug, Clone)]
+pub struct ClosedEarly {
+    /// Requests submitted to the unit.
+    pub expected: usize,
+    /// Ids whose responses arrived before the channel closed.
+    pub completed_ids: Vec<u64>,
+}
+
+impl std::fmt::Display for ClosedEarly {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "pipeline closed before all responses arrived ({} of {} collected)",
+            self.completed_ids.len(),
+            self.expected
+        )
+    }
+}
+
+impl std::error::Error for ClosedEarly {}
 
 /// Serving parameters for one unit (a subset of `PipelineConfig` plus
 /// the validated request row length).
@@ -66,8 +91,10 @@ pub fn serve_unit(
 
         // collector (this thread)
         while responses.len() < expected {
-            let batch =
-                final_rx.recv().context("pipeline closed before all responses arrived")?;
+            let Ok(batch) = final_rx.recv() else {
+                let completed_ids = responses.iter().map(|r| r.id).collect();
+                return Err(anyhow::Error::new(ClosedEarly { expected, completed_ids }));
+            };
             let now = Instant::now();
             for (i, (&id, &stamp)) in batch.ids.iter().zip(&batch.stamps).enumerate() {
                 let start = i * batch.row_len;
@@ -138,5 +165,8 @@ mod tests {
         };
         let err = serve_unit(tx_in, &rx_out, requests, &cfg).unwrap_err();
         assert!(err.to_string().contains("pipeline closed"), "got: {err:#}");
+        let closed = err.downcast_ref::<ClosedEarly>().expect("typed ClosedEarly");
+        assert_eq!(closed.expected, 3);
+        assert!(closed.completed_ids.is_empty());
     }
 }

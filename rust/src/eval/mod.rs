@@ -62,6 +62,7 @@ use crate::explore::{
     stimulus_inputs, stimulus_seed, stimulus_weights, CacheStats, ChainSummary, ExploreConfig,
     Explorer, PointReport, SimSummary, StimulusStats, StyleReport,
 };
+use crate::serve::{run_frontend, ServeOutcome, ServePolicy, ServeRequest, SessionBackend};
 use crate::sim::{StallPattern, DEFAULT_FIFO_DEPTH, PIPELINE_STAGES};
 
 /// Options for the cycle-accurate simulation half of a request.
@@ -308,6 +309,10 @@ pub enum EvalError {
     /// A sweep or batch failed; `index` is the smallest failing input
     /// index and `message` carries the underlying error chain.
     Sweep { index: usize, message: String },
+    /// The serving frontend rejected its configuration or input stream
+    /// (invalid [`ServePolicy`](crate::serve::ServePolicy), duplicate
+    /// request ids).
+    Serve { message: String },
 }
 
 impl fmt::Display for EvalError {
@@ -323,6 +328,7 @@ impl fmt::Display for EvalError {
             // the message already names the failing point ("sweep point
             // N (…): …"); `index` is the programmatic handle
             EvalError::Sweep { message, .. } => f.write_str(message),
+            EvalError::Serve { message } => write!(f, "serving frontend: {message}"),
         }
     }
 }
@@ -474,6 +480,25 @@ impl Session {
                 &req.sim.out_stall,
             )
             .map_err(|e| EvalError::Sim { point: name, message: format!("{e:#}") })
+    }
+
+    /// Serve a finite stream of typed requests through the resilient
+    /// frontend (bounded admission, deadline propagation, per-tier
+    /// circuit breakers, retry budgets, graceful degradation —
+    /// DESIGN.md §Serving core) with this session as the backend.
+    /// Byte-deterministic for a given (requests, policy) pair
+    /// regardless of the session's thread count; with
+    /// [`ServePolicy::disabled`] response payloads are byte-identical
+    /// to calling [`Session::evaluate`] directly. To inject backend
+    /// faults, wrap a [`SessionBackend`] in a
+    /// [`FaultyBackend`](crate::serve::FaultyBackend) and call
+    /// [`run_frontend`] yourself.
+    pub fn serve(
+        &self,
+        requests: &[ServeRequest],
+        policy: &ServePolicy,
+    ) -> Result<ServeOutcome, EvalError> {
+        run_frontend(&SessionBackend::new(self), requests, policy)
     }
 
     /// Evaluate a batch of requests across the thread pool. Output order

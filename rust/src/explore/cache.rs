@@ -14,8 +14,13 @@
 //!   * an optional on-disk directory of `<hash>.json` files so repeated
 //!     sweeps across processes — e.g. regenerating Figs. 8–13, which share
 //!     design points — are computed once. Disk entries store the full key
-//!     text and are verified on read, so a hash collision or a stale
-//!     schema degrades to a miss, never to a wrong answer.
+//!     text plus an integrity envelope (value length + FNV-1a checksum)
+//!     and are verified on read: a hash collision or a stale schema
+//!     degrades to a miss, and a truncated or garbage entry — a crash
+//!     mid-write, a bad disk — is quarantined (renamed to
+//!     `*.json.quarantined`) and recomputed, never served and never
+//!     allowed to wedge the sweep. Quarantines are counted in
+//!     [`CacheStats::quarantined`].
 //!
 //! `LayerParams::name` is a display label, not a design parameter: it is
 //! excluded from the key, so identical geometries reached from different
@@ -159,12 +164,14 @@ pub fn content_hash(key: &str) -> u64 {
     h
 }
 
-/// Hit/miss counters (memory hits and disk hits reported separately).
+/// Hit/miss counters (memory hits and disk hits reported separately),
+/// plus the count of corrupt disk entries quarantined on read.
 #[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
 pub struct CacheStats {
     pub hits: usize,
     pub disk_hits: usize,
     pub misses: usize,
+    pub quarantined: usize,
 }
 
 impl CacheStats {
@@ -183,11 +190,68 @@ impl std::fmt::Display for CacheStats {
             self.hits,
             self.disk_hits,
             self.misses
-        )
+        )?;
+        if self.quarantined > 0 {
+            write!(f, ", {} quarantined", self.quarantined)?;
+        }
+        Ok(())
     }
 }
 
 static TMP_COUNTER: AtomicU64 = AtomicU64::new(0);
+
+/// What a disk lookup found.
+enum DiskRead {
+    /// A verified entry for this key.
+    Hit(Json),
+    /// The entry failed an integrity check and must not be trusted.
+    Corrupt(&'static str),
+    /// No file at the entry's address (a plain miss).
+    Absent,
+    /// A well-formed entry for a *different* key (hash collision):
+    /// a miss, but the file belongs to its rightful owner.
+    Foreign,
+}
+
+/// Read and verify one on-disk entry. Atomic-rename publishing makes
+/// torn entries *unlikely*, not impossible: a crash mid-`fs::write` on
+/// a pre-rename temp file is invisible here, but a crashed rename on a
+/// non-atomic filesystem, a bad disk, or a hand-edited file is not.
+/// Pre-envelope entries (no `len`/`check` fields) are still accepted on
+/// a key match, exactly as they were written.
+fn read_disk(path: &Path, key: &str) -> DiskRead {
+    let text = match std::fs::read_to_string(path) {
+        Ok(text) => text,
+        Err(e) if e.kind() == std::io::ErrorKind::NotFound => return DiskRead::Absent,
+        Err(_) => return DiskRead::Corrupt("unreadable"),
+    };
+    let Ok(doc) = Json::parse(&text) else {
+        return DiskRead::Corrupt("unparseable");
+    };
+    match doc.get("key").as_str() {
+        None => return DiskRead::Corrupt("missing key field"),
+        Some(k) if k != key => return DiskRead::Foreign,
+        Some(_) => {}
+    }
+    let value = doc.get("value");
+    if value.is_null() {
+        return DiskRead::Corrupt("missing value");
+    }
+    let len = doc.get("len");
+    let check = doc.get("check");
+    if len.is_null() && check.is_null() {
+        return DiskRead::Hit(value.clone());
+    }
+    let value_text = value.to_string();
+    if len.as_i64() != Some(value_text.len() as i64) {
+        return DiskRead::Corrupt("value length mismatch");
+    }
+    let want = format!("{:016x}", content_hash(&value_text));
+    if check.as_str() != Some(want.as_str()) {
+        return DiskRead::Corrupt("checksum mismatch");
+    }
+    DiskRead::Hit(value.clone())
+}
 
 /// The two-layer cache. Thread-safe; shared by reference across the
 /// explorer's workers.
@@ -200,6 +264,7 @@ pub struct ResultCache {
     hits: AtomicUsize,
     disk_hits: AtomicUsize,
     misses: AtomicUsize,
+    quarantined: AtomicUsize,
 }
 
 impl ResultCache {
@@ -211,6 +276,7 @@ impl ResultCache {
             hits: AtomicUsize::new(0),
             disk_hits: AtomicUsize::new(0),
             misses: AtomicUsize::new(0),
+            quarantined: AtomicUsize::new(0),
         }
     }
 
@@ -239,31 +305,47 @@ impl ResultCache {
             return Some(v);
         }
         if let Some(path) = self.path_for(key) {
-            if let Ok(text) = std::fs::read_to_string(&path) {
-                if let Ok(doc) = Json::parse(&text) {
-                    // verify the full key: collisions and stale schemas
-                    // degrade to a miss.
-                    if doc.get("key").as_str() == Some(key) && !doc.get("value").is_null() {
-                        let value = doc.get("value").clone();
-                        self.mem.lock().unwrap().insert(key.to_string(), value.clone());
-                        self.disk_hits.fetch_add(1, Ordering::Relaxed);
-                        return Some(value);
-                    }
+            match read_disk(&path, key) {
+                DiskRead::Hit(value) => {
+                    self.mem.lock().unwrap().insert(key.to_string(), value.clone());
+                    self.disk_hits.fetch_add(1, Ordering::Relaxed);
+                    return Some(value);
                 }
+                // a corrupt entry is moved aside so the recompute's
+                // put_json can publish a clean one in its place
+                DiskRead::Corrupt(_) => self.quarantine(&path),
+                DiskRead::Absent | DiskRead::Foreign => {}
             }
         }
         self.misses.fetch_add(1, Ordering::Relaxed);
         None
     }
 
+    /// Move a corrupt entry out of the addressable namespace (rename to
+    /// `*.json.quarantined`, fall back to removal). Errors are ignored:
+    /// the entry already reads as a miss either way.
+    fn quarantine(&self, path: &Path) {
+        let aside = path.with_extension("json.quarantined");
+        if std::fs::rename(path, &aside).is_err() {
+            let _ = std::fs::remove_file(path);
+        }
+        self.quarantined.fetch_add(1, Ordering::Relaxed);
+    }
+
     /// Insert a value. Disk writes are atomic (temp file + rename), so a
-    /// concurrent reader sees either the old entry or the complete new one.
+    /// concurrent reader sees either the old entry or the complete new
+    /// one; the entry carries its value's length and FNV-1a checksum so
+    /// torn or bit-flipped bytes are detected on read (see
+    /// [`read_disk`]'s envelope check).
     pub fn put_json(&self, key: &str, value: &Json) -> Result<()> {
         self.mem.lock().unwrap().insert(key.to_string(), value.clone());
         if let Some(path) = self.path_for(key) {
+            let value_text = value.to_string();
             let mut doc = Json::obj();
             doc.set("key", Json::Str(key.to_string()));
             doc.set("value", value.clone());
+            doc.set("len", Json::from_i64(value_text.len() as i64));
+            doc.set("check", Json::Str(format!("{:016x}", content_hash(&value_text))));
             let tmp = path.with_extension(format!(
                 "tmp.{}.{}",
                 std::process::id(),
@@ -287,6 +369,7 @@ impl ResultCache {
             hits: self.hits.load(Ordering::Relaxed),
             disk_hits: self.disk_hits.load(Ordering::Relaxed),
             misses: self.misses.load(Ordering::Relaxed),
+            quarantined: self.quarantined.load(Ordering::Relaxed),
         }
     }
 }
@@ -395,5 +478,102 @@ mod tests {
         // pinned so on-disk addresses stay valid across builds
         assert_eq!(content_hash(""), 0xcbf2_9ce4_8422_2325);
         assert_eq!(content_hash("a"), 0xaf63_dc4c_8601_ec8c);
+    }
+
+    fn scratch_dir(tag: &str) -> PathBuf {
+        let dir =
+            std::env::temp_dir().join(format!("finn-mvu-cache-{tag}-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        dir
+    }
+
+    fn entry_path(dir: &Path, key: &str) -> PathBuf {
+        dir.join(format!("{:016x}.json", content_hash(key)))
+    }
+
+    fn seed_entry(dir: &Path, key: &str) -> PathBuf {
+        let c = ResultCache::with_dir(dir).unwrap();
+        let mut v = Json::obj();
+        v.set("luts", Json::from_i64(42));
+        c.put_json(key, &v).unwrap();
+        entry_path(dir, key)
+    }
+
+    #[test]
+    fn truncated_entry_is_quarantined_and_recomputed_over() {
+        let dir = scratch_dir("trunc");
+        let path = seed_entry(&dir, "key-t");
+        let text = std::fs::read_to_string(&path).unwrap();
+        std::fs::write(&path, &text[..text.len() / 2]).unwrap(); // crash mid-write
+        let c = ResultCache::with_dir(&dir).unwrap();
+        assert!(c.get_json("key-t").is_none());
+        let s = c.stats();
+        assert_eq!((s.misses, s.quarantined), (1, 1));
+        assert!(!path.exists(), "corrupt entry must leave the namespace");
+        assert!(path.with_extension("json.quarantined").exists());
+        // the recompute's put_json publishes a clean entry in its place
+        let mut v = Json::obj();
+        v.set("luts", Json::from_i64(42));
+        c.put_json("key-t", &v).unwrap();
+        let fresh = ResultCache::with_dir(&dir).unwrap();
+        assert_eq!(fresh.get_json("key-t"), Some(v));
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn garbage_entry_is_quarantined() {
+        let dir = scratch_dir("garbage");
+        let path = seed_entry(&dir, "key-g");
+        std::fs::write(&path, b"\x00\xffnot json at all").unwrap();
+        let c = ResultCache::with_dir(&dir).unwrap();
+        assert!(c.get_json("key-g").is_none());
+        assert_eq!(c.stats().quarantined, 1);
+        assert!(path.with_extension("json.quarantined").exists());
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn bitflipped_value_fails_the_checksum() {
+        let dir = scratch_dir("flip");
+        let path = seed_entry(&dir, "key-f");
+        // same length, one digit off: only the checksum can catch it
+        let text = std::fs::read_to_string(&path).unwrap();
+        assert!(text.contains("42"));
+        std::fs::write(&path, text.replace("42", "43")).unwrap();
+        let c = ResultCache::with_dir(&dir).unwrap();
+        assert!(c.get_json("key-f").is_none());
+        assert_eq!(c.stats().quarantined, 1);
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn legacy_entry_without_envelope_still_hits() {
+        let dir = scratch_dir("legacy");
+        std::fs::create_dir_all(&dir).unwrap();
+        let mut doc = Json::obj();
+        doc.set("key", Json::Str("key-l".into()));
+        let mut v = Json::obj();
+        v.set("luts", Json::from_i64(7));
+        doc.set("value", v.clone());
+        std::fs::write(entry_path(&dir, "key-l"), doc.to_string()).unwrap();
+        let c = ResultCache::with_dir(&dir).unwrap();
+        assert_eq!(c.get_json("key-l"), Some(v));
+        assert_eq!(c.stats().quarantined, 0);
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn foreign_key_collision_is_a_miss_but_not_quarantined() {
+        let dir = scratch_dir("foreign");
+        let path = seed_entry(&dir, "key-owner");
+        // pretend "key-other" hashes to the same address
+        let text = std::fs::read_to_string(&path).unwrap();
+        std::fs::write(entry_path(&dir, "key-other"), text).unwrap();
+        let c = ResultCache::with_dir(&dir).unwrap();
+        assert!(c.get_json("key-other").is_none());
+        let s = c.stats();
+        assert_eq!((s.misses, s.quarantined), (1, 0));
+        assert!(entry_path(&dir, "key-other").exists(), "foreign entries stay put");
+        std::fs::remove_dir_all(&dir).unwrap();
     }
 }

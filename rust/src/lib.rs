@@ -41,6 +41,17 @@
 //! queueing-delay percentiles and per-unit utilization, byte-identical
 //! for a given seed across runs and thread counts.
 //!
+//! In front of the session sits the resilient serving core ([`serve`]):
+//! typed [`serve::ServeRequest`]s (evaluate a point / stream NID
+//! inference / query the sweep cache) pass through bounded admission
+//! with reject-new/drop-oldest shedding, a token-bucket rate guard,
+//! propagated per-request deadlines, per-tier circuit breakers, retry
+//! budgets, and a graceful-degradation ladder (full sim ->
+//! fast-kernel-only -> estimate-only -> cached-stale), every response
+//! labeled by fidelity tier — [`eval::Session::serve`] /
+//! `finn-mvu serve`, byte-deterministic on the virtual clock
+//! (DESIGN.md §Serving core).
+//!
 //! # Example: evaluate one design point
 //!
 //! ```
@@ -124,6 +135,7 @@ pub mod passes;
 pub mod proptest;
 pub mod quant;
 pub mod runtime;
+pub mod serve;
 pub mod sim;
 pub mod util;
 

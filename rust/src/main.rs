@@ -10,6 +10,7 @@
 //!   tables    print Tables 4, 5 and 7
 //!   nid       serve the NID MLP through the dataflow pipeline (PJRT)
 //!   device    simulate a multi-unit accelerator card under seeded traffic
+//!   serve     drive the resilient serving frontend under synthetic load
 //!   compile   demo the FINN-style compiler flow (lower -> fold -> analyze)
 //!   lint      run the self-hosted static-analysis passes over this repo
 
@@ -23,7 +24,11 @@ use finn_mvu::device::{
     ArrivalProcess, FaultPlan, HealthPolicy, PolicyKind, RetryPolicy, ShedPolicy,
 };
 use finn_mvu::eval::{DeviceRequest, EvalRequest, Session, SessionConfig, SimOptions};
-use finn_mvu::explore::{points_to_json, points_to_table};
+use finn_mvu::explore::{estimate_key, points_to_json, points_to_table};
+use finn_mvu::serve::{
+    run_frontend, synthetic_load, BreakerPolicy, FaultyBackend, InjectedFaults, RatePolicy,
+    ServeKind, ServePolicy, SessionBackend, Shed, Tier,
+};
 use finn_mvu::util::json::Json;
 use finn_mvu::harness::{
     fig14_heatmap, fig15_bram, fig16_synth_time, resource_sweep_figure, table4, table5, table7,
@@ -67,6 +72,13 @@ COMMANDS:
             [--strikes N] [--watchdog F] [--probation N]
             SPEC is comma-separated: hang:U@T+K | die:U@T |
             slow:U@A..B*F | flip:U@T*N | rand:N
+  serve     [--requests N] [--gap CYC] [--seed N] [--queue-depth N]
+            [--shed reject|drop-oldest] [--rate-burst N] [--rate-per CYC]
+            [--deadline CYC] [--batch N] [--max-wait CYC] [--retries N]
+            [--backoff CYC] [--backoff-cap CYC] [--jitter CYC]
+            [--trip N] [--open-for CYC] [--probes N] [--no-ladder]
+            [--fail-every N] [--outage FROM:UNTIL] [--threads N]
+            [--json] [--pretty] (+ run shape flags for the workload)
   compile   [--target-cycles N] [--lut-budget N]
   lint      [--pass determinism|panic-path|kernel-drift|doc-drift|style[,..]]
             [--root DIR] [--update-fingerprint] [--json] [--pretty]
@@ -192,6 +204,7 @@ fn cmd_explore(a: &Args) -> Result<()> {
         cs.set("hits", Json::from_i64(stats.hits as i64));
         cs.set("disk_hits", Json::from_i64(stats.disk_hits as i64));
         cs.set("misses", Json::from_i64(stats.misses as i64));
+        cs.set("quarantined", Json::from_i64(stats.quarantined as i64));
         doc.set("cache", cs);
         let stim = ex.stimulus_stats();
         let mut ss = Json::obj();
@@ -467,6 +480,114 @@ fn cmd_device(a: &Args) -> Result<()> {
     Ok(())
 }
 
+fn cmd_serve(a: &Args) -> Result<()> {
+    a.check_known(&[
+        "requests", "gap", "seed", "queue-depth", "shed", "rate-burst", "rate-per", "deadline",
+        "batch", "max-wait", "retries", "backoff", "backoff-cap", "jitter", "trip", "open-for",
+        "probes", "no-ladder", "fail-every", "outage", "threads", "json", "pretty", "ifm-ch",
+        "ifm-dim", "ofm-ch", "kd", "pe", "simd", "type", "vectors",
+    ])
+    .map_err(|e| anyhow::anyhow!("{e}"))?;
+
+    // workload: alternate full evaluations of the shaped design point
+    // with sweep-cache queries for its RTL estimate (a hit once the
+    // first evaluation lands, a ladder walk before that)
+    let p = params_from(a)?;
+    let n_vec = a.get_usize("vectors", 1)?;
+    let eval_req = EvalRequest::new(p.clone())
+        .with_sim(SimOptions { batch: n_vec * p.output_pixels(), ..SimOptions::default() });
+    let kinds = [
+        ServeKind::Evaluate(std::sync::Arc::new(eval_req)),
+        ServeKind::CacheQuery { key: estimate_key(&p, Style::Rtl) },
+    ];
+    let seed = a.get_usize("seed", 1)? as u64;
+    let requests =
+        synthetic_load(a.get_usize("requests", 10_000)?, a.get_f64("gap", 40.0)?, seed, &kinds);
+
+    let mut policy = ServePolicy {
+        queue_depth: a.get_usize("queue-depth", 1024)?,
+        batch: a.get_usize("batch", 16)?,
+        max_wait: a.get_usize("max-wait", 64)? as u64,
+        ladder: !a.get_bool("no-ladder"),
+        seed,
+        ..ServePolicy::default()
+    };
+    policy.shed = match a.get("shed") {
+        None | Some("reject") => Shed::RejectNew,
+        Some("drop-oldest") => Shed::DropOldest,
+        Some(other) => bail!("unknown shed policy {other:?} (reject|drop-oldest)"),
+    };
+    if a.has("rate-burst") || a.has("rate-per") {
+        policy.rate = Some(RatePolicy {
+            burst: a.get_usize("rate-burst", 64)? as u64,
+            per: a.get_usize("rate-per", 16)? as u64,
+        });
+    }
+    if a.has("deadline") {
+        policy.deadline = Some(a.get_usize("deadline", 0)? as u64);
+    }
+    policy.retry = RetryPolicy {
+        max_attempts: a.get_usize("retries", 0)? as u32 + 1,
+        backoff_base: a.get_usize("backoff", 16)? as u64,
+        backoff_cap: a.get_usize("backoff-cap", 1024)? as u64,
+        jitter: a.get_usize("jitter", 8)? as u64,
+    };
+    policy.breaker = BreakerPolicy {
+        trip_after: a.get_usize("trip", 4)? as u32,
+        open_for: a.get_usize("open-for", 4096)? as u64,
+        probes: a.get_usize("probes", 1)? as u32,
+    };
+
+    let session = Session::new(SessionConfig {
+        threads: a.get_usize("threads", 0)?,
+        ..SessionConfig::default()
+    })?;
+
+    let outcome = if a.has("fail-every") || a.has("outage") {
+        let mut plan = InjectedFaults::none();
+        if a.has("fail-every") {
+            plan = plan.with_every(Tier::Full, a.get_usize("fail-every", 0)? as u64);
+        }
+        if let Some(spec) = a.get("outage") {
+            let (from, until) =
+                spec.split_once(':').context("--outage expects FROM:UNTIL in cycles")?;
+            plan = plan.with_outage(
+                Tier::Full,
+                from.trim().parse().context("--outage FROM")?,
+                until.trim().parse().context("--outage UNTIL")?,
+            );
+        }
+        let inner = SessionBackend::new(&session);
+        let faulty = FaultyBackend::new(&inner, plan);
+        run_frontend(&faulty, &requests, &policy)?
+    } else {
+        session.serve(&requests, &policy)?
+    };
+
+    let s = &outcome.summary;
+    if a.get_bool("json") {
+        let mut doc = Json::obj();
+        doc.set("shed", Json::Str(policy.shed.name().to_string()));
+        doc.set("summary", s.to_json());
+        if a.get_bool("pretty") {
+            println!("{}", doc.to_pretty(2));
+        } else {
+            println!("{doc}");
+        }
+    } else {
+        // virtual-clock metrics only: this output is byte-identical
+        // across runs and thread counts for the same flags
+        println!(
+            "serve ({}): {} requests over {} cycles",
+            policy.shed.name(),
+            s.offered,
+            s.horizon
+        );
+        println!("{s}");
+    }
+    Ok(())
+}
+
 fn cmd_compile(a: &Args) -> Result<()> {
     let target = a.get_usize("target-cycles", 64)?;
     let budget = a.get_usize("lut-budget", usize::MAX / 2)?;
@@ -575,6 +696,7 @@ fn main() -> Result<()> {
         Some("tables") => cmd_tables(&args),
         Some("nid") => cmd_nid(&args),
         Some("device") => cmd_device(&args),
+        Some("serve") => cmd_serve(&args),
         Some("compile") => cmd_compile(&args),
         Some("lint") => cmd_lint(&args),
         Some("version") => {

@@ -1,0 +1,384 @@
+//! Typed serving requests, fidelity tiers, and the backends that
+//! execute them.
+//!
+//! A [`ServeRequest`] is one of the three service shapes from the
+//! roadmap — "evaluate this design point", "stream NID inference",
+//! "query the sweep cache" — stamped with a virtual arrival cycle and an
+//! optional absolute deadline. A [`Backend`] executes one request at a
+//! chosen [`Tier`] of the degradation ladder; [`SessionBackend`] is the
+//! real one (an [`eval::Session`](crate::eval::Session) underneath) and
+//! [`FaultyBackend`] wraps any backend with a deterministic injected
+//! fault plan for tests and the overload bench.
+
+use std::cell::RefCell;
+use std::sync::Arc;
+
+use crate::estimate::Style;
+use crate::eval::{ChainRequest, EvalError, EvalRequest, Evaluation, Session, SimOptions};
+use crate::explore::{estimate_key, params_key};
+use crate::util::json::Json;
+
+/// Fidelity tier of the degradation ladder, best first. Walk order is
+/// [`Tier::LADDER`]; each response is labeled with the tier that
+/// produced it.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Tier {
+    /// Cycle-accurate simulation exactly as requested.
+    Full,
+    /// Fast-kernel-only: ideal flow, single vector — no stall patterns,
+    /// so the closed-form/blocked kernels apply.
+    Fast,
+    /// Analytical `estimate` only, no simulation at all.
+    Estimate,
+    /// A cached stale answer: the last known-good payload for the same
+    /// request shape, or an on-disk estimate entry.
+    Stale,
+}
+
+impl Tier {
+    /// Ladder walk order, best fidelity first.
+    pub const LADDER: [Tier; 4] = [Tier::Full, Tier::Fast, Tier::Estimate, Tier::Stale];
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Tier::Full => "full",
+            Tier::Fast => "fast",
+            Tier::Estimate => "estimate",
+            Tier::Stale => "stale",
+        }
+    }
+
+    /// Index into per-tier arrays (`0..4`, ladder order).
+    pub fn index(self) -> usize {
+        self as usize
+    }
+}
+
+/// What a request asks for. Payloads are `Arc`'d so synthetic load
+/// generators can share a few templates across millions of requests.
+#[derive(Debug, Clone)]
+pub enum ServeKind {
+    /// Evaluate one design point (estimates + optional simulation).
+    Evaluate(Arc<EvalRequest>),
+    /// Stream inference through a multi-layer chain (e.g. the NID MLP).
+    Infer(Arc<ChainRequest>),
+    /// Look up a sweep-cache entry by its canonical key text.
+    CacheQuery { key: String },
+}
+
+/// One request at the frontend's intake.
+#[derive(Debug, Clone)]
+pub struct ServeRequest {
+    /// Caller-assigned id; must be unique within one `serve` call.
+    pub id: u64,
+    /// Arrival cycle on the virtual clock.
+    pub arrive: u64,
+    /// Absolute deadline cycle; `None` falls back to the policy's
+    /// relative default (if any).
+    pub deadline: Option<u64>,
+    pub kind: ServeKind,
+}
+
+/// One completed response, labeled with the fidelity tier that produced
+/// it.
+#[derive(Debug, Clone)]
+pub struct ServeResponse {
+    pub id: u64,
+    pub tier: Tier,
+    /// Ladder walks consumed (1 = first attempt succeeded).
+    pub attempts: u32,
+    /// Completion cycle.
+    pub done: u64,
+    /// Sojourn time in cycles (completion minus arrival).
+    pub latency: u64,
+    pub payload: Json,
+}
+
+/// Canonical text for a request shape — two requests with the same key
+/// are interchangeable, which is what the frontend's stale-answer store
+/// is keyed by.
+pub fn kind_key(kind: &ServeKind) -> String {
+    match kind {
+        ServeKind::Evaluate(r) => {
+            let styles: Vec<&str> = r.styles.iter().map(|s| s.name()).collect();
+            format!("eval/{}/st={}/sim={:?}", params_key(&r.point), styles.join("+"), r.sim)
+        }
+        ServeKind::Infer(c) => {
+            let layers: Vec<String> = c.layers.iter().map(|p| params_key(p)).collect();
+            format!("infer/{}/sim={:?}", layers.join("|"), c.sim)
+        }
+        ServeKind::CacheQuery { key } => format!("cache/{key}"),
+    }
+}
+
+/// Canonical JSON payload for an [`Evaluation`] — the byte-identity
+/// anchor: a disabled-policy `serve` response carries exactly this
+/// serialization of a direct [`Session::evaluate`] result.
+pub fn evaluation_to_json(ev: &Evaluation) -> Json {
+    let mut j = Json::obj();
+    j.set("name", Json::Str(ev.name.clone()));
+    j.set("analytic_cycles", Json::from_i64(ev.analytic_cycles as i64));
+    let mut est = Json::obj();
+    for (style, rep) in &ev.estimates {
+        est.set(style.name(), rep.to_json());
+    }
+    j.set("estimates", est);
+    match &ev.sim {
+        Some(s) => j.set("sim", s.to_json()),
+        None => j.set("sim", Json::Null),
+    };
+    j
+}
+
+/// Executes one request at one fidelity tier at virtual time `now`.
+/// Implementations must be deterministic: same `(kind, tier, call
+/// sequence)` in, byte-identical payloads out.
+pub trait Backend {
+    fn call(&self, kind: &ServeKind, tier: Tier, now: u64) -> Result<Json, EvalError>;
+}
+
+/// The real backend: an evaluation session. Tier mapping:
+///
+/// * `Full` — the request exactly as given;
+/// * `Fast` — simulation reduced to the fast-kernel sweet spot (ideal
+///   flow, one vector) with the same estimates;
+/// * `Estimate` — estimates only, simulation skipped;
+/// * `Stale` — on-disk/in-memory estimate cache entries for the point,
+///   explicitly labeled `"stale": true` (chains have no cache-backed
+///   stale form here; the frontend's own stale store covers them).
+pub struct SessionBackend<'a> {
+    session: &'a Session,
+}
+
+impl<'a> SessionBackend<'a> {
+    pub fn new(session: &'a Session) -> SessionBackend<'a> {
+        SessionBackend { session }
+    }
+
+    fn stale_evaluate(&self, r: &EvalRequest) -> Result<Json, EvalError> {
+        let cache = self.session.explorer().cache();
+        let mut est = Json::obj();
+        let mut found = false;
+        for &style in &r.styles {
+            if let Some(v) = cache.get_json(&estimate_key(&r.point, style)) {
+                est.set(style.name(), v);
+                found = true;
+            }
+        }
+        if !found {
+            return Err(EvalError::Cache {
+                message: format!("no stale cache entry for point {}", r.point.name),
+            });
+        }
+        let mut j = Json::obj();
+        j.set("name", Json::Str(r.point.name.clone()));
+        j.set("stale", Json::Bool(true));
+        j.set("estimates", est);
+        Ok(j)
+    }
+}
+
+impl Backend for SessionBackend<'_> {
+    fn call(&self, kind: &ServeKind, tier: Tier, _now: u64) -> Result<Json, EvalError> {
+        match kind {
+            ServeKind::Evaluate(r) => match tier {
+                Tier::Full => self.session.evaluate(r).map(|ev| evaluation_to_json(&ev)),
+                Tier::Fast => {
+                    let fast = EvalRequest {
+                        point: r.point.clone(),
+                        styles: r.styles.clone(),
+                        sim: r.sim.as_ref().map(|s| SimOptions {
+                            batch: s.batch.min(1),
+                            ..SimOptions::default()
+                        }),
+                    };
+                    self.session.evaluate(&fast).map(|ev| evaluation_to_json(&ev))
+                }
+                Tier::Estimate => {
+                    let est = EvalRequest {
+                        point: r.point.clone(),
+                        styles: r.styles.clone(),
+                        sim: None,
+                    };
+                    self.session.evaluate(&est).map(|ev| evaluation_to_json(&ev))
+                }
+                Tier::Stale => self.stale_evaluate(r),
+            },
+            ServeKind::Infer(c) => match tier {
+                Tier::Full => self.session.evaluate_chain(c).map(|s| s.to_json()),
+                Tier::Fast => {
+                    let fast = ChainRequest {
+                        layers: c.layers.clone(),
+                        sim: SimOptions::default(),
+                    };
+                    self.session.evaluate_chain(&fast).map(|s| s.to_json())
+                }
+                Tier::Estimate => {
+                    let mut layers = Vec::with_capacity(c.layers.len());
+                    for p in &c.layers {
+                        let rep = self
+                            .session
+                            .explorer()
+                            .estimate_style(p, Style::Rtl)
+                            .map_err(|e| EvalError::Estimate {
+                                point: p.name.clone(),
+                                message: format!("{e:#}"),
+                            })?;
+                        let mut layer = Json::obj();
+                        layer.set("name", Json::Str(p.name.clone()));
+                        layer.set("rtl", rep.to_json());
+                        layers.push(layer);
+                    }
+                    let mut j = Json::obj();
+                    j.set("estimate_only", Json::Bool(true));
+                    j.set("layers", Json::Arr(layers));
+                    Ok(j)
+                }
+                Tier::Stale => Err(EvalError::Cache {
+                    message: "no cache-backed stale form for chain inference".into(),
+                }),
+            },
+            ServeKind::CacheQuery { key } => {
+                match self.session.explorer().cache().get_json(key) {
+                    Some(v) => {
+                        let mut j = Json::obj();
+                        j.set("key", Json::Str(key.clone()));
+                        j.set("value", v);
+                        Ok(j)
+                    }
+                    None => Err(EvalError::Cache {
+                        message: format!("no cache entry for key `{key}`"),
+                    }),
+                }
+            }
+        }
+    }
+}
+
+/// Deterministic fault plan for a [`FaultyBackend`]: per-tier
+/// fail-every-Nth counters and per-tier outage windows on the virtual
+/// clock. All indices are [`Tier::index`] order.
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct InjectedFaults {
+    /// Fail every `n`th call routed to the tier (`0` = never).
+    pub every: [u64; 4],
+    /// Fail every call to the tier whose dispatch cycle falls in
+    /// `[start, end)`.
+    pub outage: [Option<(u64, u64)>; 4],
+}
+
+impl InjectedFaults {
+    pub fn none() -> InjectedFaults {
+        InjectedFaults::default()
+    }
+
+    /// Fail every `n`th call to `tier`.
+    pub fn with_every(mut self, tier: Tier, n: u64) -> InjectedFaults {
+        self.every[tier.index()] = n;
+        self
+    }
+
+    /// Black out `tier` over the virtual window `[from, until)`.
+    pub fn with_outage(mut self, tier: Tier, from: u64, until: u64) -> InjectedFaults {
+        self.outage[tier.index()] = Some((from, until));
+        self
+    }
+}
+
+/// Wraps any backend with injected faults. Fault decisions depend only
+/// on the call sequence and the virtual clock, so runs stay
+/// byte-deterministic.
+pub struct FaultyBackend<'a> {
+    inner: &'a dyn Backend,
+    plan: InjectedFaults,
+    // the frontend is single-threaded; interior mutability keeps the
+    // Backend trait object shareable by reference
+    calls: RefCell<[u64; 4]>,
+}
+
+impl<'a> FaultyBackend<'a> {
+    pub fn new(inner: &'a dyn Backend, plan: InjectedFaults) -> FaultyBackend<'a> {
+        FaultyBackend { inner, plan, calls: RefCell::new([0; 4]) }
+    }
+}
+
+impl Backend for FaultyBackend<'_> {
+    fn call(&self, kind: &ServeKind, tier: Tier, now: u64) -> Result<Json, EvalError> {
+        let i = tier.index();
+        let n = {
+            let mut c = self.calls.borrow_mut();
+            c[i] += 1;
+            c[i]
+        };
+        if let Some((from, until)) = self.plan.outage[i] {
+            if now >= from && now < until {
+                return Err(EvalError::Fault {
+                    message: format!("injected {} outage at cycle {now}", tier.name()),
+                });
+            }
+        }
+        if self.plan.every[i] != 0 && n % self.plan.every[i] == 0 {
+            return Err(EvalError::Fault {
+                message: format!("injected {} fault on call {n}", tier.name()),
+            });
+        }
+        self.inner.call(kind, tier, now)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    struct OkBackend;
+    impl Backend for OkBackend {
+        fn call(&self, _kind: &ServeKind, tier: Tier, _now: u64) -> Result<Json, EvalError> {
+            let mut j = Json::obj();
+            j.set("tier", Json::Str(tier.name().into()));
+            Ok(j)
+        }
+    }
+
+    fn cache_kind() -> ServeKind {
+        ServeKind::CacheQuery { key: "k".into() }
+    }
+
+    #[test]
+    fn tier_ladder_order_and_indices() {
+        assert_eq!(Tier::LADDER.map(Tier::index), [0, 1, 2, 3]);
+        assert_eq!(Tier::Full.name(), "full");
+        assert_eq!(Tier::Stale.name(), "stale");
+    }
+
+    #[test]
+    fn faulty_backend_fails_every_nth_call_per_tier() {
+        let inner = OkBackend;
+        let fb = FaultyBackend::new(&inner, InjectedFaults::none().with_every(Tier::Full, 3));
+        let mut outcomes = Vec::new();
+        for _ in 0..6 {
+            outcomes.push(fb.call(&cache_kind(), Tier::Full, 0).is_ok());
+        }
+        assert_eq!(outcomes, [true, true, false, true, true, false]);
+        // other tiers untouched
+        assert!(fb.call(&cache_kind(), Tier::Fast, 0).is_ok());
+    }
+
+    #[test]
+    fn faulty_backend_outage_window_is_half_open() {
+        let inner = OkBackend;
+        let fb =
+            FaultyBackend::new(&inner, InjectedFaults::none().with_outage(Tier::Fast, 10, 20));
+        assert!(fb.call(&cache_kind(), Tier::Fast, 9).is_ok());
+        assert!(fb.call(&cache_kind(), Tier::Fast, 10).is_err());
+        assert!(fb.call(&cache_kind(), Tier::Fast, 19).is_err());
+        assert!(fb.call(&cache_kind(), Tier::Fast, 20).is_ok());
+    }
+
+    #[test]
+    fn kind_keys_distinguish_shapes() {
+        let a = kind_key(&ServeKind::CacheQuery { key: "x".into() });
+        let b = kind_key(&ServeKind::CacheQuery { key: "y".into() });
+        assert_ne!(a, b);
+        assert!(a.starts_with("cache/"));
+    }
+}

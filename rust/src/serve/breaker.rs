@@ -1,0 +1,191 @@
+//! Circuit breaker on a virtual clock.
+//!
+//! Classic closed -> open -> half-open automaton, generic over a
+//! [`Timeline`] so the serving frontend runs it on `u64` virtual cycles
+//! (byte-deterministic) while a future wall-clock caller could
+//! instantiate it on `Instant`s. The frontend keeps one breaker per
+//! fidelity tier: `trip_after` consecutive failures open the breaker,
+//! `open_for` cycles later it half-opens and admits `probes` trial
+//! calls — one success closes it, one failure re-opens it.
+
+use crate::coordinator::Timeline;
+
+use super::policy::BreakerPolicy;
+
+/// The automaton's current state.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum BreakerState {
+    Closed,
+    Open,
+    HalfOpen,
+}
+
+/// One breaker instance. With `trip_after == 0` the breaker is disabled:
+/// it always allows and never counts.
+#[derive(Debug, Clone)]
+pub struct CircuitBreaker<T: Timeline = u64> {
+    trip_after: u32,
+    open_for: T::Wait,
+    probes: u32,
+    state: BreakerState,
+    consecutive: u32,
+    opened_at: Option<T>,
+    probes_left: u32,
+    opens: u64,
+}
+
+impl CircuitBreaker<u64> {
+    /// Breaker on the virtual cycle clock from a [`BreakerPolicy`].
+    pub fn from_policy(p: &BreakerPolicy) -> CircuitBreaker<u64> {
+        CircuitBreaker::new(p.trip_after, p.open_for, p.probes)
+    }
+}
+
+impl<T: Timeline> CircuitBreaker<T> {
+    pub fn new(trip_after: u32, open_for: T::Wait, probes: u32) -> CircuitBreaker<T> {
+        CircuitBreaker {
+            trip_after,
+            open_for,
+            probes,
+            state: BreakerState::Closed,
+            consecutive: 0,
+            opened_at: None,
+            probes_left: 0,
+            opens: 0,
+        }
+    }
+
+    pub fn state(&self) -> BreakerState {
+        self.state
+    }
+
+    /// How many times this breaker has tripped open.
+    pub fn opens(&self) -> u64 {
+        self.opens
+    }
+
+    /// May a call proceed at `now`? Open breakers half-open once
+    /// `open_for` has elapsed; each allowed half-open call consumes one
+    /// probe.
+    pub fn allow(&mut self, now: T) -> bool {
+        if self.trip_after == 0 {
+            return true;
+        }
+        match self.state {
+            BreakerState::Closed => true,
+            BreakerState::Open => {
+                let opened = self.opened_at.expect("open breaker has an open stamp");
+                if now.since(opened) >= self.open_for {
+                    self.state = BreakerState::HalfOpen;
+                    self.probes_left = self.probes.max(1) - 1;
+                    true
+                } else {
+                    false
+                }
+            }
+            BreakerState::HalfOpen => {
+                if self.probes_left > 0 {
+                    self.probes_left -= 1;
+                    true
+                } else {
+                    false
+                }
+            }
+        }
+    }
+
+    /// Record a successful call: closes a half-open breaker, resets the
+    /// consecutive-failure count.
+    pub fn success(&mut self) {
+        if self.trip_after == 0 {
+            return;
+        }
+        self.consecutive = 0;
+        if self.state == BreakerState::HalfOpen {
+            self.state = BreakerState::Closed;
+        }
+    }
+
+    /// Record a failed call at `now`: trips a closed breaker after
+    /// `trip_after` consecutive failures, re-opens a half-open one
+    /// immediately.
+    pub fn failure(&mut self, now: T) {
+        if self.trip_after == 0 {
+            return;
+        }
+        match self.state {
+            BreakerState::Closed => {
+                self.consecutive += 1;
+                if self.consecutive >= self.trip_after {
+                    self.trip(now);
+                }
+            }
+            BreakerState::HalfOpen => self.trip(now),
+            BreakerState::Open => {}
+        }
+    }
+
+    fn trip(&mut self, now: T) {
+        self.state = BreakerState::Open;
+        self.opened_at = Some(now);
+        self.consecutive = 0;
+        self.opens += 1;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn trips_after_consecutive_failures_only() {
+        let mut b: CircuitBreaker<u64> = CircuitBreaker::new(3, 100, 1);
+        assert!(b.allow(0));
+        b.failure(0);
+        b.failure(1);
+        b.success(); // resets the streak
+        b.failure(2);
+        b.failure(3);
+        assert_eq!(b.state(), BreakerState::Closed);
+        b.failure(4);
+        assert_eq!(b.state(), BreakerState::Open);
+        assert_eq!(b.opens(), 1);
+        assert!(!b.allow(5));
+    }
+
+    #[test]
+    fn half_opens_after_cooldown_and_closes_on_probe_success() {
+        let mut b: CircuitBreaker<u64> = CircuitBreaker::new(1, 100, 1);
+        b.failure(10);
+        assert!(!b.allow(50));
+        assert!(b.allow(110), "cooldown elapsed: one probe admitted");
+        assert_eq!(b.state(), BreakerState::HalfOpen);
+        assert!(!b.allow(111), "probe budget spent");
+        b.success();
+        assert_eq!(b.state(), BreakerState::Closed);
+        assert!(b.allow(112));
+    }
+
+    #[test]
+    fn failed_probe_reopens_with_a_fresh_cooldown() {
+        let mut b: CircuitBreaker<u64> = CircuitBreaker::new(1, 100, 1);
+        b.failure(0);
+        assert!(b.allow(100));
+        b.failure(100);
+        assert_eq!(b.state(), BreakerState::Open);
+        assert_eq!(b.opens(), 2);
+        assert!(!b.allow(150), "cooldown restarts from the failed probe");
+        assert!(b.allow(200));
+    }
+
+    #[test]
+    fn disabled_breaker_never_trips() {
+        let mut b: CircuitBreaker<u64> = CircuitBreaker::new(0, 0, 0);
+        for t in 0..100u64 {
+            b.failure(t);
+            assert!(b.allow(t));
+        }
+        assert_eq!(b.opens(), 0);
+        assert_eq!(b.state(), BreakerState::Closed);
+    }
+}

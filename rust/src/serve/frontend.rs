@@ -1,0 +1,700 @@
+//! The resilient serving frontend: a single-threaded discrete-event
+//! loop on the virtual cycle clock.
+//!
+//! Intake order (per arrival): queue-depth sample -> token-bucket rate
+//! guard -> admission bound with [`Shed`] backpressure -> the
+//! coordinator's [`TickBatcher`] (deadline flush after
+//! `policy.max_wait` cycles) -> the dispatch queue. A single dispatcher
+//! drains batches in order, checks each request's deadline **before**
+//! dispatching it (expired work is never handed to a backend), then
+//! walks the degradation ladder under per-tier circuit breakers; a
+//! fully-failed walk consumes one attempt of the retry budget with
+//! PR 9-shaped bounded backoff. Every quantity — arrivals, service
+//! costs, backoffs, breaker timers — lives on the `u64`
+//! [`Timeline`](crate::coordinator::Timeline), so a run is
+//! byte-deterministic for a given (requests, policy, backend) triple
+//! regardless of session thread count.
+
+use std::collections::{BTreeMap, VecDeque};
+
+use crate::coordinator::{TickBatch, TickBatcher, TickRecorder};
+use crate::eval::EvalError;
+use crate::util::json::Json;
+use crate::util::rng::Pcg32;
+
+use super::backend::{kind_key, Backend, ServeKind, ServeRequest, ServeResponse, Tier};
+use super::breaker::CircuitBreaker;
+use super::policy::{RatePolicy, ServePolicy, Shed};
+use super::report::{DepthHistogram, ServeSummary};
+
+/// Everything one `serve` run produced: completed responses (in
+/// completion order) plus the per-fate id lists and the summary. The id
+/// lists partition the offered ids together with the response ids —
+/// the identity-level form of the conservation counters.
+#[derive(Debug, Clone)]
+pub struct ServeOutcome {
+    pub responses: Vec<ServeResponse>,
+    pub rejected_ids: Vec<u64>,
+    pub dropped_ids: Vec<u64>,
+    pub timed_out_ids: Vec<u64>,
+    pub summary: ServeSummary,
+}
+
+/// Run the frontend over a finite request stream. Requests may arrive
+/// in any slice order; they are processed by `(arrive, id)`. Ids must
+/// be unique.
+pub fn run_frontend(
+    backend: &dyn Backend,
+    requests: &[ServeRequest],
+    policy: &ServePolicy,
+) -> Result<ServeOutcome, EvalError> {
+    policy.validate()?;
+    let mut by_id: BTreeMap<u64, usize> = BTreeMap::new();
+    for (i, r) in requests.iter().enumerate() {
+        if by_id.insert(r.id, i).is_some() {
+            return Err(EvalError::Serve { message: format!("duplicate request id {}", r.id) });
+        }
+    }
+    let mut order: Vec<usize> = (0..requests.len()).collect();
+    order.sort_by_key(|&i| (requests[i].arrive, requests[i].id));
+
+    let mut lp = Loop {
+        backend,
+        requests,
+        by_id,
+        policy,
+        batcher: TickBatcher::new(1, policy.batch, policy.max_wait),
+        queue: VecDeque::new(),
+        queued_rows: 0,
+        free: 0,
+        breakers: [
+            CircuitBreaker::from_policy(&policy.breaker),
+            CircuitBreaker::from_policy(&policy.breaker),
+            CircuitBreaker::from_policy(&policy.breaker),
+            CircuitBreaker::from_policy(&policy.breaker),
+        ],
+        tokens: policy.rate.map_or(0, |r| r.burst),
+        last_refill: 0,
+        stale: BTreeMap::new(),
+        jitter: Pcg32::with_stream(policy.seed, 0xbac0ff),
+        recorder: TickRecorder::new(),
+        depth: DepthHistogram::default(),
+        responses: Vec::new(),
+        rejected_ids: Vec::new(),
+        dropped_ids: Vec::new(),
+        timed_out_ids: Vec::new(),
+        accepted: 0,
+        rejected_rate: 0,
+        rejected_queue: 0,
+        shed: 0,
+        exhausted: 0,
+        timed_out: 0,
+        degraded: 0,
+        retries: 0,
+        tiers: [0; 4],
+        horizon: 0,
+    };
+    lp.recorder.start_at(0);
+    lp.run(&order);
+    Ok(lp.finish())
+}
+
+/// Deterministic synthetic open-loop load: exponential-ish integer
+/// inter-arrival gaps with the given mean, request kinds assigned
+/// round-robin from `kinds`. Ids are `0..n` in arrival order.
+pub fn synthetic_load(
+    n: usize,
+    mean_gap: f64,
+    seed: u64,
+    kinds: &[ServeKind],
+) -> Vec<ServeRequest> {
+    assert!(!kinds.is_empty(), "synthetic_load needs at least one request kind");
+    let mut rng = Pcg32::with_stream(seed, 0x10ad);
+    let mut t = 0u64;
+    let mut reqs = Vec::with_capacity(n);
+    for i in 0..n {
+        let u = rng.next_f64();
+        t += (-(1.0 - u).ln() * mean_gap) as u64;
+        reqs.push(ServeRequest {
+            id: i as u64,
+            arrive: t,
+            deadline: None,
+            kind: kinds[i % kinds.len()].clone(),
+        });
+    }
+    reqs
+}
+
+struct Loop<'a> {
+    backend: &'a dyn Backend,
+    requests: &'a [ServeRequest],
+    by_id: BTreeMap<u64, usize>,
+    policy: &'a ServePolicy,
+    batcher: TickBatcher,
+    /// Flushed batches awaiting the dispatcher, with their ready cycle.
+    queue: VecDeque<(u64, TickBatch)>,
+    queued_rows: usize,
+    /// Cycle at which the dispatcher is next idle.
+    free: u64,
+    breakers: [CircuitBreaker<u64>; 4],
+    tokens: u64,
+    last_refill: u64,
+    /// Last known-good payload per request shape ([`kind_key`]).
+    stale: BTreeMap<String, Json>,
+    jitter: Pcg32,
+    recorder: TickRecorder,
+    depth: DepthHistogram,
+    responses: Vec<ServeResponse>,
+    rejected_ids: Vec<u64>,
+    dropped_ids: Vec<u64>,
+    timed_out_ids: Vec<u64>,
+    accepted: usize,
+    rejected_rate: usize,
+    rejected_queue: usize,
+    shed: usize,
+    exhausted: usize,
+    timed_out: usize,
+    degraded: usize,
+    retries: u64,
+    tiers: [usize; 4],
+    horizon: u64,
+}
+
+impl Loop<'_> {
+    /// Event loop: at each step fire the earliest of {dispatch, batcher
+    /// deadline flush, arrival}; ties break in that order, so admitted
+    /// work drains before new work lands on the same cycle. Terminates
+    /// when all three sources are exhausted.
+    fn run(&mut self, order: &[usize]) {
+        let mut next = 0usize;
+        loop {
+            let dispatch_at = self.queue.front().map(|(ready, _)| (*ready).max(self.free));
+            let flush_at = self.batcher.next_deadline();
+            let arrival_at =
+                order.get(next).map(|&i| self.requests[i].arrive);
+            let mut best: Option<(u64, u8)> = None;
+            for (t, k) in [(dispatch_at, 0u8), (flush_at, 1), (arrival_at, 2)] {
+                if let Some(t) = t {
+                    if best.map_or(true, |(bt, _)| t < bt) {
+                        best = Some((t, k));
+                    }
+                }
+            }
+            let Some((now, event)) = best else { break };
+            self.horizon = self.horizon.max(now);
+            match event {
+                0 => self.dispatch(now),
+                1 => {
+                    if let Some(b) = self.batcher.poll(now) {
+                        self.enqueue(now, b);
+                    }
+                }
+                _ => {
+                    let idx = order[next];
+                    next += 1;
+                    self.arrive(idx, now);
+                }
+            }
+        }
+        debug_assert_eq!(self.batcher.pending(), 0);
+        debug_assert!(self.queue.is_empty());
+    }
+
+    fn arrive(&mut self, idx: usize, now: u64) {
+        let req = &self.requests[idx];
+        let in_system = self.batcher.pending() + self.queued_rows;
+        self.depth.record(in_system);
+        if let Some(rate) = &self.policy.rate {
+            self.refill(rate, now);
+            if self.tokens == 0 {
+                self.rejected_rate += 1;
+                self.rejected_ids.push(req.id);
+                return;
+            }
+            self.tokens -= 1;
+        }
+        if in_system >= self.policy.queue_depth {
+            let made_room = self.policy.shed == Shed::DropOldest && self.evict_oldest();
+            if !made_room {
+                self.rejected_queue += 1;
+                self.rejected_ids.push(req.id);
+                return;
+            }
+        }
+        self.accepted += 1;
+        if let Some(b) = self.batcher.push(req.id, &[0], now) {
+            self.enqueue(now, b);
+        }
+    }
+
+    /// Refill the token bucket: one token per `per` cycles, capped at
+    /// `burst`. Integer arithmetic only, so no drift.
+    fn refill(&mut self, rate: &RatePolicy, now: u64) {
+        let earned = (now - self.last_refill) / rate.per;
+        if earned > 0 {
+            self.tokens = (self.tokens + earned).min(rate.burst);
+            self.last_refill += earned * rate.per;
+        }
+    }
+
+    /// Evict the oldest queued request (head of the oldest flushed
+    /// batch). Rows still forming inside the batcher are not evictable;
+    /// returns `false` when nothing is queued yet.
+    fn evict_oldest(&mut self) -> bool {
+        let Some((_, front)) = self.queue.front_mut() else { return false };
+        let id = front.ids.remove(0);
+        front.stamps.remove(0);
+        front.data.drain(..front.row_len);
+        self.queued_rows -= 1;
+        let empty = front.ids.is_empty();
+        if empty {
+            self.queue.pop_front();
+        }
+        self.shed += 1;
+        self.dropped_ids.push(id);
+        true
+    }
+
+    fn enqueue(&mut self, ready: u64, b: TickBatch) {
+        self.queued_rows += b.ids.len();
+        self.queue.push_back((ready, b));
+    }
+
+    /// Dispatch the oldest queued batch at `now`: requests run in batch
+    /// order, each advancing the virtual clock by the service cost it
+    /// consumed; a request whose deadline has already passed is never
+    /// handed to the backend.
+    fn dispatch(&mut self, now: u64) {
+        let Some((_, batch)) = self.queue.pop_front() else { return };
+        self.queued_rows -= batch.ids.len();
+        let mut t = now;
+        for &id in &batch.ids {
+            let idx = self.by_id[&id];
+            let req = &self.requests[idx];
+            let deadline =
+                req.deadline.or_else(|| self.policy.deadline.map(|d| req.arrive + d));
+            if deadline.map_or(false, |d| t > d) {
+                self.timed_out += 1;
+                self.timed_out_ids.push(id);
+                continue;
+            }
+            t = self.complete(idx, deadline, t);
+        }
+        self.free = t;
+        self.horizon = self.horizon.max(t);
+    }
+
+    /// Walk the degradation ladder (with per-tier breakers) until one
+    /// tier answers; a fully-failed walk consumes one attempt of the
+    /// retry budget. Returns the advanced clock.
+    fn complete(&mut self, idx: usize, deadline: Option<u64>, start: u64) -> u64 {
+        let req = &self.requests[idx];
+        let key = kind_key(&req.kind);
+        let mut t = start;
+        let mut attempts = 0u32;
+        loop {
+            attempts += 1;
+            let tiers: &[Tier] =
+                if self.policy.ladder { &Tier::LADDER } else { &Tier::LADDER[..1] };
+            for &tier in tiers {
+                if deadline.map_or(false, |d| t > d) {
+                    self.timed_out += 1;
+                    self.timed_out_ids.push(req.id);
+                    return t;
+                }
+                if !self.breakers[tier.index()].allow(t) {
+                    continue;
+                }
+                let served = if tier == Tier::Stale && self.stale.contains_key(&key) {
+                    Ok(self.stale[&key].clone())
+                } else {
+                    self.backend.call(&req.kind, tier, t)
+                };
+                t += self.policy.service[tier.index()];
+                match served {
+                    Ok(payload) => {
+                        self.breakers[tier.index()].success();
+                        if tier != Tier::Stale {
+                            self.stale.insert(key, payload.clone());
+                        }
+                        if tier != Tier::Full {
+                            self.degraded += 1;
+                        }
+                        self.tiers[tier.index()] += 1;
+                        let latency = t.saturating_sub(req.arrive);
+                        self.recorder.record_at(t, latency);
+                        self.responses.push(ServeResponse {
+                            id: req.id,
+                            tier,
+                            attempts,
+                            done: t,
+                            latency,
+                            payload,
+                        });
+                        return t;
+                    }
+                    Err(_) => {
+                        self.breakers[tier.index()].failure(t);
+                    }
+                }
+            }
+            if attempts >= self.policy.retry.max_attempts {
+                self.exhausted += 1;
+                self.dropped_ids.push(req.id);
+                return t;
+            }
+            self.retries += 1;
+            t += self.policy.retry.backoff(attempts, &mut self.jitter);
+        }
+    }
+
+    fn finish(self) -> ServeOutcome {
+        let summary = ServeSummary {
+            offered: self.requests.len(),
+            accepted: self.accepted,
+            completed: self.responses.len(),
+            rejected_rate: self.rejected_rate,
+            rejected_queue: self.rejected_queue,
+            shed: self.shed,
+            exhausted: self.exhausted,
+            timed_out: self.timed_out,
+            degraded: self.degraded,
+            retries: self.retries,
+            breaker_opens: self.breakers.iter().map(|b| b.opens()).sum(),
+            tiers: self.tiers,
+            depth: self.depth,
+            horizon: self.horizon,
+            latency: self.recorder.report(),
+        };
+        debug_assert!(summary.conserved(), "conservation violated: {summary:?}");
+        ServeOutcome {
+            responses: self.responses,
+            rejected_ids: self.rejected_ids,
+            dropped_ids: self.dropped_ids,
+            timed_out_ids: self.timed_out_ids,
+            summary,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::device::RetryPolicy;
+    use crate::serve::backend::InjectedFaults;
+    use crate::serve::FaultyBackend;
+    use std::cell::RefCell;
+
+    /// Counts backend calls per tier; fails tiers listed in `fail`.
+    struct TestBackend {
+        fail: [bool; 4],
+        calls: RefCell<[u64; 4]>,
+    }
+
+    impl TestBackend {
+        fn healthy() -> TestBackend {
+            TestBackend { fail: [false; 4], calls: RefCell::new([0; 4]) }
+        }
+
+        fn failing(tiers: &[Tier]) -> TestBackend {
+            let mut fail = [false; 4];
+            for t in tiers {
+                fail[t.index()] = true;
+            }
+            TestBackend { fail, calls: RefCell::new([0; 4]) }
+        }
+
+        fn calls(&self, tier: Tier) -> u64 {
+            self.calls.borrow()[tier.index()]
+        }
+    }
+
+    impl Backend for TestBackend {
+        fn call(&self, kind: &ServeKind, tier: Tier, _now: u64) -> Result<Json, EvalError> {
+            self.calls.borrow_mut()[tier.index()] += 1;
+            if self.fail[tier.index()] {
+                return Err(EvalError::Fault { message: "test tier down".into() });
+            }
+            let mut j = Json::obj();
+            j.set("tier", Json::Str(tier.name().into()));
+            j.set("key", Json::Str(kind_key(kind)));
+            Ok(j)
+        }
+    }
+
+    fn reqs_at(arrivals: &[u64]) -> Vec<ServeRequest> {
+        arrivals
+            .iter()
+            .enumerate()
+            .map(|(i, &t)| ServeRequest {
+                id: i as u64,
+                arrive: t,
+                deadline: None,
+                kind: ServeKind::CacheQuery { key: format!("k{i}") },
+            })
+            .collect()
+    }
+
+    #[test]
+    fn disabled_policy_is_a_transparent_passthrough() {
+        let be = TestBackend::healthy();
+        let reqs = reqs_at(&[0, 1, 1, 5]);
+        let out = run_frontend(&be, &reqs, &ServePolicy::disabled()).unwrap();
+        assert_eq!(out.responses.len(), 4);
+        let ids: Vec<u64> = out.responses.iter().map(|r| r.id).collect();
+        assert_eq!(ids, vec![0, 1, 2, 3], "arrival order preserved");
+        for r in &out.responses {
+            assert_eq!(r.tier, Tier::Full);
+            assert_eq!(r.latency, 0, "zero service cost, batch 1: no queueing delay");
+        }
+        let s = &out.summary;
+        assert!(s.conserved());
+        assert_eq!((s.rejected(), s.dropped(), s.timed_out, s.degraded), (0, 0, 0, 0));
+        assert_eq!(be.calls(Tier::Full), 4);
+        assert_eq!(be.calls(Tier::Fast), 0);
+    }
+
+    #[test]
+    fn full_queue_rejects_new_arrivals() {
+        let be = TestBackend::healthy();
+        // all arrive on cycle 0; service is expensive, queue tiny
+        let reqs = reqs_at(&[0, 0, 0, 0, 0, 0]);
+        let policy = ServePolicy {
+            queue_depth: 2,
+            batch: 1,
+            max_wait: 0,
+            service: [100, 0, 0, 0],
+            ladder: false,
+            breaker: crate::serve::BreakerPolicy::disabled(),
+            ..ServePolicy::default()
+        };
+        let out = run_frontend(&be, &reqs, &policy).unwrap();
+        let s = &out.summary;
+        assert!(s.conserved());
+        assert!(s.rejected_queue > 0, "tiny queue must reject: {s:?}");
+        assert_eq!(s.completed + s.rejected_queue, 6);
+        assert_eq!(out.rejected_ids.len(), s.rejected_queue);
+    }
+
+    #[test]
+    fn drop_oldest_evicts_the_oldest_queued_request() {
+        let be = TestBackend::healthy();
+        let reqs = reqs_at(&[0, 0, 0, 0]);
+        let policy = ServePolicy {
+            queue_depth: 2,
+            shed: Shed::DropOldest,
+            batch: 1,
+            max_wait: 0,
+            service: [100, 0, 0, 0],
+            ladder: false,
+            breaker: crate::serve::BreakerPolicy::disabled(),
+            ..ServePolicy::default()
+        };
+        let out = run_frontend(&be, &reqs, &policy).unwrap();
+        let s = &out.summary;
+        assert!(s.conserved());
+        assert!(s.shed > 0, "{s:?}");
+        // the dropped ids are the oldest admitted, not the newest
+        assert!(out.dropped_ids.iter().all(|&id| id < 3), "{:?}", out.dropped_ids);
+    }
+
+    #[test]
+    fn token_bucket_rejects_past_the_burst() {
+        let be = TestBackend::healthy();
+        let reqs = reqs_at(&[0, 0, 0, 0, 0]);
+        let policy = ServePolicy {
+            rate: Some(RatePolicy { burst: 2, per: 1000 }),
+            ..ServePolicy::disabled()
+        };
+        let out = run_frontend(&be, &reqs, &policy).unwrap();
+        assert_eq!(out.summary.rejected_rate, 3);
+        assert_eq!(out.summary.completed, 2);
+        assert!(out.summary.conserved());
+    }
+
+    #[test]
+    fn expired_deadlines_are_never_dispatched() {
+        let be = TestBackend::healthy();
+        let mut reqs = reqs_at(&[0, 0, 0]);
+        for r in &mut reqs {
+            r.deadline = Some(r.arrive + 50);
+        }
+        let policy = ServePolicy {
+            batch: 1,
+            max_wait: 0,
+            service: [60, 0, 0, 0],
+            ladder: false,
+            breaker: crate::serve::BreakerPolicy::disabled(),
+            ..ServePolicy::disabled()
+        };
+        let out = run_frontend(&be, &reqs, &policy).unwrap();
+        // id 0 runs [0,60); id 1 would dispatch at 60 > deadline 50
+        assert_eq!(out.summary.completed, 1);
+        assert_eq!(out.summary.timed_out, 2);
+        assert_eq!(be.calls(Tier::Full), 1, "expired work never reaches the backend");
+        assert!(out.summary.conserved());
+    }
+
+    #[test]
+    fn ladder_degrades_and_labels_the_tier() {
+        let be = TestBackend::failing(&[Tier::Full, Tier::Fast]);
+        let reqs = reqs_at(&[0, 10, 20]);
+        let policy = ServePolicy {
+            batch: 1,
+            max_wait: 0,
+            service: [10, 5, 1, 1],
+            ladder: true,
+            breaker: crate::serve::BreakerPolicy::disabled(),
+            ..ServePolicy::disabled()
+        };
+        let out = run_frontend(&be, &reqs, &policy).unwrap();
+        assert_eq!(out.summary.completed, 3);
+        assert_eq!(out.summary.degraded, 3);
+        for r in &out.responses {
+            assert_eq!(r.tier, Tier::Estimate);
+        }
+        assert_eq!(out.summary.tiers, [0, 0, 3, 0]);
+        assert!(out.summary.conserved());
+    }
+
+    #[test]
+    fn breaker_opens_and_skips_the_dead_tier() {
+        let be = TestBackend::failing(&[Tier::Full]);
+        let reqs = reqs_at(&(0..10).map(|i| i * 100).collect::<Vec<_>>());
+        let policy = ServePolicy {
+            batch: 1,
+            max_wait: 0,
+            service: [10, 5, 1, 1],
+            ladder: true,
+            breaker: crate::serve::BreakerPolicy {
+                trip_after: 2,
+                open_for: 10_000,
+                probes: 1,
+            },
+            ..ServePolicy::disabled()
+        };
+        let out = run_frontend(&be, &reqs, &policy).unwrap();
+        assert_eq!(out.summary.completed, 10);
+        assert!(out.summary.breaker_opens >= 1);
+        // after the trip, Full is no longer called on every request
+        assert!(be.calls(Tier::Full) < 10, "full calls: {}", be.calls(Tier::Full));
+        assert!(out.summary.conserved());
+    }
+
+    #[test]
+    fn stale_store_serves_a_cached_answer_when_all_live_tiers_fail() {
+        // same request shape twice: first arrival succeeds at Full and
+        // seeds the stale store; then every live tier goes down and the
+        // second arrival is served stale.
+        let inner = TestBackend::healthy();
+        let plan = InjectedFaults::none()
+            .with_outage(Tier::Full, 100, 10_000)
+            .with_outage(Tier::Fast, 100, 10_000)
+            .with_outage(Tier::Estimate, 100, 10_000);
+        let be = FaultyBackend::new(&inner, plan);
+        let mk = |id: u64, arrive: u64| ServeRequest {
+            id,
+            arrive,
+            deadline: None,
+            kind: ServeKind::CacheQuery { key: "same".into() },
+        };
+        let reqs = vec![mk(0, 0), mk(1, 500)];
+        let policy = ServePolicy {
+            batch: 1,
+            max_wait: 0,
+            service: [10, 5, 1, 1],
+            ladder: true,
+            breaker: crate::serve::BreakerPolicy::disabled(),
+            ..ServePolicy::disabled()
+        };
+        let out = run_frontend(&be, &reqs, &policy).unwrap();
+        assert_eq!(out.summary.completed, 2);
+        assert_eq!(out.responses[0].tier, Tier::Full);
+        assert_eq!(out.responses[1].tier, Tier::Stale);
+        assert_eq!(
+            out.responses[0].payload, out.responses[1].payload,
+            "stale tier replays the last known-good payload"
+        );
+        assert!(out.summary.conserved());
+    }
+
+    #[test]
+    fn retry_budget_retries_and_then_drops() {
+        let be = TestBackend::failing(&[Tier::Full]);
+        let reqs = reqs_at(&[0]);
+        let policy = ServePolicy {
+            batch: 1,
+            max_wait: 0,
+            service: [10, 0, 0, 0],
+            ladder: false,
+            retry: RetryPolicy { max_attempts: 3, backoff_base: 8, backoff_cap: 64, jitter: 0 },
+            breaker: crate::serve::BreakerPolicy::disabled(),
+            ..ServePolicy::disabled()
+        };
+        let out = run_frontend(&be, &reqs, &policy).unwrap();
+        assert_eq!(out.summary.completed, 0);
+        assert_eq!(out.summary.exhausted, 1);
+        assert_eq!(out.summary.retries, 2);
+        assert_eq!(be.calls(Tier::Full), 3, "three attempts at the top tier");
+        assert_eq!(out.dropped_ids, vec![0]);
+        assert!(out.summary.conserved());
+    }
+
+    #[test]
+    fn duplicate_ids_are_a_structured_error() {
+        let be = TestBackend::healthy();
+        let mut reqs = reqs_at(&[0, 1]);
+        reqs[1].id = 0;
+        let err = run_frontend(&be, &reqs, &ServePolicy::disabled()).unwrap_err();
+        assert!(matches!(err, EvalError::Serve { .. }), "{err}");
+    }
+
+    #[test]
+    fn synthetic_load_is_deterministic_and_sorted() {
+        let kinds = [ServeKind::CacheQuery { key: "a".into() }];
+        let a = synthetic_load(100, 7.5, 42, &kinds);
+        let b = synthetic_load(100, 7.5, 42, &kinds);
+        assert_eq!(a.len(), 100);
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!((x.id, x.arrive), (y.id, y.arrive));
+        }
+        assert!(a.windows(2).all(|w| w[0].arrive <= w[1].arrive));
+    }
+
+    #[test]
+    fn conservation_holds_under_overload_and_faults() {
+        for shed in [Shed::RejectNew, Shed::DropOldest] {
+            let inner = TestBackend::healthy();
+            let plan = InjectedFaults::none()
+                .with_every(Tier::Full, 3)
+                .with_outage(Tier::Fast, 200, 1_000);
+            let be = FaultyBackend::new(&inner, plan);
+            let kinds = [ServeKind::CacheQuery { key: "x".into() }];
+            let reqs = synthetic_load(500, 2.0, 9, &kinds);
+            let policy = ServePolicy {
+                queue_depth: 16,
+                shed,
+                rate: Some(RatePolicy { burst: 64, per: 4 }),
+                deadline: Some(2_000),
+                batch: 4,
+                max_wait: 16,
+                service: [40, 10, 2, 1],
+                retry: RetryPolicy {
+                    max_attempts: 2,
+                    backoff_base: 8,
+                    backoff_cap: 64,
+                    jitter: 4,
+                },
+                ..ServePolicy::default()
+            };
+            let out = run_frontend(&be, &reqs, &policy).unwrap();
+            let s = &out.summary;
+            assert!(s.conserved(), "shed {shed:?}: {s:?}");
+            let fates = out.responses.len()
+                + out.rejected_ids.len()
+                + out.dropped_ids.len()
+                + out.timed_out_ids.len();
+            assert_eq!(fates, 500, "every id gets exactly one fate");
+        }
+    }
+}

@@ -1,0 +1,48 @@
+//! Resilient serving frontend over the evaluation engine.
+//!
+//! The roadmap's serving item: a typed request/response service in
+//! front of [`eval::Session`](crate::eval::Session) and the chain
+//! kernels that survives real traffic. One [`ServeRequest`] asks to
+//! evaluate a design point, stream NID chain inference, or query the
+//! sweep cache; the frontend ([`run_frontend`], surfaced as
+//! [`Session::serve`](crate::eval::Session::serve) and `finn-mvu
+//! serve`) pushes it through:
+//!
+//! * **admission control** — a bounded queue with
+//!   [`Shed::RejectNew`]/[`Shed::DropOldest`] backpressure and an
+//!   optional token-bucket [`RatePolicy`] at intake;
+//! * **deadline propagation** — per-request absolute deadlines (or a
+//!   policy-wide relative default) carried from intake through the
+//!   coordinator's deadline-flush batcher into dispatch; expired work
+//!   is never handed to a backend;
+//! * **circuit breakers** — one closed/open/half-open
+//!   [`CircuitBreaker`] per fidelity tier, timed on the deterministic
+//!   virtual clock;
+//! * **retry budgets** — PR 9's bounded-backoff
+//!   [`RetryPolicy`](crate::device::RetryPolicy) shape, applied per
+//!   request to whole ladder walks;
+//! * **graceful degradation** — the [`Tier`] ladder full sim ->
+//!   fast-kernel-only -> estimate-only -> cached-stale answer, every
+//!   response labeled with the tier that produced it.
+//!
+//! Everything runs on `u64` virtual cycles
+//! ([`Timeline`](crate::coordinator::Timeline)); no wall clock is ever
+//! read, so outcomes and summaries are byte-identical across runs and
+//! session thread counts. Conservation (`offered == completed +
+//! rejected + dropped + timed_out`) is a checked invariant of every
+//! run. See DESIGN.md §Serving core.
+
+mod backend;
+mod breaker;
+mod frontend;
+mod policy;
+mod report;
+
+pub use backend::{
+    evaluation_to_json, kind_key, Backend, FaultyBackend, InjectedFaults, ServeKind,
+    ServeRequest, ServeResponse, SessionBackend, Tier,
+};
+pub use breaker::{BreakerState, CircuitBreaker};
+pub use frontend::{run_frontend, synthetic_load, ServeOutcome};
+pub use policy::{BreakerPolicy, RatePolicy, ServePolicy, Shed};
+pub use report::{DepthHistogram, ServeSummary};

@@ -1,0 +1,223 @@
+//! Serving policies: admission, rate limiting, deadlines, retries,
+//! circuit breaking and the degradation ladder.
+//!
+//! Every knob lives in one [`ServePolicy`] value so a caller (or the
+//! `finn-mvu serve` CLI) can describe the whole frontend declaratively.
+//! [`ServePolicy::disabled`] turns every guard off — the frontend then
+//! degenerates to a transparent passthrough whose responses are
+//! byte-identical to calling [`Session::evaluate`] directly, which
+//! `tests/serving_robustness.rs` pins.
+//!
+//! All times are **virtual cycles** (`u64` on
+//! [`Timeline`](crate::coordinator::Timeline)): the frontend never reads
+//! a wall clock, so every run is byte-deterministic.
+//!
+//! [`Session::evaluate`]: crate::eval::Session::evaluate
+
+use crate::device::RetryPolicy;
+use crate::eval::EvalError;
+
+/// What to do with a new arrival when the admission queue is full.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum Shed {
+    /// Reject the arrival itself (counts as `rejected`).
+    #[default]
+    RejectNew,
+    /// Evict the oldest queued request to make room (counts as
+    /// `dropped`); the arrival is admitted. Falls back to rejecting the
+    /// arrival when nothing is evictable yet.
+    DropOldest,
+}
+
+impl Shed {
+    pub fn name(self) -> &'static str {
+        match self {
+            Shed::RejectNew => "reject-new",
+            Shed::DropOldest => "drop-oldest",
+        }
+    }
+}
+
+/// Token-bucket rate guard at intake: the bucket holds at most `burst`
+/// tokens and earns one token every `per` cycles; an arrival with no
+/// token available is rejected before it can queue.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct RatePolicy {
+    /// Bucket capacity (also the initial fill).
+    pub burst: u64,
+    /// Cycles per earned token.
+    pub per: u64,
+}
+
+impl RatePolicy {
+    pub fn validate(&self) -> Result<(), EvalError> {
+        if self.burst == 0 || self.per == 0 {
+            return Err(EvalError::Serve {
+                message: "rate: burst and per must both be >= 1".into(),
+            });
+        }
+        Ok(())
+    }
+}
+
+/// Per-tier circuit-breaker policy: `trip_after` consecutive backend
+/// errors open the breaker for `open_for` cycles, after which `probes`
+/// half-open trial calls decide between closing and re-opening.
+/// `trip_after == 0` disables breaking entirely.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct BreakerPolicy {
+    pub trip_after: u32,
+    pub open_for: u64,
+    pub probes: u32,
+}
+
+impl Default for BreakerPolicy {
+    fn default() -> BreakerPolicy {
+        BreakerPolicy { trip_after: 4, open_for: 4096, probes: 1 }
+    }
+}
+
+impl BreakerPolicy {
+    /// Breaking disabled: every call is always allowed through.
+    pub fn disabled() -> BreakerPolicy {
+        BreakerPolicy { trip_after: 0, open_for: 0, probes: 0 }
+    }
+
+    pub fn validate(&self) -> Result<(), EvalError> {
+        if self.trip_after > 0 && self.probes == 0 {
+            return Err(EvalError::Serve {
+                message: "breaker: probes must be >= 1 when trip_after > 0".into(),
+            });
+        }
+        Ok(())
+    }
+}
+
+/// The full frontend policy. Defaults are a production-shaped middle
+/// ground (bounded queue, ladder on, breakers on, no rate guard, no
+/// deadline, no retries); [`ServePolicy::disabled`] is the transparent
+/// passthrough.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ServePolicy {
+    /// Admission bound: max requests in the system (batcher + dispatch
+    /// queue) before [`Shed`] applies.
+    pub queue_depth: usize,
+    pub shed: Shed,
+    /// Optional token-bucket rate guard at intake.
+    pub rate: Option<RatePolicy>,
+    /// Default per-request deadline in cycles from arrival; a request's
+    /// own absolute `deadline` takes precedence. `None` = no deadline.
+    pub deadline: Option<u64>,
+    /// Dispatch batch capacity (requests per batch; >= 1).
+    pub batch: usize,
+    /// Batcher deadline-flush timeout in cycles: a partial batch older
+    /// than this is flushed to dispatch rather than waiting to fill.
+    pub max_wait: u64,
+    /// Request-level retry budget (PR 9's bounded-backoff shape, in
+    /// cycles); one attempt = one full walk down the ladder.
+    pub retry: RetryPolicy,
+    /// Per-tier circuit breakers (one breaker per fidelity tier).
+    pub breaker: BreakerPolicy,
+    /// Walk the degradation ladder (full -> fast -> estimate -> stale)
+    /// on failure; `false` serves the top tier only.
+    pub ladder: bool,
+    /// Virtual service cost per tier, in cycles, indexed by
+    /// [`Tier::index`](super::Tier::index). Paid per attempt, success
+    /// or failure.
+    pub service: [u64; 4],
+    /// Seed for the retry-jitter stream.
+    pub seed: u64,
+}
+
+impl Default for ServePolicy {
+    fn default() -> ServePolicy {
+        ServePolicy {
+            queue_depth: 1024,
+            shed: Shed::RejectNew,
+            rate: None,
+            deadline: None,
+            batch: 16,
+            max_wait: 64,
+            retry: RetryPolicy::default(),
+            breaker: BreakerPolicy::default(),
+            ladder: true,
+            service: [1200, 240, 24, 4],
+            seed: 0x5eed,
+        }
+    }
+}
+
+impl ServePolicy {
+    /// Every guard off: unbounded queue, batch 1, zero service cost, no
+    /// ladder/breaker/retry — a transparent passthrough to the backend.
+    pub fn disabled() -> ServePolicy {
+        ServePolicy {
+            queue_depth: usize::MAX,
+            shed: Shed::RejectNew,
+            rate: None,
+            deadline: None,
+            batch: 1,
+            max_wait: 0,
+            retry: RetryPolicy { max_attempts: 1, backoff_base: 0, backoff_cap: 0, jitter: 0 },
+            breaker: BreakerPolicy::disabled(),
+            ladder: false,
+            service: [0; 4],
+            seed: 0,
+        }
+    }
+
+    pub fn validate(&self) -> Result<(), EvalError> {
+        if self.queue_depth == 0 {
+            return Err(EvalError::Serve { message: "queue_depth must be >= 1".into() });
+        }
+        if self.batch == 0 {
+            return Err(EvalError::Serve { message: "batch must be >= 1".into() });
+        }
+        if self.max_wait > (1 << 56) {
+            return Err(EvalError::Serve { message: "max_wait out of range".into() });
+        }
+        if let Some(rate) = &self.rate {
+            rate.validate()?;
+        }
+        self.breaker.validate()?;
+        self.retry
+            .validate()
+            .map_err(|e| EvalError::Serve { message: format!("{e:#}") })?;
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_validate() {
+        ServePolicy::default().validate().unwrap();
+        ServePolicy::disabled().validate().unwrap();
+    }
+
+    #[test]
+    fn bad_policies_are_structured_errors() {
+        let zero_q = ServePolicy { queue_depth: 0, ..ServePolicy::default() };
+        assert!(zero_q.validate().is_err());
+        let zero_b = ServePolicy { batch: 0, ..ServePolicy::default() };
+        assert!(zero_b.validate().is_err());
+        let bad_rate = ServePolicy {
+            rate: Some(RatePolicy { burst: 0, per: 1 }),
+            ..ServePolicy::default()
+        };
+        assert!(bad_rate.validate().is_err());
+        let bad_breaker = ServePolicy {
+            breaker: BreakerPolicy { trip_after: 2, open_for: 10, probes: 0 },
+            ..ServePolicy::default()
+        };
+        assert!(bad_breaker.validate().is_err());
+    }
+
+    #[test]
+    fn shed_names_are_stable() {
+        assert_eq!(Shed::RejectNew.name(), "reject-new");
+        assert_eq!(Shed::DropOldest.name(), "drop-oldest");
+    }
+}

@@ -1,0 +1,243 @@
+//! Structured per-run serving metrics.
+//!
+//! [`ServeSummary`] is the frontend's accounting: admission counters,
+//! per-tier completion counts, a log2 queue-depth histogram, and sojourn
+//! latency percentiles via the coordinator's
+//! [`TickRecorder`](crate::coordinator::TickRecorder) (all times in
+//! virtual cycles). Conservation is a checkable identity —
+//! [`ServeSummary::conserved`] — pinned by `tests/serving_robustness.rs`
+//! on every shed policy x fault mix.
+
+use std::fmt;
+
+use crate::coordinator::ThroughputReport;
+use crate::util::json::Json;
+
+use super::backend::Tier;
+
+/// Log2-bucketed queue-depth histogram: bucket `i` counts intake
+/// samples whose in-system depth `d` satisfies `floor(log2(max(d,1)))
+/// == i` (so bucket 0 holds depths 0 and 1).
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct DepthHistogram {
+    pub buckets: Vec<u64>,
+    pub samples: u64,
+    pub max: usize,
+}
+
+impl DepthHistogram {
+    pub fn record(&mut self, depth: usize) {
+        let idx = (usize::BITS - 1 - depth.max(1).leading_zeros()) as usize;
+        if self.buckets.len() <= idx {
+            self.buckets.resize(idx + 1, 0);
+        }
+        self.buckets[idx] += 1;
+        self.samples += 1;
+        self.max = self.max.max(depth);
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mut j = Json::obj();
+        let buckets = self.buckets.iter().map(|&c| Json::from_i64(c as i64)).collect();
+        j.set("log2_buckets", Json::Arr(buckets));
+        j.set("samples", Json::from_i64(self.samples as i64));
+        j.set("max", Json::from_i64(self.max as i64));
+        j
+    }
+}
+
+/// The frontend's per-run accounting. Two conservation identities hold
+/// on every run (see [`conserved`](ServeSummary::conserved)):
+///
+/// ```text
+/// offered  == completed + rejected() + dropped() + timed_out
+/// accepted == completed + shed + exhausted + timed_out
+/// ```
+#[derive(Debug, Clone, PartialEq)]
+pub struct ServeSummary {
+    /// Requests presented at intake.
+    pub offered: usize,
+    /// Requests admitted past the rate and queue guards. Retry-budget
+    /// exhaustion (`exhausted`) ends in `dropped()`, so `accepted`
+    /// counts it alongside completions, sheds and timeouts.
+    pub accepted: usize,
+    /// Requests that produced a [`ServeResponse`](super::ServeResponse).
+    pub completed: usize,
+    /// Arrivals refused by the token-bucket rate guard.
+    pub rejected_rate: usize,
+    /// Arrivals refused by the full admission queue.
+    pub rejected_queue: usize,
+    /// Admitted requests evicted by `DropOldest`.
+    pub shed: usize,
+    /// Admitted requests whose retry budget ran dry with every tier
+    /// failing.
+    pub exhausted: usize,
+    /// Requests whose deadline expired before (or during) dispatch.
+    pub timed_out: usize,
+    /// Completions served below `Tier::Full`.
+    pub degraded: usize,
+    /// Ladder re-walks consumed by the retry budget.
+    pub retries: u64,
+    /// Circuit-breaker trips across all tiers.
+    pub breaker_opens: u64,
+    /// Completions per tier, [`Tier::index`] order.
+    pub tiers: [usize; 4],
+    pub depth: DepthHistogram,
+    /// Last event cycle of the run.
+    pub horizon: u64,
+    /// Sojourn latency over completions (cycles; `*_us` fields carry
+    /// cycle counts, the virtual clock has no microseconds).
+    pub latency: ThroughputReport,
+}
+
+impl ServeSummary {
+    /// Total arrivals refused at intake (rate + queue).
+    pub fn rejected(&self) -> usize {
+        self.rejected_rate + self.rejected_queue
+    }
+
+    /// Total admitted-then-abandoned requests (shed + exhausted).
+    pub fn dropped(&self) -> usize {
+        self.shed + self.exhausted
+    }
+
+    /// Both conservation identities (struct doc); every run must
+    /// satisfy them.
+    pub fn conserved(&self) -> bool {
+        let offered_ok = self.offered
+            == self.completed + self.rejected() + self.dropped() + self.timed_out;
+        let accepted_ok =
+            self.accepted == self.completed + self.shed + self.exhausted + self.timed_out;
+        offered_ok && accepted_ok
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mut j = Json::obj();
+        j.set("offered", Json::from_i64(self.offered as i64));
+        j.set("accepted", Json::from_i64(self.accepted as i64));
+        j.set("completed", Json::from_i64(self.completed as i64));
+        j.set("rejected", Json::from_i64(self.rejected() as i64));
+        j.set("rejected_rate", Json::from_i64(self.rejected_rate as i64));
+        j.set("rejected_queue", Json::from_i64(self.rejected_queue as i64));
+        j.set("dropped", Json::from_i64(self.dropped() as i64));
+        j.set("shed", Json::from_i64(self.shed as i64));
+        j.set("exhausted", Json::from_i64(self.exhausted as i64));
+        j.set("timed_out", Json::from_i64(self.timed_out as i64));
+        j.set("degraded", Json::from_i64(self.degraded as i64));
+        j.set("retries", Json::from_i64(self.retries as i64));
+        j.set("breaker_opens", Json::from_i64(self.breaker_opens as i64));
+        let mut tiers = Json::obj();
+        for t in Tier::LADDER {
+            tiers.set(t.name(), Json::from_i64(self.tiers[t.index()] as i64));
+        }
+        j.set("tiers", tiers);
+        j.set("queue_depth", self.depth.to_json());
+        j.set("horizon_cycles", Json::from_i64(self.horizon as i64));
+        j.set("latency", self.latency.to_json());
+        j
+    }
+}
+
+impl fmt::Display for ServeSummary {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        writeln!(
+            f,
+            "offered {} | completed {} | rejected {} | dropped {} | timed out {}",
+            self.offered,
+            self.completed,
+            self.rejected(),
+            self.dropped(),
+            self.timed_out
+        )?;
+        writeln!(
+            f,
+            "tiers: full {} fast {} estimate {} stale {} (degraded {})",
+            self.tiers[0], self.tiers[1], self.tiers[2], self.tiers[3], self.degraded
+        )?;
+        writeln!(
+            f,
+            "retries {} | breaker opens {} | max queue depth {} | horizon {} cycles",
+            self.retries, self.breaker_opens, self.depth.max, self.horizon
+        )?;
+        write!(
+            f,
+            "latency cycles: mean {:.1} p50 {:.0} p99 {:.0} max {:.0}",
+            self.latency.latency_mean_us,
+            self.latency.latency_p50_us,
+            self.latency.latency_p99_us,
+            self.latency.latency_max_us
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::TickRecorder;
+
+    fn empty_latency() -> ThroughputReport {
+        TickRecorder::new().report()
+    }
+
+    #[test]
+    fn depth_histogram_buckets_by_log2() {
+        let mut h = DepthHistogram::default();
+        for d in [0, 1, 2, 3, 4, 7, 8, 1023] {
+            h.record(d);
+        }
+        // depths 0,1 -> bucket 0; 2,3 -> 1; 4,7 -> 2; 8 -> 3; 1023 -> 9
+        assert_eq!(h.buckets, vec![2, 2, 2, 1, 0, 0, 0, 0, 0, 1]);
+        assert_eq!(h.samples, 8);
+        assert_eq!(h.max, 1023);
+    }
+
+    #[test]
+    fn conservation_identity_checks_both_sides() {
+        let mut s = ServeSummary {
+            offered: 10,
+            accepted: 7,
+            completed: 4,
+            rejected_rate: 1,
+            rejected_queue: 2,
+            shed: 1,
+            exhausted: 1,
+            timed_out: 1,
+            degraded: 2,
+            retries: 3,
+            breaker_opens: 1,
+            tiers: [2, 1, 1, 0],
+            depth: DepthHistogram::default(),
+            horizon: 100,
+            latency: empty_latency(),
+        };
+        assert!(s.conserved());
+        s.completed += 1;
+        assert!(!s.conserved());
+    }
+
+    #[test]
+    fn summary_json_has_the_counter_surface() {
+        let s = ServeSummary {
+            offered: 1,
+            accepted: 1,
+            completed: 1,
+            rejected_rate: 0,
+            rejected_queue: 0,
+            shed: 0,
+            exhausted: 0,
+            timed_out: 0,
+            degraded: 0,
+            retries: 0,
+            breaker_opens: 0,
+            tiers: [1, 0, 0, 0],
+            depth: DepthHistogram::default(),
+            horizon: 5,
+            latency: empty_latency(),
+        };
+        let j = s.to_json();
+        assert_eq!(j.get("offered").as_i64(), Some(1));
+        assert_eq!(j.get("tiers").get("full").as_i64(), Some(1));
+        assert_eq!(j.get("queue_depth").get("samples").as_i64(), Some(0));
+        assert!(!j.get("latency").is_null());
+    }
+}

@@ -1,0 +1,274 @@
+//! Serving-frontend robustness suite (ISSUE: resilient serving PR).
+//!
+//! Pins the tentpole's contract end-to-end against the real
+//! [`Session`] backend:
+//!
+//! * conservation (`offered == completed + rejected + dropped +
+//!   timed_out`) under every shed policy x fault mix, at the id level
+//!   as well as the counter level;
+//! * byte-identical summaries and payloads across session thread
+//!   counts {1, 2, 8};
+//! * the all-policies-disabled path byte-identical to calling
+//!   [`Session::evaluate`] directly;
+//! * breaker recovery after an injected outage window;
+//! * the pipeline dead-worker fix (structured [`DeadWorker`] instead of
+//!   a hang) through the public [`Pipeline::run_with`] API;
+//! * a corrupted on-disk cache entry quarantined and recomputed
+//!   through a full `Session` evaluation.
+
+use std::sync::Arc;
+
+use finn_mvu::cfg::{DesignPoint, ValidatedParams};
+use finn_mvu::coordinator::{
+    DeadWorker, KernelFactory, Pipeline, PipelineConfig, Request, UnitKernel,
+};
+use finn_mvu::device::RetryPolicy;
+use finn_mvu::estimate::Style;
+use finn_mvu::eval::{EvalRequest, Session, SessionConfig, SimOptions};
+use finn_mvu::explore::{content_hash, estimate_key};
+use finn_mvu::serve::{
+    evaluation_to_json, run_frontend, synthetic_load, BreakerPolicy, FaultyBackend,
+    InjectedFaults, RatePolicy, ServeKind, ServePolicy, ServeRequest, SessionBackend, Shed, Tier,
+};
+
+fn point(name: &str) -> ValidatedParams {
+    DesignPoint::fc(name)
+        .in_features(16)
+        .out_features(8)
+        .pe(4)
+        .simd(8)
+        .precision(4, 4, 0)
+        .build()
+        .unwrap()
+}
+
+#[test]
+fn conservation_holds_under_every_shed_policy_and_fault_mix() {
+    let session = Session::serial();
+    let p = point("conserve");
+    let kinds = [
+        ServeKind::Evaluate(Arc::new(EvalRequest::new(p.clone()))),
+        ServeKind::CacheQuery { key: estimate_key(&p, Style::Rtl) },
+    ];
+    let plans = [
+        InjectedFaults::none(),
+        InjectedFaults::none().with_every(Tier::Full, 3),
+        InjectedFaults::none().with_outage(Tier::Full, 100, 2_000).with_every(Tier::Fast, 2),
+    ];
+    for shed in [Shed::RejectNew, Shed::DropOldest] {
+        for plan in &plans {
+            let reqs = synthetic_load(300, 3.0, 11, &kinds);
+            let policy = ServePolicy {
+                queue_depth: 16,
+                shed,
+                rate: Some(RatePolicy { burst: 32, per: 4 }),
+                deadline: Some(1_500),
+                batch: 4,
+                max_wait: 16,
+                retry: RetryPolicy {
+                    max_attempts: 2,
+                    backoff_base: 8,
+                    backoff_cap: 64,
+                    jitter: 4,
+                },
+                service: [40, 10, 2, 1],
+                ..ServePolicy::default()
+            };
+            let inner = SessionBackend::new(&session);
+            let faulty = FaultyBackend::new(&inner, plan.clone());
+            let out = run_frontend(&faulty, &reqs, &policy).unwrap();
+            let s = &out.summary;
+            assert!(s.conserved(), "shed {shed:?} plan {plan:?}: {s:?}");
+            let fates = out.responses.len()
+                + out.rejected_ids.len()
+                + out.dropped_ids.len()
+                + out.timed_out_ids.len();
+            assert_eq!(fates, 300, "every id gets exactly one fate ({shed:?}, {plan:?})");
+        }
+    }
+}
+
+#[test]
+fn outcomes_are_byte_identical_across_session_thread_counts() {
+    let p = point("threads");
+    let full = Arc::new(EvalRequest::new(p.clone()).with_sim(SimOptions::default()));
+    let kinds = [
+        ServeKind::Evaluate(full),
+        ServeKind::CacheQuery { key: estimate_key(&p, Style::Rtl) },
+    ];
+    let reqs = synthetic_load(200, 4.0, 5, &kinds);
+    let policy = ServePolicy {
+        queue_depth: 8,
+        shed: Shed::DropOldest,
+        deadline: Some(2_000),
+        batch: 4,
+        max_wait: 8,
+        service: [50, 10, 2, 1],
+        ..ServePolicy::default()
+    };
+    let plan = InjectedFaults::none().with_every(Tier::Full, 4);
+    let mut golden: Option<(String, Vec<(u64, String, String)>)> = None;
+    for threads in [1usize, 2, 8] {
+        let session = Session::with_threads(threads);
+        let inner = SessionBackend::new(&session);
+        let faulty = FaultyBackend::new(&inner, plan.clone());
+        let out = run_frontend(&faulty, &reqs, &policy).unwrap();
+        assert!(out.summary.conserved());
+        let summary = out.summary.to_json().to_string();
+        let responses: Vec<(u64, String, String)> = out
+            .responses
+            .iter()
+            .map(|r| (r.id, r.tier.name().to_string(), r.payload.to_string()))
+            .collect();
+        match &golden {
+            None => golden = Some((summary, responses)),
+            Some((gs, gr)) => {
+                assert_eq!(&summary, gs, "summary differs at {threads} threads");
+                assert_eq!(&responses, gr, "responses differ at {threads} threads");
+            }
+        }
+    }
+}
+
+#[test]
+fn disabled_policy_is_byte_identical_to_direct_evaluation() {
+    let session = Session::serial();
+    let pa = point("ident-a");
+    let pb = DesignPoint::from_params(point("ident-b").into_inner()).pe(8).build().unwrap();
+    let shapes = [
+        Arc::new(EvalRequest::new(pa)),
+        Arc::new(EvalRequest::new(pb).with_sim(SimOptions::default())),
+    ];
+    let reqs: Vec<ServeRequest> = (0..6)
+        .map(|i| ServeRequest {
+            id: i as u64,
+            arrive: i as u64 * 10,
+            deadline: None,
+            kind: ServeKind::Evaluate(shapes[i % 2].clone()),
+        })
+        .collect();
+    let out = session.serve(&reqs, &ServePolicy::disabled()).unwrap();
+    let s = &out.summary;
+    assert_eq!(s.completed, 6);
+    assert_eq!((s.rejected(), s.dropped(), s.timed_out, s.degraded), (0, 0, 0, 0));
+    for r in &out.responses {
+        assert_eq!(r.tier, Tier::Full, "no guard may degrade a disabled-policy response");
+        let direct = session.evaluate(&shapes[r.id as usize % 2]).unwrap();
+        assert_eq!(
+            r.payload.to_string(),
+            evaluation_to_json(&direct).to_string(),
+            "request {} must be byte-identical to direct evaluation",
+            r.id
+        );
+    }
+}
+
+#[test]
+fn breaker_recovers_after_the_outage_window() {
+    let session = Session::serial();
+    let p = point("recover");
+    let kind = ServeKind::Evaluate(Arc::new(EvalRequest::new(p)));
+    // one arrival every 100 cycles; the Full tier blacks out for the
+    // first 2000 cycles, then comes back
+    let reqs: Vec<ServeRequest> = (0..40)
+        .map(|i| ServeRequest { id: i, arrive: i * 100, deadline: None, kind: kind.clone() })
+        .collect();
+    let policy = ServePolicy {
+        batch: 1,
+        max_wait: 0,
+        service: [10, 5, 2, 1],
+        breaker: BreakerPolicy { trip_after: 2, open_for: 400, probes: 1 },
+        ..ServePolicy::default()
+    };
+    let inner = SessionBackend::new(&session);
+    let plan = InjectedFaults::none().with_outage(Tier::Full, 0, 2_000);
+    let faulty = FaultyBackend::new(&inner, plan);
+    let out = run_frontend(&faulty, &reqs, &policy).unwrap();
+    let s = &out.summary;
+    assert!(s.conserved());
+    assert!(s.breaker_opens >= 1, "the dead tier must trip its breaker: {s:?}");
+    assert!(s.degraded > 0, "the ladder must degrade during the outage: {s:?}");
+    let full_after = out
+        .responses
+        .iter()
+        .filter(|r| r.tier == Tier::Full && r.done > 2_000)
+        .count();
+    assert!(full_after > 0, "the Full tier must serve again after the outage: {s:?}");
+}
+
+struct PassKernel;
+
+impl UnitKernel for PassKernel {
+    fn out_row(&self) -> usize {
+        1
+    }
+
+    fn run_batch(&mut self, data: &[i32]) -> anyhow::Result<Vec<i32>> {
+        Ok(data.to_vec())
+    }
+}
+
+/// Builds a pass-through kernel for every layer except index 1.
+struct DyingFactory;
+
+impl KernelFactory for DyingFactory {
+    fn build(&self, index: usize, name: &str) -> anyhow::Result<Box<dyn UnitKernel>> {
+        if index == 1 {
+            anyhow::bail!("no kernel for {name}");
+        }
+        Ok(Box::new(PassKernel))
+    }
+}
+
+/// Regression (public-API level): a worker whose setup fails used to
+/// strand `Pipeline::run` on its start barrier forever; it must now
+/// return a structured [`DeadWorker`] naming the layer and the in-flight
+/// request ids.
+#[test]
+fn pipeline_setup_death_is_a_structured_error_not_a_hang() {
+    let cfg = PipelineConfig {
+        batch: 2,
+        channel_depth: 2,
+        max_wait: std::time::Duration::from_millis(1),
+        arrival_gap: None,
+    };
+    let names = vec!["l0".to_string(), "l1".to_string()];
+    let p = Pipeline::new(std::path::PathBuf::from("unused"), names, cfg);
+    let reqs: Vec<Request> = (0..4).map(|id| Request { id, data: vec![id as i32] }).collect();
+    let err = p.run_with(&DyingFactory, 1, reqs).unwrap_err();
+    let dead = err.downcast_ref::<DeadWorker>().expect("typed DeadWorker");
+    assert_eq!((dead.layer, dead.name.as_str()), (1, "l1"));
+    assert!(dead.detail.contains("no kernel for l1"), "got: {}", dead.detail);
+    assert_eq!(dead.in_flight, vec![0, 1, 2, 3]);
+}
+
+#[test]
+fn corrupt_disk_cache_entry_is_quarantined_and_recomputed() {
+    let dir = std::env::temp_dir().join(format!("finn-mvu-serve-cache-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    let p = point("cache-corrupt");
+    let req = EvalRequest::new(p.clone());
+    let mk = || {
+        Session::new(SessionConfig {
+            threads: 1,
+            cache_dir: Some(dir.clone()),
+            ..SessionConfig::default()
+        })
+        .unwrap()
+    };
+    let first = mk().evaluate(&req).unwrap();
+    let entry = dir.join(format!("{:016x}.json", content_hash(&estimate_key(&p, Style::Rtl))));
+    assert!(entry.exists(), "evaluation must publish a disk entry");
+    let text = std::fs::read_to_string(&entry).unwrap();
+    std::fs::write(&entry, &text[..text.len() / 2]).unwrap(); // torn write
+    let session = mk();
+    let again = session.evaluate(&req).unwrap();
+    assert_eq!(
+        evaluation_to_json(&again).to_string(),
+        evaluation_to_json(&first).to_string(),
+        "a quarantined entry must recompute to the same bytes"
+    );
+    assert!(session.cache_stats().quarantined >= 1, "{:?}", session.cache_stats());
+    assert!(entry.with_extension("json.quarantined").exists());
+    std::fs::remove_dir_all(&dir).unwrap();
+}
